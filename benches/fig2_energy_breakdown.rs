@@ -1,0 +1,15 @@
+//! Bench + regeneration of Fig 2 (energy breakdown per parameter op).
+//! `cargo bench --bench fig2_energy_breakdown`
+
+use ita::energy::EnergyParams;
+use ita::util::benchkit::Bencher;
+
+fn main() {
+    let mut b = Bencher::quick();
+    let e = EnergyParams::default();
+    b.bench("fig2/stacks", || {
+        [e.gpu_fp16(), e.gpu_int8(), e.ita()].iter().map(|s| s.total_pj()).sum::<f64>()
+    });
+
+    ita::report::fig2_report().print();
+}

@@ -1,0 +1,18 @@
+//! Bench + regeneration of Fig 3 (economic barrier to model extraction).
+//! `cargo bench --bench fig3_extraction_cost`
+
+use ita::security::{barrier_ratio, extraction_floor_usd, Target};
+use ita::util::benchkit::Bencher;
+
+fn main() {
+    let mut b = Bencher::quick();
+    b.bench("fig3/extraction_floors", || {
+        (
+            extraction_floor_usd(Target::SoftwareReadable),
+            extraction_floor_usd(Target::PhysicalLogic),
+        )
+    });
+
+    ita::report::fig3_report().print();
+    println!("\nbarrier ratio: {:.0}x (paper: 25x)", barrier_ratio());
+}

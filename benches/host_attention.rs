@@ -1,0 +1,50 @@
+//! Host-attention microbenchmark — the paper's declared bottleneck
+//! (Section VI-C2: 5 ms NPU-ideal vs 50–100 ms laptop CPU for 32 layers).
+//!
+//! Measures our rust `decode_attention` at the Llama-2-7B geometry
+//! (32 heads × 128 dims) across context lengths, extrapolates the 32-layer
+//! per-token cost, and feeds the measured figure back into the Table III
+//! latency model. `cargo bench --bench host_attention`
+
+use ita::host::attention::{decode_attention, AttentionConfig, AttentionScratch};
+use ita::host::kv_cache::PagedKvCache;
+use ita::util::benchkit::Bencher;
+use ita::util::prng::Prng;
+
+fn main() {
+    let cfg = AttentionConfig::new(32, 128); // Llama-2-7B geometry
+    let d = cfg.d_model();
+    let mut bench = Bencher::default();
+    let mut rng = Prng::new(7);
+
+    let mut per_layer_at_512 = 0.0;
+    for t in [64usize, 256, 512, 1024, 2048] {
+        let mut cache = PagedKvCache::new(1, d, ita::coordinator::engine::PAGE_SIZE);
+        let seq = cache.alloc_seq();
+        for _ in 0..t {
+            let k: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            let v: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            cache.append(seq, 0, &k, &v).unwrap();
+            cache.advance(seq).unwrap();
+        }
+        let q: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let mut out = vec![0.0; d];
+        let mut scratch = AttentionScratch::new();
+        let stats = bench.bench(&format!("attention/7b_geometry/ctx{t}"), || {
+            decode_attention(&cfg, &cache, seq, 0, t, &q, &mut out, &mut scratch);
+            out[0]
+        });
+        if t == 512 {
+            per_layer_at_512 = stats.mean_ns / 1e9;
+        }
+    }
+
+    // per-token host attention = 32 layers
+    let per_token = per_layer_at_512 * 32.0;
+    println!(
+        "\nmeasured host attention (ctx 512, 32 layers): {:.1} ms/token \
+         (paper: 5 ms NPU-ideal, 50-100 ms laptop CPU)",
+        per_token * 1e3
+    );
+    ita::report::table3_report(Some(per_token)).print();
+}

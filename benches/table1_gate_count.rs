@@ -1,0 +1,19 @@
+//! Bench + regeneration of Table I (gate count per MAC).
+//! `cargo bench --bench table1_gate_count`
+
+use ita::synth::gates::CellCosts;
+use ita::synth::mac::{sample_int4_weights, table1};
+use ita::util::benchkit::Bencher;
+
+fn main() {
+    let mut b = Bencher::default();
+    let weights = sample_int4_weights(65_536, 0x17A);
+    let costs = CellCosts::asic_28nm();
+
+    b.bench("table1/synthesize_64k_macs", || table1(&costs, &weights));
+    b.bench("table1/csd_encode_64k", || {
+        weights.iter().map(|&w| ita::quant::csd::csd_nonzero(w as i64)).sum::<usize>()
+    });
+
+    ita::report::table1_report().print();
+}

@@ -1,0 +1,30 @@
+//! Bench + regeneration of Table II (energy per MAC) and the Section VI-B1
+//! system-power analysis. `cargo bench --bench table2_energy`
+
+use ita::config::ModelConfig;
+use ita::energy::{device_power_w, dram_floor_j_per_token, system_power, EnergyParams};
+use ita::util::benchkit::Bencher;
+
+fn main() {
+    let mut b = Bencher::quick();
+    let e = EnergyParams::default();
+
+    b.bench("table2/full_stack_eval", || {
+        (e.gpu_fp16().total_pj(), e.gpu_int8().total_pj(), e.ita().total_pj())
+    });
+    b.bench("table2/system_power_7b", || {
+        system_power(&ModelConfig::LLAMA2_7B, &e, 20.0).total_w
+    });
+
+    ita::report::table2_report().print();
+
+    // Eq. 2: the DRAM floor the whole paper is built on
+    println!(
+        "\nEq. 2 check: 14 GB FP16 7B model = {:.2} J/token DRAM floor (paper 2.24 J)",
+        dram_floor_j_per_token(14_000_000_000, 8, 20.0)
+    );
+    println!(
+        "device power @20 tok/s: {:.2} W (paper 1.13 W)",
+        device_power_w(&ModelConfig::LLAMA2_7B, &e, 20.0)
+    );
+}

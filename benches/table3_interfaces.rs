@@ -1,0 +1,26 @@
+//! Bench + regeneration of Table III (interface comparison) and the
+//! Eq. 7–11 transfer accounting. `cargo bench --bench table3_interfaces`
+
+use ita::config::ModelConfig;
+use ita::interface::{token_latency, Link, TokenTraffic, HOST_ATTENTION_IDEAL_S};
+use ita::util::benchkit::Bencher;
+
+fn main() {
+    let mut b = Bencher::quick();
+    let cfg = &ModelConfig::LLAMA2_7B;
+
+    b.bench("table3/traffic_accounting", || {
+        TokenTraffic::paper_mode(cfg).total_bytes()
+    });
+    b.bench("table3/latency_all_links", || {
+        Link::ALL
+            .iter()
+            .map(|l| {
+                token_latency(&TokenTraffic::paper_mode(cfg), l, HOST_ATTENTION_IDEAL_S)
+                    .tokens_per_s()
+            })
+            .sum::<f64>()
+    });
+
+    ita::report::table3_report(None).print();
+}

@@ -1,0 +1,28 @@
+//! Bench + regeneration of Table IV (die area / chiplets / cost).
+//! `cargo bench --bench table4_area`
+
+use ita::area::{estimate, Routing};
+use ita::config::{ModelConfig, TechParams};
+use ita::util::benchkit::Bencher;
+
+fn main() {
+    let mut b = Bencher::quick();
+    let tech = TechParams::paper_28nm();
+
+    b.bench("table4/estimate_all_models", || {
+        ita::config::ALL_CONFIGS
+            .iter()
+            .map(|c| estimate(c, &tech, Routing::Optimistic).final_mm2)
+            .sum::<f64>()
+    });
+
+    ita::report::table4_report().print();
+
+    // the paper's own arithmetic chain for TinyLlama, step by step
+    let e = estimate(&ModelConfig::TINYLLAMA_1_1B, &tech, Routing::Optimistic);
+    println!(
+        "\nTinyLlama chain: raw {:.0} mm² (paper 528) → routed+control {:.0} (paper 850) → \
+         final {:.0} (paper 520)",
+        e.raw_mm2, e.routed_mm2, e.final_mm2
+    );
+}

@@ -1,0 +1,28 @@
+//! Bench + regeneration of Table V (cost vs volume, NRE amortization).
+//! `cargo bench --bench table5_cost_volume`
+
+use ita::area::{estimate, Routing};
+use ita::config::{ModelConfig, TechParams};
+use ita::cost::{cost_at_volume, dies_per_wafer, unit_cost, TABLE5_VOLUMES};
+use ita::util::benchkit::Bencher;
+
+fn main() {
+    let mut b = Bencher::quick();
+    let tech = TechParams::paper_28nm();
+
+    b.bench("table5/full_cost_stack", || {
+        let est = estimate(&ModelConfig::LLAMA2_7B, &tech, Routing::Optimistic);
+        let u = unit_cost(&est, &tech);
+        TABLE5_VOLUMES
+            .iter()
+            .map(|&v| cost_at_volume(&u, &tech, v).unit_total)
+            .sum::<f64>()
+    });
+
+    ita::report::table5_report().print();
+
+    println!(
+        "\ndies/wafer at the paper's 520 mm²: {:.0} (paper ≈115, classic edge-loss formula)",
+        dies_per_wafer(520.0, 300.0)
+    );
+}

@@ -1,0 +1,18 @@
+//! Bench + regeneration of Table VI (full 64→128→64 network on Zynq-7020).
+//! `cargo bench --bench table6_fpga_network`
+
+use ita::synth::fpga::{baseline_network, hardwired_network, proto_network_weights, FpgaCosts};
+use ita::util::benchkit::Bencher;
+
+fn main() {
+    let mut b = Bencher::default();
+    let costs = FpgaCosts::default();
+    let weights = proto_network_weights(0x17A);
+
+    b.bench("table6/map_hardwired_16k_macs", || {
+        hardwired_network(&weights, 8, &costs).luts
+    });
+    b.bench("table6/map_baseline", || baseline_network(8, 4, &costs).luts);
+
+    ita::report::table6_report().print();
+}

@@ -1,0 +1,28 @@
+//! Bench + regeneration of Table VII (single neuron, 64 parallel MACs).
+//! `cargo bench --bench table7_fpga_neuron`
+
+use ita::synth::fpga::{generic_neuron, hardwired_neuron, FpgaCosts};
+use ita::synth::mac::sample_int4_weights;
+use ita::util::benchkit::Bencher;
+
+fn main() {
+    let mut b = Bencher::default();
+    let costs = FpgaCosts::default();
+    let weights = sample_int4_weights(64, 42);
+
+    b.bench("table7/map_generic_neuron", || generic_neuron(64, 8, 4, &costs).luts);
+    b.bench("table7/map_hardwired_neuron", || hardwired_neuron(&weights, 8, &costs).luts);
+
+    ita::report::table7_report().print();
+
+    // sensitivity: the LUT reduction across 20 random weight draws
+    let mut lo = f64::INFINITY;
+    let mut hi = 0.0f64;
+    for seed in 0..20 {
+        let w = sample_int4_weights(64, seed);
+        let t = ita::synth::fpga::table7(&w, &costs);
+        lo = lo.min(t.lut_reduction);
+        hi = hi.max(t.lut_reduction);
+    }
+    println!("\nLUT-reduction spread over 20 weight draws: {lo:.2}x – {hi:.2}x (paper: 1.81x)");
+}

@@ -1,0 +1,20 @@
+//! Bench + regeneration of Table VIII (edge-NPU comparison).
+//! `cargo bench --bench table8_edge_npu`
+
+use ita::config::ModelConfig;
+use ita::interface::npu::{energy_per_token_j, ita_row};
+use ita::util::benchkit::Bencher;
+
+fn main() {
+    let mut b = Bencher::quick();
+    b.bench("table8/ita_row", || ita_row(&ModelConfig::LLAMA2_7B, 165.0).power_w);
+
+    ita::report::table8_report().print();
+
+    let ita = ita_row(&ModelConfig::LLAMA2_7B, 165.0);
+    println!(
+        "\nenergy per token at 20 tok/s: ITA {:.1} mJ vs Hexagon ≈{:.1} mJ",
+        energy_per_token_j(ita.power_w, 20.0) * 1e3,
+        energy_per_token_j(1.5, 20.0) * 1e3
+    );
+}

@@ -1,0 +1,17 @@
+//! Regenerate every table and figure from the paper's evaluation section
+//! (Tables I–VIII, Figs 2–3), printing ours next to the paper's published
+//! values.
+//!
+//!     cargo run --release --example paper_tables
+
+fn main() {
+    println!("ITA reproduction — paper tables/figures (ours vs paper)\n");
+    for report in ita::report::all_reports() {
+        report.print();
+        println!();
+    }
+    println!(
+        "See EXPERIMENTS.md for the paper-vs-measured discussion and the\n\
+         deviations each `note:` line flags."
+    );
+}

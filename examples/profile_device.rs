@@ -1,0 +1,57 @@
+//! §Perf profiling harness: per-block device-call latency and whole-step
+//! engine forward latency. `cargo run --release --example profile_device`
+use std::time::Instant;
+use ita::coordinator::engine::Engine;
+use ita::device::ItaDevice;
+use ita::device::pjrt::PjrtDevice;
+use ita::device::sim::SimDevice;
+use ita::host::embedding::EmbeddingTable;
+use ita::model::Mat;
+use ita::runtime::weights::load_artifacts;
+
+fn main() {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/demo-100m");
+    let (m, s) = load_artifacts(&dir).unwrap();
+    let n_heads = m.n_heads;
+    let sim = SimDevice::load(&m, &s).unwrap();
+    let emb = EmbeddingTable::new(sim.weights().emb.clone());
+    let mut dev = PjrtDevice::load(m, &s, "fused").unwrap();
+    for b in [1usize, 8] {
+        let h = Mat::new(b, 768, (0..b*768).map(|i| (i as f32*0.01).sin()).collect());
+        let attn = h.clone();
+        for _ in 0..3 { dev.qkv(0, &h).unwrap(); dev.ffn(0, &h, &attn).unwrap(); }
+        let n = 20;
+        let t0 = Instant::now();
+        for _ in 0..n { dev.qkv(0, &h).unwrap(); }
+        println!("b={b} qkv:    {:.2} ms/call", t0.elapsed().as_secs_f64()*1e3/n as f64);
+        let t0 = Instant::now();
+        for _ in 0..n { dev.ffn(0, &h, &attn).unwrap(); }
+        println!("b={b} ffn:    {:.2} ms/call", t0.elapsed().as_secs_f64()*1e3/n as f64);
+        let t0 = Instant::now();
+        for _ in 0..n { dev.logits(&h).unwrap(); }
+        println!("b={b} logits: {:.2} ms/call", t0.elapsed().as_secs_f64()*1e3/n as f64);
+    }
+
+    // all-layer sweep: does streaming 14 layers of weights (≈350 MB) from
+    // DRAM dominate? (the "memory wall" the paper eliminates)
+    let h8 = Mat::new(8, 768, (0..8*768).map(|i| (i as f32*0.01).sin()).collect());
+    let a8 = h8.clone();
+    let t0 = Instant::now();
+    let n = 10;
+    for _ in 0..n {
+        for layer in 0..14 {
+            dev.qkv(layer, &h8).unwrap();
+            dev.ffn(layer, &h8, &a8).unwrap();
+        }
+    }
+    println!("all-layer qkv+ffn sweep b=8: {:.1} ms/step", t0.elapsed().as_secs_f64()*1e3/n as f64);
+    // whole-step engine forward
+    let mut engine = Engine::new(Box::new(dev), emb, n_heads);
+    let ids: Vec<_> = (0..8).map(|_| engine.new_sequence()).collect();
+    let toks = vec![65u32; 8];
+    for _ in 0..3 { engine.forward(&ids, &toks).unwrap(); }
+    let t0 = Instant::now();
+    let n = 20;
+    for _ in 0..n { engine.forward(&ids, &toks).unwrap(); }
+    println!("engine.forward b=8: {:.1} ms/step", t0.elapsed().as_secs_f64()*1e3/n as f64);
+}

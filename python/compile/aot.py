@@ -1,0 +1,353 @@
+"""AOT compile path: JAX device blocks -> HLO text + weight blobs.
+
+Run once per config (``make artifacts``); the rust runtime is self-contained
+afterwards. Python never executes on the request path.
+
+Outputs, per config, under ``artifacts/<config>/``:
+
+  MANIFEST.txt   line-oriented manifest (parsed by rust/src/runtime/manifest.rs)
+  weights.bin    concatenated little-endian blobs (f32 / int8)
+  programs/*.hlo.txt  one HLO-text program per (block, bucket, variant[, layer])
+
+Interchange is HLO **text**, not serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids that xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Weight modes:
+  baked — weights are HLO constants (One-Model-One-Chip cartridge); programs
+          are per-layer. Used for `tiny`.
+  args  — weights are program parameters uploaded once by the runtime and
+          kept resident as PJRT buffers (paper Section VII-D hybrid mode).
+          Programs are shared across layers (same shapes!), so a 14-layer
+          model needs only 3 programs per (bucket, variant).
+"""
+
+import argparse
+import os
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, quantize
+from .configs import CONFIGS, BUILDABLE, ModelConfig
+from .kernels.ref import recompose
+
+MANIFEST_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True).
+
+    print_large_constants=True is essential for baked (OMOC) programs: the
+    default printer elides big weight constants as `{...}`, which the rust
+    side would happily parse into NaN/zero garbage.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    text = comp.as_hlo_text(print_large_constants=True)
+    if "{...}" in text:
+        raise RuntimeError("HLO text still contains elided constants")
+    return text
+
+
+# ---------------------------------------------------------------------------
+# deterministic synthetic weights
+# ---------------------------------------------------------------------------
+
+def _rng(cfg: ModelConfig, layer: int, slot: int) -> np.random.Generator:
+    return np.random.Generator(np.random.Philox(key=[cfg.seed * 1_000_003 + layer, slot]))
+
+
+def gen_layer_weights(cfg: ModelConfig, layer: int) -> dict:
+    """Raw f32 weights for one transformer layer, N(0, 1/sqrt(K))."""
+    d, f = cfg.d_model, cfg.d_ffn
+    def mat(slot, k, n):
+        return (_rng(cfg, layer, slot).standard_normal((k, n), dtype=np.float32)
+                / np.float32(np.sqrt(k)))
+    return {
+        "g1": np.ones(d, np.float32),
+        "wqkv": mat(0, d, 3 * d),
+        "g2": np.ones(d, np.float32),
+        "wo": mat(1, d, d),
+        "w1": mat(2, d, f),
+        "w3": mat(3, d, f),
+        "w2": mat(4, f, d),
+    }
+
+
+def gen_final_weights(cfg: ModelConfig) -> dict:
+    d, v = cfg.d_model, cfg.vocab
+    we = (_rng(cfg, cfg.n_layers, 0).standard_normal((d, v), dtype=np.float32)
+          / np.float32(np.sqrt(d)))
+    return {"gf": np.ones(d, np.float32), "we": we}
+
+
+# ---------------------------------------------------------------------------
+# blob store
+# ---------------------------------------------------------------------------
+
+class BlobStore:
+    """Append-only little-endian blob file + manifest entries."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self.f = open(path, "wb")
+        self.offset = 0
+        self.entries = []  # (name, dtype, shape, offset, nbytes)
+
+    def add(self, name: str, arr: np.ndarray) -> str:
+        dtype = {"float32": "f32", "int8": "i8"}[arr.dtype.name]
+        data = np.ascontiguousarray(arr).tobytes()
+        self.entries.append((name, dtype, arr.shape, self.offset, len(data)))
+        self.f.write(data)
+        self.offset += len(data)
+        return name
+
+    def close(self):
+        self.f.close()
+
+    def manifest_lines(self):
+        for name, dtype, shape, off, nb in self.entries:
+            shp = "x".join(str(s) for s in shape)
+            yield f"blob name={name} dtype={dtype} shape={shp} offset={off} nbytes={nb}"
+
+
+# ---------------------------------------------------------------------------
+# per-layer quantized parameter pack
+# ---------------------------------------------------------------------------
+
+def quantize_layer(cfg: ModelConfig, raw: dict, with_planes: bool) -> dict:
+    """Quantize one layer's weights; returns arrays keyed for blob export."""
+    out = {"g1": raw["g1"], "g2": raw["g2"]}
+    for key in ("wqkv", "wo", "w1", "w3", "w2"):
+        w_q, scale = quantize.quantize_weights(raw[key], bits=cfg.w_bits)
+        out[f"{key}_f32"] = recompose(quantize.csd_planes(w_q, cfg.w_bits)).astype(np.float32)
+        out[f"{key}_scale"] = scale
+        if with_planes:
+            out[f"{key}_planes"] = quantize.csd_planes(w_q, cfg.w_bits)
+    return out
+
+
+def quantize_final(cfg: ModelConfig, raw: dict, with_planes: bool) -> dict:
+    out = {"gf": raw["gf"]}
+    w_q, scale = quantize.quantize_weights(raw["we"], bits=cfg.w_bits)
+    out["we_f32"] = w_q.astype(np.float32)
+    out["we_scale"] = scale
+    if with_planes:
+        out["we_planes"] = quantize.csd_planes(w_q, cfg.w_bits)
+    # host-side embedding lookup table: dequantized rows of the tied matrix
+    out["emb_f32"] = (w_q.astype(np.float32) * scale[None, :]).T.copy()  # [V, D]
+    return out
+
+
+def weight_for_variant(pack: dict, key: str, variant: str):
+    return pack[f"{key}_planes"] if variant == "csd" else pack[f"{key}_f32"]
+
+
+# ---------------------------------------------------------------------------
+# program lowering
+# ---------------------------------------------------------------------------
+
+def _spec(arr_or_shape, dtype=None):
+    if isinstance(arr_or_shape, np.ndarray):
+        return jax.ShapeDtypeStruct(arr_or_shape.shape, arr_or_shape.dtype)
+    return jax.ShapeDtypeStruct(arr_or_shape, dtype)
+
+
+def lower_qkv(cfg, bucket, variant, pack=None, baked_pack=None):
+    """Returns (hlo_text, arg_blob_keys). pack given => args mode."""
+    d = cfg.d_model
+    h_spec = _spec((bucket, d), jnp.float32)
+    if baked_pack is not None:
+        w = weight_for_variant(baked_pack, "wqkv", variant)
+        fn = model.make_qkv_fn(d, variant, baked=(
+            jnp.asarray(baked_pack["g1"]), jnp.asarray(w), jnp.asarray(baked_pack["wqkv_scale"])))
+        return to_hlo_text(jax.jit(fn).lower(h_spec)), []
+    w = weight_for_variant(pack, "wqkv", variant)
+    fn = model.make_qkv_fn(d, variant)
+    lowered = jax.jit(fn).lower(h_spec, _spec(pack["g1"]), _spec(w), _spec(pack["wqkv_scale"]))
+    return to_hlo_text(lowered), ["g1", "wqkv", "wqkv_scale"]
+
+
+def lower_ffn(cfg, bucket, variant, pack=None, baked_pack=None):
+    d = cfg.d_model
+    h_spec = _spec((bucket, d), jnp.float32)
+    a_spec = _spec((bucket, d), jnp.float32)
+    keys = ["g2", "wo", "wo_scale", "w1", "w1_scale", "w3", "w3_scale", "w2", "w2_scale"]
+    if baked_pack is not None:
+        p = baked_pack
+        baked = tuple(jnp.asarray(v) for v in (
+            p["g2"], weight_for_variant(p, "wo", variant), p["wo_scale"],
+            weight_for_variant(p, "w1", variant), p["w1_scale"],
+            weight_for_variant(p, "w3", variant), p["w3_scale"],
+            weight_for_variant(p, "w2", variant), p["w2_scale"]))
+        fn = model.make_ffn_fn(variant, baked=baked)
+        return to_hlo_text(jax.jit(fn).lower(h_spec, a_spec)), []
+    p = pack
+    specs = [h_spec, a_spec, _spec(p["g2"]),
+             _spec(weight_for_variant(p, "wo", variant)), _spec(p["wo_scale"]),
+             _spec(weight_for_variant(p, "w1", variant)), _spec(p["w1_scale"]),
+             _spec(weight_for_variant(p, "w3", variant)), _spec(p["w3_scale"]),
+             _spec(weight_for_variant(p, "w2", variant)), _spec(p["w2_scale"])]
+    lowered = jax.jit(model.make_ffn_fn(variant)).lower(*specs)
+    return to_hlo_text(lowered), keys
+
+
+def lower_logits(cfg, bucket, variant, pack=None, baked_pack=None):
+    d = cfg.d_model
+    h_spec = _spec((bucket, d), jnp.float32)
+    if baked_pack is not None:
+        p = baked_pack
+        fn = model.make_logits_fn(variant, baked=(
+            jnp.asarray(p["gf"]), jnp.asarray(weight_for_variant(p, "we", variant)),
+            jnp.asarray(p["we_scale"])))
+        return to_hlo_text(jax.jit(fn).lower(h_spec)), []
+    p = pack
+    lowered = jax.jit(model.make_logits_fn(variant)).lower(
+        h_spec, _spec(p["gf"]), _spec(weight_for_variant(p, "we", variant)), _spec(p["we_scale"]))
+    return to_hlo_text(lowered), ["gf", "we", "we_scale"]
+
+
+# blob key -> manifest blob name for layer i ("wqkv" -> "wqkv_planes_l3"/"wqkv_f32_l3")
+def blob_name(key: str, variant: str, layer: int | None) -> str:
+    suffix = "" if layer is None else f"_l{layer}"
+    if key in ("g1", "g2", "gf") or key.endswith("_scale"):
+        return f"{key}{suffix}"
+    kind = "planes" if variant == "csd" else "f32"
+    return f"{key}_{kind}{suffix}"
+
+
+# ---------------------------------------------------------------------------
+# build driver
+# ---------------------------------------------------------------------------
+
+BLOCK_NOUTS = {"qkv": 3, "ffn": 1, "logits": 1}
+
+
+def build_config(cfg: ModelConfig, out_dir: str, buckets, variants, mode: str):
+    cfg_dir = os.path.join(out_dir, cfg.name)
+    prog_dir = os.path.join(cfg_dir, "programs")
+    os.makedirs(prog_dir, exist_ok=True)
+
+    with_planes = "csd" in variants
+    store = BlobStore(os.path.join(cfg_dir, "weights.bin"))
+    lines = [
+        f"manifest_version {MANIFEST_VERSION}",
+        ("config name={name} d_model={d_model} n_layers={n_layers} d_ffn={d_ffn} "
+         "n_heads={n_heads} head_dim={head_dim} vocab={vocab} w_bits={w_bits} "
+         "a_bits={a_bits} params={params} mode={mode} seed={seed}").format(
+            mode=mode, **cfg.to_dict()),
+        f"buckets {','.join(str(b) for b in buckets)}",
+        f"variants {','.join(variants)}",
+    ]
+
+    # ---- weights: quantize + export blobs ----
+    packs, pruned = [], []
+    for layer in range(cfg.n_layers):
+        pack = quantize_layer(cfg, gen_layer_weights(cfg, layer), with_planes)
+        packs.append(pack)
+        for key, arr in pack.items():
+            store.add(blob_name_raw(key, layer), arr)
+        pruned.append(float((pack["wqkv_f32"] == 0).mean()))
+    fpack = quantize_final(cfg, gen_final_weights(cfg), with_planes)
+    for key, arr in fpack.items():
+        store.add(blob_name_raw(key, None), arr)
+    store.close()
+    lines.append(f"pruned_fraction {np.mean(pruned):.4f}")
+
+    # ---- programs ----
+    prog_id = 0
+    for variant in variants:
+        for bucket in buckets:
+            if mode == "baked":
+                for layer in range(cfg.n_layers):
+                    for block, lower in (("qkv", lower_qkv), ("ffn", lower_ffn)):
+                        hlo, _ = lower(cfg, bucket, variant, baked_pack=packs[layer])
+                        pid = f"p{prog_id}"; prog_id += 1
+                        path = f"programs/{block}_{variant}_b{bucket}_l{layer}.hlo.txt"
+                        _write(os.path.join(cfg_dir, path), hlo)
+                        lines.append(
+                            f"program id={pid} path={path} block={block} variant={variant} "
+                            f"bucket={bucket} nouts={BLOCK_NOUTS[block]}")
+                        lines.append(
+                            f"bind layer={layer} block={block} variant={variant} "
+                            f"bucket={bucket} program={pid} blobs=-")
+                hlo, _ = lower_logits(cfg, bucket, variant, baked_pack=fpack)
+                pid = f"p{prog_id}"; prog_id += 1
+                path = f"programs/logits_{variant}_b{bucket}.hlo.txt"
+                _write(os.path.join(cfg_dir, path), hlo)
+                lines.append(f"program id={pid} path={path} block=logits variant={variant} "
+                             f"bucket={bucket} nouts=1")
+                lines.append(f"bind layer=-1 block=logits variant={variant} bucket={bucket} "
+                             f"program={pid} blobs=-")
+            else:  # args mode: one program per block shared across layers
+                for block, lower in (("qkv", lower_qkv), ("ffn", lower_ffn)):
+                    hlo, keys = lower(cfg, bucket, variant, pack=packs[0])
+                    pid = f"p{prog_id}"; prog_id += 1
+                    path = f"programs/{block}_{variant}_b{bucket}.hlo.txt"
+                    _write(os.path.join(cfg_dir, path), hlo)
+                    lines.append(f"program id={pid} path={path} block={block} variant={variant} "
+                                 f"bucket={bucket} nouts={BLOCK_NOUTS[block]}")
+                    for layer in range(cfg.n_layers):
+                        blobs = ",".join(blob_name(k, variant, layer) for k in keys)
+                        lines.append(f"bind layer={layer} block={block} variant={variant} "
+                                     f"bucket={bucket} program={pid} blobs={blobs}")
+                hlo, keys = lower_logits(cfg, bucket, variant, pack=fpack)
+                pid = f"p{prog_id}"; prog_id += 1
+                path = f"programs/logits_{variant}_b{bucket}.hlo.txt"
+                _write(os.path.join(cfg_dir, path), hlo)
+                blobs = ",".join(blob_name(k, variant, None) for k in keys)
+                lines.append(f"program id={pid} path={path} block=logits variant={variant} "
+                             f"bucket={bucket} nouts=1")
+                lines.append(f"bind layer=-1 block=logits variant={variant} bucket={bucket} "
+                             f"program={pid} blobs={blobs}")
+
+    lines.extend(store.manifest_lines())
+    _write(os.path.join(cfg_dir, "MANIFEST.txt"), "\n".join(lines) + "\n")
+    print(f"[aot] {cfg.name}: {prog_id} programs, "
+          f"{store.offset / 1e6:.1f} MB weights, pruned={np.mean(pruned):.1%}")
+
+
+def blob_name_raw(key: str, layer: int | None) -> str:
+    """Manifest blob name for a pack key (packs already encode planes/f32)."""
+    suffix = "" if layer is None else f"_l{layer}"
+    return f"{key}{suffix}"
+
+
+def _write(path: str, text: str):
+    with open(path, "w") as f:
+        f.write(text)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts root")
+    ap.add_argument("--configs", default="tiny,demo-100m")
+    ap.add_argument("--buckets", default=None, help="comma-separated batch buckets")
+    ap.add_argument("--variants", default=None, help="fused,csd")
+    args = ap.parse_args()
+
+    for name in args.configs.split(","):
+        cfg = CONFIGS[name]
+        if name not in BUILDABLE:
+            print(f"[aot] skipping analytic-only config {name}", file=sys.stderr)
+            continue
+        if name == "tiny":
+            buckets = [int(b) for b in (args.buckets or "1,2,4").split(",")]
+            variants = (args.variants or "fused,csd").split(",")
+            mode = "baked"
+        else:
+            buckets = [int(b) for b in (args.buckets or "1,2,4,8").split(",")]
+            variants = (args.variants or "fused").split(",")
+            mode = "args"
+        build_config(cfg, args.out, buckets, variants, mode)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Model topologies for the ITA reproduction.
+
+Two kinds of configs:
+
+* **Buildable** configs (``tiny``, ``demo-100m``) — artifacts are AOT-lowered
+  and served end-to-end by the rust coordinator.
+* **Analytic** configs (``tinyllama-1.1b``, ``llama2-7b``, ``llama2-13b``) —
+  the paper's target topologies, used by the rust-side area / cost / energy /
+  bandwidth models (Tables II-V, Eq. 7-11). They are never lowered: baking
+  7B INT4 weights into HLO text is exactly the thing the paper calls a
+  520-3680 mm^2 die, not a CI job.
+
+The paper's bandwidth arithmetic (Section VI-C) uses d_model=4096, 32 layers,
+vocab 32000 == ``llama2-7b`` here.
+"""
+
+from dataclasses import dataclass, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int
+    n_layers: int
+    d_ffn: int
+    n_heads: int
+    vocab: int
+    # quantization
+    w_bits: int = 4  # INT4 hardwired weights (paper Section V-C)
+    a_bits: int = 8  # INT8 activations
+    # weight-generation seed (synthetic, deterministic)
+    seed: int = 0x17A
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def params(self) -> int:
+        """Total parameter count (weights hardwired on the ITA device +
+        host-side embedding table)."""
+        per_layer = (
+            3 * self.d_model * self.d_model  # Wq, Wk, Wv
+            + self.d_model * self.d_model    # Wo
+            + 3 * self.d_model * self.d_ffn  # W1, W3, W2 (SwiGLU)
+            + 2 * self.d_model               # rmsnorm gains
+        )
+        final = self.d_model  # final norm
+        emb = self.vocab * self.d_model  # tied embedding / LM head
+        return self.n_layers * per_layer + final + emb
+
+    def device_params(self) -> int:
+        """Parameters physically encoded on the ITA die. The LM head is
+        on-device (the paper's device emits final logits, Eq. 9); the host
+        keeps its own copy of the tied embedding matrix for the lookup, so
+        the device carries every parameter."""
+        return self.params()
+
+    def to_dict(self):
+        d = asdict(self)
+        d["head_dim"] = self.head_dim
+        d["params"] = self.params()
+        return d
+
+
+CONFIGS = {
+    # readable-in-seconds config; weights baked as HLO constants (true OMOC)
+    "tiny": ModelConfig("tiny", d_model=64, n_layers=2, d_ffn=192, n_heads=4, vocab=258),
+    # ~100M-parameter end-to-end serving config; weights passed as device
+    # buffers loaded once at startup (hybrid/SRAM mode, Section VII-D)
+    "demo-100m": ModelConfig("demo-100m", d_model=768, n_layers=14, d_ffn=2048, n_heads=12, vocab=258),
+    # analytic topologies (paper Table IV)
+    "tinyllama-1.1b": ModelConfig("tinyllama-1.1b", d_model=2048, n_layers=22, d_ffn=5632, n_heads=32, vocab=32000),
+    "llama2-7b": ModelConfig("llama2-7b", d_model=4096, n_layers=32, d_ffn=11008, n_heads=32, vocab=32000),
+    "llama2-13b": ModelConfig("llama2-13b", d_model=5120, n_layers=40, d_ffn=13824, n_heads=40, vocab=32000),
+}
+
+BUILDABLE = ("tiny", "demo-100m")

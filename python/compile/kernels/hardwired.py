@@ -1,0 +1,136 @@
+"""L1 Pallas kernels: the ITA device's hardwired matrix-vector hot-spot.
+
+Two kernels, both lowered with ``interpret=True`` (the CPU PJRT plugin cannot
+execute Mosaic custom-calls; see /opt/xla-example/README.md):
+
+* ``csd_matmul`` — the paper-structural kernel. INT8 activations contracted
+  against CSD digit planes:  acc = sum_p (x @ D_p) << p  in int32. This *is*
+  the shift-add tree of Section IV-C in tensor form: each plane-p contraction
+  is the set of adders whose shift amount is p; a zero digit contributes
+  nothing, exactly like a pruned adder.
+
+* ``fused_matmul`` — the performance kernel. The digit planes are recomposed
+  to an integer-valued f32 matrix at build time and contracted with one f32
+  GEMM. Because |acc| < 2^24 for every topology we build (K <= 2048,
+  |x| <= 127, |w| <= 7 -> |acc| <= 127*7*2048 = 1,820,672), the f32 product
+  is **bit-exact** equal to the int32 shift-add result. pytest asserts this.
+
+Block sizes: on CPU-PJRT we lower a single block (whole operand in "VMEM") —
+grid loops under interpret=True become HLO while-loops that defeat the
+backend GEMM. The tiled variants (block_n) exist to express and test the
+HBM<->VMEM schedule that a real TPU lowering would use; DESIGN.md §Perf
+derives the VMEM footprint and MXU utilization estimates from these specs.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _csd_kernel(x_ref, p_ref, o_ref, *, n_planes: int):
+    """acc = sum_p (x @ D_p) << p, int32 accumulation."""
+    x = x_ref[...].astype(jnp.int32)
+    acc = jnp.zeros((x.shape[0], p_ref.shape[2]), jnp.int32)
+    for p in range(n_planes):  # static unroll: one "adder rank" per plane
+        d = p_ref[p].astype(jnp.int32)
+        contrib = jax.lax.dot_general(
+            x, d, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+        )
+        acc = acc + (contrib << p)
+    o_ref[...] = acc
+
+
+def csd_matmul(x_q, planes, *, block_n: int | None = None, interpret: bool = True):
+    """INT8 x CSD-plane matmul.
+
+    Args:
+      x_q: int8 [B, K] quantized activations.
+      planes: int8 [P, K, N] digit planes (values in {-1, 0, +1}).
+      block_n: optional output-column tile (TPU-schedule expression); None
+        lowers one whole-array block (CPU artifact default).
+
+    Returns:
+      int32 [B, N] == x_q @ (sum_p planes[p] << p), exactly.
+    """
+    b, k = x_q.shape
+    n_planes, k2, n = planes.shape
+    assert k == k2, (k, k2)
+    kern = functools.partial(_csd_kernel, n_planes=n_planes)
+    out_shape = jax.ShapeDtypeStruct((b, n), jnp.int32)
+    if block_n is None:
+        return pl.pallas_call(kern, out_shape=out_shape, interpret=interpret)(x_q, planes)
+    assert n % block_n == 0, (n, block_n)
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        kern,
+        out_shape=out_shape,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, k), lambda j: (0, 0)),           # x stays resident
+            pl.BlockSpec((n_planes, k, block_n), lambda j: (0, 0, j)),  # stream planes
+        ],
+        out_specs=pl.BlockSpec((b, block_n), lambda j: (0, j)),
+        interpret=interpret,
+    )(x_q, planes)
+
+
+def _fused_kernel(x_ref, w_ref, o_ref):
+    o_ref[...] = jax.lax.dot_general(
+        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def fused_matmul(x, w, *, block_n: int | None = None, interpret: bool = True):
+    """f32 GEMM over integer-valued operands (bit-exact vs csd_matmul).
+
+    Args:
+      x: f32 [B, K] — integer-valued (quantized activations cast to f32).
+      w: f32 [K, N] — integer-valued (recomposed quantized weights).
+    """
+    b, k = x.shape
+    k2, n = w.shape
+    assert k == k2
+    out_shape = jax.ShapeDtypeStruct((b, n), jnp.float32)
+    if block_n is None:
+        return pl.pallas_call(_fused_kernel, out_shape=out_shape, interpret=interpret)(x, w)
+    assert n % block_n == 0
+    return pl.pallas_call(
+        _fused_kernel,
+        out_shape=out_shape,
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((b, k), lambda j: (0, 0)),
+            pl.BlockSpec((k, block_n), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((b, block_n), lambda j: (0, j)),
+        interpret=interpret,
+    )(x, w)
+
+
+def vmem_footprint_bytes(b: int, k: int, n: int, n_planes: int = 4,
+                         block_n: int | None = None, variant: str = "csd") -> int:
+    """VMEM bytes one grid step touches — the §Perf TPU-estimate input.
+
+    csd: x tile (b*k, int8) + plane tile (n_planes*k*bn, int8) + acc (b*bn, i32)
+    fused: x tile (b*k, f32) + w tile (k*bn, f32) + acc (b*bn, f32)
+    """
+    bn = block_n or n
+    if variant == "csd":
+        return b * k + n_planes * k * bn + 4 * b * bn
+    return 4 * (b * k + k * bn + b * bn)
+
+
+def mxu_utilization_estimate(b: int, k: int, n: int, variant: str = "csd") -> float:
+    """Fraction of 128x128 MXU lanes doing useful work per pass.
+
+    The MXU processes ceil-padded tiles; tiny batch dims waste rows. For the
+    csd variant each plane is a separate pass, so utilization matches the
+    fused variant per pass but total passes are n_planes x.
+    """
+    pad = lambda v, m: -(-v // m) * m
+    useful = b * k * n
+    padded = pad(b, 128) * pad(k, 128) * pad(n, 128)
+    return useful / padded

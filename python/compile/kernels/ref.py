@@ -1,0 +1,74 @@
+"""Pure-jnp correctness oracles for the Pallas kernels and device blocks.
+
+Every kernel and every AOT-lowered device block has a reference here; pytest
+asserts exact (integer paths) or allclose (float paths) agreement. The rust
+`device::sim` module mirrors these same formulas so the served engine can be
+differential-tested against a second, independent implementation.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def recompose(planes: np.ndarray) -> np.ndarray:
+    """sum_p planes[p] << p — inverse of quantize.csd_planes. int32 [K, N]."""
+    n_planes = planes.shape[0]
+    acc = np.zeros(planes.shape[1:], np.int32)
+    for p in range(n_planes):
+        acc += planes[p].astype(np.int32) << p
+    return acc
+
+
+def ref_int_matmul(x_q: np.ndarray, w_q: np.ndarray) -> np.ndarray:
+    """Exact integer matmul oracle: int32 [B, N]."""
+    return x_q.astype(np.int32) @ w_q.astype(np.int32)
+
+
+# --- device-block reference ops (match model.py exactly, shapes [B, ...]) ---
+
+RMS_EPS = 1e-5
+
+
+def rmsnorm(x, g):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + RMS_EPS) * g
+
+
+def quant_act(x, a_bits: int = 8):
+    """Per-row symmetric activation quantization. Returns (q int8, scale)."""
+    q = (1 << (a_bits - 1)) - 1
+    s = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / q
+    s = jnp.maximum(s, 1e-8)
+    xq = jnp.clip(jnp.round(x / s), -q, q).astype(jnp.int8)
+    return xq, s
+
+
+def qlinear_ref(x, w_q, w_scale):
+    """Quantize -> exact int matmul -> dequantize (oracle for both kernels)."""
+    xq, xs = quant_act(x)
+    acc = xq.astype(jnp.int32) @ w_q.astype(jnp.int32)
+    return acc.astype(jnp.float32) * xs * w_scale[None, :]
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def qkv_block_ref(h, g1, w_q, w_scale, d_model: int):
+    x = rmsnorm(h, g1)
+    qkv = qlinear_ref(x, w_q, w_scale)
+    return qkv[:, :d_model], qkv[:, d_model:2 * d_model], qkv[:, 2 * d_model:]
+
+
+def ffn_block_ref(h, attn, g2, wo_q, wo_s, w1_q, w1_s, w3_q, w3_s, w2_q, w2_s):
+    h = h + qlinear_ref(attn, wo_q, wo_s)
+    x = rmsnorm(h, g2)
+    a = qlinear_ref(x, w1_q, w1_s)
+    b = qlinear_ref(x, w3_q, w3_s)
+    return h + qlinear_ref(silu(a) * b, w2_q, w2_s)
+
+
+def logits_block_ref(h, gf, we_q, we_s):
+    x = rmsnorm(h, gf)
+    return qlinear_ref(x, we_q, we_s)

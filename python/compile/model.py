@@ -1,0 +1,130 @@
+"""L2: the ITA device's compute graph (build-time JAX, calling L1 kernels).
+
+These are the *device-side* blocks of the Split-Brain protocol (paper
+Section IV-B): every weight-bearing linear operation lives here —
+
+  * ``qkv_block``    h -> (q, k, v)            (pre-attention norm + fused QKV)
+  * ``ffn_block``    (h, attn) -> h_next       (Wo + residual + SwiGLU FFN)
+  * ``logits_block`` h -> logits               (final norm + tied LM head)
+
+The host (rust) owns everything dynamic: embedding lookup, RoPE, the KV
+cache, softmax attention, and sampling. Only activation vectors cross the
+interface, exactly as in Fig. 1 of the paper.
+
+Weight handling has two modes, matching aot.py:
+
+  * ``baked``  — weights are closed-over jnp constants; they become HLO
+    constants, i.e. the One-Model-One-Chip cartridge. (tiny config)
+  * ``args``   — weights are runtime parameters the rust runtime uploads once
+    at startup and keeps resident as PJRT buffers (the paper's Section VII-D
+    hybrid/SRAM mode; used for demo-100m where baking 100M params into HLO
+    text is the 520 mm^2 die, not a build step).
+
+Two kernel variants (see kernels/hardwired.py): ``csd`` is paper-structural,
+``fused`` is the bit-exact fast path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import hardwired
+from .kernels.ref import RMS_EPS
+
+
+def rmsnorm(x, g):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + RMS_EPS) * g
+
+
+def quant_act(x, a_bits: int = 8):
+    q = (1 << (a_bits - 1)) - 1
+    s = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / q
+    s = jnp.maximum(s, 1e-8)
+    xq = jnp.clip(jnp.round(x / s), -q, q).astype(jnp.int8)
+    return xq, s
+
+
+def qlinear(x, weight, w_scale, variant: str):
+    """Quantize activations, contract against hardwired weights, dequantize.
+
+    Args:
+      x: f32 [B, K].
+      weight: csd variant -> int8 digit planes [P, K, N];
+              fused variant -> integer-valued f32 [K, N] (recomposed W_q).
+      w_scale: f32 [N] per-output-channel scale.
+    """
+    xq, xs = quant_act(x)
+    if variant == "csd":
+        acc = hardwired.csd_matmul(xq, weight).astype(jnp.float32)
+    elif variant == "fused":
+        acc = hardwired.fused_matmul(xq.astype(jnp.float32), weight)
+    else:
+        raise ValueError(f"unknown variant {variant!r}")
+    return acc * xs * w_scale[None, :]
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def qkv_block(h, g1, w_qkv, s_qkv, *, d_model: int, variant: str):
+    """h [B, D] -> (q, k, v) each [B, D]. W_{q,k,v} fused into one matmul."""
+    x = rmsnorm(h, g1)
+    qkv = qlinear(x, w_qkv, s_qkv, variant)
+    return (qkv[:, :d_model], qkv[:, d_model:2 * d_model], qkv[:, 2 * d_model:])
+
+
+def ffn_block(h, attn, g2, w_o, s_o, w_1, s_1, w_3, s_3, w_2, s_2, *, variant: str):
+    """(h, concatenated-head attention output) -> next hidden state.
+
+    Applies the output projection Wo on-device (the paper's Eq. 8 transfer is
+    the raw attention output), then residual + SwiGLU FFN (paper Eq. 5).
+    """
+    h = h + qlinear(attn, w_o, s_o, variant)
+    x = rmsnorm(h, g2)
+    a = qlinear(x, w_1, s_1, variant)
+    b = qlinear(x, w_3, s_3, variant)
+    return (h + qlinear(silu(a) * b, w_2, s_2, variant),)
+
+
+def logits_block(h, gf, w_e, s_e, *, variant: str):
+    """Final norm + tied LM head -> logits [B, V] (paper Eq. 9 transfer)."""
+    x = rmsnorm(h, gf)
+    return (qlinear(x, w_e, s_e, variant),)
+
+
+def make_qkv_fn(d_model: int, variant: str, baked=None):
+    """Returns a jit-able fn with the right signature for AOT lowering.
+
+    baked: None for args mode, else the weight pytree (g1, w, s) to close over.
+    """
+    if baked is None:
+        def fn(h, g1, w, s):
+            return qkv_block(h, g1, w, s, d_model=d_model, variant=variant)
+    else:
+        g1, w, s = baked
+        def fn(h):
+            return qkv_block(h, g1, w, s, d_model=d_model, variant=variant)
+    return fn
+
+
+def make_ffn_fn(variant: str, baked=None):
+    if baked is None:
+        def fn(h, attn, g2, wo, so, w1, s1, w3, s3, w2, s2):
+            return ffn_block(h, attn, g2, wo, so, w1, s1, w3, s3, w2, s2, variant=variant)
+    else:
+        g2, wo, so, w1, s1, w3, s3, w2, s2 = baked
+        def fn(h, attn):
+            return ffn_block(h, attn, g2, wo, so, w1, s1, w3, s3, w2, s2, variant=variant)
+    return fn
+
+
+def make_logits_fn(variant: str, baked=None):
+    if baked is None:
+        def fn(h, gf, we, se):
+            return logits_block(h, gf, we, se, variant=variant)
+    else:
+        gf, we, se = baked
+        def fn(h):
+            return logits_block(h, gf, we, se, variant=variant)
+    return fn

@@ -1,0 +1,92 @@
+"""Logic-Aware Quantization (paper Section IV-C).
+
+Weights are quantized to INT4 per output channel, pruned against the paper's
+zero-weight threshold, and decomposed into **CSD digit planes**: signed-digit
+planes D_p in {-1, 0, +1}^(K x N) with
+
+    W_q = sum_p D_p * 2^p          (p = 0 .. w_bits-1)
+
+The digit-plane decomposition is the tensorized form of the paper's per-weight
+shift-add trees: a zero digit is an adder that never gets synthesized, and the
+number of non-zero digits per weight is exactly the adder count the rust-side
+`synth` crate prices in gates (Table I) and LUTs (Tables VI/VII).
+
+The same decomposition therefore feeds *numerics* (the Pallas kernel computes
+`sum_p (x @ D_p) << p`) and *hardware models* — one artifact of truth.
+
+Everything here is numpy (build-time only) and mirrored bit-for-bit by
+``rust/src/quant``.
+"""
+
+import numpy as np
+
+# Paper Section IV-C3: weights with |w| < 2^-6 are pruned and their
+# multiplication units removed from the netlist entirely.
+PRUNE_THRESHOLD = 2.0 ** -6
+
+
+def qmax(bits: int) -> int:
+    """Symmetric signed range limit, e.g. 7 for INT4."""
+    return (1 << (bits - 1)) - 1
+
+
+def quantize_weights(w: np.ndarray, bits: int = 4, prune: bool = True):
+    """Per-output-channel symmetric quantization.
+
+    Args:
+      w: float32 [K, N] (inputs x outputs).
+      bits: weight width (paper: 4).
+      prune: apply the |w| < 2^-6 zero-weight threshold *after* scaling.
+
+    Returns:
+      (w_q int8 [K, N] in [-qmax, qmax], scale float32 [N])
+    """
+    assert w.ndim == 2
+    q = qmax(bits)
+    scale = np.abs(w).max(axis=0) / q
+    scale = np.maximum(scale, 1e-12).astype(np.float32)
+    w_q = np.clip(np.round(w / scale[None, :]), -q, q).astype(np.int8)
+    if prune:
+        w_q[np.abs(w_q.astype(np.float32) * scale[None, :]) < PRUNE_THRESHOLD] = 0
+    return w_q, scale
+
+
+def csd_digits(v: np.ndarray, bits: int) -> np.ndarray:
+    """Canonical-signed-digit (non-adjacent form) decomposition.
+
+    Args:
+      v: integer array, each value in [-(2^(bits-1)), 2^(bits-1)-1].
+      bits: number of digit positions (positions 0..bits-1 suffice for that
+        range: 2^(b-1)-1 = +2^(b-1) - 1 uses position b-1).
+
+    Returns:
+      int8 array [bits, *v.shape] with values in {-1, 0, +1}, no two adjacent
+      non-zeros (NAF property), and sum_p digits[p] * 2^p == v.
+    """
+    work = v.astype(np.int64).copy()
+    digits = np.zeros((bits,) + v.shape, dtype=np.int8)
+    for p in range(bits):
+        odd = (work & 1) != 0
+        # for odd work: digit = 2 - (work mod 4), i.e. +1 if work=1 mod 4,
+        # -1 if work=3 mod 4 -> guarantees the next bit is even (NAF)
+        d = np.where(odd, 2 - (work & 3), 0).astype(np.int64)
+        digits[p] = d.astype(np.int8)
+        work = (work - d) >> 1
+    if not (work == 0).all():
+        raise ValueError(f"values exceed {bits}-bit CSD range")
+    return digits
+
+
+def csd_planes(w_q: np.ndarray, bits: int = 4) -> np.ndarray:
+    """Digit planes for a quantized weight matrix: int8 [bits, K, N]."""
+    return csd_digits(w_q, bits)
+
+
+def csd_nonzero_digits(w_q: np.ndarray, bits: int = 4) -> np.ndarray:
+    """Per-weight adder count (number of non-zero CSD digits)."""
+    return (csd_digits(w_q, bits) != 0).sum(axis=0)
+
+
+def pruned_fraction(w_q: np.ndarray) -> float:
+    """Fraction of weights whose MAC unit is eliminated (paper: 15-25%)."""
+    return float((w_q == 0).mean())

@@ -1,0 +1,115 @@
+"""AOT build pipeline: manifest structure, blob integrity, determinism."""
+
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile.configs import CONFIGS
+
+
+@pytest.fixture(scope="module")
+def tiny_build(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    aot.build_config(CONFIGS["tiny"], str(out), buckets=[1, 2], variants=["fused", "csd"],
+                     mode="baked")
+    return os.path.join(str(out), "tiny")
+
+
+def parse_manifest(path):
+    kinds = {}
+    with open(os.path.join(path, "MANIFEST.txt")) as f:
+        for line in f:
+            kind = line.split()[0]
+            kinds.setdefault(kind, []).append(line.strip())
+    return kinds
+
+
+def test_manifest_has_all_sections(tiny_build):
+    kinds = parse_manifest(tiny_build)
+    for kind in ("manifest_version", "config", "buckets", "variants",
+                 "program", "bind", "blob"):
+        assert kind in kinds, f"missing {kind}"
+
+
+def test_program_files_exist_and_are_hlo(tiny_build):
+    kinds = parse_manifest(tiny_build)
+    # tiny baked: per-layer qkv+ffn programs + logits, per bucket, per variant
+    cfg = CONFIGS["tiny"]
+    expect = 2 * 2 * (cfg.n_layers * 2 + 1)  # variants * buckets * blocks
+    assert len(kinds["program"]) == expect
+    for line in kinds["program"]:
+        fields = dict(kv.split("=", 1) for kv in line.split()[1:])
+        p = os.path.join(tiny_build, fields["path"])
+        assert os.path.exists(p)
+        text = open(p).read()
+        assert "ENTRY" in text and "HloModule" in text
+
+
+def test_blob_offsets_contiguous(tiny_build):
+    kinds = parse_manifest(tiny_build)
+    size = os.path.getsize(os.path.join(tiny_build, "weights.bin"))
+    end = 0
+    for line in kinds["blob"]:
+        fields = dict(kv.split("=", 1) for kv in line.split()[1:])
+        off, nb = int(fields["offset"]), int(fields["nbytes"])
+        assert off == end
+        dtype_size = {"f32": 4, "i8": 1}[fields["dtype"]]
+        n_elems = int(np.prod([int(s) for s in fields["shape"].split("x")]))
+        assert nb == n_elems * dtype_size
+        end = off + nb
+    assert end == size
+
+
+def test_emb_blob_matches_tied_head(tiny_build):
+    """Host embedding table == dequantized transpose of the LM head."""
+    kinds = parse_manifest(tiny_build)
+    blobs = {}
+    for line in kinds["blob"]:
+        f = dict(kv.split("=", 1) for kv in line.split()[1:])
+        blobs[f["name"]] = f
+    raw = open(os.path.join(tiny_build, "weights.bin"), "rb").read()
+
+    def load(name, dtype):
+        f = blobs[name]
+        shape = [int(s) for s in f["shape"].split("x")]
+        a = np.frombuffer(raw, dtype=dtype, count=int(np.prod(shape)),
+                          offset=int(f["offset"]))
+        return a.reshape(shape)
+
+    we = load("we_f32", np.float32)       # [D, V] integer-valued
+    se = load("we_scale", np.float32)     # [V]
+    emb = load("emb_f32", np.float32)     # [V, D]
+    np.testing.assert_allclose(emb, (we * se[None, :]).T, rtol=0, atol=0)
+
+
+def test_weight_generation_deterministic():
+    cfg = CONFIGS["tiny"]
+    a = aot.gen_layer_weights(cfg, 0)
+    b = aot.gen_layer_weights(cfg, 0)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+    c = aot.gen_layer_weights(cfg, 1)
+    assert not np.array_equal(a["wqkv"], c["wqkv"])
+
+
+def test_csd_and_fused_blobs_consistent(tiny_build):
+    """planes blobs recompose to exactly the f32 blobs (single truth)."""
+    kinds = parse_manifest(tiny_build)
+    blobs = {}
+    for line in kinds["blob"]:
+        f = dict(kv.split("=", 1) for kv in line.split()[1:])
+        blobs[f["name"]] = f
+    raw = open(os.path.join(tiny_build, "weights.bin"), "rb").read()
+
+    def load(name, dtype):
+        f = blobs[name]
+        shape = [int(s) for s in f["shape"].split("x")]
+        return np.frombuffer(raw, dtype=dtype, count=int(np.prod(shape)),
+                             offset=int(f["offset"])).reshape(shape)
+
+    planes = load("wqkv_planes_l0", np.int8)
+    f32 = load("wqkv_f32_l0", np.float32)
+    rec = sum(planes[p].astype(np.int32) << p for p in range(planes.shape[0]))
+    np.testing.assert_array_equal(rec.astype(np.float32), f32)

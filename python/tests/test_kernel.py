@@ -1,0 +1,101 @@
+"""L1 Pallas kernels vs the pure-jnp/numpy oracle — the CORE correctness
+signal for the device compute path (hypothesis sweeps shapes/seeds)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quantize
+from compile.kernels import hardwired
+from compile.kernels.ref import recompose, ref_int_matmul
+
+
+def _random_case(seed, b, k, n, w_bits=4):
+    rng = np.random.default_rng(seed)
+    x_q = rng.integers(-127, 128, size=(b, k), dtype=np.int8)
+    w = rng.standard_normal((k, n)).astype(np.float32)
+    w_q, scale = quantize.quantize_weights(w, bits=w_bits)
+    planes = quantize.csd_planes(w_q, w_bits)
+    return x_q, w_q, planes, scale
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(1, 8),
+       st.sampled_from([3, 8, 16, 64, 100]), st.sampled_from([1, 4, 16, 96]))
+@settings(max_examples=40, deadline=None)
+def test_csd_matmul_exact(seed, b, k, n):
+    x_q, w_q, planes, _ = _random_case(seed, b, k, n)
+    got = np.asarray(hardwired.csd_matmul(jnp.asarray(x_q), jnp.asarray(planes)))
+    np.testing.assert_array_equal(got, ref_int_matmul(x_q, w_q))
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(1, 4), st.sampled_from([2, 3, 5, 6]))
+@settings(max_examples=20, deadline=None)
+def test_csd_matmul_exact_other_widths(seed, b, w_bits):
+    """Kernel is width-generic: plane count follows w_bits."""
+    x_q, w_q, planes, _ = _random_case(seed, b, 24, 8, w_bits=w_bits)
+    got = np.asarray(hardwired.csd_matmul(jnp.asarray(x_q), jnp.asarray(planes)))
+    np.testing.assert_array_equal(got, ref_int_matmul(x_q, w_q))
+
+
+@given(st.integers(0, 2**32 - 1))
+@settings(max_examples=20, deadline=None)
+def test_fused_matmul_bitexact_vs_csd(seed):
+    """The f32 fast path equals the int shift-add path bit-for-bit while
+    |acc| < 2^24 (DESIGN.md numbers policy)."""
+    x_q, w_q, planes, _ = _random_case(seed, 4, 128, 32)
+    csd = np.asarray(hardwired.csd_matmul(jnp.asarray(x_q), jnp.asarray(planes)))
+    fused = np.asarray(hardwired.fused_matmul(
+        jnp.asarray(x_q, jnp.float32), jnp.asarray(w_q, jnp.float32)))
+    np.testing.assert_array_equal(fused.astype(np.int32), csd)
+    assert np.abs(csd).max() < 2 ** 24
+
+
+@pytest.mark.parametrize("block_n", [4, 8, 16])
+def test_csd_matmul_tiled_equals_untiled(block_n):
+    x_q, w_q, planes, _ = _random_case(0, 2, 32, 48)
+    full = hardwired.csd_matmul(jnp.asarray(x_q), jnp.asarray(planes))
+    tiled = hardwired.csd_matmul(jnp.asarray(x_q), jnp.asarray(planes), block_n=block_n)
+    np.testing.assert_array_equal(np.asarray(tiled), np.asarray(full))
+
+
+@pytest.mark.parametrize("block_n", [8, 24])
+def test_fused_matmul_tiled_equals_untiled(block_n):
+    rng = np.random.default_rng(1)
+    x = rng.integers(-127, 128, size=(3, 16)).astype(np.float32)
+    w = rng.integers(-7, 8, size=(16, 48)).astype(np.float32)
+    full = hardwired.fused_matmul(jnp.asarray(x), jnp.asarray(w))
+    tiled = hardwired.fused_matmul(jnp.asarray(x), jnp.asarray(w), block_n=block_n)
+    np.testing.assert_array_equal(np.asarray(tiled), np.asarray(full))
+
+
+def test_zero_planes_give_zero_output():
+    planes = np.zeros((4, 16, 8), np.int8)
+    x_q = np.full((2, 16), 127, np.int8)
+    got = np.asarray(hardwired.csd_matmul(jnp.asarray(x_q), jnp.asarray(planes)))
+    assert (got == 0).all()
+
+
+def test_extreme_values_no_overflow():
+    """Worst-case magnitudes stay within int32 and within the f32-exact bound."""
+    k = 2048  # largest contraction dim we build (demo-100m FFN down-proj)
+    x_q = np.full((1, k), 127, np.int8)
+    w_q = np.full((k, 4), 7, np.int8)
+    planes = quantize.csd_planes(w_q, 4)
+    got = np.asarray(hardwired.csd_matmul(jnp.asarray(x_q), jnp.asarray(planes)))
+    expect = 127 * 7 * k
+    assert (got == expect).all() and expect < 2 ** 24
+
+
+def test_vmem_footprint_model():
+    full = hardwired.vmem_footprint_bytes(8, 768, 2304, variant="csd")
+    tiled = hardwired.vmem_footprint_bytes(8, 768, 2304, block_n=128, variant="csd")
+    assert tiled < full
+    # the demo-100m qkv tile at block_n=128 must fit a 16 MB VMEM budget
+    assert tiled < 16 * 2 ** 20
+
+
+def test_mxu_utilization_estimate_bounds():
+    u = hardwired.mxu_utilization_estimate(1, 768, 2304)
+    assert 0.0 < u <= 1.0
+    assert hardwired.mxu_utilization_estimate(128, 768, 2304) > u

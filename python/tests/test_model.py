@@ -1,0 +1,99 @@
+"""L2 device blocks vs pure-jnp references; csd/fused variant agreement."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model, quantize
+from compile.configs import CONFIGS
+from compile.kernels import ref
+
+
+def make_params(seed, d, n_out, w_bits=4):
+    rng = np.random.default_rng(seed)
+    w = (rng.standard_normal((d, n_out)).astype(np.float32) / np.sqrt(d))
+    w_q, scale = quantize.quantize_weights(w, bits=w_bits)
+    planes = quantize.csd_planes(w_q, w_bits)
+    return w_q, planes, scale
+
+
+def hidden(seed, b, d):
+    return jnp.asarray(np.random.default_rng(seed).standard_normal((b, d)), jnp.float32)
+
+
+@pytest.mark.parametrize("variant", ["csd", "fused"])
+@pytest.mark.parametrize("b,d", [(1, 32), (4, 64)])
+def test_qkv_block_matches_ref(variant, b, d):
+    w_q, planes, scale = make_params(0, d, 3 * d)
+    g1 = jnp.ones(d)
+    h = hidden(1, b, d)
+    w = jnp.asarray(planes) if variant == "csd" else jnp.asarray(w_q, jnp.float32)
+    q, k, v = model.qkv_block(h, g1, w, jnp.asarray(scale), d_model=d, variant=variant)
+    rq, rk, rv = ref.qkv_block_ref(h, g1, jnp.asarray(w_q), jnp.asarray(scale), d)
+    np.testing.assert_allclose(np.asarray(q), np.asarray(rq), rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(k), np.asarray(rk), rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(rv), rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("variant", ["csd", "fused"])
+def test_ffn_block_matches_ref(variant):
+    b, d, f = 2, 48, 96
+    wo_q, wo_p, wo_s = make_params(1, d, d)
+    w1_q, w1_p, w1_s = make_params(2, d, f)
+    w3_q, w3_p, w3_s = make_params(3, d, f)
+    w2_q, w2_p, w2_s = make_params(4, f, d)
+    g2 = jnp.ones(d)
+    h, attn = hidden(5, b, d), hidden(6, b, d)
+    pick = (lambda q, p: jnp.asarray(p)) if variant == "csd" else (
+        lambda q, p: jnp.asarray(q, jnp.float32))
+    (out,) = model.ffn_block(
+        h, attn, g2,
+        pick(wo_q, wo_p), jnp.asarray(wo_s), pick(w1_q, w1_p), jnp.asarray(w1_s),
+        pick(w3_q, w3_p), jnp.asarray(w3_s), pick(w2_q, w2_p), jnp.asarray(w2_s),
+        variant=variant)
+    want = ref.ffn_block_ref(
+        h, attn, g2, jnp.asarray(wo_q), jnp.asarray(wo_s), jnp.asarray(w1_q),
+        jnp.asarray(w1_s), jnp.asarray(w3_q), jnp.asarray(w3_s),
+        jnp.asarray(w2_q), jnp.asarray(w2_s))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("variant", ["csd", "fused"])
+def test_logits_block_matches_ref(variant):
+    b, d, v = 2, 32, 50
+    we_q, we_p, we_s = make_params(7, d, v)
+    gf = jnp.ones(d)
+    h = hidden(8, b, d)
+    w = jnp.asarray(we_p) if variant == "csd" else jnp.asarray(we_q, jnp.float32)
+    (out,) = model.logits_block(h, gf, w, jnp.asarray(we_s), variant=variant)
+    want = ref.logits_block_ref(h, gf, jnp.asarray(we_q), jnp.asarray(we_s))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+def test_variants_bitexact_on_blocks():
+    """csd and fused artifacts must be interchangeable at serving time."""
+    b, d = 3, 64
+    w_q, planes, scale = make_params(9, d, 3 * d)
+    g1, h = jnp.ones(d), hidden(10, b, d)
+    out_csd = model.qkv_block(h, g1, jnp.asarray(planes), jnp.asarray(scale),
+                              d_model=d, variant="csd")
+    out_fused = model.qkv_block(h, g1, jnp.asarray(w_q, jnp.float32),
+                                jnp.asarray(scale), d_model=d, variant="fused")
+    for a, b_ in zip(out_csd, out_fused):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+
+
+def test_config_param_counts():
+    """Sanity: topology accounting used across DESIGN.md and the rust side."""
+    assert abs(CONFIGS["demo-100m"].params() - 99e6) < 3e6
+    assert abs(CONFIGS["llama2-7b"].params() / 1e9 - 6.6) < 0.4
+    assert CONFIGS["tiny"].params() < 1e6
+    for cfg in CONFIGS.values():
+        assert cfg.d_model % cfg.n_heads == 0
+
+
+def test_rmsnorm_unit_scale():
+    x = hidden(11, 2, 64) * 10.0
+    y = model.rmsnorm(x, jnp.ones(64))
+    rms = np.sqrt(np.mean(np.asarray(y) ** 2, axis=-1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)

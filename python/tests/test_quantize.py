@@ -1,0 +1,98 @@
+"""Properties of Logic-Aware Quantization: CSD encoding, pruning, scales."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quantize
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4, 5, 6, 8])
+def test_csd_recomposes_every_value_in_range(bits):
+    lo, hi = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+    v = np.arange(lo, hi + 1, dtype=np.int64)
+    digits = quantize.csd_digits(v, bits)
+    recomposed = sum(digits[p].astype(np.int64) << p for p in range(bits))
+    np.testing.assert_array_equal(recomposed, v)
+
+
+@pytest.mark.parametrize("bits", [3, 4, 6])
+def test_csd_digits_are_signed_binary(bits):
+    lo, hi = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+    digits = quantize.csd_digits(np.arange(lo, hi + 1), bits)
+    assert set(np.unique(digits)) <= {-1, 0, 1}
+
+
+@pytest.mark.parametrize("bits", [3, 4, 6, 8])
+def test_csd_non_adjacent_form(bits):
+    """NAF property: no two adjacent non-zero digits (paper Section IV-C1)."""
+    lo, hi = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+    digits = quantize.csd_digits(np.arange(lo, hi + 1), bits)  # [bits, n]
+    nz = digits != 0
+    adjacent = nz[:-1] & nz[1:]
+    assert not adjacent.any()
+
+
+@pytest.mark.parametrize("bits", [4, 6, 8])
+def test_csd_digit_count_bound(bits):
+    """NAF has at most ceil(bits/2)+ nonzeros; for INT4 the max is 2."""
+    lo, hi = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+    nnz = quantize.csd_nonzero_digits(np.arange(lo, hi + 1), bits)
+    assert nnz.max() <= (bits + 1) // 2
+
+
+def test_csd_out_of_range_raises():
+    with pytest.raises(ValueError):
+        quantize.csd_digits(np.array([11]), 4)  # NAF of 11 needs position 4
+
+
+def test_csd_matches_paper_example_seven():
+    """Paper: decimal 7 = CSD 100-1 (one subtraction: 8 - 1)."""
+    d = quantize.csd_digits(np.array([7]), 4)[:, 0]
+    assert list(d) == [-1, 0, 0, 1]  # position 0 digit -1, position 3 digit +1
+    assert (d != 0).sum() == 2
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(2, 64), st.integers(2, 6))
+@settings(max_examples=100, deadline=None)
+def test_quantize_weights_range_and_scale(seed, k, bits):
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((k, 3)).astype(np.float32)
+    w_q, scale = quantize.quantize_weights(w, bits=bits, prune=False)
+    q = quantize.qmax(bits)
+    assert w_q.min() >= -q and w_q.max() <= q
+    assert scale.shape == (3,)
+    # max-magnitude weight per column must hit the rail (symmetric max scaling)
+    assert (np.abs(w_q).max(axis=0) == q).all()
+
+
+@given(st.integers(0, 2**32 - 1))
+@settings(max_examples=30, deadline=None)
+def test_prune_threshold(seed):
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((64, 8)).astype(np.float32) * 0.05
+    w_q, scale = quantize.quantize_weights(w, bits=4, prune=True)
+    dq = w_q.astype(np.float32) * scale[None, :]
+    nz = dq[w_q != 0]
+    assert (np.abs(nz) >= quantize.PRUNE_THRESHOLD).all()
+
+
+def test_pruned_fraction_band_for_gaussian_weights():
+    """Paper Section IV-C3 claims 15-25% of weights prune away for typical
+    quantized models; our synthetic gaussians land in a similar band."""
+    rng = np.random.default_rng(7)
+    w = (rng.standard_normal((768, 768)).astype(np.float32) / np.sqrt(768))
+    w_q, _ = quantize.quantize_weights(w, bits=4)
+    frac = quantize.pruned_fraction(w_q)
+    assert 0.03 < frac < 0.40
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(2, 32), st.integers(1, 16))
+@settings(max_examples=50, deadline=None)
+def test_planes_recompose_to_quantized_weights(seed, k, n):
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((k, n)).astype(np.float32)
+    w_q, _ = quantize.quantize_weights(w, bits=4)
+    planes = quantize.csd_planes(w_q, 4)
+    from compile.kernels.ref import recompose
+    np.testing.assert_array_equal(recompose(planes), w_q.astype(np.int32))

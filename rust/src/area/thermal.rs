@@ -1,0 +1,98 @@
+//! Thermal & mechanical model (paper Section VII-F): ITA's power density is
+//! so low (0.27–0.82 mW/mm²) that a passive heat sink holds junction
+//! temperature far below 85 °C.
+
+/// Package thermal model.
+#[derive(Debug, Clone, Copy)]
+pub struct ThermalModel {
+    /// Junction-to-ambient resistance, °C/W.
+    pub theta_ja_c_per_w: f64,
+    /// Ambient temperature, °C.
+    pub ambient_c: f64,
+}
+
+impl ThermalModel {
+    /// Flip-chip BGA + passive aluminum heat sink (paper's recommendation).
+    pub fn passive_bga() -> Self {
+        ThermalModel { theta_ja_c_per_w: 12.0, ambient_c: 45.0 }
+    }
+
+    /// Bare package, no heat sink (worst case for an M.2 stick).
+    pub fn bare_m2() -> Self {
+        ThermalModel { theta_ja_c_per_w: 30.0, ambient_c: 50.0 }
+    }
+
+    /// Junction temperature at a given dissipation.
+    pub fn junction_c(&self, power_w: f64) -> f64 {
+        self.ambient_c + power_w * self.theta_ja_c_per_w
+    }
+
+    /// Max dissipation keeping Tj below the limit.
+    pub fn power_budget_w(&self, tj_limit_c: f64) -> f64 {
+        (tj_limit_c - self.ambient_c) / self.theta_ja_c_per_w
+    }
+}
+
+/// GPU-class hotspot density for comparison (paper: 50–100 mW/mm²).
+pub const GPU_DENSITY_MW_PER_MM2: (f64, f64) = (50.0, 100.0);
+
+/// Thermal summary for a die.
+#[derive(Debug, Clone, Copy)]
+pub struct ThermalReport {
+    pub density_mw_per_mm2: f64,
+    pub tj_passive_c: f64,
+    pub tj_bare_c: f64,
+    pub needs_active_cooling: bool,
+}
+
+pub fn thermal_report(power_w: f64, area_mm2: f64) -> ThermalReport {
+    let tj_passive = ThermalModel::passive_bga().junction_c(power_w);
+    let tj_bare = ThermalModel::bare_m2().junction_c(power_w);
+    ThermalReport {
+        density_mw_per_mm2: super::power_density_mw_per_mm2(power_w, area_mm2),
+        tj_passive_c: tj_passive,
+        tj_bare_c: tj_bare,
+        needs_active_cooling: tj_passive > 85.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::area::{estimate, Routing};
+    use crate::config::{ModelConfig, TechParams};
+
+    #[test]
+    fn ita_7b_density_in_paper_band() {
+        let e = estimate(&ModelConfig::LLAMA2_7B, &TechParams::paper_28nm(), Routing::Optimistic);
+        let r = thermal_report(1.13, e.final_mm2);
+        // paper Section VII-F: 0.27–0.82 mW/mm²
+        assert!((0.2..1.0).contains(&r.density_mw_per_mm2), "{}", r.density_mw_per_mm2);
+        assert!(r.density_mw_per_mm2 < GPU_DENSITY_MW_PER_MM2.0 / 50.0);
+    }
+
+    #[test]
+    fn passive_cooling_suffices_even_at_3w() {
+        // paper: junction < 85 °C with a passive aluminum heat sink
+        let r = thermal_report(3.0, 520.0);
+        assert!(r.tj_passive_c < 85.0, "{}", r.tj_passive_c);
+        assert!(!r.needs_active_cooling);
+    }
+
+    #[test]
+    fn bare_m2_survives_device_power() {
+        // even the heatsink-less M.2 stick stays under 85 °C at 1 W device
+        let t = ThermalModel::bare_m2();
+        assert!(t.junction_c(1.0) < 85.0);
+        // a 200 W GPU obviously would not
+        assert!(t.junction_c(200.0) > 85.0);
+    }
+
+    #[test]
+    fn power_budget_roundtrip() {
+        let t = ThermalModel::passive_bga();
+        let budget = t.power_budget_w(85.0);
+        assert!((t.junction_c(budget) - 85.0).abs() < 1e-9);
+        assert!(budget > 3.0, "{budget}");
+    }
+}

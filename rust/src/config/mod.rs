@@ -1,0 +1,166 @@
+//! Model topologies and technology parameters.
+//!
+//! Mirrors `python/compile/configs.py` — the buildable configs must agree
+//! exactly with the artifact manifests; the analytic configs are the paper's
+//! evaluation targets (Tables II–V, Eq. 7–11).
+
+pub mod tech;
+
+pub use tech::TechParams;
+
+/// A transformer topology (the paper's Section V-C configuration shape).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: &'static str,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub d_ffn: usize,
+    pub n_heads: usize,
+    pub vocab: usize,
+    /// INT weight width burned into the die (paper: 4).
+    pub w_bits: u32,
+    /// INT activation width on the device interface (paper: 8).
+    pub a_bits: u32,
+}
+
+impl ModelConfig {
+    pub const fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Total parameter count; must match `configs.py::ModelConfig.params`.
+    pub fn params(&self) -> u64 {
+        let d = self.d_model as u64;
+        let f = self.d_ffn as u64;
+        let v = self.vocab as u64;
+        let per_layer = 3 * d * d + d * d + 3 * d * f + 2 * d;
+        self.n_layers as u64 * per_layer + d + v * d
+    }
+
+    /// MAC operations per generated token on the ITA device (all linear
+    /// projections; attention itself runs on the host).
+    pub fn device_macs_per_token(&self) -> u64 {
+        let d = self.d_model as u64;
+        let f = self.d_ffn as u64;
+        let v = self.vocab as u64;
+        self.n_layers as u64 * (3 * d * d + d * d + 3 * d * f) + d * v
+    }
+
+    pub const TINY: ModelConfig = ModelConfig {
+        name: "tiny",
+        d_model: 64,
+        n_layers: 2,
+        d_ffn: 192,
+        n_heads: 4,
+        vocab: 258,
+        w_bits: 4,
+        a_bits: 8,
+    };
+
+    pub const DEMO_100M: ModelConfig = ModelConfig {
+        name: "demo-100m",
+        d_model: 768,
+        n_layers: 14,
+        d_ffn: 2048,
+        n_heads: 12,
+        vocab: 258,
+        w_bits: 4,
+        a_bits: 8,
+    };
+
+    /// TinyLlama-1.1B (paper Table IV row 1).
+    pub const TINYLLAMA_1_1B: ModelConfig = ModelConfig {
+        name: "tinyllama-1.1b",
+        d_model: 2048,
+        n_layers: 22,
+        d_ffn: 5632,
+        n_heads: 32,
+        vocab: 32000,
+        w_bits: 4,
+        a_bits: 8,
+    };
+
+    /// Llama-2-7B (the paper's primary analysis topology, Section V-C).
+    pub const LLAMA2_7B: ModelConfig = ModelConfig {
+        name: "llama2-7b",
+        d_model: 4096,
+        n_layers: 32,
+        d_ffn: 11008,
+        n_heads: 32,
+        vocab: 32000,
+        w_bits: 4,
+        a_bits: 8,
+    };
+
+    /// Llama-2-13B (paper Table IV row 4).
+    pub const LLAMA2_13B: ModelConfig = ModelConfig {
+        name: "llama2-13b",
+        d_model: 5120,
+        n_layers: 40,
+        d_ffn: 13824,
+        n_heads: 40,
+        vocab: 32000,
+        w_bits: 4,
+        a_bits: 8,
+    };
+
+    pub fn by_name(name: &str) -> Option<&'static ModelConfig> {
+        ALL_CONFIGS.iter().find(|c| c.name == name)
+    }
+}
+
+pub const ALL_CONFIGS: &[ModelConfig] = &[
+    ModelConfig::TINY,
+    ModelConfig::DEMO_100M,
+    ModelConfig::TINYLLAMA_1_1B,
+    ModelConfig::LLAMA2_7B,
+    ModelConfig::LLAMA2_13B,
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_match_paper_scale() {
+        // The paper rounds: 1.1B, 7B, 13B. Effective Llama-2-7B linear-layer
+        // count (our accounting, incl. tied embedding) lands at ~6.6B.
+        let t = ModelConfig::TINYLLAMA_1_1B.params() as f64 / 1e9;
+        assert!((0.95..1.25).contains(&t), "{t}");
+        let s = ModelConfig::LLAMA2_7B.params() as f64 / 1e9;
+        assert!((6.2..7.2).contains(&s), "{s}");
+        let m = ModelConfig::LLAMA2_13B.params() as f64 / 1e9;
+        assert!((12.0..14.0).contains(&m), "{m}");
+    }
+
+    #[test]
+    fn demo_config_is_about_100m() {
+        let p = ModelConfig::DEMO_100M.params() as f64;
+        assert!((96e6..103e6).contains(&p), "{p}");
+    }
+
+    #[test]
+    fn head_dims_divide() {
+        for c in ALL_CONFIGS {
+            assert_eq!(c.d_model % c.n_heads, 0, "{}", c.name);
+        }
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(ModelConfig::by_name("llama2-7b").unwrap().d_model, 4096);
+        assert!(ModelConfig::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn device_macs_dominated_by_ffn() {
+        // Paper Section II-B: FFN layers account for >85% of compute FLOPs
+        // (their claim folds Wo + FFN; we check FFN alone is >60%).
+        let c = &ModelConfig::LLAMA2_7B;
+        let d = c.d_model as u64;
+        let f = c.d_ffn as u64;
+        let ffn = c.n_layers as u64 * 3 * d * f;
+        let frac = ffn as f64 / c.device_macs_per_token() as f64;
+        assert!(frac > 0.6, "{frac}");
+    }
+}

@@ -1,0 +1,120 @@
+//! Continuous-batching policy over compiled batch buckets.
+//!
+//! The device only accepts the bucket sizes its programs were compiled for;
+//! the batcher groups ready sequences into bucket-sized waves to minimize
+//! padding waste while bounding queueing delay.
+
+/// Bucket-fitting plan for `n` ready sequences.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BatchPlan {
+    /// Wave sizes (each ≤ the largest bucket; sum == n).
+    pub waves: Vec<usize>,
+    /// Padded rows summed over waves (bucket − wave size).
+    pub padding: usize,
+}
+
+/// Greedy planner: fill the largest bucket while enough sequences remain,
+/// then finish with the smallest bucket that fits the tail.
+pub fn plan(n: usize, buckets: &[usize]) -> BatchPlan {
+    assert!(!buckets.is_empty());
+    let mut sorted = buckets.to_vec();
+    sorted.sort_unstable();
+    let max = *sorted.last().unwrap();
+    let mut waves = Vec::new();
+    let mut padding = 0;
+    let mut left = n;
+    while left > 0 {
+        if left >= max {
+            waves.push(max);
+            left -= max;
+        } else {
+            let bucket = sorted.iter().copied().find(|&b| b >= left).unwrap_or(max);
+            padding += bucket - left;
+            waves.push(left);
+            left = 0;
+        }
+    }
+    BatchPlan { waves, padding }
+}
+
+/// Padding-efficiency telemetry.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BatchStats {
+    pub steps: u64,
+    pub rows: u64,
+    pub padded_rows: u64,
+}
+
+impl BatchStats {
+    pub fn record(&mut self, plan: &BatchPlan) {
+        self.steps += 1;
+        self.rows += plan.waves.iter().sum::<usize>() as u64;
+        self.padded_rows += plan.padding as u64;
+    }
+
+    /// Fraction of device rows wasted on padding.
+    pub fn waste(&self) -> f64 {
+        if self.rows + self.padded_rows == 0 {
+            return 0.0;
+        }
+        self.padded_rows as f64 / (self.rows + self.padded_rows) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickprop::forall;
+
+    #[test]
+    fn exact_bucket_no_padding() {
+        let p = plan(8, &[1, 2, 4, 8]);
+        assert_eq!(p.waves, vec![8]);
+        assert_eq!(p.padding, 0);
+    }
+
+    #[test]
+    fn oversized_splits_into_waves() {
+        let p = plan(11, &[1, 2, 4, 8]);
+        assert_eq!(p.waves, vec![8, 3]);
+        assert_eq!(p.padding, 1); // 3 → bucket 4
+    }
+
+    #[test]
+    fn small_tail_picks_smallest_fit() {
+        let p = plan(3, &[1, 2, 4, 8]);
+        assert_eq!(p.waves, vec![3]);
+        assert_eq!(p.padding, 1);
+    }
+
+    #[test]
+    fn prop_all_sequences_scheduled_padding_bounded() {
+        forall("batch plan covers n with bounded padding", 300, |g| {
+            let n = g.usize_in(1, 100);
+            let buckets = [1usize, 2, 4, 8];
+            let p = plan(n, &buckets);
+            assert_eq!(p.waves.iter().sum::<usize>(), n);
+            // every wave fits a bucket
+            for &w in &p.waves {
+                assert!(buckets.iter().any(|&b| b >= w));
+            }
+            // padding is bounded by one bucket's worth
+            assert!(p.padding < 8, "{p:?}");
+        });
+    }
+
+    #[test]
+    fn stats_accumulate_waste() {
+        let mut s = BatchStats::default();
+        s.record(&plan(3, &[4]));
+        assert_eq!(s.padded_rows, 1);
+        assert!((s.waste() - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_bucket_of_one() {
+        let p = plan(5, &[1]);
+        assert_eq!(p.waves, vec![1; 5]);
+        assert_eq!(p.padding, 0);
+    }
+}

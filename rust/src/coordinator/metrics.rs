@@ -1,0 +1,125 @@
+//! Serving metrics: latency histograms, throughput, traffic.
+
+/// Fixed-capacity latency recorder with percentile queries.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyRecorder {
+    samples_s: Vec<f64>,
+}
+
+impl LatencyRecorder {
+    pub fn record(&mut self, seconds: f64) {
+        self.samples_s.push(seconds);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_s.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples_s.is_empty() {
+            return 0.0;
+        }
+        self.samples_s.iter().sum::<f64>() / self.samples_s.len() as f64
+    }
+
+    /// Percentile in [0, 100].
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples_s.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples_s.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+        s[idx]
+    }
+}
+
+/// Aggregate serving metrics, printed by the server and the e2e bench.
+#[derive(Debug, Clone, Default)]
+pub struct ServingMetrics {
+    pub requests_completed: u64,
+    pub tokens_generated: u64,
+    pub tokens_prefilled: u64,
+    pub wall_s: f64,
+    pub ttft: LatencyRecorder,
+    pub itl: LatencyRecorder,
+    pub batch_waste: f64,
+    pub interface_bytes: u64,
+    pub device_macs: u64,
+}
+
+impl ServingMetrics {
+    pub fn decode_tok_per_s(&self) -> f64 {
+        if self.wall_s == 0.0 {
+            return 0.0;
+        }
+        self.tokens_generated as f64 / self.wall_s
+    }
+
+    /// Modeled device energy for the run (paper Table II ITA pJ/MAC).
+    pub fn modeled_device_energy_j(&self, pj_per_mac: f64) -> f64 {
+        self.device_macs as f64 * pj_per_mac * 1e-12
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} prefill_tokens={} decode_tokens={} wall={:.2}s \
+             decode_throughput={:.1} tok/s ttft_p50={:.1}ms ttft_p95={:.1}ms \
+             itl_p50={:.2}ms itl_p95={:.2}ms batch_waste={:.1}% \
+             interface={:.2} MB device_macs={:.2}G",
+            self.requests_completed,
+            self.tokens_prefilled,
+            self.tokens_generated,
+            self.wall_s,
+            self.decode_tok_per_s(),
+            self.ttft.percentile(50.0) * 1e3,
+            self.ttft.percentile(95.0) * 1e3,
+            self.itl.percentile(50.0) * 1e3,
+            self.itl.percentile(95.0) * 1e3,
+            self.batch_waste * 100.0,
+            self.interface_bytes as f64 / 1e6,
+            self.device_macs as f64 / 1e9,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut r = LatencyRecorder::default();
+        for i in 1..=100 {
+            r.record(i as f64);
+        }
+        assert!(r.percentile(50.0) <= r.percentile(95.0));
+        assert!((r.percentile(50.0) - 50.0).abs() <= 1.0);
+        assert!((r.percentile(95.0) - 95.0).abs() <= 1.0);
+        assert!((r.mean() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_recorder_is_zero() {
+        let r = LatencyRecorder::default();
+        assert_eq!(r.percentile(99.0), 0.0);
+        assert_eq!(r.mean(), 0.0);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let m = ServingMetrics {
+            tokens_generated: 100,
+            wall_s: 4.0,
+            ..Default::default()
+        };
+        assert!((m.decode_tok_per_s() - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn energy_model_hookup() {
+        let m = ServingMetrics { device_macs: 1_000_000_000_000, ..Default::default() };
+        // 1e12 MACs × 4.05 pJ = 4.05 J
+        assert!((m.modeled_device_energy_j(4.05) - 4.05).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,24 @@
+//! L3 coordinator: the serving stack around the Split-Brain engine.
+//!
+//! * [`engine`] — the per-layer host↔device generation loop (Fig. 1 / the
+//!   Section IV-D pipeline): embedding → {QKV on device → RoPE + KV append
+//!   + attention on host → FFN on device} × L → logits on device → sample.
+//! * [`request`] — generation request/result types.
+//! * [`batcher`] — continuous-batching policy over the compiled batch
+//!   buckets, with padding-waste telemetry.
+//! * [`scheduler`] — FCFS admission + continuous batching + completion.
+//! * [`server`] — thread-hosted server: submit requests from any thread;
+//!   the engine (and its non-Send PJRT device) lives on the worker.
+//! * [`metrics`] — latency/throughput/traffic accounting.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod request;
+pub mod scheduler;
+pub mod server;
+pub mod workload;
+
+pub use engine::Engine;
+pub use request::{GenRequest, GenResult};
+pub use server::Server;

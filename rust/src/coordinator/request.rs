@@ -1,0 +1,63 @@
+//! Generation request/result types.
+
+use crate::host::sampling::SamplingParams;
+
+/// A generation request submitted to the server.
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub id: u64,
+    pub prompt: String,
+    pub max_new_tokens: usize,
+    pub sampling: SamplingParams,
+    /// Stop at EOS (token 257)?
+    pub stop_at_eos: bool,
+}
+
+impl GenRequest {
+    pub fn greedy(id: u64, prompt: &str, max_new_tokens: usize) -> GenRequest {
+        GenRequest {
+            id,
+            prompt: prompt.to_string(),
+            max_new_tokens,
+            sampling: SamplingParams::greedy(),
+            stop_at_eos: true,
+        }
+    }
+}
+
+/// Completion of one request, with per-request timing.
+#[derive(Debug, Clone)]
+pub struct GenResult {
+    pub id: u64,
+    pub prompt_tokens: usize,
+    pub tokens: Vec<u32>,
+    pub text: String,
+    /// Queue-entry → first generated token.
+    pub ttft_s: f64,
+    /// Mean inter-token latency over the decode phase.
+    pub itl_s: f64,
+    /// Total wall time in the server.
+    pub total_s: f64,
+    pub finish: FinishReason,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    MaxTokens,
+    Eos,
+    Error,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_request_defaults() {
+        let r = GenRequest::greedy(7, "hi", 16);
+        assert_eq!(r.id, 7);
+        assert_eq!(r.max_new_tokens, 16);
+        assert!(r.stop_at_eos);
+        assert_eq!(r.sampling.temperature, 0.0);
+    }
+}

@@ -1,0 +1,351 @@
+//! Continuous-batching scheduler: FCFS admission, bucket-wave decode,
+//! in-flight completion — the coordination pattern of vLLM-class servers,
+//! driven synchronously so it is unit-testable without threads.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::batcher::{plan, BatchStats};
+use super::engine::Engine;
+use super::metrics::ServingMetrics;
+use super::request::{FinishReason, GenRequest, GenResult};
+use crate::host::kv_cache::SeqId;
+use crate::host::sampling::sample;
+use crate::host::tokenizer::{ByteTokenizer, EOS};
+use crate::util::prng::Prng;
+
+/// Scheduler options.
+#[derive(Debug, Clone, Copy)]
+pub struct SchedulerOpts {
+    /// Max concurrently decoding sequences (0 → device max bucket).
+    pub max_active: usize,
+    /// Sampling seed (deterministic serving).
+    pub seed: u64,
+}
+
+impl Default for SchedulerOpts {
+    fn default() -> Self {
+        SchedulerOpts { max_active: 0, seed: 0x17A }
+    }
+}
+
+struct Active {
+    req: GenRequest,
+    seq: SeqId,
+    prompt_tokens: usize,
+    generated: Vec<u32>,
+    /// last sampled token (input for the next decode step)
+    next_token: u32,
+    enqueued: Instant,
+    first_token_at: Option<Instant>,
+}
+
+impl Active {
+    fn finished(&self) -> bool {
+        (self.req.stop_at_eos && self.generated.last() == Some(&EOS))
+            || self.generated.len() >= self.req.max_new_tokens
+    }
+}
+
+/// Synchronous continuous-batching scheduler over one engine.
+pub struct Scheduler {
+    engine: Engine,
+    tokenizer: ByteTokenizer,
+    queue: VecDeque<(GenRequest, Instant)>,
+    active: Vec<Active>,
+    rng: Prng,
+    opts: SchedulerOpts,
+    batch_stats: BatchStats,
+    metrics: ServingMetrics,
+    started: Instant,
+}
+
+impl Scheduler {
+    pub fn new(engine: Engine, opts: SchedulerOpts) -> Scheduler {
+        let max = if opts.max_active == 0 { engine.max_batch() } else { opts.max_active };
+        Scheduler {
+            engine,
+            tokenizer: ByteTokenizer::new(),
+            queue: VecDeque::new(),
+            active: Vec::with_capacity(max),
+            rng: Prng::new(opts.seed),
+            opts: SchedulerOpts { max_active: max, ..opts },
+            batch_stats: BatchStats::default(),
+            metrics: ServingMetrics::default(),
+            started: Instant::now(),
+        }
+    }
+
+    pub fn submit(&mut self, req: GenRequest) {
+        self.queue.push_back((req, Instant::now()));
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len() + self.active.len()
+    }
+
+    /// One scheduling iteration: admit + prefill new requests, run one
+    /// decode step for all active sequences, harvest completions.
+    pub fn step(&mut self) -> Result<Vec<GenResult>> {
+        let mut done = self.admit()?;
+        if self.active.is_empty() {
+            return Ok(done);
+        }
+
+        // decode one token for every active sequence, in bucket waves
+        let buckets = self.engine.bucket_sizes();
+        let p = plan(self.active.len(), &buckets);
+        self.batch_stats.record(&p);
+        let mut offset = 0;
+        let mut sampled: Vec<u32> = Vec::with_capacity(self.active.len());
+        for &wave in &p.waves {
+            let ids: Vec<SeqId> =
+                self.active[offset..offset + wave].iter().map(|a| a.seq).collect();
+            let tokens: Vec<u32> =
+                self.active[offset..offset + wave].iter().map(|a| a.next_token).collect();
+            let logits = self.engine.forward(&ids, &tokens)?;
+            for r in 0..wave {
+                let row = &logits.data[r * logits.cols..(r + 1) * logits.cols];
+                let a = &self.active[offset + r];
+                sampled.push(sample(row, &a.req.sampling, &mut self.rng));
+            }
+            offset += wave;
+        }
+        self.metrics.tokens_generated += sampled.len() as u64;
+
+        // apply sampled tokens; harvest completed requests
+        let now = Instant::now();
+        let mut i = 0;
+        while i < self.active.len() {
+            let a = &mut self.active[i];
+            let tok = sampled[i];
+            if a.first_token_at.is_none() {
+                a.first_token_at = Some(now);
+                self.metrics.ttft.record(now.duration_since(a.enqueued).as_secs_f64());
+            }
+            a.generated.push(tok);
+            if a.finished() {
+                let a = self.active.swap_remove(i);
+                sampled.swap_remove(i);
+                done.push(self.finish(a, now));
+            } else {
+                a.next_token = tok;
+                i += 1;
+            }
+        }
+        Ok(done)
+    }
+
+    /// Drive until every submitted request completes.
+    pub fn run_to_completion(&mut self) -> Result<Vec<GenResult>> {
+        let mut out = Vec::new();
+        while self.pending() > 0 {
+            out.extend(self.step()?);
+        }
+        Ok(out)
+    }
+
+    /// Admit queued requests up to capacity, batch-prefill them, and return
+    /// any that finish on their very first token.
+    fn admit(&mut self) -> Result<Vec<GenResult>> {
+        let mut new_ids = Vec::new();
+        let mut new_prompts: Vec<Vec<u32>> = Vec::new();
+        while self.active.len() + new_ids.len() < self.opts.max_active {
+            let Some((req, enqueued)) = self.queue.pop_front() else { break };
+            let prompt = self.tokenizer.encode(&req.prompt);
+            let seq = self.engine.new_sequence();
+            self.metrics.tokens_prefilled += prompt.len() as u64;
+            self.active.push(Active {
+                prompt_tokens: prompt.len(),
+                req,
+                seq,
+                generated: Vec::new(),
+                next_token: 0, // set after prefill
+                enqueued,
+                first_token_at: None,
+            });
+            new_ids.push(seq);
+            new_prompts.push(prompt);
+        }
+        if new_ids.is_empty() {
+            return Ok(Vec::new());
+        }
+        // batched prefill across the newly admitted requests
+        let prompts: Vec<&[u32]> = new_prompts.iter().map(|p| p.as_slice()).collect();
+        let lasts = self.engine.prefill_batch(&new_ids, &prompts)?;
+        let now = Instant::now();
+        for (seq, last) in new_ids.iter().zip(lasts) {
+            let a = self.active.iter_mut().find(|a| a.seq == *seq).unwrap();
+            let tok = sample(&last, &a.req.sampling, &mut self.rng);
+            a.next_token = tok;
+            a.generated.push(tok);
+            a.first_token_at = Some(now);
+            self.metrics.ttft.record(now.duration_since(a.enqueued).as_secs_f64());
+            self.metrics.tokens_generated += 1;
+        }
+        // harvest requests that finished on their first token
+        let mut done = Vec::new();
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].first_token_at.is_some() && self.active[i].finished() {
+                let a = self.active.swap_remove(i);
+                done.push(self.finish(a, now));
+            } else {
+                i += 1;
+            }
+        }
+        Ok(done)
+    }
+
+    fn finish(&mut self, a: Active, now: Instant) -> GenResult {
+        self.engine.free_sequence(a.seq);
+        self.metrics.requests_completed += 1;
+        let total = now.duration_since(a.enqueued).as_secs_f64();
+        let decode_time = a
+            .first_token_at
+            .map(|t| now.duration_since(t).as_secs_f64())
+            .unwrap_or(0.0);
+        let itl = if a.generated.len() > 1 {
+            decode_time / (a.generated.len() - 1) as f64
+        } else {
+            0.0
+        };
+        self.metrics.itl.record(itl);
+        let finish = if a.req.stop_at_eos && a.generated.last() == Some(&EOS) {
+            FinishReason::Eos
+        } else {
+            FinishReason::MaxTokens
+        };
+        GenResult {
+            id: a.req.id,
+            prompt_tokens: a.prompt_tokens,
+            text: self.tokenizer.decode(&a.generated),
+            tokens: a.generated,
+            ttft_s: a
+                .first_token_at
+                .map(|t| t.duration_since(a.enqueued).as_secs_f64())
+                .unwrap_or(0.0),
+            itl_s: itl,
+            total_s: total,
+            finish,
+        }
+    }
+
+    /// Metrics snapshot (wall clock up to now).
+    pub fn metrics(&self) -> ServingMetrics {
+        let mut m = self.metrics.clone();
+        m.wall_s = self.started.elapsed().as_secs_f64();
+        m.batch_waste = self.batch_stats.waste();
+        m.interface_bytes = self.engine.traffic().total();
+        m.device_macs = self.engine.device_stats().macs;
+        m
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::sim::SimDevice;
+    use crate::host::embedding::EmbeddingTable;
+
+    fn scheduler(seed: u64) -> Option<Scheduler> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+        if !dir.join("MANIFEST.txt").exists() {
+            eprintln!("skipping: artifacts/tiny not built");
+            return None;
+        }
+        let (m, s) = crate::runtime::weights::load_artifacts(&dir).unwrap();
+        let dev = SimDevice::load(&m, &s).unwrap();
+        let emb = EmbeddingTable::new(dev.weights().emb.clone());
+        let n_heads = m.n_heads;
+        let engine = Engine::new(Box::new(dev), emb, n_heads);
+        Some(Scheduler::new(engine, SchedulerOpts { max_active: 0, seed }))
+    }
+
+    #[test]
+    fn completes_all_requests() {
+        let Some(mut s) = scheduler(1) else { return };
+        for i in 0..7 {
+            s.submit(GenRequest::greedy(i, "ab", 5));
+        }
+        let results = s.run_to_completion().unwrap();
+        assert_eq!(results.len(), 7);
+        for r in &results {
+            assert!(r.tokens.len() <= 5);
+            assert!(!r.tokens.is_empty());
+        }
+        let m = s.metrics();
+        assert_eq!(m.requests_completed, 7);
+        assert!(m.tokens_generated >= 7);
+        // all KV pages returned
+        let (_, free, live) = s.engine().cache.stats();
+        assert_eq!(live, 0);
+        assert!(free > 0);
+    }
+
+    #[test]
+    fn greedy_output_independent_of_concurrency() {
+        // the same request must produce the same tokens whether it is
+        // served alone or alongside others (row-independence + greedy)
+        let Some(mut solo) = scheduler(2) else { return };
+        solo.submit(GenRequest::greedy(0, "hello", 8));
+        let alone = &solo.run_to_completion().unwrap()[0].tokens.clone();
+
+        let Some(mut busy) = scheduler(3) else { return };
+        for i in 0..4 {
+            busy.submit(GenRequest::greedy(i, if i == 0 { "hello" } else { "xyz" }, 8));
+        }
+        let results = busy.run_to_completion().unwrap();
+        let same = results.iter().find(|r| r.id == 0).unwrap();
+        assert_eq!(&same.tokens, alone);
+    }
+
+    #[test]
+    fn deterministic_across_runs_with_same_seed() {
+        let run = |seed| -> Option<Vec<Vec<u32>>> {
+            let mut s = scheduler(seed)?;
+            for i in 0..3 {
+                s.submit(GenRequest {
+                    id: i,
+                    prompt: "sample".into(),
+                    max_new_tokens: 6,
+                    sampling: crate::host::sampling::SamplingParams::top_k(5, 0.8),
+                    stop_at_eos: false,
+                });
+            }
+            let mut r = s.run_to_completion().unwrap();
+            r.sort_by_key(|x| x.id);
+            Some(r.into_iter().map(|x| x.tokens).collect())
+        };
+        let Some(a) = run(9) else { return };
+        let b = run(9).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn respects_max_new_tokens() {
+        let Some(mut s) = scheduler(4) else { return };
+        s.submit(GenRequest::greedy(0, "q", 1));
+        let r = s.run_to_completion().unwrap();
+        assert_eq!(r[0].tokens.len(), 1);
+        assert_eq!(r[0].finish, FinishReason::MaxTokens);
+    }
+
+    #[test]
+    fn metrics_have_latencies() {
+        let Some(mut s) = scheduler(5) else { return };
+        s.submit(GenRequest::greedy(0, "metrics", 4));
+        s.run_to_completion().unwrap();
+        let m = s.metrics();
+        assert!(m.ttft.count() >= 1);
+        assert!(m.wall_s > 0.0);
+        assert!(m.interface_bytes > 0);
+        assert!(m.device_macs > 0);
+    }
+}

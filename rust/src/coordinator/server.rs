@@ -1,0 +1,230 @@
+//! Thread-hosted serving front end.
+//!
+//! The PJRT device is not `Send`, so the engine lives entirely on a worker
+//! thread; requests and results cross via channels. This mirrors the
+//! physical deployment: one ITA cartridge in one slot, one host thread
+//! feeding it, any number of client threads submitting work.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use super::metrics::ServingMetrics;
+use super::request::{GenRequest, GenResult};
+use super::scheduler::{Scheduler, SchedulerOpts};
+use crate::coordinator::engine::Engine;
+
+enum Msg {
+    Submit(GenRequest, Sender<GenResult>),
+    Snapshot(Sender<ServingMetrics>),
+    Shutdown(Sender<ServingMetrics>),
+}
+
+/// Handle to a running server.
+pub struct Server {
+    tx: Sender<Msg>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// A pending result.
+pub struct ResultHandle {
+    rx: Receiver<GenResult>,
+}
+
+impl ResultHandle {
+    pub fn wait(self) -> Result<GenResult> {
+        self.rx.recv().map_err(|_| anyhow!("server dropped the request"))
+    }
+
+    pub fn try_get(&self) -> Option<GenResult> {
+        self.rx.try_recv().ok()
+    }
+}
+
+impl Server {
+    /// Start a server. `make_engine` is called on the worker thread (the
+    /// non-Send device is created there).
+    pub fn start<F>(make_engine: F, opts: SchedulerOpts) -> Result<Server>
+    where
+        F: FnOnce() -> Result<Engine> + Send + 'static,
+    {
+        let (tx, rx) = channel::<Msg>();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let handle = std::thread::Builder::new()
+            .name("ita-server".into())
+            .spawn(move || worker(make_engine, opts, rx, ready_tx))
+            .expect("spawn server thread");
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("server thread died during startup"))??;
+        Ok(Server { tx, handle: Some(handle) })
+    }
+
+    /// Submit a request; returns a handle to await the result.
+    pub fn submit(&self, req: GenRequest) -> ResultHandle {
+        let (tx, rx) = channel();
+        let _ = self.tx.send(Msg::Submit(req, tx));
+        ResultHandle { rx }
+    }
+
+    /// Live metrics snapshot.
+    pub fn metrics(&self) -> Result<ServingMetrics> {
+        let (tx, rx) = channel();
+        self.tx.send(Msg::Snapshot(tx)).map_err(|_| anyhow!("server gone"))?;
+        rx.recv().map_err(|_| anyhow!("server gone"))
+    }
+
+    /// Drain in-flight work and stop; returns final metrics.
+    pub fn shutdown(mut self) -> Result<ServingMetrics> {
+        let (tx, rx) = channel();
+        self.tx.send(Msg::Shutdown(tx)).map_err(|_| anyhow!("server gone"))?;
+        let m = rx.recv().map_err(|_| anyhow!("server gone"))?;
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        Ok(m)
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        if let Some(h) = self.handle.take() {
+            let (tx, _rx) = channel();
+            let _ = self.tx.send(Msg::Shutdown(tx));
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker<F>(
+    make_engine: F,
+    opts: SchedulerOpts,
+    rx: Receiver<Msg>,
+    ready_tx: Sender<Result<()>>,
+) where
+    F: FnOnce() -> Result<Engine>,
+{
+    let engine = match make_engine() {
+        Ok(e) => {
+            let _ = ready_tx.send(Ok(()));
+            e
+        }
+        Err(e) => {
+            let _ = ready_tx.send(Err(e));
+            return;
+        }
+    };
+    let mut sched = Scheduler::new(engine, opts);
+    let mut waiters: Vec<(u64, Sender<GenResult>)> = Vec::new();
+    let mut shutting_down: Option<Sender<ServingMetrics>> = None;
+
+    loop {
+        // ingest control messages; block only when idle
+        loop {
+            let msg = if sched.pending() == 0 && shutting_down.is_none() {
+                match rx.recv_timeout(Duration::from_millis(50)) {
+                    Ok(m) => Some(m),
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => None,
+                    Err(_) => return,
+                }
+            } else {
+                match rx.try_recv() {
+                    Ok(m) => Some(m),
+                    Err(_) => None,
+                }
+            };
+            match msg {
+                Some(Msg::Submit(req, tx)) => {
+                    waiters.push((req.id, tx));
+                    sched.submit(req);
+                }
+                Some(Msg::Snapshot(tx)) => {
+                    let _ = tx.send(sched.metrics());
+                }
+                Some(Msg::Shutdown(tx)) => {
+                    shutting_down = Some(tx);
+                }
+                None => break,
+            }
+        }
+
+        if sched.pending() > 0 {
+            match sched.step() {
+                Ok(done) => {
+                    for result in done {
+                        if let Some(pos) = waiters.iter().position(|(id, _)| *id == result.id) {
+                            let (_, tx) = waiters.swap_remove(pos);
+                            let _ = tx.send(result);
+                        }
+                    }
+                }
+                Err(e) => {
+                    eprintln!("[ita-server] engine error: {e:#}");
+                    return;
+                }
+            }
+        } else if let Some(tx) = shutting_down.take() {
+            let _ = tx.send(sched.metrics());
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::sim::SimDevice;
+    use crate::host::embedding::EmbeddingTable;
+
+    fn start() -> Option<Server> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+        if !dir.join("MANIFEST.txt").exists() {
+            eprintln!("skipping: artifacts/tiny not built");
+            return None;
+        }
+        let server = Server::start(
+            move || {
+                let (m, s) = crate::runtime::weights::load_artifacts(&dir)?;
+                let dev = SimDevice::load(&m, &s)?;
+                let emb = EmbeddingTable::new(dev.weights().emb.clone());
+                let n_heads = m.n_heads;
+                Ok(Engine::new(Box::new(dev), emb, n_heads))
+            },
+            SchedulerOpts::default(),
+        )
+        .unwrap();
+        Some(server)
+    }
+
+    #[test]
+    fn serves_concurrent_clients() {
+        let Some(server) = start() else { return };
+        let handles: Vec<_> = (0..5)
+            .map(|i| server.submit(GenRequest::greedy(i, "srv", 4)))
+            .collect();
+        for h in handles {
+            let r = h.wait().unwrap();
+            assert!(!r.tokens.is_empty());
+        }
+        let m = server.shutdown().unwrap();
+        assert_eq!(m.requests_completed, 5);
+    }
+
+    #[test]
+    fn metrics_snapshot_while_running() {
+        let Some(server) = start() else { return };
+        let h = server.submit(GenRequest::greedy(0, "m", 3));
+        let _ = server.metrics().unwrap();
+        h.wait().unwrap();
+        let m = server.shutdown().unwrap();
+        assert_eq!(m.requests_completed, 1);
+    }
+
+    #[test]
+    fn startup_failure_propagates() {
+        let r = Server::start(|| Err(anyhow::anyhow!("boom")), SchedulerOpts::default());
+        assert!(r.is_err());
+    }
+}

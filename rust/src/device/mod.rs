@@ -1,0 +1,72 @@
+//! The ITA **device** (paper Section IV-B2): a stateless operator holding
+//! every model weight, executing the linear projections. Two backends:
+//!
+//! * [`pjrt::PjrtDevice`] — the real artifact path: AOT-lowered HLO
+//!   programs (containing the L1 Pallas kernels) executed via PJRT.
+//! * [`sim::SimDevice`] — an independent pure-rust implementation of the
+//!   identical arithmetic, used for differential testing and for running
+//!   without artifacts.
+//!
+//! Both are *stateless between calls* exactly like the paper's ASIC: the
+//! host owns every byte of dynamic state.
+
+pub mod sim;
+pub mod pjrt;
+
+use anyhow::Result;
+
+use crate::model::Mat;
+
+/// Device geometry, mirrored from the artifact manifest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DeviceDims {
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub d_ffn: usize,
+    pub vocab: usize,
+}
+
+/// Per-call device telemetry (interface accounting + modeled energy).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DeviceStats {
+    pub calls: u64,
+    /// MACs executed (for the energy model).
+    pub macs: u64,
+    /// Rows of padding waste introduced by bucket rounding.
+    pub padded_rows: u64,
+}
+
+/// The stateless ITA device interface. `h` is the hidden-state activation
+/// matrix [B, d_model]; every method is a pure function of its inputs plus
+/// the immutable weights.
+///
+/// Not `Send`: the PJRT client wraps raw pointers, so the server constructs
+/// the device *inside* its worker thread (requests/results cross threads,
+/// the device never does — matching the physical ASIC, which is bolted to
+/// one PCIe slot).
+pub trait ItaDevice {
+    fn dims(&self) -> DeviceDims;
+
+    /// Batch sizes the device accepts natively (compiled buckets). The
+    /// engine may submit any batch ≤ max; the device pads internally.
+    fn buckets(&self) -> &[usize];
+
+    /// Pre-attention block: h → (q, k, v), each [B, d_model].
+    fn qkv(&mut self, layer: usize, h: &Mat) -> Result<(Mat, Mat, Mat)>;
+
+    /// Post-attention block: (h, attn_out) → h_next [B, d_model].
+    fn ffn(&mut self, layer: usize, h: &Mat, attn: &Mat) -> Result<Mat>;
+
+    /// Final norm + LM head: h → logits [B, vocab].
+    fn logits(&mut self, h: &Mat) -> Result<Mat>;
+
+    fn stats(&self) -> DeviceStats;
+}
+
+/// MACs for one full decode step at batch b (device-side linear algebra).
+pub fn macs_per_step(dims: &DeviceDims, b: usize) -> u64 {
+    let d = dims.d_model as u64;
+    let f = dims.d_ffn as u64;
+    let v = dims.vocab as u64;
+    (dims.n_layers as u64 * (3 * d * d + d * d + 3 * d * f) + d * v) * b as u64
+}

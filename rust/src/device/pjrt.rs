@@ -1,0 +1,158 @@
+//! Artifact-backed ITA device: executes the AOT-lowered HLO programs
+//! (containing the L1 Pallas kernels) on the PJRT CPU client.
+//!
+//! Batch handling: programs are compiled for fixed batch buckets; calls are
+//! padded up to the smallest bucket ≥ B and outputs truncated — the
+//! "padding bucket" policy whose waste the coordinator's batcher minimizes.
+
+use anyhow::{ensure, Result};
+
+use super::{DeviceDims, DeviceStats, ItaDevice};
+use crate::model::Mat;
+use crate::runtime::{Block, Manifest, PjrtRuntime, WeightStore};
+
+/// PJRT-backed device.
+pub struct PjrtDevice {
+    rt: PjrtRuntime,
+    dims: DeviceDims,
+    buckets: Vec<usize>,
+    variant: String,
+    stats: DeviceStats,
+    /// scratch for padded inputs (avoids per-call allocation)
+    pad_a: Vec<f32>,
+    pad_b: Vec<f32>,
+}
+
+impl PjrtDevice {
+    /// Compile all programs of `variant` and upload weights.
+    pub fn load(manifest: Manifest, store: &WeightStore, variant: &str) -> Result<PjrtDevice> {
+        ensure!(
+            manifest.variants.iter().any(|v| v == variant),
+            "variant {variant} not in artifacts (have: {:?})",
+            manifest.variants
+        );
+        let dims = DeviceDims {
+            d_model: manifest.d_model,
+            n_layers: manifest.n_layers,
+            d_ffn: manifest.d_ffn,
+            vocab: manifest.vocab,
+        };
+        let buckets = manifest.buckets.clone();
+        let rt = PjrtRuntime::load(manifest, store)?;
+        Ok(PjrtDevice {
+            rt,
+            dims,
+            buckets,
+            variant: variant.to_string(),
+            stats: DeviceStats::default(),
+            pad_a: Vec::new(),
+            pad_b: Vec::new(),
+        })
+    }
+
+    pub fn runtime(&self) -> &PjrtRuntime {
+        &self.rt
+    }
+
+    fn bucket_for(&self, rows: usize) -> Result<usize> {
+        self.buckets
+            .iter()
+            .copied()
+            .filter(|&b| b >= rows)
+            .min()
+            .ok_or_else(|| {
+                anyhow::anyhow!("batch {rows} exceeds largest bucket {:?}", self.buckets)
+            })
+    }
+
+    /// Pad `m` (rows×cols) into scratch to `bucket` rows; returns the slice.
+    fn pad<'a>(scratch: &'a mut Vec<f32>, m: &Mat, bucket: usize) -> &'a [f32] {
+        scratch.clear();
+        scratch.resize(bucket * m.cols, 0.0);
+        scratch[..m.rows * m.cols].copy_from_slice(&m.data);
+        &scratch[..]
+    }
+
+    fn truncate(out: Vec<f32>, rows: usize, cols: usize) -> Mat {
+        let mut data = out;
+        data.truncate(rows * cols);
+        Mat::new(rows, cols, data)
+    }
+}
+
+impl ItaDevice for PjrtDevice {
+    fn dims(&self) -> DeviceDims {
+        self.dims
+    }
+
+    fn buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    fn qkv(&mut self, layer: usize, h: &Mat) -> Result<(Mat, Mat, Mat)> {
+        ensure!(h.cols == self.dims.d_model);
+        let bucket = self.bucket_for(h.rows)?;
+        let padded = Self::pad(&mut self.pad_a, h, bucket);
+        let outs = self.rt.execute(
+            layer as i32,
+            Block::Qkv,
+            &self.variant,
+            bucket,
+            &[(padded, &[bucket, self.dims.d_model])],
+        )?;
+        ensure!(outs.len() == 3);
+        self.stats.calls += 1;
+        self.stats.macs += (h.rows * self.dims.d_model * 3 * self.dims.d_model) as u64;
+        self.stats.padded_rows += (bucket - h.rows) as u64;
+        let d = self.dims.d_model;
+        let mut it = outs.into_iter();
+        Ok((
+            Self::truncate(it.next().unwrap(), h.rows, d),
+            Self::truncate(it.next().unwrap(), h.rows, d),
+            Self::truncate(it.next().unwrap(), h.rows, d),
+        ))
+    }
+
+    fn ffn(&mut self, layer: usize, h: &Mat, attn: &Mat) -> Result<Mat> {
+        ensure!(h.rows == attn.rows && h.cols == attn.cols);
+        let bucket = self.bucket_for(h.rows)?;
+        let d = self.dims.d_model;
+        // two scratch pads: h and attn
+        let padded_h = Self::pad(&mut self.pad_a, h, bucket).to_owned();
+        let padded_a = Self::pad(&mut self.pad_b, attn, bucket);
+        let outs = self.rt.execute(
+            layer as i32,
+            Block::Ffn,
+            &self.variant,
+            bucket,
+            &[(&padded_h, &[bucket, d]), (padded_a, &[bucket, d])],
+        )?;
+        ensure!(outs.len() == 1);
+        self.stats.calls += 1;
+        self.stats.macs +=
+            (h.rows * (d * d + 3 * d * self.dims.d_ffn)) as u64;
+        self.stats.padded_rows += (bucket - h.rows) as u64;
+        Ok(Self::truncate(outs.into_iter().next().unwrap(), h.rows, d))
+    }
+
+    fn logits(&mut self, h: &Mat) -> Result<Mat> {
+        let bucket = self.bucket_for(h.rows)?;
+        let padded = Self::pad(&mut self.pad_a, h, bucket);
+        let outs = self.rt.execute(
+            -1,
+            Block::Logits,
+            &self.variant,
+            bucket,
+            &[(padded, &[bucket, self.dims.d_model])],
+        )?;
+        ensure!(outs.len() == 1);
+        self.stats.calls += 1;
+        self.stats.macs += (h.rows * self.dims.d_model * self.dims.vocab) as u64;
+        self.stats.padded_rows += (bucket - h.rows) as u64;
+        Ok(Self::truncate(outs.into_iter().next().unwrap(), h.rows, self.dims.vocab))
+    }
+
+    fn stats(&self) -> DeviceStats {
+        self.stats
+    }
+}

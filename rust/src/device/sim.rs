@@ -1,0 +1,227 @@
+//! Pure-rust reference device: mirrors `python/compile/model.py` operation
+//! for operation (rmsnorm → per-row INT8 quantization → integer-valued
+//! matmul → dequantize; SwiGLU FFN; tied LM head).
+//!
+//! Independent from both JAX *and* the PJRT runtime, so engine-level
+//! differential tests (`rust/tests/differential.rs`) compare two disjoint
+//! implementations end to end.
+
+use anyhow::{ensure, Result};
+
+use super::{DeviceDims, DeviceStats, ItaDevice};
+use crate::model::{Mat, ModelWeights, QLinear};
+use crate::quant::quant_act_row;
+use crate::runtime::{Manifest, WeightStore};
+
+/// Reference device over the fused-variant weight blobs.
+pub struct SimDevice {
+    dims: DeviceDims,
+    weights: ModelWeights,
+    buckets: Vec<usize>,
+    stats: DeviceStats,
+}
+
+impl SimDevice {
+    pub fn load(manifest: &Manifest, store: &WeightStore) -> Result<SimDevice> {
+        Ok(SimDevice {
+            dims: DeviceDims {
+                d_model: manifest.d_model,
+                n_layers: manifest.n_layers,
+                d_ffn: manifest.d_ffn,
+                vocab: manifest.vocab,
+            },
+            weights: ModelWeights::load(manifest, store)?,
+            buckets: manifest.buckets.clone(),
+            stats: DeviceStats::default(),
+        })
+    }
+
+    pub fn weights(&self) -> &ModelWeights {
+        &self.weights
+    }
+
+    /// rmsnorm(x) ⊙ g, mirroring ref.py (eps 1e-5, f32).
+    fn rmsnorm(x: &[f32], g: &[f32], out: &mut [f32]) {
+        let d = x.len() as f32;
+        let var = x.iter().map(|v| v * v).sum::<f32>() / d;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        for i in 0..x.len() {
+            out[i] = x[i] * inv * g[i];
+        }
+    }
+
+    /// Quantized linear for one row: quantize, integer matmul, dequantize.
+    fn qlinear_row(x: &[f32], lin: &QLinear, out: &mut [f32]) {
+        let (xq, xs) = quant_act_row(x, 8);
+        // acc_n = sum_k xq_k * w[k,n] — w is integer-valued f32
+        out.fill(0.0);
+        for (k, &q) in xq.iter().enumerate() {
+            if q == 0 {
+                continue;
+            }
+            let qf = q as f32;
+            let row = &lin.w[k * lin.n..(k + 1) * lin.n];
+            for n in 0..lin.n {
+                out[n] += qf * row[n];
+            }
+        }
+        for n in 0..lin.n {
+            out[n] *= xs * lin.scale[n];
+        }
+    }
+
+    fn silu(v: f32) -> f32 {
+        v / (1.0 + (-v).exp())
+    }
+}
+
+impl ItaDevice for SimDevice {
+    fn dims(&self) -> DeviceDims {
+        self.dims
+    }
+
+    fn buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    fn qkv(&mut self, layer: usize, h: &Mat) -> Result<(Mat, Mat, Mat)> {
+        ensure!(layer < self.dims.n_layers);
+        ensure!(h.cols == self.dims.d_model);
+        let d = self.dims.d_model;
+        let lw = &self.weights.layers[layer];
+        let mut q = Mat::zeros(h.rows, d);
+        let mut k = Mat::zeros(h.rows, d);
+        let mut v = Mat::zeros(h.rows, d);
+        let mut x = vec![0.0; d];
+        let mut qkv = vec![0.0; 3 * d];
+        for r in 0..h.rows {
+            Self::rmsnorm(h.row(r), &lw.g1, &mut x);
+            Self::qlinear_row(&x, &lw.wqkv, &mut qkv);
+            q.row_mut(r).copy_from_slice(&qkv[..d]);
+            k.row_mut(r).copy_from_slice(&qkv[d..2 * d]);
+            v.row_mut(r).copy_from_slice(&qkv[2 * d..]);
+        }
+        self.stats.calls += 1;
+        self.stats.macs += (h.rows * d * 3 * d) as u64;
+        Ok((q, k, v))
+    }
+
+    fn ffn(&mut self, layer: usize, h: &Mat, attn: &Mat) -> Result<Mat> {
+        ensure!(layer < self.dims.n_layers);
+        ensure!(h.rows == attn.rows && h.cols == attn.cols);
+        let d = self.dims.d_model;
+        let f = self.dims.d_ffn;
+        let lw = &self.weights.layers[layer];
+        let mut out = Mat::zeros(h.rows, d);
+        let (mut x, mut o, mut a, mut b, mut fv) =
+            (vec![0.0; d], vec![0.0; d], vec![0.0; f], vec![0.0; f], vec![0.0; d]);
+        for r in 0..h.rows {
+            // h += Wo(attn)
+            Self::qlinear_row(attn.row(r), &lw.wo, &mut o);
+            let hr: Vec<f32> = h.row(r).iter().zip(&o).map(|(a, b)| a + b).collect();
+            // SwiGLU FFN on rmsnorm(h)
+            Self::rmsnorm(&hr, &lw.g2, &mut x);
+            Self::qlinear_row(&x, &lw.w1, &mut a);
+            Self::qlinear_row(&x, &lw.w3, &mut b);
+            let gated: Vec<f32> =
+                a.iter().zip(&b).map(|(&av, &bv)| Self::silu(av) * bv).collect();
+            Self::qlinear_row(&gated, &lw.w2, &mut fv);
+            for i in 0..d {
+                out.row_mut(r)[i] = hr[i] + fv[i];
+            }
+        }
+        self.stats.calls += 1;
+        self.stats.macs += (h.rows * (d * d + 3 * d * f)) as u64;
+        Ok(out)
+    }
+
+    fn logits(&mut self, h: &Mat) -> Result<Mat> {
+        let d = self.dims.d_model;
+        let v = self.dims.vocab;
+        let mut out = Mat::zeros(h.rows, v);
+        let mut x = vec![0.0; d];
+        for r in 0..h.rows {
+            Self::rmsnorm(h.row(r), &self.weights.gf, &mut x);
+            Self::qlinear_row(&x, &self.weights.we, out.row_mut(r));
+        }
+        self.stats.calls += 1;
+        self.stats.macs += (h.rows * d * v) as u64;
+        Ok(out)
+    }
+
+    fn stats(&self) -> DeviceStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Option<(Manifest, WeightStore)> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+        if !dir.join("MANIFEST.txt").exists() {
+            eprintln!("skipping: artifacts/tiny not built");
+            return None;
+        }
+        Some(crate::runtime::weights::load_artifacts(&dir).unwrap())
+    }
+
+    #[test]
+    fn qkv_shapes_and_determinism() {
+        let Some((m, s)) = tiny() else { return };
+        let mut dev = SimDevice::load(&m, &s).unwrap();
+        let h = Mat::new(2, 64, (0..128).map(|i| (i as f32 * 0.01).sin()).collect());
+        let (q, k, v) = dev.qkv(0, &h).unwrap();
+        assert_eq!((q.rows, q.cols), (2, 64));
+        assert_eq!((k.rows, k.cols), (2, 64));
+        assert_eq!((v.rows, v.cols), (2, 64));
+        let (q2, _, _) = dev.qkv(0, &h).unwrap();
+        assert_eq!(q.data, q2.data);
+    }
+
+    #[test]
+    fn layers_differ() {
+        let Some((m, s)) = tiny() else { return };
+        let mut dev = SimDevice::load(&m, &s).unwrap();
+        let h = Mat::new(1, 64, (0..64).map(|i| (i as f32 * 0.1).cos()).collect());
+        let (q0, _, _) = dev.qkv(0, &h).unwrap();
+        let (q1, _, _) = dev.qkv(1, &h).unwrap();
+        assert_ne!(q0.data, q1.data);
+    }
+
+    #[test]
+    fn ffn_residual_structure() {
+        // with attn = 0 and h = 0, output must be 0 + FFN(norm(0))·... = 0
+        // (rmsnorm(0)=0, silu(0)*0=0) — checks the residual wiring
+        let Some((m, s)) = tiny() else { return };
+        let mut dev = SimDevice::load(&m, &s).unwrap();
+        let zero = Mat::zeros(1, 64);
+        let out = dev.ffn(0, &zero, &zero).unwrap();
+        for &v in &out.data {
+            assert_eq!(v, 0.0);
+        }
+    }
+
+    #[test]
+    fn logits_shape() {
+        let Some((m, s)) = tiny() else { return };
+        let mut dev = SimDevice::load(&m, &s).unwrap();
+        let h = Mat::new(3, 64, (0..192).map(|i| (i as f32 * 0.02).sin()).collect());
+        let out = dev.logits(&h).unwrap();
+        assert_eq!((out.rows, out.cols), (3, 258));
+        assert!(out.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let Some((m, s)) = tiny() else { return };
+        let mut dev = SimDevice::load(&m, &s).unwrap();
+        let h = Mat::zeros(1, 64);
+        dev.qkv(0, &h).unwrap();
+        dev.logits(&h).unwrap();
+        let st = dev.stats();
+        assert_eq!(st.calls, 2);
+        assert!(st.macs > 0);
+    }
+}

@@ -1,0 +1,210 @@
+//! Energy models (paper Sections II-A, V-A, VI-B): per-MAC energy stacks
+//! (Table II / Fig 2), the DRAM-fetch floor (Eq. 1–2), and whole-system
+//! power (Section VI-B1).
+
+pub mod hybrid;
+
+use crate::config::{ModelConfig, TechParams};
+
+/// One architecture's per-MAC energy stack, in picojoules (Table II rows).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EnergyStack {
+    pub name: &'static str,
+    pub dram_fetch_pj: f64,
+    pub wire_pj: f64,
+    pub compute_pj: f64,
+}
+
+impl EnergyStack {
+    pub fn total_pj(&self) -> f64 {
+        self.dram_fetch_pj + self.wire_pj + self.compute_pj
+    }
+}
+
+/// Energy model parameters (paper's published constants as defaults).
+#[derive(Debug, Clone)]
+pub struct EnergyParams {
+    /// DRAM/HBM access energy per bit (paper [2]: ≈20 pJ/bit LPDDR5/HBM2e).
+    pub dram_pj_per_bit: f64,
+    /// GPU on-chip wire+SRAM movement per bit (derived from the paper's
+    /// 80 pJ FP16 row: 5 pJ/bit across the cache/register hierarchy).
+    pub gpu_wire_pj_per_bit: f64,
+    /// GPU FP16 MAC energy (paper: 1.1 pJ, 7nm FinFET [23]).
+    pub gpu_fp16_mac_pj: f64,
+    /// GPU INT8 MAC energy (paper: 1.0 pJ).
+    pub gpu_int8_mac_pj: f64,
+    /// ITA on-chip wire energy per MAC (paper: 4.0 pJ — one 32-bit operand
+    /// hop across the ≈5 mm dataflow pipeline stage).
+    pub ita_wire_pj: f64,
+    /// ITA hardwired MAC energy (paper: 0.05 pJ — a handful of gate
+    /// switches, no operand fetch).
+    pub ita_mac_pj: f64,
+    /// Paper counts 2 "operations" per parameter per token (multiply+add)
+    /// in its device-power arithmetic (Section VI-B1).
+    pub ops_per_param: f64,
+}
+
+impl Default for EnergyParams {
+    fn default() -> Self {
+        EnergyParams {
+            dram_pj_per_bit: 20.0,
+            gpu_wire_pj_per_bit: 5.0,
+            gpu_fp16_mac_pj: 1.1,
+            gpu_int8_mac_pj: 1.0,
+            ita_wire_pj: 4.0,
+            ita_mac_pj: 0.05,
+            ops_per_param: 2.0,
+        }
+    }
+}
+
+impl EnergyParams {
+    /// Derive the ITA wire energy from first principles instead of the
+    /// paper's quoted 4 pJ: a 32-bit operand over the average wire span.
+    pub fn ita_wire_pj_derived(tech: &TechParams) -> f64 {
+        32.0 * tech.wire_energy_j_per_bit() * 1e12
+    }
+
+    /// Table II row: GPU running FP16 (16-bit weight fetch per MAC).
+    pub fn gpu_fp16(&self) -> EnergyStack {
+        EnergyStack {
+            name: "GPU (FP16)",
+            dram_fetch_pj: 16.0 * self.dram_pj_per_bit,
+            wire_pj: 16.0 * self.gpu_wire_pj_per_bit,
+            compute_pj: self.gpu_fp16_mac_pj,
+        }
+    }
+
+    /// Table II row: GPU in INT8 tensor-core mode (8-bit fetch per MAC).
+    pub fn gpu_int8(&self) -> EnergyStack {
+        EnergyStack {
+            name: "GPU (INT8)",
+            dram_fetch_pj: 8.0 * self.dram_pj_per_bit,
+            wire_pj: 8.0 * self.gpu_wire_pj_per_bit,
+            compute_pj: self.gpu_int8_mac_pj,
+        }
+    }
+
+    /// Table II row: ITA — zero fetch, short wires, hardwired compute.
+    pub fn ita(&self) -> EnergyStack {
+        EnergyStack {
+            name: "ITA",
+            dram_fetch_pj: 0.0,
+            wire_pj: self.ita_wire_pj,
+            compute_pj: self.ita_mac_pj,
+        }
+    }
+
+    /// Table II's headline: ITA vs INT8 GPU (paper: 49.6×).
+    pub fn improvement_vs_int8(&self) -> f64 {
+        self.gpu_int8().total_pj() / self.ita().total_pj()
+    }
+}
+
+/// Paper Eq. 2: the DRAM energy floor per token for a weights-resident-in-
+/// DRAM architecture (J/token).
+pub fn dram_floor_j_per_token(params: u64, bits_per_param: u32, dram_pj_per_bit: f64) -> f64 {
+    params as f64 * bits_per_param as f64 * dram_pj_per_bit * 1e-12
+}
+
+/// System power breakdown (paper Section VI-B1).
+#[derive(Debug, Clone, Copy)]
+pub struct SystemPower {
+    pub device_w: f64,
+    pub serdes_w: f64,
+    pub host_cpu_w: (f64, f64),
+    pub total_w: (f64, f64),
+}
+
+/// Device power at a given throughput: `ops/param × params × E_MAC × tok/s`
+/// (reproduces the paper's 1.13 W @ 20 tok/s for 7B).
+pub fn device_power_w(cfg: &ModelConfig, e: &EnergyParams, tok_per_s: f64) -> f64 {
+    // Reproduces the paper's Section VI-B1 arithmetic verbatim:
+    // 14e9 ops × 4.05 pJ × 20 tok/s = 1.13 W. (Strictly this double-counts
+    // — 4.05 pJ is quoted *per MAC*, and ops = 2 × params — but it is the
+    // paper's own accounting; flagged in EXPERIMENTS.md.)
+    e.ops_per_param * cfg.params() as f64 * e.ita().total_pj() * 1e-12 * tok_per_s
+}
+
+/// Full system power including SerDes PHY and host attention CPU.
+pub fn system_power(cfg: &ModelConfig, e: &EnergyParams, tok_per_s: f64) -> SystemPower {
+    let device_w = device_power_w(cfg, e, tok_per_s);
+    let serdes_w = 0.5;
+    let host_cpu_w = (5.0, 10.0);
+    SystemPower {
+        device_w,
+        serdes_w,
+        host_cpu_w,
+        total_w: (device_w + serdes_w + host_cpu_w.0, device_w + serdes_w + host_cpu_w.1),
+    }
+}
+
+/// Leakage power for a die with `gates` NAND2-equivalents (paper Section
+/// V-A: 10 nW/gate 28nm LP).
+pub fn leakage_w(gates: f64, tech: &TechParams) -> f64 {
+    gates * tech.leakage_w_per_gate
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_rows_match_paper() {
+        let e = EnergyParams::default();
+        let fp16 = e.gpu_fp16();
+        assert!((fp16.dram_fetch_pj - 320.0).abs() < 1e-9);
+        assert!((fp16.wire_pj - 80.0).abs() < 1e-9);
+        assert!((fp16.total_pj() - 401.1).abs() < 0.01);
+
+        let int8 = e.gpu_int8();
+        assert!((int8.dram_fetch_pj - 160.0).abs() < 1e-9);
+        assert!((int8.total_pj() - 201.0).abs() < 0.01);
+
+        let ita = e.ita();
+        assert!((ita.total_pj() - 4.05).abs() < 0.001);
+    }
+
+    #[test]
+    fn headline_improvement_49_6x() {
+        let e = EnergyParams::default();
+        assert!((e.improvement_vs_int8() - 49.6).abs() < 0.1);
+    }
+
+    #[test]
+    fn eq2_dram_floor_for_7b_fp16() {
+        // paper: 14 GB × 8 b/B × 20 pJ/bit ≈ 2.24 J/token
+        let j = dram_floor_j_per_token(14_000_000_000, 8, 20.0);
+        assert!((j - 2.24).abs() < 0.01, "{j}");
+    }
+
+    #[test]
+    fn device_power_matches_paper_1_13w() {
+        // paper Section VI-B1: 1.13 W at 20 tok/s for the 7B device
+        let cfg = &ModelConfig::LLAMA2_7B;
+        let w = device_power_w(cfg, &EnergyParams::default(), 20.0);
+        // our param accounting gives 6.6B (paper rounds to 7B): 1.07 W
+        assert!((0.95..1.25).contains(&w), "{w}");
+    }
+
+    #[test]
+    fn system_power_in_7_to_12_band() {
+        let sp = system_power(&ModelConfig::LLAMA2_7B, &EnergyParams::default(), 20.0);
+        assert!(sp.total_w.0 > 6.0 && sp.total_w.1 < 13.0, "{sp:?}");
+    }
+
+    #[test]
+    fn derived_wire_energy_near_quoted() {
+        // 32 bits × α·C·L·V² should land within ~2× of the paper's 4 pJ
+        let d = EnergyParams::ita_wire_pj_derived(&TechParams::paper_28nm());
+        assert!((1.5..9.0).contains(&d), "{d}");
+    }
+
+    #[test]
+    fn leakage_small_vs_dynamic() {
+        // a 100M-gate die leaks ~1 W — same order as the device budget,
+        // flagged in EXPERIMENTS.md as a modeling observation
+        let w = leakage_w(100e6, &TechParams::paper_28nm());
+        assert!((w - 1.0).abs() < 1e-9);
+    }
+}

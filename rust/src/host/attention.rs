@@ -1,0 +1,342 @@
+//! Host-side attention (paper Section IV-B1): multi-head causal
+//! `softmax(QKᵀ/√d_h)V` over the paged KV cache, with rotary position
+//! embeddings applied to Q and K.
+//!
+//! This is the paper's declared system bottleneck (Section VI-C2 and
+//! Section VII-E) — the `host_attention` bench measures exactly this path
+//! and feeds the measured number back into the Table III latency model.
+
+use super::kv_cache::{PagedKvCache, SeqId};
+
+/// Attention geometry + RoPE base.
+#[derive(Debug, Clone, Copy)]
+pub struct AttentionConfig {
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub rope_theta: f32,
+}
+
+impl AttentionConfig {
+    pub fn new(n_heads: usize, head_dim: usize) -> AttentionConfig {
+        AttentionConfig { n_heads, head_dim, rope_theta: 10_000.0 }
+    }
+
+    pub fn d_model(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+
+    /// Apply rotary embedding in-place to a [d_model] vector at `pos`.
+    /// Pair convention: (2i, 2i+1) within each head.
+    pub fn apply_rope(&self, x: &mut [f32], pos: usize) {
+        debug_assert_eq!(x.len(), self.d_model());
+        let hd = self.head_dim;
+        for h in 0..self.n_heads {
+            let head = &mut x[h * hd..(h + 1) * hd];
+            for i in 0..hd / 2 {
+                let freq = self.rope_theta.powf(-2.0 * i as f32 / hd as f32);
+                let angle = pos as f32 * freq;
+                let (sin, cos) = angle.sin_cos();
+                let (a, b) = (head[2 * i], head[2 * i + 1]);
+                head[2 * i] = a * cos - b * sin;
+                head[2 * i + 1] = a * sin + b * cos;
+            }
+        }
+    }
+}
+
+/// Single-token decode attention: q [d_model] (RoPE already applied)
+/// against all cached K/V of (seq, layer). Writes the concatenated head
+/// outputs into `out` [d_model].
+///
+/// Two-pass streaming softmax over page runs: pass 1 computes scores and
+/// the running max, pass 2 accumulates exp-weighted V. Scratch buffers are
+/// caller-provided so the decode loop is allocation-free.
+pub struct AttentionScratch {
+    /// score matrix [t, n_heads], row-major — filled in one contiguous
+    /// sweep over the cached K rows
+    scores: Vec<f32>,
+}
+
+impl AttentionScratch {
+    pub fn new() -> Self {
+        AttentionScratch { scores: Vec::new() }
+    }
+}
+
+/// Vectorization-friendly dot product (8-lane unrolled accumulators).
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0f32; 8];
+    let chunks = a.len() / 8;
+    for c in 0..chunks {
+        let (x, y) = (&a[c * 8..c * 8 + 8], &b[c * 8..c * 8 + 8]);
+        for i in 0..8 {
+            acc[i] += x[i] * y[i];
+        }
+    }
+    let mut s = acc.iter().sum::<f32>();
+    for i in chunks * 8..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// out += w * v, 8-lane unrolled.
+#[inline]
+fn axpy(out: &mut [f32], w: f32, v: &[f32]) {
+    debug_assert_eq!(out.len(), v.len());
+    let chunks = out.len() / 8;
+    for c in 0..chunks {
+        let o = &mut out[c * 8..c * 8 + 8];
+        let x = &v[c * 8..c * 8 + 8];
+        for i in 0..8 {
+            o[i] += w * x[i];
+        }
+    }
+    for i in chunks * 8..out.len() {
+        out[i] += w * v[i];
+    }
+}
+
+impl Default for AttentionScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+pub fn decode_attention(
+    cfg: &AttentionConfig,
+    cache: &PagedKvCache,
+    seq: SeqId,
+    layer: usize,
+    t: usize,
+    q: &[f32],
+    out: &mut [f32],
+    scratch: &mut AttentionScratch,
+) {
+    let d = cfg.d_model();
+    debug_assert_eq!(q.len(), d);
+    debug_assert_eq!(out.len(), d);
+    if t == 0 {
+        out.fill(0.0);
+        return;
+    }
+    let hd = cfg.head_dim;
+    let nh = cfg.n_heads;
+    let inv_sqrt = 1.0 / (hd as f32).sqrt();
+    let runs = cache.page_runs(seq, layer, t);
+
+    // pass 1: one contiguous sweep over K rows, all heads per row
+    // (row-major traversal: each cached K row is touched exactly once)
+    scratch.scores.resize(t * nh, 0.0);
+    let mut maxes = [f32::NEG_INFINITY; 128];
+    let maxes = &mut maxes[..nh];
+    for (start, k_slice, _) in &runs {
+        let rows = k_slice.len() / d;
+        for r in 0..rows {
+            let k_row = &k_slice[r * d..(r + 1) * d];
+            let srow = &mut scratch.scores[(start + r) * nh..(start + r + 1) * nh];
+            for h in 0..nh {
+                let s = dot(&q[h * hd..(h + 1) * hd], &k_row[h * hd..(h + 1) * hd])
+                    * inv_sqrt;
+                srow[h] = s;
+                maxes[h] = maxes[h].max(s);
+            }
+        }
+    }
+    // pass 2: one contiguous sweep over V rows, exp-weighted accumulation
+    out.fill(0.0);
+    let mut denoms = [0f32; 128];
+    let denoms = &mut denoms[..nh];
+    for (start, _, v_slice) in &runs {
+        let rows = v_slice.len() / d;
+        for r in 0..rows {
+            let v_row = &v_slice[r * d..(r + 1) * d];
+            let srow = &scratch.scores[(start + r) * nh..(start + r + 1) * nh];
+            for h in 0..nh {
+                let w = (srow[h] - maxes[h]).exp();
+                denoms[h] += w;
+                axpy(&mut out[h * hd..(h + 1) * hd], w, &v_row[h * hd..(h + 1) * hd]);
+            }
+        }
+    }
+    for h in 0..nh {
+        let inv = 1.0 / denoms[h];
+        for o in &mut out[h * hd..(h + 1) * hd] {
+            *o *= inv;
+        }
+    }
+}
+
+/// Reference (naive, allocating) attention for differential testing.
+pub fn decode_attention_reference(
+    cfg: &AttentionConfig,
+    keys: &[Vec<f32>],
+    values: &[Vec<f32>],
+    q: &[f32],
+) -> Vec<f32> {
+    let d = cfg.d_model();
+    let hd = cfg.head_dim;
+    let t = keys.len();
+    let mut out = vec![0.0; d];
+    for h in 0..cfg.n_heads {
+        let q_h = &q[h * hd..(h + 1) * hd];
+        let scores: Vec<f32> = (0..t)
+            .map(|r| {
+                let k_h = &keys[r][h * hd..(h + 1) * hd];
+                q_h.iter().zip(k_h).map(|(a, b)| a * b).sum::<f32>() / (hd as f32).sqrt()
+            })
+            .collect();
+        let max = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let exps: Vec<f32> = scores.iter().map(|s| (s - max).exp()).collect();
+        let denom: f32 = exps.iter().sum();
+        for (r, e) in exps.iter().enumerate() {
+            let v_h = &values[r][h * hd..(h + 1) * hd];
+            for i in 0..hd {
+                out[h * hd + i] += e / denom * v_h[i];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+    use crate::util::quickprop::forall;
+
+    fn fill_cache(
+        cache: &mut PagedKvCache,
+        seq: SeqId,
+        layer_count: usize,
+        t: usize,
+        d: usize,
+        rng: &mut Prng,
+    ) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        let mut keys = vec![];
+        let mut vals = vec![];
+        for _ in 0..t {
+            let k: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            let v: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            for l in 0..layer_count {
+                cache.append(seq, l, &k, &v).unwrap();
+            }
+            cache.advance(seq).unwrap();
+            keys.push(k);
+            vals.push(v);
+        }
+        (keys, vals)
+    }
+
+    #[test]
+    fn matches_reference_implementation() {
+        forall("paged attention == naive reference", 40, |g| {
+            let heads = *g.pick(&[1usize, 2, 4]);
+            let hd = *g.pick(&[2usize, 4, 8]);
+            let cfg = AttentionConfig::new(heads, hd);
+            let d = cfg.d_model();
+            let t = g.usize_in(1, 20);
+            let page = g.usize_in(1, 7);
+            let mut cache = PagedKvCache::new(1, d, page);
+            let seq = cache.alloc_seq();
+            let (keys, vals) = fill_cache(&mut cache, seq, 1, t, d, g.rng());
+            let q: Vec<f32> = (0..d).map(|_| g.f32_normal()).collect();
+            let mut out = vec![0.0; d];
+            let mut scratch = AttentionScratch::new();
+            decode_attention(&cfg, &cache, seq, 0, cache.len(seq), &q, &mut out, &mut scratch);
+            let want = decode_attention_reference(&cfg, &keys, &vals, &q);
+            for (a, b) in out.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn attention_is_convex_combination() {
+        // output of each head lies inside the convex hull of cached V rows:
+        // max |out| <= max |v|
+        let cfg = AttentionConfig::new(2, 4);
+        let d = cfg.d_model();
+        let mut cache = PagedKvCache::new(1, d, 4);
+        let seq = cache.alloc_seq();
+        let mut rng = Prng::new(3);
+        fill_cache(&mut cache, seq, 1, 9, d, &mut rng);
+        let q = vec![0.5; d];
+        let mut out = vec![0.0; d];
+        decode_attention(&cfg, &cache, seq, 0, cache.len(seq), &q, &mut out, &mut AttentionScratch::new());
+        let mut vmax = 0f32;
+        cache.for_each_kv(seq, 0, |_, _, v| {
+            for x in v {
+                vmax = vmax.max(x.abs());
+            }
+        });
+        for o in &out {
+            assert!(o.abs() <= vmax + 1e-5);
+        }
+    }
+
+    #[test]
+    fn single_token_attention_returns_v() {
+        let cfg = AttentionConfig::new(2, 4);
+        let d = cfg.d_model();
+        let mut cache = PagedKvCache::new(1, d, 4);
+        let seq = cache.alloc_seq();
+        let k: Vec<f32> = (0..d).map(|i| i as f32).collect();
+        let v: Vec<f32> = (0..d).map(|i| -(i as f32)).collect();
+        cache.append(seq, 0, &k, &v).unwrap();
+        cache.advance(seq).unwrap();
+        let q = vec![1.0; d];
+        let mut out = vec![0.0; d];
+        decode_attention(&cfg, &cache, seq, 0, cache.len(seq), &q, &mut out, &mut AttentionScratch::new());
+        for (a, b) in out.iter().zip(&v) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn empty_cache_yields_zero() {
+        let cfg = AttentionConfig::new(1, 4);
+        let mut cache = PagedKvCache::new(1, 4, 4);
+        let seq = cache.alloc_seq();
+        let mut out = vec![1.0; 4];
+        decode_attention(&cfg, &cache, seq, 0, 0, &[0.0; 4], &mut out, &mut AttentionScratch::new());
+        assert_eq!(out, vec![0.0; 4]);
+        let _ = cache; // silence
+    }
+
+    #[test]
+    fn rope_preserves_norm_and_is_position_dependent() {
+        let cfg = AttentionConfig::new(2, 8);
+        let d = cfg.d_model();
+        let mut rng = Prng::new(5);
+        let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let norm = |v: &[f32]| v.iter().map(|a| a * a).sum::<f32>().sqrt();
+        let mut x0 = x.clone();
+        cfg.apply_rope(&mut x0, 0);
+        let mut x5 = x.clone();
+        cfg.apply_rope(&mut x5, 5);
+        assert!((norm(&x0) - norm(&x)).abs() < 1e-4);
+        assert!((norm(&x5) - norm(&x)).abs() < 1e-4);
+        assert!(x0.iter().zip(&x5).any(|(a, b)| (a - b).abs() > 1e-3));
+    }
+
+    #[test]
+    fn rope_relative_property() {
+        // <rope(q,m), rope(k,n)> depends only on m-n (per head):
+        // check dot(q@2, k@5) == dot(q@10, k@13)
+        let cfg = AttentionConfig::new(1, 8);
+        let mut rng = Prng::new(9);
+        let q: Vec<f32> = (0..8).map(|_| rng.normal() as f32).collect();
+        let k: Vec<f32> = (0..8).map(|_| rng.normal() as f32).collect();
+        let dot_at = |mq: usize, nk: usize| {
+            let mut a = q.clone();
+            let mut b = k.clone();
+            cfg.apply_rope(&mut a, mq);
+            cfg.apply_rope(&mut b, nk);
+            a.iter().zip(&b).map(|(x, y)| x * y).sum::<f32>()
+        };
+        assert!((dot_at(2, 5) - dot_at(10, 13)).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,68 @@
+//! Host-side token-embedding lookup (paper Fig. 1: tokenization and the
+//! vocabulary table live on the host; the device carries the tied LM head).
+
+use crate::model::Mat;
+
+/// Embedding table [vocab, d_model].
+pub struct EmbeddingTable {
+    table: Mat,
+}
+
+impl EmbeddingTable {
+    pub fn new(table: Mat) -> EmbeddingTable {
+        EmbeddingTable { table }
+    }
+
+    pub fn d_model(&self) -> usize {
+        self.table.cols
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.table.rows
+    }
+
+    /// Embedding row for one token.
+    pub fn lookup(&self, token: u32) -> &[f32] {
+        self.table.row(token as usize)
+    }
+
+    /// Gather embeddings for a batch of tokens into a [B, D] buffer.
+    pub fn gather(&self, tokens: &[u32], out: &mut [f32]) {
+        let d = self.d_model();
+        assert_eq!(out.len(), tokens.len() * d);
+        for (i, &t) in tokens.iter().enumerate() {
+            out[i * d..(i + 1) * d].copy_from_slice(self.lookup(t));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> EmbeddingTable {
+        let data: Vec<f32> = (0..12).map(|v| v as f32).collect();
+        EmbeddingTable::new(Mat::new(3, 4, data))
+    }
+
+    #[test]
+    fn lookup_rows() {
+        let e = table();
+        assert_eq!(e.lookup(1), &[4.0, 5.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    fn gather_batch() {
+        let e = table();
+        let mut out = vec![0.0; 8];
+        e.gather(&[2, 0], &mut out);
+        assert_eq!(&out[..4], &[8.0, 9.0, 10.0, 11.0]);
+        assert_eq!(&out[4..], &[0.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_vocab_panics() {
+        table().lookup(3);
+    }
+}

@@ -1,0 +1,363 @@
+//! Paged KV-cache manager (paper Section IV-B1: "storing historical Key
+//! and Value vectors in system memory").
+//!
+//! vLLM-style paging: K/V rows live in fixed-size pages drawn from a shared
+//! pool, so concurrent sequences of different lengths don't fragment host
+//! memory and freed sequences return their pages immediately.
+//!
+//! Layout: one page holds `page_size` consecutive token rows for one
+//! (sequence, layer) stream, K and V side by side.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Opaque sequence handle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SeqId(pub u64);
+
+struct Page {
+    /// [page_size, d_model]
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+struct SeqState {
+    /// page table per layer: page indices into the pool
+    pages: Vec<Vec<usize>>,
+    /// tokens currently stored
+    len: usize,
+}
+
+/// Paged KV cache over all layers of one model.
+pub struct PagedKvCache {
+    n_layers: usize,
+    d_model: usize,
+    page_size: usize,
+    pool: Vec<Page>,
+    free: Vec<usize>,
+    seqs: HashMap<SeqId, SeqState>,
+    next_id: u64,
+    /// high-water mark of allocated pages (capacity telemetry)
+    pub peak_pages: usize,
+}
+
+impl PagedKvCache {
+    pub fn new(n_layers: usize, d_model: usize, page_size: usize) -> PagedKvCache {
+        assert!(page_size > 0);
+        PagedKvCache {
+            n_layers,
+            d_model,
+            page_size,
+            pool: Vec::new(),
+            free: Vec::new(),
+            seqs: HashMap::new(),
+            next_id: 0,
+            peak_pages: 0,
+        }
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    /// Register a new sequence.
+    pub fn alloc_seq(&mut self) -> SeqId {
+        let id = SeqId(self.next_id);
+        self.next_id += 1;
+        self.seqs.insert(
+            id,
+            SeqState { pages: vec![Vec::new(); self.n_layers], len: 0 },
+        );
+        id
+    }
+
+    /// Release a sequence and return its pages to the pool.
+    pub fn free_seq(&mut self, id: SeqId) {
+        if let Some(state) = self.seqs.remove(&id) {
+            for layer_pages in state.pages {
+                self.free.extend(layer_pages);
+            }
+        }
+    }
+
+    fn grab_page(&mut self) -> usize {
+        if let Some(idx) = self.free.pop() {
+            idx
+        } else {
+            let idx = self.pool.len();
+            self.pool.push(Page {
+                k: vec![0.0; self.page_size * self.d_model],
+                v: vec![0.0; self.page_size * self.d_model],
+            });
+            self.peak_pages = self.peak_pages.max(self.pool.len());
+            idx
+        }
+    }
+
+    /// Append one token's K and V rows for `layer` at the next committed
+    /// position. All layers of a token must be appended before [`advance`].
+    pub fn append(&mut self, id: SeqId, layer: usize, k: &[f32], v: &[f32]) -> Result<()> {
+        let pos = self.seqs.get(&id).ok_or_else(|| anyhow!("unknown seq"))?.len;
+        self.append_at(id, layer, pos, k, v)
+    }
+
+    /// Append K/V at an explicit position ≥ the committed length — used by
+    /// chunked prefill, where several positions of one sequence ride the
+    /// same device call before any of them is committed via [`advance`].
+    pub fn append_at(
+        &mut self,
+        id: SeqId,
+        layer: usize,
+        pos: usize,
+        k: &[f32],
+        v: &[f32],
+    ) -> Result<()> {
+        if k.len() != self.d_model || v.len() != self.d_model {
+            bail!("k/v row length mismatch");
+        }
+        let page_size = self.page_size;
+        let d = self.d_model;
+        {
+            let state = self.seqs.get(&id).ok_or_else(|| anyhow!("unknown seq"))?;
+            if pos < state.len {
+                bail!("append_at position {pos} below committed length {}", state.len);
+            }
+        }
+        let page_no = pos / page_size;
+        let slot = pos % page_size;
+        // ensure pages exist up to page_no (allocate via self before
+        // mut-borrowing seq state)
+        loop {
+            let have = self.seqs.get(&id).unwrap().pages[layer].len();
+            if have > page_no {
+                break;
+            }
+            let pidx = self.grab_page();
+            self.seqs.get_mut(&id).unwrap().pages[layer].push(pidx);
+        }
+        let state = self.seqs.get(&id).unwrap();
+        let pidx = state.pages[layer][page_no];
+        let page = &mut self.pool[pidx];
+        page.k[slot * d..(slot + 1) * d].copy_from_slice(k);
+        page.v[slot * d..(slot + 1) * d].copy_from_slice(v);
+        Ok(())
+    }
+
+    /// Commit one token (after K/V appended for every layer).
+    pub fn advance(&mut self, id: SeqId) -> Result<usize> {
+        let state = self.seqs.get_mut(&id).ok_or_else(|| anyhow!("unknown seq"))?;
+        state.len += 1;
+        Ok(state.len)
+    }
+
+    /// Sequence length in tokens.
+    pub fn len(&self, id: SeqId) -> usize {
+        self.seqs.get(&id).map_or(0, |s| s.len)
+    }
+
+    pub fn is_empty(&self, id: SeqId) -> bool {
+        self.len(id) == 0
+    }
+
+    /// Visit the stored K/V rows of (seq, layer) for positions `0..len`;
+    /// `f(pos, k_row, v_row)`. Iterates page-contiguously (cache-friendly).
+    pub fn for_each_kv(&self, id: SeqId, layer: usize, mut f: impl FnMut(usize, &[f32], &[f32])) {
+        let Some(state) = self.seqs.get(&id) else { return };
+        let d = self.d_model;
+        let mut pos = 0;
+        for &pidx in &state.pages[layer] {
+            let page = &self.pool[pidx];
+            let in_page = (state.len - pos).min(self.page_size);
+            for slot in 0..in_page {
+                f(pos, &page.k[slot * d..(slot + 1) * d], &page.v[slot * d..(slot + 1) * d]);
+                pos += 1;
+            }
+            if pos >= state.len {
+                break;
+            }
+        }
+    }
+
+    /// Contiguous page runs of (seq, layer): `(start_pos, k_slice, v_slice)`
+    /// covering rows `start_pos .. start_pos + slice_rows`, up to `upto`
+    /// rows. `upto` may exceed the *committed* length by the rows already
+    /// appended this step (decode attends to the token's own fresh K/V
+    /// before [`advance`]). The attention hot path works on whole pages
+    /// without per-row dispatch.
+    pub fn page_runs(&self, id: SeqId, layer: usize, upto: usize) -> Vec<(usize, &[f32], &[f32])> {
+        let Some(state) = self.seqs.get(&id) else { return vec![] };
+        let d = self.d_model;
+        let capacity = state.pages[layer].len() * self.page_size;
+        let limit = upto.min(capacity);
+        let mut out = Vec::with_capacity(state.pages[layer].len());
+        let mut pos = 0;
+        for &pidx in &state.pages[layer] {
+            if pos >= limit {
+                break;
+            }
+            let page = &self.pool[pidx];
+            let rows = (limit - pos).min(self.page_size);
+            out.push((pos, &page.k[..rows * d], &page.v[..rows * d]));
+            pos += rows;
+        }
+        out
+    }
+
+    /// Pool statistics: (allocated pages, free pages, live sequences).
+    pub fn stats(&self) -> (usize, usize, usize) {
+        (self.pool.len(), self.free.len(), self.seqs.len())
+    }
+
+    /// Host-RAM bytes currently held by the pool.
+    pub fn pool_bytes(&self) -> usize {
+        self.pool.len() * 2 * self.page_size * self.d_model * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickprop::forall;
+
+    fn row(d: usize, fill: f32) -> Vec<f32> {
+        vec![fill; d]
+    }
+
+    #[test]
+    fn append_read_roundtrip() {
+        let d = 8;
+        let mut c = PagedKvCache::new(2, d, 4);
+        let s = c.alloc_seq();
+        for t in 0..10 {
+            for l in 0..2 {
+                c.append(s, l, &row(d, t as f32), &row(d, -(t as f32))).unwrap();
+            }
+            c.advance(s).unwrap();
+        }
+        assert_eq!(c.len(s), 10);
+        let mut seen = vec![];
+        c.for_each_kv(s, 1, |pos, k, v| {
+            assert_eq!(k[0], pos as f32);
+            assert_eq!(v[0], -(pos as f32));
+            seen.push(pos);
+        });
+        assert_eq!(seen, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sequences_are_isolated() {
+        let d = 4;
+        let mut c = PagedKvCache::new(1, d, 2);
+        let a = c.alloc_seq();
+        let b = c.alloc_seq();
+        c.append(a, 0, &row(d, 1.0), &row(d, 1.0)).unwrap();
+        c.advance(a).unwrap();
+        c.append(b, 0, &row(d, 2.0), &row(d, 2.0)).unwrap();
+        c.advance(b).unwrap();
+        c.for_each_kv(a, 0, |_, k, _| assert_eq!(k[0], 1.0));
+        c.for_each_kv(b, 0, |_, k, _| assert_eq!(k[0], 2.0));
+    }
+
+    #[test]
+    fn free_reclaims_pages() {
+        let d = 4;
+        let mut c = PagedKvCache::new(1, d, 2);
+        let a = c.alloc_seq();
+        for _ in 0..6 {
+            c.append(a, 0, &row(d, 0.0), &row(d, 0.0)).unwrap();
+            c.advance(a).unwrap();
+        }
+        let (alloc, free, _) = c.stats();
+        assert_eq!(alloc, 3);
+        assert_eq!(free, 0);
+        c.free_seq(a);
+        let (_, free, live) = c.stats();
+        assert_eq!(free, 3);
+        assert_eq!(live, 0);
+        // a new sequence reuses the freed pages
+        let b = c.alloc_seq();
+        for _ in 0..4 {
+            c.append(b, 0, &row(d, 1.0), &row(d, 1.0)).unwrap();
+            c.advance(b).unwrap();
+        }
+        assert_eq!(c.stats().0, 3, "no new allocations");
+    }
+
+    #[test]
+    fn page_runs_cover_everything_contiguously() {
+        let d = 4;
+        let mut c = PagedKvCache::new(1, d, 3);
+        let s = c.alloc_seq();
+        for t in 0..7 {
+            c.append(s, 0, &row(d, t as f32), &row(d, 0.0)).unwrap();
+            c.advance(s).unwrap();
+        }
+        let runs = c.page_runs(s, 0, c.len(s));
+        assert_eq!(runs.len(), 3); // 3+3+1
+        let mut pos = 0;
+        for (start, k, _) in runs {
+            assert_eq!(start, pos);
+            for r in 0..k.len() / d {
+                assert_eq!(k[r * d], (pos + r) as f32);
+            }
+            pos += k.len() / d;
+        }
+        assert_eq!(pos, 7);
+    }
+
+    #[test]
+    fn rejects_bad_rows_and_unknown_seqs() {
+        let mut c = PagedKvCache::new(1, 4, 2);
+        let s = c.alloc_seq();
+        assert!(c.append(s, 0, &[0.0; 3], &[0.0; 4]).is_err());
+        assert!(c.append(SeqId(999), 0, &[0.0; 4], &[0.0; 4]).is_err());
+        assert!(c.advance(SeqId(999)).is_err());
+    }
+
+    #[test]
+    fn prop_roundtrip_random_schedules() {
+        forall("kv cache preserves rows under interleaving", 60, |g| {
+            let d = g.usize_in(1, 12);
+            let layers = g.usize_in(1, 3);
+            let page = g.usize_in(1, 5);
+            let mut c = PagedKvCache::new(layers, d, page);
+            let n_seqs = g.usize_in(1, 4);
+            let ids: Vec<SeqId> = (0..n_seqs).map(|_| c.alloc_seq()).collect();
+            let steps = g.usize_in(1, 20);
+            let mut lens = vec![0usize; n_seqs];
+            for _ in 0..steps {
+                let which = g.usize_in(0, n_seqs - 1);
+                let id = ids[which];
+                let tag = (which * 1000 + lens[which]) as f32;
+                for l in 0..layers {
+                    c.append(id, l, &vec![tag + l as f32; d], &vec![-tag; d]).unwrap();
+                }
+                c.advance(id).unwrap();
+                lens[which] += 1;
+            }
+            for (which, &id) in ids.iter().enumerate() {
+                assert_eq!(c.len(id), lens[which]);
+                for l in 0..layers {
+                    let mut count = 0;
+                    c.for_each_kv(id, l, |pos, k, v| {
+                        let tag = (which * 1000 + pos) as f32;
+                        assert_eq!(k[0], tag + l as f32);
+                        assert_eq!(v[0], -tag);
+                        count += 1;
+                    });
+                    assert_eq!(count, lens[which]);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn pool_bytes_accounting() {
+        let mut c = PagedKvCache::new(1, 8, 4);
+        let s = c.alloc_seq();
+        c.append(s, 0, &row(8, 0.0), &row(8, 0.0)).unwrap();
+        c.advance(s).unwrap();
+        assert_eq!(c.pool_bytes(), 2 * 4 * 8 * 4);
+    }
+}

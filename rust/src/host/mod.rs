@@ -1,0 +1,19 @@
+//! The Split-Brain **host** component (paper Section IV-B1): everything
+//! that needs mutable, random-access state.
+//!
+//! * [`tokenizer`] — text ↔ token ids (lightweight vocabulary lookup).
+//! * [`embedding`] — token-embedding table lookup.
+//! * [`kv_cache`] — paged KV-cache manager in host RAM.
+//! * [`attention`] — softmax(QKᵀ/√d)V over the cached context, with RoPE.
+//! * [`sampling`] — greedy / top-k / nucleus next-token selection.
+
+pub mod attention;
+pub mod embedding;
+pub mod kv_cache;
+pub mod sampling;
+pub mod tokenizer;
+
+pub use attention::AttentionConfig;
+pub use kv_cache::{PagedKvCache, SeqId};
+pub use sampling::{sample, SamplingParams};
+pub use tokenizer::ByteTokenizer;

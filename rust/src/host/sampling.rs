@@ -1,0 +1,156 @@
+//! Next-token sampling (paper Section IV-B1: "greedy decoding, top-k, or
+//! nucleus sampling" on the host).
+
+use crate::util::prng::Prng;
+
+/// Sampling configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct SamplingParams {
+    pub temperature: f32,
+    /// 0 disables top-k.
+    pub top_k: usize,
+    /// 1.0 disables nucleus filtering.
+    pub top_p: f32,
+}
+
+impl SamplingParams {
+    pub fn greedy() -> Self {
+        SamplingParams { temperature: 0.0, top_k: 0, top_p: 1.0 }
+    }
+
+    pub fn top_k(k: usize, temperature: f32) -> Self {
+        SamplingParams { temperature, top_k: k, top_p: 1.0 }
+    }
+
+    pub fn nucleus(p: f32, temperature: f32) -> Self {
+        SamplingParams { temperature, top_k: 0, top_p: p }
+    }
+}
+
+/// Sample a token id from `logits`. Greedy when temperature == 0.
+pub fn sample(logits: &[f32], params: &SamplingParams, rng: &mut Prng) -> u32 {
+    debug_assert!(!logits.is_empty());
+    if params.temperature <= 0.0 {
+        return argmax(logits);
+    }
+    // candidate set: (id, logit) sorted by logit desc
+    let mut cands: Vec<(u32, f32)> =
+        logits.iter().enumerate().map(|(i, &l)| (i as u32, l)).collect();
+    cands.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal));
+    if params.top_k > 0 && params.top_k < cands.len() {
+        cands.truncate(params.top_k);
+    }
+    // softmax with temperature
+    let max = cands[0].1;
+    let mut probs: Vec<f32> =
+        cands.iter().map(|&(_, l)| ((l - max) / params.temperature).exp()).collect();
+    let sum: f32 = probs.iter().sum();
+    for p in probs.iter_mut() {
+        *p /= sum;
+    }
+    // nucleus cut
+    if params.top_p < 1.0 {
+        let mut acc = 0.0;
+        let mut cut = probs.len();
+        for (i, &p) in probs.iter().enumerate() {
+            acc += p;
+            if acc >= params.top_p {
+                cut = i + 1;
+                break;
+            }
+        }
+        probs.truncate(cut);
+        cands.truncate(cut);
+        let s: f32 = probs.iter().sum();
+        for p in probs.iter_mut() {
+            *p /= s;
+        }
+    }
+    // inverse-CDF draw
+    let u = rng.uniform() as f32;
+    let mut acc = 0.0;
+    for (i, &p) in probs.iter().enumerate() {
+        acc += p;
+        if u < acc {
+            return cands[i].0;
+        }
+    }
+    cands[probs.len() - 1].0
+}
+
+fn argmax(logits: &[f32]) -> u32 {
+    let mut best = 0;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickprop::forall;
+
+    #[test]
+    fn greedy_picks_argmax() {
+        let mut rng = Prng::new(0);
+        let logits = vec![0.1, 2.0, -1.0, 1.9];
+        assert_eq!(sample(&logits, &SamplingParams::greedy(), &mut rng), 1);
+    }
+
+    #[test]
+    fn greedy_ties_pick_first() {
+        let mut rng = Prng::new(0);
+        let logits = vec![1.0, 2.0, 2.0];
+        assert_eq!(sample(&logits, &SamplingParams::greedy(), &mut rng), 1);
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        forall("top-2 sampling only returns top-2 ids", 100, |g| {
+            let logits = vec![5.0, 4.0, -10.0, -11.0];
+            let t = sample(&logits, &SamplingParams::top_k(2, 1.0), g.rng());
+            assert!(t == 0 || t == 1, "{t}");
+        });
+    }
+
+    #[test]
+    fn nucleus_restricts_support() {
+        forall("p=0.5 with one dominant logit is deterministic", 50, |g| {
+            let logits = vec![10.0, 0.0, 0.0, 0.0];
+            let t = sample(&logits, &SamplingParams::nucleus(0.5, 1.0), g.rng());
+            assert_eq!(t, 0);
+        });
+    }
+
+    #[test]
+    fn sampling_is_deterministic_given_seed() {
+        let logits: Vec<f32> = (0..16).map(|i| (i as f32 * 0.37).sin()).collect();
+        let p = SamplingParams::top_k(8, 0.9);
+        let a: Vec<u32> = {
+            let mut rng = Prng::new(42);
+            (0..20).map(|_| sample(&logits, &p, &mut rng)).collect()
+        };
+        let b: Vec<u32> = {
+            let mut rng = Prng::new(42);
+            (0..20).map(|_| sample(&logits, &p, &mut rng)).collect()
+        };
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn high_temperature_spreads_mass() {
+        let mut rng = Prng::new(7);
+        let logits = vec![1.0, 0.9, 0.8, 0.7];
+        let p = SamplingParams::top_k(0, 10.0);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..200 {
+            seen.insert(sample(&logits, &p, &mut rng));
+        }
+        assert!(seen.len() >= 3, "{seen:?}");
+    }
+}

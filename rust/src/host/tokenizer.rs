@@ -1,0 +1,72 @@
+//! Byte-level tokenizer: ids 0..=255 are raw bytes, 256 = BOS, 257 = EOS.
+//! (The paper's host does "tokenization: converting input text to token
+//! embeddings using a lightweight vocabulary lookup" — a byte vocabulary is
+//! the smallest faithful instance and matches the buildable configs'
+//! vocab of 258.)
+
+pub const BOS: u32 = 256;
+pub const EOS: u32 = 257;
+pub const VOCAB: usize = 258;
+
+/// Byte-level tokenizer.
+#[derive(Debug, Clone, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub fn new() -> Self {
+        ByteTokenizer
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        VOCAB
+    }
+
+    /// Encode text, prepending BOS.
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut out = Vec::with_capacity(text.len() + 1);
+        out.push(BOS);
+        out.extend(text.as_bytes().iter().map(|&b| b as u32));
+        out
+    }
+
+    /// Decode ids, dropping specials; invalid UTF-8 is replaced.
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let bytes: Vec<u8> = ids.iter().filter(|&&t| t < 256).map(|&t| t as u8).collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = ByteTokenizer::new();
+        let ids = t.encode("hello");
+        assert_eq!(ids[0], BOS);
+        assert_eq!(ids.len(), 6);
+        assert_eq!(t.decode(&ids), "hello");
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let t = ByteTokenizer::new();
+        let s = "héllo → 世界";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn specials_dropped_on_decode() {
+        let t = ByteTokenizer::new();
+        assert_eq!(t.decode(&[BOS, 104, 105, EOS]), "hi");
+    }
+
+    #[test]
+    fn all_ids_in_vocab() {
+        let t = ByteTokenizer::new();
+        for id in t.encode("any text at all ☃") {
+            assert!((id as usize) < VOCAB);
+        }
+    }
+}

@@ -1,0 +1,98 @@
+//! On-device KV-cache option (paper Section VII-E): adding embedded memory
+//! to the cartridge so short contexts never leave the die, cutting the
+//! host-attention round trip.
+
+use crate::config::ModelConfig;
+
+/// Embedded-DRAM density the paper assumes (0.02 µm²/bit at 28nm).
+pub const EDRAM_UM2_PER_BIT: f64 = 0.02;
+
+/// On-device KV configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct KvSramOption {
+    pub capacity_mb: f64,
+    /// Bytes per cached element (paper: INT16).
+    pub bytes_per_elem: usize,
+}
+
+impl KvSramOption {
+    /// The paper's proposal: 256 MB for 2K-token contexts.
+    pub fn paper_256mb() -> Self {
+        KvSramOption { capacity_mb: 256.0, bytes_per_elem: 2 }
+    }
+
+    /// Die area for the macro, mm².
+    pub fn area_mm2(&self) -> f64 {
+        self.capacity_mb * 8.0 * 1024.0 * 1024.0 * EDRAM_UM2_PER_BIT / 1e6
+    }
+
+    /// Added unit cost at the paper's $/mm² (≈$0.19/mm² from $52/520mm²…
+    /// the paper just says +$8; we derive from silicon cost).
+    pub fn added_cost_usd(&self, usd_per_mm2: f64) -> f64 {
+        self.area_mm2() * usd_per_mm2
+    }
+
+    /// Max context length storable for a model: 2 (K,V) × L × d per token.
+    pub fn max_context(&self, cfg: &ModelConfig) -> usize {
+        let bytes_per_token =
+            2 * cfg.n_layers * cfg.d_model * self.bytes_per_elem;
+        (self.capacity_mb * 1024.0 * 1024.0 / bytes_per_token as f64) as usize
+    }
+
+    /// Per-token latency with attention on-device for contexts that fit:
+    /// the host round trip collapses to activation streaming (paper: 50 ms
+    /// → 10 ms claim for CPU hosts).
+    pub fn latency_s(&self, cfg: &ModelConfig, context: usize, host_attention_s: f64) -> f64 {
+        if context <= self.max_context(cfg) {
+            // on-device attention: one pipeline pass, modeled at 1/5 the
+            // host cost (the paper's 50→10 ms factor)
+            host_attention_s / 5.0
+        } else {
+            host_attention_s
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_area_band() {
+        // paper says 51.2 mm²; 256 MiB × 8 × 0.02 µm² = 42.9 mm² — the
+        // paper appears to use 256e6×... we flag the delta and accept band
+        let a = KvSramOption::paper_256mb().area_mm2();
+        assert!((40.0..55.0).contains(&a), "{a}");
+    }
+
+    #[test]
+    fn context_capacity_paper_arithmetic_bug() {
+        // PAPER INCONSISTENCY (Section VII-E): "256 MB ... would enable
+        // 2K-token contexts". For Llama-2-7B at INT16 a token's K+V is
+        // 2 × 32 × 4096 × 2 B = 512 KiB, so 256 MB holds exactly **512**
+        // tokens; 2K tokens need 1 GB (or INT8 KV + a smaller model).
+        let opt = KvSramOption::paper_256mb();
+        let ctx = opt.max_context(&crate::config::ModelConfig::LLAMA2_7B);
+        assert_eq!(ctx, 512);
+        // INT8 KV on TinyLlama does clear 2K:
+        let int8 = KvSramOption { capacity_mb: 256.0, bytes_per_elem: 1 };
+        assert!(int8.max_context(&crate::config::ModelConfig::TINYLLAMA_1_1B) >= 2048);
+    }
+
+    #[test]
+    fn latency_improves_only_within_capacity() {
+        let opt = KvSramOption::paper_256mb();
+        let cfg = &crate::config::ModelConfig::LLAMA2_7B;
+        let fast = opt.latency_s(cfg, 256, 50e-3);
+        let slow = opt.latency_s(cfg, 100_000, 50e-3);
+        assert!((fast - 10e-3).abs() < 1e-9); // the paper's 50 → 10 ms
+        assert!((slow - 50e-3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn added_cost_single_digit_dollars() {
+        // paper: +$8/unit
+        let c = KvSramOption::paper_256mb().added_cost_usd(52.0 / 520.0);
+        assert!((2.0..12.0).contains(&c), "{c}");
+    }
+}

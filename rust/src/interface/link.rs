@@ -1,0 +1,133 @@
+//! Host↔device link models (paper Table III): PCIe 3.0 x4 (M.2),
+//! Thunderbolt 4, USB 3.0, USB 4.0.
+//!
+//! Each link has a line rate and an *effective* payload rate (protocol
+//! overhead included — the paper's own effective numbers), a base
+//! round-trip latency, and an incremental BOM cost.
+
+/// Link family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LinkKind {
+    Pcie3X4,
+    Thunderbolt4,
+    Usb3,
+    Usb4,
+}
+
+impl LinkKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            LinkKind::Pcie3X4 => "PCIe 3.0 x4",
+            LinkKind::Thunderbolt4 => "Thunderbolt 4",
+            LinkKind::Usb3 => "USB 3.0",
+            LinkKind::Usb4 => "USB 4.0",
+        }
+    }
+}
+
+/// A concrete link instance.
+#[derive(Debug, Clone, Copy)]
+pub struct Link {
+    pub kind: LinkKind,
+    /// Line rate, bits/s (Table III "Bandwidth (Gbps)" column).
+    pub line_gbps: f64,
+    /// Effective payload bandwidth, bytes/s (the paper's transfer numbers).
+    pub effective_bps: f64,
+    /// Per-transaction overhead (interrupt + doorbell), seconds.
+    pub base_latency_s: f64,
+    /// Added BOM cost, $ (Table III "Cost" column).
+    pub cost_usd: f64,
+}
+
+impl Link {
+    pub const fn pcie3_x4() -> Link {
+        Link {
+            kind: LinkKind::Pcie3X4,
+            line_gbps: 32.0,
+            effective_bps: 4.0e9,
+            base_latency_s: 2e-6,
+            cost_usd: 15.0,
+        }
+    }
+
+    pub const fn tb4() -> Link {
+        Link {
+            kind: LinkKind::Thunderbolt4,
+            line_gbps: 40.0,
+            effective_bps: 5.0e9,
+            base_latency_s: 4e-6,
+            cost_usd: 30.0,
+        }
+    }
+
+    pub const fn usb3() -> Link {
+        Link {
+            kind: LinkKind::Usb3,
+            line_gbps: 5.0,
+            effective_bps: 300.0e6,
+            base_latency_s: 30e-6,
+            cost_usd: 5.0,
+        }
+    }
+
+    pub const fn usb4() -> Link {
+        Link {
+            kind: LinkKind::Usb4,
+            line_gbps: 40.0,
+            effective_bps: 2.0e9,
+            base_latency_s: 10e-6,
+            cost_usd: 10.0,
+        }
+    }
+
+    pub const ALL: [Link; 4] = [Link::pcie3_x4(), Link::tb4(), Link::usb3(), Link::usb4()];
+
+    /// Time to move `bytes` across the link (payload + base overhead).
+    pub fn transfer_time_s(&self, bytes: u64) -> f64 {
+        self.base_latency_s + bytes as f64 / self.effective_bps
+    }
+
+    /// Can this link sustain `bytes_per_s`? (Eq. 11 check: every link can
+    /// carry ITA's 16.64 MB/s with orders of magnitude to spare.)
+    pub fn sustains(&self, bytes_per_s: f64) -> bool {
+        self.effective_bps >= bytes_per_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn effective_below_line_rate() {
+        for l in Link::ALL {
+            assert!(l.effective_bps * 8.0 <= l.line_gbps * 1e9, "{:?}", l.kind);
+        }
+    }
+
+    #[test]
+    fn transfer_times_match_table3() {
+        // paper transfer column: 0.21 / 0.17 / 2.77 / 0.42 ms for 832 KB
+        let bytes = 832 * 1024;
+        let ms = |l: &Link| l.transfer_time_s(bytes) * 1e3;
+        assert!((ms(&Link::pcie3_x4()) - 0.21).abs() < 0.02);
+        assert!((ms(&Link::tb4()) - 0.17).abs() < 0.02);
+        assert!((ms(&Link::usb3()) - 2.84).abs() < 0.1); // paper used 832,000 B
+        assert!((ms(&Link::usb4()) - 0.43).abs() < 0.02);
+    }
+
+    #[test]
+    fn all_links_sustain_ita_bandwidth() {
+        // Eq. 11: 16.64 MB/s sustained
+        for l in Link::ALL {
+            assert!(l.sustains(16.64e6), "{:?}", l.kind);
+        }
+    }
+
+    #[test]
+    fn cost_ordering_matches_paper() {
+        assert!(Link::usb3().cost_usd < Link::usb4().cost_usd);
+        assert!(Link::usb4().cost_usd < Link::pcie3_x4().cost_usd);
+        assert!(Link::pcie3_x4().cost_usd < Link::tb4().cost_usd);
+    }
+}

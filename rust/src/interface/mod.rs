@@ -1,0 +1,91 @@
+//! The Split-Brain interface: per-token transfer accounting (paper
+//! Eq. 7–11), link models and latency analysis (Table III), and the
+//! edge-NPU comparison (Table VIII).
+
+pub mod kv_sram;
+pub mod link;
+pub mod npu;
+pub mod protocol;
+
+pub use link::{Link, LinkKind};
+pub use protocol::TokenTraffic;
+
+/// Latency budget for one generated token over one link (Table III).
+#[derive(Debug, Clone, Copy)]
+pub struct TokenLatency {
+    pub transfer_s: f64,
+    pub device_compute_s: f64,
+    pub host_attention_s: f64,
+}
+
+impl TokenLatency {
+    pub fn total_s(&self) -> f64 {
+        self.transfer_s + self.device_compute_s + self.host_attention_s
+    }
+
+    pub fn tokens_per_s(&self) -> f64 {
+        1.0 / self.total_s()
+    }
+}
+
+/// Paper Table III fixed terms: 64 µs device pipeline, 5 ms "ideal"
+/// (NPU-offloaded) host attention.
+pub const DEVICE_COMPUTE_S: f64 = 64e-6;
+pub const HOST_ATTENTION_IDEAL_S: f64 = 5e-3;
+/// Paper's realistic laptop-CPU attention range (Section VI-C2).
+pub const HOST_ATTENTION_CPU_S: (f64, f64) = (50e-3, 100e-3);
+
+/// Table III row: token latency for `traffic` over `link` with a given
+/// host-attention time.
+pub fn token_latency(traffic: &TokenTraffic, link: &Link, host_attention_s: f64) -> TokenLatency {
+    TokenLatency {
+        transfer_s: link.transfer_time_s(traffic.total_bytes()),
+        device_compute_s: DEVICE_COMPUTE_S,
+        host_attention_s,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    #[test]
+    fn table3_pcie_row() {
+        // paper: PCIe 3.0 x4 — 0.21 ms transfer, 5.3 ms total, 188 tok/s
+        let traffic = TokenTraffic::paper_mode(&ModelConfig::LLAMA2_7B);
+        let lat = token_latency(&traffic, &Link::pcie3_x4(), HOST_ATTENTION_IDEAL_S);
+        assert!((lat.transfer_s * 1e3 - 0.21).abs() < 0.02, "{}", lat.transfer_s * 1e3);
+        assert!((lat.total_s() * 1e3 - 5.3).abs() < 0.1);
+        assert!((lat.tokens_per_s() - 188.0).abs() < 5.0, "{}", lat.tokens_per_s());
+    }
+
+    #[test]
+    fn table3_usb3_row() {
+        // paper: USB 3.0 — 2.77 ms transfer, 7.9 ms total, 126 tok/s
+        let traffic = TokenTraffic::paper_mode(&ModelConfig::LLAMA2_7B);
+        let lat = token_latency(&traffic, &Link::usb3(), HOST_ATTENTION_IDEAL_S);
+        assert!((lat.transfer_s * 1e3 - 2.8).abs() < 0.15, "{}", lat.transfer_s * 1e3);
+        assert!((lat.tokens_per_s() - 126.0).abs() < 6.0, "{}", lat.tokens_per_s());
+    }
+
+    #[test]
+    fn realistic_cpu_throughput_10_to_20() {
+        let traffic = TokenTraffic::paper_mode(&ModelConfig::LLAMA2_7B);
+        let slow = token_latency(&traffic, &Link::pcie3_x4(), HOST_ATTENTION_CPU_S.1);
+        let fast = token_latency(&traffic, &Link::pcie3_x4(), HOST_ATTENTION_CPU_S.0);
+        assert!((9.0..11.0).contains(&slow.tokens_per_s()), "{}", slow.tokens_per_s());
+        assert!((18.0..21.0).contains(&fast.tokens_per_s()), "{}", fast.tokens_per_s());
+    }
+
+    #[test]
+    fn transfer_never_dominates_on_fast_links() {
+        // the paper's design point: interface latency is negligible vs
+        // attention on anything PCIe-class
+        let traffic = TokenTraffic::paper_mode(&ModelConfig::LLAMA2_7B);
+        for link in [Link::pcie3_x4(), Link::tb4(), Link::usb4()] {
+            let lat = token_latency(&traffic, &link, HOST_ATTENTION_IDEAL_S);
+            assert!(lat.transfer_s < 0.1 * lat.host_attention_s, "{:?}", link.kind);
+        }
+    }
+}

@@ -1,0 +1,90 @@
+//! Edge-NPU comparison (paper Table VIII): static published specs for
+//! commercial NPUs plus the computed ITA row.
+
+use crate::config::ModelConfig;
+use crate::energy::{device_power_w, EnergyParams};
+
+/// One Table VIII row.
+#[derive(Debug, Clone)]
+pub struct NpuRow {
+    pub device: &'static str,
+    pub tops: Option<f64>,
+    pub power_w: f64,
+    pub throughput_tok_s: Option<(f64, f64)>,
+    pub cost_usd: Option<f64>,
+}
+
+/// Published comparison rows (paper Table VIII).
+pub fn commercial_npus() -> Vec<NpuRow> {
+    vec![
+        NpuRow {
+            device: "Apple Neural Engine",
+            tops: Some(15.8),
+            power_w: 2.0,
+            throughput_tok_s: None,
+            cost_usd: None,
+        },
+        NpuRow {
+            device: "Qualcomm Hexagon",
+            tops: Some(12.0),
+            power_w: 1.5,
+            throughput_tok_s: Some((20.0, 20.0)),
+            cost_usd: None,
+        },
+        NpuRow {
+            device: "Google Coral TPU",
+            tops: Some(4.0),
+            power_w: 2.0,
+            throughput_tok_s: None,
+            cost_usd: Some(60.0),
+        },
+    ]
+}
+
+/// The computed ITA row: power from the energy model at 20 tok/s,
+/// throughput from the realistic host-CPU scenario, cost from the paper's
+/// stated $165 (our self-consistent cost model disagrees — see
+/// `cost::tests::llama7b_chiplet_cost_structure`).
+pub fn ita_row(cfg: &ModelConfig, unit_cost_usd: f64) -> NpuRow {
+    NpuRow {
+        device: "ITA (7B Device)",
+        tops: None,
+        power_w: device_power_w(cfg, &EnergyParams::default(), 20.0),
+        throughput_tok_s: Some((10.0, 20.0)),
+        cost_usd: Some(unit_cost_usd),
+    }
+}
+
+/// Energy per token (J) at a given throughput — the efficiency metric the
+/// comparison turns on.
+pub fn energy_per_token_j(power_w: f64, tok_s: f64) -> f64 {
+    power_w / tok_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ita_row_power_near_paper() {
+        let row = ita_row(&ModelConfig::LLAMA2_7B, 165.0);
+        assert!((0.9..1.3).contains(&row.power_w), "{}", row.power_w);
+    }
+
+    #[test]
+    fn ita_beats_hexagon_energy_per_token() {
+        // Hexagon ≈1.5 W at ≈20 tok/s vs ITA ≈1.1 W at the same rate
+        let ita = ita_row(&ModelConfig::LLAMA2_7B, 165.0);
+        let hexagon = 1.5;
+        assert!(
+            energy_per_token_j(ita.power_w, 20.0) < energy_per_token_j(hexagon, 20.0)
+        );
+    }
+
+    #[test]
+    fn table8_has_four_rows() {
+        let mut rows = commercial_npus();
+        rows.push(ita_row(&ModelConfig::LLAMA2_7B, 165.0));
+        assert_eq!(rows.len(), 4);
+    }
+}

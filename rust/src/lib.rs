@@ -1,0 +1,42 @@
+//! # ITA — The Immutable Tensor Architecture
+//!
+//! Full-system reproduction of *"The Immutable Tensor Architecture: A Pure
+//! Dataflow Approach for Secure, Energy-Efficient AI Inference"* (Fang Li,
+//! CS.AR 2025).
+//!
+//! The crate is the paper's **Split-Brain host** (Fig. 1) plus every
+//! analytical substrate its evaluation uses:
+//!
+//! * [`quant`] — Logic-Aware Quantization: INT4 weights, CSD digit planes.
+//! * [`synth`] — gate-level netlist models: generic vs constant-coefficient
+//!   MACs (Table I) and the FPGA technology mapper (Tables VI/VII).
+//! * [`energy`] — per-operation energy and system power (Table II, Fig 2).
+//! * [`area`] / [`cost`] — die area, chiplets, wafer economics (Tables IV/V).
+//! * [`interface`] — Split-Brain transfer accounting (Eq. 7–11) and link
+//!   latency models (Table III), edge-NPU comparison (Table VIII).
+//! * [`security`] — model-extraction economics (Fig 3).
+//! * [`model`], [`host`], [`device`], [`coordinator`], [`runtime`] — the
+//!   runnable serving stack: paged KV cache, host attention, tokenizer,
+//!   sampler, dynamic batcher, request router, and the PJRT-backed ITA
+//!   device executing AOT-lowered HLO artifacts.
+//!
+//! Python/JAX/Pallas run only at build time (`make artifacts`); the serving
+//! path is pure rust + PJRT.
+
+pub mod area;
+pub mod config;
+pub mod coordinator;
+pub mod cost;
+pub mod device;
+pub mod energy;
+pub mod host;
+pub mod interface;
+pub mod model;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod security;
+pub mod synth;
+pub mod util;
+
+pub use config::ModelConfig;

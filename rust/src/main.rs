@@ -1,0 +1,231 @@
+//! `ita` — CLI for the Immutable Tensor Architecture reproduction.
+//!
+//! ```text
+//! ita tables [N|figN]          regenerate the paper's tables/figures
+//! ita generate [opts]          generate text through the split-brain stack
+//! ita serve [opts]             synthetic batched-serving workload + metrics
+//! ita info                     model configs and analytic summaries
+//! ```
+//!
+//! Argument parsing is hand-rolled (clap is not in the offline vendor set).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use anyhow::{anyhow, bail, Result};
+
+use ita::coordinator::engine::Engine;
+use ita::coordinator::request::GenRequest;
+use ita::coordinator::scheduler::SchedulerOpts;
+use ita::coordinator::server::Server;
+use ita::device::pjrt::PjrtDevice;
+use ita::device::sim::SimDevice;
+use ita::device::ItaDevice;
+use ita::host::embedding::EmbeddingTable;
+use ita::host::sampling::SamplingParams;
+use ita::runtime::weights::load_artifacts;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(&args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn usage() {
+    println!(
+        "usage: ita <command> [options]\n\
+         \n\
+         commands:\n\
+         \x20 tables [1-8|fig2|fig3]         regenerate paper tables/figures\n\
+         \x20 generate --prompt TEXT          one generation through the stack\n\
+         \x20 serve --requests N              synthetic serving workload\n\
+         \x20 info                            configs + analytic summary\n\
+         \n\
+         generate/serve options:\n\
+         \x20 --artifacts DIR   (default artifacts/tiny)\n\
+         \x20 --device pjrt|sim (default pjrt)\n\
+         \x20 --variant fused|csd (default fused)\n\
+         \x20 --max-tokens N    (default 32)\n\
+         \x20 --temperature F   (default 0 = greedy)\n\
+         \x20 --requests N      (serve; default 16)\n\
+         \x20 --max-active N    (serve; default device max bucket)"
+    );
+}
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let val = args.get(i + 1).cloned().unwrap_or_default();
+            out.insert(key.to_string(), val);
+            i += 2;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+fn run(args: &[String]) -> Result<()> {
+    match args.first().map(String::as_str) {
+        Some("tables") => cmd_tables(args.get(1).map(String::as_str)),
+        Some("generate") => cmd_generate(&parse_flags(&args[1..])),
+        Some("serve") => cmd_serve(&parse_flags(&args[1..])),
+        Some("info") => cmd_info(),
+        _ => {
+            usage();
+            Ok(())
+        }
+    }
+}
+
+fn cmd_tables(which: Option<&str>) -> Result<()> {
+    use ita::report;
+    let reports = match which {
+        None | Some("all") => report::all_reports(),
+        Some("1") => vec![report::table1_report()],
+        Some("2") => vec![report::table2_report()],
+        Some("3") => vec![report::table3_report(None)],
+        Some("4") => vec![report::table4_report()],
+        Some("5") => vec![report::table5_report()],
+        Some("6") => vec![report::table6_report()],
+        Some("7") => vec![report::table7_report()],
+        Some("8") => vec![report::table8_report()],
+        Some("fig2") => vec![report::fig2_report()],
+        Some("fig3") => vec![report::fig3_report()],
+        Some(other) => bail!("unknown table {other}"),
+    };
+    for r in reports {
+        r.print();
+    }
+    Ok(())
+}
+
+fn build_engine(flags: &HashMap<String, String>) -> Result<Engine> {
+    let dir = PathBuf::from(
+        flags.get("artifacts").cloned().unwrap_or_else(|| "artifacts/tiny".into()),
+    );
+    let variant = flags.get("variant").cloned().unwrap_or_else(|| "fused".into());
+    let backend = flags.get("device").cloned().unwrap_or_else(|| "pjrt".into());
+    let (m, s) = load_artifacts(&dir)?;
+    let n_heads = m.n_heads;
+    let sim = SimDevice::load(&m, &s)?;
+    let emb = EmbeddingTable::new(sim.weights().emb.clone());
+    let dev: Box<dyn ItaDevice> = match backend.as_str() {
+        "sim" => Box::new(sim),
+        "pjrt" => Box::new(PjrtDevice::load(m, &s, &variant)?),
+        other => bail!("unknown device backend {other}"),
+    };
+    Ok(Engine::new(dev, emb, n_heads))
+}
+
+fn sampling_from(flags: &HashMap<String, String>) -> SamplingParams {
+    let temp: f32 = flags.get("temperature").and_then(|v| v.parse().ok()).unwrap_or(0.0);
+    if temp <= 0.0 {
+        SamplingParams::greedy()
+    } else {
+        SamplingParams::top_k(40, temp)
+    }
+}
+
+fn cmd_generate(flags: &HashMap<String, String>) -> Result<()> {
+    let prompt = flags
+        .get("prompt")
+        .cloned()
+        .ok_or_else(|| anyhow!("--prompt required"))?;
+    let max_tokens: usize =
+        flags.get("max-tokens").and_then(|v| v.parse().ok()).unwrap_or(32);
+    let sampling = sampling_from(flags);
+    let flags2 = flags.clone();
+    let server = Server::start(move || build_engine(&flags2), SchedulerOpts::default())?;
+    let t0 = std::time::Instant::now();
+    let result = server
+        .submit(GenRequest {
+            id: 0,
+            prompt,
+            max_new_tokens: max_tokens,
+            sampling,
+            stop_at_eos: true,
+        })
+        .wait()?;
+    let dt = t0.elapsed().as_secs_f64();
+    println!("tokens ({}): {:?}", result.tokens.len(), result.tokens);
+    println!("text: {:?}", result.text);
+    println!(
+        "ttft {:.1} ms, itl {:.2} ms, {:.1} tok/s",
+        result.ttft_s * 1e3,
+        result.itl_s * 1e3,
+        result.tokens.len() as f64 / dt
+    );
+    let m = server.shutdown()?;
+    println!("{}", m.report());
+    Ok(())
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    let n: usize = flags.get("requests").and_then(|v| v.parse().ok()).unwrap_or(16);
+    let max_tokens: usize =
+        flags.get("max-tokens").and_then(|v| v.parse().ok()).unwrap_or(24);
+    let max_active: usize =
+        flags.get("max-active").and_then(|v| v.parse().ok()).unwrap_or(0);
+    let sampling = sampling_from(flags);
+    let flags2 = flags.clone();
+    let server = Server::start(
+        move || build_engine(&flags2),
+        SchedulerOpts { max_active, ..Default::default() },
+    )?;
+    let prompts = [
+        "the memory wall",
+        "immutable tensors are",
+        "energy efficient inference",
+        "one model one chip",
+    ];
+    let handles: Vec<_> = (0..n)
+        .map(|i| {
+            server.submit(GenRequest {
+                id: i as u64,
+                prompt: prompts[i % prompts.len()].to_string(),
+                max_new_tokens: max_tokens,
+                sampling,
+                stop_at_eos: false,
+            })
+        })
+        .collect();
+    for h in handles {
+        h.wait()?;
+    }
+    let m = server.shutdown()?;
+    println!("{}", m.report());
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    use ita::area::{estimate, Routing};
+    use ita::config::TechParams;
+    use ita::cost::unit_cost;
+    println!("{:<16} {:>8} {:>8} {:>6} {:>8} {:>12} {:>10}",
+             "config", "d_model", "layers", "heads", "params", "die(opt)", "unit cost");
+    let tech = TechParams::paper_28nm();
+    for cfg in ita::config::ALL_CONFIGS {
+        let est = estimate(cfg, &tech, Routing::Optimistic);
+        let cost = unit_cost(&est, &tech);
+        println!(
+            "{:<16} {:>8} {:>8} {:>6} {:>7.2}B {:>9.0}mm2 {:>10}",
+            cfg.name,
+            cfg.d_model,
+            cfg.n_layers,
+            cfg.n_heads,
+            cfg.params() as f64 / 1e9,
+            est.final_mm2,
+            ita::util::fmt::dollars(cost.total()),
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,136 @@
+//! Runtime model structures: row-major matrices and the per-layer weight
+//! pack used by the pure-rust reference device.
+
+use anyhow::Result;
+
+use crate::runtime::{Manifest, WeightStore};
+
+/// Minimal row-major f32 matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn new(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(rows * cols, data.len());
+        Mat { rows, cols, data }
+    }
+
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+}
+
+/// Quantized linear layer: integer-valued f32 weights [K, N] (recomposed
+/// INT4) + per-output-channel scale [N].
+#[derive(Debug, Clone)]
+pub struct QLinear {
+    pub k: usize,
+    pub n: usize,
+    /// Integer-valued weights (each in [-7, 7]); row-major [K, N].
+    pub w: Vec<f32>,
+    pub scale: Vec<f32>,
+}
+
+impl QLinear {
+    pub fn load(store: &WeightStore, w_name: &str, s_name: &str) -> Result<QLinear> {
+        let meta = store.meta(w_name)?;
+        anyhow::ensure!(meta.shape.len() == 2, "{w_name} not 2-D");
+        let (k, n) = (meta.shape[0], meta.shape[1]);
+        Ok(QLinear { k, n, w: store.f32(w_name)?, scale: store.f32(s_name)? })
+    }
+}
+
+/// One transformer layer's device-side weights (fused-variant blobs).
+#[derive(Debug, Clone)]
+pub struct LayerWeights {
+    pub g1: Vec<f32>,
+    pub wqkv: QLinear,
+    pub g2: Vec<f32>,
+    pub wo: QLinear,
+    pub w1: QLinear,
+    pub w3: QLinear,
+    pub w2: QLinear,
+}
+
+/// Full model weights for the rust reference device + host embedding.
+pub struct ModelWeights {
+    pub layers: Vec<LayerWeights>,
+    pub gf: Vec<f32>,
+    pub we: QLinear,
+    /// Host-side embedding lookup table [vocab, d_model] (dequantized).
+    pub emb: Mat,
+}
+
+impl ModelWeights {
+    /// Load the fused-variant weight pack for every layer.
+    pub fn load(manifest: &Manifest, store: &WeightStore) -> Result<ModelWeights> {
+        let mut layers = Vec::with_capacity(manifest.n_layers);
+        for l in 0..manifest.n_layers {
+            layers.push(LayerWeights {
+                g1: store.f32(&format!("g1_l{l}"))?,
+                wqkv: QLinear::load(store, &format!("wqkv_f32_l{l}"), &format!("wqkv_scale_l{l}"))?,
+                g2: store.f32(&format!("g2_l{l}"))?,
+                wo: QLinear::load(store, &format!("wo_f32_l{l}"), &format!("wo_scale_l{l}"))?,
+                w1: QLinear::load(store, &format!("w1_f32_l{l}"), &format!("w1_scale_l{l}"))?,
+                w3: QLinear::load(store, &format!("w3_f32_l{l}"), &format!("w3_scale_l{l}"))?,
+                w2: QLinear::load(store, &format!("w2_f32_l{l}"), &format!("w2_scale_l{l}"))?,
+            });
+        }
+        let emb_data = store.f32("emb_f32")?;
+        Ok(ModelWeights {
+            layers,
+            gf: store.f32("gf")?,
+            we: QLinear::load(store, "we_f32", "we_scale")?,
+            emb: Mat::new(manifest.vocab, manifest.d_model, emb_data),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mat_row_access() {
+        let m = Mat::new(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(m.row(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(m.row(1), &[4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mat_shape_checked() {
+        Mat::new(2, 3, vec![0.0; 5]);
+    }
+
+    #[test]
+    fn load_tiny_weights_if_present() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+        if !dir.join("MANIFEST.txt").exists() {
+            return;
+        }
+        let (m, s) = crate::runtime::weights::load_artifacts(&dir).unwrap();
+        let w = ModelWeights::load(&m, &s).unwrap();
+        assert_eq!(w.layers.len(), 2);
+        assert_eq!(w.layers[0].wqkv.k, 64);
+        assert_eq!(w.layers[0].wqkv.n, 192);
+        assert_eq!(w.emb.rows, 258);
+        // weights are integer-valued INT4
+        for &v in w.layers[0].wqkv.w.iter().take(100) {
+            assert_eq!(v, v.round());
+            assert!((-8.0..=7.0).contains(&v));
+        }
+    }
+}

@@ -1,0 +1,174 @@
+//! Canonical Signed Digit encoding (paper Section IV-C1).
+//!
+//! CSD / non-adjacent form represents an integer as `sum_i c_i * 2^(s_i)`
+//! with `c_i ∈ {-1,+1}` and no two adjacent non-zero digits — the minimal
+//!-adder representation for constant-coefficient multipliers. Example from
+//! the paper: `7 = CSD 100-1` (one subtraction, 8−1) instead of binary
+//! `0111` (three additions).
+
+/// CSD decomposition of one constant: the list of (shift, sign) terms.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Csd {
+    /// (shift amount, +1 | -1), ascending shift order.
+    pub terms: Vec<(u32, i8)>,
+}
+
+impl Csd {
+    /// Non-adjacent-form encoding of `v`. Works for any i64; the digit count
+    /// is unbounded (unlike the fixed-width plane decomposition used for
+    /// artifact export, which asserts the value fits `bits` positions).
+    pub fn encode(mut v: i64) -> Csd {
+        let mut terms = Vec::new();
+        let mut shift = 0u32;
+        while v != 0 {
+            if v & 1 != 0 {
+                let d: i64 = 2 - (v & 3); // +1 if v ≡ 1 (mod 4), -1 if v ≡ 3
+                terms.push((shift, d as i8));
+                v -= d;
+            }
+            v >>= 1;
+            shift += 1;
+        }
+        Csd { terms }
+    }
+
+    /// Reconstruct the encoded value.
+    pub fn value(&self) -> i64 {
+        self.terms
+            .iter()
+            .map(|&(s, c)| (c as i64) << s)
+            .sum()
+    }
+
+    /// Number of non-zero digits == number of shifted operands; a constant
+    /// multiplier needs `max(nnz - 1, 0)` adders (paper Eq. 6).
+    pub fn nonzero(&self) -> usize {
+        self.terms.len()
+    }
+
+    /// Adders required by the shift-add tree for this constant.
+    pub fn adders(&self) -> usize {
+        self.terms.len().saturating_sub(1)
+    }
+
+    /// Number of subtract terms (each costs an operand inverter row).
+    pub fn subtractions(&self) -> usize {
+        self.terms.iter().filter(|&&(_, c)| c < 0).count()
+    }
+
+    /// Highest shift amount (wire-routing only — zero gates).
+    pub fn max_shift(&self) -> u32 {
+        self.terms.iter().map(|&(s, _)| s).max().unwrap_or(0)
+    }
+}
+
+/// Fixed-width digit planes for `v` (matches `quantize.csd_digits`): digit
+/// for positions `0..bits`. Returns None if the NAF needs more positions.
+pub fn csd_digits(v: i64, bits: u32) -> Option<Vec<i8>> {
+    let csd = Csd::encode(v);
+    if csd.max_shift() >= bits && !csd.terms.is_empty() {
+        return None;
+    }
+    let mut digits = vec![0i8; bits as usize];
+    for (s, c) in csd.terms {
+        digits[s as usize] = c;
+    }
+    Some(digits)
+}
+
+/// Non-zero digit count of the NAF of `v`.
+pub fn csd_nonzero(v: i64) -> usize {
+    Csd::encode(v).nonzero()
+}
+
+/// Average non-zero digits over a weight value histogram — the quantity the
+/// synthesis model prices (paper: CSD cuts adders 30–40% vs binary).
+pub fn mean_nonzero_digits(values: &[i8]) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    values.iter().map(|&v| csd_nonzero(v as i64) as f64).sum::<f64>() / values.len() as f64
+}
+
+/// Binary (two's-complement magnitude) non-zero bit count, for the CSD-vs-
+/// binary adder-saving comparison the paper cites from Gustafsson [21].
+pub fn binary_nonzero(v: i64) -> usize {
+    (v.unsigned_abs()).count_ones() as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickprop::forall;
+
+    #[test]
+    fn paper_example_seven() {
+        let c = Csd::encode(7);
+        assert_eq!(c.terms, vec![(0, -1), (3, 1)]); // 8 - 1
+        assert_eq!(c.adders(), 1);
+        assert_eq!(c.subtractions(), 1);
+    }
+
+    #[test]
+    fn zero_has_no_terms() {
+        let c = Csd::encode(0);
+        assert_eq!(c.nonzero(), 0);
+        assert_eq!(c.adders(), 0);
+        assert_eq!(c.value(), 0);
+    }
+
+    #[test]
+    fn roundtrip_all_int8() {
+        for v in -128i64..=127 {
+            assert_eq!(Csd::encode(v).value(), v, "v={v}");
+        }
+    }
+
+    #[test]
+    fn non_adjacent_property() {
+        forall("NAF has no adjacent nonzeros", 500, |g| {
+            let v = g.i64_in(-(1 << 30), 1 << 30);
+            let c = Csd::encode(v);
+            for w in c.terms.windows(2) {
+                assert!(w[1].0 - w[0].0 >= 2, "adjacent digits for {v}");
+            }
+        });
+    }
+
+    #[test]
+    fn csd_never_more_nonzeros_than_binary() {
+        forall("nnz(CSD) <= nnz(binary)+? minimality", 500, |g| {
+            let v = g.i64_in(-4096, 4095);
+            // NAF is minimal-weight: never worse than binary representation
+            assert!(csd_nonzero(v) <= binary_nonzero(v).max(1));
+        });
+    }
+
+    #[test]
+    fn digits_roundtrip_int4_range() {
+        for v in -8i64..=7 {
+            let d = csd_digits(v, 4).expect("fits");
+            let rec: i64 = d.iter().enumerate().map(|(p, &c)| (c as i64) << p).sum();
+            assert_eq!(rec, v);
+        }
+        assert!(csd_digits(11, 4).is_none()); // NAF of 11 needs position 4
+    }
+
+    #[test]
+    fn int4_nonzero_at_most_two() {
+        for v in -8i64..=7 {
+            assert!(csd_nonzero(v) <= 2, "v={v}");
+        }
+    }
+
+    #[test]
+    fn csd_saves_adders_vs_binary_in_band() {
+        // Paper Section IV-C1: 30-40% fewer adders on average. Exact saving
+        // depends on the distribution; uniform INT8 constants land ~33%.
+        let all: Vec<i64> = (1..=127).collect();
+        let bin: usize = all.iter().map(|&v| binary_nonzero(v)).sum();
+        let csd: usize = all.iter().map(|&v| csd_nonzero(v)).sum();
+        let saving = 1.0 - csd as f64 / bin as f64;
+        assert!((0.15..0.45).contains(&saving), "saving={saving}");
+    }
+}

@@ -1,0 +1,131 @@
+//! Logic-Aware Quantization (paper Section IV-C), rust mirror of
+//! `python/compile/quantize.py`.
+//!
+//! The CSD (canonical signed digit / non-adjacent form) encoding here is the
+//! single source of truth for *three* consumers:
+//!
+//! 1. the [`crate::device::sim`] reference device (numerics),
+//! 2. the [`crate::synth`] gate-count models (adders = non-zero digits),
+//! 3. the FPGA mapper (shift-add LUT trees).
+
+pub mod csd;
+
+pub use csd::{csd_digits, csd_nonzero, Csd};
+
+/// Paper Section IV-C3: weights with |w| < 2^-6 are pruned; their MAC unit
+/// is never synthesized.
+pub const PRUNE_THRESHOLD: f32 = 1.0 / 64.0;
+
+/// Symmetric signed range limit for a given bit width (7 for INT4).
+pub const fn qmax(bits: u32) -> i32 {
+    (1 << (bits - 1)) - 1
+}
+
+/// Per-output-channel symmetric quantization of a K×N weight matrix
+/// (row-major, `w[k * n_cols + n]`). Returns (w_q, scale[N]).
+///
+/// Must agree bit-for-bit with `quantize.quantize_weights` (both use
+/// round-half-to-even).
+pub fn quantize_weights(w: &[f32], k: usize, n: usize, bits: u32, prune: bool) -> (Vec<i8>, Vec<f32>) {
+    assert_eq!(w.len(), k * n);
+    let q = qmax(bits) as f32;
+    let mut scale = vec![0f32; n];
+    for col in 0..n {
+        let mut m = 0f32;
+        for row in 0..k {
+            m = m.max(w[row * n + col].abs());
+        }
+        scale[col] = (m / q).max(1e-12);
+    }
+    let mut w_q = vec![0i8; k * n];
+    for row in 0..k {
+        for col in 0..n {
+            let v = (w[row * n + col] / scale[col]).round_ties_even().clamp(-q, q);
+            let mut vq = v as i8;
+            if prune && (vq as f32 * scale[col]).abs() < PRUNE_THRESHOLD {
+                vq = 0;
+            }
+            w_q[row * n + col] = vq;
+        }
+    }
+    (w_q, scale)
+}
+
+/// Per-row symmetric INT8 activation quantization; mirrors
+/// `model.quant_act` (round-half-to-even, scale floor 1e-8).
+pub fn quant_act_row(x: &[f32], a_bits: u32) -> (Vec<i8>, f32) {
+    let q = qmax(a_bits) as f32;
+    let m = x.iter().fold(0f32, |acc, v| acc.max(v.abs()));
+    let s = (m / q).max(1e-8);
+    let xq = x
+        .iter()
+        .map(|v| (v / s).round_ties_even().clamp(-q, q) as i8)
+        .collect();
+    (xq, s)
+}
+
+/// Fraction of weights whose MAC unit is eliminated (paper claims 15–25%).
+pub fn pruned_fraction(w_q: &[i8]) -> f64 {
+    if w_q.is_empty() {
+        return 0.0;
+    }
+    w_q.iter().filter(|&&v| v == 0).count() as f64 / w_q.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickprop::forall;
+
+    #[test]
+    fn qmax_values() {
+        assert_eq!(qmax(4), 7);
+        assert_eq!(qmax(8), 127);
+    }
+
+    #[test]
+    fn quantize_hits_rails() {
+        // column max must quantize to ±qmax (row-major [[0.1,-0.5],[0.2,0.25]])
+        let w = vec![0.1, -0.5, 0.2, 0.25];
+        let (wq, scale) = quantize_weights(&w, 2, 2, 4, false);
+        assert_eq!(wq[1], -7); // -0.5 is the max-abs of column 1
+        assert!((scale[1] - 0.5 / 7.0).abs() < 1e-7);
+        assert_eq!(wq[2], 7); // 0.2 is the max-abs of column 0
+    }
+
+    #[test]
+    fn prune_zeroes_small_weights() {
+        // column scale driven by the large weight; the tiny one quantizes to
+        // a dequant magnitude below 2^-6 and must be pruned.
+        let w = vec![1.0, 0.012];
+        let (wq, _) = quantize_weights(&w, 2, 1, 4, true);
+        assert_eq!(wq[0], 7);
+        assert_eq!(wq[1], 0);
+    }
+
+    #[test]
+    fn quant_act_roundtrip_error_bounded() {
+        forall("activation quant error <= scale/2", 200, |g| {
+            let n = g.usize_in(1, 64);
+            let x = g.vec_f32_normal(n);
+            let (xq, s) = quant_act_row(&x, 8);
+            for (v, q) in x.iter().zip(&xq) {
+                let dq = *q as f32 * s;
+                assert!((v - dq).abs() <= s * 0.5 + 1e-6, "{v} {dq} {s}");
+            }
+        });
+    }
+
+    #[test]
+    fn quant_act_empty_and_zero_rows() {
+        let (q, s) = quant_act_row(&[0.0; 8], 8);
+        assert!(q.iter().all(|&v| v == 0));
+        assert_eq!(s, 1e-8);
+    }
+
+    #[test]
+    fn pruned_fraction_counts() {
+        assert_eq!(pruned_fraction(&[0, 1, 0, 2]), 0.5);
+        assert_eq!(pruned_fraction(&[]), 0.0);
+    }
+}

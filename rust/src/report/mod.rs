@@ -1,0 +1,433 @@
+//! Paper-table renderers: each function regenerates one table/figure of the
+//! paper from the analytical models and returns printable rows with the
+//! paper's published value alongside ours. Shared by the CLI (`ita
+//! tables`), `examples/paper_tables.rs`, and the `benches/table*.rs`
+//! harnesses.
+
+use crate::area::{estimate, Routing};
+use crate::config::{ModelConfig, TechParams};
+use crate::cost::{cost_at_volume, unit_cost, TABLE5_VOLUMES};
+use crate::energy::{system_power, EnergyParams};
+use crate::interface::npu::{commercial_npus, ita_row};
+use crate::interface::{
+    token_latency, Link, TokenTraffic, HOST_ATTENTION_CPU_S, HOST_ATTENTION_IDEAL_S,
+};
+use crate::security::{attack_vectors, extraction_floor_usd, Target};
+use crate::synth::fpga::{proto_network_weights, table6, table7, FpgaCosts, XC7Z020};
+use crate::synth::gates::CellCosts;
+use crate::synth::mac::{sample_int4_weights, table1};
+use crate::util::fmt;
+
+/// A rendered table.
+pub struct Report {
+    pub title: String,
+    pub header: Vec<&'static str>,
+    pub rows: Vec<Vec<String>>,
+    /// Free-text notes (deviations from the paper, caveats).
+    pub notes: Vec<String>,
+}
+
+impl Report {
+    pub fn print(&self) {
+        crate::util::benchkit::print_table(
+            &self.title,
+            &self.header,
+            &self.rows,
+        );
+        for n in &self.notes {
+            println!("  note: {n}");
+        }
+    }
+}
+
+fn f1(v: f64) -> String {
+    format!("{v:.1}")
+}
+
+
+/// Table I: gate count per MAC unit.
+pub fn table1_report() -> Report {
+    let weights = sample_int4_weights(65_536, 0x17A);
+    let lit = table1(&CellCosts::asic_28nm(), &weights);
+    let cal = table1(&CellCosts::paper_calibrated(), &weights);
+    let rows = vec![
+        vec!["Generic INT8 MAC".into(), "1,180".into(),
+             fmt::thousands(lit.generic as u64), fmt::thousands(cal.generic as u64)],
+        vec!["ITA constant-coeff (expected)".into(), "243".into(),
+             fmt::thousands(lit.ita_expected as u64), fmt::thousands(cal.ita_expected as u64)],
+        vec!["ITA constant-coeff (worst)".into(), "-".into(),
+             fmt::thousands(lit.ita_worst as u64), fmt::thousands(cal.ita_worst as u64)],
+        vec!["  shift-add tree".into(), "156".into(),
+             f1(lit.ita_breakdown.multiply), f1(cal.ita_breakdown.multiply)],
+        vec!["  accumulator".into(), "68".into(),
+             f1(lit.ita_breakdown.accumulator), f1(cal.ita_breakdown.accumulator)],
+        vec!["  pipeline register".into(), "19".into(),
+             f1(lit.ita_breakdown.pipeline), f1(cal.ita_breakdown.pipeline)],
+        vec!["Reduction".into(), "4.85x".into(),
+             format!("{:.2}x", lit.reduction), format!("{:.2}x", cal.reduction)],
+    ];
+    Report {
+        title: "Table I — gate count per MAC unit (NAND2-equivalents)".into(),
+        header: vec!["Row", "Paper", "Ours (lit. cells)", "Ours (calibrated)"],
+        rows,
+        notes: vec![
+            format!(
+                "expected-case over {:.1}% pruned synthetic INT4 weights; calibrated = \
+                 same netlists, global scale pinning generic MAC to the paper's 1,180",
+                lit.pruned_fraction * 100.0
+            ),
+            "our expected-case reduction exceeds the paper's 4.85x because their ITA row \
+             prices a full-width accumulator; our spatial-regime accumulator is the \
+             tree-adder share (DESIGN.md §8)".into(),
+        ],
+    }
+}
+
+/// Table II: energy per MAC operation.
+pub fn table2_report() -> Report {
+    let e = EnergyParams::default();
+    let stacks = [e.gpu_fp16(), e.gpu_int8(), e.ita()];
+    let paper = [
+        ("GPU (FP16)", 320.0, 80.0, 1.1, 401.1),
+        ("GPU (INT8)", 160.0, 40.0, 1.0, 201.0),
+        ("ITA", 0.0, 4.0, 0.05, 4.05),
+    ];
+    let mut rows = Vec::new();
+    for (s, p) in stacks.iter().zip(paper) {
+        rows.push(vec![
+            s.name.into(),
+            format!("{} / {}", fmt::picojoules(s.dram_fetch_pj), fmt::picojoules(p.1)),
+            format!("{} / {}", fmt::picojoules(s.wire_pj), fmt::picojoules(p.2)),
+            format!("{} / {}", fmt::picojoules(s.compute_pj), fmt::picojoules(p.3)),
+            format!("{} / {}", fmt::picojoules(s.total_pj()), fmt::picojoules(p.4)),
+        ]);
+    }
+    rows.push(vec![
+        "ITA vs INT8".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        format!("{:.1}x / 49.6x", e.improvement_vs_int8()),
+    ]);
+    let sp = system_power(&ModelConfig::LLAMA2_7B, &e, 20.0);
+    Report {
+        title: "Table II — energy per MAC (ours / paper)".into(),
+        header: vec!["Arch", "DRAM fetch", "On-chip wire", "Compute", "Total"],
+        rows,
+        notes: vec![format!(
+            "system power @20 tok/s: device {:.2} W (paper 1.13), SerDes {:.1} W, host \
+             {:.0}-{:.0} W → total {:.1}-{:.1} W (paper 7-12 W)",
+            sp.device_w, sp.serdes_w, sp.host_cpu_w.0, sp.host_cpu_w.1, sp.total_w.0, sp.total_w.1
+        )],
+    }
+}
+
+/// Fig 2: stacked energy breakdown (same data as Table II, series form).
+pub fn fig2_report() -> Report {
+    let e = EnergyParams::default();
+    let mut rows = Vec::new();
+    for s in [e.gpu_fp16(), e.gpu_int8(), e.ita()] {
+        let total = s.total_pj();
+        let bar = |v: f64| "#".repeat((v / total * 40.0).round() as usize);
+        rows.push(vec![
+            s.name.into(),
+            format!("{:<40}", bar(s.dram_fetch_pj)),
+            format!("{:<40}", bar(s.wire_pj)),
+            format!("{}", fmt::picojoules(total)),
+        ]);
+    }
+    Report {
+        title: "Fig 2 — energy breakdown per parameter op (DRAM share | wire share)".into(),
+        header: vec!["Arch", "DRAM", "Wire", "Total"],
+        rows,
+        notes: vec!["ITA eliminates the dominant DRAM bar entirely".into()],
+    }
+}
+
+/// Eq. 7–11 + Table III: transfers and interface latency.
+pub fn table3_report(measured_host_attention_s: Option<f64>) -> Report {
+    let cfg = &ModelConfig::LLAMA2_7B;
+    let traffic = TokenTraffic::paper_mode(cfg);
+    let full = TokenTraffic::full_mode(cfg);
+    let paper = [(0.21, 5.3, 188.0), (0.17, 5.2, 192.0), (2.77, 7.9, 126.0), (0.42, 5.5, 182.0)];
+    let mut rows = Vec::new();
+    for (link, p) in Link::ALL.iter().zip(paper) {
+        let lat = token_latency(&traffic, link, HOST_ATTENTION_IDEAL_S);
+        rows.push(vec![
+            link.kind.name().into(),
+            format!("{:.0}", link.line_gbps),
+            format!("{:.2} / {:.2} ms", lat.transfer_s * 1e3, p.0),
+            format!("{:.1} / {:.1} ms", lat.total_s() * 1e3, p.1),
+            format!("{:.0} / {:.0}", lat.tokens_per_s(), p.2),
+            format!("+${:.0}", link.cost_usd),
+        ]);
+    }
+    let mut notes = vec![
+        format!(
+            "Eq.10: {:.0} KB/token (paper 832); Eq.11 @20 tok/s: {:.2} MB/s (paper 16.64)",
+            traffic.total_bytes() as f64 / 1024.0,
+            traffic.bandwidth_at(20.0) / 1e6
+        ),
+        format!(
+            "paper accounting omits Q (host cannot form QK^T without it); faithful \
+             protocol carries {:.0} KB/token (+{:.0}%)",
+            full.total_bytes() as f64 / 1024.0,
+            (full.total_bytes() as f64 / traffic.total_bytes() as f64 - 1.0) * 100.0
+        ),
+        {
+            let slow = token_latency(&traffic, &Link::pcie3_x4(), HOST_ATTENTION_CPU_S.1);
+            let fast = token_latency(&traffic, &Link::pcie3_x4(), HOST_ATTENTION_CPU_S.0);
+            format!(
+                "realistic CPU attention (50-100 ms): {:.0}-{:.0} tok/s (paper 10-20)",
+                slow.tokens_per_s(),
+                fast.tokens_per_s()
+            )
+        },
+    ];
+    if let Some(att) = measured_host_attention_s {
+        let lat = token_latency(&traffic, &Link::pcie3_x4(), att);
+        notes.push(format!(
+            "with OUR measured host attention ({:.2} ms for 32 layers): {:.0} tok/s",
+            att * 1e3,
+            lat.tokens_per_s()
+        ));
+    }
+    Report {
+        title: "Table III — interface comparison (ours / paper)".into(),
+        header: vec!["Interface", "Gbps", "Transfer", "Total", "tok/s", "Cost"],
+        rows,
+        notes,
+    }
+}
+
+/// Table IV: die area / configuration / cost.
+pub fn table4_report() -> Report {
+    let tech = TechParams::paper_28nm();
+    let entries: [(&ModelConfig, Routing, f64, &str); 4] = [
+        (&ModelConfig::TINYLLAMA_1_1B, Routing::Optimistic, 520.0, "$52"),
+        (&ModelConfig::LLAMA2_7B, Routing::Optimistic, 3680.0, "$165"),
+        (&ModelConfig::LLAMA2_7B, Routing::Conservative, 7885.0, "~$350"),
+        (&ModelConfig::LLAMA2_13B, Routing::Optimistic, 6760.0, "$298"),
+    ];
+    let mut rows = Vec::new();
+    for (cfg, routing, paper_area, paper_cost) in entries {
+        let est = estimate(cfg, &tech, routing);
+        let u = unit_cost(&est, &tech);
+        let config = if est.monolithic {
+            "mono".to_string()
+        } else {
+            format!("{}-chiplet", est.n_chiplets)
+        };
+        rows.push(vec![
+            format!(
+                "{}{}",
+                cfg.name,
+                if routing == Routing::Conservative { " (cons.)" } else { "" }
+            ),
+            format!("{:.1}B", cfg.params() as f64 / 1e9),
+            format!("{:.0} / {:.0} mm²", est.final_mm2, paper_area),
+            config,
+            format!("{} / {}", fmt::dollars(u.total()), paper_cost),
+        ]);
+    }
+    Report {
+        title: "Table IV — scalability analysis (ours / paper)".into(),
+        header: vec!["Model", "Params", "Die area", "Config", "Unit cost"],
+        rows,
+        notes: vec![
+            "our params use the true topology (1.2B for 'TinyLlama-1.1B'), the paper \
+             rounds down — areas land 5-10% above theirs".into(),
+            "paper's 7B cost assumes $14/chiplet, inconsistent with its own $52 for a \
+             520 mm² die; our wafer model prices 460 mm² chiplets honestly (~$40), \
+             hence the higher 7B unit cost".into(),
+        ],
+    }
+}
+
+/// Table V: cost vs production volume.
+pub fn table5_report() -> Report {
+    let tech = TechParams::paper_28nm();
+    let paper = [(314.0, 415.0), (89.0, 190.0), (66.0, 167.0)];
+    let small = unit_cost(&estimate(&ModelConfig::TINYLLAMA_1_1B, &tech, Routing::Optimistic), &tech);
+    let big = unit_cost(&estimate(&ModelConfig::LLAMA2_7B, &tech, Routing::Optimistic), &tech);
+    let mut rows = Vec::new();
+    for (&vol, p) in TABLE5_VOLUMES.iter().zip(paper.iter()) {
+        let s = cost_at_volume(&small, &tech, vol);
+        let b = cost_at_volume(&big, &tech, vol);
+        rows.push(vec![
+            fmt::thousands(vol),
+            fmt::dollars(s.nre_per_unit),
+            format!("{} / ${:.0}", fmt::dollars(s.unit_total), p.0),
+            format!("{} / ${:.0}", fmt::dollars(b.unit_total), p.1),
+        ]);
+    }
+    Report {
+        title: "Table V — manufacturing cost vs volume (ours / paper)".into(),
+        header: vec!["Volume", "NRE/unit", "1.1B cost", "7B cost"],
+        rows,
+        notes: vec!["NRE amortization matches exactly; unit deltas inherit Table IV's".into()],
+    }
+}
+
+/// Table VI: full-network FPGA utilization.
+pub fn table6_report() -> Report {
+    let t = table6(&proto_network_weights(0x17A), &FpgaCosts::default());
+    let pct = |v: f64, cap: u32| format!("{:.0}%", v / cap as f64 * 100.0);
+    let rows = vec![
+        vec!["LUTs".into(),
+             format!("{} ({})", fmt::thousands(t.baseline.luts as u64), pct(t.baseline.luts, XC7Z020.luts)),
+             "11,309 (21%)".into(),
+             format!("{} ({})", fmt::thousands(t.hardwired.luts as u64), pct(t.hardwired.luts, XC7Z020.luts)),
+             "170,502 (321%)".into()],
+        vec!["CARRY4".into(),
+             fmt::thousands(t.baseline.carry4 as u64), "1,540".into(),
+             fmt::thousands(t.hardwired.carry4 as u64), "44,442".into()],
+        vec!["Registers".into(),
+             fmt::thousands(t.baseline.registers as u64), "5,625".into(),
+             fmt::thousands(t.hardwired.registers as u64), "7,540".into()],
+        vec!["Fits xc7z020?".into(),
+             format!("{}", t.baseline_fits), "yes".into(),
+             format!("{}", t.hardwired_fits), "no".into()],
+    ];
+    Report {
+        title: format!(
+            "Table VI — 64→128→64 network on Zynq-7020 ({} MACs)",
+            fmt::thousands(t.n_macs as u64)
+        ),
+        header: vec!["Resource", "Baseline (ours)", "Baseline (paper)", "Hardwired (ours)", "Hardwired (paper)"],
+        rows,
+        notes: vec![format!(
+            "hardwired/baseline LUT ratio: {:.1}x (paper 15.1x); headline claims hold: \
+             baseline fits, hardwired exceeds the device by {:.1}x",
+            t.lut_ratio,
+            t.hardwired.luts / XC7Z020.luts as f64
+        )],
+    }
+}
+
+/// Table VII: single-neuron comparison.
+pub fn table7_report() -> Report {
+    let weights = sample_int4_weights(64, 42);
+    let t = table7(&weights, &FpgaCosts::default());
+    let rows = vec![
+        vec!["LUTs".into(), format!("{:.0}", t.generic.luts), "1,425".into(),
+             format!("{:.0}", t.hardwired.luts), "788".into()],
+        vec!["CARRY4".into(), format!("{:.0}", t.generic.carry4), "407".into(),
+             format!("{:.0}", t.hardwired.carry4), "201".into()],
+        vec!["Registers".into(), format!("{:.0}", t.generic.registers), "644".into(),
+             format!("{:.0}", t.hardwired.registers), "31".into()],
+        vec!["LUTs/MAC".into(),
+             f1(t.generic.luts / t.n_macs as f64), "22.3".into(),
+             f1(t.hardwired.luts / t.n_macs as f64), "12.3".into()],
+        vec!["LUT reduction".into(), "-".into(), "-".into(),
+             format!("{:.2}x", t.lut_reduction), "1.81x".into()],
+        vec!["Reg reduction".into(), "-".into(), "-".into(),
+             format!("{:.1}x", t.reg_reduction), "20.8x".into()],
+    ];
+    Report {
+        title: "Table VII — single neuron, 64 parallel MACs (ours vs paper)".into(),
+        header: vec!["Resource", "Generic (ours)", "Generic (paper)", "Hardwired (ours)", "Hardwired (paper)"],
+        rows,
+        notes: vec![],
+    }
+}
+
+/// Table VIII: edge-NPU comparison.
+pub fn table8_report() -> Report {
+    let tech = TechParams::paper_28nm();
+    let cost = unit_cost(&estimate(&ModelConfig::LLAMA2_7B, &tech, Routing::Optimistic), &tech);
+    let mut rows = Vec::new();
+    for r in commercial_npus() {
+        rows.push(vec![
+            r.device.into(),
+            r.tops.map_or("N/A".into(), |t| f1(t)),
+            format!("{:.1} W", r.power_w),
+            r.throughput_tok_s.map_or("N/A".into(), |(a, b)| format!("{a:.0}-{b:.0} tok/s")),
+            r.cost_usd.map_or("N/A".into(), fmt::dollars),
+        ]);
+    }
+    let ita = ita_row(&ModelConfig::LLAMA2_7B, cost.total());
+    rows.push(vec![
+        ita.device.into(),
+        "N/A".into(),
+        format!("{:.1} W (paper 1.1)", ita.power_w),
+        "10-20 tok/s".into(),
+        format!("{} (paper $165)", fmt::dollars(ita.cost_usd.unwrap())),
+    ]);
+    Report {
+        title: "Table VIII — comparison with commercial edge NPUs".into(),
+        header: vec!["Device", "TOPS", "Power", "Throughput", "Cost"],
+        rows,
+        notes: vec!["ITA power/cost rows computed from our energy/cost models".into()],
+    }
+}
+
+/// Fig 3: extraction-cost barrier.
+pub fn fig3_report() -> Report {
+    let mut rows = Vec::new();
+    for a in attack_vectors() {
+        rows.push(vec![
+            a.name.into(),
+            format!("{:?}", a.applies_to),
+            format!(
+                "{}-{}",
+                fmt::dollars(a.equipment_usd.0),
+                fmt::dollars(a.equipment_usd.1)
+            ),
+            format!("{:.0}-{:.0} d", a.time_days.0, a.time_days.1),
+            fmt::dollars(a.min_cost_usd()),
+        ]);
+    }
+    let sw = extraction_floor_usd(Target::SoftwareReadable);
+    let hw = extraction_floor_usd(Target::PhysicalLogic);
+    Report {
+        title: "Fig 3 — economic barrier to model extraction".into(),
+        header: vec!["Attack", "Target", "Equipment", "Time", "Min total"],
+        rows,
+        notes: vec![format!(
+            "extraction floor: software {} → ITA {} ({:.0}x; paper: $1-2K → $50K+, 25x)",
+            fmt::dollars(sw.max(2000.0)),
+            fmt::dollars(hw),
+            hw / sw.max(2000.0)
+        )],
+    }
+}
+
+/// All reports in paper order.
+pub fn all_reports() -> Vec<Report> {
+    vec![
+        table1_report(),
+        table2_report(),
+        fig2_report(),
+        table3_report(None),
+        table4_report(),
+        table5_report(),
+        table6_report(),
+        table7_report(),
+        table8_report(),
+        fig3_report(),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_reports_render() {
+        let reports = all_reports();
+        assert_eq!(reports.len(), 10);
+        for r in &reports {
+            assert!(!r.rows.is_empty(), "{}", r.title);
+            for row in &r.rows {
+                assert_eq!(row.len(), r.header.len(), "{}", r.title);
+            }
+        }
+    }
+
+    #[test]
+    fn table3_accepts_measured_attention() {
+        let r = table3_report(Some(0.012));
+        assert!(r.notes.iter().any(|n| n.contains("OUR measured")));
+    }
+}

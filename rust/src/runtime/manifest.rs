@@ -1,0 +1,344 @@
+//! Parser for the line-oriented artifact manifest written by
+//! `python/compile/aot.py`. Format: one record per line,
+//! `kind key=value key=value ...` (values contain no spaces).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::Block;
+
+/// Dtype of a weight blob.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I8,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i8" => Ok(Dtype::I8),
+            other => bail!("unknown dtype {other}"),
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        match self {
+            Dtype::F32 => 4,
+            Dtype::I8 => 1,
+        }
+    }
+}
+
+/// One weight blob's location inside weights.bin.
+#[derive(Debug, Clone)]
+pub struct BlobMeta {
+    pub name: String,
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+    pub offset: u64,
+    pub nbytes: u64,
+}
+
+/// One compiled program (HLO text file).
+#[derive(Debug, Clone)]
+pub struct Program {
+    pub id: String,
+    pub path: PathBuf,
+    pub block: Block,
+    pub variant: String,
+    pub bucket: usize,
+    pub nouts: usize,
+}
+
+/// Binding of (layer, block, variant, bucket) to a program + its weight
+/// blob arguments (in positional order after the runtime inputs).
+#[derive(Debug, Clone)]
+pub struct Bind {
+    /// Layer index; -1 for the (layer-independent) logits block.
+    pub layer: i32,
+    pub block: Block,
+    pub variant: String,
+    pub bucket: usize,
+    pub program: String,
+    pub blobs: Vec<String>,
+}
+
+/// Parsed MANIFEST.txt.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub config_name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub d_ffn: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub vocab: usize,
+    pub params: u64,
+    pub mode: String,
+    pub buckets: Vec<usize>,
+    pub variants: Vec<String>,
+    pub pruned_fraction: f64,
+    pub programs: HashMap<String, Program>,
+    pub binds: Vec<Bind>,
+    pub blobs: HashMap<String, BlobMeta>,
+}
+
+fn kv_fields(line: &str) -> HashMap<&str, &str> {
+    line.split_whitespace()
+        .skip(1)
+        .filter_map(|tok| tok.split_once('='))
+        .collect()
+}
+
+impl Manifest {
+    /// Load `MANIFEST.txt` from an artifact config directory
+    /// (e.g. `artifacts/tiny`).
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("MANIFEST.txt"))
+            .with_context(|| format!("reading manifest in {}", dir.display()))?;
+        let mut m = Manifest {
+            dir: dir.to_path_buf(),
+            config_name: String::new(),
+            d_model: 0,
+            n_layers: 0,
+            d_ffn: 0,
+            n_heads: 0,
+            head_dim: 0,
+            vocab: 0,
+            params: 0,
+            mode: String::new(),
+            buckets: vec![],
+            variants: vec![],
+            pruned_fraction: 0.0,
+            programs: HashMap::new(),
+            binds: vec![],
+            blobs: HashMap::new(),
+        };
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let kind = line.split_whitespace().next().unwrap();
+            let err = |msg: &str| anyhow!("manifest line {}: {msg}: {line}", lineno + 1);
+            match kind {
+                "manifest_version" => {
+                    let v: u32 = line.split_whitespace().nth(1).ok_or_else(|| err("missing"))?.parse()?;
+                    if v != 1 {
+                        bail!("unsupported manifest version {v}");
+                    }
+                }
+                "config" => {
+                    let f = kv_fields(line);
+                    let get = |k: &str| f.get(k).copied().ok_or_else(|| err(k));
+                    m.config_name = get("name")?.to_string();
+                    m.d_model = get("d_model")?.parse()?;
+                    m.n_layers = get("n_layers")?.parse()?;
+                    m.d_ffn = get("d_ffn")?.parse()?;
+                    m.n_heads = get("n_heads")?.parse()?;
+                    m.head_dim = get("head_dim")?.parse()?;
+                    m.vocab = get("vocab")?.parse()?;
+                    m.params = get("params")?.parse()?;
+                    m.mode = get("mode")?.to_string();
+                }
+                "buckets" => {
+                    m.buckets = line
+                        .split_whitespace()
+                        .nth(1)
+                        .ok_or_else(|| err("missing"))?
+                        .split(',')
+                        .map(|s| s.parse().map_err(|_| err("bad bucket")))
+                        .collect::<Result<_>>()?;
+                }
+                "variants" => {
+                    m.variants = line
+                        .split_whitespace()
+                        .nth(1)
+                        .ok_or_else(|| err("missing"))?
+                        .split(',')
+                        .map(str::to_string)
+                        .collect();
+                }
+                "pruned_fraction" => {
+                    m.pruned_fraction =
+                        line.split_whitespace().nth(1).ok_or_else(|| err("missing"))?.parse()?;
+                }
+                "program" => {
+                    let f = kv_fields(line);
+                    let get = |k: &str| f.get(k).copied().ok_or_else(|| err(k));
+                    let p = Program {
+                        id: get("id")?.to_string(),
+                        path: dir.join(get("path")?),
+                        block: Block::parse(get("block")?).ok_or_else(|| err("bad block"))?,
+                        variant: get("variant")?.to_string(),
+                        bucket: get("bucket")?.parse()?,
+                        nouts: get("nouts")?.parse()?,
+                    };
+                    m.programs.insert(p.id.clone(), p);
+                }
+                "bind" => {
+                    let f = kv_fields(line);
+                    let get = |k: &str| f.get(k).copied().ok_or_else(|| err(k));
+                    let blobs_str = get("blobs")?;
+                    m.binds.push(Bind {
+                        layer: get("layer")?.parse()?,
+                        block: Block::parse(get("block")?).ok_or_else(|| err("bad block"))?,
+                        variant: get("variant")?.to_string(),
+                        bucket: get("bucket")?.parse()?,
+                        program: get("program")?.to_string(),
+                        blobs: if blobs_str == "-" {
+                            vec![]
+                        } else {
+                            blobs_str.split(',').map(str::to_string).collect()
+                        },
+                    });
+                }
+                "blob" => {
+                    let f = kv_fields(line);
+                    let get = |k: &str| f.get(k).copied().ok_or_else(|| err(k));
+                    let b = BlobMeta {
+                        name: get("name")?.to_string(),
+                        dtype: Dtype::parse(get("dtype")?)?,
+                        shape: get("shape")?
+                            .split('x')
+                            .map(|s| s.parse().map_err(|_| err("bad shape")))
+                            .collect::<Result<_>>()?,
+                        offset: get("offset")?.parse()?,
+                        nbytes: get("nbytes")?.parse()?,
+                    };
+                    m.blobs.insert(b.name.clone(), b);
+                }
+                other => bail!("manifest line {}: unknown record {other}", lineno + 1),
+            }
+        }
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.d_model == 0 || self.n_layers == 0 {
+            bail!("manifest missing config record");
+        }
+        for b in &self.binds {
+            if !self.programs.contains_key(&b.program) {
+                bail!("bind references unknown program {}", b.program);
+            }
+            for blob in &b.blobs {
+                if !self.blobs.contains_key(blob) {
+                    bail!("bind references unknown blob {blob}");
+                }
+            }
+        }
+        for b in self.blobs.values() {
+            let elems: usize = b.shape.iter().product();
+            if elems * b.dtype.size() != b.nbytes as usize {
+                bail!("blob {} shape/nbytes mismatch", b.name);
+            }
+        }
+        Ok(())
+    }
+
+    /// Find the bind for a (layer, block, variant, bucket).
+    pub fn bind(&self, layer: i32, block: Block, variant: &str, bucket: usize) -> Option<&Bind> {
+        self.binds.iter().find(|b| {
+            b.layer == layer && b.block == block && b.variant == variant && b.bucket == bucket
+        })
+    }
+
+    /// Smallest bucket that can hold `n` rows, or the largest bucket.
+    pub fn bucket_for(&self, n: usize) -> usize {
+        self.buckets
+            .iter()
+            .copied()
+            .filter(|&b| b >= n)
+            .min()
+            .unwrap_or_else(|| self.buckets.iter().copied().max().unwrap_or(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        let mut f = std::fs::File::create(dir.join("MANIFEST.txt")).unwrap();
+        f.write_all(body.as_bytes()).unwrap();
+    }
+
+    fn minimal() -> String {
+        "manifest_version 1\n\
+         config name=t d_model=8 n_layers=1 d_ffn=16 n_heads=2 head_dim=4 vocab=10 w_bits=4 a_bits=8 params=100 mode=args seed=1\n\
+         buckets 1,2\n\
+         variants fused\n\
+         pruned_fraction 0.1\n\
+         program id=p0 path=programs/x.hlo.txt block=qkv variant=fused bucket=1 nouts=3\n\
+         bind layer=0 block=qkv variant=fused bucket=1 program=p0 blobs=g\n\
+         blob name=g dtype=f32 shape=8 offset=0 nbytes=32\n"
+            .to_string()
+    }
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join("ita_manifest_test1");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_manifest(&dir, &minimal());
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.d_model, 8);
+        assert_eq!(m.buckets, vec![1, 2]);
+        assert_eq!(m.programs.len(), 1);
+        assert_eq!(m.binds[0].blobs, vec!["g"]);
+        assert!(m.bind(0, Block::Qkv, "fused", 1).is_some());
+        assert!(m.bind(1, Block::Qkv, "fused", 1).is_none());
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let dir = std::env::temp_dir().join("ita_manifest_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_manifest(&dir, &minimal());
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.bucket_for(1), 1);
+        assert_eq!(m.bucket_for(2), 2);
+        assert_eq!(m.bucket_for(5), 2); // clamps to largest
+    }
+
+    #[test]
+    fn rejects_dangling_references() {
+        let dir = std::env::temp_dir().join("ita_manifest_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_manifest(&dir, &minimal().replace("blobs=g", "blobs=missing"));
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn rejects_shape_mismatch() {
+        let dir = std::env::temp_dir().join("ita_manifest_test4");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_manifest(&dir, &minimal().replace("nbytes=32", "nbytes=31"));
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn real_tiny_manifest_if_present() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+        if !dir.join("MANIFEST.txt").exists() {
+            eprintln!("skipping: artifacts/tiny not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.d_model, 64);
+        assert_eq!(m.n_layers, 2);
+        assert_eq!(m.mode, "baked");
+        assert!(!m.binds.is_empty());
+        // every program file exists
+        for p in m.programs.values() {
+            assert!(p.path.exists(), "{}", p.path.display());
+        }
+    }
+}

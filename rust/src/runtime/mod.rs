@@ -1,0 +1,48 @@
+//! Artifact runtime: manifest parsing, the weight-blob store, and the PJRT
+//! execution wrapper.
+//!
+//! The flow (see /opt/xla-example/load_hlo and DESIGN.md §2):
+//!
+//! 1. `make artifacts` lowers the L2 JAX device blocks to **HLO text** and
+//!    dumps weight blobs (`weights.bin`) + a line-oriented `MANIFEST.txt`.
+//! 2. [`manifest::Manifest`] parses the manifest; [`weights::WeightStore`]
+//!    memory-loads the blobs.
+//! 3. [`pjrt::PjrtRuntime`] compiles each program once
+//!    (`HloModuleProto::from_text_file` → `PjRtClient::compile`), uploads
+//!    every weight blob once as a device-resident `PjRtBuffer`, and serves
+//!    `execute` calls from the hot path with zero Python involvement.
+
+pub mod manifest;
+pub mod pjrt;
+pub mod weights;
+
+pub use manifest::{Bind, BlobMeta, Manifest, Program};
+pub use pjrt::PjrtRuntime;
+pub use weights::WeightStore;
+
+/// Device block kinds, matching aot.py's program entries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Block {
+    Qkv,
+    Ffn,
+    Logits,
+}
+
+impl Block {
+    pub fn parse(s: &str) -> Option<Block> {
+        match s {
+            "qkv" => Some(Block::Qkv),
+            "ffn" => Some(Block::Ffn),
+            "logits" => Some(Block::Logits),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Block::Qkv => "qkv",
+            Block::Ffn => "ffn",
+            Block::Logits => "logits",
+        }
+    }
+}

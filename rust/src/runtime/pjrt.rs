@@ -1,0 +1,156 @@
+//! PJRT execution wrapper: compile HLO-text programs once, keep weight
+//! blobs resident as device buffers, execute from the hot path.
+//!
+//! Interchange is HLO **text** (xla_extension 0.5.1 rejects jax≥0.5 64-bit
+//! instruction-id protos; the text parser reassigns ids — see
+//! /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::{Dtype, Manifest};
+use super::weights::WeightStore;
+use super::Block;
+
+/// Key for a compiled program instance.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ProgKey {
+    pub block: Block,
+    pub variant: String,
+    pub bucket: usize,
+    /// Only distinct per layer in baked mode (shared programs use the bind
+    /// table to pick weight buffers instead).
+    pub program_id: String,
+}
+
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    nouts: usize,
+}
+
+/// PJRT runtime: one CPU client, all programs compiled, all weights
+/// uploaded. Construction cost is paid once at startup; `execute_*` calls
+/// are allocation-light.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    programs: HashMap<String, Compiled>,
+    weight_bufs: HashMap<String, xla::PjRtBuffer>,
+    pub manifest: Manifest,
+}
+
+impl PjrtRuntime {
+    /// Compile every program in the manifest and upload every blob
+    /// referenced by at least one bind.
+    pub fn load(manifest: Manifest, weights: &WeightStore) -> Result<PjrtRuntime> {
+        let client = xla::PjRtClient::cpu().map_err(wrap)?;
+        let mut programs = HashMap::new();
+        for (id, p) in &manifest.programs {
+            let path = p
+                .path
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 path {:?}", p.path))?;
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .map_err(wrap)
+                .with_context(|| format!("parsing HLO {path}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(wrap)
+                .with_context(|| format!("compiling {id}"))?;
+            programs.insert(id.clone(), Compiled { exe, nouts: p.nouts });
+        }
+
+        let mut weight_bufs = HashMap::new();
+        for bind in &manifest.binds {
+            for name in &bind.blobs {
+                if weight_bufs.contains_key(name) {
+                    continue;
+                }
+                let meta = manifest
+                    .blobs
+                    .get(name)
+                    .ok_or_else(|| anyhow!("bind references unknown blob {name}"))?;
+                let buf = match meta.dtype {
+                    Dtype::F32 => {
+                        let data = weights.f32(name)?;
+                        client
+                            .buffer_from_host_buffer::<f32>(&data, &meta.shape, None)
+                            .map_err(wrap)?
+                    }
+                    Dtype::I8 => client
+                        .buffer_from_host_raw_bytes(
+                            xla::ElementType::S8,
+                            weights.bytes(name)?,
+                            &meta.shape,
+                            None,
+                        )
+                        .map_err(wrap)?,
+                };
+                weight_bufs.insert(name.clone(), buf);
+            }
+        }
+        Ok(PjrtRuntime { client, programs, weight_bufs, manifest })
+    }
+
+    /// Execute a bound block: runtime inputs (row-major f32 with shapes)
+    /// followed by the bind's weight buffers. Returns each output flattened
+    /// to f32.
+    pub fn execute(
+        &self,
+        layer: i32,
+        block: Block,
+        variant: &str,
+        bucket: usize,
+        inputs: &[(&[f32], &[usize])],
+    ) -> Result<Vec<Vec<f32>>> {
+        let bind = self
+            .manifest
+            .bind(layer, block, variant, bucket)
+            .ok_or_else(|| {
+                anyhow!("no bind for layer={layer} block={} variant={variant} bucket={bucket}", block.name())
+            })?;
+        let compiled = self
+            .programs
+            .get(&bind.program)
+            .ok_or_else(|| anyhow!("missing program {}", bind.program))?;
+
+        let mut args: Vec<xla::PjRtBuffer> = Vec::with_capacity(inputs.len() + bind.blobs.len());
+        for (data, shape) in inputs {
+            args.push(
+                self.client
+                    .buffer_from_host_buffer::<f32>(data, shape, None)
+                    .map_err(wrap)?,
+            );
+        }
+        let mut refs: Vec<&xla::PjRtBuffer> = args.iter().collect();
+        for name in &bind.blobs {
+            refs.push(&self.weight_bufs[name]);
+        }
+
+        let out = compiled.exe.execute_b(&refs).map_err(wrap)?;
+        let mut tuple = out[0][0].to_literal_sync().map_err(wrap)?;
+        let parts = tuple.decompose_tuple().map_err(wrap)?;
+        anyhow::ensure!(parts.len() == compiled.nouts, "expected {} outputs", compiled.nouts);
+        parts
+            .into_iter()
+            .map(|lit| lit.to_vec::<f32>().map_err(wrap))
+            .collect()
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn n_programs(&self) -> usize {
+        self.programs.len()
+    }
+
+    pub fn n_weight_buffers(&self) -> usize {
+        self.weight_bufs.len()
+    }
+}
+
+fn wrap(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e}")
+}

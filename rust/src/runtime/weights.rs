@@ -1,0 +1,135 @@
+//! Weight-blob store: loads `weights.bin` once and serves typed views.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::{BlobMeta, Dtype, Manifest};
+
+/// In-memory weight store. Blobs are validated against the manifest at load
+/// time; accessors return typed slices without copying.
+pub struct WeightStore {
+    raw: Vec<u8>,
+    blobs: HashMap<String, BlobMeta>,
+}
+
+impl WeightStore {
+    pub fn load(manifest: &Manifest) -> Result<WeightStore> {
+        let path = manifest.dir.join("weights.bin");
+        let raw = std::fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
+        let total: u64 = manifest.blobs.values().map(|b| b.nbytes).sum();
+        if total != raw.len() as u64 {
+            bail!("weights.bin is {} bytes, manifest expects {}", raw.len(), total);
+        }
+        Ok(WeightStore { raw, blobs: manifest.blobs.clone() })
+    }
+
+    /// Build an empty store (tests).
+    pub fn from_parts(raw: Vec<u8>, blobs: HashMap<String, BlobMeta>) -> WeightStore {
+        WeightStore { raw, blobs }
+    }
+
+    pub fn meta(&self, name: &str) -> Result<&BlobMeta> {
+        self.blobs.get(name).ok_or_else(|| anyhow!("unknown blob {name}"))
+    }
+
+    /// Raw bytes of a blob.
+    pub fn bytes(&self, name: &str) -> Result<&[u8]> {
+        let m = self.meta(name)?;
+        Ok(&self.raw[m.offset as usize..(m.offset + m.nbytes) as usize])
+    }
+
+    /// f32 view of a blob (copies to honour alignment).
+    pub fn f32(&self, name: &str) -> Result<Vec<f32>> {
+        let m = self.meta(name)?;
+        if m.dtype != Dtype::F32 {
+            bail!("blob {name} is not f32");
+        }
+        let b = self.bytes(name)?;
+        Ok(b.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+
+    /// i8 view of a blob.
+    pub fn i8(&self, name: &str) -> Result<Vec<i8>> {
+        let m = self.meta(name)?;
+        if m.dtype != Dtype::I8 {
+            bail!("blob {name} is not i8");
+        }
+        Ok(self.bytes(name)?.iter().map(|&b| b as i8).collect())
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.blobs.keys().map(String::as_str)
+    }
+}
+
+/// Convenience: load manifest + weights from an artifacts config dir.
+pub fn load_artifacts(dir: &Path) -> Result<(Manifest, WeightStore)> {
+    let m = Manifest::load(dir)?;
+    let w = WeightStore::load(&m)?;
+    Ok((m, w))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Dtype;
+
+    fn store_with(name: &str, dtype: Dtype, shape: Vec<usize>, raw: Vec<u8>) -> WeightStore {
+        let mut blobs = HashMap::new();
+        blobs.insert(
+            name.to_string(),
+            BlobMeta { name: name.to_string(), dtype, shape, offset: 0, nbytes: raw.len() as u64 },
+        );
+        WeightStore::from_parts(raw, blobs)
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let vals = [1.5f32, -2.25, 0.0];
+        let raw: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let s = store_with("w", Dtype::F32, vec![3], raw);
+        assert_eq!(s.f32("w").unwrap(), vals);
+    }
+
+    #[test]
+    fn i8_roundtrip() {
+        let s = store_with("p", Dtype::I8, vec![4], vec![0xFF, 0x01, 0x00, 0x80]);
+        assert_eq!(s.i8("p").unwrap(), vec![-1, 1, 0, -128]);
+    }
+
+    #[test]
+    fn dtype_mismatch_rejected() {
+        let s = store_with("p", Dtype::I8, vec![4], vec![0; 4]);
+        assert!(s.f32("p").is_err());
+        assert!(s.i8("nope").is_err());
+    }
+
+    #[test]
+    fn real_tiny_weights_if_present() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+        if !dir.join("MANIFEST.txt").exists() {
+            eprintln!("skipping: artifacts/tiny not built");
+            return;
+        }
+        let (m, w) = load_artifacts(&dir).unwrap();
+        // embedding table must exist and match [vocab, d_model]
+        let emb = w.meta("emb_f32").unwrap();
+        assert_eq!(emb.shape, vec![m.vocab, m.d_model]);
+        let vals = w.f32("emb_f32").unwrap();
+        assert_eq!(vals.len(), m.vocab * m.d_model);
+        // planes recompose to the f32 weights (cross-language CSD check)
+        let planes = w.i8("wqkv_planes_l0").unwrap();
+        let f = w.f32("wqkv_f32_l0").unwrap();
+        let kx3d = m.d_model * 3 * m.d_model;
+        assert_eq!(planes.len(), 4 * kx3d);
+        for i in 0..kx3d {
+            let mut acc = 0i32;
+            for p in 0..4 {
+                acc += (planes[p * kx3d + i] as i32) << p;
+            }
+            assert_eq!(acc as f32, f[i], "element {i}");
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! Model-extraction economics (paper Section VI-E, Fig 3): attack-vector
+//! cost model and the economic-deterrent analysis. [`dpa`] simulates the
+//! side-channel attack the paper flags as its main residual risk.
+
+pub mod dpa;
+
+/// An attack vector against deployed model weights.
+#[derive(Debug, Clone)]
+pub struct AttackVector {
+    pub name: &'static str,
+    /// Equipment cost range, $ (purchase).
+    pub equipment_usd: (f64, f64),
+    /// Facility-rental alternative, $/day (None if not rentable).
+    pub rental_usd_per_day: Option<(f64, f64)>,
+    /// Wall-clock effort range, days.
+    pub time_days: (f64, f64),
+    /// Required expertise.
+    pub skill: Skill,
+    /// Applies to which storage class.
+    pub applies_to: Target,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Skill {
+    Intermediate,
+    Expert,
+    PhdSemiconductor,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Target {
+    /// Weights in DRAM/flash behind a driver (GPU/NPU deployment).
+    SoftwareReadable,
+    /// Weights as metal/logic (ITA).
+    PhysicalLogic,
+}
+
+/// The paper's attack inventory (Section VI-E2).
+pub fn attack_vectors() -> Vec<AttackVector> {
+    vec![
+        AttackVector {
+            name: "Software dump (nvidia-smi / torch serialization)",
+            equipment_usd: (0.0, 2_000.0),
+            rental_usd_per_day: None,
+            time_days: (0.02, 0.1),
+            skill: Skill::Intermediate,
+            applies_to: Target::SoftwareReadable,
+        },
+        AttackVector {
+            name: "Physical reverse engineering (delayer + SEM + netlist)",
+            equipment_usd: (500_000.0, 2_000_000.0),
+            rental_usd_per_day: Some((5_000.0, 10_000.0)),
+            time_days: (90.0, 180.0),
+            skill: Skill::PhdSemiconductor,
+            applies_to: Target::PhysicalLogic,
+        },
+        AttackVector {
+            name: "Side-channel (DPA / EM emanation)",
+            equipment_usd: (70_000.0, 120_000.0),
+            rental_usd_per_day: None,
+            time_days: (30.0, 120.0),
+            skill: Skill::Expert,
+            applies_to: Target::PhysicalLogic,
+        },
+    ]
+}
+
+impl AttackVector {
+    /// Cheapest total cost: min(buy, rent×days) + labor (at $1k/day expert,
+    /// $2k/day PhD-level).
+    pub fn min_cost_usd(&self) -> f64 {
+        let labor_rate = match self.skill {
+            Skill::Intermediate => 400.0,
+            Skill::Expert => 1_000.0,
+            Skill::PhdSemiconductor => 2_000.0,
+        };
+        let equip = match self.rental_usd_per_day {
+            Some((lo, _)) => (lo * self.time_days.0).min(self.equipment_usd.0),
+            None => self.equipment_usd.0,
+        };
+        equip + labor_rate * self.time_days.0
+    }
+}
+
+/// Cheapest extraction cost against a storage class — Fig 3's bars.
+pub fn extraction_floor_usd(target: Target) -> f64 {
+    attack_vectors()
+        .iter()
+        .filter(|a| a.applies_to == target)
+        .map(|a| a.min_cost_usd())
+        .fold(f64::INFINITY, f64::min)
+}
+
+/// The paper's headline barrier ratio (≈25× in the text, 50–500× in the
+/// economic-impact discussion depending on the baseline).
+pub fn barrier_ratio() -> f64 {
+    extraction_floor_usd(Target::PhysicalLogic) / extraction_floor_usd(Target::SoftwareReadable).max(2_000.0)
+}
+
+/// DPA countermeasures (paper Section VI-E2 limitations): masking + noise
+/// injection cost model.
+#[derive(Debug, Clone, Copy)]
+pub struct Countermeasures {
+    /// Die-area increase (paper: 10–20%).
+    pub area_overhead: f64,
+    /// Power increase (paper: 10–20%).
+    pub power_overhead: f64,
+    /// Added unit cost, $ (paper: $2–5).
+    pub unit_cost_usd: f64,
+}
+
+pub const DPA_COUNTERMEASURES: Countermeasures =
+    Countermeasures { area_overhead: 0.15, power_overhead: 0.15, unit_cost_usd: 3.5 };
+
+/// Is extraction economically irrational for a model of a given training
+/// cost? (Paper: deterrent when extraction ≥ some fraction of retraining.)
+pub fn deterrent(training_cost_usd: f64, target: Target) -> bool {
+    extraction_floor_usd(target) >= 0.01 * training_cost_usd
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_software_floor_under_2k() {
+        let f = extraction_floor_usd(Target::SoftwareReadable);
+        assert!(f <= 2_000.0, "{f}");
+    }
+
+    #[test]
+    fn fig3_ita_floor_at_least_50k() {
+        let f = extraction_floor_usd(Target::PhysicalLogic);
+        assert!(f >= 50_000.0, "{f}");
+    }
+
+    #[test]
+    fn barrier_ratio_at_least_25x() {
+        assert!(barrier_ratio() >= 25.0, "{}", barrier_ratio());
+    }
+
+    #[test]
+    fn dpa_is_cheapest_physical_attack() {
+        // the paper's own caveat: side channels may undercut the $50K
+        // RE barrier — our model keeps DPA above it but flags the margin
+        let vs = attack_vectors();
+        let dpa = vs.iter().find(|a| a.name.contains("Side-channel")).unwrap();
+        let re = vs.iter().find(|a| a.name.contains("reverse eng")).unwrap();
+        assert!(dpa.min_cost_usd() < re.min_cost_usd() + re.equipment_usd.0);
+    }
+
+    #[test]
+    fn deterrent_for_finetuned_models() {
+        // $500K–5M fine-tuned models: ITA extraction is a real deterrent,
+        // software dump is not
+        assert!(deterrent(500_000.0, Target::PhysicalLogic));
+        assert!(!deterrent(500_000.0, Target::SoftwareReadable));
+    }
+
+    #[test]
+    fn countermeasure_bands() {
+        let c = DPA_COUNTERMEASURES;
+        assert!((0.10..=0.20).contains(&c.area_overhead));
+        assert!((2.0..=5.0).contains(&c.unit_cost_usd));
+    }
+}

@@ -1,0 +1,215 @@
+//! Standard-cell netlists and NAND2-equivalent pricing.
+
+use std::collections::BTreeMap;
+
+/// Structural cell alphabet. Arithmetic is kept at the adder/flop level —
+/// the granularity synthesis estimates are quoted at.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Cell {
+    Inv,
+    Nand2,
+    Nor2,
+    And2,
+    Or2,
+    Xor2,
+    Mux2,
+    HalfAdder,
+    FullAdder,
+    Dff,
+}
+
+pub const ALL_CELLS: [Cell; 10] = [
+    Cell::Inv,
+    Cell::Nand2,
+    Cell::Nor2,
+    Cell::And2,
+    Cell::Or2,
+    Cell::Xor2,
+    Cell::Mux2,
+    Cell::HalfAdder,
+    Cell::FullAdder,
+    Cell::Dff,
+];
+
+/// NAND2-equivalent area cost per cell.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellCosts {
+    costs: BTreeMap<Cell, f64>,
+    /// Global scale applied on top of the per-cell table (1.0 for the
+    /// literature preset; the paper-calibrated preset scales so a generic
+    /// INT8 MAC prices at the paper's 1,180 gates).
+    pub scale: f64,
+}
+
+impl CellCosts {
+    /// Literature NAND2-equivalents (Weste & Harris, 4th ed.; transistor
+    /// counts / 4T-per-NAND2): INV 0.67, AND/OR 1.5, XOR 2.5, mirror-adder
+    /// FA 7.0, HA 3.0, DFF 5.5, MUX2 2.0.
+    pub fn asic_28nm() -> Self {
+        let mut costs = BTreeMap::new();
+        costs.insert(Cell::Inv, 0.67);
+        costs.insert(Cell::Nand2, 1.0);
+        costs.insert(Cell::Nor2, 1.0);
+        costs.insert(Cell::And2, 1.5);
+        costs.insert(Cell::Or2, 1.5);
+        costs.insert(Cell::Xor2, 2.5);
+        costs.insert(Cell::Mux2, 2.0);
+        costs.insert(Cell::HalfAdder, 3.0);
+        costs.insert(Cell::FullAdder, 7.0);
+        costs.insert(Cell::Dff, 5.5);
+        CellCosts { costs, scale: 1.0 }
+    }
+
+    /// Same per-cell table, globally rescaled so the generic INT8 MAC model
+    /// prices at the paper's Table I figure (1,180). The rescale is a single
+    /// multiplicative constant — it cannot change any generic/hardwired
+    /// *ratio*, which is the paper's actual claim.
+    pub fn paper_calibrated() -> Self {
+        let base = Self::asic_28nm();
+        let generic = super::multiplier::generic_mac(8, 8, 24).total(&base);
+        let mut c = base;
+        c.scale = 1180.0 / generic;
+        c
+    }
+
+    pub fn cost(&self, cell: Cell) -> f64 {
+        self.costs[&cell] * self.scale
+    }
+}
+
+/// A netlist as a bag of cells (counts), plus an estimated critical-path
+/// depth in cell levels.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Netlist {
+    counts: BTreeMap<Cell, u64>,
+    pub depth_levels: u32,
+}
+
+impl Netlist {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, cell: Cell, n: u64) -> &mut Self {
+        *self.counts.entry(cell).or_insert(0) += n;
+        self
+    }
+
+    pub fn count(&self, cell: Cell) -> u64 {
+        self.counts.get(&cell).copied().unwrap_or(0)
+    }
+
+    pub fn cell_total(&self) -> u64 {
+        self.counts.values().sum()
+    }
+
+    pub fn merge(&mut self, other: &Netlist) -> &mut Self {
+        for (cell, n) in &other.counts {
+            *self.counts.entry(*cell).or_insert(0) += n;
+        }
+        self.depth_levels = self.depth_levels.max(other.depth_levels);
+        self
+    }
+
+    /// Merge `other` as a *serial* stage: depths add.
+    pub fn chain(&mut self, other: &Netlist) -> &mut Self {
+        let d = self.depth_levels + other.depth_levels;
+        self.merge(other);
+        self.depth_levels = d;
+        self
+    }
+
+    /// NAND2-equivalent total under a cost table.
+    pub fn total(&self, costs: &CellCosts) -> f64 {
+        self.counts
+            .iter()
+            .map(|(cell, n)| costs.cost(*cell) * *n as f64)
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counts.values().all(|&n| n == 0)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (Cell, u64)> + '_ {
+        self.counts.iter().map(|(c, n)| (*c, *n))
+    }
+}
+
+/// `bits`-wide ripple-carry adder: 1 HA + (bits-1) FA; depth ≈ bits.
+pub fn ripple_adder(bits: u32) -> Netlist {
+    let mut n = Netlist::new();
+    if bits == 0 {
+        return n;
+    }
+    n.add(Cell::HalfAdder, 1);
+    n.add(Cell::FullAdder, bits as u64 - 1);
+    n.depth_levels = bits;
+    n
+}
+
+/// `bits`-wide adder with carry-in used (subtraction path): all FA.
+pub fn full_adder_row(bits: u32) -> Netlist {
+    let mut n = Netlist::new();
+    n.add(Cell::FullAdder, bits as u64);
+    n.depth_levels = bits;
+    n
+}
+
+/// `bits` D flip-flops (pipeline/accumulator register).
+pub fn register(bits: u32) -> Netlist {
+    let mut n = Netlist::new();
+    n.add(Cell::Dff, bits as u64);
+    n.depth_levels = 1;
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn netlist_counting_and_pricing() {
+        let costs = CellCosts::asic_28nm();
+        let mut n = Netlist::new();
+        n.add(Cell::FullAdder, 10).add(Cell::Dff, 4);
+        assert_eq!(n.count(Cell::FullAdder), 10);
+        assert!((n.total(&costs) - (70.0 + 22.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_and_chain_depths() {
+        let mut a = ripple_adder(8);
+        let b = ripple_adder(8);
+        let merged_depth = a.depth_levels;
+        a.merge(&b);
+        assert_eq!(a.depth_levels, merged_depth); // parallel
+        a.chain(&ripple_adder(4));
+        assert_eq!(a.depth_levels, merged_depth + 4); // serial
+    }
+
+    #[test]
+    fn ripple_adder_structure() {
+        let n = ripple_adder(24);
+        assert_eq!(n.count(Cell::FullAdder), 23);
+        assert_eq!(n.count(Cell::HalfAdder), 1);
+    }
+
+    #[test]
+    fn paper_calibration_prices_generic_mac_at_1180() {
+        let costs = CellCosts::paper_calibrated();
+        let mac = crate::synth::multiplier::generic_mac(8, 8, 24);
+        assert!((mac.total(&costs) - 1180.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn calibration_preserves_ratios() {
+        let lit = CellCosts::asic_28nm();
+        let cal = CellCosts::paper_calibrated();
+        let a = ripple_adder(16);
+        let b = register(16);
+        let r_lit = a.total(&lit) / b.total(&lit);
+        let r_cal = a.total(&cal) / b.total(&cal);
+        assert!((r_lit - r_cal).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,25 @@
+//! Logic-synthesis simulators: the paper's Section V-A analytical framework
+//! rebuilt as first-class libraries.
+//!
+//! * [`gates`] — netlists over a standard-cell alphabet, priced in
+//!   NAND2-equivalents (TSMC 28HPC+ proxy, paper [22]).
+//! * [`multiplier`] — generic (runtime-weight) array multiplier/MAC models.
+//! * [`shift_add`] — constant-coefficient shift-add trees from CSD encodings
+//!   (paper Section IV-C2): the hardwired MAC.
+//! * [`mac`] — Table I assembly: per-MAC gate counts and breakdowns.
+//! * [`fpga`] — 7-series technology mapper (LUT/CARRY4/FF) reproducing the
+//!   Zynq-7020 prototype results (Tables VI and VII).
+//!
+//! Numbers policy (DESIGN.md §8): these models compute counts from netlist
+//! *structure*; calibration constants are few, documented, and shared
+//! between the generic and hardwired paths so ratios are structural, not
+//! fitted.
+
+pub mod fpga;
+pub mod gates;
+pub mod mac;
+pub mod multiplier;
+pub mod shift_add;
+
+pub use gates::{Cell, CellCosts, Netlist};
+pub use mac::{table1, MacBreakdown, Table1};

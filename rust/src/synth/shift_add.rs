@@ -1,0 +1,162 @@
+//! Constant-coefficient shift-add trees (paper Section IV-C2).
+//!
+//! For a hardwired weight `w` with CSD terms `{(s_i, c_i)}`:
+//!
+//! * shifts are wire routing — **zero gates** (paper Eq. 6);
+//! * each extra term costs one adder of the running width;
+//! * negative terms cost an inverter row (two's-complement via carry-in);
+//! * a zero weight (pruned, Section IV-C3) synthesizes **nothing**.
+
+use super::gates::{full_adder_row, register, Cell, Netlist};
+use crate::quant::csd::Csd;
+
+/// Netlist of the shift-add tree computing `w · x` for an `a_bits` input.
+pub fn shift_add_tree(weight: i64, a_bits: u32) -> Netlist {
+    let csd = Csd::encode(weight);
+    let mut n = Netlist::new();
+    if csd.nonzero() == 0 {
+        return n; // pruned: no gates at all
+    }
+    // result width: input width + max shift + 1 sign bit
+    let width = a_bits + csd.max_shift() + 1;
+    for _ in 0..csd.adders() {
+        n.chain(&full_adder_row(width));
+    }
+    // subtraction terms: operand inverter rows (carry-in is free)
+    n.add(Cell::Inv, csd.subtractions() as u64 * width as u64);
+    n
+}
+
+/// A full hardwired MAC in the ITA *spatial* regime (paper Section IV-D):
+///
+/// * shift-add tree for the constant multiply;
+/// * its share of the accumulation: one adder of the product width — a
+///   K-input balanced tree has K−1 adders, i.e. one per contributing MAC
+///   (unlike the generic time-multiplexed PE, no 24-bit accumulator state
+///   is needed: the dataflow pipeline never revisits a partial sum);
+/// * amortized pipeline registers: deep pipelining registers each tree
+///   stage once per few levels — ≈ width/4 flops per MAC.
+///
+/// `acc_bits` caps the accumulation width (generic-baseline parity).
+pub fn hardwired_mac(weight: i64, a_bits: u32, acc_bits: u32) -> Netlist {
+    let csd = Csd::encode(weight);
+    if csd.nonzero() == 0 {
+        return Netlist::new(); // pruned weight: the entire MAC vanishes
+    }
+    let width = (a_bits + csd.max_shift() + 1).min(acc_bits);
+    let mut n = shift_add_tree(weight, a_bits);
+    n.chain(&full_adder_row(width + 1)); // accumulation-tree adder share
+    n.merge(&register((width / 4).max(2))); // amortized pipeline flops
+    n
+}
+
+/// Breakdown matching Table I's rows for one weight value.
+pub fn hardwired_mac_breakdown(weight: i64, a_bits: u32, acc_bits: u32) -> super::mac::MacBreakdown {
+    let costs = super::gates::CellCosts::asic_28nm();
+    let csd = Csd::encode(weight);
+    if csd.nonzero() == 0 {
+        return super::mac::MacBreakdown { multiply: 0.0, accumulator: 0.0, pipeline: 0.0 };
+    }
+    let width = (a_bits + csd.max_shift() + 1).min(acc_bits);
+    super::mac::MacBreakdown {
+        multiply: shift_add_tree(weight, a_bits).total(&costs),
+        accumulator: full_adder_row(width + 1).total(&costs),
+        pipeline: register((width / 4).max(2)).total(&costs),
+    }
+}
+
+/// Expected hardwired-MAC netlist cost over an empirical weight sample —
+/// the population statistic Table I's "ITA" row models.
+pub fn expected_hardwired_cost(
+    weights: &[i8],
+    a_bits: u32,
+    acc_bits: u32,
+    costs: &super::gates::CellCosts,
+) -> f64 {
+    if weights.is_empty() {
+        return 0.0;
+    }
+    let mut by_value = [0u64; 256];
+    for &w in weights {
+        by_value[(w as i16 + 128) as usize] += 1;
+    }
+    let mut total = 0.0;
+    for (idx, &count) in by_value.iter().enumerate() {
+        if count == 0 {
+            continue;
+        }
+        let v = idx as i64 - 128;
+        total += hardwired_mac(v, a_bits, acc_bits).total(costs) * count as f64;
+    }
+    total / weights.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth::gates::CellCosts;
+    use crate::util::quickprop::forall;
+
+    #[test]
+    fn zero_weight_synthesizes_nothing() {
+        assert!(shift_add_tree(0, 8).is_empty());
+        assert!(hardwired_mac(0, 8, 24).is_empty());
+    }
+
+    #[test]
+    fn power_of_two_is_free_multiply() {
+        // w = 4 = one CSD term: pure wire shift, no adders in the tree
+        let tree = shift_add_tree(4, 8);
+        assert_eq!(tree.count(Cell::FullAdder), 0);
+        assert_eq!(tree.count(Cell::Inv), 0);
+    }
+
+    #[test]
+    fn paper_example_w7_single_adder() {
+        // 7 = 8 - 1: one adder + one inverter row (the "16 gates (one
+        // adder)" example of Section IV-C2, at their narrower width)
+        let tree = shift_add_tree(7, 8);
+        assert_eq!(tree.count(Cell::FullAdder), 12); // width 8+3+1
+        assert!(tree.count(Cell::Inv) > 0); // subtraction
+    }
+
+    #[test]
+    fn hardwired_always_cheaper_than_generic_int4() {
+        let costs = CellCosts::asic_28nm();
+        let generic = crate::synth::multiplier::generic_mac(8, 4, 24).total(&costs);
+        for w in -8i64..=7 {
+            let hw = hardwired_mac(w, 8, 24).total(&costs);
+            assert!(hw < generic, "w={w}: {hw} vs {generic}");
+        }
+    }
+
+    #[test]
+    fn cost_monotonic_in_csd_terms() {
+        forall("more CSD terms never cheaper", 100, |g| {
+            let costs = CellCosts::asic_28nm();
+            let a = g.i64_in(-8, 7);
+            let b = g.i64_in(-8, 7);
+            let (ca, cb) = (Csd::encode(a), Csd::encode(b));
+            if ca.nonzero() > cb.nonzero() && ca.max_shift() >= cb.max_shift() {
+                assert!(
+                    shift_add_tree(a, 8).total(&costs) >= shift_add_tree(b, 8).total(&costs)
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn expected_cost_between_min_and_max() {
+        let costs = CellCosts::asic_28nm();
+        let weights: Vec<i8> = (-8..=7).collect();
+        let e = expected_hardwired_cost(&weights, 8, 24, &costs);
+        let max = hardwired_mac(7, 8, 24).total(&costs);
+        assert!(e > 0.0 && e < max);
+    }
+
+    #[test]
+    fn expected_cost_of_all_pruned_is_zero() {
+        let costs = CellCosts::asic_28nm();
+        assert_eq!(expected_hardwired_cost(&[0, 0, 0], 8, 24, &costs), 0.0);
+    }
+}

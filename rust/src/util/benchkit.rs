@@ -1,0 +1,145 @@
+//! Minimal criterion-style benchmarking harness (criterion is not in the
+//! offline vendor set). Each `benches/*.rs` is a `harness = false` binary
+//! that drives a [`Bencher`] and prints a stable, grep-able report.
+
+use std::time::{Duration, Instant};
+
+/// Statistics for one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl Stats {
+    pub fn mean(&self) -> Duration {
+        Duration::from_nanos(self.mean_ns as u64)
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Timing harness: warmup, then sample until `measure_time` elapses.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub measure_time: Duration,
+    pub results: Vec<Stats>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            measure_time: Duration::from_secs(1),
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(20),
+            measure_time: Duration::from_millis(200),
+            results: Vec::new(),
+        }
+    }
+
+    /// Benchmark `f`, which should return something observable (forwarded to
+    /// `std::hint::black_box` to defeat dead-code elimination).
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &Stats {
+        // warmup
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        // measure
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.measure_time || samples_ns.len() < 10 {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples_ns.push(t0.elapsed().as_nanos() as f64);
+            if samples_ns.len() >= 1_000_000 {
+                break;
+            }
+        }
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples_ns.len();
+        let mean = samples_ns.iter().sum::<f64>() / n as f64;
+        let stats = Stats {
+            name: name.to_string(),
+            iters: n as u64,
+            mean_ns: mean,
+            median_ns: samples_ns[n / 2],
+            p95_ns: samples_ns[(n as f64 * 0.95) as usize % n],
+            min_ns: samples_ns[0],
+        };
+        println!(
+            "bench {:<44} mean {:>10}  median {:>10}  p95 {:>10}  ({} iters)",
+            stats.name,
+            fmt_ns(stats.mean_ns),
+            fmt_ns(stats.median_ns),
+            fmt_ns(stats.p95_ns),
+            stats.iters
+        );
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+}
+
+/// Print a paper-style table: header + aligned rows. Used by the table
+/// benches so the regenerated rows are visually comparable to the paper.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n=== {title} ===");
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let line = |cells: &[String]| {
+        let mut s = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+        }
+        println!("{}", s.trim_end());
+    };
+    line(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    line(&widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>());
+    for row in rows {
+        line(row);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let mut b = Bencher {
+            warmup: Duration::from_millis(1),
+            measure_time: Duration::from_millis(20),
+            results: vec![],
+        };
+        let s = b.bench("noop-ish", || (0..100u64).sum::<u64>());
+        assert!(s.iters >= 10);
+        assert!(s.min_ns <= s.median_ns);
+        assert!(s.median_ns <= s.p95_ns * 1.001);
+    }
+}

@@ -1,0 +1,78 @@
+//! Formatting helpers for reports and tables.
+
+/// Format a byte count with binary units.
+pub fn bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format a count with thousands separators (1,180).
+pub fn thousands(n: u64) -> String {
+    let s = n.to_string();
+    let mut out = String::new();
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
+/// Format dollars: $52 / $1.13M style.
+pub fn dollars(v: f64) -> String {
+    if v >= 1e6 {
+        format!("${:.2}M", v / 1e6)
+    } else if v >= 10_000.0 {
+        format!("${:.0}K", v / 1e3)
+    } else {
+        format!("${v:.0}")
+    }
+}
+
+/// Format energy in pJ with sensible precision.
+pub fn picojoules(pj: f64) -> String {
+    if pj >= 100.0 {
+        format!("{pj:.1} pJ")
+    } else if pj >= 1.0 {
+        format!("{pj:.2} pJ")
+    } else {
+        format!("{pj:.3} pJ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(bytes(512), "512 B");
+        assert_eq!(bytes(16 * 1024), "16.00 KiB");
+        assert_eq!(bytes(832 * 1024), "832.00 KiB");
+    }
+
+    #[test]
+    fn thousands_separators() {
+        assert_eq!(thousands(1180), "1,180");
+        assert_eq!(thousands(243), "243");
+        assert_eq!(thousands(170502), "170,502");
+    }
+
+    #[test]
+    fn dollar_formats() {
+        assert_eq!(dollars(52.0), "$52");
+        assert_eq!(dollars(50_000.0), "$50K");
+        assert_eq!(dollars(2_500_000.0), "$2.50M");
+    }
+}

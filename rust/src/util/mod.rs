@@ -1,0 +1,13 @@
+//! Small shared utilities: deterministic PRNG, timing harness, formatting.
+//!
+//! The offline build vendors only the `xla` crate's dependency closure, so
+//! the usual suspects (rand, criterion, proptest, serde) are replaced by the
+//! minimal in-repo equivalents here and in `benchkit`/`quickprop`.
+
+pub mod benchkit;
+pub mod fmt;
+pub mod prng;
+pub mod quickprop;
+
+pub use benchkit::Bencher;
+pub use prng::Prng;

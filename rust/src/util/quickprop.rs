@@ -1,0 +1,106 @@
+//! Tiny property-testing harness (proptest is not in the offline vendor
+//! set). Deterministic: every failure reports the case seed so it can be
+//! replayed exactly.
+//!
+//! ```no_run
+//! // (no_run: rustdoc test binaries miss the libxla rpath; the same
+//! // behaviour is pinned by this module's unit tests)
+//! use ita::util::quickprop::forall;
+//! forall("addition commutes", 200, |g| {
+//!     let a = g.i64_in(-1000, 1000);
+//!     let b = g.i64_in(-1000, 1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use super::prng::Prng;
+
+/// Value generator handed to each property case.
+pub struct Gen {
+    rng: Prng,
+    pub case_seed: u64,
+}
+
+impl Gen {
+    pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+        self.rng.range_i64(lo, hi)
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range_usize(lo, hi)
+    }
+
+    pub fn f64_unit(&mut self) -> f64 {
+        self.rng.uniform()
+    }
+
+    pub fn f32_normal(&mut self) -> f32 {
+        self.rng.normal() as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn vec_f32_normal(&mut self, len: usize) -> Vec<f32> {
+        (0..len).map(|_| self.f32_normal()).collect()
+    }
+
+    pub fn vec_i8_in(&mut self, len: usize, lo: i8, hi: i8) -> Vec<i8> {
+        (0..len).map(|_| self.i64_in(lo as i64, hi as i64) as i8).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_in(0, xs.len() - 1)]
+    }
+
+    pub fn rng(&mut self) -> &mut Prng {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` random cases of `prop`. Panics (with the case seed) on the
+/// first failing case. Seed can be pinned via `ITA_QUICKPROP_SEED`.
+pub fn forall(name: &str, cases: u64, mut prop: impl FnMut(&mut Gen)) {
+    let base = std::env::var("ITA_QUICKPROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x17A_5EED_u64);
+    for case in 0..cases {
+        let case_seed = base.wrapping_add(case).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen { rng: Prng::new(case_seed), case_seed };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(e) = result {
+            eprintln!(
+                "quickprop property '{name}' failed on case {case} \
+                 (replay with ITA_QUICKPROP_SEED={base} — case seed {case_seed:#x})"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("reverse twice is identity", 50, |g| {
+            let n = g.usize_in(0, 20);
+            let v: Vec<f32> = g.vec_f32_normal(n);
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            assert_eq!(v, w);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn forall_reports_failures() {
+        forall("impossible", 50, |g| {
+            assert!(g.i64_in(0, 10) > 10);
+        });
+    }
+}

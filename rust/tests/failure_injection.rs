@@ -1,0 +1,152 @@
+//! Failure-injection tests: corrupted artifacts, bad inputs, and lifecycle
+//! edge cases must fail loudly at load time (never silently at serve time).
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use ita::device::sim::SimDevice;
+use ita::device::ItaDevice;
+use ita::host::kv_cache::PagedKvCache;
+use ita::model::Mat;
+use ita::runtime::manifest::Manifest;
+use ita::runtime::weights::{load_artifacts, WeightStore};
+
+fn tiny_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny");
+    if dir.join("MANIFEST.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/tiny not built");
+        None
+    }
+}
+
+/// Copy the tiny manifest dir into a temp dir, applying a mutation.
+fn corrupted_copy(src: &Path, name: &str, mutate: impl Fn(&Path)) -> PathBuf {
+    let dst = std::env::temp_dir().join(format!("ita_corrupt_{name}"));
+    let _ = std::fs::remove_dir_all(&dst);
+    std::fs::create_dir_all(dst.join("programs")).unwrap();
+    for f in ["MANIFEST.txt", "weights.bin"] {
+        std::fs::copy(src.join(f), dst.join(f)).unwrap();
+    }
+    for entry in std::fs::read_dir(src.join("programs")).unwrap() {
+        let p = entry.unwrap().path();
+        std::fs::copy(&p, dst.join("programs").join(p.file_name().unwrap())).unwrap();
+    }
+    mutate(&dst);
+    dst
+}
+
+#[test]
+fn truncated_weights_rejected_at_load() {
+    let Some(src) = tiny_dir() else { return };
+    let dir = corrupted_copy(&src, "truncated", |d| {
+        let raw = std::fs::read(d.join("weights.bin")).unwrap();
+        std::fs::write(d.join("weights.bin"), &raw[..raw.len() - 8]).unwrap();
+    });
+    let m = Manifest::load(&dir).unwrap();
+    assert!(WeightStore::load(&m).is_err(), "short weights.bin must fail");
+}
+
+#[test]
+fn missing_program_file_rejected_at_compile() {
+    let Some(src) = tiny_dir() else { return };
+    let dir = corrupted_copy(&src, "missing_prog", |d| {
+        // delete one program file referenced by the manifest
+        let any = std::fs::read_dir(d.join("programs")).unwrap().next().unwrap().unwrap();
+        std::fs::remove_file(any.path()).unwrap();
+    });
+    let (m, s) = load_artifacts(&dir).unwrap();
+    assert!(ita::runtime::PjrtRuntime::load(m, &s).is_err());
+}
+
+#[test]
+fn garbage_hlo_rejected_at_parse() {
+    let Some(src) = tiny_dir() else { return };
+    let dir = corrupted_copy(&src, "garbage_hlo", |d| {
+        let any = std::fs::read_dir(d.join("programs")).unwrap().next().unwrap().unwrap();
+        let mut f = std::fs::File::create(any.path()).unwrap();
+        f.write_all(b"this is not HLO text at all").unwrap();
+    });
+    let (m, s) = load_artifacts(&dir).unwrap();
+    assert!(ita::runtime::PjrtRuntime::load(m, &s).is_err());
+}
+
+#[test]
+fn manifest_garbage_line_rejected() {
+    let Some(src) = tiny_dir() else { return };
+    let dir = corrupted_copy(&src, "bad_line", |d| {
+        let mut text = std::fs::read_to_string(d.join("MANIFEST.txt")).unwrap();
+        text.push_str("\nfrobnicate everything=yes\n");
+        std::fs::write(d.join("MANIFEST.txt"), text).unwrap();
+    });
+    assert!(Manifest::load(&dir).is_err());
+}
+
+#[test]
+fn device_rejects_wrong_width_input() {
+    let Some(dir) = tiny_dir() else { return };
+    let (m, s) = load_artifacts(&dir).unwrap();
+    let mut dev = SimDevice::load(&m, &s).unwrap();
+    let wrong = Mat::zeros(1, 32); // d_model is 64
+    assert!(dev.qkv(0, &wrong).is_err());
+    assert!(dev.qkv(99, &Mat::zeros(1, 64)).is_err()); // layer out of range
+}
+
+#[test]
+fn kv_cache_append_below_committed_rejected() {
+    let mut c = PagedKvCache::new(1, 4, 2);
+    let s = c.alloc_seq();
+    c.append(s, 0, &[0.0; 4], &[0.0; 4]).unwrap();
+    c.advance(s).unwrap();
+    // rewriting history is forbidden
+    assert!(c.append_at(s, 0, 0, &[1.0; 4], &[1.0; 4]).is_err());
+    // but writing ahead (chunked prefill) is fine
+    assert!(c.append_at(s, 0, 2, &[1.0; 4], &[1.0; 4]).is_ok());
+}
+
+#[test]
+fn engine_rejects_oversized_batch() {
+    let Some(dir) = tiny_dir() else { return };
+    let (m, s) = load_artifacts(&dir).unwrap();
+    let n_heads = m.n_heads;
+    let max_bucket = m.buckets.iter().copied().max().unwrap();
+    let dev = SimDevice::load(&m, &s).unwrap();
+    let emb = ita::host::embedding::EmbeddingTable::new(dev.weights().emb.clone());
+    let mut engine = ita::coordinator::engine::Engine::new(Box::new(dev), emb, n_heads);
+    let ids: Vec<_> = (0..max_bucket + 1).map(|_| engine.new_sequence()).collect();
+    let toks = vec![1u32; max_bucket + 1];
+    assert!(engine.forward(&ids, &toks).is_err());
+}
+
+#[test]
+fn scheduler_zero_token_budget_yields_one_token() {
+    // max_new_tokens is a budget on *generated* tokens; the first sample
+    // always happens (it is the prefill's output). Documented behaviour.
+    let Some(dir) = tiny_dir() else { return };
+    let (m, s) = load_artifacts(&dir).unwrap();
+    let n_heads = m.n_heads;
+    let dev = SimDevice::load(&m, &s).unwrap();
+    let emb = ita::host::embedding::EmbeddingTable::new(dev.weights().emb.clone());
+    let engine = ita::coordinator::engine::Engine::new(Box::new(dev), emb, n_heads);
+    let mut sched = ita::coordinator::scheduler::Scheduler::new(
+        engine,
+        ita::coordinator::scheduler::SchedulerOpts::default(),
+    );
+    sched.submit(ita::coordinator::request::GenRequest::greedy(0, "x", 0));
+    let r = sched.run_to_completion().unwrap();
+    assert_eq!(r.len(), 1);
+    assert_eq!(r[0].tokens.len(), 1);
+}
+
+#[test]
+fn empty_prompt_prefill_errors_cleanly() {
+    let Some(dir) = tiny_dir() else { return };
+    let (m, s) = load_artifacts(&dir).unwrap();
+    let n_heads = m.n_heads;
+    let dev = SimDevice::load(&m, &s).unwrap();
+    let emb = ita::host::embedding::EmbeddingTable::new(dev.weights().emb.clone());
+    let mut engine = ita::coordinator::engine::Engine::new(Box::new(dev), emb, n_heads);
+    let id = engine.new_sequence();
+    assert!(engine.prefill(id, &[]).is_err());
+}

@@ -1,0 +1,75 @@
+//! Cross-cutting checks of the analytical models against the paper's
+//! headline numbers (the per-table details live in benches/; these tests
+//! pin the claims that must never regress).
+
+use ita::config::{ModelConfig, TechParams};
+use ita::energy::EnergyParams;
+use ita::interface::{token_latency, Link, TokenTraffic, HOST_ATTENTION_IDEAL_S};
+use ita::synth::gates::CellCosts;
+use ita::synth::mac::{sample_int4_weights, table1};
+
+#[test]
+fn headline_gate_reduction_direction() {
+    // Table I: hardwired MAC is several-fold smaller than generic
+    let w = sample_int4_weights(8192, 0x17A);
+    let t = table1(&CellCosts::asic_28nm(), &w);
+    assert!(t.reduction > 3.0, "{}", t.reduction);
+    assert!(t.ita_expected < t.generic);
+    assert!(t.ita_worst < t.generic);
+}
+
+#[test]
+fn headline_energy_50x() {
+    let e = EnergyParams::default();
+    let imp = e.improvement_vs_int8();
+    assert!((45.0..55.0).contains(&imp), "{imp}");
+}
+
+#[test]
+fn headline_bandwidth_16_64_mbs() {
+    let t = TokenTraffic::paper_mode(&ModelConfig::LLAMA2_7B);
+    let mbs = t.bandwidth_at(20.0) / 1e6;
+    assert!((16.0..18.0).contains(&mbs), "{mbs}");
+}
+
+#[test]
+fn headline_188_toks_on_pcie() {
+    let t = TokenTraffic::paper_mode(&ModelConfig::LLAMA2_7B);
+    let lat = token_latency(&t, &Link::pcie3_x4(), HOST_ATTENTION_IDEAL_S);
+    assert!((180.0..195.0).contains(&lat.tokens_per_s()), "{}", lat.tokens_per_s());
+}
+
+#[test]
+fn headline_security_barrier() {
+    use ita::security::{extraction_floor_usd, Target};
+    assert!(extraction_floor_usd(Target::PhysicalLogic) >= 50_000.0);
+    assert!(ita::security::barrier_ratio() >= 25.0);
+}
+
+#[test]
+fn area_cost_stack_consistent() {
+    // area estimates feed cost estimates without unit mismatches
+    use ita::area::{estimate, Routing};
+    use ita::cost::{cost_at_volume, unit_cost};
+    let tech = TechParams::paper_28nm();
+    for cfg in [&ModelConfig::TINYLLAMA_1_1B, &ModelConfig::LLAMA2_7B, &ModelConfig::LLAMA2_13B] {
+        let est = estimate(cfg, &tech, Routing::Optimistic);
+        let u = unit_cost(&est, &tech);
+        assert!(u.total() > 10.0 && u.total() < 1000.0, "{}: {}", cfg.name, u.total());
+        let vc = cost_at_volume(&u, &tech, 100_000);
+        assert!(vc.unit_total > u.total());
+    }
+}
+
+#[test]
+fn fpga_tables_direction() {
+    use ita::synth::fpga::{proto_network_weights, table6, table7, FpgaCosts, XC7Z020};
+    let costs = FpgaCosts::default();
+    let t7 = table7(&sample_int4_weights(64, 42), &costs);
+    assert!(t7.lut_reduction > 1.0);
+    assert!(t7.reg_reduction > 5.0);
+    let t6 = table6(&proto_network_weights(7), &costs);
+    assert!(t6.baseline_fits);
+    assert!(!t6.hardwired_fits);
+    assert!(t6.hardwired.luts > 3.0 * XC7Z020.luts as f64);
+}
