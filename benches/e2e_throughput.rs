@@ -1,18 +1,64 @@
-//! End-to-end serving throughput over the PJRT device — the whole-stack
-//! number §Perf tracks. Runs the tiny cartridge always; the demo-100m
-//! config when its artifacts exist (skips quietly otherwise).
+//! End-to-end serving throughput — the whole-stack number §Perf tracks.
+//!
+//! Two tiers:
+//! * **fleet sweep** (always runs): synthetic SimDevice cartridges, sweeping
+//!   cartridge count to show host-side scale-out of the stateless device
+//!   (1 → N cartridges behind the shared admission queue).
+//! * **artifact tier**: the PJRT tiny/demo-100m cartridges when artifacts
+//!   and real bindings exist (skips quietly otherwise).
+//!
 //! `cargo bench --bench e2e_throughput`
 
 use std::path::PathBuf;
 use std::time::Instant;
 
+use ita::config::ModelConfig;
 use ita::coordinator::engine::Engine;
+use ita::coordinator::fleet::Fleet;
 use ita::coordinator::request::GenRequest;
 use ita::coordinator::scheduler::{Scheduler, SchedulerOpts};
 use ita::device::pjrt::PjrtDevice;
 use ita::device::sim::SimDevice;
 use ita::host::embedding::EmbeddingTable;
 use ita::runtime::weights::load_artifacts;
+
+/// Sweep cartridge count over a fixed workload; prints aggregate tok/s and
+/// the per-cartridge request split.
+fn bench_fleet(cartridges: usize, n_requests: usize, max_tokens: usize) {
+    let fleet = Fleet::start(
+        cartridges,
+        |_id| Ok(Engine::synthetic(&ModelConfig::TINY, 0x17A)),
+        SchedulerOpts::default(),
+    )
+    .expect("fleet start");
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..n_requests)
+        .map(|i| {
+            fleet.submit(GenRequest {
+                id: i as u64,
+                prompt: "end to end fleet throughput".into(),
+                max_new_tokens: max_tokens,
+                sampling: ita::host::sampling::SamplingParams::greedy(),
+                stop_at_eos: false,
+            })
+        })
+        .collect();
+    let mut tokens = 0usize;
+    for h in handles {
+        tokens += h.wait().expect("request completes").tokens.len();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = fleet.shutdown().expect("fleet shutdown");
+    let split: Vec<u64> =
+        m.cartridges.iter().map(|c| c.serving.requests_completed).collect();
+    println!(
+        "bench e2e/fleet-sim x{cartridges:<2} {tokens:>6} tokens in {wall:>6.2}s = {:>7.1} tok/s  \
+         (split {split:?}, requeued {}, {:.1} MB interface)",
+        tokens as f64 / wall,
+        m.requeued_requests,
+        m.aggregate().interface_bytes as f64 / 1e6,
+    );
+}
 
 fn bench_config(name: &str, n_requests: usize, max_tokens: usize) -> Option<()> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts").join(name);
@@ -25,7 +71,13 @@ fn bench_config(name: &str, n_requests: usize, max_tokens: usize) -> Option<()> 
     let sim = SimDevice::load(&m, &s).ok()?;
     let emb = EmbeddingTable::new(sim.weights().emb.clone());
     let t_compile = Instant::now();
-    let dev = PjrtDevice::load(m, &s, "fused").ok()?;
+    let dev = match PjrtDevice::load(m, &s, "fused") {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("skip {name}: {e:#}");
+            return None;
+        }
+    };
     let compile_s = t_compile.elapsed().as_secs_f64();
 
     let engine = Engine::new(Box::new(dev), emb, n_heads);
@@ -56,6 +108,12 @@ fn bench_config(name: &str, n_requests: usize, max_tokens: usize) -> Option<()> 
 }
 
 fn main() {
+    // cartridge-count sweep: the stateless device makes scale-out a pure
+    // host-coordination exercise — aggregate throughput should grow until
+    // host attention threads saturate the machine
+    for cartridges in [1usize, 2, 4] {
+        bench_fleet(cartridges, 32, 16);
+    }
     bench_config("tiny", 16, 32);
     // saturate the largest compiled bucket: at the DRAM-streaming roofline
     // every extra row in a weight sweep is almost free (§Perf iteration 5)

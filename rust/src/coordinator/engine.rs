@@ -45,6 +45,14 @@ impl TrafficLedger {
     pub fn protocol_total(&self) -> u64 {
         self.protocol_d2h_bytes + self.protocol_h2d_bytes
     }
+
+    /// Accumulate another cartridge's ledger (fleet aggregation).
+    pub fn add(&mut self, other: &TrafficLedger) {
+        self.d2h_bytes += other.d2h_bytes;
+        self.h2d_bytes += other.h2d_bytes;
+        self.protocol_d2h_bytes += other.protocol_d2h_bytes;
+        self.protocol_h2d_bytes += other.protocol_h2d_bytes;
+    }
 }
 
 /// The engine: host state + a stateless device.
@@ -81,6 +89,17 @@ impl Engine {
             traffic: TrafficLedger::default(),
             tokens_processed: 0,
         }
+    }
+
+    /// Artifact-free engine over a [`SimDevice`](crate::device::sim::SimDevice)
+    /// with [`ModelWeights::synthetic`](crate::model::ModelWeights::synthetic)
+    /// weights — one simulated ITA cartridge. Deterministic under
+    /// `(cfg, seed)`; the deterministic test tier and the fleet example/bench
+    /// build their cartridges through this.
+    pub fn synthetic(cfg: &crate::config::ModelConfig, seed: u64) -> Engine {
+        let dev = crate::device::sim::SimDevice::synthetic(cfg, vec![1, 2, 4, 8], seed);
+        let emb = EmbeddingTable::new(dev.weights().emb.clone());
+        Engine::new(Box::new(dev), emb, cfg.n_heads)
     }
 
     pub fn dims(&self) -> DeviceDims {
@@ -278,6 +297,28 @@ mod tests {
         let emb = EmbeddingTable::new(dev.weights().emb.clone());
         let n_heads = m.n_heads;
         Some(Engine::new(Box::new(dev), emb, n_heads))
+    }
+
+    #[test]
+    fn synthetic_engine_runs_without_artifacts() {
+        let cfg = crate::config::ModelConfig::TINY;
+        let mut e = Engine::synthetic(&cfg, 1);
+        let s = e.new_sequence();
+        let logits = e.forward(&[s], &[256]).unwrap();
+        assert_eq!(logits.cols, cfg.vocab);
+        assert!(logits.data.iter().all(|v| v.is_finite()));
+        assert_eq!(e.seq_len(s), 1);
+    }
+
+    #[test]
+    fn synthetic_engines_deterministic_across_instances() {
+        let cfg = crate::config::ModelConfig::TINY;
+        let toks = ByteTokenizer::new().encode("det");
+        let mut a = Engine::synthetic(&cfg, 9);
+        let mut b = Engine::synthetic(&cfg, 9);
+        let sa = a.new_sequence();
+        let sb = b.new_sequence();
+        assert_eq!(a.prefill(sa, &toks).unwrap(), b.prefill(sb, &toks).unwrap());
     }
 
     #[test]

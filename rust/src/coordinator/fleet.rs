@@ -1,0 +1,561 @@
+//! Multi-cartridge fleet coordinator.
+//!
+//! The paper's Split-Brain split makes the ITA device a *stateless*
+//! operator, so scaling to heavy traffic is purely a host-coordination
+//! problem: plug in more cartridges and shard requests across them
+//! (PAPER.md §IV; the chiplet scale-out of Cambricon-LLM and the
+//! host-managed split of PIM-AI take the same route). The fleet runs N
+//! [`Worker`]s — one per cartridge, each owning its engine on its own
+//! thread — behind a shared admission queue:
+//!
+//! ```text
+//!   clients ── submit ──▶ dispatcher ──▶ worker 0 (cartridge 0, engine)
+//!                 ▲   (shared queue,  ──▶ worker 1 (cartridge 1, engine)
+//!                 │    Dispatch policy) ▶ …
+//!                 └── Done / Died / Drained events (one channel)
+//! ```
+//!
+//! * **Admission**: requests queue in the dispatcher and flow to a worker
+//!   chosen by a [`Dispatch`] policy ([`LeastLoaded`] by default), capped
+//!   at each worker's concurrent-decode capacity.
+//! * **Metrics**: each cartridge keeps its own [`ServingMetrics`] —
+//!   including its [`TrafficLedger`](super::engine::TrafficLedger), so the
+//!   paper's Eq. 7–11 interface accounting reconciles per device — and the
+//!   fleet aggregates them into a [`FleetMetrics`] snapshot.
+//! * **Recovery**: a worker panic or engine error emits
+//!   [`WorkerEvent::Died`]; the dispatcher requeues that cartridge's
+//!   in-flight requests onto healthy cartridges (restarting them from
+//!   prefill — the device holds no state to migrate). If no cartridge
+//!   survives, queued requests fail with [`FinishReason::Error`].
+//! * **Drain**: [`Fleet::shutdown`] stops admission, lets the queue and all
+//!   in-flight work finish, drains every worker, and returns the final
+//!   per-cartridge metrics.
+//!
+//! The single-engine [`Server`](super::server::Server) is the `n = 1`
+//! special case of this machinery.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::engine::Engine;
+use super::metrics::{CartridgeMetrics, FleetMetrics, ServingMetrics};
+use super::request::{FinishReason, GenRequest, GenResult};
+use super::scheduler::SchedulerOpts;
+use super::worker::{CartridgeId, Worker, WorkerEvent, WorkerMsg};
+
+/// Policy choosing the cartridge for the next queued request.
+///
+/// `loads[i]` is `Some(outstanding_requests)` for cartridges that are alive
+/// and below capacity, `None` for dead, draining, or saturated ones.
+///
+/// Contract: return the chosen index whenever any slot is `Some`; return
+/// `None` only when no slot is eligible. The dispatcher re-pumps the queue
+/// only on its next channel event, so a policy that declines an eligible
+/// slot leaves queued requests waiting until unrelated traffic arrives.
+pub trait Dispatch: Send {
+    fn pick(&mut self, loads: &[Option<usize>]) -> Option<usize>;
+}
+
+/// Send each request to the eligible cartridge with the fewest outstanding
+/// requests (ties break toward the lowest index).
+pub struct LeastLoaded;
+
+impl Dispatch for LeastLoaded {
+    fn pick(&mut self, loads: &[Option<usize>]) -> Option<usize> {
+        loads
+            .iter()
+            .enumerate()
+            .filter_map(|(i, l)| l.map(|load| (load, i)))
+            .min()
+            .map(|(_, i)| i)
+    }
+}
+
+/// Rotate through eligible cartridges regardless of load.
+pub struct RoundRobin {
+    next: usize,
+}
+
+impl RoundRobin {
+    pub fn new() -> RoundRobin {
+        RoundRobin { next: 0 }
+    }
+}
+
+impl Dispatch for RoundRobin {
+    fn pick(&mut self, loads: &[Option<usize>]) -> Option<usize> {
+        if loads.is_empty() {
+            return None;
+        }
+        for off in 0..loads.len() {
+            let i = (self.next + off) % loads.len();
+            if loads[i].is_some() {
+                self.next = (i + 1) % loads.len();
+                return Some(i);
+            }
+        }
+        None
+    }
+}
+
+/// A pending result: the original request (kept for requeue), the instant
+/// it entered the admission queue (latency metrics count from here, and it
+/// survives requeue so time lost on a dead cartridge stays visible), and
+/// the client's reply channel.
+struct Pending {
+    req: GenRequest,
+    arrived: Instant,
+    tx: Sender<GenResult>,
+}
+
+enum FleetMsg {
+    Submit(GenRequest, Sender<GenResult>),
+    Metrics(Sender<FleetMetrics>),
+    Shutdown(Sender<FleetMetrics>),
+    Event(WorkerEvent),
+}
+
+/// A pending result from [`Fleet::submit`] / `Server::submit`.
+pub struct ResultHandle {
+    rx: Receiver<GenResult>,
+}
+
+impl ResultHandle {
+    pub fn wait(self) -> Result<GenResult> {
+        self.rx.recv().map_err(|_| anyhow!("server dropped the request"))
+    }
+
+    pub fn try_get(&self) -> Option<GenResult> {
+        self.rx.try_recv().ok()
+    }
+}
+
+/// Handle to a running fleet of cartridge workers. `Sync`: any number of
+/// client threads may submit through one shared handle (the sender is
+/// mutex-guarded for portability across `mpsc::Sender` Sync-ness).
+pub struct Fleet {
+    tx: Mutex<Sender<FleetMsg>>,
+    handle: Option<JoinHandle<()>>,
+    n_cartridges: usize,
+}
+
+impl Fleet {
+    /// Start `n` cartridges with the default [`LeastLoaded`] dispatch.
+    /// `factory(id)` runs on cartridge `id`'s worker thread (the device is
+    /// not `Send`); all engines must boot or the whole start fails.
+    pub fn start<F>(n: usize, factory: F, opts: SchedulerOpts) -> Result<Fleet>
+    where
+        F: Fn(CartridgeId) -> Result<Engine> + Send + Sync + 'static,
+    {
+        Fleet::with_dispatch(n, factory, opts, Box::new(LeastLoaded))
+    }
+
+    /// [`Fleet::start`] with an explicit dispatch policy.
+    pub fn with_dispatch<F>(
+        n: usize,
+        factory: F,
+        opts: SchedulerOpts,
+        dispatch: Box<dyn Dispatch>,
+    ) -> Result<Fleet>
+    where
+        F: Fn(CartridgeId) -> Result<Engine> + Send + Sync + 'static,
+    {
+        if n == 0 {
+            bail!("a fleet needs at least one cartridge");
+        }
+        let factory = Arc::new(factory);
+        let (tx, rx) = channel::<FleetMsg>();
+        let mut slots: Vec<Slot> = (0..n)
+            .map(|id| {
+                let f = Arc::clone(&factory);
+                let worker =
+                    Worker::spawn(id, move || f(id), opts, tx.clone(), FleetMsg::Event);
+                Slot::new(worker)
+            })
+            .collect();
+
+        // boot barrier: every cartridge reports Ready (with its capacity)
+        // or the start fails
+        let mut ready = 0;
+        while ready < n {
+            match rx.recv() {
+                Ok(FleetMsg::Event(WorkerEvent::Ready(id, capacity))) => {
+                    slots[id].capacity = capacity.max(1);
+                    ready += 1;
+                }
+                Ok(FleetMsg::Event(WorkerEvent::BootFailed(id, msg))) => {
+                    bail!("cartridge {id} failed to boot: {msg}");
+                }
+                Ok(_) => {}
+                Err(_) => bail!("fleet workers died during startup"),
+            }
+        }
+
+        let handle = std::thread::Builder::new()
+            .name("ita-fleet-dispatch".into())
+            .spawn(move || dispatcher(slots, rx, dispatch))
+            .expect("spawn fleet dispatcher thread");
+        Ok(Fleet { tx: Mutex::new(tx), handle: Some(handle), n_cartridges: n })
+    }
+
+    pub fn cartridges(&self) -> usize {
+        self.n_cartridges
+    }
+
+    fn send(&self, msg: FleetMsg) -> Result<()> {
+        self.tx
+            .lock()
+            .map_err(|_| anyhow!("fleet sender poisoned"))?
+            .send(msg)
+            .map_err(|_| anyhow!("fleet gone"))
+    }
+
+    /// Submit a request; returns a handle to await the result.
+    pub fn submit(&self, req: GenRequest) -> ResultHandle {
+        let (tx, rx) = channel();
+        let _ = self.send(FleetMsg::Submit(req, tx));
+        ResultHandle { rx }
+    }
+
+    /// Live fleet snapshot with per-cartridge breakdowns.
+    pub fn metrics(&self) -> Result<FleetMetrics> {
+        let (tx, rx) = channel();
+        self.send(FleetMsg::Metrics(tx))?;
+        rx.recv().map_err(|_| anyhow!("fleet gone"))
+    }
+
+    /// Stop admission, drain all in-flight work, stop every worker; returns
+    /// final metrics.
+    pub fn shutdown(mut self) -> Result<FleetMetrics> {
+        let (tx, rx) = channel();
+        self.send(FleetMsg::Shutdown(tx))?;
+        let m = rx.recv().map_err(|_| anyhow!("fleet gone"))?;
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        Ok(m)
+    }
+}
+
+impl Drop for Fleet {
+    fn drop(&mut self) {
+        if let Some(h) = self.handle.take() {
+            let (tx, _rx) = channel();
+            let _ = self.send(FleetMsg::Shutdown(tx));
+            let _ = h.join();
+        }
+    }
+}
+
+/// Dispatcher-side view of one worker.
+struct Slot {
+    worker: Worker,
+    capacity: usize,
+    /// Died (panic / engine error / closed channel).
+    dead: bool,
+    drain_sent: bool,
+    drained: Option<ServingMetrics>,
+    /// ticket → pending result, for completion routing and requeue.
+    in_flight: HashMap<u64, Pending>,
+}
+
+impl Slot {
+    fn new(worker: Worker) -> Slot {
+        Slot {
+            worker,
+            capacity: 1,
+            dead: false,
+            drain_sent: false,
+            drained: None,
+            in_flight: HashMap::new(),
+        }
+    }
+
+    /// Can this slot still be handed new work?
+    fn accepting(&self) -> bool {
+        !self.dead && !self.drain_sent && self.drained.is_none()
+    }
+}
+
+fn failed_result(req: &GenRequest) -> GenResult {
+    GenResult {
+        id: req.id,
+        prompt_tokens: 0,
+        tokens: Vec::new(),
+        text: String::new(),
+        ttft_s: 0.0,
+        itl_s: 0.0,
+        total_s: 0.0,
+        finish: FinishReason::Error,
+    }
+}
+
+fn dispatcher(mut slots: Vec<Slot>, rx: Receiver<FleetMsg>, mut dispatch: Box<dyn Dispatch>) {
+    let started = Instant::now();
+    let mut queue: VecDeque<Pending> = VecDeque::new();
+    let mut next_ticket: u64 = 0;
+    let mut requeued: u64 = 0;
+    let mut failed: u64 = 0;
+    let mut shutdown_reply: Option<Sender<FleetMetrics>> = None;
+
+    loop {
+        let msg = match rx.recv() {
+            Ok(m) => m,
+            // all handles (fleet + workers) gone: nothing left to do
+            Err(_) => return,
+        };
+        match msg {
+            FleetMsg::Submit(req, tx) => {
+                if shutdown_reply.is_none() {
+                    queue.push_back(Pending { req, arrived: Instant::now(), tx });
+                }
+                // after shutdown: drop tx — the client's wait() errors out
+            }
+            FleetMsg::Metrics(reply) => {
+                let _ = reply.send(snapshot(&slots, started, requeued, failed));
+            }
+            FleetMsg::Shutdown(reply) => {
+                shutdown_reply = Some(reply);
+            }
+            FleetMsg::Event(WorkerEvent::Done(w, mut result)) => {
+                // on the wire the request id IS the ticket (see pump), so
+                // routing is exact even when clients reuse ids; restore the
+                // client's id before replying
+                if let Some(p) = slots[w].in_flight.remove(&result.id) {
+                    result.id = p.req.id;
+                    let _ = p.tx.send(result);
+                }
+            }
+            FleetMsg::Event(WorkerEvent::Died(w, reason)) => {
+                eprintln!("[ita-fleet] cartridge {w} died: {reason}");
+                let slot = &mut slots[w];
+                slot.dead = true;
+                let mut orphans: Vec<Pending> =
+                    slot.in_flight.drain().map(|(_, p)| p).collect();
+                requeued += orphans.len() as u64;
+                // orphans have waited longest: resume them ahead of fresher
+                // queued work, earliest arrival first (FCFS holds even
+                // across a cartridge death, and the order is deterministic)
+                orphans.sort_by_key(|p| p.arrived);
+                for p in orphans.into_iter().rev() {
+                    queue.push_front(p);
+                }
+            }
+            FleetMsg::Event(WorkerEvent::Drained(w, metrics)) => {
+                slots[w].drained = Some(metrics);
+            }
+            // Ready/BootFailed are consumed by the boot barrier
+            FleetMsg::Event(_) => {}
+        }
+
+        pump(&mut slots, &mut queue, dispatch.as_mut(), &mut next_ticket, &mut failed);
+
+        if let Some(reply) = &shutdown_reply {
+            if try_finish(&mut slots, &queue, started, requeued, failed, reply) {
+                return;
+            }
+        }
+    }
+}
+
+/// Assign queued requests to cartridges until the queue empties or every
+/// eligible cartridge is at capacity.
+fn pump(
+    slots: &mut [Slot],
+    queue: &mut VecDeque<Pending>,
+    dispatch: &mut dyn Dispatch,
+    next_ticket: &mut u64,
+    failed: &mut u64,
+) {
+    while !queue.is_empty() {
+        if !slots.iter().any(Slot::accepting) {
+            // total fleet loss: fail everything still queued, loudly
+            while let Some(p) = queue.pop_front() {
+                *failed += 1;
+                let _ = p.tx.send(failed_result(&p.req));
+            }
+            return;
+        }
+        let loads: Vec<Option<usize>> = slots
+            .iter()
+            .map(|s| {
+                (s.accepting() && s.in_flight.len() < s.capacity).then(|| s.in_flight.len())
+            })
+            .collect();
+        let Some(w) = dispatch.pick(&loads) else { return };
+        if loads.get(w).copied().flatten().is_none() {
+            return; // defensive: policy picked an ineligible cartridge
+        }
+        let p = queue.pop_front().expect("queue non-empty");
+        // rewrite the id on the wire to a fleet-unique ticket so completion
+        // routing stays exact even when clients reuse request ids; the
+        // client-visible id is restored from `Pending::req` on Done
+        let ticket = *next_ticket;
+        *next_ticket += 1;
+        let mut wire_req = p.req.clone();
+        wire_req.id = ticket;
+        if slots[w].worker.send(WorkerMsg::Submit(wire_req, p.arrived)) {
+            slots[w].in_flight.insert(ticket, p);
+        } else {
+            // channel closed without a Died event (shouldn't happen) —
+            // mark dead and retry the request elsewhere
+            slots[w].dead = true;
+            queue.push_front(p);
+        }
+    }
+}
+
+/// During shutdown: once the queue and every in-flight map are empty, drain
+/// all workers; once every worker has drained (or died), reply and finish.
+fn try_finish(
+    slots: &mut [Slot],
+    queue: &VecDeque<Pending>,
+    started: Instant,
+    requeued: u64,
+    failed: u64,
+    reply: &Sender<FleetMetrics>,
+) -> bool {
+    if !queue.is_empty() || slots.iter().any(|s| !s.in_flight.is_empty()) {
+        return false;
+    }
+    for s in slots.iter_mut() {
+        if s.accepting() {
+            s.drain_sent = true;
+            if !s.worker.send(WorkerMsg::Drain) {
+                s.dead = true;
+            }
+        }
+    }
+    if slots.iter().all(|s| s.dead || s.drained.is_some()) {
+        for s in slots.iter_mut() {
+            s.worker.join();
+        }
+        let _ = reply.send(snapshot(slots, started, requeued, failed));
+        return true;
+    }
+    false
+}
+
+/// Assemble a [`FleetMetrics`] from drained metrics where final, live
+/// snapshots where possible, and defaults for dead cartridges. Live
+/// snapshots block until each busy worker finishes its current step (exact
+/// counters, like the pre-fleet `Server::metrics()`); a cartridge whose
+/// worker died before its Died event was processed reports zeroed counters
+/// for that snapshot.
+fn snapshot(slots: &[Slot], started: Instant, requeued: u64, failed: u64) -> FleetMetrics {
+    // fan all snapshot requests out first, then collect: concurrent slow
+    // workers overlap their waits instead of stalling the dispatcher for
+    // one timeout per cartridge
+    let replies: Vec<Option<Receiver<ServingMetrics>>> = slots
+        .iter()
+        .map(|s| {
+            if s.dead || s.drained.is_some() {
+                return None;
+            }
+            let (tx, rx) = channel();
+            s.worker.send(WorkerMsg::Snapshot(tx)).then_some(rx)
+        })
+        .collect();
+    let cartridges = slots
+        .iter()
+        .zip(replies)
+        .map(|(s, rx)| {
+            let serving = if let Some(m) = &s.drained {
+                m.clone()
+            } else if let Some(rx) = rx {
+                // block until the worker replies between steps — exact
+                // counters, like the pre-fleet Server::metrics(); the recv
+                // only errs if the worker died mid-request (then its
+                // engine-side counters are gone anyway)
+                rx.recv().unwrap_or_default()
+            } else {
+                ServingMetrics::default()
+            };
+            CartridgeMetrics { cartridge: s.worker.id, alive: !s.dead, serving }
+        })
+        .collect();
+    FleetMetrics {
+        cartridges,
+        requeued_requests: requeued,
+        failed_requests: failed,
+        wall_s: started.elapsed().as_secs_f64(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    #[test]
+    fn least_loaded_picks_minimum() {
+        let mut d = LeastLoaded;
+        assert_eq!(d.pick(&[Some(3), Some(1), Some(2)]), Some(1));
+        assert_eq!(d.pick(&[None, Some(5), None]), Some(1));
+        assert_eq!(d.pick(&[None, None]), None);
+        assert_eq!(d.pick(&[]), None);
+        // ties break toward the lowest index
+        assert_eq!(d.pick(&[Some(2), Some(2)]), Some(0));
+    }
+
+    #[test]
+    fn round_robin_rotates_and_skips_dead() {
+        let mut d = RoundRobin::new();
+        assert_eq!(d.pick(&[Some(0), Some(0), Some(0)]), Some(0));
+        assert_eq!(d.pick(&[Some(0), Some(0), Some(0)]), Some(1));
+        assert_eq!(d.pick(&[Some(0), None, Some(0)]), Some(2));
+        assert_eq!(d.pick(&[Some(0), None, Some(0)]), Some(0));
+        assert_eq!(d.pick(&[None, None, None]), None);
+    }
+
+    #[test]
+    fn fleet_of_two_serves_and_balances() {
+        let fleet = Fleet::start(
+            2,
+            |_id| Ok(Engine::synthetic(&ModelConfig::TINY, 42)),
+            SchedulerOpts::default(),
+        )
+        .unwrap();
+        assert_eq!(fleet.cartridges(), 2);
+        let handles: Vec<_> =
+            (0..6).map(|i| fleet.submit(GenRequest::greedy(i, "fleet", 4))).collect();
+        for h in handles {
+            assert!(!h.wait().unwrap().tokens.is_empty());
+        }
+        let m = fleet.shutdown().unwrap();
+        assert_eq!(m.cartridges.len(), 2);
+        assert_eq!(m.aggregate().requests_completed, 6);
+        assert_eq!(m.failed_requests, 0);
+    }
+
+    #[test]
+    fn boot_failure_fails_the_whole_start() {
+        let r = Fleet::start(
+            2,
+            |id| {
+                if id == 1 {
+                    Err(anyhow!("slot 1 empty"))
+                } else {
+                    Ok(Engine::synthetic(&ModelConfig::TINY, 1))
+                }
+            },
+            SchedulerOpts::default(),
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn zero_cartridges_rejected() {
+        assert!(Fleet::start(
+            0,
+            |_| Ok(Engine::synthetic(&ModelConfig::TINY, 1)),
+            SchedulerOpts::default()
+        )
+        .is_err());
+    }
+}

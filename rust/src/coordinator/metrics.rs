@@ -1,4 +1,8 @@
-//! Serving metrics: latency histograms, throughput, traffic.
+//! Serving metrics: latency histograms, throughput, traffic — per engine
+//! ([`ServingMetrics`]), and per fleet with per-cartridge breakdowns
+//! ([`FleetMetrics`] / [`CartridgeMetrics`]).
+
+use super::engine::TrafficLedger;
 
 /// Fixed-capacity latency recorder with percentile queries.
 #[derive(Debug, Clone, Default)]
@@ -9,6 +13,11 @@ pub struct LatencyRecorder {
 impl LatencyRecorder {
     pub fn record(&mut self, seconds: f64) {
         self.samples_s.push(seconds);
+    }
+
+    /// Fold another recorder's samples in (fleet aggregation).
+    pub fn merge(&mut self, other: &LatencyRecorder) {
+        self.samples_s.extend_from_slice(&other.samples_s);
     }
 
     pub fn count(&self) -> usize {
@@ -46,6 +55,10 @@ pub struct ServingMetrics {
     pub batch_waste: f64,
     pub interface_bytes: u64,
     pub device_macs: u64,
+    /// Full interface ledger of this engine's cartridge, so the paper's
+    /// Eq. 7–11 accounting reconciles per device even inside a fleet
+    /// (`interface_bytes == traffic.total()`).
+    pub traffic: TrafficLedger,
 }
 
 impl ServingMetrics {
@@ -54,6 +67,26 @@ impl ServingMetrics {
             return 0.0;
         }
         self.tokens_generated as f64 / self.wall_s
+    }
+
+    /// Fold another engine's metrics in. Counters and ledgers sum, latency
+    /// samples pool, wall clocks overlap (max), and padding waste averages
+    /// weighted by generated tokens.
+    pub fn merge(&mut self, other: &ServingMetrics) {
+        let (wt_a, wt_b) = (self.tokens_generated as f64, other.tokens_generated as f64);
+        if wt_a + wt_b > 0.0 {
+            self.batch_waste =
+                (self.batch_waste * wt_a + other.batch_waste * wt_b) / (wt_a + wt_b);
+        }
+        self.requests_completed += other.requests_completed;
+        self.tokens_generated += other.tokens_generated;
+        self.tokens_prefilled += other.tokens_prefilled;
+        self.wall_s = self.wall_s.max(other.wall_s);
+        self.ttft.merge(&other.ttft);
+        self.itl.merge(&other.itl);
+        self.interface_bytes += other.interface_bytes;
+        self.device_macs += other.device_macs;
+        self.traffic.add(&other.traffic);
     }
 
     /// Modeled device energy for the run (paper Table II ITA pJ/MAC).
@@ -83,9 +116,124 @@ impl ServingMetrics {
     }
 }
 
+/// One cartridge's slice of a fleet snapshot.
+#[derive(Debug, Clone, Default)]
+pub struct CartridgeMetrics {
+    pub cartridge: usize,
+    /// False once the worker died (panic / engine error). Gracefully
+    /// drained cartridges report true — they were healthy to the end. A
+    /// dead cartridge's engine-side counters are lost with its device; the
+    /// requests it held were requeued and are counted by the survivor that
+    /// finished them.
+    pub alive: bool,
+    pub serving: ServingMetrics,
+}
+
+/// Fleet-wide snapshot: per-cartridge breakdowns plus dispatcher counters.
+#[derive(Debug, Clone, Default)]
+pub struct FleetMetrics {
+    pub cartridges: Vec<CartridgeMetrics>,
+    /// Requests returned to the admission queue after their cartridge died.
+    /// Each is re-dispatched if a healthy cartridge remains; otherwise it is
+    /// also counted in `failed_requests`.
+    pub requeued_requests: u64,
+    /// Requests failed because no healthy cartridge remained.
+    pub failed_requests: u64,
+    /// Dispatcher wall clock.
+    pub wall_s: f64,
+}
+
+impl FleetMetrics {
+    /// Sum of the per-cartridge metrics (wall clocks overlap; the
+    /// dispatcher's own wall clock wins).
+    pub fn aggregate(&self) -> ServingMetrics {
+        let mut total = ServingMetrics::default();
+        for c in &self.cartridges {
+            total.merge(&c.serving);
+        }
+        total.wall_s = self.wall_s;
+        total
+    }
+
+    pub fn report(&self) -> String {
+        let mut out = format!(
+            "fleet: {} cartridges ({} alive), requeued={} failed={}\n",
+            self.cartridges.len(),
+            self.cartridges.iter().filter(|c| c.alive).count(),
+            self.requeued_requests,
+            self.failed_requests,
+        );
+        for c in &self.cartridges {
+            out.push_str(&format!(
+                "  cartridge {}{}: {}\n",
+                c.cartridge,
+                if c.alive { "" } else { " (dead)" },
+                c.serving.report()
+            ));
+        }
+        out.push_str(&format!("  total: {}", self.aggregate().report()));
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn merge_sums_counters_and_pools_samples() {
+        let mut a = ServingMetrics {
+            requests_completed: 2,
+            tokens_generated: 10,
+            wall_s: 1.0,
+            interface_bytes: 100,
+            device_macs: 1000,
+            batch_waste: 0.5,
+            ..Default::default()
+        };
+        a.ttft.record(0.1);
+        let mut b = ServingMetrics {
+            requests_completed: 3,
+            tokens_generated: 30,
+            wall_s: 2.0,
+            interface_bytes: 50,
+            device_macs: 500,
+            batch_waste: 0.1,
+            ..Default::default()
+        };
+        b.ttft.record(0.2);
+        b.ttft.record(0.3);
+        a.merge(&b);
+        assert_eq!(a.requests_completed, 5);
+        assert_eq!(a.tokens_generated, 40);
+        assert_eq!(a.interface_bytes, 150);
+        assert_eq!(a.device_macs, 1500);
+        assert_eq!(a.ttft.count(), 3);
+        assert!((a.wall_s - 2.0).abs() < 1e-12, "wall clocks overlap");
+        // 0.5 weighted 10 + 0.1 weighted 30 = 0.2
+        assert!((a.batch_waste - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fleet_aggregate_sums_cartridges() {
+        let mut fm = FleetMetrics { wall_s: 3.0, ..Default::default() };
+        for i in 0..3 {
+            fm.cartridges.push(CartridgeMetrics {
+                cartridge: i,
+                alive: true,
+                serving: ServingMetrics {
+                    requests_completed: (i + 1) as u64,
+                    tokens_generated: 10,
+                    ..Default::default()
+                },
+            });
+        }
+        let total = fm.aggregate();
+        assert_eq!(total.requests_completed, 6);
+        assert_eq!(total.tokens_generated, 30);
+        assert!((total.wall_s - 3.0).abs() < 1e-12);
+        assert!(fm.report().contains("cartridge 2"));
+    }
 
     #[test]
     fn percentiles_ordered() {

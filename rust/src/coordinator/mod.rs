@@ -6,19 +6,49 @@
 //! * [`request`] — generation request/result types.
 //! * [`batcher`] — continuous-batching policy over the compiled batch
 //!   buckets, with padding-waste telemetry.
-//! * [`scheduler`] — FCFS admission + continuous batching + completion.
-//! * [`server`] — thread-hosted server: submit requests from any thread;
-//!   the engine (and its non-Send PJRT device) lives on the worker.
-//! * [`metrics`] — latency/throughput/traffic accounting.
+//! * [`scheduler`] — FCFS admission + continuous batching + completion,
+//!   driven synchronously so it is unit-testable without threads.
+//! * [`worker`] — one cartridge: a scheduler (and its non-Send device) on
+//!   its own thread, supervised over channels.
+//! * [`fleet`] — the multi-cartridge coordinator: N workers behind a shared
+//!   admission queue with pluggable [`Dispatch`](fleet::Dispatch) policy
+//!   (least-loaded by default), per-cartridge metrics aggregation, graceful
+//!   drain, and worker-panic recovery (in-flight requests requeue onto a
+//!   healthy cartridge — the device is stateless, so a restart is just a
+//!   re-prefill).
+//! * [`server`] — the single-cartridge front end, implemented as the
+//!   `n = 1` case of the fleet.
+//! * [`metrics`] — latency/throughput/traffic accounting, per engine
+//!   ([`metrics::ServingMetrics`]) and per fleet with per-cartridge
+//!   breakdowns ([`metrics::FleetMetrics`]).
+//! * [`workload`] — deterministic synthetic workloads for benches/examples.
+//!
+//! ## Test tiers
+//!
+//! The coordinator is covered by two tiers:
+//!
+//! 1. **Deterministic, artifact-free** (always runs): everything above over
+//!    [`Engine::synthetic`] — a `SimDevice` with seeded synthetic INT4
+//!    weights (`rust/tests/fleet_sim.rs`, `rust/tests/kv_cache_props.rs`,
+//!    and the unit tests in this tree). `cargo test` is green from a clean
+//!    checkout.
+//! 2. **Artifact-backed** (`make artifacts` + real PJRT bindings): the
+//!    differential and serving-integration suites, which skip loudly when
+//!    `artifacts/tiny` is absent.
 
 pub mod batcher;
 pub mod engine;
+pub mod fleet;
 pub mod metrics;
 pub mod request;
 pub mod scheduler;
 pub mod server;
+pub mod worker;
 pub mod workload;
 
 pub use engine::Engine;
+pub use fleet::{Dispatch, Fleet, LeastLoaded, ResultHandle, RoundRobin};
+pub use metrics::{CartridgeMetrics, FleetMetrics, ServingMetrics};
 pub use request::{GenRequest, GenResult};
 pub use server::Server;
+pub use worker::{CartridgeId, Worker, WorkerEvent, WorkerMsg};

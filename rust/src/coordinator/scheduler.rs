@@ -79,11 +79,25 @@ impl Scheduler {
     }
 
     pub fn submit(&mut self, req: GenRequest) {
-        self.queue.push_back((req, Instant::now()));
+        self.submit_at(req, Instant::now());
+    }
+
+    /// Submit with an explicit enqueue time — the fleet dispatcher passes
+    /// the instant the request entered the shared admission queue, so TTFT
+    /// and total latency include dispatcher-queue wait (and, for requeued
+    /// requests, the time lost on a dead cartridge).
+    pub fn submit_at(&mut self, req: GenRequest, enqueued: Instant) {
+        self.queue.push_back((req, enqueued));
     }
 
     pub fn pending(&self) -> usize {
         self.queue.len() + self.active.len()
+    }
+
+    /// Resolved concurrent-decode capacity (the fleet dispatcher caps each
+    /// worker's outstanding requests at this).
+    pub fn capacity(&self) -> usize {
+        self.opts.max_active
     }
 
     /// One scheduling iteration: admit + prefill new requests, run one
@@ -238,7 +252,8 @@ impl Scheduler {
         let mut m = self.metrics.clone();
         m.wall_s = self.started.elapsed().as_secs_f64();
         m.batch_waste = self.batch_stats.waste();
-        m.interface_bytes = self.engine.traffic().total();
+        m.traffic = self.engine.traffic();
+        m.interface_bytes = m.traffic.total();
         m.device_macs = self.engine.device_stats().macs;
         m
     }
@@ -266,6 +281,21 @@ mod tests {
         let n_heads = m.n_heads;
         let engine = Engine::new(Box::new(dev), emb, n_heads);
         Some(Scheduler::new(engine, SchedulerOpts { max_active: 0, seed }))
+    }
+
+    #[test]
+    fn synthetic_scheduler_completes_without_artifacts() {
+        let engine = Engine::synthetic(&crate::config::ModelConfig::TINY, 3);
+        let mut s = Scheduler::new(engine, SchedulerOpts::default());
+        for i in 0..5 {
+            s.submit(GenRequest::greedy(i, "clean checkout", 6));
+        }
+        let r = s.run_to_completion().unwrap();
+        assert_eq!(r.len(), 5);
+        let m = s.metrics();
+        assert_eq!(m.requests_completed, 5);
+        assert_eq!(m.interface_bytes, m.traffic.total());
+        assert!(m.traffic.protocol_total() > 0);
     }
 
     #[test]

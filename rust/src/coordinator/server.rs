@@ -1,46 +1,29 @@
-//! Thread-hosted serving front end.
+//! Thread-hosted serving front end: the `n = 1` case of the
+//! [`Fleet`](super::fleet::Fleet).
 //!
 //! The PJRT device is not `Send`, so the engine lives entirely on a worker
 //! thread; requests and results cross via channels. This mirrors the
 //! physical deployment: one ITA cartridge in one slot, one host thread
-//! feeding it, any number of client threads submitting work.
+//! feeding it, any number of client threads submitting work. All of the
+//! queueing, drain, and supervision machinery is shared with the
+//! multi-cartridge fleet — `Server` just narrows the API back to a single
+//! cartridge's [`ServingMetrics`].
 
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::thread::JoinHandle;
-use std::time::Duration;
+use std::sync::Mutex;
 
 use anyhow::{anyhow, Result};
 
+use super::fleet::Fleet;
 use super::metrics::ServingMetrics;
-use super::request::{GenRequest, GenResult};
-use super::scheduler::{Scheduler, SchedulerOpts};
+use super::request::GenRequest;
+use super::scheduler::SchedulerOpts;
 use crate::coordinator::engine::Engine;
 
-enum Msg {
-    Submit(GenRequest, Sender<GenResult>),
-    Snapshot(Sender<ServingMetrics>),
-    Shutdown(Sender<ServingMetrics>),
-}
+pub use super::fleet::ResultHandle;
 
-/// Handle to a running server.
+/// Handle to a running single-cartridge server.
 pub struct Server {
-    tx: Sender<Msg>,
-    handle: Option<JoinHandle<()>>,
-}
-
-/// A pending result.
-pub struct ResultHandle {
-    rx: Receiver<GenResult>,
-}
-
-impl ResultHandle {
-    pub fn wait(self) -> Result<GenResult> {
-        self.rx.recv().map_err(|_| anyhow!("server dropped the request"))
-    }
-
-    pub fn try_get(&self) -> Option<GenResult> {
-        self.rx.try_recv().ok()
-    }
+    fleet: Fleet,
 }
 
 impl Server {
@@ -50,131 +33,49 @@ impl Server {
     where
         F: FnOnce() -> Result<Engine> + Send + 'static,
     {
-        let (tx, rx) = channel::<Msg>();
-        let (ready_tx, ready_rx) = channel::<Result<()>>();
-        let handle = std::thread::Builder::new()
-            .name("ita-server".into())
-            .spawn(move || worker(make_engine, opts, rx, ready_tx))
-            .expect("spawn server thread");
-        ready_rx
-            .recv()
-            .map_err(|_| anyhow!("server thread died during startup"))??;
-        Ok(Server { tx, handle: Some(handle) })
+        // adapt the FnOnce to the fleet's Fn(id) factory; n = 1 means it
+        // runs exactly once
+        let cell = Mutex::new(Some(make_engine));
+        let fleet = Fleet::start(
+            1,
+            move |_id| {
+                let f = cell
+                    .lock()
+                    .map_err(|_| anyhow!("engine factory poisoned"))?
+                    .take()
+                    .ok_or_else(|| anyhow!("single-cartridge factory invoked twice"))?;
+                f()
+            },
+            opts,
+        )?;
+        Ok(Server { fleet })
     }
 
     /// Submit a request; returns a handle to await the result.
     pub fn submit(&self, req: GenRequest) -> ResultHandle {
-        let (tx, rx) = channel();
-        let _ = self.tx.send(Msg::Submit(req, tx));
-        ResultHandle { rx }
+        self.fleet.submit(req)
     }
 
     /// Live metrics snapshot.
     pub fn metrics(&self) -> Result<ServingMetrics> {
-        let (tx, rx) = channel();
-        self.tx.send(Msg::Snapshot(tx)).map_err(|_| anyhow!("server gone"))?;
-        rx.recv().map_err(|_| anyhow!("server gone"))
+        Ok(self.fleet.metrics()?.aggregate())
     }
 
     /// Drain in-flight work and stop; returns final metrics.
-    pub fn shutdown(mut self) -> Result<ServingMetrics> {
-        let (tx, rx) = channel();
-        self.tx.send(Msg::Shutdown(tx)).map_err(|_| anyhow!("server gone"))?;
-        let m = rx.recv().map_err(|_| anyhow!("server gone"))?;
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
-        Ok(m)
+    pub fn shutdown(self) -> Result<ServingMetrics> {
+        Ok(self.fleet.shutdown()?.aggregate())
     }
-}
 
-impl Drop for Server {
-    fn drop(&mut self) {
-        if let Some(h) = self.handle.take() {
-            let (tx, _rx) = channel();
-            let _ = self.tx.send(Msg::Shutdown(tx));
-            let _ = h.join();
-        }
-    }
-}
-
-fn worker<F>(
-    make_engine: F,
-    opts: SchedulerOpts,
-    rx: Receiver<Msg>,
-    ready_tx: Sender<Result<()>>,
-) where
-    F: FnOnce() -> Result<Engine>,
-{
-    let engine = match make_engine() {
-        Ok(e) => {
-            let _ = ready_tx.send(Ok(()));
-            e
-        }
-        Err(e) => {
-            let _ = ready_tx.send(Err(e));
-            return;
-        }
-    };
-    let mut sched = Scheduler::new(engine, opts);
-    let mut waiters: Vec<(u64, Sender<GenResult>)> = Vec::new();
-    let mut shutting_down: Option<Sender<ServingMetrics>> = None;
-
-    loop {
-        // ingest control messages; block only when idle
-        loop {
-            let msg = if sched.pending() == 0 && shutting_down.is_none() {
-                match rx.recv_timeout(Duration::from_millis(50)) {
-                    Ok(m) => Some(m),
-                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => None,
-                    Err(_) => return,
-                }
-            } else {
-                match rx.try_recv() {
-                    Ok(m) => Some(m),
-                    Err(_) => None,
-                }
-            };
-            match msg {
-                Some(Msg::Submit(req, tx)) => {
-                    waiters.push((req.id, tx));
-                    sched.submit(req);
-                }
-                Some(Msg::Snapshot(tx)) => {
-                    let _ = tx.send(sched.metrics());
-                }
-                Some(Msg::Shutdown(tx)) => {
-                    shutting_down = Some(tx);
-                }
-                None => break,
-            }
-        }
-
-        if sched.pending() > 0 {
-            match sched.step() {
-                Ok(done) => {
-                    for result in done {
-                        if let Some(pos) = waiters.iter().position(|(id, _)| *id == result.id) {
-                            let (_, tx) = waiters.swap_remove(pos);
-                            let _ = tx.send(result);
-                        }
-                    }
-                }
-                Err(e) => {
-                    eprintln!("[ita-server] engine error: {e:#}");
-                    return;
-                }
-            }
-        } else if let Some(tx) = shutting_down.take() {
-            let _ = tx.send(sched.metrics());
-            return;
-        }
+    /// The underlying single-cartridge fleet.
+    pub fn fleet(&self) -> &Fleet {
+        &self.fleet
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::ModelConfig;
     use crate::device::sim::SimDevice;
     use crate::host::embedding::EmbeddingTable;
 
@@ -198,6 +99,14 @@ mod tests {
         Some(server)
     }
 
+    fn start_synthetic() -> Server {
+        Server::start(
+            || Ok(Engine::synthetic(&ModelConfig::TINY, 0x17A)),
+            SchedulerOpts::default(),
+        )
+        .unwrap()
+    }
+
     #[test]
     fn serves_concurrent_clients() {
         let Some(server) = start() else { return };
@@ -213,13 +122,29 @@ mod tests {
     }
 
     #[test]
+    fn serves_concurrent_clients_without_artifacts() {
+        let server = start_synthetic();
+        let handles: Vec<_> = (0..5)
+            .map(|i| server.submit(GenRequest::greedy(i, "srv", 4)))
+            .collect();
+        for h in handles {
+            let r = h.wait().unwrap();
+            assert!(!r.tokens.is_empty());
+        }
+        let m = server.shutdown().unwrap();
+        assert_eq!(m.requests_completed, 5);
+        assert!(m.device_macs > 0);
+    }
+
+    #[test]
     fn metrics_snapshot_while_running() {
-        let Some(server) = start() else { return };
+        let server = start_synthetic();
         let h = server.submit(GenRequest::greedy(0, "m", 3));
         let _ = server.metrics().unwrap();
         h.wait().unwrap();
         let m = server.shutdown().unwrap();
         assert_eq!(m.requests_completed, 1);
+        assert!(m.wall_s > 0.0);
     }
 
     #[test]

@@ -1,0 +1,273 @@
+//! One fleet worker = one simulated ITA cartridge.
+//!
+//! The worker owns a [`Scheduler`] (and therefore the non-`Send` device) on
+//! its own thread, exactly like the physical deployment: one cartridge in
+//! one slot, one host thread feeding it. Commands arrive on a private
+//! channel; completions, drain acknowledgements, and death notices flow to
+//! the owner through a shared event channel, so a single dispatcher can
+//! supervise any number of cartridges with one blocking `recv`.
+//!
+//! Panics inside the scheduling loop are caught and converted into a
+//! [`WorkerEvent::Died`] — the fleet requeues the lost cartridge's
+//! in-flight requests onto a healthy one. The Split-Brain design makes that
+//! requeue trivial: the device holds no dynamic state, so a restarted
+//! request just re-prefills on another cartridge.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::metrics::ServingMetrics;
+use super::request::GenRequest;
+use super::scheduler::{Scheduler, SchedulerOpts};
+use crate::coordinator::engine::Engine;
+
+/// Index of a cartridge within its fleet.
+pub type CartridgeId = usize;
+
+/// Commands a worker accepts from its owner.
+pub enum WorkerMsg {
+    /// A request plus the instant it entered the owner's admission queue
+    /// (latency metrics count from there, not from worker arrival).
+    Submit(GenRequest, Instant),
+    Snapshot(Sender<ServingMetrics>),
+    /// Finish all accepted work, report final metrics via
+    /// [`WorkerEvent::Drained`], and exit.
+    Drain,
+}
+
+/// Events a worker emits on the shared event channel.
+pub enum WorkerEvent {
+    /// Engine built; `capacity` is the resolved concurrent-decode limit.
+    Ready(CartridgeId, usize),
+    /// Engine construction failed (startup only).
+    BootFailed(CartridgeId, String),
+    /// One request finished.
+    Done(CartridgeId, super::request::GenResult),
+    /// Drain complete; final metrics attached. The thread has exited.
+    Drained(CartridgeId, ServingMetrics),
+    /// The worker hit an engine error or panicked; its in-flight requests
+    /// need a new home. The thread has exited.
+    Died(CartridgeId, String),
+}
+
+/// Handle to a worker thread. Dropping it closes the command channel; the
+/// worker finishes its current step and exits.
+pub struct Worker {
+    pub id: CartridgeId,
+    tx: Sender<WorkerMsg>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Worker {
+    /// Spawn a worker. `make_engine` runs on the new thread (the device is
+    /// not `Send`); `wrap` lifts [`WorkerEvent`] into the owner's message
+    /// type so worker events and client commands share one channel.
+    pub fn spawn<E, F>(
+        id: CartridgeId,
+        make_engine: F,
+        opts: SchedulerOpts,
+        events: Sender<E>,
+        wrap: fn(WorkerEvent) -> E,
+    ) -> Worker
+    where
+        E: Send + 'static,
+        F: FnOnce() -> Result<Engine> + Send + 'static,
+    {
+        let (tx, rx) = channel::<WorkerMsg>();
+        let handle = std::thread::Builder::new()
+            .name(format!("ita-cartridge-{id}"))
+            .spawn(move || worker_thread(id, make_engine, opts, rx, events, wrap))
+            .expect("spawn cartridge worker thread");
+        Worker { id, tx, handle: Some(handle) }
+    }
+
+    /// Send a command; returns false if the worker is gone.
+    pub fn send(&self, msg: WorkerMsg) -> bool {
+        self.tx.send(msg).is_ok()
+    }
+
+    /// Wait for the worker thread to exit.
+    pub fn join(&mut self) {
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Worker {
+    fn drop(&mut self) {
+        // closing the channel is the stop signal; join to avoid leaking
+        // detached threads past fleet shutdown
+        let (dead_tx, _) = channel();
+        drop(std::mem::replace(&mut self.tx, dead_tx));
+        self.join();
+    }
+}
+
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "worker panicked".to_string()
+    }
+}
+
+fn worker_thread<E, F>(
+    id: CartridgeId,
+    make_engine: F,
+    opts: SchedulerOpts,
+    rx: Receiver<WorkerMsg>,
+    events: Sender<E>,
+    wrap: fn(WorkerEvent) -> E,
+) where
+    E: Send + 'static,
+    F: FnOnce() -> Result<Engine>,
+{
+    let boot = std::panic::catch_unwind(std::panic::AssertUnwindSafe(make_engine));
+    let engine = match boot {
+        Ok(Ok(engine)) => engine,
+        Ok(Err(e)) => {
+            let _ = events.send(wrap(WorkerEvent::BootFailed(id, format!("{e:#}"))));
+            return;
+        }
+        Err(p) => {
+            let _ = events.send(wrap(WorkerEvent::BootFailed(id, panic_message(p))));
+            return;
+        }
+    };
+    let mut sched = Scheduler::new(engine, opts);
+    let _ = events.send(wrap(WorkerEvent::Ready(id, sched.capacity())));
+
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        worker_loop(id, &mut sched, &rx, &events, wrap)
+    }));
+    if let Err(p) = outcome {
+        let _ = events.send(wrap(WorkerEvent::Died(id, panic_message(p))));
+    }
+}
+
+fn worker_loop<E>(
+    id: CartridgeId,
+    sched: &mut Scheduler,
+    rx: &Receiver<WorkerMsg>,
+    events: &Sender<E>,
+    wrap: fn(WorkerEvent) -> E,
+) where
+    E: Send + 'static,
+{
+    let mut draining = false;
+    loop {
+        // ingest commands; when idle the channel is the only possible
+        // source of work, so block on it outright (no busy-wake)
+        loop {
+            let msg = if sched.pending() == 0 && !draining {
+                match rx.recv() {
+                    Ok(m) => Some(m),
+                    Err(_) => return,
+                }
+            } else {
+                rx.try_recv().ok()
+            };
+            match msg {
+                Some(WorkerMsg::Submit(req, enqueued)) => sched.submit_at(req, enqueued),
+                Some(WorkerMsg::Snapshot(tx)) => {
+                    let _ = tx.send(sched.metrics());
+                }
+                Some(WorkerMsg::Drain) => draining = true,
+                None => break,
+            }
+        }
+
+        if sched.pending() > 0 {
+            match sched.step() {
+                Ok(done) => {
+                    for result in done {
+                        let _ = events.send(wrap(WorkerEvent::Done(id, result)));
+                    }
+                }
+                Err(e) => {
+                    // an engine error poisons the cartridge: report and die
+                    // so the fleet requeues our in-flight work
+                    let _ = events.send(wrap(WorkerEvent::Died(id, format!("{e:#}"))));
+                    return;
+                }
+            }
+        } else if draining {
+            let _ = events.send(wrap(WorkerEvent::Drained(id, sched.metrics())));
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::time::Duration;
+
+    use super::*;
+    use crate::config::ModelConfig;
+
+    fn spawn_synthetic(events: Sender<WorkerEvent>) -> Worker {
+        Worker::spawn(
+            0,
+            || Ok(Engine::synthetic(&ModelConfig::TINY, 11)),
+            SchedulerOpts::default(),
+            events,
+            |e| e,
+        )
+    }
+
+    #[test]
+    fn worker_serves_and_drains() {
+        let (etx, erx) = channel();
+        let w = spawn_synthetic(etx);
+        match erx.recv().unwrap() {
+            WorkerEvent::Ready(0, cap) => assert!(cap >= 1),
+            _ => panic!("expected Ready"),
+        }
+        assert!(w.send(WorkerMsg::Submit(GenRequest::greedy(7, "hi", 3), Instant::now())));
+        match erx.recv().unwrap() {
+            WorkerEvent::Done(0, r) => {
+                assert_eq!(r.id, 7);
+                assert!(!r.tokens.is_empty());
+            }
+            _ => panic!("expected Done"),
+        }
+        assert!(w.send(WorkerMsg::Drain));
+        match erx.recv().unwrap() {
+            WorkerEvent::Drained(0, m) => assert_eq!(m.requests_completed, 1),
+            _ => panic!("expected Drained"),
+        }
+    }
+
+    #[test]
+    fn boot_failure_reported() {
+        let (etx, erx) = channel();
+        let _w = Worker::spawn(
+            3,
+            || Err(anyhow::anyhow!("no cartridge in slot")),
+            SchedulerOpts::default(),
+            etx,
+            |e| e,
+        );
+        match erx.recv().unwrap() {
+            WorkerEvent::BootFailed(3, msg) => assert!(msg.contains("no cartridge")),
+            _ => panic!("expected BootFailed"),
+        }
+    }
+
+    #[test]
+    fn snapshot_while_idle() {
+        let (etx, erx) = channel();
+        let w = spawn_synthetic(etx);
+        let _ = erx.recv().unwrap(); // Ready
+        let (mtx, mrx) = channel();
+        assert!(w.send(WorkerMsg::Snapshot(mtx)));
+        let m = mrx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(m.requests_completed, 0);
+    }
+}

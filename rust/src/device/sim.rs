@@ -36,6 +36,26 @@ impl SimDevice {
         })
     }
 
+    /// Artifact-free device over [`ModelWeights::synthetic`]: identical
+    /// arithmetic to the artifact path, weights generated deterministically
+    /// from `seed`. This is the backbone of the deterministic test tier —
+    /// fleet/scheduler/differential tests run from a clean checkout, no
+    /// `make artifacts` required.
+    pub fn synthetic(cfg: &crate::config::ModelConfig, buckets: Vec<usize>, seed: u64) -> SimDevice {
+        assert!(!buckets.is_empty());
+        SimDevice {
+            dims: DeviceDims {
+                d_model: cfg.d_model,
+                n_layers: cfg.n_layers,
+                d_ffn: cfg.d_ffn,
+                vocab: cfg.vocab,
+            },
+            weights: ModelWeights::synthetic(cfg, seed),
+            buckets,
+            stats: DeviceStats::default(),
+        }
+    }
+
     pub fn weights(&self) -> &ModelWeights {
         &self.weights
     }

@@ -3,7 +3,9 @@
 
 use anyhow::Result;
 
+use crate::config::ModelConfig;
 use crate::runtime::{Manifest, WeightStore};
+use crate::util::prng::Prng;
 
 /// Minimal row-major f32 matrix.
 #[derive(Debug, Clone, PartialEq)]
@@ -96,6 +98,51 @@ impl ModelWeights {
             emb: Mat::new(manifest.vocab, manifest.d_model, emb_data),
         })
     }
+
+    /// Deterministic synthetic weights for the artifact-free test tier: the
+    /// same INT4 value range and per-channel scale structure as real
+    /// artifacts, generated from a seeded [`Prng`] instead of `make
+    /// artifacts`. Two calls with equal `(cfg, seed)` are byte-identical on
+    /// every platform, so differential and fleet tests can run from a clean
+    /// checkout.
+    pub fn synthetic(cfg: &ModelConfig, seed: u64) -> ModelWeights {
+        let mut rng = Prng::new(seed);
+        let d = cfg.d_model;
+        let f = cfg.d_ffn;
+        let v = cfg.vocab;
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for _ in 0..cfg.n_layers {
+            layers.push(LayerWeights {
+                g1: synth_gain(&mut rng, d),
+                wqkv: synth_qlinear(&mut rng, d, 3 * d),
+                g2: synth_gain(&mut rng, d),
+                wo: synth_qlinear(&mut rng, d, d),
+                w1: synth_qlinear(&mut rng, d, f),
+                w3: synth_qlinear(&mut rng, d, f),
+                w2: synth_qlinear(&mut rng, f, d),
+            });
+        }
+        let gf = synth_gain(&mut rng, d);
+        let we = synth_qlinear(&mut rng, d, v);
+        let emb: Vec<f32> = (0..v * d).map(|_| rng.normal() as f32 * 0.5).collect();
+        ModelWeights { layers, gf, we, emb: Mat::new(v, d, emb) }
+    }
+}
+
+/// Integer-valued INT4 weights in [-7, 7] plus a per-channel scale that
+/// keeps activations O(1) through the quantized matmul (mirrors the
+/// magnitude structure `python/compile/quantize.py` produces).
+fn synth_qlinear(rng: &mut Prng, k: usize, n: usize) -> QLinear {
+    let w: Vec<f32> = (0..k * n).map(|_| rng.range_i64(-7, 7) as f32).collect();
+    let base = 1.0 / (7.0 * (k as f32).sqrt());
+    let scale: Vec<f32> =
+        (0..n).map(|_| base * (0.5 + rng.uniform() as f32)).collect();
+    QLinear { k, n, w, scale }
+}
+
+/// RMSNorm gains near 1.
+fn synth_gain(rng: &mut Prng, d: usize) -> Vec<f32> {
+    (0..d).map(|_| 1.0 + rng.normal() as f32 * 0.05).collect()
 }
 
 #[cfg(test)]
@@ -113,6 +160,24 @@ mod tests {
     #[should_panic]
     fn mat_shape_checked() {
         Mat::new(2, 3, vec![0.0; 5]);
+    }
+
+    #[test]
+    fn synthetic_weights_deterministic_and_int4() {
+        let cfg = crate::config::ModelConfig::TINY;
+        let a = ModelWeights::synthetic(&cfg, 7);
+        let b = ModelWeights::synthetic(&cfg, 7);
+        assert_eq!(a.layers.len(), cfg.n_layers);
+        assert_eq!(a.emb.rows, cfg.vocab);
+        assert_eq!(a.emb.cols, cfg.d_model);
+        assert_eq!(a.emb.data, b.emb.data, "same seed must be byte-identical");
+        assert_eq!(a.layers[0].wqkv.w, b.layers[0].wqkv.w);
+        for &v in &a.layers[0].wqkv.w {
+            assert_eq!(v, v.round());
+            assert!((-7.0..=7.0).contains(&v));
+        }
+        let c = ModelWeights::synthetic(&cfg, 8);
+        assert_ne!(a.layers[0].wqkv.w, c.layers[0].wqkv.w, "seeds must differ");
     }
 
     #[test]

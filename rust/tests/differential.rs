@@ -26,6 +26,23 @@ fn tiny_dir() -> Option<PathBuf> {
     }
 }
 
+/// Load the PJRT device, or skip (None) when the build links the offline
+/// xla stub instead of the real bindings.
+fn pjrt(
+    m: ita::runtime::Manifest,
+    s: &ita::runtime::WeightStore,
+    variant: &str,
+) -> Option<PjrtDevice> {
+    match PjrtDevice::load(m, s, variant) {
+        Ok(dev) => Some(dev),
+        Err(e) if format!("{e:#}").contains("offline xla stub") => {
+            eprintln!("SKIP: PJRT bindings unavailable (offline xla stub)");
+            None
+        }
+        Err(e) => panic!("PJRT device load failed: {e:#}"),
+    }
+}
+
 fn rel_close(a: &[f32], b: &[f32], tol: f32) {
     assert_eq!(a.len(), b.len());
     for (i, (x, y)) in a.iter().zip(b).enumerate() {
@@ -49,7 +66,7 @@ fn qkv_block_pjrt_matches_sim() {
     let Some(dir) = tiny_dir() else { return };
     let (m, s) = load_artifacts(&dir).unwrap();
     let mut sim = SimDevice::load(&m, &s).unwrap();
-    let mut pjrt = PjrtDevice::load(m, &s, "fused").unwrap();
+    let Some(mut pjrt) = pjrt(m, &s, "fused") else { return };
     for layer in 0..2 {
         for b in [1usize, 2] {
             let h = test_h(b, 64, layer as f32);
@@ -67,7 +84,7 @@ fn ffn_block_pjrt_matches_sim() {
     let Some(dir) = tiny_dir() else { return };
     let (m, s) = load_artifacts(&dir).unwrap();
     let mut sim = SimDevice::load(&m, &s).unwrap();
-    let mut pjrt = PjrtDevice::load(m, &s, "fused").unwrap();
+    let Some(mut pjrt) = pjrt(m, &s, "fused") else { return };
     for layer in 0..2 {
         let h = test_h(2, 64, 0.3);
         let attn = test_h(2, 64, 0.7);
@@ -82,7 +99,7 @@ fn logits_block_pjrt_matches_sim() {
     let Some(dir) = tiny_dir() else { return };
     let (m, s) = load_artifacts(&dir).unwrap();
     let mut sim = SimDevice::load(&m, &s).unwrap();
-    let mut pjrt = PjrtDevice::load(m, &s, "fused").unwrap();
+    let Some(mut pjrt) = pjrt(m, &s, "fused") else { return };
     let h = test_h(1, 64, 0.9);
     let o1 = sim.logits(&h).unwrap();
     let o2 = pjrt.logits(&h).unwrap();
@@ -96,8 +113,8 @@ fn csd_variant_matches_fused_variant() {
     // identical quantized weights)
     let Some(dir) = tiny_dir() else { return };
     let (m, s) = load_artifacts(&dir).unwrap();
-    let mut csd = PjrtDevice::load(m.clone(), &s, "csd").unwrap();
-    let mut fused = PjrtDevice::load(m, &s, "fused").unwrap();
+    let Some(mut csd) = pjrt(m.clone(), &s, "csd") else { return };
+    let Some(mut fused) = pjrt(m, &s, "fused") else { return };
     let h = test_h(2, 64, 0.1);
     let (q1, k1, v1) = csd.qkv(0, &h).unwrap();
     let (q2, k2, v2) = fused.qkv(0, &h).unwrap();
@@ -109,13 +126,14 @@ fn csd_variant_matches_fused_variant() {
 #[test]
 fn greedy_generation_identical_pjrt_vs_sim() {
     let Some(dir) = tiny_dir() else { return };
-    let run = |use_pjrt: bool| -> Vec<u32> {
+    // returns None only when the PJRT bindings are stubbed (skip)
+    let run = |use_pjrt: bool| -> Option<Vec<u32>> {
         let (m, s) = load_artifacts(&dir).unwrap();
         let n_heads = m.n_heads;
         let (dev, emb): (Box<dyn ItaDevice>, EmbeddingTable) = if use_pjrt {
             let sim = SimDevice::load(&m, &s).unwrap();
             let emb = EmbeddingTable::new(sim.weights().emb.clone());
-            (Box::new(PjrtDevice::load(m, &s, "fused").unwrap()), emb)
+            (Box::new(pjrt(m, &s, "fused")?), emb)
         } else {
             let sim = SimDevice::load(&m, &s).unwrap();
             let emb = EmbeddingTable::new(sim.weights().emb.clone());
@@ -125,10 +143,10 @@ fn greedy_generation_identical_pjrt_vs_sim() {
         let mut sched = Scheduler::new(engine, SchedulerOpts::default());
         sched.submit(GenRequest::greedy(0, "the paper", 12));
         let r = sched.run_to_completion().unwrap();
-        r.into_iter().next().unwrap().tokens
+        Some(r.into_iter().next().unwrap().tokens)
     };
-    let sim_tokens = run(false);
-    let pjrt_tokens = run(true);
+    let sim_tokens = run(false).expect("sim path never skips");
+    let Some(pjrt_tokens) = run(true) else { return };
     assert_eq!(sim_tokens, pjrt_tokens, "greedy decode must agree across devices");
 }
 
@@ -137,7 +155,7 @@ fn pjrt_padding_buckets_row_independent() {
     // submitting batch 1 must give the same row as batch 2 padded
     let Some(dir) = tiny_dir() else { return };
     let (m, s) = load_artifacts(&dir).unwrap();
-    let mut dev = PjrtDevice::load(m, &s, "fused").unwrap();
+    let Some(mut dev) = pjrt(m, &s, "fused") else { return };
     let h1 = test_h(1, 64, 0.5);
     let mut h2 = Mat::zeros(2, 64);
     h2.row_mut(0).copy_from_slice(h1.row(0));

@@ -1,0 +1,183 @@
+//! Property-style tests for `PagedKvCache`: random alloc/append/free
+//! schedules must preserve the page-accounting invariants and never alias
+//! pages across sequences. Seeded through `util::prng::Prng` (via the
+//! quickprop harness), so every failure is replayable.
+
+use ita::host::kv_cache::{PagedKvCache, SeqId};
+use ita::util::quickprop::forall;
+
+fn pages_for(len: usize, page: usize) -> usize {
+    len.div_euclid(page) + usize::from(len % page != 0)
+}
+
+/// Reference model of one sequence: the tag written at each committed
+/// position (tags are globally unique, so any page aliasing shows up as a
+/// mismatched read).
+struct SeqModel {
+    id: SeqId,
+    tags: Vec<u32>,
+}
+
+fn verify_seq(c: &PagedKvCache, layers: usize, m: &SeqModel) {
+    assert_eq!(c.len(m.id), m.tags.len());
+    for layer in 0..layers {
+        let mut seen = 0;
+        c.for_each_kv(m.id, layer, |pos, k, v| {
+            let expect = (m.tags[pos] * 8 + layer as u32) as f32;
+            assert_eq!(k[0], expect, "seq {:?} layer {layer} pos {pos} k", m.id);
+            assert_eq!(v[0], -expect, "seq {:?} layer {layer} pos {pos} v", m.id);
+            seen += 1;
+        });
+        assert_eq!(seen, m.tags.len(), "seq {:?} layer {layer} row count", m.id);
+    }
+}
+
+#[test]
+fn prop_random_schedules_preserve_page_accounting() {
+    forall("kv page accounting under random alloc/append/free", 60, |g| {
+        let layers = g.usize_in(1, 3);
+        let d = g.usize_in(1, 8);
+        let page = g.usize_in(1, 4);
+        let mut c = PagedKvCache::new(layers, d, page);
+        let mut live: Vec<SeqModel> = Vec::new();
+        let mut next_tag: u32 = 1;
+        let mut max_alloc_seen = 0;
+
+        for _ in 0..g.usize_in(1, 80) {
+            match g.usize_in(0, 9) {
+                // alloc a new sequence (bounded population)
+                0..=2 => {
+                    if live.len() < 5 {
+                        live.push(SeqModel { id: c.alloc_seq(), tags: Vec::new() });
+                    }
+                }
+                // append one token (all layers) to a random live sequence
+                3..=7 => {
+                    if !live.is_empty() {
+                        let idx = g.usize_in(0, live.len() - 1);
+                        let m = &mut live[idx];
+                        let tag = next_tag;
+                        next_tag += 1;
+                        for layer in 0..layers {
+                            let val = (tag * 8 + layer as u32) as f32;
+                            c.append(m.id, layer, &vec![val; d], &vec![-val; d]).unwrap();
+                        }
+                        c.advance(m.id).unwrap();
+                        m.tags.push(tag);
+                    }
+                }
+                // free a random live sequence
+                _ => {
+                    if !live.is_empty() {
+                        let idx = g.usize_in(0, live.len() - 1);
+                        let m = live.swap_remove(idx);
+                        c.free_seq(m.id);
+                        assert_eq!(c.len(m.id), 0, "freed seq must read as empty");
+                    }
+                }
+            }
+
+            // page-accounting invariant after every operation: allocated
+            // pages = free pool + exactly what the live sequences hold
+            let (alloc, free, live_n) = c.stats();
+            assert_eq!(live_n, live.len());
+            let held: usize =
+                live.iter().map(|m| layers * pages_for(m.tags.len(), page)).sum();
+            assert_eq!(
+                alloc - free,
+                held,
+                "page leak or double-free: alloc={alloc} free={free} held={held}"
+            );
+            max_alloc_seen = max_alloc_seen.max(alloc);
+            assert!(c.peak_pages >= alloc);
+        }
+
+        // no aliasing: every live sequence still reads back exactly the
+        // tags written to it, across all layers
+        for m in &live {
+            verify_seq(&c, layers, m);
+        }
+        // and the pool never shrank below its high-water mark
+        assert_eq!(c.peak_pages, max_alloc_seen);
+    });
+}
+
+#[test]
+fn prop_freed_pages_recycle_without_growth() {
+    forall("kv pool recycles freed pages", 40, |g| {
+        let page = g.usize_in(1, 4);
+        let d = g.usize_in(1, 6);
+        let mut c = PagedKvCache::new(2, d, page);
+        let tokens = g.usize_in(1, 12);
+
+        let a = c.alloc_seq();
+        for t in 0..tokens {
+            for layer in 0..2 {
+                c.append(a, layer, &vec![t as f32; d], &vec![0.0; d]).unwrap();
+            }
+            c.advance(a).unwrap();
+        }
+        let (alloc_before, _, _) = c.stats();
+        c.free_seq(a);
+        let (alloc, free, live) = c.stats();
+        assert_eq!(alloc, alloc_before);
+        assert_eq!(free, alloc_before, "all pages must return to the pool");
+        assert_eq!(live, 0);
+
+        // an identical second lifetime reuses every page: zero growth
+        let b = c.alloc_seq();
+        for t in 0..tokens {
+            for layer in 0..2 {
+                c.append(b, layer, &vec![t as f32 + 100.0; d], &vec![0.0; d]).unwrap();
+            }
+            c.advance(b).unwrap();
+        }
+        assert_eq!(c.stats().0, alloc_before, "recycled run must not allocate");
+        let mut count = 0;
+        c.for_each_kv(b, 1, |pos, k, _| {
+            assert_eq!(k[0], pos as f32 + 100.0, "stale data from the previous tenant");
+            count += 1;
+        });
+        assert_eq!(count, tokens);
+    });
+}
+
+#[test]
+fn prop_interleaved_sequences_never_alias() {
+    forall("interleaved sequences stay isolated", 60, |g| {
+        let d = g.usize_in(1, 6);
+        let page = g.usize_in(1, 3);
+        let mut c = PagedKvCache::new(1, d, page);
+        let n = g.usize_in(2, 4);
+        let mut ids: Vec<SeqId> = (0..n).map(|_| c.alloc_seq()).collect();
+        let mut lens = vec![0usize; n];
+        // interleave appends, occasionally freeing + re-allocating a victim
+        // so its recycled pages get claimed by the survivors
+        for step in 0..g.usize_in(5, 40) {
+            let w = g.usize_in(0, n - 1);
+            if g.usize_in(0, 9) == 0 {
+                c.free_seq(ids[w]);
+                ids[w] = c.alloc_seq();
+                lens[w] = 0;
+            } else {
+                let tag = (w * 100_000 + step) as f32;
+                c.append(ids[w], 0, &vec![tag; d], &vec![-tag; d]).unwrap();
+                c.advance(ids[w]).unwrap();
+                lens[w] += 1;
+            }
+        }
+        for (w, &id) in ids.iter().enumerate() {
+            assert_eq!(c.len(id), lens[w]);
+            let mut rows = 0;
+            c.for_each_kv(id, 0, |_pos, k, v| {
+                // tags encode the owning slot: any cross-seq page alias
+                // surfaces as a foreign owner id here
+                let owner = (k[0] as usize) / 100_000;
+                assert_eq!(owner, w, "row owned by slot {w} carries tag {}", k[0]);
+                assert_eq!(v[0], -k[0]);
+                rows += 1;
+            });
+            assert_eq!(rows, lens[w]);
+        }
+    });
+}

@@ -24,8 +24,10 @@ fn tiny_dir() -> Option<PathBuf> {
     }
 }
 
-fn start_pjrt_server(dir: PathBuf, variant: &'static str) -> Server {
-    Server::start(
+/// Start the PJRT-backed server, or skip (None) when the build uses the
+/// offline xla stub instead of the real bindings.
+fn start_pjrt_server(dir: PathBuf, variant: &'static str) -> Option<Server> {
+    match Server::start(
         move || {
             let (m, s) = load_artifacts(&dir)?;
             let n_heads = m.n_heads;
@@ -35,14 +37,20 @@ fn start_pjrt_server(dir: PathBuf, variant: &'static str) -> Server {
             Ok(Engine::new(Box::new(dev), emb, n_heads))
         },
         SchedulerOpts::default(),
-    )
-    .expect("server start")
+    ) {
+        Ok(server) => Some(server),
+        Err(e) if format!("{e:#}").contains("offline xla stub") => {
+            eprintln!("SKIP: PJRT bindings unavailable (offline xla stub)");
+            None
+        }
+        Err(e) => panic!("server start failed: {e:#}"),
+    }
 }
 
 #[test]
 fn pjrt_server_serves_batch() {
     let Some(dir) = tiny_dir() else { return };
-    let server = start_pjrt_server(dir, "fused");
+    let Some(server) = start_pjrt_server(dir, "fused") else { return };
     let handles: Vec<_> = (0..6)
         .map(|i| {
             server.submit(GenRequest {
@@ -72,23 +80,26 @@ fn pjrt_server_serves_batch() {
 fn csd_variant_serves_identically_to_fused() {
     // the paper-structural digit-plane artifacts must generate the same
     // greedy tokens as the fused fast path, through the whole stack
-    let Some(dir) = tiny_dir() else { return };
-    let run = |variant: &'static str| {
-        let server = start_pjrt_server(tiny_dir().unwrap(), variant);
+    if tiny_dir().is_none() {
+        return;
+    }
+    let run = |variant: &'static str| -> Option<Vec<u32>> {
+        let server = start_pjrt_server(tiny_dir().unwrap(), variant)?;
         let r = server
             .submit(GenRequest::greedy(0, "immutable tensor", 10))
             .wait()
             .unwrap();
         let _ = server.shutdown();
-        r.tokens
+        Some(r.tokens)
     };
-    assert_eq!(run("fused"), run("csd"));
+    let Some(fused) = run("fused") else { return };
+    assert_eq!(Some(fused), run("csd"));
 }
 
 #[test]
 fn interface_traffic_scales_with_tokens() {
     let Some(dir) = tiny_dir() else { return };
-    let server = start_pjrt_server(dir, "fused");
+    let Some(server) = start_pjrt_server(dir, "fused") else { return };
     server
         .submit(GenRequest::greedy(0, "t", 2))
         .wait()
@@ -106,7 +117,7 @@ fn interface_traffic_scales_with_tokens() {
 #[test]
 fn sampling_modes_complete() {
     let Some(dir) = tiny_dir() else { return };
-    let server = start_pjrt_server(dir, "fused");
+    let Some(server) = start_pjrt_server(dir, "fused") else { return };
     let params = [
         SamplingParams::greedy(),
         SamplingParams::top_k(8, 0.9),
