@@ -1,0 +1,37 @@
+# ITA reproduction — build entry points.
+#
+# The request path is pure rust (`cargo build/test/bench`); python runs only
+# at compile time, producing the AOT artifact tree the PJRT tier loads.
+
+ARTIFACTS ?= artifacts
+CONFIGS   ?= tiny,demo-100m
+PY        ?= python3
+
+.PHONY: all build test bench-smoke smoke artifacts clean-artifacts
+
+all: build
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+# Compile-check every bench target without running them (CI).
+bench-smoke:
+	cargo bench --no-run
+
+# Drive the fleet end-to-end on synthetic weights (artifact-free).
+smoke:
+	ITA_FLEET_CARTRIDGES=2 ITA_FLEET_REQUESTS=12 ITA_FLEET_TOKENS=8 \
+		cargo run --release --example serve_fleet
+
+# AOT path: JAX device blocks -> HLO text + weight blobs under
+# $(ARTIFACTS)/<config>/ (MANIFEST.txt, weights.bin, programs/*.hlo.txt).
+# Needs jax; run from the repo root. The deterministic test tier does NOT
+# need this — only the PJRT suites do (they skip when artifacts are absent).
+artifacts:
+	cd python && $(PY) -m compile.aot --out ../$(ARTIFACTS) --configs $(CONFIGS)
+
+clean-artifacts:
+	rm -rf $(ARTIFACTS)

@@ -1,9 +1,12 @@
 //! End-to-end serving throughput — the whole-stack number §Perf tracks.
 //!
-//! Two tiers:
+//! Three tiers:
 //! * **fleet sweep** (always runs): synthetic SimDevice cartridges, sweeping
 //!   cartridge count to show host-side scale-out of the stateless device
 //!   (1 → N cartridges behind the shared admission queue).
+//! * **shared-prefix sweep** (always runs): 32 requests behind one long
+//!   system prompt, radix prefix cache off vs on (and a prefix-affinity
+//!   fleet), reporting the prefill-token reduction from KV reuse.
 //! * **artifact tier**: the PJRT tiny/demo-100m cartridges when artifacts
 //!   and real bindings exist (skips quietly otherwise).
 //!
@@ -14,12 +17,13 @@ use std::time::Instant;
 
 use ita::config::ModelConfig;
 use ita::coordinator::engine::Engine;
-use ita::coordinator::fleet::Fleet;
+use ita::coordinator::fleet::{Fleet, PrefixAffinity};
 use ita::coordinator::request::GenRequest;
 use ita::coordinator::scheduler::{Scheduler, SchedulerOpts};
 use ita::device::pjrt::PjrtDevice;
 use ita::device::sim::SimDevice;
 use ita::host::embedding::EmbeddingTable;
+use ita::host::sampling::SamplingParams;
 use ita::runtime::weights::load_artifacts;
 
 /// Sweep cartridge count over a fixed workload; prints aggregate tok/s and
@@ -57,6 +61,86 @@ fn bench_fleet(cartridges: usize, n_requests: usize, max_tokens: usize) {
         tokens as f64 / wall,
         m.requeued_requests,
         m.aggregate().interface_bytes as f64 / 1e6,
+    );
+}
+
+/// 32 requests behind one long shared system prompt: the production shape
+/// the radix prefix cache targets. Runs single-cartridge with the cache
+/// off/on, then a 2-cartridge fleet under prefix-affinity dispatch, and
+/// reports the prefill-token reduction (`prefill_skipped_tokens`).
+fn bench_shared_prefix(n_requests: usize, max_tokens: usize) {
+    let system = "System: you are a careful assistant for the immutable tensor \
+        architecture; answer from the paper, cite sections, refuse to speculate about \
+        dynamic state, and keep every reply under one hundred tokens. "
+        .repeat(2);
+    let reqs: Vec<GenRequest> = (0..n_requests)
+        .map(|i| GenRequest {
+            id: i as u64,
+            prompt: format!("{system}Q{i:02}"),
+            max_new_tokens: max_tokens,
+            sampling: SamplingParams::greedy(),
+            stop_at_eos: false,
+        })
+        .collect();
+
+    let run_sched = |cache_pages: usize| {
+        let opts = SchedulerOpts { prefix_cache_pages: cache_pages, ..SchedulerOpts::default() };
+        let mut sched =
+            Scheduler::new(Engine::synthetic(&ModelConfig::TINY, 0x17A), opts);
+        for r in &reqs {
+            sched.submit(r.clone());
+        }
+        let t0 = Instant::now();
+        let results = sched.run_to_completion().expect("run");
+        let wall = t0.elapsed().as_secs_f64();
+        let tokens: usize = results.iter().map(|r| r.tokens.len()).sum();
+        (tokens, wall, sched.metrics())
+    };
+
+    let (tok_off, wall_off, m_off) = run_sched(0);
+    let (tok_on, wall_on, m_on) = run_sched(SchedulerOpts::default().prefix_cache_pages);
+    assert_eq!(tok_off, tok_on, "prefix cache changed outputs");
+    let total_prompt = m_on.tokens_prefilled + m_on.prefill_skipped_tokens;
+    let reduction = m_on.prefill_skipped_tokens as f64 / total_prompt.max(1) as f64;
+    println!(
+        "bench e2e/shared-prefix  cache off: {:>6} prefill tokens in {wall_off:>6.2}s = \
+         {:>7.1} tok/s total",
+        m_off.tokens_prefilled,
+        (tok_off + m_off.tokens_prefilled as usize) as f64 / wall_off,
+    );
+    println!(
+        "bench e2e/shared-prefix  cache on : {:>6} prefill tokens ({} skipped, {:.0}% reduction) \
+         in {wall_on:>6.2}s = {:>7.1} tok/s total",
+        m_on.tokens_prefilled,
+        m_on.prefill_skipped_tokens,
+        reduction * 100.0,
+        (tok_on + m_on.tokens_prefilled as usize) as f64 / wall_on,
+    );
+
+    // prefix-affinity fleet: same workload over 2 cartridges; the router
+    // keeps the shared prefix on one cartridge's thread-local cache
+    let fleet = Fleet::with_dispatch(
+        2,
+        |_id| Ok(Engine::synthetic(&ModelConfig::TINY, 0x17A)),
+        SchedulerOpts::default(),
+        Box::new(PrefixAffinity::new()),
+    )
+    .expect("fleet start");
+    let t0 = Instant::now();
+    let handles: Vec<_> = reqs.iter().map(|r| fleet.submit(r.clone())).collect();
+    let mut tokens = 0usize;
+    for h in handles {
+        tokens += h.wait().expect("request completes").tokens.len();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = fleet.shutdown().expect("fleet shutdown");
+    let agg = m.aggregate();
+    let split: Vec<u64> =
+        m.cartridges.iter().map(|c| c.serving.requests_completed).collect();
+    println!(
+        "bench e2e/shared-prefix  affinity x2: {tokens:>5} tokens in {wall:>6.2}s, \
+         {} prefill skipped (split {split:?})",
+        agg.prefill_skipped_tokens,
     );
 }
 
@@ -114,6 +198,8 @@ fn main() {
     for cartridges in [1usize, 2, 4] {
         bench_fleet(cartridges, 32, 16);
     }
+    // shared-prefix workload: 32 requests behind one long system prompt
+    bench_shared_prefix(32, 8);
     bench_config("tiny", 16, 32);
     // saturate the largest compiled bucket: at the DRAM-streaming roofline
     // every extra row in a weight sweep is almost free (§Perf iteration 5)

@@ -5,10 +5,14 @@
 //!
 //!     cargo run --release --example serve_fleet
 //!     [ITA_FLEET_CARTRIDGES=4] [ITA_FLEET_REQUESTS=32] [ITA_FLEET_TOKENS=16]
+//!     [ITA_FLEET_DISPATCH=affinity|least-loaded]
 //!
 //! Runs artifact-free: each cartridge is an `Engine::synthetic` SimDevice
 //! (identical weights per cartridge, as if N copies of one neural cartridge
 //! were plugged into one host — the paper's one-model-one-chip deployment).
+//! The workload draws prompts from a small corpus, so repeated prefixes hit
+//! each cartridge's radix prefix cache; the default `affinity` dispatch
+//! routes shared prefixes onto the cartridge already holding them.
 
 use std::time::{Duration, Instant};
 
@@ -16,7 +20,7 @@ use anyhow::Result;
 
 use ita::config::ModelConfig;
 use ita::coordinator::engine::Engine;
-use ita::coordinator::fleet::Fleet;
+use ita::coordinator::fleet::{Dispatch, Fleet, LeastLoaded, PrefixAffinity};
 use ita::coordinator::scheduler::SchedulerOpts;
 use ita::coordinator::workload::{self, Arrivals, WorkloadSpec};
 
@@ -28,12 +32,21 @@ fn main() -> Result<()> {
     let cartridges = env_or("ITA_FLEET_CARTRIDGES", 4).max(1);
     let n_requests = env_or("ITA_FLEET_REQUESTS", 32);
     let max_tokens = env_or("ITA_FLEET_TOKENS", 16);
+    let dispatch_name =
+        std::env::var("ITA_FLEET_DISPATCH").unwrap_or_else(|_| "affinity".into());
+    let dispatch: Box<dyn Dispatch> = match dispatch_name.as_str() {
+        "least-loaded" => Box::new(LeastLoaded),
+        _ => Box::new(PrefixAffinity::new()),
+    };
 
     println!("== ITA fleet serving driver ==");
-    println!("cartridges={cartridges} requests={n_requests} max_new_tokens={max_tokens}\n");
+    println!(
+        "cartridges={cartridges} requests={n_requests} max_new_tokens={max_tokens} \
+         dispatch={dispatch_name}\n"
+    );
 
     let t_boot = Instant::now();
-    let fleet = Fleet::start(
+    let fleet = Fleet::with_dispatch(
         cartridges,
         |id| {
             // one model, one chip: every cartridge carries the same weights
@@ -42,6 +55,7 @@ fn main() -> Result<()> {
             Ok(engine)
         },
         SchedulerOpts::default(),
+        dispatch,
     )?;
     println!("fleet up in {:.2}s ({cartridges} cartridges)\n", t_boot.elapsed().as_secs_f64());
 
@@ -94,6 +108,13 @@ fn main() -> Result<()> {
         sum_requests,
         sum_bytes as f64 / 1e6,
         m.cartridges.len()
+    );
+    let total_prompt = agg.tokens_prefilled + agg.prefill_skipped_tokens;
+    println!(
+        "prefix reuse: {} of {} prompt tokens served from the radix cache ({:.0}%)",
+        agg.prefill_skipped_tokens,
+        total_prompt,
+        100.0 * agg.prefill_skipped_tokens as f64 / total_prompt.max(1) as f64
     );
     Ok(())
 }

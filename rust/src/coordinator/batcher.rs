@@ -4,13 +4,39 @@
 //! the batcher groups ready sequences into bucket-sized waves to minimize
 //! padding waste while bounding queueing delay.
 
-/// Bucket-fitting plan for `n` ready sequences.
+/// One device call: `rows` live sequences issued in a compiled bucket of
+/// `bucket` device rows (`bucket - rows` rows are padding).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Wave {
+    pub rows: usize,
+    pub bucket: usize,
+}
+
+/// Bucket-fitting plan for `n` ready sequences. Each wave carries the
+/// bucket it was placed in, so telemetry reconciles against the device
+/// rows actually issued instead of re-deriving them.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct BatchPlan {
-    /// Wave sizes (each ≤ the largest bucket; sum == n).
-    pub waves: Vec<usize>,
-    /// Padded rows summed over waves (bucket − wave size).
-    pub padding: usize,
+    /// Waves (each `rows ≤ bucket`; rows sum to n).
+    pub waves: Vec<Wave>,
+}
+
+impl BatchPlan {
+    /// Live rows across all waves (== the planned n).
+    pub fn rows(&self) -> usize {
+        self.waves.iter().map(|w| w.rows).sum()
+    }
+
+    /// Padded rows summed over waves (bucket − wave rows).
+    pub fn padding(&self) -> usize {
+        self.waves.iter().map(|w| w.bucket - w.rows).sum()
+    }
+
+    /// Device rows actually issued: one full bucket per wave. Equals
+    /// `rows() + padding()` by construction.
+    pub fn device_rows(&self) -> usize {
+        self.waves.iter().map(|w| w.bucket).sum()
+    }
 }
 
 /// Greedy planner: fill the largest bucket while enough sequences remain,
@@ -21,43 +47,49 @@ pub fn plan(n: usize, buckets: &[usize]) -> BatchPlan {
     sorted.sort_unstable();
     let max = *sorted.last().unwrap();
     let mut waves = Vec::new();
-    let mut padding = 0;
     let mut left = n;
     while left > 0 {
         if left >= max {
-            waves.push(max);
+            waves.push(Wave { rows: max, bucket: max });
             left -= max;
         } else {
             let bucket = sorted.iter().copied().find(|&b| b >= left).unwrap_or(max);
-            padding += bucket - left;
-            waves.push(left);
+            waves.push(Wave { rows: left, bucket });
             left = 0;
         }
     }
-    BatchPlan { waves, padding }
+    BatchPlan { waves }
 }
 
 /// Padding-efficiency telemetry.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct BatchStats {
     pub steps: u64,
+    /// Live rows scheduled.
     pub rows: u64,
+    /// Padding rows issued alongside them.
     pub padded_rows: u64,
+    /// Device rows actually issued (full buckets); always equals
+    /// `rows + padded_rows` — recorded from the per-wave bucket sizes so a
+    /// planner change can't silently desynchronize the accounting.
+    pub device_rows: u64,
 }
 
 impl BatchStats {
     pub fn record(&mut self, plan: &BatchPlan) {
         self.steps += 1;
-        self.rows += plan.waves.iter().sum::<usize>() as u64;
-        self.padded_rows += plan.padding as u64;
+        self.rows += plan.rows() as u64;
+        self.padded_rows += plan.padding() as u64;
+        self.device_rows += plan.device_rows() as u64;
+        debug_assert_eq!(self.device_rows, self.rows + self.padded_rows);
     }
 
     /// Fraction of device rows wasted on padding.
     pub fn waste(&self) -> f64 {
-        if self.rows + self.padded_rows == 0 {
+        if self.device_rows == 0 {
             return 0.0;
         }
-        self.padded_rows as f64 / (self.rows + self.padded_rows) as f64
+        self.padded_rows as f64 / self.device_rows as f64
     }
 }
 
@@ -66,25 +98,32 @@ mod tests {
     use super::*;
     use crate::util::quickprop::forall;
 
+    fn wave_rows(p: &BatchPlan) -> Vec<usize> {
+        p.waves.iter().map(|w| w.rows).collect()
+    }
+
     #[test]
     fn exact_bucket_no_padding() {
         let p = plan(8, &[1, 2, 4, 8]);
-        assert_eq!(p.waves, vec![8]);
-        assert_eq!(p.padding, 0);
+        assert_eq!(wave_rows(&p), vec![8]);
+        assert_eq!(p.padding(), 0);
+        assert_eq!(p.device_rows(), 8);
     }
 
     #[test]
     fn oversized_splits_into_waves() {
         let p = plan(11, &[1, 2, 4, 8]);
-        assert_eq!(p.waves, vec![8, 3]);
-        assert_eq!(p.padding, 1); // 3 → bucket 4
+        assert_eq!(wave_rows(&p), vec![8, 3]);
+        assert_eq!(p.waves[1].bucket, 4); // 3 → bucket 4
+        assert_eq!(p.padding(), 1);
+        assert_eq!(p.device_rows(), 12);
     }
 
     #[test]
     fn small_tail_picks_smallest_fit() {
         let p = plan(3, &[1, 2, 4, 8]);
-        assert_eq!(p.waves, vec![3]);
-        assert_eq!(p.padding, 1);
+        assert_eq!(p.waves, vec![Wave { rows: 3, bucket: 4 }]);
+        assert_eq!(p.padding(), 1);
     }
 
     #[test]
@@ -93,28 +132,35 @@ mod tests {
             let n = g.usize_in(1, 100);
             let buckets = [1usize, 2, 4, 8];
             let p = plan(n, &buckets);
-            assert_eq!(p.waves.iter().sum::<usize>(), n);
-            // every wave fits a bucket
-            for &w in &p.waves {
-                assert!(buckets.iter().any(|&b| b >= w));
+            assert_eq!(p.rows(), n);
+            // every wave is issued in a real compiled bucket that fits it
+            for w in &p.waves {
+                assert!(buckets.contains(&w.bucket));
+                assert!(w.rows <= w.bucket && w.rows > 0);
             }
+            // device rows reconcile structurally
+            assert_eq!(p.device_rows(), p.rows() + p.padding());
             // padding is bounded by one bucket's worth
-            assert!(p.padding < 8, "{p:?}");
+            assert!(p.padding() < 8, "{p:?}");
         });
     }
 
     #[test]
-    fn stats_accumulate_waste() {
+    fn stats_reconcile_with_device_rows() {
         let mut s = BatchStats::default();
         s.record(&plan(3, &[4]));
         assert_eq!(s.padded_rows, 1);
+        assert_eq!(s.device_rows, 4);
         assert!((s.waste() - 0.25).abs() < 1e-9);
+        s.record(&plan(11, &[1, 2, 4, 8]));
+        assert_eq!(s.rows, 14);
+        assert_eq!(s.device_rows, s.rows + s.padded_rows);
     }
 
     #[test]
     fn single_bucket_of_one() {
         let p = plan(5, &[1]);
-        assert_eq!(p.waves, vec![1; 5]);
-        assert_eq!(p.padding, 0);
+        assert_eq!(wave_rows(&p), vec![1; 5]);
+        assert_eq!(p.padding(), 0);
     }
 }

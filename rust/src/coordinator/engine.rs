@@ -17,6 +17,7 @@ use crate::device::{DeviceDims, ItaDevice};
 use crate::host::attention::{decode_attention, AttentionConfig, AttentionScratch};
 use crate::host::embedding::EmbeddingTable;
 use crate::host::kv_cache::{PagedKvCache, SeqId};
+use crate::host::prefix_cache::PrefixCache;
 use crate::model::Mat;
 
 /// Interface-traffic ledger (bytes at the paper's INT16 wire width).
@@ -59,6 +60,8 @@ impl TrafficLedger {
 pub struct Engine {
     device: Box<dyn ItaDevice>,
     pub cache: PagedKvCache,
+    /// Radix prefix cache over `cache` (None = prefill reuse disabled).
+    prefix: Option<PrefixCache>,
     attn: AttentionConfig,
     emb: EmbeddingTable,
     scratch: AttentionScratch,
@@ -82,6 +85,7 @@ impl Engine {
         assert_eq!(dims.d_model % n_heads, 0);
         Engine {
             cache: PagedKvCache::new(dims.n_layers, dims.d_model, PAGE_SIZE),
+            prefix: None,
             attn: AttentionConfig::new(n_heads, dims.d_model / n_heads),
             emb,
             device,
@@ -89,6 +93,53 @@ impl Engine {
             traffic: TrafficLedger::default(),
             tokens_processed: 0,
         }
+    }
+
+    /// Turn on cross-request prefill reuse: prompts published via
+    /// [`register_prefix`](Engine::register_prefix) become matchable by
+    /// [`new_sequence_with_prefix`](Engine::new_sequence_with_prefix),
+    /// sharing KV pages copy-on-write under an LRU `budget_pages` cap
+    /// (0 = unbounded).
+    pub fn enable_prefix_cache(&mut self, budget_pages: usize) {
+        let dims = self.device.dims();
+        self.prefix = Some(PrefixCache::new(dims.n_layers, PAGE_SIZE, budget_pages));
+    }
+
+    pub fn prefix_cache(&self) -> Option<&PrefixCache> {
+        self.prefix.as_ref()
+    }
+
+    /// Allocate a sequence, grafting the longest cached prefix of `prompt`
+    /// into it. Returns the sequence and how many leading tokens are
+    /// already cached — prefill may start at that offset (always
+    /// < `prompt.len()`: the last token runs through the device so its
+    /// logits exist to sample from).
+    pub fn new_sequence_with_prefix(&mut self, prompt: &[u32]) -> (SeqId, usize) {
+        let id = self.cache.alloc_seq();
+        let Some(pc) = self.prefix.as_mut() else { return (id, 0) };
+        let m = pc.lookup(prompt);
+        if m.matched == 0 {
+            return (id, 0);
+        }
+        self.cache
+            .share_pages(id, &m.pages, m.matched)
+            .expect("prefix cache returned an invalid page run");
+        (id, m.matched)
+    }
+
+    /// Publish `prompt`'s KV (fully prefilled on `id`) into the prefix
+    /// cache so later requests can skip its prefill. No-op when the prefix
+    /// cache is disabled.
+    pub fn register_prefix(&mut self, id: SeqId, prompt: &[u32]) {
+        if let Some(pc) = self.prefix.as_mut() {
+            pc.insert(prompt, id, &mut self.cache)
+                .expect("publishing a prefilled prompt cannot fail");
+        }
+    }
+
+    /// Longest cached prefix of `prompt`, without mutating LRU state.
+    pub fn cached_prefix_len(&self, prompt: &[u32]) -> usize {
+        self.prefix.as_ref().map_or(0, |pc| pc.peek(prompt))
     }
 
     /// Artifact-free engine over a [`SimDevice`](crate::device::sim::SimDevice)

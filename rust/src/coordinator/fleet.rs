@@ -16,17 +16,23 @@
 //! ```
 //!
 //! * **Admission**: requests queue in the dispatcher and flow to a worker
-//!   chosen by a [`Dispatch`] policy ([`LeastLoaded`] by default), capped
-//!   at each worker's concurrent-decode capacity.
+//!   chosen by a [`Dispatch`] policy ([`LeastLoaded`] by default,
+//!   [`RoundRobin`] and [`PrefixAffinity`] provided), capped at each
+//!   worker's concurrent-decode capacity. [`PrefixAffinity`] routes
+//!   shared-prefix traffic onto one cartridge so its thread-local radix
+//!   prefix cache can skip the shared prefill.
 //! * **Metrics**: each cartridge keeps its own [`ServingMetrics`] —
 //!   including its [`TrafficLedger`](super::engine::TrafficLedger), so the
 //!   paper's Eq. 7–11 interface accounting reconciles per device — and the
-//!   fleet aggregates them into a [`FleetMetrics`] snapshot.
+//!   fleet aggregates them into a [`FleetMetrics`] snapshot. Workers also
+//!   publish periodic [`WorkerEvent::Checkpoint`] snapshots, so a dead
+//!   cartridge's counters survive into the fleet aggregate.
 //! * **Recovery**: a worker panic or engine error emits
 //!   [`WorkerEvent::Died`]; the dispatcher requeues that cartridge's
 //!   in-flight requests onto healthy cartridges (restarting them from
-//!   prefill — the device holds no state to migrate). If no cartridge
-//!   survives, queued requests fail with [`FinishReason::Error`].
+//!   prefill — cheap when the surviving cartridge has the prefix cached:
+//!   only the uncached suffix re-prefills). If no cartridge survives,
+//!   queued requests fail with [`FinishReason::Error`].
 //! * **Drain**: [`Fleet::shutdown`] stops admission, lets the queue and all
 //!   in-flight work finish, drains every worker, and returns the final
 //!   per-cartridge metrics.
@@ -52,13 +58,28 @@ use super::worker::{CartridgeId, Worker, WorkerEvent, WorkerMsg};
 ///
 /// `loads[i]` is `Some(outstanding_requests)` for cartridges that are alive
 /// and below capacity, `None` for dead, draining, or saturated ones.
+/// `req` is the request about to be placed, so content-aware policies
+/// (prefix affinity) can route on it.
 ///
 /// Contract: return the chosen index whenever any slot is `Some`; return
 /// `None` only when no slot is eligible. The dispatcher re-pumps the queue
 /// only on its next channel event, so a policy that declines an eligible
 /// slot leaves queued requests waiting until unrelated traffic arrives.
 pub trait Dispatch: Send {
-    fn pick(&mut self, loads: &[Option<usize>]) -> Option<usize>;
+    fn pick(&mut self, loads: &[Option<usize>], req: &GenRequest) -> Option<usize>;
+
+    /// Called after `req` was actually handed to cartridge `cartridge`
+    /// (stateful policies learn placements here, not in `pick`, because a
+    /// pick can be discarded when the worker's channel closed underneath).
+    fn placed(&mut self, cartridge: usize, req: &GenRequest) {
+        let _ = (cartridge, req);
+    }
+
+    /// Called when a cartridge died; policies drop any affinity state for
+    /// it (its thread-local caches are gone).
+    fn cartridge_lost(&mut self, cartridge: usize) {
+        let _ = cartridge;
+    }
 }
 
 /// Send each request to the eligible cartridge with the fewest outstanding
@@ -66,7 +87,7 @@ pub trait Dispatch: Send {
 pub struct LeastLoaded;
 
 impl Dispatch for LeastLoaded {
-    fn pick(&mut self, loads: &[Option<usize>]) -> Option<usize> {
+    fn pick(&mut self, loads: &[Option<usize>], _req: &GenRequest) -> Option<usize> {
         loads
             .iter()
             .enumerate()
@@ -88,7 +109,7 @@ impl RoundRobin {
 }
 
 impl Dispatch for RoundRobin {
-    fn pick(&mut self, loads: &[Option<usize>]) -> Option<usize> {
+    fn pick(&mut self, loads: &[Option<usize>], _req: &GenRequest) -> Option<usize> {
         if loads.is_empty() {
             return None;
         }
@@ -100,6 +121,117 @@ impl Dispatch for RoundRobin {
             }
         }
         None
+    }
+}
+
+/// Prefix-affinity dispatch: route each request to the cartridge expected
+/// to hold the longest cached prefix of its prompt, falling back to
+/// [`LeastLoaded`] when no cartridge has a useful match (or the best one is
+/// saturated).
+///
+/// Each worker's radix [`PrefixCache`](crate::host::prefix_cache) is
+/// thread-local to its engine, so fleets get cross-request reuse by
+/// *routing* shared-prefix traffic onto the same cartridge rather than by
+/// sharing pages across threads. The dispatcher cannot cheaply ask a busy
+/// worker mid-step, so the policy keeps a per-cartridge **shadow index**:
+/// the token prefixes of the last `window` prompts placed there (learned in
+/// [`Dispatch::placed`], discarded on [`Dispatch::cartridge_lost`]). The
+/// shadow can overestimate a worker whose cache has since evicted an entry
+/// — that only costs the fallback's load balance, never correctness.
+pub struct PrefixAffinity {
+    tokenizer: crate::host::tokenizer::ByteTokenizer,
+    /// per-cartridge ring of recently placed tokenized prompts
+    shadows: Vec<VecDeque<Vec<u32>>>,
+    /// prompts remembered per cartridge
+    window: usize,
+    /// minimum matched tokens before affinity beats load balance
+    min_match: usize,
+    /// tokens encoded by the last `pick`, reused by the `placed` that the
+    /// dispatcher issues immediately after it for the same request
+    pending: Option<(u64, Vec<u32>)>,
+    fallback: LeastLoaded,
+}
+
+impl PrefixAffinity {
+    /// Defaults: remember 64 prompts per cartridge, require at least one
+    /// KV page (16 tokens) of overlap before overriding load balance.
+    pub fn new() -> PrefixAffinity {
+        PrefixAffinity::with_params(64, super::engine::PAGE_SIZE)
+    }
+
+    pub fn with_params(window: usize, min_match: usize) -> PrefixAffinity {
+        PrefixAffinity {
+            tokenizer: crate::host::tokenizer::ByteTokenizer::new(),
+            shadows: Vec::new(),
+            window: window.max(1),
+            min_match: min_match.max(1),
+            pending: None,
+            fallback: LeastLoaded,
+        }
+    }
+
+    fn ensure_slots(&mut self, n: usize) {
+        while self.shadows.len() < n {
+            self.shadows.push(VecDeque::new());
+        }
+    }
+
+    /// Longest shadow-index prefix match of `toks` on cartridge `i`.
+    fn match_len(&self, i: usize, toks: &[u32]) -> usize {
+        self.shadows[i]
+            .iter()
+            .map(|p| crate::host::prefix_cache::common_prefix_len(p, toks))
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+impl Default for PrefixAffinity {
+    fn default() -> Self {
+        PrefixAffinity::new()
+    }
+}
+
+impl Dispatch for PrefixAffinity {
+    fn pick(&mut self, loads: &[Option<usize>], req: &GenRequest) -> Option<usize> {
+        self.ensure_slots(loads.len());
+        let toks = self.tokenizer.encode(&req.prompt);
+        let mut best: Option<(usize, usize)> = None; // (match_len, cartridge)
+        for (i, load) in loads.iter().enumerate() {
+            if load.is_none() {
+                continue; // dead, draining, or saturated
+            }
+            let m = self.match_len(i, &toks);
+            if m >= self.min_match && best.map_or(true, |(bm, _)| m > bm) {
+                best = Some((m, i));
+            }
+        }
+        self.pending = Some((req.id, toks));
+        match best {
+            Some((_, i)) => Some(i),
+            None => self.fallback.pick(loads, req),
+        }
+    }
+
+    fn placed(&mut self, cartridge: usize, req: &GenRequest) {
+        self.ensure_slots(cartridge + 1);
+        // the dispatcher calls placed() right after the pick() for the same
+        // request, so the tokens are normally already encoded
+        let toks = match self.pending.take() {
+            Some((id, toks)) if id == req.id => toks,
+            _ => self.tokenizer.encode(&req.prompt),
+        };
+        let ring = &mut self.shadows[cartridge];
+        ring.push_back(toks);
+        while ring.len() > self.window {
+            ring.pop_front();
+        }
+    }
+
+    fn cartridge_lost(&mut self, cartridge: usize) {
+        if let Some(ring) = self.shadows.get_mut(cartridge) {
+            ring.clear();
+        }
     }
 }
 
@@ -260,6 +392,9 @@ struct Slot {
     dead: bool,
     drain_sent: bool,
     drained: Option<ServingMetrics>,
+    /// Latest periodic metrics checkpoint from the worker; a cartridge that
+    /// dies mid-request reports these counters instead of zeros.
+    checkpoint: Option<ServingMetrics>,
     /// ticket → pending result, for completion routing and requeue.
     in_flight: HashMap<u64, Pending>,
 }
@@ -272,6 +407,7 @@ impl Slot {
             dead: false,
             drain_sent: false,
             drained: None,
+            checkpoint: None,
             in_flight: HashMap::new(),
         }
     }
@@ -286,6 +422,7 @@ fn failed_result(req: &GenRequest) -> GenResult {
     GenResult {
         id: req.id,
         prompt_tokens: 0,
+        skipped_prompt_tokens: 0,
         tokens: Vec::new(),
         text: String::new(),
         ttft_s: 0.0,
@@ -331,8 +468,12 @@ fn dispatcher(mut slots: Vec<Slot>, rx: Receiver<FleetMsg>, mut dispatch: Box<dy
                     let _ = p.tx.send(result);
                 }
             }
+            FleetMsg::Event(WorkerEvent::Checkpoint(w, metrics)) => {
+                slots[w].checkpoint = Some(metrics);
+            }
             FleetMsg::Event(WorkerEvent::Died(w, reason)) => {
                 eprintln!("[ita-fleet] cartridge {w} died: {reason}");
+                dispatch.cartridge_lost(w);
                 let slot = &mut slots[w];
                 slot.dead = true;
                 let mut orphans: Vec<Pending> =
@@ -387,7 +528,8 @@ fn pump(
                 (s.accepting() && s.in_flight.len() < s.capacity).then(|| s.in_flight.len())
             })
             .collect();
-        let Some(w) = dispatch.pick(&loads) else { return };
+        let front = queue.front().expect("queue non-empty");
+        let Some(w) = dispatch.pick(&loads, &front.req) else { return };
         if loads.get(w).copied().flatten().is_none() {
             return; // defensive: policy picked an ineligible cartridge
         }
@@ -400,6 +542,7 @@ fn pump(
         let mut wire_req = p.req.clone();
         wire_req.id = ticket;
         if slots[w].worker.send(WorkerMsg::Submit(wire_req, p.arrived)) {
+            dispatch.placed(w, &p.req);
             slots[w].in_flight.insert(ticket, p);
         } else {
             // channel closed without a Died event (shouldn't happen) —
@@ -442,11 +585,10 @@ fn try_finish(
 }
 
 /// Assemble a [`FleetMetrics`] from drained metrics where final, live
-/// snapshots where possible, and defaults for dead cartridges. Live
-/// snapshots block until each busy worker finishes its current step (exact
-/// counters, like the pre-fleet `Server::metrics()`); a cartridge whose
-/// worker died before its Died event was processed reports zeroed counters
-/// for that snapshot.
+/// snapshots where possible, the last periodic checkpoint for dead
+/// cartridges, and defaults only when a cartridge died before ever
+/// checkpointing. Live snapshots block until each busy worker finishes its
+/// current step (exact counters, like the pre-fleet `Server::metrics()`).
 fn snapshot(slots: &[Slot], started: Instant, requeued: u64, failed: u64) -> FleetMetrics {
     // fan all snapshot requests out first, then collect: concurrent slow
     // workers overlap their waits instead of stalling the dispatcher for
@@ -465,16 +607,19 @@ fn snapshot(slots: &[Slot], started: Instant, requeued: u64, failed: u64) -> Fle
         .iter()
         .zip(replies)
         .map(|(s, rx)| {
+            let checkpoint = || s.checkpoint.clone().unwrap_or_default();
             let serving = if let Some(m) = &s.drained {
                 m.clone()
             } else if let Some(rx) = rx {
                 // block until the worker replies between steps — exact
-                // counters, like the pre-fleet Server::metrics(); the recv
-                // only errs if the worker died mid-request (then its
-                // engine-side counters are gone anyway)
-                rx.recv().unwrap_or_default()
+                // counters, like the pre-fleet Server::metrics(); if the
+                // worker died mid-request instead of replying, fall back to
+                // its last periodic checkpoint
+                rx.recv().unwrap_or_else(|_| checkpoint())
             } else {
-                ServingMetrics::default()
+                // dead cartridge: its last checkpoint is the best surviving
+                // record of the work it actually did
+                checkpoint()
             };
             CartridgeMetrics { cartridge: s.worker.id, alive: !s.dead, serving }
         })
@@ -492,25 +637,79 @@ mod tests {
     use super::*;
     use crate::config::ModelConfig;
 
+    fn any_req() -> GenRequest {
+        GenRequest::greedy(0, "policy probe", 1)
+    }
+
     #[test]
     fn least_loaded_picks_minimum() {
         let mut d = LeastLoaded;
-        assert_eq!(d.pick(&[Some(3), Some(1), Some(2)]), Some(1));
-        assert_eq!(d.pick(&[None, Some(5), None]), Some(1));
-        assert_eq!(d.pick(&[None, None]), None);
-        assert_eq!(d.pick(&[]), None);
+        let r = any_req();
+        assert_eq!(d.pick(&[Some(3), Some(1), Some(2)], &r), Some(1));
+        assert_eq!(d.pick(&[None, Some(5), None], &r), Some(1));
+        assert_eq!(d.pick(&[None, None], &r), None);
+        assert_eq!(d.pick(&[], &r), None);
         // ties break toward the lowest index
-        assert_eq!(d.pick(&[Some(2), Some(2)]), Some(0));
+        assert_eq!(d.pick(&[Some(2), Some(2)], &r), Some(0));
     }
 
     #[test]
     fn round_robin_rotates_and_skips_dead() {
         let mut d = RoundRobin::new();
-        assert_eq!(d.pick(&[Some(0), Some(0), Some(0)]), Some(0));
-        assert_eq!(d.pick(&[Some(0), Some(0), Some(0)]), Some(1));
-        assert_eq!(d.pick(&[Some(0), None, Some(0)]), Some(2));
-        assert_eq!(d.pick(&[Some(0), None, Some(0)]), Some(0));
-        assert_eq!(d.pick(&[None, None, None]), None);
+        let r = any_req();
+        assert_eq!(d.pick(&[Some(0), Some(0), Some(0)], &r), Some(0));
+        assert_eq!(d.pick(&[Some(0), Some(0), Some(0)], &r), Some(1));
+        assert_eq!(d.pick(&[Some(0), None, Some(0)], &r), Some(2));
+        assert_eq!(d.pick(&[Some(0), None, Some(0)], &r), Some(0));
+        assert_eq!(d.pick(&[None, None, None], &r), None);
+    }
+
+    #[test]
+    fn prefix_affinity_routes_to_matching_cartridge() {
+        let mut d = PrefixAffinity::with_params(8, 4);
+        let sys = "shared system prompt: answer briefly and cite sources";
+        let a = GenRequest::greedy(0, &format!("{sys} Q1"), 1);
+        let b = GenRequest::greedy(1, &format!("{sys} Q2"), 1);
+        let other = GenRequest::greedy(2, "totally unrelated", 1);
+        let loads = [Some(3), Some(0)];
+        // nothing learned yet → least-loaded fallback
+        assert_eq!(d.pick(&loads, &a), Some(1));
+        d.placed(1, &a);
+        // shared prefix now beats the load imbalance
+        assert_eq!(d.pick(&[Some(0), Some(3)], &b), Some(1));
+        // unrelated prompt falls back to least-loaded
+        assert_eq!(d.pick(&[Some(0), Some(3)], &other), Some(0));
+        // a saturated matching cartridge is ineligible → fallback
+        assert_eq!(d.pick(&[Some(0), None], &b), Some(0));
+        // losing the cartridge clears its shadow index
+        d.cartridge_lost(1);
+        assert_eq!(d.pick(&[Some(3), Some(0)], &b), Some(1));
+    }
+
+    #[test]
+    fn fleet_with_prefix_affinity_serves_all() {
+        let fleet = Fleet::with_dispatch(
+            2,
+            |_id| Ok(Engine::synthetic(&ModelConfig::TINY, 42)),
+            SchedulerOpts::default(),
+            Box::new(PrefixAffinity::new()),
+        )
+        .unwrap();
+        let handles: Vec<_> = (0..6)
+            .map(|i| {
+                fleet.submit(GenRequest::greedy(
+                    i,
+                    &format!("the same long shared system prompt, suffix {i}"),
+                    4,
+                ))
+            })
+            .collect();
+        for h in handles {
+            assert!(!h.wait().unwrap().tokens.is_empty());
+        }
+        let m = fleet.shutdown().unwrap();
+        assert_eq!(m.aggregate().requests_completed, 6);
+        assert_eq!(m.failed_requests, 0);
     }
 
     #[test]

@@ -48,7 +48,12 @@ impl LatencyRecorder {
 pub struct ServingMetrics {
     pub requests_completed: u64,
     pub tokens_generated: u64,
+    /// Prompt tokens actually run through device prefill.
     pub tokens_prefilled: u64,
+    /// Prompt tokens served from the radix prefix cache instead of being
+    /// prefilled (`tokens_prefilled + prefill_skipped_tokens` = prompt
+    /// tokens admitted).
+    pub prefill_skipped_tokens: u64,
     pub wall_s: f64,
     pub ttft: LatencyRecorder,
     pub itl: LatencyRecorder,
@@ -81,6 +86,7 @@ impl ServingMetrics {
         self.requests_completed += other.requests_completed;
         self.tokens_generated += other.tokens_generated;
         self.tokens_prefilled += other.tokens_prefilled;
+        self.prefill_skipped_tokens += other.prefill_skipped_tokens;
         self.wall_s = self.wall_s.max(other.wall_s);
         self.ttft.merge(&other.ttft);
         self.itl.merge(&other.itl);
@@ -96,12 +102,13 @@ impl ServingMetrics {
 
     pub fn report(&self) -> String {
         format!(
-            "requests={} prefill_tokens={} decode_tokens={} wall={:.2}s \
+            "requests={} prefill_tokens={} prefill_skipped={} decode_tokens={} wall={:.2}s \
              decode_throughput={:.1} tok/s ttft_p50={:.1}ms ttft_p95={:.1}ms \
              itl_p50={:.2}ms itl_p95={:.2}ms batch_waste={:.1}% \
              interface={:.2} MB device_macs={:.2}G",
             self.requests_completed,
             self.tokens_prefilled,
+            self.prefill_skipped_tokens,
             self.tokens_generated,
             self.wall_s,
             self.decode_tok_per_s(),
@@ -122,9 +129,11 @@ pub struct CartridgeMetrics {
     pub cartridge: usize,
     /// False once the worker died (panic / engine error). Gracefully
     /// drained cartridges report true — they were healthy to the end. A
-    /// dead cartridge's engine-side counters are lost with its device; the
-    /// requests it held were requeued and are counted by the survivor that
-    /// finished them.
+    /// dead cartridge reports its last periodic metrics checkpoint (work it
+    /// verifiably completed); the requests it still held were requeued and
+    /// are counted by the survivor that finished them, so decode tokens the
+    /// dead cartridge spent on a requeued request appear in both — that is
+    /// real work performed, not double-billed completions.
     pub alive: bool,
     pub serving: ServingMetrics,
 }

@@ -12,10 +12,13 @@
 //!   its own thread, supervised over channels.
 //! * [`fleet`] — the multi-cartridge coordinator: N workers behind a shared
 //!   admission queue with pluggable [`Dispatch`](fleet::Dispatch) policy
-//!   (least-loaded by default), per-cartridge metrics aggregation, graceful
+//!   (least-loaded by default; [`PrefixAffinity`](fleet::PrefixAffinity)
+//!   routes shared-prefix traffic to the cartridge holding that prefix in
+//!   its radix cache), per-cartridge metrics aggregation with periodic
+//!   worker checkpoints (a dead cartridge's counters survive), graceful
 //!   drain, and worker-panic recovery (in-flight requests requeue onto a
 //!   healthy cartridge — the device is stateless, so a restart is just a
-//!   re-prefill).
+//!   re-prefill of whatever suffix the survivor hasn't cached).
 //! * [`server`] — the single-cartridge front end, implemented as the
 //!   `n = 1` case of the fleet.
 //! * [`metrics`] — latency/throughput/traffic accounting, per engine
@@ -47,7 +50,7 @@ pub mod worker;
 pub mod workload;
 
 pub use engine::Engine;
-pub use fleet::{Dispatch, Fleet, LeastLoaded, ResultHandle, RoundRobin};
+pub use fleet::{Dispatch, Fleet, LeastLoaded, PrefixAffinity, ResultHandle, RoundRobin};
 pub use metrics::{CartridgeMetrics, FleetMetrics, ServingMetrics};
 pub use request::{GenRequest, GenResult};
 pub use server::Server;

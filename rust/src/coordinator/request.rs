@@ -30,6 +30,9 @@ impl GenRequest {
 pub struct GenResult {
     pub id: u64,
     pub prompt_tokens: usize,
+    /// Leading prompt tokens served from the prefix cache (no prefill ran
+    /// for them); `<= prompt_tokens`.
+    pub skipped_prompt_tokens: usize,
     pub tokens: Vec<u32>,
     pub text: String,
     /// Queue-entry → first generated token.

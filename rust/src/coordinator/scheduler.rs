@@ -23,18 +23,26 @@ pub struct SchedulerOpts {
     pub max_active: usize,
     /// Sampling seed (deterministic serving).
     pub seed: u64,
+    /// Radix prefix-cache page budget (0 = prefill reuse disabled). With a
+    /// budget, admitted prompts are matched against previously served ones
+    /// and the matched prefix skips device prefill entirely — its KV pages
+    /// are shared copy-on-write. Outputs are bit-identical either way.
+    pub prefix_cache_pages: usize,
 }
 
 impl Default for SchedulerOpts {
     fn default() -> Self {
-        SchedulerOpts { max_active: 0, seed: 0x17A }
+        SchedulerOpts { max_active: 0, seed: 0x17A, prefix_cache_pages: 8192 }
     }
 }
 
 struct Active {
     req: GenRequest,
     seq: SeqId,
-    prompt_tokens: usize,
+    /// full tokenized prompt (kept for prefix-cache publication)
+    prompt: Vec<u32>,
+    /// leading tokens served from the prefix cache (no prefill ran)
+    skipped: usize,
     generated: Vec<u32>,
     /// last sampled token (input for the next decode step)
     next_token: u32,
@@ -65,6 +73,10 @@ pub struct Scheduler {
 impl Scheduler {
     pub fn new(engine: Engine, opts: SchedulerOpts) -> Scheduler {
         let max = if opts.max_active == 0 { engine.max_batch() } else { opts.max_active };
+        let mut engine = engine;
+        if opts.prefix_cache_pages > 0 {
+            engine.enable_prefix_cache(opts.prefix_cache_pages);
+        }
         Scheduler {
             engine,
             tokenizer: ByteTokenizer::new(),
@@ -114,7 +126,8 @@ impl Scheduler {
         self.batch_stats.record(&p);
         let mut offset = 0;
         let mut sampled: Vec<u32> = Vec::with_capacity(self.active.len());
-        for &wave in &p.waves {
+        for w in &p.waves {
+            let wave = w.rows;
             let ids: Vec<SeqId> =
                 self.active[offset..offset + wave].iter().map(|a| a.seq).collect();
             let tokens: Vec<u32> =
@@ -161,18 +174,23 @@ impl Scheduler {
         Ok(out)
     }
 
-    /// Admit queued requests up to capacity, batch-prefill them, and return
-    /// any that finish on their very first token.
+    /// Admit queued requests up to capacity, batch-prefill them (skipping
+    /// any prefix already in the radix cache), and return any that finish
+    /// on their very first token.
     fn admit(&mut self) -> Result<Vec<GenResult>> {
         let mut new_ids = Vec::new();
-        let mut new_prompts: Vec<Vec<u32>> = Vec::new();
+        let mut new_suffixes: Vec<Vec<u32>> = Vec::new();
         while self.active.len() + new_ids.len() < self.opts.max_active {
             let Some((req, enqueued)) = self.queue.pop_front() else { break };
             let prompt = self.tokenizer.encode(&req.prompt);
-            let seq = self.engine.new_sequence();
-            self.metrics.tokens_prefilled += prompt.len() as u64;
+            // graft the longest cached prefix; only the suffix prefills
+            let (seq, skipped) = self.engine.new_sequence_with_prefix(&prompt);
+            self.metrics.tokens_prefilled += (prompt.len() - skipped) as u64;
+            self.metrics.prefill_skipped_tokens += skipped as u64;
+            new_suffixes.push(prompt[skipped..].to_vec());
             self.active.push(Active {
-                prompt_tokens: prompt.len(),
+                prompt,
+                skipped,
                 req,
                 seq,
                 generated: Vec::new(),
@@ -181,17 +199,25 @@ impl Scheduler {
                 first_token_at: None,
             });
             new_ids.push(seq);
-            new_prompts.push(prompt);
         }
         if new_ids.is_empty() {
             return Ok(Vec::new());
         }
-        // batched prefill across the newly admitted requests
-        let prompts: Vec<&[u32]> = new_prompts.iter().map(|p| p.as_slice()).collect();
+        // batched prefill across the newly admitted requests' suffixes
+        let prompts: Vec<&[u32]> = new_suffixes.iter().map(|p| p.as_slice()).collect();
         let lasts = self.engine.prefill_batch(&new_ids, &prompts)?;
+        // the new Actives are the contiguous tail of `active`, in
+        // `new_ids` order — no scans needed to find them again
+        let start = self.active.len() - new_ids.len();
+        // publish the freshly prefilled prompts for future reuse
+        for (i, seq) in new_ids.iter().enumerate() {
+            let a = &self.active[start + i];
+            debug_assert_eq!(a.seq, *seq);
+            self.engine.register_prefix(*seq, &a.prompt);
+        }
         let now = Instant::now();
-        for (seq, last) in new_ids.iter().zip(lasts) {
-            let a = self.active.iter_mut().find(|a| a.seq == *seq).unwrap();
+        for (i, last) in lasts.into_iter().enumerate() {
+            let a = &mut self.active[start + i];
             let tok = sample(&last, &a.req.sampling, &mut self.rng);
             a.next_token = tok;
             a.generated.push(tok);
@@ -234,7 +260,8 @@ impl Scheduler {
         };
         GenResult {
             id: a.req.id,
-            prompt_tokens: a.prompt_tokens,
+            prompt_tokens: a.prompt.len(),
+            skipped_prompt_tokens: a.skipped,
             text: self.tokenizer.decode(&a.generated),
             tokens: a.generated,
             ttft_s: a
@@ -280,7 +307,7 @@ mod tests {
         let emb = EmbeddingTable::new(dev.weights().emb.clone());
         let n_heads = m.n_heads;
         let engine = Engine::new(Box::new(dev), emb, n_heads);
-        Some(Scheduler::new(engine, SchedulerOpts { max_active: 0, seed }))
+        Some(Scheduler::new(engine, SchedulerOpts { seed, ..SchedulerOpts::default() }))
     }
 
     #[test]

@@ -46,6 +46,12 @@ pub enum WorkerEvent {
     BootFailed(CartridgeId, String),
     /// One request finished.
     Done(CartridgeId, super::request::GenResult),
+    /// Periodic engine-side metrics checkpoint (counters and ledgers; the
+    /// per-request latency sample vectors are stripped to keep checkpoints
+    /// O(1)). The owner keeps the latest one so a cartridge that later dies
+    /// mid-request still contributes its counters to fleet aggregates
+    /// (instead of reporting zeros).
+    Checkpoint(CartridgeId, ServingMetrics),
     /// Drain complete; final metrics attached. The thread has exited.
     Drained(CartridgeId, ServingMetrics),
     /// The worker hit an engine error or panicked; its in-flight requests
@@ -151,6 +157,11 @@ fn worker_thread<E, F>(
     }
 }
 
+/// Steps between unconditional metric checkpoints while busy (completions
+/// also checkpoint immediately, so this only bounds staleness during long
+/// decode stretches).
+const CHECKPOINT_EVERY_STEPS: u32 = 16;
+
 fn worker_loop<E>(
     id: CartridgeId,
     sched: &mut Scheduler,
@@ -161,6 +172,7 @@ fn worker_loop<E>(
     E: Send + 'static,
 {
     let mut draining = false;
+    let mut steps_since_checkpoint: u32 = 0;
     loop {
         // ingest commands; when idle the channel is the only possible
         // source of work, so block on it outright (no busy-wake)
@@ -186,8 +198,21 @@ fn worker_loop<E>(
         if sched.pending() > 0 {
             match sched.step() {
                 Ok(done) => {
+                    let completed = !done.is_empty();
                     for result in done {
                         let _ = events.send(wrap(WorkerEvent::Done(id, result)));
+                    }
+                    steps_since_checkpoint += 1;
+                    if completed || steps_since_checkpoint >= CHECKPOINT_EVERY_STEPS {
+                        steps_since_checkpoint = 0;
+                        // counters only: the latency recorders grow one
+                        // sample per completion, and cloning them into
+                        // every checkpoint would make total checkpoint
+                        // cost quadratic in requests served
+                        let mut snap = sched.metrics();
+                        snap.ttft = Default::default();
+                        snap.itl = Default::default();
+                        let _ = events.send(wrap(WorkerEvent::Checkpoint(id, snap)));
                     }
                 }
                 Err(e) => {
@@ -237,11 +262,23 @@ mod tests {
             }
             _ => panic!("expected Done"),
         }
+        // a completion is followed by a metrics checkpoint
+        let mut saw_checkpoint = false;
         assert!(w.send(WorkerMsg::Drain));
-        match erx.recv().unwrap() {
-            WorkerEvent::Drained(0, m) => assert_eq!(m.requests_completed, 1),
-            _ => panic!("expected Drained"),
+        loop {
+            match erx.recv().unwrap() {
+                WorkerEvent::Checkpoint(0, m) => {
+                    assert_eq!(m.requests_completed, 1);
+                    saw_checkpoint = true;
+                }
+                WorkerEvent::Drained(0, m) => {
+                    assert_eq!(m.requests_completed, 1);
+                    break;
+                }
+                _ => panic!("expected Checkpoint or Drained"),
+            }
         }
+        assert!(saw_checkpoint, "completion should emit a checkpoint");
     }
 
     #[test]

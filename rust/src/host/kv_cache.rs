@@ -7,6 +7,15 @@
 //!
 //! Layout: one page holds `page_size` consecutive token rows for one
 //! (sequence, layer) stream, K and V side by side.
+//!
+//! Pages are **reference counted** so holders other than one sequence can
+//! keep a page alive: [`share_pages`](PagedKvCache::share_pages) grafts an
+//! existing run of pages into a fresh sequence (each holder owns one ref),
+//! and the [`prefix cache`](super::prefix_cache) retains whole prefix runs
+//! across sequence lifetimes. Writes go through copy-on-write: appending
+//! into a page another holder can still see first copies it
+//! ([`cow_page`](PagedKvCache::cow_page)), so sharers never observe each
+//! other's mutations.
 
 use std::collections::HashMap;
 
@@ -35,11 +44,15 @@ pub struct PagedKvCache {
     d_model: usize,
     page_size: usize,
     pool: Vec<Page>,
+    /// per-page holder count; a page is in `free` iff its count is 0
+    refs: Vec<u32>,
     free: Vec<usize>,
     seqs: HashMap<SeqId, SeqState>,
     next_id: u64,
     /// high-water mark of allocated pages (capacity telemetry)
     pub peak_pages: usize,
+    /// pages copied by copy-on-write (sharing telemetry)
+    pub cow_copies: u64,
 }
 
 impl PagedKvCache {
@@ -50,15 +63,21 @@ impl PagedKvCache {
             d_model,
             page_size,
             pool: Vec::new(),
+            refs: Vec::new(),
             free: Vec::new(),
             seqs: HashMap::new(),
             next_id: 0,
             peak_pages: 0,
+            cow_copies: 0,
         }
     }
 
     pub fn page_size(&self) -> usize {
         self.page_size
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
     }
 
     /// Register a new sequence.
@@ -72,17 +91,21 @@ impl PagedKvCache {
         id
     }
 
-    /// Release a sequence and return its pages to the pool.
+    /// Release a sequence's hold on its pages; pages whose last holder this
+    /// was return to the pool.
     pub fn free_seq(&mut self, id: SeqId) {
         if let Some(state) = self.seqs.remove(&id) {
             for layer_pages in state.pages {
-                self.free.extend(layer_pages);
+                for idx in layer_pages {
+                    self.release_page(idx);
+                }
             }
         }
     }
 
     fn grab_page(&mut self) -> usize {
         if let Some(idx) = self.free.pop() {
+            self.refs[idx] = 1;
             idx
         } else {
             let idx = self.pool.len();
@@ -90,9 +113,106 @@ impl PagedKvCache {
                 k: vec![0.0; self.page_size * self.d_model],
                 v: vec![0.0; self.page_size * self.d_model],
             });
+            self.refs.push(1);
             self.peak_pages = self.peak_pages.max(self.pool.len());
             idx
         }
+    }
+
+    /// Take an extra hold on an allocated page (page sharing).
+    pub fn retain_page(&mut self, idx: usize) {
+        assert!(self.refs[idx] > 0, "retain of a free page {idx}");
+        self.refs[idx] += 1;
+    }
+
+    /// Drop one hold on a page; the last release returns it to the pool.
+    pub fn release_page(&mut self, idx: usize) {
+        assert!(self.refs[idx] > 0, "double release of page {idx}");
+        self.refs[idx] -= 1;
+        if self.refs[idx] == 0 {
+            self.free.push(idx);
+        }
+    }
+
+    /// Current holder count of a page (0 = free).
+    pub fn page_refcount(&self, idx: usize) -> u32 {
+        self.refs[idx]
+    }
+
+    /// Page table of (seq, layer), in token order.
+    pub fn seq_pages(&self, id: SeqId, layer: usize) -> Option<&[usize]> {
+        self.seqs.get(&id).map(|s| s.pages[layer].as_slice())
+    }
+
+    /// Graft a shared prefix into a **fresh** sequence: `pages_per_layer[l]`
+    /// lists the pages covering positions `0..len` of layer `l` (the last
+    /// page may be partially filled). The sequence takes one hold on every
+    /// page and its committed length becomes `len`; subsequent appends that
+    /// land in a still-shared page go through copy-on-write.
+    pub fn share_pages(
+        &mut self,
+        into: SeqId,
+        pages_per_layer: &[Vec<usize>],
+        len: usize,
+    ) -> Result<()> {
+        if pages_per_layer.len() != self.n_layers {
+            bail!("share_pages: expected {} layers", self.n_layers);
+        }
+        let need = len.div_ceil(self.page_size);
+        {
+            let state = self.seqs.get(&into).ok_or_else(|| anyhow!("unknown seq"))?;
+            if state.len != 0 || state.pages.iter().any(|p| !p.is_empty()) {
+                bail!("share_pages: target sequence is not fresh");
+            }
+        }
+        for pages in pages_per_layer {
+            if pages.len() != need {
+                bail!("share_pages: need {need} pages/layer for len {len}");
+            }
+            for &idx in pages {
+                if idx >= self.pool.len() || self.refs[idx] == 0 {
+                    bail!("share_pages: page {idx} is not allocated");
+                }
+            }
+        }
+        for pages in pages_per_layer {
+            for &idx in pages {
+                self.retain_page(idx);
+            }
+        }
+        let state = self.seqs.get_mut(&into).unwrap();
+        state.pages = pages_per_layer.to_vec();
+        state.len = len;
+        Ok(())
+    }
+
+    /// Make page `page_no` of (seq, layer) exclusively owned, copying it if
+    /// any other holder remains; returns the (possibly new) page index.
+    pub fn cow_page(&mut self, id: SeqId, layer: usize, page_no: usize) -> Result<usize> {
+        let state = self.seqs.get(&id).ok_or_else(|| anyhow!("unknown seq"))?;
+        let old = *state.pages[layer]
+            .get(page_no)
+            .ok_or_else(|| anyhow!("cow_page: page_no {page_no} out of range"))?;
+        if self.refs[old] == 1 {
+            return Ok(old);
+        }
+        let fresh = self.grab_page();
+        // old has other holders, so it was never on the free list: the two
+        // indices are distinct and the pool can be split-borrowed
+        debug_assert_ne!(old, fresh);
+        let (src, dst) = if old < fresh {
+            let (lo, hi) = self.pool.split_at_mut(fresh);
+            (&lo[old], &mut hi[0])
+        } else {
+            let (lo, hi) = self.pool.split_at_mut(old);
+            (&hi[0], &mut lo[fresh])
+        };
+        dst.k.copy_from_slice(&src.k);
+        dst.v.copy_from_slice(&src.v);
+        self.release_page(old);
+        self.seqs.get_mut(&id).unwrap().pages[layer][page_no] = fresh;
+        self.cow_copies += 1;
+        Ok(fresh)
     }
 
     /// Append one token's K and V rows for `layer` at the next committed
@@ -136,8 +256,8 @@ impl PagedKvCache {
             let pidx = self.grab_page();
             self.seqs.get_mut(&id).unwrap().pages[layer].push(pidx);
         }
-        let state = self.seqs.get(&id).unwrap();
-        let pidx = state.pages[layer][page_no];
+        // writes never leak into a page another holder can still read
+        let pidx = self.cow_page(id, layer, page_no)?;
         let page = &mut self.pool[pidx];
         page.k[slot * d..(slot + 1) * d].copy_from_slice(k);
         page.v[slot * d..(slot + 1) * d].copy_from_slice(v);
@@ -350,6 +470,67 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn shared_prefix_then_cow_isolates_writers() {
+        let d = 4;
+        let mut c = PagedKvCache::new(1, d, 4);
+        let donor = c.alloc_seq();
+        for t in 0..6 {
+            c.append(donor, 0, &row(d, t as f32), &row(d, -(t as f32))).unwrap();
+            c.advance(donor).unwrap();
+        }
+        // graft the donor's 6-token prefix (pages [full, partial]) into b
+        let donor_pages = vec![c.seq_pages(donor, 0).unwrap().to_vec()];
+        let b = c.alloc_seq();
+        c.share_pages(b, &donor_pages, 6).unwrap();
+        assert_eq!(c.len(b), 6);
+        assert_eq!(c.page_refcount(donor_pages[0][0]), 2);
+        // b reads the shared rows
+        c.for_each_kv(b, 0, |pos, k, _| assert_eq!(k[0], pos as f32));
+        // b appends into the shared partial page → COW; donor is untouched
+        c.append(b, 0, &row(d, 100.0), &row(d, 100.0)).unwrap();
+        c.advance(b).unwrap();
+        assert_eq!(c.cow_copies, 1);
+        assert_ne!(c.seq_pages(b, 0).unwrap()[1], donor_pages[0][1]);
+        c.for_each_kv(donor, 0, |pos, k, _| assert_eq!(k[0], pos as f32));
+        let mut rows = vec![];
+        c.for_each_kv(b, 0, |_, k, _| rows.push(k[0]));
+        assert_eq!(rows, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 100.0]);
+        // freeing the donor keeps the still-shared full page alive for b
+        c.free_seq(donor);
+        assert_eq!(c.page_refcount(donor_pages[0][0]), 1);
+        c.for_each_kv(b, 0, |pos, k, _| {
+            if pos < 6 {
+                assert_eq!(k[0], pos as f32);
+            }
+        });
+        c.free_seq(b);
+        let (alloc, free, _) = c.stats();
+        assert_eq!(alloc, free, "all pages return once the last holder goes");
+    }
+
+    #[test]
+    fn share_pages_rejects_bad_targets() {
+        let mut c = PagedKvCache::new(1, 4, 2);
+        let a = c.alloc_seq();
+        c.append(a, 0, &row(4, 1.0), &row(4, 1.0)).unwrap();
+        c.advance(a).unwrap();
+        let pages = vec![c.seq_pages(a, 0).unwrap().to_vec()];
+        // non-fresh target
+        let b = c.alloc_seq();
+        c.append(b, 0, &row(4, 2.0), &row(4, 2.0)).unwrap();
+        c.advance(b).unwrap();
+        assert!(c.share_pages(b, &pages, 1).is_err());
+        // wrong page count for the requested length
+        let f = c.alloc_seq();
+        assert!(c.share_pages(f, &pages, 3).is_err());
+        // unknown sequence
+        assert!(c.share_pages(SeqId(99), &pages, 1).is_err());
+        // a fresh target works
+        c.share_pages(f, &pages, 1).unwrap();
+        assert_eq!(c.len(f), 1);
     }
 
     #[test]

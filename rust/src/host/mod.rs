@@ -3,17 +3,22 @@
 //!
 //! * [`tokenizer`] — text ↔ token ids (lightweight vocabulary lookup).
 //! * [`embedding`] — token-embedding table lookup.
-//! * [`kv_cache`] — paged KV-cache manager in host RAM.
+//! * [`kv_cache`] — paged KV-cache manager in host RAM, with refcounted
+//!   pages, page sharing, and copy-on-write.
+//! * [`prefix_cache`] — radix tree of cached prompt prefixes over the
+//!   paged KV pool (cross-request prefill reuse).
 //! * [`attention`] — softmax(QKᵀ/√d)V over the cached context, with RoPE.
 //! * [`sampling`] — greedy / top-k / nucleus next-token selection.
 
 pub mod attention;
 pub mod embedding;
 pub mod kv_cache;
+pub mod prefix_cache;
 pub mod sampling;
 pub mod tokenizer;
 
 pub use attention::AttentionConfig;
 pub use kv_cache::{PagedKvCache, SeqId};
+pub use prefix_cache::{PrefixCache, PrefixMatch};
 pub use sampling::{sample, SamplingParams};
 pub use tokenizer::ByteTokenizer;

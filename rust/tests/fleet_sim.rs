@@ -199,7 +199,7 @@ fn fleet_of_one_matches_scheduler_with_seeded_sampling() {
     // with max_active = 1 requests decode strictly FCFS, so the sampling
     // rng is consumed in exactly the same order in the threaded fleet and
     // the synchronous scheduler: byte-identical even at temperature > 0
-    let opts = SchedulerOpts { max_active: 1, seed: 77 };
+    let opts = SchedulerOpts { max_active: 1, seed: 77, ..SchedulerOpts::default() };
     let reqs: Vec<GenRequest> = (0..4)
         .map(|i| GenRequest {
             id: i,

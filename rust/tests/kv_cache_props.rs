@@ -1,9 +1,12 @@
-//! Property-style tests for `PagedKvCache`: random alloc/append/free
-//! schedules must preserve the page-accounting invariants and never alias
-//! pages across sequences. Seeded through `util::prng::Prng` (via the
+//! Property-style tests for `PagedKvCache` (and the radix `PrefixCache`
+//! over it): random alloc/append/share/free schedules must preserve the
+//! page-accounting and refcount invariants, never alias pages across
+//! sequences, keep copy-on-write writers isolated, and never evict
+//! referenced prefix nodes. Seeded through `util::prng::Prng` (via the
 //! quickprop harness), so every failure is replayable.
 
 use ita::host::kv_cache::{PagedKvCache, SeqId};
+use ita::host::prefix_cache::PrefixCache;
 use ita::util::quickprop::forall;
 
 fn pages_for(len: usize, page: usize) -> usize {
@@ -139,6 +142,295 @@ fn prop_freed_pages_recycle_without_growth() {
             count += 1;
         });
         assert_eq!(count, tokens);
+    });
+}
+
+/// Refcount conservation under random share/append/free schedules: every
+/// page's refcount equals the number of page-table entries referencing it
+/// across live sequences (the only holders in this test), `alloc − free`
+/// equals the number of distinct held pages, and a shared page is freed
+/// only when its last holder releases it.
+#[test]
+fn prop_refcount_conservation_under_sharing() {
+    forall("kv refcounts = live holders; freed only at last release", 50, |g| {
+        let layers = g.usize_in(1, 2);
+        let d = g.usize_in(1, 6);
+        let page = g.usize_in(1, 4);
+        let mut c = PagedKvCache::new(layers, d, page);
+        // model: per live seq, the expected k[0] tag of each position
+        let mut live: Vec<(SeqId, Vec<f32>)> = Vec::new();
+        let mut next_tag = 1.0_f32;
+
+        let append_one = |c: &mut PagedKvCache, id: SeqId, tag: f32, layers: usize, d: usize| {
+            for l in 0..layers {
+                c.append(id, l, &vec![tag; d], &vec![-tag; d]).unwrap();
+            }
+            c.advance(id).unwrap();
+        };
+
+        for _ in 0..g.usize_in(1, 60) {
+            match g.usize_in(0, 9) {
+                0..=2 => {
+                    if live.len() < 5 {
+                        live.push((c.alloc_seq(), Vec::new()));
+                    }
+                }
+                3..=5 => {
+                    if !live.is_empty() {
+                        let i = g.usize_in(0, live.len() - 1);
+                        let tag = next_tag;
+                        next_tag += 1.0;
+                        append_one(&mut c, live[i].0, tag, layers, d);
+                        live[i].1.push(tag);
+                    }
+                }
+                // share a donor's full current prefix into a fresh clone
+                6..=7 => {
+                    if let Some(i) = (!live.is_empty())
+                        .then(|| g.usize_in(0, live.len() - 1))
+                        .filter(|&i| !live[i].1.is_empty() && live.len() < 5)
+                    {
+                        let (donor, tags) = (live[i].0, live[i].1.clone());
+                        let pages: Vec<Vec<usize>> = (0..layers)
+                            .map(|l| c.seq_pages(donor, l).unwrap().to_vec())
+                            .collect();
+                        let clone = c.alloc_seq();
+                        c.share_pages(clone, &pages, tags.len()).unwrap();
+                        live.push((clone, tags));
+                    }
+                }
+                _ => {
+                    if !live.is_empty() {
+                        let i = g.usize_in(0, live.len() - 1);
+                        let (id, _) = live.swap_remove(i);
+                        c.free_seq(id);
+                    }
+                }
+            }
+
+            // invariant: refcount(p) == page-table entries naming p
+            let mut holders: std::collections::HashMap<usize, u32> =
+                std::collections::HashMap::new();
+            for (id, _) in &live {
+                for l in 0..layers {
+                    for &p in c.seq_pages(*id, l).unwrap() {
+                        *holders.entry(p).or_insert(0) += 1;
+                    }
+                }
+            }
+            let (alloc, free, _) = c.stats();
+            assert_eq!(alloc - free, holders.len(), "held-page count drifted");
+            for (&p, &n) in &holders {
+                assert_eq!(c.page_refcount(p), n, "page {p} refcount");
+            }
+        }
+
+        // content: sharing + COW never corrupted anyone's view
+        for (id, tags) in &live {
+            for l in 0..layers {
+                let mut rows = 0;
+                c.for_each_kv(*id, l, |pos, k, v| {
+                    assert_eq!(k[0], tags[pos], "seq {id:?} layer {l} pos {pos}");
+                    assert_eq!(v[0], -tags[pos]);
+                    rows += 1;
+                });
+                assert_eq!(rows, tags.len());
+            }
+        }
+        // freeing everything returns every page exactly once
+        for (id, _) in live {
+            c.free_seq(id);
+        }
+        let (alloc, free, live_n) = c.stats();
+        assert_eq!(alloc, free);
+        assert_eq!(live_n, 0);
+    });
+}
+
+/// COW isolation: after grafting a shared prefix, a writer's appends (and
+/// explicit `cow_page` calls) are never visible through the sibling's or
+/// donor's view, at any divergence point.
+#[test]
+fn prop_cow_writes_never_leak_to_sharers() {
+    forall("cow isolates writers at any divergence point", 60, |g| {
+        let layers = g.usize_in(1, 2);
+        let d = g.usize_in(1, 5);
+        let page = g.usize_in(1, 4);
+        let len = g.usize_in(1, 12);
+        let mut c = PagedKvCache::new(layers, d, page);
+        let donor = c.alloc_seq();
+        for t in 0..len {
+            for l in 0..layers {
+                c.append(donor, l, &vec![t as f32; d], &vec![-(t as f32); d]).unwrap();
+            }
+            c.advance(donor).unwrap();
+        }
+        let pages: Vec<Vec<usize>> =
+            (0..layers).map(|l| c.seq_pages(donor, l).unwrap().to_vec()).collect();
+        // two sharers attach prefixes of different (possibly partial-page)
+        // lengths, then each writes its own divergent continuation
+        let cut_a = g.usize_in(1, len);
+        let cut_b = g.usize_in(1, len);
+        let need = |cut: usize| (cut + page - 1) / page;
+        let a = c.alloc_seq();
+        let pa: Vec<Vec<usize>> = pages.iter().map(|p| p[..need(cut_a)].to_vec()).collect();
+        c.share_pages(a, &pa, cut_a).unwrap();
+        let b = c.alloc_seq();
+        let pb: Vec<Vec<usize>> = pages.iter().map(|p| p[..need(cut_b)].to_vec()).collect();
+        c.share_pages(b, &pb, cut_b).unwrap();
+
+        // one sharer exercises the explicit primitive directly: after
+        // cow_page its page index diverges from the donor's (when shared)
+        let probe_page = g.usize_in(0, need(cut_a) - 1);
+        let before = c.seq_pages(a, 0).unwrap()[probe_page];
+        let after = c.cow_page(a, 0, probe_page).unwrap();
+        assert_eq!(c.seq_pages(a, 0).unwrap()[probe_page], after);
+        assert!(before != after || c.page_refcount(after) == 1);
+
+        let grow_a = g.usize_in(1, 6);
+        let grow_b = g.usize_in(1, 6);
+        for t in 0..grow_a {
+            for l in 0..layers {
+                let tag = 1000.0 + t as f32;
+                c.append(a, l, &vec![tag; d], &vec![-tag; d]).unwrap();
+            }
+            c.advance(a).unwrap();
+        }
+        for t in 0..grow_b {
+            for l in 0..layers {
+                let tag = 2000.0 + t as f32;
+                c.append(b, l, &vec![tag; d], &vec![-tag; d]).unwrap();
+            }
+            c.advance(b).unwrap();
+        }
+
+        let expect = |cut: usize, base: f32, grow: usize| -> Vec<f32> {
+            (0..cut)
+                .map(|t| t as f32)
+                .chain((0..grow).map(|t| base + t as f32))
+                .collect()
+        };
+        let check = |c: &PagedKvCache, id: SeqId, want: &[f32]| {
+            for l in 0..layers {
+                let mut got = Vec::new();
+                c.for_each_kv(id, l, |_, k, _| got.push(k[0]));
+                assert_eq!(got, want, "seq {id:?} layer {l}");
+            }
+        };
+        // donor untouched; each sharer sees prefix + only its own writes
+        check(&c, donor, &(0..len).map(|t| t as f32).collect::<Vec<_>>());
+        check(&c, a, &expect(cut_a, 1000.0, grow_a));
+        check(&c, b, &expect(cut_b, 2000.0, grow_b));
+
+        c.free_seq(donor);
+        check(&c, a, &expect(cut_a, 1000.0, grow_a));
+        check(&c, b, &expect(cut_b, 2000.0, grow_b));
+        c.free_seq(a);
+        c.free_seq(b);
+        let (alloc, free, _) = c.stats();
+        assert_eq!(alloc, free, "page leak after shared lifetimes");
+    });
+}
+
+/// Eviction under budget: the prefix cache sheds cold unreferenced leaves
+/// to fit its page budget but never touches a node whose pages some live
+/// sequence still holds — donors keep reading exact rows throughout.
+#[test]
+fn prop_prefix_eviction_never_touches_referenced_nodes() {
+    forall("prefix eviction respects budget + references", 40, |g| {
+        let layers = 2;
+        let d = 3;
+        let page = g.usize_in(2, 4);
+        let budget = g.usize_in(2, 10) * layers;
+        let mut c = PagedKvCache::new(layers, d, page);
+        let mut pc = PrefixCache::new(layers, page, budget);
+        // prompts share a common stem to exercise splits and extensions
+        let stem: Vec<u32> = (0..g.usize_in(1, 3) * page).map(|i| 7000 + i as u32).collect();
+        let mut donors: Vec<(SeqId, Vec<u32>)> = Vec::new();
+
+        for round in 0..g.usize_in(2, 10) {
+            let mut prompt = stem[..g.usize_in(0, stem.len())].to_vec();
+            let extra = g.usize_in(1, 3 * page);
+            prompt.extend((0..extra).map(|i| (round * 100 + i) as u32));
+
+            // serve it the way the engine does: attach, prefill, publish
+            let id = c.alloc_seq();
+            let m = pc.lookup(&prompt);
+            assert!(m.matched < prompt.len(), "match must leave >=1 token");
+            if m.matched > 0 {
+                c.share_pages(id, &m.pages, m.matched).unwrap();
+                // attached rows must read back as the prompt's own prefix
+                c.for_each_kv(id, 0, |pos, k, _| {
+                    assert_eq!(k[0], prompt[pos] as f32, "stale cached prefix");
+                });
+            }
+            for pos in m.matched..prompt.len() {
+                for l in 0..layers {
+                    let val = prompt[pos] as f32;
+                    c.append(id, l, &[val; 3], &[-val; 3]).unwrap();
+                }
+                c.advance(id).unwrap();
+            }
+            pc.insert(&prompt, id, &mut c).unwrap();
+            donors.push((id, prompt));
+
+            // sometimes release a donor (its nodes become evictable)
+            if g.bool() && donors.len() > 1 {
+                let i = g.usize_in(0, donors.len() - 1);
+                let (id, _) = donors.swap_remove(i);
+                c.free_seq(id);
+            }
+
+            // budget holds unless every leaf is pinned by a live reference
+            if pc.held_pages() > budget {
+                // over budget is only legal when nothing was evictable;
+                // freeing every donor and inserting again must drain it
+                assert!(!donors.is_empty(), "over budget with no references");
+            }
+            // referenced nodes were never evicted: every live donor still
+            // reads back its exact rows through the shared pages
+            for (id, prompt) in &donors {
+                let mut rows = 0;
+                c.for_each_kv(*id, 1, |pos, k, v| {
+                    assert_eq!(k[0], prompt[pos] as f32);
+                    assert_eq!(v[0], -(prompt[pos] as f32));
+                    rows += 1;
+                });
+                assert_eq!(rows, prompt.len());
+            }
+        }
+
+        // release everything: the tree alone must fit its budget again
+        // after one more insert triggers eviction
+        for (id, _) in donors.drain(..) {
+            c.free_seq(id);
+        }
+        let tail: Vec<u32> = (0..page).map(|i| 90_000 + i as u32).collect();
+        let mut prompt = tail.clone();
+        prompt.push(99_999);
+        let id = c.alloc_seq();
+        let m = pc.lookup(&prompt);
+        if m.matched > 0 {
+            c.share_pages(id, &m.pages, m.matched).unwrap();
+        }
+        for pos in m.matched..prompt.len() {
+            for l in 0..layers {
+                c.append(id, l, &[1.0; 3], &[1.0; 3]).unwrap();
+            }
+            c.advance(id).unwrap();
+        }
+        pc.insert(&prompt, id, &mut c).unwrap();
+        c.free_seq(id);
+        let slack = layers * ((prompt.len() + page - 1) / page);
+        assert!(
+            pc.held_pages() <= budget.max(slack),
+            "unreferenced tree exceeds budget: {}",
+            pc.report()
+        );
+        // page accounting still conserves: tree refs are the only holders
+        let (alloc, free, live_n) = c.stats();
+        assert_eq!(live_n, 0);
+        assert_eq!(alloc - free, pc.held_pages());
     });
 }
 
