@@ -7,7 +7,7 @@ ARTIFACTS ?= artifacts
 CONFIGS   ?= tiny,demo-100m
 PY        ?= python3
 
-.PHONY: all build test bench-smoke smoke artifacts clean-artifacts
+.PHONY: all build test bench-build bench-smoke smoke artifacts clean-artifacts
 
 all: build
 
@@ -18,8 +18,14 @@ test:
 	cargo test -q
 
 # Compile-check every bench target without running them (CI).
-bench-smoke:
+bench-build:
 	cargo bench --no-run
+
+# Run the end-to-end throughput bench (release/bench profile) and emit the
+# machine-readable perf record BENCH_e2e.json (throughput, prefix-cache
+# prefill skips, live-migration counts). Artifact-free: PJRT tiers skip.
+bench-smoke:
+	cargo bench --bench e2e_throughput
 
 # Drive the fleet end-to-end on synthetic weights (artifact-free).
 smoke:

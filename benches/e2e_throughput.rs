@@ -1,23 +1,31 @@
 //! End-to-end serving throughput — the whole-stack number §Perf tracks.
 //!
-//! Three tiers:
+//! Four tiers:
 //! * **fleet sweep** (always runs): synthetic SimDevice cartridges, sweeping
 //!   cartridge count to show host-side scale-out of the stateless device
 //!   (1 → N cartridges behind the shared admission queue).
 //! * **shared-prefix sweep** (always runs): 32 requests behind one long
 //!   system prompt, radix prefix cache off vs on (and a prefix-affinity
 //!   fleet), reporting the prefill-token reduction from KV reuse.
+//! * **migration sweep** (always runs): a skewed long/short workload under
+//!   [`Rebalance`] dispatch, reporting live KV migrations and
+//!   checkpoint-restored tokens.
 //! * **artifact tier**: the PJRT tiny/demo-100m cartridges when artifacts
 //!   and real bindings exist (skips quietly otherwise).
 //!
 //! `cargo bench --bench e2e_throughput`
+//!
+//! Besides the human-readable report, the run writes a machine-readable
+//! perf record to `BENCH_e2e.json` (override with `ITA_BENCH_JSON=path`;
+//! CI uploads it as a workflow artifact so the perf trajectory is
+//! queryable across PRs).
 
 use std::path::PathBuf;
 use std::time::Instant;
 
 use ita::config::ModelConfig;
 use ita::coordinator::engine::Engine;
-use ita::coordinator::fleet::{Fleet, PrefixAffinity};
+use ita::coordinator::fleet::{Fleet, LeastLoaded, PrefixAffinity, Rebalance};
 use ita::coordinator::request::GenRequest;
 use ita::coordinator::scheduler::{Scheduler, SchedulerOpts};
 use ita::device::pjrt::PjrtDevice;
@@ -26,9 +34,56 @@ use ita::host::embedding::EmbeddingTable;
 use ita::host::sampling::SamplingParams;
 use ita::runtime::weights::load_artifacts;
 
+/// Minimal JSON object builder (no serde in the offline vendor set). Values
+/// arrive pre-encoded; the `num`/`float`/`str` helpers cover what we emit.
+#[derive(Default)]
+struct Json(Vec<(String, String)>);
+
+impl Json {
+    fn put(&mut self, key: &str, encoded_value: String) -> &mut Self {
+        self.0.push((key.to_string(), encoded_value));
+        self
+    }
+
+    fn num<T: std::fmt::Display>(&mut self, key: &str, v: T) -> &mut Self {
+        self.put(key, v.to_string())
+    }
+
+    fn float(&mut self, key: &str, v: f64) -> &mut Self {
+        // JSON has no NaN/inf; clamp to null rather than emit garbage
+        if v.is_finite() {
+            self.put(key, format!("{v:.4}"))
+        } else {
+            self.put(key, "null".to_string())
+        }
+    }
+
+    fn str(&mut self, key: &str, v: &str) -> &mut Self {
+        let escaped: String = v
+            .chars()
+            .flat_map(|c| match c {
+                '"' => vec!['\\', '"'],
+                '\\' => vec!['\\', '\\'],
+                c if (c as u32) < 0x20 => format!("\\u{:04x}", c as u32).chars().collect(),
+                c => vec![c],
+            })
+            .collect();
+        self.put(key, format!("\"{escaped}\""))
+    }
+
+    fn encode(&self) -> String {
+        let fields: Vec<String> = self.0.iter().map(|(k, v)| format!("\"{k}\": {v}")).collect();
+        format!("{{{}}}", fields.join(", "))
+    }
+}
+
+fn json_array(items: &[String]) -> String {
+    format!("[{}]", items.join(", "))
+}
+
 /// Sweep cartridge count over a fixed workload; prints aggregate tok/s and
-/// the per-cartridge request split.
-fn bench_fleet(cartridges: usize, n_requests: usize, max_tokens: usize) {
+/// the per-cartridge request split. Returns the JSON record for the sweep.
+fn bench_fleet(cartridges: usize, n_requests: usize, max_tokens: usize) -> String {
     let fleet = Fleet::start(
         cartridges,
         |_id| Ok(Engine::synthetic(&ModelConfig::TINY, 0x17A)),
@@ -62,13 +117,81 @@ fn bench_fleet(cartridges: usize, n_requests: usize, max_tokens: usize) {
         m.requeued_requests,
         m.aggregate().interface_bytes as f64 / 1e6,
     );
+    let mut j = Json::default();
+    j.num("cartridges", cartridges);
+    j.num("requests", n_requests);
+    j.num("tokens", tokens);
+    j.float("wall_s", wall);
+    j.float("tok_per_s", tokens as f64 / wall);
+    j.num("requeued", m.requeued_requests);
+    j.num("interface_bytes", m.aggregate().interface_bytes);
+    j.encode()
+}
+
+/// A skewed long/short workload under [`Rebalance`] dispatch: least-loaded
+/// parks the long decodes on one cartridge; once the shorts drain, the
+/// spread triggers live KV migrations onto the idle one. Returns the JSON
+/// record (migrations, checkpoint-restored tokens, throughput).
+fn bench_migration(n_requests: usize, long_tokens: usize, short_tokens: usize) -> String {
+    let fleet = Fleet::with_dispatch(
+        2,
+        |_id| Ok(Engine::synthetic(&ModelConfig::TINY, 0x17A)),
+        SchedulerOpts::default(),
+        Box::new(Rebalance::new(Box::new(LeastLoaded))),
+    )
+    .expect("fleet start");
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..n_requests)
+        .map(|i| {
+            let long = i % 2 == 0;
+            fleet.submit(GenRequest {
+                id: i as u64,
+                prompt: if long {
+                    format!("long decode request {i}")
+                } else {
+                    format!("short request {i}")
+                },
+                max_new_tokens: if long { long_tokens } else { short_tokens },
+                sampling: SamplingParams::greedy(),
+                stop_at_eos: false,
+            })
+        })
+        .collect();
+    let mut tokens = 0usize;
+    for h in handles {
+        tokens += h.wait().expect("request completes").tokens.len();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = fleet.shutdown().expect("fleet shutdown");
+    let agg = m.aggregate();
+    println!(
+        "bench e2e/migration x2   {tokens:>6} tokens in {wall:>6.2}s = {:>7.1} tok/s  \
+         ({} live migrations, {} KV rows restored, {} resumed)",
+        tokens as f64 / wall,
+        m.migrations,
+        agg.restored_tokens,
+        agg.resumed_requests,
+    );
+    let mut j = Json::default();
+    j.num("cartridges", 2);
+    j.num("requests", n_requests);
+    j.num("tokens", tokens);
+    j.float("wall_s", wall);
+    j.float("tok_per_s", tokens as f64 / wall);
+    j.num("migrations", m.migrations);
+    j.num("checkpoint_resumes", m.checkpoint_resumes);
+    j.num("resumed_requests", agg.resumed_requests);
+    j.num("restored_tokens", agg.restored_tokens);
+    j.num("migrated_out", agg.migrated_out);
+    j.encode()
 }
 
 /// 32 requests behind one long shared system prompt: the production shape
 /// the radix prefix cache targets. Runs single-cartridge with the cache
 /// off/on, then a 2-cartridge fleet under prefix-affinity dispatch, and
-/// reports the prefill-token reduction (`prefill_skipped_tokens`).
-fn bench_shared_prefix(n_requests: usize, max_tokens: usize) {
+/// reports the prefill-token reduction (`prefill_skipped_tokens`). Returns
+/// the JSON record.
+fn bench_shared_prefix(n_requests: usize, max_tokens: usize) -> String {
     let system = "System: you are a careful assistant for the immutable tensor \
         architecture; answer from the paper, cite sections, refuse to speculate about \
         dynamic state, and keep every reply under one hundred tokens. "
@@ -142,6 +265,16 @@ fn bench_shared_prefix(n_requests: usize, max_tokens: usize) {
          {} prefill skipped (split {split:?})",
         agg.prefill_skipped_tokens,
     );
+    let mut j = Json::default();
+    j.num("requests", n_requests);
+    j.num("prefill_tokens_cache_off", m_off.tokens_prefilled);
+    j.num("prefill_tokens_cache_on", m_on.tokens_prefilled);
+    j.num("prefill_skipped_tokens", m_on.prefill_skipped_tokens);
+    j.float("skip_fraction", reduction);
+    j.float("wall_s_cache_off", wall_off);
+    j.float("wall_s_cache_on", wall_on);
+    j.num("affinity_fleet_prefill_skipped", agg.prefill_skipped_tokens);
+    j.encode()
 }
 
 fn bench_config(name: &str, n_requests: usize, max_tokens: usize) -> Option<()> {
@@ -195,13 +328,29 @@ fn main() {
     // cartridge-count sweep: the stateless device makes scale-out a pure
     // host-coordination exercise — aggregate throughput should grow until
     // host attention threads saturate the machine
+    let mut fleet_sweep = Vec::new();
     for cartridges in [1usize, 2, 4] {
-        bench_fleet(cartridges, 32, 16);
+        fleet_sweep.push(bench_fleet(cartridges, 32, 16));
     }
     // shared-prefix workload: 32 requests behind one long system prompt
-    bench_shared_prefix(32, 8);
+    let shared_prefix = bench_shared_prefix(32, 8);
+    // skewed workload: live KV migration rebalances mid-decode
+    let migration = bench_migration(16, 48, 4);
     bench_config("tiny", 16, 32);
     // saturate the largest compiled bucket: at the DRAM-streaming roofline
     // every extra row in a weight sweep is almost free (§Perf iteration 5)
     bench_config("demo-100m", 16, 16);
+
+    // machine-readable perf record (CI uploads it as a workflow artifact)
+    let mut root = Json::default();
+    root.str("bench", "e2e_throughput");
+    root.num("schema_version", 1);
+    root.put("fleet_sweep", json_array(&fleet_sweep));
+    root.put("shared_prefix", shared_prefix);
+    root.put("migration", migration);
+    let path = std::env::var("ITA_BENCH_JSON").unwrap_or_else(|_| "BENCH_e2e.json".into());
+    match std::fs::write(&path, root.encode() + "\n") {
+        Ok(()) => println!("bench e2e: wrote perf record to {path}"),
+        Err(e) => eprintln!("bench e2e: could not write {path}: {e}"),
+    }
 }

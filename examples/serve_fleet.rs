@@ -5,7 +5,7 @@
 //!
 //!     cargo run --release --example serve_fleet
 //!     [ITA_FLEET_CARTRIDGES=4] [ITA_FLEET_REQUESTS=32] [ITA_FLEET_TOKENS=16]
-//!     [ITA_FLEET_DISPATCH=affinity|least-loaded]
+//!     [ITA_FLEET_DISPATCH=affinity|least-loaded|rebalance]
 //!
 //! Runs artifact-free: each cartridge is an `Engine::synthetic` SimDevice
 //! (identical weights per cartridge, as if N copies of one neural cartridge
@@ -20,7 +20,7 @@ use anyhow::Result;
 
 use ita::config::ModelConfig;
 use ita::coordinator::engine::Engine;
-use ita::coordinator::fleet::{Dispatch, Fleet, LeastLoaded, PrefixAffinity};
+use ita::coordinator::fleet::{Dispatch, Fleet, LeastLoaded, PrefixAffinity, Rebalance};
 use ita::coordinator::scheduler::SchedulerOpts;
 use ita::coordinator::workload::{self, Arrivals, WorkloadSpec};
 
@@ -36,6 +36,8 @@ fn main() -> Result<()> {
         std::env::var("ITA_FLEET_DISPATCH").unwrap_or_else(|_| "affinity".into());
     let dispatch: Box<dyn Dispatch> = match dispatch_name.as_str() {
         "least-loaded" => Box::new(LeastLoaded),
+        // prefix-affinity placement + live KV migration off hot cartridges
+        "rebalance" => Box::new(Rebalance::new(Box::new(PrefixAffinity::new()))),
         _ => Box::new(PrefixAffinity::new()),
     };
 

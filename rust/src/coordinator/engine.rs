@@ -16,7 +16,7 @@ use anyhow::{ensure, Result};
 use crate::device::{DeviceDims, ItaDevice};
 use crate::host::attention::{decode_attention, AttentionConfig, AttentionScratch};
 use crate::host::embedding::EmbeddingTable;
-use crate::host::kv_cache::{PagedKvCache, SeqId};
+use crate::host::kv_cache::{KvSnapshot, PagedKvCache, SeqId};
 use crate::host::prefix_cache::PrefixCache;
 use crate::model::Mat;
 
@@ -140,6 +140,45 @@ impl Engine {
     /// Longest cached prefix of `prompt`, without mutating LRU state.
     pub fn cached_prefix_len(&self, prompt: &[u32]) -> usize {
         self.prefix.as_ref().map_or(0, |pc| pc.peek(prompt))
+    }
+
+    /// Rebuild a migrated or checkpointed sequence from `snap`. When the
+    /// snapshot omits a leading `by_ref_len` run, this engine's radix cache
+    /// must still hold that prefix of `prompt` (the migration probe
+    /// promised it): the run is grafted by reference through COW page
+    /// sharing and only the remaining rows are written by value. Fails —
+    /// without leaking the sequence — if the promise broke (the prefix was
+    /// evicted between probe and restore); the caller then falls back to a
+    /// plain re-prefill.
+    pub fn restore_sequence(&mut self, snap: &KvSnapshot, prompt: &[u32]) -> Result<SeqId> {
+        let id = self.cache.alloc_seq();
+        let grafted = if snap.by_ref_len == 0 {
+            Ok(())
+        } else {
+            match self.prefix.as_mut() {
+                None => Err(anyhow::anyhow!("by-ref snapshot but prefix cache is disabled")),
+                Some(pc) => {
+                    let m = pc.lookup(prompt);
+                    if m.matched < snap.by_ref_len {
+                        Err(anyhow::anyhow!(
+                            "cached prefix shrank to {} < promised {} tokens",
+                            m.matched,
+                            snap.by_ref_len
+                        ))
+                    } else {
+                        let need = snap.by_ref_len.div_ceil(self.cache.page_size());
+                        let pages: Vec<Vec<usize>> =
+                            m.pages.iter().map(|p| p[..need].to_vec()).collect();
+                        self.cache.share_pages(id, &pages, snap.by_ref_len)
+                    }
+                }
+            }
+        };
+        if let Err(e) = grafted.and_then(|_| self.cache.restore_seq(id, snap)) {
+            self.cache.free_seq(id);
+            return Err(e);
+        }
+        Ok(id)
     }
 
     /// Artifact-free engine over a [`SimDevice`](crate::device::sim::SimDevice)
@@ -370,6 +409,25 @@ mod tests {
         let sa = a.new_sequence();
         let sb = b.new_sequence();
         assert_eq!(a.prefill(sa, &toks).unwrap(), b.prefill(sb, &toks).unwrap());
+    }
+
+    #[test]
+    fn restored_sequence_decodes_identically() {
+        // migrate a sequence's KV to a different engine instance: the next
+        // decode step must produce bit-identical logits (the Split-Brain
+        // device is stateless, so the snapshot is the whole dynamic state)
+        let cfg = crate::config::ModelConfig::TINY;
+        let toks = ByteTokenizer::new().encode("migrate me");
+        let mut a = Engine::synthetic(&cfg, 5);
+        let sa = a.new_sequence();
+        a.prefill(sa, &toks).unwrap();
+        let snap = a.cache.snapshot_seq(sa, 0).unwrap();
+        let mut b = Engine::synthetic(&cfg, 5);
+        let sb = b.restore_sequence(&snap, &toks).unwrap();
+        assert_eq!(b.seq_len(sb), a.seq_len(sa));
+        let la = a.forward(&[sa], &[7]).unwrap();
+        let lb = b.forward(&[sb], &[7]).unwrap();
+        assert_eq!(la.data, lb.data, "restored KV diverged from the original");
     }
 
     #[test]

@@ -50,7 +50,7 @@ use anyhow::{anyhow, bail, Result};
 
 use super::engine::Engine;
 use super::metrics::{CartridgeMetrics, FleetMetrics, ServingMetrics};
-use super::request::{FinishReason, GenRequest, GenResult};
+use super::request::{DecodeCheckpoint, FinishReason, GenRequest, GenResult};
 use super::scheduler::SchedulerOpts;
 use super::worker::{CartridgeId, Worker, WorkerEvent, WorkerMsg};
 
@@ -79,6 +79,27 @@ pub trait Dispatch: Send {
     /// it (its thread-local caches are gone).
     fn cartridge_lost(&mut self, cartridge: usize) {
         let _ = cartridge;
+    }
+
+    /// Called on every periodic worker checkpoint. `occupancy` is the
+    /// cartridge's radix prefix-cache occupancy (root-to-leaf token paths),
+    /// or `None` when its prefix cache is disabled. Stateful policies
+    /// reconcile their predictions against what the cartridge actually
+    /// holds — see [`PrefixAffinity`]'s stale-shadow invalidation.
+    fn checkpoint(&mut self, cartridge: usize, occupancy: Option<&[Vec<u32>]>) {
+        let _ = (cartridge, occupancy);
+    }
+
+    /// Called after every queue pump with the raw outstanding-request count
+    /// per cartridge (`None` = dead or draining — saturated slots still
+    /// report their load). Return `Some((from, to))` to ask the dispatcher
+    /// to live-migrate one in-flight request from `from` to `to`; return
+    /// `None` to leave placements alone. At most one migration runs per
+    /// dispatcher wakeup, and the dispatcher re-validates eligibility, so a
+    /// policy may propose optimistically.
+    fn rebalance(&mut self, loads: &[Option<usize>]) -> Option<(usize, usize)> {
+        let _ = loads;
+        None
     }
 }
 
@@ -133,15 +154,32 @@ impl Dispatch for RoundRobin {
 /// thread-local to its engine, so fleets get cross-request reuse by
 /// *routing* shared-prefix traffic onto the same cartridge rather than by
 /// sharing pages across threads. The dispatcher cannot cheaply ask a busy
-/// worker mid-step, so the policy keeps a per-cartridge **shadow index**:
-/// the token prefixes of the last `window` prompts placed there (learned in
-/// [`Dispatch::placed`], discarded on [`Dispatch::cartridge_lost`]). The
-/// shadow can overestimate a worker whose cache has since evicted an entry
-/// — that only costs the fallback's load balance, never correctness.
+/// worker mid-step, so the policy predicts from two sources:
+///
+/// * a per-cartridge **shadow index** — the token prefixes of the last
+///   `window` prompts placed there (learned in [`Dispatch::placed`],
+///   discarded on [`Dispatch::cartridge_lost`]);
+/// * the **confirmed occupancy** each worker piggybacks on its periodic
+///   [`WorkerEvent::Checkpoint`] — the authoritative list of prefixes its
+///   cache actually holds.
+///
+/// Shadow entries are epoch-stamped with the cartridge's checkpoint count:
+/// once an entry has survived a full checkpoint interval without showing up
+/// in the confirmed occupancy, its prefix was evicted (or never cached) and
+/// the entry is dropped — so the policy stops routing to workers whose
+/// cache no longer holds the prefix. Entries placed since the previous
+/// checkpoint get a grace period (their request may still be in flight).
+/// Residual overestimation only costs the fallback's load balance, never
+/// correctness.
 pub struct PrefixAffinity {
     tokenizer: crate::host::tokenizer::ByteTokenizer,
-    /// per-cartridge ring of recently placed tokenized prompts
-    shadows: Vec<VecDeque<Vec<u32>>>,
+    /// per-cartridge ring of recently placed tokenized prompts, stamped
+    /// with the cartridge's checkpoint epoch at placement time
+    shadows: Vec<VecDeque<(u64, Vec<u32>)>>,
+    /// authoritative cache occupancy from each cartridge's last checkpoint
+    confirmed: Vec<Vec<Vec<u32>>>,
+    /// checkpoints seen per cartridge (the shadow entries' epoch clock)
+    epochs: Vec<u64>,
     /// prompts remembered per cartridge
     window: usize,
     /// minimum matched tokens before affinity beats load balance
@@ -163,6 +201,8 @@ impl PrefixAffinity {
         PrefixAffinity {
             tokenizer: crate::host::tokenizer::ByteTokenizer::new(),
             shadows: Vec::new(),
+            confirmed: Vec::new(),
+            epochs: Vec::new(),
             window: window.max(1),
             min_match: min_match.max(1),
             pending: None,
@@ -173,16 +213,18 @@ impl PrefixAffinity {
     fn ensure_slots(&mut self, n: usize) {
         while self.shadows.len() < n {
             self.shadows.push(VecDeque::new());
+            self.confirmed.push(Vec::new());
+            self.epochs.push(0);
         }
     }
 
-    /// Longest shadow-index prefix match of `toks` on cartridge `i`.
+    /// Longest predicted cached-prefix match of `toks` on cartridge `i`
+    /// (max over the recent-placement shadow and the confirmed occupancy).
     fn match_len(&self, i: usize, toks: &[u32]) -> usize {
-        self.shadows[i]
-            .iter()
-            .map(|p| crate::host::prefix_cache::common_prefix_len(p, toks))
-            .max()
-            .unwrap_or(0)
+        let cpl = crate::host::prefix_cache::common_prefix_len;
+        let shadow = self.shadows[i].iter().map(|(_, p)| cpl(p, toks)).max().unwrap_or(0);
+        let confirmed = self.confirmed[i].iter().map(|p| cpl(p, toks)).max().unwrap_or(0);
+        shadow.max(confirmed)
     }
 }
 
@@ -221,27 +263,112 @@ impl Dispatch for PrefixAffinity {
             Some((id, toks)) if id == req.id => toks,
             _ => self.tokenizer.encode(&req.prompt),
         };
+        let epoch = self.epochs[cartridge];
         let ring = &mut self.shadows[cartridge];
-        ring.push_back(toks);
+        ring.push_back((epoch, toks));
         while ring.len() > self.window {
             ring.pop_front();
         }
     }
 
     fn cartridge_lost(&mut self, cartridge: usize) {
-        if let Some(ring) = self.shadows.get_mut(cartridge) {
-            ring.clear();
+        if cartridge < self.shadows.len() {
+            self.shadows[cartridge].clear();
+            self.confirmed[cartridge].clear();
         }
+    }
+
+    fn checkpoint(&mut self, cartridge: usize, occupancy: Option<&[Vec<u32>]>) {
+        let Some(occ) = occupancy else { return };
+        self.ensure_slots(cartridge + 1);
+        self.epochs[cartridge] += 1;
+        let epoch = self.epochs[cartridge];
+        let min_match = self.min_match;
+        // drop shadow entries the cartridge verifiably no longer caches: an
+        // entry placed before the PREVIOUS checkpoint had a full interval
+        // to complete and publish; if the confirmed occupancy still lacks a
+        // useful prefix of it, it was evicted (or never cached at all)
+        self.shadows[cartridge].retain(|(stamp, toks)| {
+            if stamp + 1 >= epoch {
+                return true; // placed since the previous checkpoint: grace
+            }
+            let cpl = crate::host::prefix_cache::common_prefix_len;
+            occ.iter().map(|p| cpl(p, toks)).max().unwrap_or(0) >= min_match
+        });
+        self.confirmed[cartridge] = occ.to_vec();
+    }
+}
+
+/// Load-spread rebalancer: wraps any placement policy and additionally
+/// proposes live-migrating one in-flight request off the hottest cartridge
+/// whenever the outstanding-request spread (max − min over live cartridges)
+/// reaches `spread`. Requests queued behind a hot cartridge thus move to an
+/// idle one mid-decode — carrying their KV checkpoint — instead of waiting
+/// out the imbalance. Placement decisions delegate to the inner policy
+/// untouched.
+pub struct Rebalance {
+    inner: Box<dyn Dispatch>,
+    spread: usize,
+}
+
+impl Rebalance {
+    /// Default spread threshold of 2: migrating at spread 1 would only swap
+    /// the imbalance, so 2 is the smallest spread a single move improves.
+    pub fn new(inner: Box<dyn Dispatch>) -> Rebalance {
+        Rebalance::with_spread(inner, 2)
+    }
+
+    pub fn with_spread(inner: Box<dyn Dispatch>, spread: usize) -> Rebalance {
+        Rebalance { inner, spread: spread.max(2) }
+    }
+}
+
+impl Dispatch for Rebalance {
+    fn pick(&mut self, loads: &[Option<usize>], req: &GenRequest) -> Option<usize> {
+        self.inner.pick(loads, req)
+    }
+
+    fn placed(&mut self, cartridge: usize, req: &GenRequest) {
+        self.inner.placed(cartridge, req);
+    }
+
+    fn cartridge_lost(&mut self, cartridge: usize) {
+        self.inner.cartridge_lost(cartridge);
+    }
+
+    fn checkpoint(&mut self, cartridge: usize, occupancy: Option<&[Vec<u32>]>) {
+        self.inner.checkpoint(cartridge, occupancy);
+    }
+
+    fn rebalance(&mut self, loads: &[Option<usize>]) -> Option<(usize, usize)> {
+        let mut hottest: Option<(usize, usize)> = None; // (load, idx)
+        let mut coldest: Option<(usize, usize)> = None;
+        for (i, load) in loads.iter().enumerate() {
+            let Some(load) = *load else { continue };
+            if hottest.map_or(true, |(l, _)| load > l) {
+                hottest = Some((load, i));
+            }
+            if coldest.map_or(true, |(l, _)| load < l) {
+                coldest = Some((load, i));
+            }
+        }
+        let ((hot_load, hot), (cold_load, cold)) = (hottest?, coldest?);
+        (hot_load >= cold_load + self.spread).then_some((hot, cold))
     }
 }
 
 /// A pending result: the original request (kept for requeue), the instant
 /// it entered the admission queue (latency metrics count from here, and it
-/// survives requeue so time lost on a dead cartridge stays visible), and
-/// the client's reply channel.
+/// survives requeue so time lost on a dead cartridge stays visible), the
+/// last known decode checkpoint (panic recovery resumes from it), and the
+/// client's reply channel.
 struct Pending {
     req: GenRequest,
     arrived: Instant,
+    /// Latest by-value decode checkpoint from a worker
+    /// [`CheckpointReport`], or the fresh export after a migration. A
+    /// requeue resumes decode from here instead of restarting prefill.
+    checkpoint: Option<Box<DecodeCheckpoint>>,
     tx: Sender<GenResult>,
 }
 
@@ -249,6 +376,9 @@ enum FleetMsg {
     Submit(GenRequest, Sender<GenResult>),
     Metrics(Sender<FleetMetrics>),
     Shutdown(Sender<FleetMetrics>),
+    /// Live-migrate the request with client id `id` from cartridge `from`
+    /// to cartridge `to`; replies whether it actually moved.
+    Migrate { id: u64, from: usize, to: usize, reply: Sender<bool> },
     Event(WorkerEvent),
 }
 
@@ -361,6 +491,25 @@ impl Fleet {
         rx.recv().map_err(|_| anyhow!("fleet gone"))
     }
 
+    /// Live-migrate the request with client id `id` from cartridge `from`
+    /// to cartridge `to`: its decode state is exported as a
+    /// [`DecodeCheckpoint`] (prompt-prefix pages the target already caches
+    /// travel by reference, the rest by value) and decode resumes on `to`
+    /// at the exact step it left `from` — greedy outputs are byte-identical
+    /// to a request that never moved.
+    ///
+    /// Returns `Ok(false)` when nothing moved: unknown id, request already
+    /// completed, `from == to`, or `to` is dead/draining/saturated. If the
+    /// client reused `id` for several in-flight requests on `from`, the
+    /// earliest-dispatched one moves. A request that had not started
+    /// decoding yet also returns `Ok(true)` — it simply changes queues (no
+    /// KV moves, and [`FleetMetrics::migrations`] does not count it).
+    pub fn migrate(&self, id: u64, from: usize, to: usize) -> Result<bool> {
+        let (tx, rx) = channel();
+        self.send(FleetMsg::Migrate { id, from, to, reply: tx })?;
+        rx.recv().map_err(|_| anyhow!("fleet gone"))
+    }
+
     /// Stop admission, drain all in-flight work, stop every worker; returns
     /// final metrics.
     pub fn shutdown(mut self) -> Result<FleetMetrics> {
@@ -432,12 +581,20 @@ fn failed_result(req: &GenRequest) -> GenResult {
     }
 }
 
+/// Dispatcher-side counters surfaced in [`FleetMetrics`].
+#[derive(Default)]
+struct Counters {
+    requeued: u64,
+    failed: u64,
+    migrations: u64,
+    checkpoint_resumes: u64,
+}
+
 fn dispatcher(mut slots: Vec<Slot>, rx: Receiver<FleetMsg>, mut dispatch: Box<dyn Dispatch>) {
     let started = Instant::now();
     let mut queue: VecDeque<Pending> = VecDeque::new();
     let mut next_ticket: u64 = 0;
-    let mut requeued: u64 = 0;
-    let mut failed: u64 = 0;
+    let mut counters = Counters::default();
     let mut shutdown_reply: Option<Sender<FleetMetrics>> = None;
 
     loop {
@@ -449,15 +606,42 @@ fn dispatcher(mut slots: Vec<Slot>, rx: Receiver<FleetMsg>, mut dispatch: Box<dy
         match msg {
             FleetMsg::Submit(req, tx) => {
                 if shutdown_reply.is_none() {
-                    queue.push_back(Pending { req, arrived: Instant::now(), tx });
+                    queue.push_back(Pending {
+                        req,
+                        arrived: Instant::now(),
+                        checkpoint: None,
+                        tx,
+                    });
                 }
                 // after shutdown: drop tx — the client's wait() errors out
             }
             FleetMsg::Metrics(reply) => {
-                let _ = reply.send(snapshot(&slots, started, requeued, failed));
+                let _ = reply.send(snapshot(&slots, started, &counters));
             }
             FleetMsg::Shutdown(reply) => {
                 shutdown_reply = Some(reply);
+            }
+            FleetMsg::Migrate { id, from, to, reply } => {
+                // clients may reuse ids; take the earliest-dispatched match
+                // (min ticket) so duplicate ids resolve deterministically
+                let mut ticket = None;
+                if let Some(s) = slots.get(from) {
+                    ticket =
+                        s.in_flight.iter().filter(|(_, p)| p.req.id == id).map(|(t, _)| *t).min();
+                }
+                let moved = match ticket {
+                    Some(t) if shutdown_reply.is_none() => migrate_ticket(
+                        &mut slots,
+                        &mut queue,
+                        dispatch.as_mut(),
+                        &mut counters,
+                        t,
+                        from,
+                        to,
+                    ),
+                    _ => false,
+                };
+                let _ = reply.send(moved);
             }
             FleetMsg::Event(WorkerEvent::Done(w, mut result)) => {
                 // on the wire the request id IS the ticket (see pump), so
@@ -468,8 +652,18 @@ fn dispatcher(mut slots: Vec<Slot>, rx: Receiver<FleetMsg>, mut dispatch: Box<dy
                     let _ = p.tx.send(result);
                 }
             }
-            FleetMsg::Event(WorkerEvent::Checkpoint(w, metrics)) => {
-                slots[w].checkpoint = Some(metrics);
+            FleetMsg::Event(WorkerEvent::Checkpoint(w, report)) => {
+                let report = *report;
+                slots[w].checkpoint = Some(report.metrics);
+                // refresh each in-flight request's recovery checkpoint
+                for (ticket, ckpt) in report.decode {
+                    if let Some(p) = slots[w].in_flight.get_mut(&ticket) {
+                        p.checkpoint = Some(Box::new(ckpt));
+                    }
+                }
+                // let the policy reconcile its shadow state with what the
+                // cartridge's cache actually holds
+                dispatch.checkpoint(w, report.prefix_occupancy.as_deref());
             }
             FleetMsg::Event(WorkerEvent::Died(w, reason)) => {
                 eprintln!("[ita-fleet] cartridge {w} died: {reason}");
@@ -478,10 +672,12 @@ fn dispatcher(mut slots: Vec<Slot>, rx: Receiver<FleetMsg>, mut dispatch: Box<dy
                 slot.dead = true;
                 let mut orphans: Vec<Pending> =
                     slot.in_flight.drain().map(|(_, p)| p).collect();
-                requeued += orphans.len() as u64;
+                counters.requeued += orphans.len() as u64;
                 // orphans have waited longest: resume them ahead of fresher
                 // queued work, earliest arrival first (FCFS holds even
-                // across a cartridge death, and the order is deterministic)
+                // across a cartridge death, and the order is deterministic).
+                // Each carries its last decode checkpoint, so the survivor
+                // restores KV instead of re-prefilling.
                 orphans.sort_by_key(|p| p.arrived);
                 for p in orphans.into_iter().rev() {
                     queue.push_front(p);
@@ -494,10 +690,37 @@ fn dispatcher(mut slots: Vec<Slot>, rx: Receiver<FleetMsg>, mut dispatch: Box<dy
             FleetMsg::Event(_) => {}
         }
 
-        pump(&mut slots, &mut queue, dispatch.as_mut(), &mut next_ticket, &mut failed);
+        pump(&mut slots, &mut queue, dispatch.as_mut(), &mut next_ticket, &mut counters);
+
+        // load-spread rebalancing: at most one migration per wakeup (the
+        // dance blocks on two worker replies), skipped once draining
+        if shutdown_reply.is_none() {
+            let raw: Vec<Option<usize>> = slots
+                .iter()
+                .map(|s| s.accepting().then(|| s.in_flight.len()))
+                .collect();
+            if let Some((from, to)) = dispatch.rebalance(&raw) {
+                // move the most recently placed request: it has the least
+                // decode state to ship and was queued behind the hot spot
+                if let Some(&ticket) = slots.get(from).and_then(|s| s.in_flight.keys().max()) {
+                    migrate_ticket(
+                        &mut slots,
+                        &mut queue,
+                        dispatch.as_mut(),
+                        &mut counters,
+                        ticket,
+                        from,
+                        to,
+                    );
+                    // a failed handover may have requeued the request
+                    let d = dispatch.as_mut();
+                    pump(&mut slots, &mut queue, d, &mut next_ticket, &mut counters);
+                }
+            }
+        }
 
         if let Some(reply) = &shutdown_reply {
-            if try_finish(&mut slots, &queue, started, requeued, failed, reply) {
+            if try_finish(&mut slots, &queue, started, &counters, reply) {
                 return;
             }
         }
@@ -505,19 +728,20 @@ fn dispatcher(mut slots: Vec<Slot>, rx: Receiver<FleetMsg>, mut dispatch: Box<dy
 }
 
 /// Assign queued requests to cartridges until the queue empties or every
-/// eligible cartridge is at capacity.
+/// eligible cartridge is at capacity. Requests carrying a decode checkpoint
+/// (requeued after their cartridge died) are handed over as resumes.
 fn pump(
     slots: &mut [Slot],
     queue: &mut VecDeque<Pending>,
     dispatch: &mut dyn Dispatch,
     next_ticket: &mut u64,
-    failed: &mut u64,
+    counters: &mut Counters,
 ) {
     while !queue.is_empty() {
         if !slots.iter().any(Slot::accepting) {
             // total fleet loss: fail everything still queued, loudly
             while let Some(p) = queue.pop_front() {
-                *failed += 1;
+                counters.failed += 1;
                 let _ = p.tx.send(failed_result(&p.req));
             }
             return;
@@ -541,7 +765,16 @@ fn pump(
         *next_ticket += 1;
         let mut wire_req = p.req.clone();
         wire_req.id = ticket;
-        if slots[w].worker.send(WorkerMsg::Submit(wire_req, p.arrived)) {
+        let msg = match &p.checkpoint {
+            // periodic checkpoints are by value, so any healthy cartridge
+            // can resume from them
+            Some(ckpt) => WorkerMsg::Resume(wire_req, ckpt.clone(), p.arrived),
+            None => WorkerMsg::Submit(wire_req, p.arrived),
+        };
+        if slots[w].worker.send(msg) {
+            if p.checkpoint.is_some() {
+                counters.checkpoint_resumes += 1;
+            }
             dispatch.placed(w, &p.req);
             slots[w].in_flight.insert(ticket, p);
         } else {
@@ -553,14 +786,96 @@ fn pump(
     }
 }
 
+/// The live-migration dance (dispatcher-side, blocking on two worker
+/// replies — workers answer between steps):
+///
+/// 1. **probe** `to`: how much of the prompt does its radix cache hold?
+/// 2. **export** from `from`: serialize the request's decode checkpoint,
+///    eliding that prefix by reference;
+/// 3. **resume** on `to` and rebind the pending result to it.
+///
+/// Any failure leaves the request either where it was, or back in the
+/// admission queue with its recovery checkpoint — never lost. Returns
+/// whether the request actually moved.
+fn migrate_ticket(
+    slots: &mut [Slot],
+    queue: &mut VecDeque<Pending>,
+    dispatch: &mut dyn Dispatch,
+    counters: &mut Counters,
+    ticket: u64,
+    from: usize,
+    to: usize,
+) -> bool {
+    if from == to || from >= slots.len() || to >= slots.len() {
+        return false;
+    }
+    if slots[from].dead
+        || !slots[to].accepting()
+        || slots[to].in_flight.len() >= slots[to].capacity
+    {
+        return false;
+    }
+    let prompt = match slots[from].in_flight.get(&ticket) {
+        Some(p) => p.req.prompt.clone(),
+        None => return false,
+    };
+    // 1. probe — a dropped reply means the worker is dying; its Died event
+    //    will clean up, so just abort the migration
+    let (ptx, prx) = channel();
+    if !slots[to].worker.send(WorkerMsg::Probe(prompt, ptx)) {
+        return false;
+    }
+    let Ok(keep_prefix) = prx.recv() else { return false };
+    // 2. export
+    let (etx, erx) = channel();
+    if !slots[from].worker.send(WorkerMsg::Export { ticket, keep_prefix, reply: etx }) {
+        return false;
+    }
+    let (wire_req, ckpt) = match erx.recv() {
+        Ok(Some(x)) => x,
+        // request already completed (its Done event is still queued behind
+        // this dance), or the source died mid-export
+        _ => return false,
+    };
+    let mut p = slots[from].in_flight.remove(&ticket).expect("checked above");
+    // a by-value export doubles as the freshest recovery checkpoint; a
+    // by-ref one is only restorable on `to`, so keep the older periodic one
+    if let Some(c) = &ckpt {
+        if c.kv.by_ref_len == 0 {
+            p.checkpoint = Some(c.clone());
+        }
+    }
+    // 3. resume on the target (plain submit if it never started decoding —
+    //    that is a queue relocation, not a live migration, so it does not
+    //    count toward FleetMetrics::migrations)
+    let live = ckpt.is_some();
+    let msg = match ckpt {
+        Some(c) => WorkerMsg::Resume(wire_req, c, p.arrived),
+        None => WorkerMsg::Submit(wire_req, p.arrived),
+    };
+    if slots[to].worker.send(msg) {
+        dispatch.placed(to, &p.req);
+        slots[to].in_flight.insert(ticket, p);
+        if live {
+            counters.migrations += 1;
+        }
+        true
+    } else {
+        // the target died as we handed over: requeue with the recovery
+        // checkpoint; the caller re-pumps
+        slots[to].dead = true;
+        queue.push_front(p);
+        false
+    }
+}
+
 /// During shutdown: once the queue and every in-flight map are empty, drain
 /// all workers; once every worker has drained (or died), reply and finish.
 fn try_finish(
     slots: &mut [Slot],
     queue: &VecDeque<Pending>,
     started: Instant,
-    requeued: u64,
-    failed: u64,
+    counters: &Counters,
     reply: &Sender<FleetMetrics>,
 ) -> bool {
     if !queue.is_empty() || slots.iter().any(|s| !s.in_flight.is_empty()) {
@@ -578,7 +893,7 @@ fn try_finish(
         for s in slots.iter_mut() {
             s.worker.join();
         }
-        let _ = reply.send(snapshot(slots, started, requeued, failed));
+        let _ = reply.send(snapshot(slots, started, counters));
         return true;
     }
     false
@@ -589,7 +904,7 @@ fn try_finish(
 /// cartridges, and defaults only when a cartridge died before ever
 /// checkpointing. Live snapshots block until each busy worker finishes its
 /// current step (exact counters, like the pre-fleet `Server::metrics()`).
-fn snapshot(slots: &[Slot], started: Instant, requeued: u64, failed: u64) -> FleetMetrics {
+fn snapshot(slots: &[Slot], started: Instant, counters: &Counters) -> FleetMetrics {
     // fan all snapshot requests out first, then collect: concurrent slow
     // workers overlap their waits instead of stalling the dispatcher for
     // one timeout per cartridge
@@ -626,8 +941,10 @@ fn snapshot(slots: &[Slot], started: Instant, requeued: u64, failed: u64) -> Fle
         .collect();
     FleetMetrics {
         cartridges,
-        requeued_requests: requeued,
-        failed_requests: failed,
+        requeued_requests: counters.requeued,
+        failed_requests: counters.failed,
+        migrations: counters.migrations,
+        checkpoint_resumes: counters.checkpoint_resumes,
         wall_s: started.elapsed().as_secs_f64(),
     }
 }
@@ -684,6 +1001,99 @@ mod tests {
         // losing the cartridge clears its shadow index
         d.cartridge_lost(1);
         assert_eq!(d.pick(&[Some(3), Some(0)], &b), Some(1));
+    }
+
+    #[test]
+    fn rebalance_proposes_only_above_spread() {
+        let mut d = Rebalance::with_spread(Box::new(LeastLoaded), 2);
+        assert_eq!(d.rebalance(&[Some(4), Some(0)]), Some((0, 1)));
+        assert_eq!(d.rebalance(&[Some(0), Some(4)]), Some((1, 0)));
+        assert_eq!(d.rebalance(&[Some(3), Some(2)]), None, "spread 1 is not worth a move");
+        assert_eq!(d.rebalance(&[Some(2), Some(2)]), None);
+        // dead/draining slots are invisible to the spread
+        assert_eq!(d.rebalance(&[None, Some(5), Some(1)]), Some((1, 2)));
+        assert_eq!(d.rebalance(&[None, Some(5), None]), None);
+        assert_eq!(d.rebalance(&[]), None);
+        // placement still delegates to the inner policy
+        let r = any_req();
+        assert_eq!(d.pick(&[Some(3), Some(1)], &r), Some(1));
+    }
+
+    #[test]
+    fn prefix_affinity_drops_shadow_entries_the_cache_evicted() {
+        // regression (ROADMAP gap): the shadow index used to overestimate a
+        // worker whose cache had evicted an entry; occupancy checkpoints
+        // now invalidate it
+        let mut d = PrefixAffinity::with_params(8, 4);
+        let tok = crate::host::tokenizer::ByteTokenizer::new();
+        let sys = "shared system prompt: answer briefly and cite sources";
+        let a = GenRequest::greedy(0, &format!("{sys} Q1"), 1);
+        let b = GenRequest::greedy(1, &format!("{sys} Q2"), 1);
+        d.ensure_slots(2);
+        d.placed(1, &a);
+        // shadow predicts cartridge 1 despite its higher load
+        assert_eq!(d.pick(&[Some(0), Some(3)], &b), Some(1));
+        // first checkpoint without the prefix: grace period (the placement
+        // may still be in flight) — routing unchanged
+        d.checkpoint(1, Some(&[]));
+        assert_eq!(d.pick(&[Some(0), Some(3)], &b), Some(1));
+        // second empty checkpoint: a full interval passed and the cache
+        // still doesn't hold it → stale entry dropped, fallback wins
+        d.checkpoint(1, Some(&[]));
+        assert_eq!(d.pick(&[Some(0), Some(3)], &b), Some(0));
+        // confirmed occupancy alone (no recent placement) attracts traffic
+        d.checkpoint(0, Some(&[tok.encode(&format!("{sys} Q1"))]));
+        assert_eq!(d.pick(&[Some(3), Some(0)], &b), Some(0));
+    }
+
+    #[test]
+    fn prefix_affinity_never_prunes_without_occupancy() {
+        // a disabled prefix cache reports None: the shadow index is all the
+        // policy has, so checkpoints must not age it out
+        let mut d = PrefixAffinity::with_params(8, 4);
+        let sys = "shared system prompt: answer briefly and cite sources";
+        let a = GenRequest::greedy(0, &format!("{sys} Q1"), 1);
+        let b = GenRequest::greedy(1, &format!("{sys} Q2"), 1);
+        d.ensure_slots(2);
+        d.placed(1, &a);
+        d.checkpoint(1, None);
+        d.checkpoint(1, None);
+        assert_eq!(d.pick(&[Some(0), Some(3)], &b), Some(1));
+    }
+
+    #[test]
+    fn explicit_migration_moves_a_live_request() {
+        let fleet = Fleet::start(
+            2,
+            |_id| Ok(Engine::synthetic(&ModelConfig::TINY, 42)),
+            SchedulerOpts::default(),
+        )
+        .unwrap();
+        let mut req = GenRequest::greedy(7, "a request worth moving", 96);
+        req.stop_at_eos = false;
+        let h = fleet.submit(req);
+        // wait until cartridge 0 is demonstrably decoding it (with ~90
+        // decode steps still ahead, the migrate below lands mid-decode)
+        loop {
+            let m = fleet.metrics().unwrap();
+            if m.cartridges[0].serving.tokens_generated >= 4 {
+                break;
+            }
+            std::thread::yield_now();
+        }
+        assert!(fleet.migrate(7, 0, 1).unwrap(), "mid-decode migration refused");
+        // ineligible moves are refused, not wedged
+        assert!(!fleet.migrate(7, 0, 1).unwrap(), "request is no longer on 0");
+        assert!(!fleet.migrate(99, 1, 0).unwrap(), "unknown id");
+        let r = h.wait().unwrap();
+        assert_eq!(r.id, 7);
+        assert_eq!(r.tokens.len(), 96);
+        let m = fleet.shutdown().unwrap();
+        assert_eq!(m.migrations, 1);
+        assert_eq!(m.failed_requests, 0);
+        let c1 = &m.cartridges[1].serving;
+        assert_eq!(c1.resumed_requests, 1, "target should have resumed, got {}", m.report());
+        assert_eq!(m.cartridges[0].serving.migrated_out, 1);
     }
 
     #[test]

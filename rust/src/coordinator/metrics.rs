@@ -51,9 +51,21 @@ pub struct ServingMetrics {
     /// Prompt tokens actually run through device prefill.
     pub tokens_prefilled: u64,
     /// Prompt tokens served from the radix prefix cache instead of being
-    /// prefilled (`tokens_prefilled + prefill_skipped_tokens` = prompt
-    /// tokens admitted).
+    /// prefilled. Includes the by-reference prefix of restored checkpoints
+    /// — those rows really were served from the cache. Reconciliation:
+    /// prompt tokens admitted = `tokens_prefilled + prefill_skipped_tokens`
+    /// + the prompt-row share of `restored_tokens` (a by-value resume
+    /// rebuilds its prompt rows from the checkpoint, touching neither
+    /// prefill nor the cache).
     pub prefill_skipped_tokens: u64,
+    /// KV rows rebuilt by value from a migration/resume checkpoint (work
+    /// this cartridge did NOT redo: neither prefill nor decode ran for
+    /// them).
+    pub restored_tokens: u64,
+    /// Requests this cartridge resumed from a checkpoint mid-decode.
+    pub resumed_requests: u64,
+    /// Requests this cartridge exported to another mid-decode.
+    pub migrated_out: u64,
     pub wall_s: f64,
     pub ttft: LatencyRecorder,
     pub itl: LatencyRecorder,
@@ -87,6 +99,9 @@ impl ServingMetrics {
         self.tokens_generated += other.tokens_generated;
         self.tokens_prefilled += other.tokens_prefilled;
         self.prefill_skipped_tokens += other.prefill_skipped_tokens;
+        self.restored_tokens += other.restored_tokens;
+        self.resumed_requests += other.resumed_requests;
+        self.migrated_out += other.migrated_out;
         self.wall_s = self.wall_s.max(other.wall_s);
         self.ttft.merge(&other.ttft);
         self.itl.merge(&other.itl);
@@ -102,13 +117,17 @@ impl ServingMetrics {
 
     pub fn report(&self) -> String {
         format!(
-            "requests={} prefill_tokens={} prefill_skipped={} decode_tokens={} wall={:.2}s \
+            "requests={} prefill_tokens={} prefill_skipped={} restored={} resumed={} \
+             migrated_out={} decode_tokens={} wall={:.2}s \
              decode_throughput={:.1} tok/s ttft_p50={:.1}ms ttft_p95={:.1}ms \
              itl_p50={:.2}ms itl_p95={:.2}ms batch_waste={:.1}% \
              interface={:.2} MB device_macs={:.2}G",
             self.requests_completed,
             self.tokens_prefilled,
             self.prefill_skipped_tokens,
+            self.restored_tokens,
+            self.resumed_requests,
+            self.migrated_out,
             self.tokens_generated,
             self.wall_s,
             self.decode_tok_per_s(),
@@ -148,6 +167,16 @@ pub struct FleetMetrics {
     pub requeued_requests: u64,
     /// Requests failed because no healthy cartridge remained.
     pub failed_requests: u64,
+    /// Completed live migrations: a request's KV checkpoint moved to a
+    /// different cartridge mid-decode (explicit [`Fleet::migrate`] calls
+    /// plus automatic [`Rebalance`] moves).
+    ///
+    /// [`Fleet::migrate`]: super::fleet::Fleet::migrate
+    /// [`Rebalance`]: super::fleet::Rebalance
+    pub migrations: u64,
+    /// Requeued requests that resumed from their last decode checkpoint
+    /// instead of restarting at prefill (panic recovery).
+    pub checkpoint_resumes: u64,
     /// Dispatcher wall clock.
     pub wall_s: f64,
 }
@@ -166,11 +195,14 @@ impl FleetMetrics {
 
     pub fn report(&self) -> String {
         let mut out = format!(
-            "fleet: {} cartridges ({} alive), requeued={} failed={}\n",
+            "fleet: {} cartridges ({} alive), requeued={} failed={} migrations={} \
+             checkpoint_resumes={}\n",
             self.cartridges.len(),
             self.cartridges.iter().filter(|c| c.alive).count(),
             self.requeued_requests,
             self.failed_requests,
+            self.migrations,
+            self.checkpoint_resumes,
         );
         for c in &self.cartridges {
             out.push_str(&format!(

@@ -14,11 +14,19 @@
 //!   admission queue with pluggable [`Dispatch`](fleet::Dispatch) policy
 //!   (least-loaded by default; [`PrefixAffinity`](fleet::PrefixAffinity)
 //!   routes shared-prefix traffic to the cartridge holding that prefix in
-//!   its radix cache), per-cartridge metrics aggregation with periodic
-//!   worker checkpoints (a dead cartridge's counters survive), graceful
-//!   drain, and worker-panic recovery (in-flight requests requeue onto a
-//!   healthy cartridge — the device is stateless, so a restart is just a
-//!   re-prefill of whatever suffix the survivor hasn't cached).
+//!   its radix cache, kept honest by occupancy piggybacked on worker
+//!   checkpoints; [`Rebalance`](fleet::Rebalance) migrates load off hot
+//!   cartridges), per-cartridge metrics aggregation with periodic worker
+//!   checkpoints (a dead cartridge's counters survive, and every in-flight
+//!   request's decode state is checkpointed by value), live cross-cartridge
+//!   KV migration ([`Fleet::migrate`](fleet::Fleet::migrate): probe the
+//!   target's prefix cache, export a
+//!   [`DecodeCheckpoint`](request::DecodeCheckpoint) by reference where
+//!   covered and by value otherwise, resume decode at the exact step),
+//!   graceful drain, and worker-panic recovery (in-flight requests resume
+//!   on a healthy cartridge from their last checkpointed decode step — only
+//!   requests that never checkpointed restart at prefill).
+//!   `rust/src/coordinator/README.md` documents the protocol.
 //! * [`server`] — the single-cartridge front end, implemented as the
 //!   `n = 1` case of the fleet.
 //! * [`metrics`] — latency/throughput/traffic accounting, per engine
@@ -50,8 +58,10 @@ pub mod worker;
 pub mod workload;
 
 pub use engine::Engine;
-pub use fleet::{Dispatch, Fleet, LeastLoaded, PrefixAffinity, ResultHandle, RoundRobin};
+pub use fleet::{
+    Dispatch, Fleet, LeastLoaded, PrefixAffinity, Rebalance, ResultHandle, RoundRobin,
+};
 pub use metrics::{CartridgeMetrics, FleetMetrics, ServingMetrics};
-pub use request::{GenRequest, GenResult};
+pub use request::{DecodeCheckpoint, GenRequest, GenResult};
 pub use server::Server;
-pub use worker::{CartridgeId, Worker, WorkerEvent, WorkerMsg};
+pub use worker::{CartridgeId, CheckpointReport, Worker, WorkerEvent, WorkerMsg};

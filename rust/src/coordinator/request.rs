@@ -1,5 +1,7 @@
-//! Generation request/result types.
+//! Generation request/result types, plus the portable decode checkpoint
+//! that migration and panic-resume ship between cartridges.
 
+use crate::host::kv_cache::KvSnapshot;
 use crate::host::sampling::SamplingParams;
 
 /// A generation request submitted to the server.
@@ -49,6 +51,39 @@ pub enum FinishReason {
     MaxTokens,
     Eos,
     Error,
+}
+
+/// Everything another cartridge needs to continue a request mid-decode:
+/// the tokenized prompt (to re-match the target's radix prefix cache), the
+/// tokens generated so far (the last one is the next decode input), and the
+/// [`KvSnapshot`] covering every committed KV row. Because the Split-Brain
+/// device is stateless, this checkpoint *is* the request's entire dynamic
+/// state — restoring it on any cartridge with the same weights resumes
+/// decode bit-exactly (greedy sampling; temperature sampling re-seeds from
+/// the target's RNG stream, like any requeue).
+///
+/// Workers emit by-value checkpoints (`kv.by_ref_len == 0`) periodically so
+/// the dispatcher can resume a panicked cartridge's requests from the last
+/// checkpointed decode step instead of re-prefilling. Live migration
+/// exports a fresher checkpoint on demand, by reference where the target
+/// already caches the prompt prefix.
+#[derive(Debug, Clone)]
+pub struct DecodeCheckpoint {
+    /// Tokenized prompt.
+    pub prompt: Vec<u32>,
+    /// Tokens generated so far (never empty: checkpoints are taken only
+    /// after the first token was sampled).
+    pub generated: Vec<u32>,
+    /// Committed KV rows; `kv.len == prompt.len() + generated.len() - 1`
+    /// (the newest generated token is sampled but not yet appended).
+    pub kv: KvSnapshot,
+}
+
+impl DecodeCheckpoint {
+    /// Committed KV rows a restore must reproduce.
+    pub fn committed_len(&self) -> usize {
+        self.kv.len
+    }
 }
 
 #[cfg(test)]

@@ -10,7 +10,7 @@ use anyhow::Result;
 use super::batcher::{plan, BatchStats};
 use super::engine::Engine;
 use super::metrics::ServingMetrics;
-use super::request::{FinishReason, GenRequest, GenResult};
+use super::request::{DecodeCheckpoint, FinishReason, GenRequest, GenResult};
 use crate::host::kv_cache::SeqId;
 use crate::host::sampling::sample;
 use crate::host::tokenizer::{ByteTokenizer, EOS};
@@ -44,6 +44,10 @@ struct Active {
     /// leading tokens served from the prefix cache (no prefill ran)
     skipped: usize,
     generated: Vec<u32>,
+    /// tokens inherited from a checkpoint restore (0 for fresh requests);
+    /// this cartridge's ITL accounting excludes them — their decode time
+    /// was spent elsewhere
+    resumed_len: usize,
     /// last sampled token (input for the next decode step)
     next_token: u32,
     enqueued: Instant,
@@ -57,11 +61,26 @@ impl Active {
     }
 }
 
+/// One admission-queue entry: a fresh request awaiting prefill, or a
+/// checkpointed request awaiting a KV restore (migration / panic resume).
+enum QueueEntry {
+    Fresh(GenRequest, Instant),
+    Resume(GenRequest, Box<DecodeCheckpoint>, Instant),
+}
+
+impl QueueEntry {
+    fn id(&self) -> u64 {
+        match self {
+            QueueEntry::Fresh(r, _) | QueueEntry::Resume(r, _, _) => r.id,
+        }
+    }
+}
+
 /// Synchronous continuous-batching scheduler over one engine.
 pub struct Scheduler {
     engine: Engine,
     tokenizer: ByteTokenizer,
-    queue: VecDeque<(GenRequest, Instant)>,
+    queue: VecDeque<QueueEntry>,
     active: Vec<Active>,
     rng: Prng,
     opts: SchedulerOpts,
@@ -99,7 +118,15 @@ impl Scheduler {
     /// and total latency include dispatcher-queue wait (and, for requeued
     /// requests, the time lost on a dead cartridge).
     pub fn submit_at(&mut self, req: GenRequest, enqueued: Instant) {
-        self.queue.push_back((req, enqueued));
+        self.queue.push_back(QueueEntry::Fresh(req, enqueued));
+    }
+
+    /// Enqueue a checkpointed request: admission restores its KV snapshot
+    /// (by reference where this cartridge's radix cache still holds the
+    /// promised prompt prefix, by value otherwise) and resumes decode at
+    /// the checkpointed step instead of re-prefilling.
+    pub fn submit_resume(&mut self, req: GenRequest, ckpt: DecodeCheckpoint, enqueued: Instant) {
+        self.queue.push_back(QueueEntry::Resume(req, Box::new(ckpt), enqueued));
     }
 
     pub fn pending(&self) -> usize {
@@ -174,14 +201,28 @@ impl Scheduler {
         Ok(out)
     }
 
-    /// Admit queued requests up to capacity, batch-prefill them (skipping
-    /// any prefix already in the radix cache), and return any that finish
-    /// on their very first token.
+    /// Admit queued requests up to capacity: checkpointed requests restore
+    /// their KV and rejoin decode immediately; fresh requests batch-prefill
+    /// (skipping any prefix already in the radix cache). Returns any
+    /// request that finishes on its very first token.
     fn admit(&mut self) -> Result<Vec<GenResult>> {
+        // pop admissible entries; resumes rejoin `active` inline (no device
+        // work), fresh requests collect for one batched prefill
+        let mut fresh: Vec<(GenRequest, Instant)> = Vec::new();
+        let mut resumed_any = false;
+        while self.active.len() + fresh.len() < self.opts.max_active {
+            let Some(entry) = self.queue.pop_front() else { break };
+            match entry {
+                QueueEntry::Fresh(req, enqueued) => fresh.push((req, enqueued)),
+                QueueEntry::Resume(req, ckpt, enqueued) => {
+                    self.resume(req, *ckpt, enqueued);
+                    resumed_any = true;
+                }
+            }
+        }
         let mut new_ids = Vec::new();
         let mut new_suffixes: Vec<Vec<u32>> = Vec::new();
-        while self.active.len() + new_ids.len() < self.opts.max_active {
-            let Some((req, enqueued)) = self.queue.pop_front() else { break };
+        for (req, enqueued) in fresh {
             let prompt = self.tokenizer.encode(&req.prompt);
             // graft the longest cached prefix; only the suffix prefills
             let (seq, skipped) = self.engine.new_sequence_with_prefix(&prompt);
@@ -194,38 +235,44 @@ impl Scheduler {
                 req,
                 seq,
                 generated: Vec::new(),
+                resumed_len: 0,
                 next_token: 0, // set after prefill
                 enqueued,
                 first_token_at: None,
             });
             new_ids.push(seq);
         }
-        if new_ids.is_empty() {
+        if new_ids.is_empty() && !resumed_any {
             return Ok(Vec::new());
         }
-        // batched prefill across the newly admitted requests' suffixes
-        let prompts: Vec<&[u32]> = new_suffixes.iter().map(|p| p.as_slice()).collect();
-        let lasts = self.engine.prefill_batch(&new_ids, &prompts)?;
-        // the new Actives are the contiguous tail of `active`, in
-        // `new_ids` order — no scans needed to find them again
-        let start = self.active.len() - new_ids.len();
-        // publish the freshly prefilled prompts for future reuse
-        for (i, seq) in new_ids.iter().enumerate() {
-            let a = &self.active[start + i];
-            debug_assert_eq!(a.seq, *seq);
-            self.engine.register_prefix(*seq, &a.prompt);
-        }
-        let now = Instant::now();
-        for (i, last) in lasts.into_iter().enumerate() {
-            let a = &mut self.active[start + i];
-            let tok = sample(&last, &a.req.sampling, &mut self.rng);
-            a.next_token = tok;
-            a.generated.push(tok);
-            a.first_token_at = Some(now);
-            self.metrics.ttft.record(now.duration_since(a.enqueued).as_secs_f64());
-            self.metrics.tokens_generated += 1;
-        }
-        // harvest requests that finished on their first token
+        let now = if new_ids.is_empty() {
+            Instant::now()
+        } else {
+            // batched prefill across the newly admitted requests' suffixes
+            let prompts: Vec<&[u32]> = new_suffixes.iter().map(|p| p.as_slice()).collect();
+            let lasts = self.engine.prefill_batch(&new_ids, &prompts)?;
+            // the new Actives are the contiguous tail of `active`, in
+            // `new_ids` order — no scans needed to find them again
+            let start = self.active.len() - new_ids.len();
+            // publish the freshly prefilled prompts for future reuse
+            for (i, seq) in new_ids.iter().enumerate() {
+                let a = &self.active[start + i];
+                debug_assert_eq!(a.seq, *seq);
+                self.engine.register_prefix(*seq, &a.prompt);
+            }
+            let now = Instant::now();
+            for (i, last) in lasts.into_iter().enumerate() {
+                let a = &mut self.active[start + i];
+                let tok = sample(&last, &a.req.sampling, &mut self.rng);
+                a.next_token = tok;
+                a.generated.push(tok);
+                a.first_token_at = Some(now);
+                self.metrics.ttft.record(now.duration_since(a.enqueued).as_secs_f64());
+                self.metrics.tokens_generated += 1;
+            }
+            now
+        };
+        // harvest requests that finished on their first (or restored) token
         let mut done = Vec::new();
         let mut i = 0;
         while i < self.active.len() {
@@ -239,6 +286,130 @@ impl Scheduler {
         Ok(done)
     }
 
+    /// Rebuild a checkpointed request: restore its KV (by reference through
+    /// the radix cache where promised, by value otherwise) and rejoin the
+    /// decode set at the checkpointed step. If the promised prefix was
+    /// evicted between probe and restore, fall back to a plain re-prefill —
+    /// deterministic decode regenerates the same stream either way.
+    fn resume(&mut self, req: GenRequest, ckpt: DecodeCheckpoint, enqueued: Instant) {
+        let DecodeCheckpoint { prompt, generated, kv } = ckpt;
+        if generated.is_empty() {
+            // defensive: a checkpoint without a sampled token has no decode
+            // state worth restoring
+            self.queue.push_front(QueueEntry::Fresh(req, enqueued));
+            return;
+        }
+        let seq = match self.engine.restore_sequence(&kv, &prompt) {
+            Ok(seq) => seq,
+            Err(e) => {
+                eprintln!(
+                    "[ita-scheduler] checkpoint restore for request {} failed ({e:#}); \
+                     re-prefilling",
+                    req.id
+                );
+                self.queue.push_front(QueueEntry::Fresh(req, enqueued));
+                return;
+            }
+        };
+        self.metrics.restored_tokens += kv.value_rows() as u64;
+        self.metrics.prefill_skipped_tokens += kv.by_ref_len as u64;
+        self.metrics.resumed_requests += 1;
+        // publish the (fully restored) prompt for future prefix reuse on
+        // this cartridge — a second migration of it then travels by-ref
+        self.engine.register_prefix(seq, &prompt);
+        let next = *generated.last().expect("checked non-empty above");
+        let now = Instant::now();
+        // time-to-resumed-service: keeps recovery latency visible in the
+        // pooled TTFT percentiles (a dead cartridge's genuine sample was
+        // stripped with its checkpoint; after a live migration this is one
+        // extra sample for the request — visibility over exact counts)
+        self.metrics.ttft.record(now.duration_since(enqueued).as_secs_f64());
+        self.active.push(Active {
+            skipped: prompt.len(), // nothing re-prefilled here
+            prompt,
+            req,
+            seq,
+            next_token: next,
+            resumed_len: generated.len(),
+            generated,
+            enqueued,
+            first_token_at: Some(now),
+        });
+    }
+
+    /// Extract the request with wire id `ticket` for migration to another
+    /// cartridge: the request plus — once it has started decoding — a
+    /// [`DecodeCheckpoint`] whose leading `keep_prefix` prompt tokens are
+    /// exported by reference (the caller probed the target's radix cache
+    /// first; pass 0 for a fully by-value export). Still-queued requests
+    /// come back without a checkpoint — there is no KV to move yet.
+    /// Returns `None` when the ticket is unknown or already completed.
+    /// The request leaves this scheduler entirely; its KV pages are freed.
+    pub fn export(
+        &mut self,
+        ticket: u64,
+        keep_prefix: usize,
+    ) -> Option<(GenRequest, Option<DecodeCheckpoint>)> {
+        if let Some(i) = self.queue.iter().position(|e| e.id() == ticket) {
+            return match self.queue.remove(i) {
+                Some(QueueEntry::Fresh(req, _)) => Some((req, None)),
+                Some(QueueEntry::Resume(req, ckpt, _)) => Some((req, Some(*ckpt))),
+                None => None,
+            };
+        }
+        let i = self.active.iter().position(|a| a.req.id == ticket)?;
+        let a = self.active.swap_remove(i);
+        let by_ref = keep_prefix
+            .min(a.prompt.len().saturating_sub(1))
+            .min(self.engine.seq_len(a.seq));
+        let kv = self
+            .engine
+            .cache
+            .snapshot_seq(a.seq, by_ref)
+            .expect("active sequences snapshot cleanly");
+        self.engine.free_sequence(a.seq);
+        self.metrics.migrated_out += 1;
+        let ckpt = DecodeCheckpoint { prompt: a.prompt, generated: a.generated, kv };
+        Some((a.req, Some(ckpt)))
+    }
+
+    /// By-value decode checkpoints of every active request, keyed by wire
+    /// id. The worker piggybacks these on its periodic metric checkpoints,
+    /// so if this cartridge later panics the dispatcher resumes each
+    /// request from its last checkpointed decode step instead of prefill.
+    pub fn decode_checkpoints(&self) -> Vec<(u64, DecodeCheckpoint)> {
+        self.active
+            .iter()
+            .filter(|a| !a.generated.is_empty())
+            .map(|a| {
+                let kv = self
+                    .engine
+                    .cache
+                    .snapshot_seq(a.seq, 0)
+                    .expect("active sequences snapshot cleanly");
+                let ckpt = DecodeCheckpoint {
+                    prompt: a.prompt.clone(),
+                    generated: a.generated.clone(),
+                    kv,
+                };
+                (a.req.id, ckpt)
+            })
+            .collect()
+    }
+
+    /// Longest prefix of `prompt` this cartridge's radix cache holds right
+    /// now — the migration probe (the dispatcher cannot see engine state
+    /// directly; it asks over the worker channel).
+    pub fn cached_prefix_tokens(&self, prompt: &str) -> usize {
+        self.engine.cached_prefix_len(&self.tokenizer.encode(prompt))
+    }
+
+    /// Radix-cache occupancy for checkpoint piggybacking (`None` when the
+    /// prefix cache is disabled — the dispatcher then never prunes).
+    pub fn prefix_occupancy(&self) -> Option<Vec<Vec<u32>>> {
+        self.engine.prefix_cache().map(|pc| pc.cached_prefixes())
+    }
+
     fn finish(&mut self, a: Active, now: Instant) -> GenResult {
         self.engine.free_sequence(a.seq);
         self.metrics.requests_completed += 1;
@@ -247,11 +418,11 @@ impl Scheduler {
             .first_token_at
             .map(|t| now.duration_since(t).as_secs_f64())
             .unwrap_or(0.0);
-        let itl = if a.generated.len() > 1 {
-            decode_time / (a.generated.len() - 1) as f64
-        } else {
-            0.0
-        };
+        // intervals decoded HERE: a fresh request spans len-1 intervals
+        // from its first token; a resumed one spans one interval per token
+        // decoded since the restore (inherited tokens cost nothing here)
+        let intervals = a.generated.len().saturating_sub(a.resumed_len.max(1));
+        let itl = if intervals > 0 { decode_time / intervals as f64 } else { 0.0 };
         self.metrics.itl.record(itl);
         let finish = if a.req.stop_at_eos && a.generated.last() == Some(&EOS) {
             FinishReason::Eos
@@ -323,6 +494,90 @@ mod tests {
         assert_eq!(m.requests_completed, 5);
         assert_eq!(m.interface_bytes, m.traffic.total());
         assert!(m.traffic.protocol_total() > 0);
+    }
+
+    #[test]
+    fn export_resume_mid_decode_is_deterministic() {
+        let opts = SchedulerOpts::default();
+        let req = GenRequest {
+            id: 0,
+            prompt: "migration differential".into(),
+            max_new_tokens: 24,
+            sampling: crate::host::sampling::SamplingParams::greedy(),
+            stop_at_eos: false,
+        };
+        // reference: the same request served without ever moving
+        let mut r = Scheduler::new(Engine::synthetic(&crate::config::ModelConfig::TINY, 7), opts);
+        r.submit(req.clone());
+        let want = r.run_to_completion().unwrap().remove(0);
+
+        // decode a few steps, export, resume on a different scheduler whose
+        // cache already holds unrelated traffic
+        let mut a = Scheduler::new(Engine::synthetic(&crate::config::ModelConfig::TINY, 7), opts);
+        a.submit(req.clone());
+        for _ in 0..6 {
+            a.step().unwrap();
+        }
+        let (req2, ckpt) = a.export(0, 0).unwrap();
+        let ckpt = ckpt.expect("mid-decode export carries a checkpoint");
+        assert!(ckpt.generated.len() > 1, "export was not mid-decode");
+        assert_eq!(ckpt.kv.by_ref_len, 0);
+        // the exported sequence's pages left with it (the prefix cache may
+        // still hold refs, but no live sequence remains)
+        assert_eq!(a.engine().cache.stats().2, 0);
+
+        let mut b = Scheduler::new(Engine::synthetic(&crate::config::ModelConfig::TINY, 7), opts);
+        b.submit(GenRequest::greedy(9, "unrelated warmup traffic", 4));
+        b.run_to_completion().unwrap();
+        b.submit_resume(req2, ckpt, Instant::now());
+        let out = b.run_to_completion().unwrap();
+        let got = out.iter().find(|x| x.id == 0).unwrap();
+        assert_eq!(got.tokens, want.tokens, "migrated decode diverged");
+        assert_eq!(got.skipped_prompt_tokens, got.prompt_tokens, "resume must not re-prefill");
+        let m = b.metrics();
+        assert_eq!(m.resumed_requests, 1);
+        assert!(m.restored_tokens > 0);
+        assert_eq!(a.metrics().migrated_out, 1);
+    }
+
+    #[test]
+    fn export_by_ref_rides_the_target_prefix_cache() {
+        let opts = SchedulerOpts::default();
+        let tiny = crate::config::ModelConfig::TINY;
+        let req = GenRequest {
+            id: 0,
+            prompt: "shared system prompt, migrated".into(),
+            max_new_tokens: 16,
+            sampling: crate::host::sampling::SamplingParams::greedy(),
+            stop_at_eos: false,
+        };
+        let mut r = Scheduler::new(Engine::synthetic(&tiny, 7), opts);
+        r.submit(req.clone());
+        let want = r.run_to_completion().unwrap().remove(0);
+
+        // the target has served the same prompt before: its radix cache
+        // covers all but the last prompt token
+        let mut b = Scheduler::new(Engine::synthetic(&tiny, 7), opts);
+        b.submit(GenRequest::greedy(5, &req.prompt, 3));
+        b.run_to_completion().unwrap();
+        let keep = b.cached_prefix_tokens(&req.prompt);
+        assert!(keep > 0, "target cache should hold the prompt");
+
+        let mut a = Scheduler::new(Engine::synthetic(&tiny, 7), opts);
+        a.submit(req.clone());
+        for _ in 0..4 {
+            a.step().unwrap();
+        }
+        let (req2, ckpt) = a.export(0, keep).unwrap();
+        let ckpt = ckpt.expect("mid-decode export carries a checkpoint");
+        // the promised prefix travelled by reference, not by value
+        assert_eq!(ckpt.kv.by_ref_len, keep);
+        assert!(ckpt.kv.value_rows() < ckpt.kv.len);
+        b.submit_resume(req2, ckpt, Instant::now());
+        let out = b.run_to_completion().unwrap();
+        let got = out.iter().find(|x| x.id == 0).unwrap();
+        assert_eq!(got.tokens, want.tokens, "by-ref migrated decode diverged");
+        assert!(b.metrics().prefill_skipped_tokens >= keep as u64);
     }
 
     #[test]

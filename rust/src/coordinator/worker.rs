@@ -20,22 +20,64 @@ use std::time::Instant;
 use anyhow::Result;
 
 use super::metrics::ServingMetrics;
-use super::request::GenRequest;
+use super::request::{DecodeCheckpoint, GenRequest};
 use super::scheduler::{Scheduler, SchedulerOpts};
 use crate::coordinator::engine::Engine;
 
 /// Index of a cartridge within its fleet.
 pub type CartridgeId = usize;
 
+/// Reply payload of [`WorkerMsg::Export`]: the wire request plus its decode
+/// checkpoint (`None` when it had not started decoding yet).
+pub type ExportedRequest = (GenRequest, Option<Box<DecodeCheckpoint>>);
+
 /// Commands a worker accepts from its owner.
 pub enum WorkerMsg {
     /// A request plus the instant it entered the owner's admission queue
     /// (latency metrics count from there, not from worker arrival).
     Submit(GenRequest, Instant),
+    /// A checkpointed request: restore its KV snapshot and continue decode
+    /// from the checkpointed step instead of re-prefilling (migration
+    /// arrivals and panic-recovery resumes).
+    Resume(GenRequest, Box<DecodeCheckpoint>, Instant),
+    /// Migration probe: reply with the longest prefix of the prompt this
+    /// cartridge's radix cache currently holds, so the exporter can ship
+    /// that run by reference instead of by value.
+    Probe(String, Sender<usize>),
+    /// Migration export: extract the request with this wire id (and its
+    /// decode checkpoint, with `keep_prefix` leading prompt tokens elided
+    /// by reference). Replies `None` when it already completed.
+    Export {
+        ticket: u64,
+        keep_prefix: usize,
+        reply: Sender<Option<ExportedRequest>>,
+    },
     Snapshot(Sender<ServingMetrics>),
     /// Finish all accepted work, report final metrics via
     /// [`WorkerEvent::Drained`], and exit.
     Drain,
+}
+
+/// Worker checkpoint: metric counters plus everything the owner needs to
+/// survive this cartridge's death and to route around its cache. The heavy
+/// payloads (`decode`, `prefix_occupancy`) ride only the periodic cadence
+/// ([`CHECKPOINT_EVERY_STEPS`]); completion-triggered checkpoints carry
+/// metrics alone, so checkpoint cost stays O(1) per completion.
+pub struct CheckpointReport {
+    /// Counters and ledgers; the per-request latency sample vectors are
+    /// stripped to keep checkpoints O(1).
+    pub metrics: ServingMetrics,
+    /// By-value decode checkpoints of every active request, keyed by wire
+    /// id (periodic checkpoints only; empty otherwise). If the cartridge
+    /// later panics, the owner resumes each request from here instead of
+    /// restarting its prefill.
+    pub decode: Vec<(u64, DecodeCheckpoint)>,
+    /// Radix prefix-cache occupancy (root-to-leaf token paths). `None`
+    /// when the cache is disabled or on metrics-only checkpoints — policies
+    /// must treat `None` as "no information", never as "empty cache".
+    /// Dispatch policies use it to invalidate stale shadow-index entries
+    /// for prefixes this cartridge evicted.
+    pub prefix_occupancy: Option<Vec<Vec<u32>>>,
 }
 
 /// Events a worker emits on the shared event channel.
@@ -46,12 +88,11 @@ pub enum WorkerEvent {
     BootFailed(CartridgeId, String),
     /// One request finished.
     Done(CartridgeId, super::request::GenResult),
-    /// Periodic engine-side metrics checkpoint (counters and ledgers; the
-    /// per-request latency sample vectors are stripped to keep checkpoints
-    /// O(1)). The owner keeps the latest one so a cartridge that later dies
-    /// mid-request still contributes its counters to fleet aggregates
-    /// (instead of reporting zeros).
-    Checkpoint(CartridgeId, ServingMetrics),
+    /// Periodic checkpoint (see [`CheckpointReport`]). The owner keeps the
+    /// latest one so a cartridge that later dies mid-request still
+    /// contributes its counters to fleet aggregates, and its in-flight
+    /// requests resume from their last checkpointed decode step.
+    Checkpoint(CartridgeId, Box<CheckpointReport>),
     /// Drain complete; final metrics attached. The thread has exited.
     Drained(CartridgeId, ServingMetrics),
     /// The worker hit an engine error or panicked; its in-flight requests
@@ -157,10 +198,11 @@ fn worker_thread<E, F>(
     }
 }
 
-/// Steps between unconditional metric checkpoints while busy (completions
-/// also checkpoint immediately, so this only bounds staleness during long
-/// decode stretches).
-const CHECKPOINT_EVERY_STEPS: u32 = 16;
+/// Steps between payload-carrying checkpoints while busy (decode KV
+/// snapshots + radix occupancy). Completions additionally emit metrics-only
+/// checkpoints immediately, so counter staleness is bounded by completions
+/// AND payload staleness is bounded by this constant.
+pub const CHECKPOINT_EVERY_STEPS: u32 = 16;
 
 fn worker_loop<E>(
     id: CartridgeId,
@@ -187,6 +229,18 @@ fn worker_loop<E>(
             };
             match msg {
                 Some(WorkerMsg::Submit(req, enqueued)) => sched.submit_at(req, enqueued),
+                Some(WorkerMsg::Resume(req, ckpt, enqueued)) => {
+                    sched.submit_resume(req, *ckpt, enqueued)
+                }
+                Some(WorkerMsg::Probe(prompt, tx)) => {
+                    let _ = tx.send(sched.cached_prefix_tokens(&prompt));
+                }
+                Some(WorkerMsg::Export { ticket, keep_prefix, reply }) => {
+                    let out = sched
+                        .export(ticket, keep_prefix)
+                        .map(|(req, ckpt)| (req, ckpt.map(Box::new)));
+                    let _ = reply.send(out);
+                }
                 Some(WorkerMsg::Snapshot(tx)) => {
                     let _ = tx.send(sched.metrics());
                 }
@@ -203,8 +257,8 @@ fn worker_loop<E>(
                         let _ = events.send(wrap(WorkerEvent::Done(id, result)));
                     }
                     steps_since_checkpoint += 1;
-                    if completed || steps_since_checkpoint >= CHECKPOINT_EVERY_STEPS {
-                        steps_since_checkpoint = 0;
+                    let periodic = steps_since_checkpoint >= CHECKPOINT_EVERY_STEPS;
+                    if completed || periodic {
                         // counters only: the latency recorders grow one
                         // sample per completion, and cloning them into
                         // every checkpoint would make total checkpoint
@@ -212,7 +266,21 @@ fn worker_loop<E>(
                         let mut snap = sched.metrics();
                         snap.ttft = Default::default();
                         snap.itl = Default::default();
-                        let _ = events.send(wrap(WorkerEvent::Checkpoint(id, snap)));
+                        // the heavy payloads — per-request KV snapshots and
+                        // radix occupancy — ride only the periodic cadence:
+                        // completions can fire every step, and serializing
+                        // every active context that often is the same
+                        // unbounded cost the stripped recorders avoid. The
+                        // counter therefore resets only when payloads ship,
+                        // so a steady completion stream cannot starve them.
+                        let (decode, prefix_occupancy) = if periodic {
+                            steps_since_checkpoint = 0;
+                            (sched.decode_checkpoints(), sched.prefix_occupancy())
+                        } else {
+                            (Vec::new(), None)
+                        };
+                        let report = CheckpointReport { metrics: snap, decode, prefix_occupancy };
+                        let _ = events.send(wrap(WorkerEvent::Checkpoint(id, Box::new(report))));
                     }
                 }
                 Err(e) => {
@@ -267,8 +335,12 @@ mod tests {
         assert!(w.send(WorkerMsg::Drain));
         loop {
             match erx.recv().unwrap() {
-                WorkerEvent::Checkpoint(0, m) => {
-                    assert_eq!(m.requests_completed, 1);
+                WorkerEvent::Checkpoint(0, report) => {
+                    assert_eq!(report.metrics.requests_completed, 1);
+                    // completion checkpoints are metrics-only (payloads
+                    // ride the periodic cadence)
+                    assert!(report.decode.is_empty());
+                    assert!(report.prefix_occupancy.is_none());
                     saw_checkpoint = true;
                 }
                 WorkerEvent::Drained(0, m) => {
@@ -279,6 +351,44 @@ mod tests {
             }
         }
         assert!(saw_checkpoint, "completion should emit a checkpoint");
+    }
+
+    #[test]
+    fn periodic_checkpoints_carry_decode_state_and_occupancy() {
+        let (etx, erx) = channel();
+        let w = spawn_synthetic(etx);
+        let _ = erx.recv().unwrap(); // Ready
+        // a decode longer than the checkpoint interval, so at least one
+        // periodic (payload-carrying) checkpoint fires mid-request
+        let mut req = GenRequest::greedy(3, "long decode", 2 * CHECKPOINT_EVERY_STEPS as usize);
+        req.stop_at_eos = false;
+        assert!(w.send(WorkerMsg::Submit(req, Instant::now())));
+        let mut saw_payload = false;
+        loop {
+            match erx.recv().unwrap() {
+                WorkerEvent::Checkpoint(0, report) => {
+                    if let Some((ticket, ckpt)) = report.decode.first() {
+                        assert_eq!(*ticket, 3);
+                        assert!(!ckpt.generated.is_empty());
+                        assert_eq!(
+                            ckpt.kv.len,
+                            ckpt.prompt.len() + ckpt.generated.len() - 1,
+                            "checkpoint KV length invariant"
+                        );
+                        // prefix cache is on by default → occupancy rides along
+                        assert!(report.prefix_occupancy.is_some());
+                        saw_payload = true;
+                    }
+                }
+                WorkerEvent::Done(0, r) => {
+                    assert_eq!(r.id, 3);
+                    break;
+                }
+                _ => panic!("expected Checkpoint or Done"),
+            }
+        }
+        assert!(saw_payload, "no periodic decode checkpoint before completion");
+        drop(w);
     }
 
     #[test]

@@ -25,6 +25,104 @@ use anyhow::{anyhow, bail, Result};
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct SeqId(pub u64);
 
+/// Serialized KV state of one sequence — the unit of cross-cartridge
+/// migration. The Split-Brain contract makes this portable by design: all
+/// dynamic KV lives on the host, so a request's context is just these rows,
+/// and any cartridge running the same immutable weights can resume decode
+/// from them.
+///
+/// Leading `by_ref_len` rows may be **exported by reference**: they are
+/// omitted from `k`/`v` because the restoring side already holds a
+/// bit-identical copy (its radix prefix cache covers that token prefix, and
+/// prefill is deterministic in absolute position). Everything else travels
+/// by value. [`to_bytes`](KvSnapshot::to_bytes) /
+/// [`from_bytes`](KvSnapshot::from_bytes) give the snapshot a stable wire
+/// format (little-endian; header `[n_layers, d_model, len, by_ref_len]` as
+/// u64, then per layer the K rows then the V rows as f32).
+#[derive(Debug, Clone, PartialEq)]
+pub struct KvSnapshot {
+    pub n_layers: usize,
+    pub d_model: usize,
+    /// Committed token rows the sequence held at snapshot time.
+    pub len: usize,
+    /// Leading rows omitted from `k`/`v` (0 = fully by value).
+    pub by_ref_len: usize,
+    /// Per layer: rows `by_ref_len..len`, row-major `[rows × d_model]`.
+    pub k: Vec<Vec<f32>>,
+    pub v: Vec<Vec<f32>>,
+}
+
+impl KvSnapshot {
+    /// Rows carried by value (the rest ride the target's prefix cache).
+    pub fn value_rows(&self) -> usize {
+        self.len - self.by_ref_len
+    }
+
+    /// Serialized size in bytes (what a real host↔host migration moves).
+    pub fn wire_bytes(&self) -> usize {
+        32 + 2 * self.n_layers * self.value_rows() * self.d_model * 4
+    }
+
+    /// Encode to the stable little-endian wire format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.wire_bytes());
+        for field in [self.n_layers, self.d_model, self.len, self.by_ref_len] {
+            out.extend_from_slice(&(field as u64).to_le_bytes());
+        }
+        for layer in 0..self.n_layers {
+            for row in &self.k[layer] {
+                out.extend_from_slice(&row.to_le_bytes());
+            }
+            for row in &self.v[layer] {
+                out.extend_from_slice(&row.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    /// Decode a [`to_bytes`](KvSnapshot::to_bytes) buffer, validating
+    /// geometry against the declared header.
+    pub fn from_bytes(bytes: &[u8]) -> Result<KvSnapshot> {
+        if bytes.len() < 32 {
+            bail!("kv snapshot truncated: {} header bytes", bytes.len());
+        }
+        let word = |i: usize| {
+            let mut b = [0u8; 8];
+            b.copy_from_slice(&bytes[i * 8..(i + 1) * 8]);
+            u64::from_le_bytes(b) as usize
+        };
+        let (n_layers, d_model, len, by_ref_len) = (word(0), word(1), word(2), word(3));
+        if by_ref_len > len {
+            bail!("kv snapshot header: by_ref_len {by_ref_len} > len {len}");
+        }
+        let rows = len - by_ref_len;
+        // checked: a corrupt (or hostile — this is the cross-host wire
+        // format) header must fail cleanly, not wrap the size check and
+        // drive a huge allocation
+        let expect = rows
+            .checked_mul(2)
+            .and_then(|n| n.checked_mul(d_model))
+            .and_then(|n| n.checked_mul(n_layers))
+            .and_then(|n| n.checked_mul(4))
+            .and_then(|n| n.checked_add(32));
+        if expect != Some(bytes.len()) {
+            bail!("kv snapshot: size/header mismatch ({} bytes)", bytes.len());
+        }
+        let mut floats = bytes[32..].chunks_exact(4).map(|c| {
+            let mut b = [0u8; 4];
+            b.copy_from_slice(c);
+            f32::from_le_bytes(b)
+        });
+        let mut k = Vec::with_capacity(n_layers);
+        let mut v = Vec::with_capacity(n_layers);
+        for _ in 0..n_layers {
+            k.push(floats.by_ref().take(rows * d_model).collect());
+            v.push(floats.by_ref().take(rows * d_model).collect());
+        }
+        Ok(KvSnapshot { n_layers, d_model, len, by_ref_len, k, v })
+    }
+}
+
 struct Page {
     /// [page_size, d_model]
     k: Vec<f32>,
@@ -324,6 +422,88 @@ impl PagedKvCache {
         out
     }
 
+    /// Serialize one sequence's committed KV rows into a portable
+    /// [`KvSnapshot`]. `from_pos` leading rows are omitted ("exported by
+    /// reference"): the caller asserts the restoring side already holds
+    /// bit-identical rows for them (e.g. via its radix prefix cache — the
+    /// engine is deterministic, so the K/V of a shared token prefix at the
+    /// same positions is identical across cartridges). Pass 0 for a fully
+    /// self-contained, by-value snapshot. Read-only: refcounts, page
+    /// tables, and the sequence itself are untouched.
+    pub fn snapshot_seq(&self, id: SeqId, from_pos: usize) -> Result<KvSnapshot> {
+        let state = self.seqs.get(&id).ok_or_else(|| anyhow!("unknown seq"))?;
+        if from_pos > state.len {
+            bail!("snapshot_seq: from_pos {from_pos} beyond committed length {}", state.len);
+        }
+        let rows = state.len - from_pos;
+        let d = self.d_model;
+        let mut k = vec![Vec::with_capacity(rows * d); self.n_layers];
+        let mut v = vec![Vec::with_capacity(rows * d); self.n_layers];
+        for layer in 0..self.n_layers {
+            let (kl, vl) = (&mut k[layer], &mut v[layer]);
+            self.for_each_kv(id, layer, |pos, kr, vr| {
+                if pos >= from_pos {
+                    kl.extend_from_slice(kr);
+                    vl.extend_from_slice(vr);
+                }
+            });
+        }
+        Ok(KvSnapshot {
+            n_layers: self.n_layers,
+            d_model: d,
+            len: state.len,
+            by_ref_len: from_pos,
+            k,
+            v,
+        })
+    }
+
+    /// Rebuild a snapshot's rows onto `into`, whose committed length must
+    /// equal `snap.by_ref_len` (0 for a fresh sequence; the grafted prefix
+    /// length when the leading run was exported by reference and attached
+    /// via [`share_pages`](PagedKvCache::share_pages)). Appends go through
+    /// the normal copy-on-write path, so restoring on top of a shared
+    /// prefix never mutates pages other holders can see.
+    pub fn restore_seq(&mut self, into: SeqId, snap: &KvSnapshot) -> Result<()> {
+        if snap.n_layers != self.n_layers || snap.d_model != self.d_model {
+            bail!(
+                "restore_seq: snapshot geometry {}x{} != cache {}x{}",
+                snap.n_layers,
+                snap.d_model,
+                self.n_layers,
+                self.d_model
+            );
+        }
+        let have = self.seqs.get(&into).ok_or_else(|| anyhow!("unknown seq"))?.len;
+        if have != snap.by_ref_len {
+            bail!(
+                "restore_seq: target holds {have} committed rows, snapshot expects {}",
+                snap.by_ref_len
+            );
+        }
+        let rows = snap.value_rows();
+        let d = self.d_model;
+        for layer in 0..self.n_layers {
+            if snap.k[layer].len() != rows * d || snap.v[layer].len() != rows * d {
+                bail!("restore_seq: layer {layer} row data truncated");
+            }
+        }
+        for row in 0..rows {
+            let pos = snap.by_ref_len + row;
+            for layer in 0..self.n_layers {
+                self.append_at(
+                    into,
+                    layer,
+                    pos,
+                    &snap.k[layer][row * d..(row + 1) * d],
+                    &snap.v[layer][row * d..(row + 1) * d],
+                )?;
+            }
+            self.advance(into)?;
+        }
+        Ok(())
+    }
+
     /// Pool statistics: (allocated pages, free pages, live sequences).
     pub fn stats(&self) -> (usize, usize, usize) {
         (self.pool.len(), self.free.len(), self.seqs.len())
@@ -531,6 +711,125 @@ mod tests {
         // a fresh target works
         c.share_pages(f, &pages, 1).unwrap();
         assert_eq!(c.len(f), 1);
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrip_by_value() {
+        let d = 4;
+        let mut c = PagedKvCache::new(2, d, 3);
+        let a = c.alloc_seq();
+        for t in 0..7 {
+            for l in 0..2 {
+                c.append(a, l, &row(d, (10 * t + l) as f32), &row(d, -((10 * t + l) as f32)))
+                    .unwrap();
+            }
+            c.advance(a).unwrap();
+        }
+        let snap = c.snapshot_seq(a, 0).unwrap();
+        assert_eq!(snap.len, 7);
+        assert_eq!(snap.value_rows(), 7);
+        // snapshot is read-only: the donor is untouched
+        let (alloc, free, live) = c.stats();
+        assert_eq!((alloc - free, live), (6, 1));
+        // restore into a fresh sequence of the same cache
+        let b = c.alloc_seq();
+        c.restore_seq(b, &snap).unwrap();
+        assert_eq!(c.len(b), 7);
+        for l in 0..2 {
+            c.for_each_kv(b, l, |pos, k, v| {
+                assert_eq!(k[0], (10 * pos + l) as f32);
+                assert_eq!(v[0], -((10 * pos + l) as f32));
+            });
+        }
+        // and into a second, independent cache (cross-cartridge restore)
+        let mut other = PagedKvCache::new(2, d, 5); // different page size is fine
+        let x = other.alloc_seq();
+        other.restore_seq(x, &snap).unwrap();
+        other.for_each_kv(x, 1, |pos, k, _| assert_eq!(k[0], (10 * pos + 1) as f32));
+        c.free_seq(a);
+        c.free_seq(b);
+        let (alloc, free, _) = c.stats();
+        assert_eq!(alloc, free);
+    }
+
+    #[test]
+    fn snapshot_by_ref_restores_onto_shared_prefix() {
+        let d = 3;
+        let mut c = PagedKvCache::new(1, d, 4);
+        let donor = c.alloc_seq();
+        for t in 0..10 {
+            c.append(donor, 0, &row(d, t as f32), &row(d, -(t as f32))).unwrap();
+            c.advance(donor).unwrap();
+        }
+        // export rows 6.. by value; 0..6 ride "by reference"
+        let snap = c.snapshot_seq(donor, 6).unwrap();
+        assert_eq!(snap.by_ref_len, 6);
+        assert_eq!(snap.value_rows(), 4);
+        // the target grafts the prefix (here: share the donor's pages, as a
+        // prefix-cache hit would), then restores the remainder by value
+        let pages = vec![c.seq_pages(donor, 0).unwrap()[..2].to_vec()];
+        let b = c.alloc_seq();
+        c.share_pages(b, &pages, 6).unwrap();
+        c.restore_seq(b, &snap).unwrap();
+        assert_eq!(c.len(b), 10);
+        c.for_each_kv(b, 0, |pos, k, v| {
+            assert_eq!(k[0], pos as f32);
+            assert_eq!(v[0], -(pos as f32));
+        });
+        // COW kept the donor's shared page intact
+        c.for_each_kv(donor, 0, |pos, k, _| assert_eq!(k[0], pos as f32));
+        c.free_seq(donor);
+        c.free_seq(b);
+        let (alloc, free, _) = c.stats();
+        assert_eq!(alloc, free);
+    }
+
+    #[test]
+    fn snapshot_bytes_roundtrip_and_validation() {
+        let d = 2;
+        let mut c = PagedKvCache::new(2, d, 2);
+        let a = c.alloc_seq();
+        for t in 0..5 {
+            for l in 0..2 {
+                c.append(a, l, &row(d, t as f32), &row(d, 0.5 + t as f32)).unwrap();
+            }
+            c.advance(a).unwrap();
+        }
+        let snap = c.snapshot_seq(a, 1).unwrap();
+        let bytes = snap.to_bytes();
+        assert_eq!(bytes.len(), snap.wire_bytes());
+        let back = KvSnapshot::from_bytes(&bytes).unwrap();
+        assert_eq!(back, snap);
+        // corruption is rejected, not misread
+        assert!(KvSnapshot::from_bytes(&bytes[..bytes.len() - 1]).is_err());
+        assert!(KvSnapshot::from_bytes(&bytes[..16]).is_err());
+        // a hostile header whose size product overflows must fail cleanly
+        // instead of wrapping the size check into a huge allocation
+        let mut evil = Vec::new();
+        for field in [u64::MAX, 1, 1, 0] {
+            evil.extend_from_slice(&field.to_le_bytes());
+        }
+        assert!(KvSnapshot::from_bytes(&evil).is_err());
+    }
+
+    #[test]
+    fn restore_rejects_geometry_and_offset_mismatches() {
+        let d = 4;
+        let mut c = PagedKvCache::new(1, d, 2);
+        let a = c.alloc_seq();
+        c.append(a, 0, &row(d, 1.0), &row(d, 1.0)).unwrap();
+        c.advance(a).unwrap();
+        let snap = c.snapshot_seq(a, 0).unwrap();
+        assert!(c.snapshot_seq(a, 2).is_err(), "from_pos beyond length");
+        assert!(c.snapshot_seq(SeqId(99), 0).is_err());
+        // wrong layer count
+        let mut wrong = PagedKvCache::new(2, d, 2);
+        let w = wrong.alloc_seq();
+        assert!(wrong.restore_seq(w, &snap).is_err());
+        // target length must equal by_ref_len
+        let by_ref = c.snapshot_seq(a, 1).unwrap();
+        let fresh = c.alloc_seq();
+        assert!(c.restore_seq(fresh, &by_ref).is_err(), "fresh target lacks the prefix");
     }
 
     #[test]

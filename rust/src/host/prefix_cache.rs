@@ -443,6 +443,40 @@ impl PrefixCache {
         }
     }
 
+    /// Current occupancy: the full root-to-leaf token path of every cached
+    /// prefix, in deterministic (sorted) order. Internal prefixes are
+    /// implied — any leading slice of a returned path is also cached — so
+    /// matching a candidate prompt against this list with
+    /// [`common_prefix_len`] recovers [`peek`](PrefixCache::peek)'s answer
+    /// up to sub-page divergence (the list can overestimate by less than
+    /// one page where a probe splits inside a child's first page — the same
+    /// slack the dispatcher's shadow index already tolerates). Workers
+    /// piggyback this on their periodic metric checkpoints so the fleet
+    /// dispatcher can drop shadow entries this cache has since evicted.
+    pub fn cached_prefixes(&self) -> Vec<Vec<u32>> {
+        let mut out = Vec::new();
+        for (id, slot) in self.nodes.iter().enumerate() {
+            let Some(n) = slot else { continue };
+            if id == ROOT || !n.children.is_empty() {
+                continue; // only leaves: their paths subsume the internals
+            }
+            // stitch the edge labels from the root down to this leaf
+            let mut chain = vec![id];
+            let mut cur = n.parent;
+            while cur != ROOT {
+                chain.push(cur);
+                cur = self.node(cur).parent;
+            }
+            let mut path = Vec::new();
+            for &link in chain.iter().rev() {
+                path.extend_from_slice(&self.node(link).tokens);
+            }
+            out.push(path);
+        }
+        out.sort();
+        out
+    }
+
     /// One-line utilization summary.
     pub fn report(&self) -> String {
         format!(
@@ -617,6 +651,36 @@ mod tests {
                 cache.free_seq(id);
             }
         }
+    }
+
+    #[test]
+    fn cached_prefixes_report_full_paths_and_track_eviction() {
+        let mut cache = PagedKvCache::new(L, 3, S);
+        let mut pc = PrefixCache::new(L, S, 0);
+        let p1 = toks(&[1, 2, 3, 4, 10, 11, 12, 13]);
+        let p2 = toks(&[1, 2, 3, 4, 20, 21, 22, 23]); // splits after page 0
+        let (_a, _) = prefill(&mut cache, &mut pc, &p1);
+        let (_b, _) = prefill(&mut cache, &mut pc, &p2);
+        let occ = pc.cached_prefixes();
+        assert_eq!(occ, vec![p1.clone(), p2.clone()]);
+        // occupancy matching reproduces peek() for any probe
+        for probe in [&p1, &p2, &toks(&[1, 2, 3, 4, 99, 99, 99, 99, 99])] {
+            let via_occ = occ.iter().map(|c| common_prefix_len(c, probe)).max().unwrap_or(0);
+            assert_eq!(via_occ.min(probe.len() - 1), pc.peek(probe));
+        }
+        // eviction shows up in occupancy: rebuild under a budget of one
+        // 2-page run, free the donors, and push the first run out
+        let mut cache = PagedKvCache::new(L, 3, S);
+        let mut pc = PrefixCache::new(L, S, 2 * L);
+        let (a2, _) = prefill(&mut cache, &mut pc, &p1);
+        cache.free_seq(a2);
+        let (b2, _) = prefill(&mut cache, &mut pc, &p2);
+        cache.free_seq(b2);
+        let occ = pc.cached_prefixes();
+        assert!(
+            !occ.iter().any(|c| common_prefix_len(c, &p1) > S),
+            "evicted branch still reported: {occ:?}"
+        );
     }
 
     #[test]

@@ -13,7 +13,7 @@ use std::sync::Arc;
 
 use ita::config::ModelConfig;
 use ita::coordinator::engine::Engine;
-use ita::coordinator::fleet::{Fleet, RoundRobin};
+use ita::coordinator::fleet::{Fleet, LeastLoaded, Rebalance, RoundRobin};
 use ita::coordinator::request::{FinishReason, GenRequest};
 use ita::coordinator::scheduler::{Scheduler, SchedulerOpts};
 use ita::coordinator::server::Server;
@@ -228,11 +228,14 @@ fn repeated_fleet_runs_are_deterministic() {
 // worker-panic recovery
 // ---------------------------------------------------------------------------
 
-/// A cartridge that panics on its first QKV call — the worker dies
-/// mid-request and the fleet must requeue onto a healthy cartridge.
+/// A cartridge that panics on QKV call number `fault_at` (0 = the very
+/// first) — the worker dies mid-request and the fleet must requeue onto a
+/// healthy cartridge. A later `fault_at` lets decode checkpoints accumulate
+/// first, exercising resume-from-checkpoint instead of restart-at-prefill.
 struct FaultyDevice {
     inner: SimDevice,
     calls: Arc<AtomicUsize>,
+    fault_at: usize,
 }
 
 impl ItaDevice for FaultyDevice {
@@ -245,7 +248,7 @@ impl ItaDevice for FaultyDevice {
     }
 
     fn qkv(&mut self, layer: usize, h: &Mat) -> anyhow::Result<(Mat, Mat, Mat)> {
-        if self.calls.fetch_add(1, Ordering::SeqCst) == 0 {
+        if self.calls.fetch_add(1, Ordering::SeqCst) == self.fault_at {
             panic!("injected cartridge fault");
         }
         self.inner.qkv(layer, h)
@@ -277,7 +280,7 @@ fn worker_panic_requeues_in_flight_requests() {
             );
             if id == 0 {
                 // cartridge 0 blows up on its very first device call
-                let faulty = FaultyDevice { inner: dev, calls: Arc::clone(&faults2) };
+                let faulty = FaultyDevice { inner: dev, calls: Arc::clone(&faults2), fault_at: 0 };
                 Ok(Engine::new(Box::new(faulty), emb, ModelConfig::TINY.n_heads))
             } else {
                 Ok(Engine::new(Box::new(dev), emb, ModelConfig::TINY.n_heads))
@@ -312,6 +315,153 @@ fn worker_panic_requeues_in_flight_requests() {
     assert_eq!(transcript(completed), reference);
 }
 
+// ---------------------------------------------------------------------------
+// live KV migration + checkpointed decode resume
+// ---------------------------------------------------------------------------
+
+/// A long-decode greedy request (no EOS cutoff, so every run emits exactly
+/// `max_new_tokens` and the byte-identity differential is maximal).
+fn long_request(id: u64, prompt: &str, max_new_tokens: usize) -> GenRequest {
+    let mut r = GenRequest::greedy(id, prompt, max_new_tokens);
+    r.stop_at_eos = false;
+    r
+}
+
+#[test]
+fn mid_decode_migration_outputs_byte_identical() {
+    let req = long_request(0, "the memory wall", 96);
+    let reference = run_fleet(1, std::slice::from_ref(&req), SchedulerOpts::default());
+
+    let fleet = Fleet::start(2, synthetic_factory(WEIGHT_SEED), SchedulerOpts::default())
+        .unwrap();
+    let h = fleet.submit(req.clone());
+    // wait until cartridge 0 is demonstrably mid-decode (the snapshot
+    // blocks between scheduler steps, so this is a clean sync point; ~90
+    // decode steps remain, so the migrate below lands mid-stream)
+    loop {
+        let m = fleet.metrics().unwrap();
+        if m.cartridges[0].serving.tokens_generated >= 6 {
+            break;
+        }
+        std::thread::yield_now();
+    }
+    assert!(fleet.migrate(0, 0, 1).unwrap(), "mid-decode migration refused");
+    let r = h.wait().unwrap();
+    assert_eq!(r.finish, FinishReason::MaxTokens);
+    // byte-identical to the run that never moved
+    assert_eq!(transcript(vec![(r.id, r.tokens.clone())]), reference);
+    // and the move really was a KV restore, not a re-prefill
+    assert_eq!(r.skipped_prompt_tokens, r.prompt_tokens);
+    let m = fleet.shutdown().unwrap();
+    assert_eq!(m.migrations, 1, "{}", m.report());
+    let target = &m.cartridges[1].serving;
+    assert_eq!(target.resumed_requests, 1);
+    assert_eq!(target.tokens_prefilled, 0, "target re-prefilled: {}", m.report());
+    assert!(target.restored_tokens > 0);
+    assert_eq!(m.cartridges[0].serving.migrated_out, 1);
+}
+
+#[test]
+fn rebalance_migrates_load_off_the_hot_cartridge() {
+    // alternate long/short requests: least-loaded parks the longs on
+    // cartridge 0 and the shorts on cartridge 1; once the shorts drain,
+    // the spread exceeds the threshold and longs migrate over live
+    let reqs: Vec<GenRequest> = (0..8)
+        .map(|i| {
+            if i % 2 == 0 {
+                long_request(i, &format!("long decode {i}"), 64)
+            } else {
+                long_request(i, &format!("short {i}"), 2)
+            }
+        })
+        .collect();
+    let reference = {
+        let mut out = Vec::new();
+        for r in &reqs {
+            let solo = run_fleet(1, std::slice::from_ref(r), SchedulerOpts::default());
+            out.extend(solo);
+        }
+        transcript(out)
+    };
+    let fleet = Fleet::with_dispatch(
+        2,
+        synthetic_factory(WEIGHT_SEED),
+        SchedulerOpts::default(),
+        Box::new(Rebalance::new(Box::new(LeastLoaded))),
+    )
+    .unwrap();
+    let handles: Vec<_> = reqs.iter().map(|r| fleet.submit(r.clone())).collect();
+    let mut got = Vec::new();
+    for (req, h) in reqs.iter().zip(handles) {
+        let r = h.wait().expect("request completes");
+        assert_ne!(r.finish, FinishReason::Error, "request {} failed", req.id);
+        got.push((r.id, r.tokens));
+    }
+    let m = fleet.shutdown().unwrap();
+    assert_eq!(m.failed_requests, 0);
+    assert!(m.migrations >= 1, "no rebalancing happened: {}", m.report());
+    // migrated or not, greedy decode stays byte-identical per request
+    assert_eq!(transcript(got), reference, "rebalancing changed outputs");
+    assert_eq!(m.aggregate().requests_completed, 8);
+}
+
+#[test]
+fn panic_recovery_resumes_from_last_checkpoint() {
+    // cartridge 0 panics on forward #24 = decode step 22 of the lone
+    // request (2 prefill forwards for the 15-token prompt, then one decode
+    // forward per step; TINY has 2 layers, so that is qkv call 23*2). The
+    // worker checkpoints every 16 busy steps, so a step-16 decode
+    // checkpoint exists when it dies — recovery must resume from it, not
+    // restart at prefill.
+    let prompt = "the memory wall";
+    let n_layers = ModelConfig::TINY.n_layers;
+    let fault_at = 23 * n_layers;
+    let faults = Arc::new(AtomicUsize::new(0));
+    let faults2 = Arc::clone(&faults);
+    let fleet = Fleet::start(
+        2,
+        move |id| {
+            let dev = SimDevice::synthetic(&ModelConfig::TINY, vec![1, 2, 4, 8], WEIGHT_SEED);
+            let emb = EmbeddingTable::new(
+                ModelWeights::synthetic(&ModelConfig::TINY, WEIGHT_SEED).emb,
+            );
+            if id == 0 {
+                let faulty = FaultyDevice { inner: dev, calls: Arc::clone(&faults2), fault_at };
+                Ok(Engine::new(Box::new(faulty), emb, ModelConfig::TINY.n_heads))
+            } else {
+                Ok(Engine::new(Box::new(dev), emb, ModelConfig::TINY.n_heads))
+            }
+        },
+        SchedulerOpts::default(),
+    )
+    .unwrap();
+
+    let req = long_request(0, prompt, 40);
+    let h = fleet.submit(req.clone());
+    let r = h.wait().expect("requeued request still completes");
+    assert_eq!(r.finish, FinishReason::MaxTokens);
+    assert!(faults.load(Ordering::SeqCst) > fault_at, "fault was never triggered");
+
+    // post-panic recovery resumed from the checkpoint: byte-identical to a
+    // fault-free run, and the survivor re-prefilled LESS than the full
+    // prompt (here: nothing — the checkpoint covers prompt + decoded KV)
+    let reference = run_fleet(1, std::slice::from_ref(&req), SchedulerOpts::default());
+    assert_eq!(transcript(vec![(r.id, r.tokens.clone())]), reference);
+    let m = fleet.shutdown().unwrap();
+    assert_eq!(m.requeued_requests, 1);
+    assert_eq!(m.checkpoint_resumes, 1, "recovery did not use the checkpoint: {}", m.report());
+    assert_eq!(m.failed_requests, 0);
+    let survivor = &m.cartridges[1].serving;
+    assert!(
+        survivor.tokens_prefilled < prompt.len() as u64,
+        "survivor re-prefilled the whole prompt: {}",
+        m.report()
+    );
+    assert_eq!(survivor.resumed_requests, 1);
+    assert!(survivor.restored_tokens > prompt.len() as u64, "checkpoint predates decode");
+    assert_eq!(r.skipped_prompt_tokens, r.prompt_tokens);
+}
+
 #[test]
 fn total_fleet_loss_fails_requests_loudly() {
     // a single cartridge that always faults: requests must complete with
@@ -323,8 +473,11 @@ fn total_fleet_loss_fails_requests_loudly() {
             let emb = EmbeddingTable::new(
                 ModelWeights::synthetic(&ModelConfig::TINY, WEIGHT_SEED).emb,
             );
-            let faulty =
-                FaultyDevice { inner: dev, calls: Arc::new(AtomicUsize::new(0)) };
+            let faulty = FaultyDevice {
+                inner: dev,
+                calls: Arc::new(AtomicUsize::new(0)),
+                fault_at: 0,
+            };
             Ok(Engine::new(Box::new(faulty), emb, ModelConfig::TINY.n_heads))
         },
         SchedulerOpts::default(),

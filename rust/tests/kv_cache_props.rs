@@ -434,6 +434,110 @@ fn prop_prefix_eviction_never_touches_referenced_nodes() {
     });
 }
 
+/// Snapshot → restore conserves page refcounts: snapshotting is a pure
+/// read (no page's refcount moves), restoring allocates only the restored
+/// sequence's own holds (plus COW where it lands inside a shared page), the
+/// restored content matches the donor row-for-row at any by-ref split, and
+/// freeing everything returns every page exactly once.
+#[test]
+fn prop_snapshot_restore_conserves_page_refcounts() {
+    forall("kv snapshot/restore conserves refcounts + content", 60, |g| {
+        let layers = g.usize_in(1, 3);
+        let d = g.usize_in(1, 6);
+        let page = g.usize_in(1, 4);
+        let len = g.usize_in(1, 14);
+        let mut c = PagedKvCache::new(layers, d, page);
+        let donor = c.alloc_seq();
+        for t in 0..len {
+            for l in 0..layers {
+                let tag = (t * 10 + l) as f32;
+                c.append(donor, l, &vec![tag; d], &vec![-tag; d]).unwrap();
+            }
+            c.advance(donor).unwrap();
+        }
+        // sometimes a second holder shares the donor's prefix, so restore
+        // runs against pages with refcount > 1
+        let sharer = g.bool().then(|| {
+            let cut = g.usize_in(1, len);
+            let pages: Vec<Vec<usize>> = (0..layers)
+                .map(|l| c.seq_pages(donor, l).unwrap()[..pages_for(cut, page)].to_vec())
+                .collect();
+            let s = c.alloc_seq();
+            c.share_pages(s, &pages, cut).unwrap();
+            s
+        });
+
+        let refcounts = |c: &PagedKvCache| -> Vec<u32> {
+            let (alloc, _, _) = c.stats();
+            (0..alloc).map(|p| c.page_refcount(p)).collect()
+        };
+
+        // a snapshot at any split point moves no refcounts
+        let cut = g.usize_in(0, len);
+        let before = refcounts(&c);
+        let snap = c.snapshot_seq(donor, cut).unwrap();
+        assert_eq!(refcounts(&c), before, "snapshot_seq mutated refcounts");
+        assert_eq!(snap.value_rows(), len - cut);
+
+        // wire roundtrip is lossless
+        let snap = ita::host::kv_cache::KvSnapshot::from_bytes(&snap.to_bytes()).unwrap();
+
+        // restore: graft the by-ref prefix (sharing the donor's pages, as a
+        // radix-cache hit would), then rebuild the by-value rows
+        let restored = c.alloc_seq();
+        if cut > 0 {
+            let pages: Vec<Vec<usize>> = (0..layers)
+                .map(|l| c.seq_pages(donor, l).unwrap()[..pages_for(cut, page)].to_vec())
+                .collect();
+            c.share_pages(restored, &pages, cut).unwrap();
+        }
+        c.restore_seq(restored, &snap).unwrap();
+        assert_eq!(c.len(restored), len);
+        for l in 0..layers {
+            let mut rows = 0;
+            c.for_each_kv(restored, l, |pos, k, v| {
+                let tag = (pos * 10 + l) as f32;
+                assert_eq!(k[0], tag, "restored row diverged at pos {pos} layer {l}");
+                assert_eq!(v[0], -tag);
+                rows += 1;
+            });
+            assert_eq!(rows, len);
+        }
+        // the donor still reads its own rows (COW isolated the restore)
+        for l in 0..layers {
+            c.for_each_kv(donor, l, |pos, k, _| {
+                assert_eq!(k[0], (pos * 10 + l) as f32, "donor corrupted by restore");
+            });
+        }
+
+        // refcount conservation: every page's count equals the number of
+        // page-table entries naming it across live sequences
+        let mut holders: std::collections::HashMap<usize, u32> = std::collections::HashMap::new();
+        let mut live = vec![donor, restored];
+        live.extend(sharer);
+        for id in &live {
+            for l in 0..layers {
+                for &p in c.seq_pages(*id, l).unwrap() {
+                    *holders.entry(p).or_insert(0) += 1;
+                }
+            }
+        }
+        let (alloc, free, _) = c.stats();
+        assert_eq!(alloc - free, holders.len(), "held-page count drifted");
+        for (&p, &n) in &holders {
+            assert_eq!(c.page_refcount(p), n, "page {p} refcount");
+        }
+
+        // teardown returns every page exactly once
+        for id in live {
+            c.free_seq(id);
+        }
+        let (alloc, free, live_n) = c.stats();
+        assert_eq!(alloc, free, "page leak after snapshot/restore lifetimes");
+        assert_eq!(live_n, 0);
+    });
+}
+
 #[test]
 fn prop_interleaved_sequences_never_alias() {
     forall("interleaved sequences stay isolated", 60, |g| {
