@@ -7,7 +7,7 @@ ARTIFACTS ?= artifacts
 CONFIGS   ?= tiny,demo-100m
 PY        ?= python3
 
-.PHONY: all build test bench-build bench-smoke smoke artifacts clean-artifacts
+.PHONY: all build test bench-build bench-smoke smoke docs artifacts clean-artifacts
 
 all: build
 
@@ -31,6 +31,11 @@ bench-smoke:
 smoke:
 	ITA_FLEET_CARTRIDGES=2 ITA_FLEET_REQUESTS=12 ITA_FLEET_TOKENS=8 \
 		cargo run --release --example serve_fleet
+
+# Build the public API docs with warnings denied (broken intra-doc links
+# and malformed examples fail). CI runs this; keep it green.
+docs:
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
 # AOT path: JAX device blocks -> HLO text + weight blobs under
 # $(ARTIFACTS)/<config>/ (MANIFEST.txt, weights.bin, programs/*.hlo.txt).

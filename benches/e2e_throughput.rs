@@ -1,6 +1,6 @@
 //! End-to-end serving throughput — the whole-stack number §Perf tracks.
 //!
-//! Four tiers:
+//! Five tiers:
 //! * **fleet sweep** (always runs): synthetic SimDevice cartridges, sweeping
 //!   cartridge count to show host-side scale-out of the stateless device
 //!   (1 → N cartridges behind the shared admission queue).
@@ -10,6 +10,10 @@
 //! * **migration sweep** (always runs): a skewed long/short workload under
 //!   [`Rebalance`] dispatch, reporting live KV migrations and
 //!   checkpoint-restored tokens.
+//! * **mixed prefill+decode sweep** (always runs): steady decode streams hit
+//!   by a multi-kilotoken prompt mid-stream, run-to-completion vs chunked
+//!   prefill — the decode inter-token gap histogram (`itl_step`) shows the
+//!   stall chunking removes.
 //! * **artifact tier**: the PJRT tiny/demo-100m cartridges when artifacts
 //!   and real bindings exist (skips quietly otherwise).
 //!
@@ -277,6 +281,65 @@ fn bench_shared_prefix(n_requests: usize, max_tokens: usize) -> String {
     j.encode()
 }
 
+/// Long-prefill interference: 4 steady decode streams, then one
+/// `long_prompt_tokens`-token prompt arrives mid-stream. Under
+/// run-to-completion scheduling (`chunk_tokens = 0`) the whole prefill runs
+/// inside one scheduling iteration and every stream's next token waits for
+/// it; under chunked prefill the per-iteration stall is bounded by the
+/// budget. The decode inter-token gap histogram (`itl_step`) makes the
+/// difference visible: p50 barely moves, p99/max collapse. Returns the JSON
+/// record.
+fn bench_mixed_prefill_decode(chunk_tokens: usize, long_prompt_tokens: usize) -> String {
+    let opts = SchedulerOpts { prefill_chunk_tokens: chunk_tokens, ..SchedulerOpts::default() };
+    let mut sched = Scheduler::new(Engine::synthetic(&ModelConfig::TINY, 0x17A), opts);
+    for i in 0..4 {
+        let mut r = GenRequest::greedy(i, &format!("steady decode stream {i}"), 96);
+        r.stop_at_eos = false;
+        sched.submit(r);
+    }
+    // let every stream reach steady decode before the interference arrives
+    for _ in 0..12 {
+        sched.step().expect("warmup step");
+    }
+    let filler = "the immutable tensor architecture keeps all dynamic state on the host. ";
+    let long_prompt: String = filler.repeat(long_prompt_tokens / filler.len() + 1);
+    let mut long = GenRequest::greedy(99, &long_prompt[..long_prompt_tokens], 8);
+    long.stop_at_eos = false;
+    sched.submit(long);
+    let t0 = Instant::now();
+    let results = sched.run_to_completion().expect("run");
+    let wall = t0.elapsed().as_secs_f64();
+    let tokens: usize = results.iter().map(|r| r.tokens.len()).sum();
+    let m = sched.metrics();
+    let label = if chunk_tokens == 0 {
+        "run-to-completion".to_string()
+    } else {
+        format!("chunk {chunk_tokens:>4}")
+    };
+    println!(
+        "bench e2e/mixed-prefill  {label:<17} itl_step p50 {:>7.2} ms  p99 {:>8.2} ms  \
+         max {:>8.2} ms  ({} mixed waves, {} chunks, {:.2}s)",
+        m.itl_step.percentile(50.0) * 1e3,
+        m.itl_step.percentile(99.0) * 1e3,
+        m.itl_step.percentile(100.0) * 1e3,
+        m.mixed_waves,
+        m.prefill_chunks,
+        wall,
+    );
+    let mut j = Json::default();
+    j.num("prefill_chunk_tokens", chunk_tokens);
+    j.num("long_prompt_tokens", long_prompt_tokens);
+    j.num("requests", results.len());
+    j.num("tokens", tokens);
+    j.float("wall_s", wall);
+    j.num("mixed_waves", m.mixed_waves);
+    j.num("prefill_chunks", m.prefill_chunks);
+    j.float("itl_step_p50_ms", m.itl_step.percentile(50.0) * 1e3);
+    j.float("itl_step_p99_ms", m.itl_step.percentile(99.0) * 1e3);
+    j.float("itl_step_max_ms", m.itl_step.percentile(100.0) * 1e3);
+    j.encode()
+}
+
 fn bench_config(name: &str, n_requests: usize, max_tokens: usize) -> Option<()> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts").join(name);
     if !dir.join("MANIFEST.txt").exists() {
@@ -336,6 +399,13 @@ fn main() {
     let shared_prefix = bench_shared_prefix(32, 8);
     // skewed workload: live KV migration rebalances mid-decode
     let migration = bench_migration(16, 48, 4);
+    // long-prefill interference: run-to-completion vs chunked prefill —
+    // the decode inter-token gap is the number continuous batching fixes
+    let mixed_sweep = vec![
+        bench_mixed_prefill_decode(0, 2048),
+        bench_mixed_prefill_decode(64, 2048),
+        bench_mixed_prefill_decode(256, 2048),
+    ];
     bench_config("tiny", 16, 32);
     // saturate the largest compiled bucket: at the DRAM-streaming roofline
     // every extra row in a weight sweep is almost free (§Perf iteration 5)
@@ -344,10 +414,12 @@ fn main() {
     // machine-readable perf record (CI uploads it as a workflow artifact)
     let mut root = Json::default();
     root.str("bench", "e2e_throughput");
-    root.num("schema_version", 1);
+    // v2: added the mixed_prefill_decode sweep (chunked-prefill ITL)
+    root.num("schema_version", 2);
     root.put("fleet_sweep", json_array(&fleet_sweep));
     root.put("shared_prefix", shared_prefix);
     root.put("migration", migration);
+    root.put("mixed_prefill_decode", json_array(&mixed_sweep));
     let path = std::env::var("ITA_BENCH_JSON").unwrap_or_else(|_| "BENCH_e2e.json".into());
     match std::fs::write(&path, root.encode() + "\n") {
         Ok(()) => println!("bench e2e: wrote perf record to {path}"),

@@ -1,11 +1,28 @@
 //! Continuous-batching policy over compiled batch buckets.
 //!
 //! The device only accepts the bucket sizes its programs were compiled for;
-//! the batcher groups ready sequences into bucket-sized waves to minimize
-//! padding waste while bounding queueing delay.
+//! the batcher groups ready rows into bucket-sized waves to minimize
+//! padding waste while bounding queueing delay. Since the iteration-level
+//! scheduler, a "row" is no longer always one decoding sequence: a wave may
+//! mix decode rows (one token each) with prefill-chunk rows (consecutive
+//! prompt positions of a still-prefilling sequence) — see [`plan_mixed`].
 
-/// One device call: `rows` live sequences issued in a compiled bucket of
-/// `bucket` device rows (`bucket - rows` rows are padding).
+/// One device call: `rows` live rows issued in a compiled bucket of
+/// `bucket` device rows (`bucket - rows` rows are padding). A row is one
+/// token of one sequence: a decode step, or one prompt position of a
+/// prefill chunk.
+///
+/// # Example
+///
+/// ```no_run
+/// // (no_run: rustdoc test binaries miss the libxla rpath; the same
+/// // behaviour is pinned by the batcher unit tests)
+/// use ita::coordinator::batcher::{plan, Wave};
+///
+/// let p = plan(11, &[1, 2, 4, 8]);
+/// assert_eq!(p.waves, vec![Wave { rows: 8, bucket: 8 }, Wave { rows: 3, bucket: 4 }]);
+/// assert_eq!(p.padding(), 1);
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Wave {
     pub rows: usize,
@@ -61,6 +78,49 @@ pub fn plan(n: usize, buckets: &[usize]) -> BatchPlan {
     BatchPlan { waves }
 }
 
+/// A mixed scheduling iteration: `decode_rows` decode rows followed by
+/// `prefill_rows` prefill-chunk rows, packed into compiled buckets in that
+/// order. The row ordering is the contract: the scheduler builds its
+/// per-wave `(seq, token)` slices decode-first, so a wave is "mixed"
+/// exactly when it straddles the decode/prefill boundary — the
+/// continuous-batching event where a prefill chunk rides along with live
+/// decode steps instead of stalling them.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MixedPlan {
+    pub plan: BatchPlan,
+    pub decode_rows: usize,
+}
+
+impl MixedPlan {
+    /// Prefill-chunk rows in this iteration (everything past the decode
+    /// boundary).
+    pub fn prefill_rows(&self) -> usize {
+        self.plan.rows() - self.decode_rows
+    }
+
+    /// Waves carrying BOTH decode and prefill rows.
+    pub fn mixed_waves(&self) -> usize {
+        let boundary = self.decode_rows;
+        let mut start = 0;
+        let mut mixed = 0;
+        for w in &self.plan.waves {
+            let end = start + w.rows;
+            if start < boundary && boundary < end {
+                mixed += 1;
+            }
+            start = end;
+        }
+        mixed
+    }
+}
+
+/// Plan one scheduling iteration carrying `decode_rows` decode rows and
+/// `prefill_rows` prefill-chunk rows (in that order) through the compiled
+/// buckets.
+pub fn plan_mixed(decode_rows: usize, prefill_rows: usize, buckets: &[usize]) -> MixedPlan {
+    MixedPlan { plan: plan(decode_rows + prefill_rows, buckets), decode_rows }
+}
+
 /// Padding-efficiency telemetry.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct BatchStats {
@@ -73,6 +133,11 @@ pub struct BatchStats {
     /// `rows + padded_rows` — recorded from the per-wave bucket sizes so a
     /// planner change can't silently desynchronize the accounting.
     pub device_rows: u64,
+    /// Waves that carried both decode and prefill rows (see
+    /// [`MixedPlan::mixed_waves`]). Prefill rows themselves are not
+    /// re-counted here: `ServingMetrics::tokens_prefilled` already tallies
+    /// every executed prefill row.
+    pub mixed_waves: u64,
 }
 
 impl BatchStats {
@@ -82,6 +147,12 @@ impl BatchStats {
         self.padded_rows += plan.padding() as u64;
         self.device_rows += plan.device_rows() as u64;
         debug_assert_eq!(self.device_rows, self.rows + self.padded_rows);
+    }
+
+    /// Record a mixed iteration (decode + prefill-chunk rows).
+    pub fn record_mixed(&mut self, p: &MixedPlan) {
+        self.record(&p.plan);
+        self.mixed_waves += p.mixed_waves() as u64;
     }
 
     /// Fraction of device rows wasted on padding.
@@ -162,5 +233,42 @@ mod tests {
         let p = plan(5, &[1]);
         assert_eq!(wave_rows(&p), vec![1; 5]);
         assert_eq!(p.padding(), 0);
+    }
+
+    #[test]
+    fn mixed_plan_counts_straddling_waves() {
+        // 3 decode + 9 prefill rows over buckets [1,2,4,8]: waves 8 + 4;
+        // the first wave spans the boundary at row 3 → exactly one mixed
+        let p = plan_mixed(3, 9, &[1, 2, 4, 8]);
+        assert_eq!(p.plan.rows(), 12);
+        assert_eq!(p.mixed_waves(), 1);
+        // boundary exactly on a wave border → no mixed wave
+        let p = plan_mixed(8, 8, &[1, 2, 4, 8]);
+        assert_eq!(p.mixed_waves(), 0);
+        // pure decode / pure prefill iterations are never mixed
+        assert_eq!(plan_mixed(5, 0, &[1, 2, 4, 8]).mixed_waves(), 0);
+        assert_eq!(plan_mixed(0, 5, &[1, 2, 4, 8]).mixed_waves(), 0);
+    }
+
+    #[test]
+    fn prop_mixed_plan_reconciles() {
+        forall("mixed plan covers decode + prefill rows", 200, |g| {
+            let decode = g.usize_in(0, 40);
+            let prefill = g.usize_in(0, 40);
+            if decode + prefill == 0 {
+                return;
+            }
+            let buckets = [1usize, 2, 4, 8];
+            let p = plan_mixed(decode, prefill, &buckets);
+            assert_eq!(p.plan.rows(), decode + prefill);
+            assert_eq!(p.prefill_rows(), prefill);
+            // at most one wave can straddle the single boundary
+            assert!(p.mixed_waves() <= 1);
+            let mut s = BatchStats::default();
+            s.record_mixed(&p);
+            assert_eq!(s.rows, (decode + prefill) as u64);
+            assert_eq!(s.mixed_waves, p.mixed_waves() as u64);
+            assert_eq!(s.device_rows, s.rows + s.padded_rows);
+        });
     }
 }

@@ -230,6 +230,20 @@ impl Engine {
     /// `tokens[i]` is fed at position `cache.len(id) + (#earlier rows of
     /// the same id in this batch)`. Causality holds because every row's
     /// K/V is appended before any row's attention runs.
+    ///
+    /// **Partial-prefill contract.** Because each row's position is derived
+    /// from the committed cache length, a prefill interrupted after any
+    /// number of rows resumes exactly where it stopped: feeding the
+    /// remaining prompt tokens in later calls — in any chunk sizes, mixed
+    /// into any batch composition — produces bit-identical K/V rows and
+    /// logits to a single whole-prompt prefill. Every row's RoPE rotation
+    /// depends only on its absolute position, its attention reads only its
+    /// own sequence's rows at lower positions, and the device programs are
+    /// row-independent. This is the same determinism-in-absolute-position
+    /// property that [`KvSnapshot`] by-reference restores rely on, and the
+    /// iteration-level scheduler leans on it to interleave prefill chunks
+    /// with live decode rows. Pinned by the chunked-resume unit test below
+    /// and the quickprop in `rust/tests/continuous_batching_sim.rs`.
     pub fn forward(&mut self, ids: &[SeqId], tokens: &[u32]) -> Result<Mat> {
         ensure!(ids.len() == tokens.len() && !ids.is_empty());
         ensure!(ids.len() <= self.max_batch(), "batch exceeds device buckets");
@@ -428,6 +442,35 @@ mod tests {
         let la = a.forward(&[sa], &[7]).unwrap();
         let lb = b.forward(&[sb], &[7]).unwrap();
         assert_eq!(la.data, lb.data, "restored KV diverged from the original");
+    }
+
+    #[test]
+    fn chunked_forward_resumes_at_absolute_position() {
+        // the partial-prefill contract: feeding a prompt through forward()
+        // in uneven chunks — each resuming at the committed cache length —
+        // yields bit-identical final logits to a whole-prompt prefill
+        let cfg = crate::config::ModelConfig::TINY;
+        let toks = ByteTokenizer::new().encode("chunk me carefully");
+        let mut a = Engine::synthetic(&cfg, 3);
+        let sa = a.new_sequence();
+        let whole = a.prefill(sa, &toks).unwrap();
+
+        let mut b = Engine::synthetic(&cfg, 3);
+        let sb = b.new_sequence();
+        let mut last = Vec::new();
+        let mut at = 0;
+        for take in [5usize, 1, 7, usize::MAX] {
+            let take = take.min(toks.len() - at);
+            if take == 0 {
+                break;
+            }
+            let logits = b.forward(&vec![sb; take], &toks[at..at + take]).unwrap();
+            last = logits.data[(take - 1) * logits.cols..take * logits.cols].to_vec();
+            at += take;
+        }
+        assert_eq!(at, toks.len());
+        assert_eq!(b.seq_len(sb), a.seq_len(sa));
+        assert_eq!(whole, last, "chunked prefill logits diverged from whole prefill");
     }
 
     #[test]

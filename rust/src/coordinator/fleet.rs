@@ -65,6 +65,28 @@ use super::worker::{CartridgeId, Worker, WorkerEvent, WorkerMsg};
 /// `None` only when no slot is eligible. The dispatcher re-pumps the queue
 /// only on its next channel event, so a policy that declines an eligible
 /// slot leaves queued requests waiting until unrelated traffic arrives.
+///
+/// # Example
+///
+/// ```no_run
+/// // (no_run: rustdoc test binaries miss the libxla rpath; the same
+/// // behaviour is pinned by the fleet unit tests)
+/// use ita::coordinator::fleet::Dispatch;
+/// use ita::coordinator::request::GenRequest;
+///
+/// // always the first eligible cartridge
+/// struct FirstFit;
+///
+/// impl Dispatch for FirstFit {
+///     fn pick(&mut self, loads: &[Option<usize>], _req: &GenRequest) -> Option<usize> {
+///         loads.iter().position(Option::is_some)
+///     }
+/// }
+///
+/// let mut d = FirstFit;
+/// let req = GenRequest::greedy(0, "route me", 4);
+/// assert_eq!(d.pick(&[None, Some(3), Some(0)], &req), Some(1));
+/// ```
 pub trait Dispatch: Send {
     fn pick(&mut self, loads: &[Option<usize>], req: &GenRequest) -> Option<usize>;
 
@@ -99,6 +121,23 @@ pub trait Dispatch: Send {
     /// policy may propose optimistically.
     fn rebalance(&mut self, loads: &[Option<usize>]) -> Option<(usize, usize)> {
         let _ = loads;
+        None
+    }
+
+    /// Upper bound, in serialized by-value bytes
+    /// ([`KvSnapshot::wire_bytes`](crate::host::kv_cache::KvSnapshot::wire_bytes)),
+    /// on the KV a single [`rebalance`](Dispatch::rebalance)-proposed
+    /// migration may move. When picking the candidate request, the
+    /// dispatcher skips any whose last known decode checkpoint exceeds
+    /// this — moving a huge context to free one queue slot costs more
+    /// wire traffic than the wait it saves. Requests that have not
+    /// checkpointed yet are sized from their prompt length via the per-row
+    /// KV cost learned from worker checkpoints (prefill builds prompt-sized
+    /// KV immediately, so even a brand-new long-prompt request is caught);
+    /// only when no size information exists at all does a candidate pass
+    /// unchecked. `None` (the default) = unlimited. Explicit
+    /// [`Fleet::migrate`] calls bypass the guard: the operator asked.
+    fn max_migration_kv_bytes(&self) -> Option<usize> {
         None
     }
 }
@@ -306,9 +345,17 @@ impl Dispatch for PrefixAffinity {
 /// idle one mid-decode — carrying their KV checkpoint — instead of waiting
 /// out the imbalance. Placement decisions delegate to the inner policy
 /// untouched.
+///
+/// [`with_kv_limit`](Rebalance::with_kv_limit) adds a migration cost
+/// guard: a candidate whose checkpointed by-value KV snapshot exceeds the
+/// limit is skipped, so the rebalancer never ships a multi-megabyte
+/// context across hosts to save one queue slot.
 pub struct Rebalance {
     inner: Box<dyn Dispatch>,
     spread: usize,
+    /// Largest by-value snapshot a proposed migration may move
+    /// (serialized bytes); `None` = unlimited.
+    max_kv_bytes: Option<usize>,
 }
 
 impl Rebalance {
@@ -319,7 +366,18 @@ impl Rebalance {
     }
 
     pub fn with_spread(inner: Box<dyn Dispatch>, spread: usize) -> Rebalance {
-        Rebalance { inner, spread: spread.max(2) }
+        Rebalance { inner, spread: spread.max(2), max_kv_bytes: None }
+    }
+
+    /// Cap the serialized by-value KV bytes
+    /// ([`KvSnapshot::wire_bytes`](crate::host::kv_cache::KvSnapshot::wire_bytes))
+    /// a single rebalance migration may move. The candidate's size is
+    /// taken from its last periodic decode checkpoint (up to one
+    /// checkpoint interval stale — budget a page's worth of slack), or
+    /// estimated from its prompt length when it has not checkpointed yet.
+    pub fn with_kv_limit(mut self, max_bytes: usize) -> Rebalance {
+        self.max_kv_bytes = Some(max_bytes);
+        self
     }
 }
 
@@ -354,6 +412,10 @@ impl Dispatch for Rebalance {
         }
         let ((hot_load, hot), (cold_load, cold)) = (hottest?, coldest?);
         (hot_load >= cold_load + self.spread).then_some((hot, cold))
+    }
+
+    fn max_migration_kv_bytes(&self) -> Option<usize> {
+        self.max_kv_bytes
     }
 }
 
@@ -400,6 +462,31 @@ impl ResultHandle {
 /// Handle to a running fleet of cartridge workers. `Sync`: any number of
 /// client threads may submit through one shared handle (the sender is
 /// mutex-guarded for portability across `mpsc::Sender` Sync-ness).
+///
+/// # Example
+///
+/// ```no_run
+/// // (no_run: rustdoc test binaries miss the libxla rpath; the same flow
+/// // is pinned by rust/tests/fleet_sim.rs)
+/// use ita::config::ModelConfig;
+/// use ita::coordinator::engine::Engine;
+/// use ita::coordinator::fleet::Fleet;
+/// use ita::coordinator::request::GenRequest;
+/// use ita::coordinator::scheduler::SchedulerOpts;
+///
+/// // two synthetic cartridges behind the default least-loaded dispatch
+/// let fleet = Fleet::start(
+///     2,
+///     |_id| Ok(Engine::synthetic(&ModelConfig::TINY, 7)),
+///     SchedulerOpts::default(),
+/// )
+/// .unwrap();
+/// let handle = fleet.submit(GenRequest::greedy(0, "hello ita", 8));
+/// let result = handle.wait().unwrap();
+/// assert!(!result.tokens.is_empty());
+/// let metrics = fleet.shutdown().unwrap();
+/// println!("{}", metrics.report());
+/// ```
 pub struct Fleet {
     tx: Mutex<Sender<FleetMsg>>,
     handle: Option<JoinHandle<()>>,
@@ -544,6 +631,12 @@ struct Slot {
     /// Latest periodic metrics checkpoint from the worker; a cartridge that
     /// dies mid-request reports these counters instead of zeros.
     checkpoint: Option<ServingMetrics>,
+    /// Serialized KV bytes per committed row, learned from this worker's
+    /// checkpoint payloads (every cartridge of a fleet runs the same model
+    /// geometry, but the dispatcher never sees it directly). Lets the
+    /// KV-size rebalance guard lower-bound the cost of moving a request
+    /// that has not checkpointed yet by its prompt length alone.
+    kv_bytes_per_row: Option<usize>,
     /// ticket → pending result, for completion routing and requeue.
     in_flight: HashMap<u64, Pending>,
 }
@@ -557,6 +650,7 @@ impl Slot {
             drain_sent: false,
             drained: None,
             checkpoint: None,
+            kv_bytes_per_row: None,
             in_flight: HashMap::new(),
         }
     }
@@ -655,8 +749,12 @@ fn dispatcher(mut slots: Vec<Slot>, rx: Receiver<FleetMsg>, mut dispatch: Box<dy
             FleetMsg::Event(WorkerEvent::Checkpoint(w, report)) => {
                 let report = *report;
                 slots[w].checkpoint = Some(report.metrics);
-                // refresh each in-flight request's recovery checkpoint
+                // refresh each in-flight request's recovery checkpoint, and
+                // learn the model's per-row KV wire cost for the guard
                 for (ticket, ckpt) in report.decode {
+                    if ckpt.kv.len > 0 {
+                        slots[w].kv_bytes_per_row = Some(ckpt.kv.wire_bytes() / ckpt.kv.len);
+                    }
                     if let Some(p) = slots[w].in_flight.get_mut(&ticket) {
                         p.checkpoint = Some(Box::new(ckpt));
                     }
@@ -700,9 +798,10 @@ fn dispatcher(mut slots: Vec<Slot>, rx: Receiver<FleetMsg>, mut dispatch: Box<dy
                 .map(|s| s.accepting().then(|| s.in_flight.len()))
                 .collect();
             if let Some((from, to)) = dispatch.rebalance(&raw) {
-                // move the most recently placed request: it has the least
-                // decode state to ship and was queued behind the hot spot
-                if let Some(&ticket) = slots.get(from).and_then(|s| s.in_flight.keys().max()) {
+                let limit = dispatch.max_migration_kv_bytes();
+                if let Some(ticket) = slots.get(from).and_then(|s| {
+                    rebalance_candidate(&s.in_flight, limit, s.kv_bytes_per_row)
+                }) {
                     migrate_ticket(
                         &mut slots,
                         &mut queue,
@@ -784,6 +883,41 @@ fn pump(
             queue.push_front(p);
         }
     }
+}
+
+/// The rebalance migration candidate among one cartridge's in-flight
+/// requests: the most recently placed (max ticket — it has the least
+/// decode state to ship and was queued behind the hot spot) whose KV fits
+/// the policy's budget ([`Dispatch::max_migration_kv_bytes`]). The size of
+/// a checkpointed request is its last by-value snapshot; a request that
+/// has not checkpointed yet is sized from its prompt alone (prefill builds
+/// prompt-length KV immediately, so "young" does NOT mean small) via the
+/// per-row rate learned from the worker's checkpoints — conservatively:
+/// a still-mid-prefill request would actually export checkpoint-free and
+/// ship nothing, but the dispatcher cannot tell it apart. With no learned
+/// rate and no checkpoint there is genuinely no size information, and the
+/// candidate stays eligible.
+fn rebalance_candidate(
+    in_flight: &HashMap<u64, Pending>,
+    max_kv_bytes: Option<usize>,
+    kv_bytes_per_row: Option<usize>,
+) -> Option<u64> {
+    in_flight
+        .iter()
+        .filter(|(_, p)| match (max_kv_bytes, &p.checkpoint) {
+            (Some(cap), Some(c)) => c.kv.wire_bytes() <= cap,
+            (Some(cap), None) => match kv_bytes_per_row {
+                Some(rate) => {
+                    let rows = crate::host::tokenizer::ByteTokenizer::new()
+                        .token_count(&p.req.prompt);
+                    rate.saturating_mul(rows) <= cap
+                }
+                None => true,
+            },
+            (None, _) => true,
+        })
+        .map(|(t, _)| *t)
+        .max()
 }
 
 /// The live-migration dance (dispatcher-side, blocking on two worker
@@ -1017,6 +1151,62 @@ mod tests {
         // placement still delegates to the inner policy
         let r = any_req();
         assert_eq!(d.pick(&[Some(3), Some(1)], &r), Some(1));
+    }
+
+    #[test]
+    fn kv_guard_filters_rebalance_candidates() {
+        use crate::host::kv_cache::KvSnapshot;
+
+        let snap = |rows: usize| KvSnapshot {
+            n_layers: 1,
+            d_model: 4,
+            len: rows,
+            by_ref_len: 0,
+            k: vec![vec![0.0; rows * 4]],
+            v: vec![vec![0.0; rows * 4]],
+        };
+        let pending = |ckpt: Option<DecodeCheckpoint>| {
+            let (tx, _rx) = channel();
+            Pending {
+                req: GenRequest::greedy(0, "x", 4),
+                arrived: Instant::now(),
+                checkpoint: ckpt.map(Box::new),
+                tx,
+            }
+        };
+        let big = DecodeCheckpoint { prompt: vec![1], generated: vec![2], kv: snap(100) };
+        let small = DecodeCheckpoint { prompt: vec![1], generated: vec![2], kv: snap(1) };
+        let mut in_flight: HashMap<u64, Pending> = HashMap::new();
+        in_flight.insert(5, pending(Some(big)));
+        in_flight.insert(3, pending(Some(small.clone())));
+        in_flight.insert(1, pending(None));
+        // no limit: the most recently placed request wins
+        assert_eq!(rebalance_candidate(&in_flight, None, None), Some(5));
+        // a limit skips the oversized checkpoint, keeps small + unknown
+        let cap = small.kv.wire_bytes();
+        assert_eq!(rebalance_candidate(&in_flight, Some(cap), None), Some(3));
+        // with no learned per-row rate, never-checkpointed requests have
+        // no size information and stay eligible
+        assert_eq!(rebalance_candidate(&in_flight, Some(0), None), Some(1));
+        // a learned rate sizes the unchecked request by its prompt ("x" =
+        // 2 tokens with BOS): 2 rows * 40 B > 64 B cap -> nothing eligible
+        assert_eq!(rebalance_candidate(&in_flight, Some(cap), Some(40)), Some(3));
+        assert_eq!(rebalance_candidate(&in_flight, Some(0), Some(40)), None);
+        // and a generous cap keeps it eligible
+        assert_eq!(rebalance_candidate(&in_flight, Some(10_000), Some(40)), Some(5));
+        assert_eq!(rebalance_candidate(&HashMap::new(), None, None), None);
+    }
+
+    #[test]
+    fn rebalance_kv_limit_is_exposed_to_the_dispatcher() {
+        let unguarded = Rebalance::new(Box::new(LeastLoaded));
+        assert_eq!(unguarded.max_migration_kv_bytes(), None);
+        let guarded = Rebalance::new(Box::new(LeastLoaded)).with_kv_limit(4096);
+        assert_eq!(guarded.max_migration_kv_bytes(), Some(4096));
+        // the guard never affects spread detection or placement
+        let mut d = Rebalance::new(Box::new(LeastLoaded)).with_kv_limit(0);
+        assert_eq!(d.rebalance(&[Some(4), Some(0)]), Some((0, 1)));
+        assert_eq!(d.pick(&[Some(3), Some(1)], &any_req()), Some(1));
     }
 
     #[test]

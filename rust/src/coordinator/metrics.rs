@@ -43,6 +43,66 @@ impl LatencyRecorder {
     }
 }
 
+/// Fixed-footprint log-bucketed latency histogram. Unlike
+/// [`LatencyRecorder`] (exact, but one stored sample per event), this is
+/// for per-*token* signals that fire for the life of a cartridge: memory
+/// and clone cost stay O(1) no matter how long the fleet serves. Bucket
+/// `i` counts samples in `[2^i, 2^(i+1))` microseconds; percentiles are
+/// bucket upper edges, so within 2× of the true sample — plenty to tell a
+/// bounded chunked-prefill gap from a run-to-completion stall.
+#[derive(Debug, Clone)]
+pub struct GapHistogram {
+    buckets: [u64; 64],
+    count: u64,
+}
+
+impl Default for GapHistogram {
+    fn default() -> Self {
+        GapHistogram { buckets: [0; 64], count: 0 }
+    }
+}
+
+impl GapHistogram {
+    fn bucket(seconds: f64) -> usize {
+        let us = (seconds * 1e6).max(1.0);
+        (us.log2() as usize).min(63)
+    }
+
+    pub fn record(&mut self, seconds: f64) {
+        self.buckets[Self::bucket(seconds)] += 1;
+        self.count += 1;
+    }
+
+    /// Fold another histogram in (fleet aggregation).
+    pub fn merge(&mut self, other: &GapHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += *b;
+        }
+        self.count += other.count;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Percentile in [0, 100]: the upper edge, in seconds, of the bucket
+    /// holding that rank (0.0 when empty).
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((p / 100.0).clamp(0.0, 1.0) * (self.count - 1) as f64).round() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if c > 0 && seen > rank {
+                return 2f64.powi(i as i32 + 1) * 1e-6;
+            }
+        }
+        0.0
+    }
+}
+
 /// Aggregate serving metrics, printed by the server and the e2e bench.
 #[derive(Debug, Clone, Default)]
 pub struct ServingMetrics {
@@ -66,9 +126,29 @@ pub struct ServingMetrics {
     pub resumed_requests: u64,
     /// Requests this cartridge exported to another mid-decode.
     pub migrated_out: u64,
+    /// Device waves that carried BOTH decode rows and prefill-chunk rows —
+    /// iteration-level continuous batching at work. Note this counts wave
+    /// *composition*, not the chunking policy: even run-to-completion
+    /// scheduling (`prefill_chunk_tokens = 0`) mixes a whole prefill into
+    /// the iteration's decode waves; only purely sequential traffic (no
+    /// prefill ever concurrent with a live decode) keeps it at 0.
+    pub mixed_waves: u64,
+    /// Prefill chunks scheduled: one per still-prefilling request per
+    /// iteration it rode along in. A request whose whole suffix fits one
+    /// iteration's budget counts a single chunk.
+    pub prefill_chunks: u64,
     pub wall_s: f64,
     pub ttft: LatencyRecorder,
     pub itl: LatencyRecorder,
+    /// Per-token decode gaps pooled across requests: for every sampled
+    /// decode token, the wall time since that sequence's previous token.
+    /// Unlike `itl` (one per-request mean recorded at completion), this
+    /// histogram exposes stalls — a long prefill freezing in-flight decodes
+    /// shows up as outlier samples here, which is exactly what chunked
+    /// prefill bounds (see the `mixed_prefill_decode` sweep in
+    /// `BENCH_e2e.json`). Log-bucketed ([`GapHistogram`]) because it fires
+    /// once per decoded token forever.
+    pub itl_step: GapHistogram,
     pub batch_waste: f64,
     pub interface_bytes: u64,
     pub device_macs: u64,
@@ -84,6 +164,35 @@ impl ServingMetrics {
             return 0.0;
         }
         self.tokens_generated as f64 / self.wall_s
+    }
+
+    /// Clone the counters and ledgers, leaving the per-sample latency
+    /// recorders empty. The O(1) snapshot the worker checkpoint path uses:
+    /// `ttft`/`itl` store one raw sample per completion, so a full clone
+    /// per periodic checkpoint would cost O(requests served) each time.
+    /// `itl_step` is a fixed-footprint histogram and survives the
+    /// checkpoint, so a dead cartridge's per-token gap distribution is not
+    /// lost with it.
+    pub fn clone_counters(&self) -> ServingMetrics {
+        ServingMetrics {
+            requests_completed: self.requests_completed,
+            tokens_generated: self.tokens_generated,
+            tokens_prefilled: self.tokens_prefilled,
+            prefill_skipped_tokens: self.prefill_skipped_tokens,
+            restored_tokens: self.restored_tokens,
+            resumed_requests: self.resumed_requests,
+            migrated_out: self.migrated_out,
+            mixed_waves: self.mixed_waves,
+            prefill_chunks: self.prefill_chunks,
+            wall_s: self.wall_s,
+            ttft: LatencyRecorder::default(),
+            itl: LatencyRecorder::default(),
+            itl_step: self.itl_step.clone(),
+            batch_waste: self.batch_waste,
+            interface_bytes: self.interface_bytes,
+            device_macs: self.device_macs,
+            traffic: self.traffic,
+        }
     }
 
     /// Fold another engine's metrics in. Counters and ledgers sum, latency
@@ -102,9 +211,12 @@ impl ServingMetrics {
         self.restored_tokens += other.restored_tokens;
         self.resumed_requests += other.resumed_requests;
         self.migrated_out += other.migrated_out;
+        self.mixed_waves += other.mixed_waves;
+        self.prefill_chunks += other.prefill_chunks;
         self.wall_s = self.wall_s.max(other.wall_s);
         self.ttft.merge(&other.ttft);
         self.itl.merge(&other.itl);
+        self.itl_step.merge(&other.itl_step);
         self.interface_bytes += other.interface_bytes;
         self.device_macs += other.device_macs;
         self.traffic.add(&other.traffic);
@@ -118,9 +230,9 @@ impl ServingMetrics {
     pub fn report(&self) -> String {
         format!(
             "requests={} prefill_tokens={} prefill_skipped={} restored={} resumed={} \
-             migrated_out={} decode_tokens={} wall={:.2}s \
+             migrated_out={} decode_tokens={} mixed_waves={} prefill_chunks={} wall={:.2}s \
              decode_throughput={:.1} tok/s ttft_p50={:.1}ms ttft_p95={:.1}ms \
-             itl_p50={:.2}ms itl_p95={:.2}ms batch_waste={:.1}% \
+             itl_p50={:.2}ms itl_p95={:.2}ms itl_step_p99={:.2}ms batch_waste={:.1}% \
              interface={:.2} MB device_macs={:.2}G",
             self.requests_completed,
             self.tokens_prefilled,
@@ -129,12 +241,15 @@ impl ServingMetrics {
             self.resumed_requests,
             self.migrated_out,
             self.tokens_generated,
+            self.mixed_waves,
+            self.prefill_chunks,
             self.wall_s,
             self.decode_tok_per_s(),
             self.ttft.percentile(50.0) * 1e3,
             self.ttft.percentile(95.0) * 1e3,
             self.itl.percentile(50.0) * 1e3,
             self.itl.percentile(95.0) * 1e3,
+            self.itl_step.percentile(99.0) * 1e3,
             self.batch_waste * 100.0,
             self.interface_bytes as f64 / 1e6,
             self.device_macs as f64 / 1e9,
@@ -230,9 +345,12 @@ mod tests {
             interface_bytes: 100,
             device_macs: 1000,
             batch_waste: 0.5,
+            mixed_waves: 4,
+            prefill_chunks: 6,
             ..Default::default()
         };
         a.ttft.record(0.1);
+        a.itl_step.record(0.01);
         let mut b = ServingMetrics {
             requests_completed: 3,
             tokens_generated: 30,
@@ -240,16 +358,22 @@ mod tests {
             interface_bytes: 50,
             device_macs: 500,
             batch_waste: 0.1,
+            mixed_waves: 1,
+            prefill_chunks: 2,
             ..Default::default()
         };
         b.ttft.record(0.2);
         b.ttft.record(0.3);
+        b.itl_step.record(0.02);
         a.merge(&b);
         assert_eq!(a.requests_completed, 5);
         assert_eq!(a.tokens_generated, 40);
         assert_eq!(a.interface_bytes, 150);
         assert_eq!(a.device_macs, 1500);
         assert_eq!(a.ttft.count(), 3);
+        assert_eq!(a.mixed_waves, 5);
+        assert_eq!(a.prefill_chunks, 8);
+        assert_eq!(a.itl_step.count(), 2);
         assert!((a.wall_s - 2.0).abs() < 1e-12, "wall clocks overlap");
         // 0.5 weighted 10 + 0.1 weighted 30 = 0.2
         assert!((a.batch_waste - 0.2).abs() < 1e-9);
@@ -293,6 +417,35 @@ mod tests {
         let r = LatencyRecorder::default();
         assert_eq!(r.percentile(99.0), 0.0);
         assert_eq!(r.mean(), 0.0);
+    }
+
+    #[test]
+    fn gap_histogram_buckets_and_percentiles() {
+        let mut h = GapHistogram::default();
+        assert_eq!(h.percentile(99.0), 0.0);
+        // 99 fast samples (~100 µs) and one enormous stall (~1 s)
+        for _ in 0..99 {
+            h.record(100e-6);
+        }
+        h.record(1.0);
+        assert_eq!(h.count(), 100);
+        // p50 lands in the fast bucket: upper edge within 2x of 100 µs
+        let p50 = h.percentile(50.0);
+        assert!(p50 >= 100e-6 && p50 <= 400e-6, "p50 = {p50}");
+        // the stall dominates the max, within 2x of 1 s
+        let max = h.percentile(100.0);
+        assert!(max >= 1.0 && max <= 4.0, "max = {max}");
+        // merge pools counts
+        let mut other = GapHistogram::default();
+        other.record(100e-6);
+        h.merge(&other);
+        assert_eq!(h.count(), 101);
+        // sub-microsecond and zero gaps land in the smallest bucket
+        let mut tiny = GapHistogram::default();
+        tiny.record(0.0);
+        tiny.record(1e-9);
+        assert_eq!(tiny.count(), 2);
+        assert!(tiny.percentile(100.0) <= 4e-6);
     }
 
     #[test]

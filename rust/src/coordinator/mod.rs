@@ -4,10 +4,19 @@
 //!   Section IV-D pipeline): embedding → {QKV on device → RoPE + KV append
 //!   + attention on host → FFN on device} × L → logits on device → sample.
 //! * [`request`] — generation request/result types.
-//! * [`batcher`] — continuous-batching policy over the compiled batch
-//!   buckets, with padding-waste telemetry.
-//! * [`scheduler`] — FCFS admission + continuous batching + completion,
-//!   driven synchronously so it is unit-testable without threads.
+//! * [`batcher`] — wave composition over the compiled batch buckets
+//!   (including mixed prefill+decode waves,
+//!   [`plan_mixed`](batcher::plan_mixed)), with padding and mixed-wave
+//!   telemetry.
+//! * [`scheduler`] — iteration-level continuous batching: step-level FCFS
+//!   admission, **chunked prefill** (long prompts split into fixed token
+//!   budgets per iteration,
+//!   [`SchedulerOpts::prefill_chunk_tokens`](scheduler::SchedulerOpts::prefill_chunk_tokens)),
+//!   and mixed waves that carry prefill chunks alongside live decode rows —
+//!   so one long prompt no longer stalls every in-flight decode. Driven
+//!   synchronously so it is unit-testable without threads; greedy outputs
+//!   are byte-identical for every chunk budget
+//!   (`rust/tests/continuous_batching_sim.rs`).
 //! * [`worker`] — one cartridge: a scheduler (and its non-Send device) on
 //!   its own thread, supervised over channels.
 //! * [`fleet`] — the multi-cartridge coordinator: N workers behind a shared
@@ -41,8 +50,9 @@
 //! 1. **Deterministic, artifact-free** (always runs): everything above over
 //!    [`Engine::synthetic`] — a `SimDevice` with seeded synthetic INT4
 //!    weights (`rust/tests/fleet_sim.rs`, `rust/tests/kv_cache_props.rs`,
-//!    and the unit tests in this tree). `cargo test` is green from a clean
-//!    checkout.
+//!    `rust/tests/continuous_batching_sim.rs`,
+//!    `rust/tests/prefix_cache_sim.rs`, and the unit tests in this tree).
+//!    `cargo test` is green from a clean checkout.
 //! 2. **Artifact-backed** (`make artifacts` + real PJRT bindings): the
 //!    differential and serving-integration suites, which skip loudly when
 //!    `artifacts/tiny` is absent.

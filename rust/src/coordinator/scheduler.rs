@@ -1,13 +1,57 @@
-//! Continuous-batching scheduler: FCFS admission, bucket-wave decode,
-//! in-flight completion — the coordination pattern of vLLM-class servers,
-//! driven synchronously so it is unit-testable without threads.
+//! Iteration-level continuous-batching scheduler: step-level admission,
+//! chunked prefill, mixed prefill+decode waves, in-flight completion — the
+//! coordination pattern of vLLM/Sarathi-class servers, driven synchronously
+//! so it is unit-testable without threads.
+//!
+//! ## Why iteration-level
+//!
+//! The Split-Brain contract makes the host the sole owner of dynamic state,
+//! so host-side scheduling is the throughput lever. The pre-chunking
+//! scheduler ran every admitted prompt's prefill to completion inside one
+//! scheduling iteration: a single 2k-token prompt froze every in-flight
+//! decode behind ~250 device waves. This scheduler instead decides work
+//! **per iteration**:
+//!
+//! 1. **admit** newly arrived requests (no device work — they enter the
+//!    prefill chunk queue with their cached prefix already grafted);
+//! 2. compose one **mixed iteration**: one decode row for every decoding
+//!    sequence, plus up to [`SchedulerOpts::prefill_chunk_tokens`] prompt
+//!    rows of still-prefilling sequences (FCFS);
+//! 3. run the rows through the compiled buckets
+//!    ([`plan_mixed`](super::batcher::plan_mixed)), sample decode rows and
+//!    any sequence whose prefill completed, harvest finished requests.
+//!
+//! Chunking never changes outputs: prefill is deterministic in absolute
+//! position and every row's attention sees only its own sequence's KV, so
+//! the KV a chunked prefill builds is bit-identical to a whole prefill —
+//! the same property [`KvSnapshot`](crate::host::kv_cache::KvSnapshot)
+//! by-reference restores already rely on. Pinned by
+//! `rust/tests/continuous_batching_sim.rs`.
+//!
+//! # Example
+//!
+//! ```no_run
+//! // (no_run: rustdoc test binaries miss the libxla rpath; the same flow
+//! // is pinned by the unit and integration tests)
+//! use ita::config::ModelConfig;
+//! use ita::coordinator::engine::Engine;
+//! use ita::coordinator::request::GenRequest;
+//! use ita::coordinator::scheduler::{Scheduler, SchedulerOpts};
+//!
+//! let engine = Engine::synthetic(&ModelConfig::TINY, 7);
+//! let mut sched = Scheduler::new(engine, SchedulerOpts::default());
+//! sched.submit(GenRequest::greedy(0, "hello ita", 8));
+//! let results = sched.run_to_completion().unwrap();
+//! assert_eq!(results.len(), 1);
+//! println!("{}", sched.metrics().report());
+//! ```
 
 use std::collections::VecDeque;
 use std::time::Instant;
 
 use anyhow::Result;
 
-use super::batcher::{plan, BatchStats};
+use super::batcher::{plan_mixed, BatchStats};
 use super::engine::Engine;
 use super::metrics::ServingMetrics;
 use super::request::{DecodeCheckpoint, FinishReason, GenRequest, GenResult};
@@ -19,7 +63,8 @@ use crate::util::prng::Prng;
 /// Scheduler options.
 #[derive(Debug, Clone, Copy)]
 pub struct SchedulerOpts {
-    /// Max concurrently decoding sequences (0 → device max bucket).
+    /// Max concurrently active sequences — prefilling plus decoding
+    /// (0 → device max bucket).
     pub max_active: usize,
     /// Sampling seed (deterministic serving).
     pub seed: u64,
@@ -28,11 +73,25 @@ pub struct SchedulerOpts {
     /// and the matched prefix skips device prefill entirely — its KV pages
     /// are shared copy-on-write. Outputs are bit-identical either way.
     pub prefix_cache_pages: usize,
+    /// Per-iteration prefill token budget (chunked prefill). Each
+    /// scheduling iteration carries at most this many prompt rows alongside
+    /// the decode rows, so one long prompt can no longer stall every
+    /// in-flight decode behind its prefill; the decode inter-token gap is
+    /// bounded by roughly `budget / max_bucket` extra waves per iteration.
+    /// 0 = run-to-completion: a prompt's entire uncached suffix prefills in
+    /// the iteration it is admitted (the pre-chunking behaviour). Greedy
+    /// outputs are byte-identical for every budget.
+    pub prefill_chunk_tokens: usize,
 }
 
 impl Default for SchedulerOpts {
     fn default() -> Self {
-        SchedulerOpts { max_active: 0, seed: 0x17A, prefix_cache_pages: 8192 }
+        SchedulerOpts {
+            max_active: 0,
+            seed: 0x17A,
+            prefix_cache_pages: 8192,
+            prefill_chunk_tokens: 64,
+        }
     }
 }
 
@@ -43,6 +102,11 @@ struct Active {
     prompt: Vec<u32>,
     /// leading tokens served from the prefix cache (no prefill ran)
     skipped: usize,
+    /// prompt rows committed so far — the prefill cursor. Starts at
+    /// `skipped` (the grafted prefix) and the sequence decodes once it
+    /// reaches `prompt.len()`: the final prompt row always runs through the
+    /// device so its logits exist to sample the first token from.
+    prefilled: usize,
     generated: Vec<u32>,
     /// tokens inherited from a checkpoint restore (0 for fresh requests);
     /// this cartridge's ITL accounting excludes them — their decode time
@@ -52,6 +116,9 @@ struct Active {
     next_token: u32,
     enqueued: Instant,
     first_token_at: Option<Instant>,
+    /// when the previous token was sampled (per-token gap accounting —
+    /// [`ServingMetrics::itl_step`] samples are measured from here)
+    last_token_at: Option<Instant>,
 }
 
 impl Active {
@@ -59,6 +126,19 @@ impl Active {
         (self.req.stop_at_eos && self.generated.last() == Some(&EOS))
             || self.generated.len() >= self.req.max_new_tokens
     }
+
+    /// Prefill complete — this sequence contributes a decode row.
+    fn decoding(&self) -> bool {
+        self.prefilled == self.prompt.len()
+    }
+}
+
+/// What one device row of a mixed iteration is for: a decode step of
+/// sequence `active[i]`, or one prompt position of its prefill chunk.
+#[derive(Clone, Copy)]
+enum Row {
+    Decode(usize),
+    Prefill(usize),
 }
 
 /// One admission-queue entry: a fresh request awaiting prefill, or a
@@ -139,57 +219,123 @@ impl Scheduler {
         self.opts.max_active
     }
 
-    /// One scheduling iteration: admit + prefill new requests, run one
-    /// decode step for all active sequences, harvest completions.
+    /// One scheduling iteration: admit newly arrived requests, compose a
+    /// mixed wave set — one decode row per decoding sequence plus prefill
+    /// chunk rows under the token budget — run it, sample, and harvest
+    /// completions.
     pub fn step(&mut self) -> Result<Vec<GenResult>> {
-        let mut done = self.admit()?;
+        let mut done = self.admit();
         if self.active.is_empty() {
             return Ok(done);
         }
 
-        // decode one token for every active sequence, in bucket waves
-        let buckets = self.engine.bucket_sizes();
-        let p = plan(self.active.len(), &buckets);
-        self.batch_stats.record(&p);
-        let mut offset = 0;
-        let mut sampled: Vec<u32> = Vec::with_capacity(self.active.len());
-        for w in &p.waves {
-            let wave = w.rows;
-            let ids: Vec<SeqId> =
-                self.active[offset..offset + wave].iter().map(|a| a.seq).collect();
-            let tokens: Vec<u32> =
-                self.active[offset..offset + wave].iter().map(|a| a.next_token).collect();
-            let logits = self.engine.forward(&ids, &tokens)?;
-            for r in 0..wave {
-                let row = &logits.data[r * logits.cols..(r + 1) * logits.cols];
-                let a = &self.active[offset + r];
-                sampled.push(sample(row, &a.req.sampling, &mut self.rng));
+        // compose this iteration's device rows: decode rows first (every
+        // decoding sequence advances one token), then prefill-chunk rows
+        // under the token budget, FCFS over still-prefilling sequences
+        let mut ids: Vec<SeqId> = Vec::new();
+        let mut tokens: Vec<u32> = Vec::new();
+        let mut rows: Vec<Row> = Vec::new();
+        for (i, a) in self.active.iter().enumerate() {
+            if a.decoding() {
+                ids.push(a.seq);
+                tokens.push(a.next_token);
+                rows.push(Row::Decode(i));
             }
-            offset += wave;
+        }
+        let decode_rows = rows.len();
+        let mut budget = match self.opts.prefill_chunk_tokens {
+            0 => usize::MAX, // run-to-completion: the whole suffix, now
+            n => n,
+        };
+        for (i, a) in self.active.iter().enumerate() {
+            if budget == 0 {
+                break;
+            }
+            let remaining = a.prompt.len() - a.prefilled;
+            if remaining == 0 {
+                continue;
+            }
+            let take = remaining.min(budget);
+            for &tok in &a.prompt[a.prefilled..a.prefilled + take] {
+                ids.push(a.seq);
+                tokens.push(tok);
+                rows.push(Row::Prefill(i));
+            }
+            budget -= take;
+            self.metrics.prefill_chunks += 1;
+        }
+
+        let buckets = self.engine.bucket_sizes();
+        let p = plan_mixed(decode_rows, rows.len() - decode_rows, &buckets);
+        self.batch_stats.record_mixed(&p);
+
+        // run the waves; sample decode rows and the final prompt row of
+        // any sequence whose prefill completes this iteration. Rows of one
+        // sequence stay in ascending position order across waves, and the
+        // engine commits each wave before the next, so a chunk split
+        // across waves resumes at the committed absolute position.
+        let mut sampled: Vec<(usize, u32, bool)> = Vec::new(); // (idx, token, first)
+        let mut offset = 0;
+        for w in &p.plan.waves {
+            let end = offset + w.rows;
+            let logits = self.engine.forward(&ids[offset..end], &tokens[offset..end])?;
+            for r in 0..w.rows {
+                let row = &logits.data[r * logits.cols..(r + 1) * logits.cols];
+                match rows[offset + r] {
+                    Row::Decode(i) => {
+                        let tok = sample(row, &self.active[i].req.sampling, &mut self.rng);
+                        sampled.push((i, tok, false));
+                    }
+                    Row::Prefill(i) => {
+                        self.active[i].prefilled += 1;
+                        self.metrics.tokens_prefilled += 1;
+                        if self.active[i].decoding() {
+                            // final prompt row: its logits seed the stream
+                            let tok = sample(row, &self.active[i].req.sampling, &mut self.rng);
+                            sampled.push((i, tok, true));
+                        }
+                    }
+                }
+            }
+            offset = end;
         }
         self.metrics.tokens_generated += sampled.len() as u64;
 
-        // apply sampled tokens; harvest completed requests
+        // apply sampled tokens; publish freshly completed prefills
         let now = Instant::now();
-        let mut i = 0;
-        while i < self.active.len() {
+        for &(i, tok, first) in &sampled {
             let a = &mut self.active[i];
-            let tok = sampled[i];
-            if a.first_token_at.is_none() {
+            a.generated.push(tok);
+            a.next_token = tok;
+            if first {
                 a.first_token_at = Some(now);
                 self.metrics.ttft.record(now.duration_since(a.enqueued).as_secs_f64());
+                // prefill just completed: publish the prompt's KV for
+                // cross-request reuse
+                self.engine.register_prefix(a.seq, &a.prompt);
+            } else if let Some(prev) = a.last_token_at {
+                self.metrics.itl_step.record(now.duration_since(prev).as_secs_f64());
             }
-            a.generated.push(tok);
-            if a.finished() {
-                let a = self.active.swap_remove(i);
-                sampled.swap_remove(i);
+            a.last_token_at = Some(now);
+        }
+
+        self.harvest(&mut done, now);
+        Ok(done)
+    }
+
+    /// Sweep completed requests out of the active set. Stable removal, so
+    /// `active` stays in admission order — which is what makes both the
+    /// decode-row composition and the prefill chunk budget genuinely FCFS.
+    fn harvest(&mut self, done: &mut Vec<GenResult>, now: Instant) {
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].first_token_at.is_some() && self.active[i].finished() {
+                let a = self.active.remove(i);
                 done.push(self.finish(a, now));
             } else {
-                a.next_token = tok;
                 i += 1;
             }
         }
-        Ok(done)
     }
 
     /// Drive until every submitted request completes.
@@ -201,89 +347,49 @@ impl Scheduler {
         Ok(out)
     }
 
-    /// Admit queued requests up to capacity: checkpointed requests restore
-    /// their KV and rejoin decode immediately; fresh requests batch-prefill
-    /// (skipping any prefix already in the radix cache). Returns any
-    /// request that finishes on its very first token.
-    fn admit(&mut self) -> Result<Vec<GenResult>> {
-        // pop admissible entries; resumes rejoin `active` inline (no device
-        // work), fresh requests collect for one batched prefill
-        let mut fresh: Vec<(GenRequest, Instant)> = Vec::new();
+    /// Step-level admission, up to capacity. Fresh requests enter the
+    /// prefill chunk queue with their longest cached prefix grafted — no
+    /// device work happens here; their prefill is spread over the following
+    /// iterations. Checkpointed requests restore their KV inline and rejoin
+    /// decode at the checkpointed step. Returns any restored request that
+    /// is already at its token limit.
+    fn admit(&mut self) -> Vec<GenResult> {
         let mut resumed_any = false;
-        while self.active.len() + fresh.len() < self.opts.max_active {
+        while self.active.len() < self.opts.max_active {
             let Some(entry) = self.queue.pop_front() else { break };
             match entry {
-                QueueEntry::Fresh(req, enqueued) => fresh.push((req, enqueued)),
+                QueueEntry::Fresh(req, enqueued) => {
+                    let prompt = self.tokenizer.encode(&req.prompt);
+                    // graft the longest cached prefix; only the suffix will
+                    // prefill, chunk by chunk
+                    let (seq, skipped) = self.engine.new_sequence_with_prefix(&prompt);
+                    self.metrics.prefill_skipped_tokens += skipped as u64;
+                    self.active.push(Active {
+                        prefilled: skipped,
+                        prompt,
+                        skipped,
+                        req,
+                        seq,
+                        generated: Vec::new(),
+                        resumed_len: 0,
+                        next_token: 0, // set when the final prompt row samples
+                        enqueued,
+                        first_token_at: None,
+                        last_token_at: None,
+                    });
+                }
                 QueueEntry::Resume(req, ckpt, enqueued) => {
                     self.resume(req, *ckpt, enqueued);
                     resumed_any = true;
                 }
             }
         }
-        let mut new_ids = Vec::new();
-        let mut new_suffixes: Vec<Vec<u32>> = Vec::new();
-        for (req, enqueued) in fresh {
-            let prompt = self.tokenizer.encode(&req.prompt);
-            // graft the longest cached prefix; only the suffix prefills
-            let (seq, skipped) = self.engine.new_sequence_with_prefix(&prompt);
-            self.metrics.tokens_prefilled += (prompt.len() - skipped) as u64;
-            self.metrics.prefill_skipped_tokens += skipped as u64;
-            new_suffixes.push(prompt[skipped..].to_vec());
-            self.active.push(Active {
-                prompt,
-                skipped,
-                req,
-                seq,
-                generated: Vec::new(),
-                resumed_len: 0,
-                next_token: 0, // set after prefill
-                enqueued,
-                first_token_at: None,
-            });
-            new_ids.push(seq);
-        }
-        if new_ids.is_empty() && !resumed_any {
-            return Ok(Vec::new());
-        }
-        let now = if new_ids.is_empty() {
-            Instant::now()
-        } else {
-            // batched prefill across the newly admitted requests' suffixes
-            let prompts: Vec<&[u32]> = new_suffixes.iter().map(|p| p.as_slice()).collect();
-            let lasts = self.engine.prefill_batch(&new_ids, &prompts)?;
-            // the new Actives are the contiguous tail of `active`, in
-            // `new_ids` order — no scans needed to find them again
-            let start = self.active.len() - new_ids.len();
-            // publish the freshly prefilled prompts for future reuse
-            for (i, seq) in new_ids.iter().enumerate() {
-                let a = &self.active[start + i];
-                debug_assert_eq!(a.seq, *seq);
-                self.engine.register_prefix(*seq, &a.prompt);
-            }
-            let now = Instant::now();
-            for (i, last) in lasts.into_iter().enumerate() {
-                let a = &mut self.active[start + i];
-                let tok = sample(&last, &a.req.sampling, &mut self.rng);
-                a.next_token = tok;
-                a.generated.push(tok);
-                a.first_token_at = Some(now);
-                self.metrics.ttft.record(now.duration_since(a.enqueued).as_secs_f64());
-                self.metrics.tokens_generated += 1;
-            }
-            now
-        };
-        // harvest requests that finished on their first (or restored) token
+        // a restored checkpoint can already be at its token limit
         let mut done = Vec::new();
-        let mut i = 0;
-        while i < self.active.len() {
-            if self.active[i].first_token_at.is_some() && self.active[i].finished() {
-                let a = self.active.swap_remove(i);
-                done.push(self.finish(a, now));
-            } else {
-                i += 1;
-            }
+        if resumed_any {
+            self.harvest(&mut done, Instant::now());
         }
-        Ok(done)
+        done
     }
 
     /// Rebuild a checkpointed request: restore its KV (by reference through
@@ -326,6 +432,7 @@ impl Scheduler {
         self.metrics.ttft.record(now.duration_since(enqueued).as_secs_f64());
         self.active.push(Active {
             skipped: prompt.len(), // nothing re-prefilled here
+            prefilled: prompt.len(),
             prompt,
             req,
             seq,
@@ -334,6 +441,7 @@ impl Scheduler {
             generated,
             enqueued,
             first_token_at: Some(now),
+            last_token_at: Some(now),
         });
     }
 
@@ -341,8 +449,11 @@ impl Scheduler {
     /// cartridge: the request plus — once it has started decoding — a
     /// [`DecodeCheckpoint`] whose leading `keep_prefix` prompt tokens are
     /// exported by reference (the caller probed the target's radix cache
-    /// first; pass 0 for a fully by-value export). Still-queued requests
-    /// come back without a checkpoint — there is no KV to move yet.
+    /// first; pass 0 for a fully by-value export). Still-queued requests —
+    /// and admitted requests still mid-prefill, which have no sampled token
+    /// yet — come back without a checkpoint: there is no decode state to
+    /// move, and the target's own prefix cache absorbs whatever prompt
+    /// prefix it already holds.
     /// Returns `None` when the ticket is unknown or already completed.
     /// The request leaves this scheduler entirely; its KV pages are freed.
     pub fn export(
@@ -358,7 +469,15 @@ impl Scheduler {
             };
         }
         let i = self.active.iter().position(|a| a.req.id == ticket)?;
-        let a = self.active.swap_remove(i);
+        // stable removal: `active` stays in admission order (see harvest)
+        let a = self.active.remove(i);
+        if a.generated.is_empty() {
+            // still prefilling: the partial KV is freed and the request
+            // restarts cleanly elsewhere (byte-identical outputs either
+            // way — prefill is deterministic in absolute position)
+            self.engine.free_sequence(a.seq);
+            return Some((a.req, None));
+        }
         let by_ref = keep_prefix
             .min(a.prompt.len().saturating_sub(1))
             .min(self.engine.seq_len(a.seq));
@@ -373,10 +492,12 @@ impl Scheduler {
         Some((a.req, Some(ckpt)))
     }
 
-    /// By-value decode checkpoints of every active request, keyed by wire
-    /// id. The worker piggybacks these on its periodic metric checkpoints,
-    /// so if this cartridge later panics the dispatcher resumes each
-    /// request from its last checkpointed decode step instead of prefill.
+    /// By-value decode checkpoints of every request that has started
+    /// decoding, keyed by wire id (mid-prefill requests have no decode
+    /// state and are skipped). The worker piggybacks these on its periodic
+    /// metric checkpoints, so if this cartridge later panics the dispatcher
+    /// resumes each request from its last checkpointed decode step instead
+    /// of prefill.
     pub fn decode_checkpoints(&self) -> Vec<(u64, DecodeCheckpoint)> {
         self.active
             .iter()
@@ -448,12 +569,28 @@ impl Scheduler {
     /// Metrics snapshot (wall clock up to now).
     pub fn metrics(&self) -> ServingMetrics {
         let mut m = self.metrics.clone();
+        self.finish_snapshot(&mut m);
+        m
+    }
+
+    /// Metrics snapshot with the per-sample latency recorders left empty —
+    /// the checkpoint path. The recorders grow one sample per completion
+    /// (`ttft`/`itl`) or per decoded token (`itl_step`), so cloning them
+    /// into every periodic checkpoint would make total checkpoint cost
+    /// quadratic in work served; counters and ledgers are O(1).
+    pub fn counter_metrics(&self) -> ServingMetrics {
+        let mut m = self.metrics.clone_counters();
+        self.finish_snapshot(&mut m);
+        m
+    }
+
+    fn finish_snapshot(&self, m: &mut ServingMetrics) {
         m.wall_s = self.started.elapsed().as_secs_f64();
         m.batch_waste = self.batch_stats.waste();
+        m.mixed_waves = self.batch_stats.mixed_waves;
         m.traffic = self.engine.traffic();
         m.interface_bytes = m.traffic.total();
         m.device_macs = self.engine.device_stats().macs;
-        m
     }
 
     pub fn engine(&self) -> &Engine {
@@ -494,6 +631,99 @@ mod tests {
         assert_eq!(m.requests_completed, 5);
         assert_eq!(m.interface_bytes, m.traffic.total());
         assert!(m.traffic.protocol_total() > 0);
+    }
+
+    #[test]
+    fn chunked_prefill_interleaves_decode_rows() {
+        // one sequence decoding, one long prompt prefilling: every
+        // iteration must advance the decode by exactly one token while the
+        // prefill proceeds chunk by chunk
+        let opts = SchedulerOpts { prefill_chunk_tokens: 8, ..SchedulerOpts::default() };
+        let mut s = Scheduler::new(Engine::synthetic(&crate::config::ModelConfig::TINY, 11), opts);
+        let mut warm = GenRequest::greedy(0, "steady decode stream", 64);
+        warm.stop_at_eos = false;
+        s.submit(warm);
+        // "steady decode stream" = 21 tokens (BOS + 20 bytes): chunks of
+        // 8+8+5, then decode
+        for _ in 0..4 {
+            s.step().unwrap();
+        }
+        let before = s.metrics();
+        assert_eq!(before.ttft.count(), 1, "warm stream should be decoding");
+        let long_prompt = "long prompt ".repeat(40); // 481 tokens
+        let mut long = GenRequest::greedy(1, &long_prompt, 4);
+        long.stop_at_eos = false;
+        s.submit(long);
+        for _ in 0..5 {
+            s.step().unwrap();
+        }
+        let m = s.metrics();
+        // the warm stream advanced one token per iteration — the long
+        // prefill (480/8 = 60 iterations of work) did not stall it
+        assert_eq!(m.tokens_generated, before.tokens_generated + 5);
+        // and the long request is still mid-prefill: no first token yet
+        assert_eq!(m.ttft.count(), 1, "long prefill finished implausibly fast");
+        assert!(m.mixed_waves > 0, "no mixed prefill+decode wave was issued");
+        assert!(m.prefill_chunks >= 5);
+        // drive to completion: both streams finish correctly
+        let mut results = s.run_to_completion().unwrap();
+        results.sort_by_key(|r| r.id);
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[0].tokens.len(), 64);
+        assert_eq!(results[1].tokens.len(), 4);
+        let m = s.metrics();
+        assert!(m.itl_step.count() > 0, "per-token gap histogram is empty");
+    }
+
+    #[test]
+    fn chunk_budget_does_not_change_greedy_outputs() {
+        let run = |chunk: usize| {
+            let opts = SchedulerOpts { prefill_chunk_tokens: chunk, ..SchedulerOpts::default() };
+            let mut s =
+                Scheduler::new(Engine::synthetic(&crate::config::ModelConfig::TINY, 5), opts);
+            for i in 0..4 {
+                s.submit(GenRequest::greedy(
+                    i,
+                    &format!("a moderately long shared prompt, variant {i}"),
+                    7,
+                ));
+            }
+            let mut r = s.run_to_completion().unwrap();
+            r.sort_by_key(|x| x.id);
+            r.into_iter().map(|x| x.tokens).collect::<Vec<_>>()
+        };
+        let sequential = run(0);
+        for chunk in [1, 5, 16, 1024] {
+            assert_eq!(run(chunk), sequential, "chunk budget {chunk} changed outputs");
+        }
+    }
+
+    #[test]
+    fn export_mid_prefill_restarts_cleanly() {
+        // a request exported while still prefilling has no decode state:
+        // the export carries no checkpoint, the partial KV is freed, and
+        // the target serves it byte-identically from scratch
+        let opts = SchedulerOpts { prefill_chunk_tokens: 4, ..SchedulerOpts::default() };
+        let tiny = crate::config::ModelConfig::TINY;
+        let req = GenRequest::greedy(0, "a prompt that is still prefilling", 6);
+
+        let mut r = Scheduler::new(Engine::synthetic(&tiny, 7), opts);
+        r.submit(req.clone());
+        let want = r.run_to_completion().unwrap().remove(0);
+
+        let mut a = Scheduler::new(Engine::synthetic(&tiny, 7), opts);
+        a.submit(req.clone());
+        a.step().unwrap(); // 4 of 34 prompt tokens prefilled
+        let (req2, ckpt) = a.export(0, 0).unwrap();
+        assert!(ckpt.is_none(), "mid-prefill export must not carry a checkpoint");
+        assert_eq!(a.metrics().migrated_out, 0);
+        // the partial sequence's pages were freed with it
+        assert_eq!(a.engine().cache.stats().2, 0);
+
+        let mut b = Scheduler::new(Engine::synthetic(&tiny, 7), opts);
+        b.submit(req2);
+        let got = b.run_to_completion().unwrap().remove(0);
+        assert_eq!(got.tokens, want.tokens);
     }
 
     #[test]

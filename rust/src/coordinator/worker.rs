@@ -64,8 +64,9 @@ pub enum WorkerMsg {
 /// ([`CHECKPOINT_EVERY_STEPS`]); completion-triggered checkpoints carry
 /// metrics alone, so checkpoint cost stays O(1) per completion.
 pub struct CheckpointReport {
-    /// Counters and ledgers; the per-request latency sample vectors are
-    /// stripped to keep checkpoints O(1).
+    /// Counters and ledgers; the per-request raw-sample latency recorders
+    /// (`ttft`/`itl`) are stripped to keep checkpoints O(1) — the
+    /// fixed-footprint `itl_step` histogram rides along.
     pub metrics: ServingMetrics,
     /// By-value decode checkpoints of every active request, keyed by wire
     /// id (periodic checkpoints only; empty otherwise). If the cartridge
@@ -259,13 +260,13 @@ fn worker_loop<E>(
                     steps_since_checkpoint += 1;
                     let periodic = steps_since_checkpoint >= CHECKPOINT_EVERY_STEPS;
                     if completed || periodic {
-                        // counters only: the latency recorders grow one
-                        // sample per completion, and cloning them into
-                        // every checkpoint would make total checkpoint
-                        // cost quadratic in requests served
-                        let mut snap = sched.metrics();
-                        snap.ttft = Default::default();
-                        snap.itl = Default::default();
+                        // counters (and fixed-footprint histograms) only:
+                        // the raw-sample recorders grow one sample per
+                        // completion, so cloning them into every checkpoint
+                        // would make total checkpoint cost quadratic in
+                        // requests served — counter_metrics never touches
+                        // the sample vectors
+                        let snap = sched.counter_metrics();
                         // the heavy payloads — per-request KV snapshots and
                         // radix occupancy — ride only the periodic cadence:
                         // completions can fire every step, and serializing

@@ -29,6 +29,15 @@ impl ByteTokenizer {
         out
     }
 
+    /// Token count of `text` without allocating — always equals
+    /// `encode(text).len()`. Size estimators (e.g. the fleet's KV-size
+    /// migration guard) use this instead of hard-coding the one-token-per-
+    /// byte-plus-BOS layout, so a tokenizer change cannot silently skew
+    /// them.
+    pub fn token_count(&self, text: &str) -> usize {
+        text.len() + 1
+    }
+
     /// Decode ids, dropping specials; invalid UTF-8 is replaced.
     pub fn decode(&self, ids: &[u32]) -> String {
         let bytes: Vec<u8> = ids.iter().filter(|&&t| t < 256).map(|&t| t as u8).collect();
@@ -47,6 +56,14 @@ mod tests {
         assert_eq!(ids[0], BOS);
         assert_eq!(ids.len(), 6);
         assert_eq!(t.decode(&ids), "hello");
+    }
+
+    #[test]
+    fn token_count_matches_encode() {
+        let t = ByteTokenizer::new();
+        for s in ["", "q", "hello", "héllo → 世界"] {
+            assert_eq!(t.token_count(s), t.encode(s).len(), "{s:?}");
+        }
     }
 
     #[test]

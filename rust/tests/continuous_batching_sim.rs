@@ -1,0 +1,241 @@
+//! Deterministic, artifact-free integration tier for iteration-level
+//! continuous batching with chunked prefill: greedy serving output must be
+//! **byte-identical** for every prefill chunk budget — including 0, the
+//! run-to-completion (sequential) mode — while a long prompt arriving
+//! mid-stream no longer stalls in-flight decodes. Also pins the property
+//! everything rests on: the KV a chunked prefill builds is bit-identical
+//! to a whole prefill's, for random prompts and random chunk splits.
+
+use ita::config::ModelConfig;
+use ita::coordinator::engine::Engine;
+use ita::coordinator::fleet::Fleet;
+use ita::coordinator::metrics::ServingMetrics;
+use ita::coordinator::request::GenRequest;
+use ita::coordinator::scheduler::{Scheduler, SchedulerOpts};
+use ita::util::quickprop::forall;
+
+const WEIGHT_SEED: u64 = 0xC0B1;
+
+fn opts(chunk: usize) -> SchedulerOpts {
+    SchedulerOpts { prefill_chunk_tokens: chunk, ..SchedulerOpts::default() }
+}
+
+/// A workload that exercises every scheduling interaction at once: shared
+/// prefixes (radix-cache grafts mid-chunking), a prompt far longer than
+/// any chunk budget, strays shorter than one KV page, and uneven decode
+/// lengths so slots free up and late admissions interleave with decodes.
+fn mixed_requests() -> Vec<GenRequest> {
+    let system = "You are the ITA serving assistant; answer from the paper and keep \
+                  every reply short. ";
+    let mut reqs = Vec::new();
+    for i in 0..5 {
+        let mut r = GenRequest::greedy(
+            reqs.len() as u64,
+            &format!("{system}question #{i}"),
+            3 + (i % 3) * 5,
+        );
+        r.stop_at_eos = false;
+        reqs.push(r);
+    }
+    let mut long = GenRequest::greedy(
+        reqs.len() as u64,
+        &format!("{system}{}", "context paragraph. ".repeat(30)),
+        6,
+    );
+    long.stop_at_eos = false;
+    reqs.push(long);
+    for p in ["zz", "the memory wall"] {
+        let mut r = GenRequest::greedy(reqs.len() as u64, p, 9);
+        r.stop_at_eos = false;
+        reqs.push(r);
+    }
+    // admitted only once a slot frees (max_active = 8): by then the system
+    // prefix is registered, so this one grafts a cached prefix mid-run —
+    // the prefix-cache × chunked-prefill interaction
+    let mut late = GenRequest::greedy(reqs.len() as u64, &format!("{system}late arrival"), 4);
+    late.stop_at_eos = false;
+    reqs.push(late);
+    let mut tiny = GenRequest::greedy(reqs.len() as u64, "q", 9);
+    tiny.stop_at_eos = false;
+    reqs.push(tiny);
+    reqs
+}
+
+fn transcript(results: Vec<(u64, Vec<u32>)>) -> Vec<(u64, Vec<u32>)> {
+    let mut r = results;
+    r.sort();
+    r
+}
+
+fn run_scheduler(reqs: &[GenRequest], o: SchedulerOpts) -> (Vec<(u64, Vec<u32>)>, ServingMetrics) {
+    let mut sched = Scheduler::new(Engine::synthetic(&ModelConfig::TINY, WEIGHT_SEED), o);
+    for r in reqs {
+        sched.submit(r.clone());
+    }
+    let results = sched.run_to_completion().unwrap();
+    let m = sched.metrics();
+    (transcript(results.into_iter().map(|r| (r.id, r.tokens)).collect()), m)
+}
+
+#[test]
+fn chunked_outputs_byte_identical_to_run_to_completion() {
+    let reqs = mixed_requests();
+    // ByteTokenizer: one token per byte, plus BOS
+    let total_prompt_tokens: u64 = reqs.iter().map(|r| (r.prompt.len() + 1) as u64).sum();
+    let (sequential, m_seq) = run_scheduler(&reqs, opts(0));
+    // run-to-completion conserves prompt tokens: every one either
+    // prefilled or was served from the radix cache
+    assert_eq!(m_seq.tokens_prefilled + m_seq.prefill_skipped_tokens, total_prompt_tokens);
+    for chunk in [1, 3, 8, 16, 64, 1000] {
+        let (got, m) = run_scheduler(&reqs, opts(chunk));
+        assert_eq!(got, sequential, "chunk budget {chunk} changed greedy outputs");
+        assert_eq!(m.tokens_generated, m_seq.tokens_generated);
+        // the late arrival really did graft a cached prefix mid-run
+        assert!(m.prefill_skipped_tokens > 0, "no prefix reuse at chunk budget {chunk}");
+        // chunking may shift WHERE prompt tokens come from (a late
+        // admission can hit a prefix registered mid-run), never the total
+        assert_eq!(
+            m.tokens_prefilled + m.prefill_skipped_tokens,
+            total_prompt_tokens,
+            "prompt-token conservation broke at chunk budget {chunk}"
+        );
+    }
+}
+
+#[test]
+fn chunked_outputs_byte_identical_with_prefix_cache_off() {
+    // isolate chunking from prefix reuse: identical streams again
+    let reqs = mixed_requests();
+    let no_cache = |chunk: usize| SchedulerOpts { prefix_cache_pages: 0, ..opts(chunk) };
+    let (sequential, m_seq) = run_scheduler(&reqs, no_cache(0));
+    for chunk in [1, 7, 32] {
+        let (got, m) = run_scheduler(&reqs, no_cache(chunk));
+        assert_eq!(got, sequential, "chunk budget {chunk} changed outputs (cache off)");
+        // without a cache, prefilled totals are exactly the prompt tokens
+        assert_eq!(m.tokens_prefilled, m_seq.tokens_prefilled);
+        assert_eq!(m.prefill_skipped_tokens, 0);
+    }
+}
+
+#[test]
+fn long_prefill_does_not_stall_inflight_decodes() {
+    // the tentpole behaviour, asserted step-by-step with no timing: while
+    // a 600-token prompt prefills in 8-token chunks, every in-flight
+    // decode still advances exactly one token per scheduling iteration
+    let mut s = Scheduler::new(Engine::synthetic(&ModelConfig::TINY, WEIGHT_SEED), opts(8));
+    for i in 0..3 {
+        let mut r = GenRequest::greedy(i, &format!("stream {i}"), 64);
+        r.stop_at_eos = false;
+        s.submit(r);
+    }
+    // "stream i" = 9 tokens each (BOS + 8 bytes) → 27 prefill rows over
+    // the first iterations, then all three streams decode
+    for _ in 0..4 {
+        s.step().unwrap();
+    }
+    let before = s.metrics();
+    assert_eq!(before.ttft.count(), 3, "streams should all be decoding");
+
+    let mut long = GenRequest::greedy(9, &"long prompt ".repeat(50), 4); // 601 tokens
+    long.stop_at_eos = false;
+    s.submit(long);
+    for _ in 0..6 {
+        s.step().unwrap();
+    }
+    let m = s.metrics();
+    // 3 decode tokens per iteration, no stall
+    assert_eq!(m.tokens_generated, before.tokens_generated + 3 * 6);
+    // the long request is still prefilling (48 of 601 rows done)
+    assert_eq!(m.ttft.count(), 3, "long prefill finished implausibly fast");
+    assert!(m.mixed_waves > before.mixed_waves, "no mixed prefill+decode waves");
+
+    // and the whole workload still completes correctly
+    let mut results = s.run_to_completion().unwrap();
+    results.sort_by_key(|r| r.id);
+    assert_eq!(results.len(), 4);
+    assert!(results.iter().all(|r| !r.tokens.is_empty()));
+    // byte-identity versus serving the same four requests sequentially
+    let mut reqs: Vec<GenRequest> = (0..3)
+        .map(|i| {
+            let mut r = GenRequest::greedy(i, &format!("stream {i}"), 64);
+            r.stop_at_eos = false;
+            r
+        })
+        .collect();
+    let mut long = GenRequest::greedy(9, &"long prompt ".repeat(50), 4);
+    long.stop_at_eos = false;
+    reqs.push(long);
+    let (reference, _) = run_scheduler(&reqs, opts(0));
+    let got = transcript(results.into_iter().map(|r| (r.id, r.tokens)).collect());
+    assert_eq!(got, reference, "mid-stream arrival changed greedy outputs");
+}
+
+#[test]
+fn fleet_serves_identically_under_chunked_prefill() {
+    // the threaded fleet path over chunked schedulers: same transcripts as
+    // the synchronous run-to-completion scheduler
+    let reqs = mixed_requests();
+    let (reference, _) = run_scheduler(&reqs, opts(0));
+    for cartridges in [1usize, 2] {
+        let fleet = Fleet::start(
+            cartridges,
+            |_id| Ok(Engine::synthetic(&ModelConfig::TINY, WEIGHT_SEED)),
+            opts(8),
+        )
+        .unwrap();
+        let handles: Vec<_> = reqs.iter().map(|r| fleet.submit(r.clone())).collect();
+        let got = handles
+            .into_iter()
+            .map(|h| h.wait().unwrap())
+            .map(|r| (r.id, r.tokens))
+            .collect();
+        let m = fleet.shutdown().unwrap();
+        assert_eq!(m.failed_requests, 0);
+        assert_eq!(
+            transcript(got),
+            reference,
+            "fleet({cartridges}) with chunked prefill diverged"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the property everything rests on
+// ---------------------------------------------------------------------------
+
+#[test]
+fn chunked_prefill_kv_pages_bit_identical_for_random_budgets() {
+    // prefill is deterministic in absolute position and row-independent,
+    // so the KV rows a chunked prefill writes — any chunk sizes, resuming
+    // at the committed length each time — are bit-identical to a whole
+    // prefill's. This is the exact property KvSnapshot by-reference
+    // restores and mixed-wave scheduling both rely on.
+    forall("chunked prefill KV == whole prefill KV", 40, |g| {
+        let cfg = ModelConfig::TINY;
+        let n = g.usize_in(2, 48);
+        let prompt: Vec<u32> = (0..n).map(|_| g.usize_in(0, 255) as u32).collect();
+
+        let mut whole = Engine::synthetic(&cfg, 7);
+        let sa = whole.new_sequence();
+        whole.prefill(sa, &prompt).unwrap();
+
+        let mut chunked = Engine::synthetic(&cfg, 7);
+        let sb = chunked.new_sequence();
+        let max = chunked.max_batch();
+        let mut at = 0;
+        while at < n {
+            let take = g.usize_in(1, n - at).min(max);
+            chunked.forward(&vec![sb; take], &prompt[at..at + take]).unwrap();
+            at += take;
+        }
+
+        assert_eq!(whole.seq_len(sa), chunked.seq_len(sb));
+        let snap_whole = whole.cache.snapshot_seq(sa, 0).unwrap();
+        let snap_chunked = chunked.cache.snapshot_seq(sb, 0).unwrap();
+        assert_eq!(
+            snap_whole, snap_chunked,
+            "chunked prefill KV diverged (case seed {:#x})",
+            g.case_seed
+        );
+    });
+}

@@ -406,6 +406,46 @@ fn rebalance_migrates_load_off_the_hot_cartridge() {
 }
 
 #[test]
+fn kv_size_guard_blocks_oversized_rebalance_migrations() {
+    // the same long/short skew that makes `Rebalance` migrate — but the
+    // shorts run well past the worker checkpoint interval (16 steps), so
+    // by the time the spread first triggers, every long on the hot
+    // cartridge has shipped a by-value decode checkpoint. A 1-byte KV
+    // budget then refuses every proposed move: the imbalance is simply
+    // waited out, and nothing breaks.
+    let reqs: Vec<GenRequest> = (0..6)
+        .map(|i| {
+            if i % 2 == 0 {
+                long_request(i, &format!("long decode {i}"), 128)
+            } else {
+                long_request(i, &format!("short {i}"), 32)
+            }
+        })
+        .collect();
+    let fleet = Fleet::with_dispatch(
+        2,
+        synthetic_factory(WEIGHT_SEED),
+        SchedulerOpts::default(),
+        Box::new(Rebalance::new(Box::new(LeastLoaded)).with_kv_limit(1)),
+    )
+    .unwrap();
+    let handles: Vec<_> = reqs.iter().map(|r| fleet.submit(r.clone())).collect();
+    for (req, h) in reqs.iter().zip(handles) {
+        let r = h.wait().expect("request completes");
+        assert_ne!(r.finish, FinishReason::Error, "request {} failed", req.id);
+        assert_eq!(r.tokens.len(), req.max_new_tokens);
+    }
+    let m = fleet.shutdown().unwrap();
+    assert_eq!(m.failed_requests, 0);
+    assert_eq!(m.aggregate().requests_completed, 6);
+    assert_eq!(
+        m.migrations, 0,
+        "KV guard failed to block oversized migrations: {}",
+        m.report()
+    );
+}
+
+#[test]
 fn panic_recovery_resumes_from_last_checkpoint() {
     // cartridge 0 panics on forward #24 = decode step 22 of the lone
     // request (2 prefill forwards for the 15-token prompt, then one decode
