@@ -32,6 +32,7 @@ use ita::coordinator::engine::Engine;
 use ita::coordinator::fleet::{Fleet, LeastLoaded, PrefixAffinity, Rebalance};
 use ita::coordinator::request::GenRequest;
 use ita::coordinator::scheduler::{Scheduler, SchedulerOpts};
+use ita::coordinator::spec::{CartridgeEngines, SpecOpts};
 use ita::device::pjrt::PjrtDevice;
 use ita::device::sim::SimDevice;
 use ita::host::embedding::EmbeddingTable;
@@ -340,6 +341,72 @@ fn bench_mixed_prefill_decode(chunk_tokens: usize, long_prompt_tokens: usize) ->
     j.encode()
 }
 
+/// Speculative-decoding sweep: the same decode-heavy workload at draft
+/// depth k (0 = vanilla), over a small 1×32 draft model paired with the
+/// TINY target. Reports acceptance rate, rollbacks, and decoded tok/s —
+/// on the CPU sim the draft costs real host time, so the interesting
+/// numbers are acceptance and wave counts; on a physical draft cartridge
+/// the proposals are concurrent. Returns the JSON record.
+fn bench_spec_decode(depth: usize, n_requests: usize, max_tokens: usize) -> String {
+    let draft_cfg = ModelConfig {
+        name: "draft-tiny",
+        d_model: 32,
+        n_layers: 1,
+        d_ffn: 96,
+        n_heads: 2,
+        vocab: 258,
+        w_bits: 4,
+        a_bits: 8,
+    };
+    let opts = SchedulerOpts {
+        spec: SpecOpts { depth, adaptive: true },
+        ..SchedulerOpts::default()
+    };
+    let target = Engine::synthetic(&ModelConfig::TINY, 0x17A);
+    let engines = if depth == 0 {
+        CartridgeEngines::from(target)
+    } else {
+        CartridgeEngines::with_draft(target, Engine::synthetic(&draft_cfg, 0xD))
+    };
+    let mut sched = Scheduler::with_engines(engines, opts);
+    for i in 0..n_requests {
+        let mut r = GenRequest::greedy(
+            i as u64,
+            &format!("speculative decode stream {i}"),
+            max_tokens,
+        );
+        r.stop_at_eos = false;
+        sched.submit(r);
+    }
+    let t0 = Instant::now();
+    let results = sched.run_to_completion().expect("run");
+    let wall = t0.elapsed().as_secs_f64();
+    let tokens: usize = results.iter().map(|r| r.tokens.len()).sum();
+    let m = sched.metrics();
+    println!(
+        "bench e2e/spec-decode  k={depth}  {tokens:>5} tokens in {wall:>6.2}s = {:>7.1} tok/s  \
+         (proposed {}, accepted {}, rollbacks {}, acceptance {:.0}%)",
+        tokens as f64 / wall,
+        m.spec_proposed,
+        m.spec_accepted,
+        m.spec_rollbacks,
+        m.spec_acceptance() * 100.0,
+    );
+    let mut j = Json::default();
+    j.num("depth", depth);
+    j.num("requests", n_requests);
+    j.num("tokens", tokens);
+    j.float("wall_s", wall);
+    j.float("tok_per_s", tokens as f64 / wall);
+    j.num("spec_proposed", m.spec_proposed);
+    j.num("spec_accepted", m.spec_accepted);
+    j.num("spec_rollbacks", m.spec_rollbacks);
+    j.float("acceptance_rate", m.spec_acceptance());
+    j.float("itl_step_p50_ms", m.itl_step.percentile(50.0) * 1e3);
+    j.float("itl_step_p99_ms", m.itl_step.percentile(99.0) * 1e3);
+    j.encode()
+}
+
 fn bench_config(name: &str, n_requests: usize, max_tokens: usize) -> Option<()> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts").join(name);
     if !dir.join("MANIFEST.txt").exists() {
@@ -406,6 +473,10 @@ fn main() {
         bench_mixed_prefill_decode(64, 2048),
         bench_mixed_prefill_decode(256, 2048),
     ];
+    // speculative decoding: draft depth sweep (0 = vanilla baseline);
+    // acceptance rate + rollbacks land in the perf record
+    let spec_sweep: Vec<String> =
+        [0usize, 2, 4, 8].iter().map(|&k| bench_spec_decode(k, 8, 48)).collect();
     bench_config("tiny", 16, 32);
     // saturate the largest compiled bucket: at the DRAM-streaming roofline
     // every extra row in a weight sweep is almost free (§Perf iteration 5)
@@ -415,11 +486,13 @@ fn main() {
     let mut root = Json::default();
     root.str("bench", "e2e_throughput");
     // v2: added the mixed_prefill_decode sweep (chunked-prefill ITL)
-    root.num("schema_version", 2);
+    // v3: added the spec_decode sweep (draft depth, acceptance, rollbacks)
+    root.num("schema_version", 3);
     root.put("fleet_sweep", json_array(&fleet_sweep));
     root.put("shared_prefix", shared_prefix);
     root.put("migration", migration);
     root.put("mixed_prefill_decode", json_array(&mixed_sweep));
+    root.put("spec_decode", json_array(&spec_sweep));
     let path = std::env::var("ITA_BENCH_JSON").unwrap_or_else(|_| "BENCH_e2e.json".into());
     match std::fs::write(&path, root.encode() + "\n") {
         Ok(()) => println!("bench e2e: wrote perf record to {path}"),

@@ -341,6 +341,37 @@ impl Engine {
         Ok(logits)
     }
 
+    /// Multi-position verify step (speculative decoding): run `tokens` as
+    /// consecutive positions of ONE sequence in a single call, returning
+    /// one logits row per position — row `j` is exactly what a vanilla
+    /// decode would have produced after consuming `tokens[..=j]`, because
+    /// every row's RoPE and attention depend only on its absolute position
+    /// (the partial-prefill contract above). The caller samples the rows in
+    /// order, accepts the agreeing prefix, and rolls the rest back with
+    /// [`truncate_sequence`](Engine::truncate_sequence).
+    ///
+    /// All `tokens.len()` rows are committed; this is verification, not a
+    /// dry run. `tokens.len()` must fit one device bucket. This is the
+    /// single-sequence form of the contract: the draft-side catch-up in
+    /// [`SpecDecoder::propose`](super::spec::SpecDecoder::propose) runs
+    /// its chunks through it, while the target-side scheduler inlines the
+    /// same row pattern into shared [`plan_mixed`](super::batcher::plan_mixed)
+    /// waves (mixing several sequences' chains and splitting long ones
+    /// across buckets), which this single-call form cannot express.
+    pub fn verify_step(&mut self, id: SeqId, tokens: &[u32]) -> Result<Mat> {
+        self.forward(&vec![id; tokens.len()], tokens)
+    }
+
+    /// Roll a sequence's committed KV back to `new_len` rows, discarding
+    /// the rows speculative decoding committed for rejected draft tokens.
+    /// Shared/COW pages are never disturbed (see
+    /// [`PagedKvCache::truncate_seq`](crate::host::kv_cache::PagedKvCache::truncate_seq));
+    /// the interface-traffic and MAC ledgers keep the rolled-back rows —
+    /// the device really did that work.
+    pub fn truncate_sequence(&mut self, id: SeqId, new_len: usize) -> Result<()> {
+        self.cache.truncate_seq(id, new_len)
+    }
+
     /// Prefill a prompt; returns the logits row after the last token.
     pub fn prefill(&mut self, id: SeqId, prompt: &[u32]) -> Result<Vec<f32>> {
         Ok(self.prefill_batch(&[id], &[prompt])?.remove(0))
@@ -471,6 +502,45 @@ mod tests {
         assert_eq!(at, toks.len());
         assert_eq!(b.seq_len(sb), a.seq_len(sa));
         assert_eq!(whole, last, "chunked prefill logits diverged from whole prefill");
+    }
+
+    #[test]
+    fn verify_step_matches_sequential_decode_and_rolls_back_cleanly() {
+        // the speculative-decoding contract: k+1 rows of one sequence in
+        // one call yield the same logits as k+1 sequential decode steps,
+        // and truncating the rejected suffix leaves the cache bit-identical
+        // to never having speculated
+        let cfg = crate::config::ModelConfig::TINY;
+        let toks = ByteTokenizer::new().encode("verify wave");
+        let draft = [10u32, 20, 30, 40];
+
+        let mut a = Engine::synthetic(&cfg, 13);
+        let sa = a.new_sequence();
+        a.prefill(sa, &toks).unwrap();
+        let batched = a.verify_step(sa, &draft).unwrap();
+
+        let mut b = Engine::synthetic(&cfg, 13);
+        let sb = b.new_sequence();
+        b.prefill(sb, &toks).unwrap();
+        let v = batched.cols;
+        for (j, &t) in draft.iter().enumerate() {
+            let solo = b.forward(&[sb], &[t]).unwrap();
+            assert_eq!(
+                solo.data,
+                batched.data[j * v..(j + 1) * v].to_vec(),
+                "verify row {j} diverged from sequential decode"
+            );
+        }
+
+        // reject the last two draft rows on `a`; redecoding them must match
+        // `b` redecoding from the same point (b rolls back too)
+        let keep = toks.len() + 2;
+        a.truncate_sequence(sa, keep).unwrap();
+        b.truncate_sequence(sb, keep).unwrap();
+        assert_eq!(a.seq_len(sa), keep);
+        let la = a.forward(&[sa], &[77]).unwrap();
+        let lb = b.forward(&[sb], &[77]).unwrap();
+        assert_eq!(la.data, lb.data, "post-rollback decode diverged");
     }
 
     #[test]

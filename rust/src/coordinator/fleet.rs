@@ -48,11 +48,13 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
-use super::engine::Engine;
 use super::metrics::{CartridgeMetrics, FleetMetrics, ServingMetrics};
 use super::request::{DecodeCheckpoint, FinishReason, GenRequest, GenResult};
 use super::scheduler::SchedulerOpts;
+use super::spec::CartridgeEngines;
 use super::worker::{CartridgeId, Worker, WorkerEvent, WorkerMsg};
+#[cfg(test)]
+use super::engine::Engine;
 
 /// Policy choosing the cartridge for the next queued request.
 ///
@@ -127,16 +129,21 @@ pub trait Dispatch: Send {
     /// Upper bound, in serialized by-value bytes
     /// ([`KvSnapshot::wire_bytes`](crate::host::kv_cache::KvSnapshot::wire_bytes)),
     /// on the KV a single [`rebalance`](Dispatch::rebalance)-proposed
-    /// migration may move. When picking the candidate request, the
-    /// dispatcher skips any whose last known decode checkpoint exceeds
-    /// this — moving a huge context to free one queue slot costs more
-    /// wire traffic than the wait it saves. Requests that have not
-    /// checkpointed yet are sized from their prompt length via the per-row
-    /// KV cost learned from worker checkpoints (prefill builds prompt-sized
-    /// KV immediately, so even a brand-new long-prompt request is caught);
-    /// only when no size information exists at all does a candidate pass
-    /// unchecked. `None` (the default) = unlimited. Explicit
-    /// [`Fleet::migrate`] calls bypass the guard: the operator asked.
+    /// migration may move — moving a huge context to free one queue slot
+    /// costs more wire traffic than the wait it saves. Candidates are
+    /// first screened against the stale estimates (last decode checkpoint,
+    /// else a prompt-length estimate via the per-row KV cost learned from
+    /// worker checkpoints — prefill builds prompt-sized KV immediately, so
+    /// even a brand-new long-prompt request is caught); if anything
+    /// passes, the dispatcher **re-probes the source worker for live
+    /// export sizes** ([`WorkerMsg::SizeProbe`]) and re-selects over exact
+    /// data, so a migration never rides a checkpoint-interval-stale size.
+    /// The screen keeps the guard free when every candidate is hopeless —
+    /// a persistent spread does not turn each dispatcher wakeup into a
+    /// blocking worker round-trip. Only when no size information exists at
+    /// all does a candidate pass unchecked. `None` (the default) =
+    /// unlimited. Explicit [`Fleet::migrate`] calls bypass the guard: the
+    /// operator asked.
     fn max_migration_kv_bytes(&self) -> Option<usize> {
         None
     }
@@ -371,10 +378,11 @@ impl Rebalance {
 
     /// Cap the serialized by-value KV bytes
     /// ([`KvSnapshot::wire_bytes`](crate::host::kv_cache::KvSnapshot::wire_bytes))
-    /// a single rebalance migration may move. The candidate's size is
-    /// taken from its last periodic decode checkpoint (up to one
-    /// checkpoint interval stale — budget a page's worth of slack), or
-    /// estimated from its prompt length when it has not checkpointed yet.
+    /// a single rebalance migration may move. The candidate's size comes
+    /// from a live re-probe of the source worker at migration-decision
+    /// time (exact as of its last committed step); the stale fallbacks —
+    /// last periodic checkpoint, then prompt-length estimate — apply only
+    /// when the probe itself fails.
     pub fn with_kv_limit(mut self, max_bytes: usize) -> Rebalance {
         self.max_kv_bytes = Some(max_bytes);
         self
@@ -496,23 +504,30 @@ pub struct Fleet {
 impl Fleet {
     /// Start `n` cartridges with the default [`LeastLoaded`] dispatch.
     /// `factory(id)` runs on cartridge `id`'s worker thread (the device is
-    /// not `Send`); all engines must boot or the whole start fails.
-    pub fn start<F>(n: usize, factory: F, opts: SchedulerOpts) -> Result<Fleet>
+    /// not `Send`); all engines must boot or the whole start fails. The
+    /// factory may return a bare [`Engine`](super::engine::Engine) or a
+    /// [`CartridgeEngines`] pairing each target cartridge with a draft
+    /// cartridge for speculative decoding — a fleet of fixed-weight ASICs
+    /// is naturally heterogeneous, so draft/target pairing is just a
+    /// per-slot hardware configuration.
+    pub fn start<F, B>(n: usize, factory: F, opts: SchedulerOpts) -> Result<Fleet>
     where
-        F: Fn(CartridgeId) -> Result<Engine> + Send + Sync + 'static,
+        B: Into<CartridgeEngines> + 'static,
+        F: Fn(CartridgeId) -> Result<B> + Send + Sync + 'static,
     {
         Fleet::with_dispatch(n, factory, opts, Box::new(LeastLoaded))
     }
 
     /// [`Fleet::start`] with an explicit dispatch policy.
-    pub fn with_dispatch<F>(
+    pub fn with_dispatch<F, B>(
         n: usize,
         factory: F,
         opts: SchedulerOpts,
         dispatch: Box<dyn Dispatch>,
     ) -> Result<Fleet>
     where
-        F: Fn(CartridgeId) -> Result<Engine> + Send + Sync + 'static,
+        B: Into<CartridgeEngines> + 'static,
+        F: Fn(CartridgeId) -> Result<B> + Send + Sync + 'static,
     {
         if n == 0 {
             bail!("a fleet needs at least one cartridge");
@@ -668,6 +683,8 @@ fn failed_result(req: &GenRequest) -> GenResult {
         skipped_prompt_tokens: 0,
         tokens: Vec::new(),
         text: String::new(),
+        spec_proposed: 0,
+        spec_accepted: 0,
         ttft_s: 0.0,
         itl_s: 0.0,
         total_s: 0.0,
@@ -799,9 +816,45 @@ fn dispatcher(mut slots: Vec<Slot>, rx: Receiver<FleetMsg>, mut dispatch: Box<dy
                 .collect();
             if let Some((from, to)) = dispatch.rebalance(&raw) {
                 let limit = dispatch.max_migration_kv_bytes();
-                if let Some(ticket) = slots.get(from).and_then(|s| {
-                    rebalance_candidate(&s.in_flight, limit, s.kv_bytes_per_row)
-                }) {
+                // cheap screen first: if no candidate passes even the stale
+                // estimates (checkpoint / prompt length), skip the worker
+                // round-trip entirely — a persistent spread with only
+                // oversized requests must not serialize every dispatcher
+                // wakeup behind a blocking probe of a busy worker
+                let screened = slots.get(from).and_then(|s| {
+                    rebalance_candidate(&s.in_flight, limit, None, s.kv_bytes_per_row)
+                });
+                // KV-guard re-probe: a screened candidate's stale size is up
+                // to one checkpoint interval old (a long decode keeps
+                // growing), so ask the source worker for the LIVE export
+                // size of every request at migration-decision time and
+                // re-select over exact data. Only needed when a limit is
+                // set; a dead/unresponsive worker falls back to the stale
+                // estimates.
+                let live: Option<HashMap<u64, usize>> = match (limit, slots.get(from)) {
+                    (Some(_), Some(s)) if screened.is_some() && !s.dead => {
+                        let (tx, rx) = channel();
+                        if s.worker.send(WorkerMsg::SizeProbe(tx)) {
+                            rx.recv().ok().map(|v| v.into_iter().collect())
+                        } else {
+                            None
+                        }
+                    }
+                    _ => None,
+                };
+                let ticket = if limit.is_some() && screened.is_none() {
+                    None // nothing passed the screen; don't trust it blindly
+                } else {
+                    slots.get(from).and_then(|s| {
+                        rebalance_candidate(
+                            &s.in_flight,
+                            limit,
+                            live.as_ref(),
+                            s.kv_bytes_per_row,
+                        )
+                    })
+                };
+                if let Some(ticket) = ticket {
                     migrate_ticket(
                         &mut slots,
                         &mut queue,
@@ -888,33 +941,41 @@ fn pump(
 /// The rebalance migration candidate among one cartridge's in-flight
 /// requests: the most recently placed (max ticket — it has the least
 /// decode state to ship and was queued behind the hot spot) whose KV fits
-/// the policy's budget ([`Dispatch::max_migration_kv_bytes`]). The size of
-/// a checkpointed request is its last by-value snapshot; a request that
-/// has not checkpointed yet is sized from its prompt alone (prefill builds
-/// prompt-length KV immediately, so "young" does NOT mean small) via the
-/// per-row rate learned from the worker's checkpoints — conservatively:
-/// a still-mid-prefill request would actually export checkpoint-free and
-/// ship nothing, but the dispatcher cannot tell it apart. With no learned
-/// rate and no checkpoint there is genuinely no size information, and the
-/// candidate stays eligible.
+/// the policy's budget ([`Dispatch::max_migration_kv_bytes`]).
+///
+/// Size information, in decreasing trust order:
+/// 1. the **live re-probe** (`live`, keyed by wire ticket) the dispatcher
+///    just fetched from the source worker — exact as of the last committed
+///    step, including the "ships nothing" 0 of a mid-prefill request;
+/// 2. the request's last periodic decode checkpoint — up to one checkpoint
+///    interval stale (the ROADMAP gap this re-probe closed);
+/// 3. a prompt-length estimate via the per-row rate learned from worker
+///    checkpoints (prefill builds prompt-length KV immediately, so "young"
+///    does NOT mean small).
+///
+/// Only with no information at all does a candidate pass unchecked.
 fn rebalance_candidate(
     in_flight: &HashMap<u64, Pending>,
     max_kv_bytes: Option<usize>,
+    live: Option<&HashMap<u64, usize>>,
     kv_bytes_per_row: Option<usize>,
 ) -> Option<u64> {
     in_flight
         .iter()
-        .filter(|(_, p)| match (max_kv_bytes, &p.checkpoint) {
-            (Some(cap), Some(c)) => c.kv.wire_bytes() <= cap,
-            (Some(cap), None) => match kv_bytes_per_row {
-                Some(rate) => {
+        .filter(|(ticket, p)| {
+            let Some(cap) = max_kv_bytes else { return true };
+            if let Some(bytes) = live.and_then(|m| m.get(*ticket)) {
+                return *bytes <= cap;
+            }
+            match (&p.checkpoint, kv_bytes_per_row) {
+                (Some(c), _) => c.kv.wire_bytes() <= cap,
+                (None, Some(rate)) => {
                     let rows = crate::host::tokenizer::ByteTokenizer::new()
                         .token_count(&p.req.prompt);
                     rate.saturating_mul(rows) <= cap
                 }
-                None => true,
-            },
-            (None, _) => true,
+                (None, None) => true,
+            }
         })
         .map(|(t, _)| *t)
         .max()
@@ -1174,27 +1235,104 @@ mod tests {
                 tx,
             }
         };
-        let big = DecodeCheckpoint { prompt: vec![1], generated: vec![2], kv: snap(100) };
-        let small = DecodeCheckpoint { prompt: vec![1], generated: vec![2], kv: snap(1) };
+        let big = DecodeCheckpoint {
+            prompt: vec![1],
+            generated: vec![2],
+            spec_proposed: 0,
+            spec_accepted: 0,
+            kv: snap(100),
+        };
+        let small = DecodeCheckpoint {
+            prompt: vec![1],
+            generated: vec![2],
+            spec_proposed: 0,
+            spec_accepted: 0,
+            kv: snap(1),
+        };
         let mut in_flight: HashMap<u64, Pending> = HashMap::new();
         in_flight.insert(5, pending(Some(big)));
         in_flight.insert(3, pending(Some(small.clone())));
         in_flight.insert(1, pending(None));
         // no limit: the most recently placed request wins
-        assert_eq!(rebalance_candidate(&in_flight, None, None), Some(5));
+        assert_eq!(rebalance_candidate(&in_flight, None, None, None), Some(5));
         // a limit skips the oversized checkpoint, keeps small + unknown
         let cap = small.kv.wire_bytes();
-        assert_eq!(rebalance_candidate(&in_flight, Some(cap), None), Some(3));
+        assert_eq!(rebalance_candidate(&in_flight, Some(cap), None, None), Some(3));
         // with no learned per-row rate, never-checkpointed requests have
         // no size information and stay eligible
-        assert_eq!(rebalance_candidate(&in_flight, Some(0), None), Some(1));
+        assert_eq!(rebalance_candidate(&in_flight, Some(0), None, None), Some(1));
         // a learned rate sizes the unchecked request by its prompt ("x" =
         // 2 tokens with BOS): 2 rows * 40 B > 64 B cap -> nothing eligible
-        assert_eq!(rebalance_candidate(&in_flight, Some(cap), Some(40)), Some(3));
-        assert_eq!(rebalance_candidate(&in_flight, Some(0), Some(40)), None);
+        assert_eq!(rebalance_candidate(&in_flight, Some(cap), None, Some(40)), Some(3));
+        assert_eq!(rebalance_candidate(&in_flight, Some(0), None, Some(40)), None);
         // and a generous cap keeps it eligible
-        assert_eq!(rebalance_candidate(&in_flight, Some(10_000), Some(40)), Some(5));
-        assert_eq!(rebalance_candidate(&HashMap::new(), None, None), None);
+        assert_eq!(rebalance_candidate(&in_flight, Some(10_000), None, Some(40)), Some(5));
+        assert_eq!(rebalance_candidate(&HashMap::new(), None, None, None), None);
+    }
+
+    #[test]
+    fn kv_guard_trusts_the_live_re_probe_over_stale_estimates() {
+        use crate::host::kv_cache::KvSnapshot;
+
+        let snap = |rows: usize| KvSnapshot {
+            n_layers: 1,
+            d_model: 4,
+            len: rows,
+            by_ref_len: 0,
+            k: vec![vec![0.0; rows * 4]],
+            v: vec![vec![0.0; rows * 4]],
+        };
+        let pending = |ckpt: Option<DecodeCheckpoint>| {
+            let (tx, _rx) = channel();
+            Pending {
+                req: GenRequest::greedy(0, "x", 4),
+                arrived: Instant::now(),
+                checkpoint: ckpt.map(Box::new),
+                tx,
+            }
+        };
+        // the checkpoint says "small" (1 row), but the request kept
+        // decoding for a full checkpoint interval since — the live probe
+        // knows it is big now (the ROADMAP staleness gap)
+        let stale_small = DecodeCheckpoint {
+            prompt: vec![1],
+            generated: vec![2],
+            spec_proposed: 0,
+            spec_accepted: 0,
+            kv: snap(1),
+        };
+        let cap = stale_small.kv.wire_bytes() + 100;
+        let mut in_flight: HashMap<u64, Pending> = HashMap::new();
+        in_flight.insert(7, pending(Some(stale_small)));
+        let live: HashMap<u64, usize> = [(7u64, cap + 1)].into_iter().collect();
+        assert_eq!(
+            rebalance_candidate(&in_flight, Some(cap), Some(&live), None),
+            None,
+            "grown-past-the-cap request must be skipped despite its stale checkpoint"
+        );
+        // skip/allow boundary: live size == cap is allowed, cap + 1 is not
+        let at_cap: HashMap<u64, usize> = [(7u64, cap)].into_iter().collect();
+        assert_eq!(rebalance_candidate(&in_flight, Some(cap), Some(&at_cap), None), Some(7));
+        // the converse: a stale-big checkpoint no longer blocks a request
+        // the live probe sizes under the cap (e.g. probed mid-prefill: 0)
+        let stale_big = DecodeCheckpoint {
+            prompt: vec![1],
+            generated: vec![2],
+            spec_proposed: 0,
+            spec_accepted: 0,
+            kv: snap(100),
+        };
+        let mut in_flight: HashMap<u64, Pending> = HashMap::new();
+        in_flight.insert(9, pending(Some(stale_big)));
+        assert_eq!(rebalance_candidate(&in_flight, Some(cap), None, None), None);
+        let live_zero: HashMap<u64, usize> = [(9u64, 0usize)].into_iter().collect();
+        assert_eq!(
+            rebalance_candidate(&in_flight, Some(cap), Some(&live_zero), None),
+            Some(9)
+        );
+        // a ticket the probe missed falls back to its stale estimates
+        let other: HashMap<u64, usize> = [(42u64, 0usize)].into_iter().collect();
+        assert_eq!(rebalance_candidate(&in_flight, Some(cap), Some(&other), None), None);
     }
 
     #[test]

@@ -103,6 +103,66 @@ impl GapHistogram {
     }
 }
 
+/// Fixed-footprint histogram over ratios in [0, 1] — eleven buckets of
+/// width 0.1 (the last also catching exactly 1.0). Used for per-wave
+/// speculative-decoding acceptance rates: like [`GapHistogram`], it fires
+/// for the life of a cartridge, so it must clone in O(1) to ride worker
+/// checkpoints.
+#[derive(Debug, Clone)]
+pub struct RatioHistogram {
+    buckets: [u64; 11],
+    count: u64,
+    sum: f64,
+}
+
+impl Default for RatioHistogram {
+    fn default() -> Self {
+        RatioHistogram { buckets: [0; 11], count: 0, sum: 0.0 }
+    }
+}
+
+impl RatioHistogram {
+    pub fn record(&mut self, ratio: f64) {
+        let r = ratio.clamp(0.0, 1.0);
+        let idx = ((r * 10.0).floor() as usize).min(10);
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum += r;
+    }
+
+    /// Fold another histogram in (fleet aggregation).
+    pub fn merge(&mut self, other: &RatioHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += *b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Mean recorded ratio (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.sum / self.count as f64
+    }
+
+    /// Fraction of samples at or above `lo` (bucket-granular: `lo` rounds
+    /// down to its 0.1-wide bucket).
+    pub fn fraction_at_least(&self, lo: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let idx = ((lo.clamp(0.0, 1.0) * 10.0).floor() as usize).min(10);
+        let in_range: u64 = self.buckets[idx..].iter().sum();
+        in_range as f64 / self.count as f64
+    }
+}
+
 /// Aggregate serving metrics, printed by the server and the e2e bench.
 #[derive(Debug, Clone, Default)]
 pub struct ServingMetrics {
@@ -149,6 +209,22 @@ pub struct ServingMetrics {
     /// `BENCH_e2e.json`). Log-bucketed ([`GapHistogram`]) because it fires
     /// once per decoded token forever.
     pub itl_step: GapHistogram,
+    /// Draft tokens proposed by the speculative-decoding draft engine.
+    /// Conservation law (pinned by `rust/tests/spec_decode_sim.rs`):
+    /// `spec_proposed == spec_accepted + spec_rollbacks`, always.
+    pub spec_proposed: u64,
+    /// Draft tokens the target verified and accepted into the stream.
+    pub spec_accepted: u64,
+    /// Draft tokens the target rejected; each had its committed KV row
+    /// rolled back ([`truncate_sequence`]). The correction/bonus token the
+    /// target samples alongside is counted in `tokens_generated`, not here.
+    ///
+    /// [`truncate_sequence`]: super::engine::Engine::truncate_sequence
+    pub spec_rollbacks: u64,
+    /// Per-verify-wave acceptance rate (accepted / proposed) distribution.
+    /// Fixed footprint, so it survives worker checkpoints — a dead
+    /// cartridge's acceptance profile is not lost with it.
+    pub spec_accept: RatioHistogram,
     pub batch_waste: f64,
     pub interface_bytes: u64,
     pub device_macs: u64,
@@ -164,6 +240,16 @@ impl ServingMetrics {
             return 0.0;
         }
         self.tokens_generated as f64 / self.wall_s
+    }
+
+    /// Lifetime speculative-decoding acceptance rate
+    /// (`spec_accepted / spec_proposed`; 0.0 when nothing was proposed).
+    /// The per-wave distribution is in [`spec_accept`](Self::spec_accept).
+    pub fn spec_acceptance(&self) -> f64 {
+        if self.spec_proposed == 0 {
+            return 0.0;
+        }
+        self.spec_accepted as f64 / self.spec_proposed as f64
     }
 
     /// Clone the counters and ledgers, leaving the per-sample latency
@@ -188,6 +274,10 @@ impl ServingMetrics {
             ttft: LatencyRecorder::default(),
             itl: LatencyRecorder::default(),
             itl_step: self.itl_step.clone(),
+            spec_proposed: self.spec_proposed,
+            spec_accepted: self.spec_accepted,
+            spec_rollbacks: self.spec_rollbacks,
+            spec_accept: self.spec_accept.clone(),
             batch_waste: self.batch_waste,
             interface_bytes: self.interface_bytes,
             device_macs: self.device_macs,
@@ -217,6 +307,10 @@ impl ServingMetrics {
         self.ttft.merge(&other.ttft);
         self.itl.merge(&other.itl);
         self.itl_step.merge(&other.itl_step);
+        self.spec_proposed += other.spec_proposed;
+        self.spec_accepted += other.spec_accepted;
+        self.spec_rollbacks += other.spec_rollbacks;
+        self.spec_accept.merge(&other.spec_accept);
         self.interface_bytes += other.interface_bytes;
         self.device_macs += other.device_macs;
         self.traffic.add(&other.traffic);
@@ -230,8 +324,9 @@ impl ServingMetrics {
     pub fn report(&self) -> String {
         format!(
             "requests={} prefill_tokens={} prefill_skipped={} restored={} resumed={} \
-             migrated_out={} decode_tokens={} mixed_waves={} prefill_chunks={} wall={:.2}s \
-             decode_throughput={:.1} tok/s ttft_p50={:.1}ms ttft_p95={:.1}ms \
+             migrated_out={} decode_tokens={} mixed_waves={} prefill_chunks={} \
+             spec_proposed={} spec_accepted={} spec_rollbacks={} spec_accept_rate={:.2} \
+             wall={:.2}s decode_throughput={:.1} tok/s ttft_p50={:.1}ms ttft_p95={:.1}ms \
              itl_p50={:.2}ms itl_p95={:.2}ms itl_step_p99={:.2}ms batch_waste={:.1}% \
              interface={:.2} MB device_macs={:.2}G",
             self.requests_completed,
@@ -243,6 +338,10 @@ impl ServingMetrics {
             self.tokens_generated,
             self.mixed_waves,
             self.prefill_chunks,
+            self.spec_proposed,
+            self.spec_accepted,
+            self.spec_rollbacks,
+            self.spec_acceptance(),
             self.wall_s,
             self.decode_tok_per_s(),
             self.ttft.percentile(50.0) * 1e3,
@@ -446,6 +545,59 @@ mod tests {
         tiny.record(1e-9);
         assert_eq!(tiny.count(), 2);
         assert!(tiny.percentile(100.0) <= 4e-6);
+    }
+
+    #[test]
+    fn ratio_histogram_buckets_means_and_merges() {
+        let mut h = RatioHistogram::default();
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.fraction_at_least(0.0), 0.0);
+        h.record(0.0);
+        h.record(0.25);
+        h.record(0.25);
+        h.record(1.0); // exactly 1.0 lands in the top bucket, not past it
+        assert_eq!(h.count(), 4);
+        assert!((h.mean() - 0.375).abs() < 1e-9);
+        assert!((h.fraction_at_least(0.2) - 0.75).abs() < 1e-9);
+        assert!((h.fraction_at_least(1.0) - 0.25).abs() < 1e-9);
+        // out-of-range samples clamp instead of panicking
+        h.record(-0.5);
+        h.record(7.0);
+        assert_eq!(h.count(), 6);
+        let mut other = RatioHistogram::default();
+        other.record(0.5);
+        h.merge(&other);
+        assert_eq!(h.count(), 7);
+    }
+
+    #[test]
+    fn spec_counters_sum_and_survive_counter_snapshots() {
+        let mut a = ServingMetrics {
+            spec_proposed: 10,
+            spec_accepted: 7,
+            spec_rollbacks: 3,
+            ..Default::default()
+        };
+        a.spec_accept.record(0.7);
+        let b = ServingMetrics {
+            spec_proposed: 4,
+            spec_accepted: 1,
+            spec_rollbacks: 3,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.spec_proposed, 14);
+        assert_eq!(a.spec_accepted, 8);
+        assert_eq!(a.spec_rollbacks, 6);
+        assert_eq!(a.spec_proposed, a.spec_accepted + a.spec_rollbacks);
+        assert!((a.spec_acceptance() - 8.0 / 14.0).abs() < 1e-9);
+        // the checkpoint path keeps the fixed-footprint speculation metrics
+        let c = a.clone_counters();
+        assert_eq!(c.spec_proposed, 14);
+        assert_eq!(c.spec_accept.count(), 1);
+        assert!(a.report().contains("spec_accept_rate=0.57"));
+        // draft-less metrics read as a clean zero, not NaN
+        assert_eq!(ServingMetrics::default().spec_acceptance(), 0.0);
     }
 
     #[test]

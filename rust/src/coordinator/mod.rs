@@ -17,6 +17,16 @@
 //!   synchronously so it is unit-testable without threads; greedy outputs
 //!   are byte-identical for every chunk budget
 //!   (`rust/tests/continuous_batching_sim.rs`).
+//! * [`spec`] — draft-cartridge speculative decoding: a scheduler built
+//!   over [`CartridgeEngines::with_draft`](spec::CartridgeEngines::with_draft)
+//!   pairs the target engine with a smaller draft engine; each greedy
+//!   decoding sequence proposes up to [`SpecOpts::depth`](spec::SpecOpts)
+//!   tokens per iteration and the target verifies the whole chain in one
+//!   batched wave (accept the agreeing prefix + one correction token —
+//!   byte-identical to vanilla greedy by construction; rejected KV rows
+//!   roll back via `PagedKvCache::truncate_seq` without touching
+//!   shared/COW pages). A rolling-acceptance controller adapts the depth
+//!   per sequence. Pinned by `rust/tests/spec_decode_sim.rs`.
 //! * [`worker`] — one cartridge: a scheduler (and its non-Send device) on
 //!   its own thread, supervised over channels.
 //! * [`fleet`] — the multi-cartridge coordinator: N workers behind a shared
@@ -64,6 +74,7 @@ pub mod metrics;
 pub mod request;
 pub mod scheduler;
 pub mod server;
+pub mod spec;
 pub mod worker;
 pub mod workload;
 
@@ -74,4 +85,5 @@ pub use fleet::{
 pub use metrics::{CartridgeMetrics, FleetMetrics, ServingMetrics};
 pub use request::{DecodeCheckpoint, GenRequest, GenResult};
 pub use server::Server;
+pub use spec::{CartridgeEngines, SpecOpts};
 pub use worker::{CartridgeId, CheckpointReport, Worker, WorkerEvent, WorkerMsg};

@@ -37,6 +37,15 @@ pub struct GenResult {
     pub skipped_prompt_tokens: usize,
     pub tokens: Vec<u32>,
     pub text: String,
+    /// Draft tokens proposed for this request by speculative decoding
+    /// (0 when the serving cartridge had no draft engine, the request
+    /// sampled stochastically, or speculation was disabled).
+    pub spec_proposed: u64,
+    /// Of [`spec_proposed`](GenResult::spec_proposed), the draft tokens the
+    /// target verified and accepted; the rest were rolled back. Outputs are
+    /// byte-identical either way — these only measure how much decode the
+    /// draft cartridge absorbed.
+    pub spec_accepted: u64,
     /// Queue-entry → first generated token.
     pub ttft_s: f64,
     /// Mean inter-token latency over the decode phase.
@@ -67,6 +76,14 @@ pub enum FinishReason {
 /// checkpointed decode step instead of re-prefilling. Live migration
 /// exports a fresher checkpoint on demand, by reference where the target
 /// already caches the prompt prefix.
+///
+/// Speculative decoding never leaks into a checkpoint: draft proposals are
+/// verified and either accepted or rolled back *within* one scheduler
+/// step, while checkpoints and exports run between steps — so `kv.len`
+/// always reflects accepted tokens only, and a restoring cartridge (with
+/// or without its own draft engine) resumes byte-identically. The
+/// restoring side's [`SpecDecoder`](super::spec::SpecDecoder) rebuilds its
+/// draft context lazily on the next proposal.
 #[derive(Debug, Clone)]
 pub struct DecodeCheckpoint {
     /// Tokenized prompt.
@@ -77,6 +94,16 @@ pub struct DecodeCheckpoint {
     /// Committed KV rows; `kv.len == prompt.len() + generated.len() - 1`
     /// (the newest generated token is sampled but not yet appended).
     pub kv: KvSnapshot,
+    /// Speculative-decoding telemetry accumulated so far, carried across
+    /// migration/requeue so [`GenResult::spec_proposed`] /
+    /// [`GenResult::spec_accepted`] stay end-to-end totals for the request
+    /// (both 0 when it never speculated). Pure counters — they do not
+    /// affect the restore.
+    ///
+    /// [`GenResult::spec_proposed`]: super::request::GenResult::spec_proposed
+    /// [`GenResult::spec_accepted`]: super::request::GenResult::spec_accepted
+    pub spec_proposed: u64,
+    pub spec_accepted: u64,
 }
 
 impl DecodeCheckpoint {

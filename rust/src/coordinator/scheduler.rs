@@ -1,7 +1,7 @@
 //! Iteration-level continuous-batching scheduler: step-level admission,
-//! chunked prefill, mixed prefill+decode waves, in-flight completion — the
-//! coordination pattern of vLLM/Sarathi-class servers, driven synchronously
-//! so it is unit-testable without threads.
+//! chunked prefill, mixed prefill+decode waves, speculative verify chains,
+//! in-flight completion — the coordination pattern of vLLM/Sarathi-class
+//! servers, driven synchronously so it is unit-testable without threads.
 //!
 //! ## Why iteration-level
 //!
@@ -27,6 +27,21 @@
 //! the same property [`KvSnapshot`](crate::host::kv_cache::KvSnapshot)
 //! by-reference restores already rely on. Pinned by
 //! `rust/tests/continuous_batching_sim.rs`.
+//!
+//! ## Speculative decoding
+//!
+//! A scheduler built over [`CartridgeEngines::with_draft`] additionally
+//! runs the [`spec`](super::spec) propose→verify loop: each greedy decoding
+//! sequence's single decode row becomes a **verify chain** of up to
+//! `SpecOpts::depth + 1` rows (the pending token plus the draft's
+//! proposals) riding the same mixed waves, and the accepted prefix lands
+//! several tokens per iteration. Rejected rows roll back inside the step,
+//! so exports, checkpoints, and migrations never observe draft state, and
+//! greedy outputs stay byte-identical to a draft-less run
+//! (`rust/tests/spec_decode_sim.rs`).
+//!
+//! [`CartridgeEngines::with_draft`]: super::spec::CartridgeEngines::with_draft
+//! [`SpecOpts::depth`]: super::spec::SpecOpts::depth
 //!
 //! # Example
 //!
@@ -55,6 +70,7 @@ use super::batcher::{plan_mixed, BatchStats};
 use super::engine::Engine;
 use super::metrics::ServingMetrics;
 use super::request::{DecodeCheckpoint, FinishReason, GenRequest, GenResult};
+use super::spec::{CartridgeEngines, SpecDecoder, SpecOpts, VerifyOutcome};
 use crate::host::kv_cache::SeqId;
 use crate::host::sampling::sample;
 use crate::host::tokenizer::{ByteTokenizer, EOS};
@@ -82,6 +98,12 @@ pub struct SchedulerOpts {
     /// the iteration it is admitted (the pre-chunking behaviour). Greedy
     /// outputs are byte-identical for every budget.
     pub prefill_chunk_tokens: usize,
+    /// Speculative-decoding configuration. Only takes effect when the
+    /// scheduler was built with a draft engine
+    /// ([`Scheduler::with_engines`] over
+    /// [`CartridgeEngines::with_draft`]); `depth: 0` disables speculation
+    /// even then. Greedy outputs are byte-identical either way.
+    pub spec: SpecOpts,
 }
 
 impl Default for SchedulerOpts {
@@ -91,6 +113,7 @@ impl Default for SchedulerOpts {
             seed: 0x17A,
             prefix_cache_pages: 8192,
             prefill_chunk_tokens: 64,
+            spec: SpecOpts::default(),
         }
     }
 }
@@ -114,6 +137,10 @@ struct Active {
     resumed_len: usize,
     /// last sampled token (input for the next decode step)
     next_token: u32,
+    /// draft tokens proposed / accepted for this request (speculative
+    /// decoding telemetry; both 0 without a draft engine)
+    spec_proposed: u64,
+    spec_accepted: u64,
     enqueued: Instant,
     first_token_at: Option<Instant>,
     /// when the previous token was sampled (per-token gap accounting —
@@ -134,10 +161,13 @@ impl Active {
 }
 
 /// What one device row of a mixed iteration is for: a decode step of
-/// sequence `active[i]`, or one prompt position of its prefill chunk.
+/// sequence `active[i]`, one row of its speculative verify chain (the
+/// pending token followed by the draft proposals, contiguous and in
+/// ascending position order), or one prompt position of its prefill chunk.
 #[derive(Clone, Copy)]
 enum Row {
     Decode(usize),
+    Verify(usize),
     Prefill(usize),
 }
 
@@ -156,9 +186,13 @@ impl QueueEntry {
     }
 }
 
-/// Synchronous continuous-batching scheduler over one engine.
+/// Synchronous continuous-batching scheduler over one engine (plus an
+/// optional draft engine for speculative decoding).
 pub struct Scheduler {
     engine: Engine,
+    /// Draft side of speculative decoding (None = no draft engine, or
+    /// `opts.spec.depth == 0`).
+    spec: Option<SpecDecoder>,
     tokenizer: ByteTokenizer,
     queue: VecDeque<QueueEntry>,
     active: Vec<Active>,
@@ -171,13 +205,40 @@ pub struct Scheduler {
 
 impl Scheduler {
     pub fn new(engine: Engine, opts: SchedulerOpts) -> Scheduler {
+        Scheduler::with_engines(CartridgeEngines::from(engine), opts)
+    }
+
+    /// Build over a target engine optionally paired with a draft engine
+    /// ([`CartridgeEngines::with_draft`]): greedy requests then decode
+    /// speculatively — the draft proposes up to [`SpecOpts::depth`] tokens
+    /// per iteration and the target verifies them in one batched chain.
+    /// A draft whose vocabulary differs from the target's cannot propose
+    /// meaningful token ids; it is rejected with a warning and the
+    /// scheduler runs draft-less (outputs are identical either way).
+    pub fn with_engines(engines: CartridgeEngines, opts: SchedulerOpts) -> Scheduler {
+        let CartridgeEngines { target: mut engine, draft } = engines;
         let max = if opts.max_active == 0 { engine.max_batch() } else { opts.max_active };
-        let mut engine = engine;
         if opts.prefix_cache_pages > 0 {
             engine.enable_prefix_cache(opts.prefix_cache_pages);
         }
+        let spec = match draft {
+            Some(d) if opts.spec.depth > 0 => {
+                if d.dims().vocab == engine.dims().vocab {
+                    Some(SpecDecoder::new(d, opts.spec))
+                } else {
+                    eprintln!(
+                        "[ita-spec] draft vocab {} != target vocab {}; speculation disabled",
+                        d.dims().vocab,
+                        engine.dims().vocab
+                    );
+                    None
+                }
+            }
+            _ => None,
+        };
         Scheduler {
             engine,
+            spec,
             tokenizer: ByteTokenizer::new(),
             queue: VecDeque::new(),
             active: Vec::with_capacity(max),
@@ -220,26 +281,59 @@ impl Scheduler {
     }
 
     /// One scheduling iteration: admit newly arrived requests, compose a
-    /// mixed wave set — one decode row per decoding sequence plus prefill
-    /// chunk rows under the token budget — run it, sample, and harvest
-    /// completions.
+    /// mixed wave set — one decode row (or speculative verify chain) per
+    /// decoding sequence plus prefill chunk rows under the token budget —
+    /// run it, sample, and harvest completions.
     pub fn step(&mut self) -> Result<Vec<GenResult>> {
         let mut done = self.admit();
         if self.active.is_empty() {
             return Ok(done);
         }
 
-        // compose this iteration's device rows: decode rows first (every
-        // decoding sequence advances one token), then prefill-chunk rows
-        // under the token budget, FCFS over still-prefilling sequences
+        // compose this iteration's device rows: decode/verify rows first
+        // (every decoding sequence advances at least one token), then
+        // prefill-chunk rows under the token budget, FCFS over
+        // still-prefilling sequences
         let mut ids: Vec<SeqId> = Vec::new();
         let mut tokens: Vec<u32> = Vec::new();
         let mut rows: Vec<Row> = Vec::new();
-        for (i, a) in self.active.iter().enumerate() {
-            if a.decoding() {
-                ids.push(a.seq);
-                tokens.push(a.next_token);
+        let mut drafts: Vec<Vec<u32>> = vec![Vec::new(); self.active.len()];
+        for i in 0..self.active.len() {
+            if !self.active[i].decoding() {
+                continue;
+            }
+            let (seq, next) = (self.active[i].seq, self.active[i].next_token);
+            if let Some(spec) = self.spec.as_mut() {
+                let a = &self.active[i];
+                // only greedy requests speculate (acceptance is exact token
+                // equality; stochastic sampling would need distribution-
+                // preserving rejection sampling), and only while more than
+                // one token of budget remains
+                let remaining = a.req.max_new_tokens.saturating_sub(a.generated.len());
+                if a.req.sampling.temperature <= 0.0 && remaining > 1 {
+                    match spec.propose(seq, &a.prompt, &a.generated, remaining - 1) {
+                        Ok(d) => drafts[i] = d,
+                        // a draft-engine failure degrades that sequence to
+                        // plain decode; the target engine is untouched
+                        Err(e) => eprintln!(
+                            "[ita-spec] draft proposal failed for request {}: {e:#}; \
+                             plain decode",
+                            a.req.id
+                        ),
+                    }
+                }
+            }
+            ids.push(seq);
+            tokens.push(next);
+            if drafts[i].is_empty() {
                 rows.push(Row::Decode(i));
+            } else {
+                rows.push(Row::Verify(i));
+                for &t in &drafts[i] {
+                    ids.push(seq);
+                    tokens.push(t);
+                    rows.push(Row::Verify(i));
+                }
             }
         }
         let decode_rows = rows.len();
@@ -270,57 +364,148 @@ impl Scheduler {
         self.batch_stats.record_mixed(&p);
 
         // run the waves; sample decode rows and the final prompt row of
-        // any sequence whose prefill completes this iteration. Rows of one
-        // sequence stay in ascending position order across waves, and the
-        // engine commits each wave before the next, so a chunk split
-        // across waves resumes at the committed absolute position.
-        let mut sampled: Vec<(usize, u32, bool)> = Vec::new(); // (idx, token, first)
+        // any sequence whose prefill completes this iteration, exactly as
+        // before speculation existed. Rows of one sequence stay in
+        // ascending position order across waves, and the engine commits
+        // each wave before the next, so a chunk (or verify chain) split
+        // across waves resumes at the committed absolute position. Only
+        // VERIFY rows buffer their logits past the wave loop: acceptance
+        // must walk a whole chain in order, and a chain may span waves —
+        // everything else samples inline, so the draft-less hot path pays
+        // no extra copies. Verify sampling is greedy (it never draws from
+        // the RNG), so deferring it cannot shift the RNG stream of
+        // stochastic rows.
+        let mut sampled: Vec<(usize, Vec<u32>, bool)> = Vec::new(); // (idx, tokens, first)
+        let mut chains: Vec<Vec<Vec<f32>>> = vec![Vec::new(); self.active.len()];
         let mut offset = 0;
         for w in &p.plan.waves {
             let end = offset + w.rows;
             let logits = self.engine.forward(&ids[offset..end], &tokens[offset..end])?;
+            let v = logits.cols;
             for r in 0..w.rows {
-                let row = &logits.data[r * logits.cols..(r + 1) * logits.cols];
+                let row = &logits.data[r * v..(r + 1) * v];
                 match rows[offset + r] {
                     Row::Decode(i) => {
                         let tok = sample(row, &self.active[i].req.sampling, &mut self.rng);
-                        sampled.push((i, tok, false));
+                        sampled.push((i, vec![tok], false));
                     }
+                    Row::Verify(i) => chains[i].push(row.to_vec()),
                     Row::Prefill(i) => {
                         self.active[i].prefilled += 1;
                         self.metrics.tokens_prefilled += 1;
                         if self.active[i].decoding() {
                             // final prompt row: its logits seed the stream
                             let tok = sample(row, &self.active[i].req.sampling, &mut self.rng);
-                            sampled.push((i, tok, true));
+                            sampled.push((i, vec![tok], true));
                         }
                     }
                 }
             }
             offset = end;
         }
-        self.metrics.tokens_generated += sampled.len() as u64;
+
+        // acceptance per verify chain: the accepted draft prefix plus the
+        // target's correction/bonus token joins the stream; rejected rows
+        // roll back inside accept_verified
+        for i in 0..chains.len() {
+            if chains[i].is_empty() {
+                continue;
+            }
+            let out = self.accept_verified(i, &drafts[i], &chains[i])?;
+            sampled.push((i, out, false));
+        }
 
         // apply sampled tokens; publish freshly completed prefills
         let now = Instant::now();
-        for &(i, tok, first) in &sampled {
-            let a = &mut self.active[i];
-            a.generated.push(tok);
-            a.next_token = tok;
-            if first {
+        for (i, toks, first) in &sampled {
+            let n = toks.len() as u64;
+            self.metrics.tokens_generated += n;
+            let a = &mut self.active[*i];
+            a.generated.extend_from_slice(toks);
+            a.next_token = *toks.last().expect("sampled entries are non-empty");
+            if *first {
                 a.first_token_at = Some(now);
                 self.metrics.ttft.record(now.duration_since(a.enqueued).as_secs_f64());
                 // prefill just completed: publish the prompt's KV for
                 // cross-request reuse
                 self.engine.register_prefix(a.seq, &a.prompt);
             } else if let Some(prev) = a.last_token_at {
-                self.metrics.itl_step.record(now.duration_since(prev).as_secs_f64());
+                // one gap sample per accepted token, not per wave: a
+                // verify chain landing n tokens at once records n gaps of
+                // wave_time / n, so ITL percentiles stay comparable
+                // between speculative and vanilla runs
+                let gap = now.duration_since(prev).as_secs_f64() / n as f64;
+                for _ in 0..n {
+                    self.metrics.itl_step.record(gap);
+                }
             }
             a.last_token_at = Some(now);
         }
 
         self.harvest(&mut done, now);
         Ok(done)
+    }
+
+    /// Walk one sequence's verify-chain logits: greedily sample each row
+    /// in order, accept draft tokens while the target agrees, stop at the
+    /// first disagreement (the target's own sample is the correction) or
+    /// after the last row (the bonus token). The emitted chain is exactly
+    /// the greedy chain `tokenᵢ₊₁ = argmax(logits after tokens ..ᵢ)`, so
+    /// outputs are byte-identical to vanilla decode by construction. Clips
+    /// at EOS / the token budget precisely where sequential decode would
+    /// have stopped, rolls the rejected rows out of the target KV, and
+    /// reconciles the draft shadow. Returns the tokens to append (≥ 1).
+    fn accept_verified(
+        &mut self,
+        i: usize,
+        draft: &[u32],
+        chain: &[Vec<f32>],
+    ) -> Result<Vec<u32>> {
+        debug_assert_eq!(chain.len(), draft.len() + 1);
+        let a = &self.active[i];
+        let mut out: Vec<u32> = Vec::with_capacity(chain.len());
+        for (j, logits) in chain.iter().enumerate() {
+            let tok = sample(logits, &a.req.sampling, &mut self.rng);
+            out.push(tok);
+            if !(j < draft.len() && tok == draft[j]) {
+                break;
+            }
+        }
+        // matched draft prefix; the final element is the target's own
+        // correction (mismatch) or bonus (all matched) token
+        let matched = out.len() - 1;
+        // stop conditions, applied exactly where sequential decode stops
+        if a.req.stop_at_eos {
+            if let Some(pos) = out.iter().position(|&t| t == EOS) {
+                out.truncate(pos + 1);
+            }
+        }
+        out.truncate(a.req.max_new_tokens.saturating_sub(a.generated.len()));
+        debug_assert!(!out.is_empty(), "decoding sequences always have budget >= 1");
+        let applied = out.len();
+        // of the applied tokens, those matching the draft were accepted;
+        // conservation (proposed == accepted + rejected) holds by
+        // construction and is pinned by rust/tests/spec_decode_sim.rs
+        let accepted = matched.min(applied);
+        let proposed = draft.len();
+        let stream_len = a.prompt.len() + a.generated.len();
+        let seq = a.seq;
+        // the waves committed proposed + 1 rows for this sequence; only
+        // `applied` belong to the new stream (its newest token is sampled
+        // but not yet consumed — the standard decode invariant), so roll
+        // the rest back without disturbing shared/COW pages
+        self.engine.truncate_sequence(seq, stream_len + applied - 1)?;
+        self.metrics.spec_proposed += proposed as u64;
+        self.metrics.spec_accepted += accepted as u64;
+        self.metrics.spec_rollbacks += (proposed - accepted) as u64;
+        self.metrics.spec_accept.record(accepted as f64 / proposed.max(1) as f64);
+        if let Some(spec) = self.spec.as_mut() {
+            spec.observe(seq, VerifyOutcome { stream_len, applied, accepted, proposed })?;
+        }
+        let a = &mut self.active[i];
+        a.spec_proposed += proposed as u64;
+        a.spec_accepted += accepted as u64;
+        Ok(out)
     }
 
     /// Sweep completed requests out of the active set. Stable removal, so
@@ -373,6 +558,8 @@ impl Scheduler {
                         generated: Vec::new(),
                         resumed_len: 0,
                         next_token: 0, // set when the final prompt row samples
+                        spec_proposed: 0,
+                        spec_accepted: 0,
                         enqueued,
                         first_token_at: None,
                         last_token_at: None,
@@ -398,7 +585,7 @@ impl Scheduler {
     /// evicted between probe and restore, fall back to a plain re-prefill —
     /// deterministic decode regenerates the same stream either way.
     fn resume(&mut self, req: GenRequest, ckpt: DecodeCheckpoint, enqueued: Instant) {
-        let DecodeCheckpoint { prompt, generated, kv } = ckpt;
+        let DecodeCheckpoint { prompt, generated, kv, spec_proposed, spec_accepted } = ckpt;
         if generated.is_empty() {
             // defensive: a checkpoint without a sampled token has no decode
             // state worth restoring
@@ -439,6 +626,10 @@ impl Scheduler {
             next_token: next,
             resumed_len: generated.len(),
             generated,
+            // speculation telemetry survives the move — GenResult reports
+            // end-to-end totals for the request, not per-cartridge slices
+            spec_proposed,
+            spec_accepted,
             enqueued,
             first_token_at: Some(now),
             last_token_at: Some(now),
@@ -471,6 +662,12 @@ impl Scheduler {
         let i = self.active.iter().position(|a| a.req.id == ticket)?;
         // stable removal: `active` stays in admission order (see harvest)
         let a = self.active.remove(i);
+        // in-flight draft state is transient (verified-or-rolled-back
+        // within each step), so exports between steps just drop the
+        // sequence's draft shadow — the checkpoint never carries it
+        if let Some(spec) = self.spec.as_mut() {
+            spec.drop_seq(a.seq);
+        }
         if a.generated.is_empty() {
             // still prefilling: the partial KV is freed and the request
             // restarts cleanly elsewhere (byte-identical outputs either
@@ -488,7 +685,13 @@ impl Scheduler {
             .expect("active sequences snapshot cleanly");
         self.engine.free_sequence(a.seq);
         self.metrics.migrated_out += 1;
-        let ckpt = DecodeCheckpoint { prompt: a.prompt, generated: a.generated, kv };
+        let ckpt = DecodeCheckpoint {
+            prompt: a.prompt,
+            generated: a.generated,
+            kv,
+            spec_proposed: a.spec_proposed,
+            spec_accepted: a.spec_accepted,
+        };
         Some((a.req, Some(ckpt)))
     }
 
@@ -512,6 +715,8 @@ impl Scheduler {
                     prompt: a.prompt.clone(),
                     generated: a.generated.clone(),
                     kv,
+                    spec_proposed: a.spec_proposed,
+                    spec_accepted: a.spec_accepted,
                 };
                 (a.req.id, ckpt)
             })
@@ -525,6 +730,36 @@ impl Scheduler {
         self.engine.cached_prefix_len(&self.tokenizer.encode(prompt))
     }
 
+    /// Live per-request by-value KV export sizes, in serialized wire bytes
+    /// ([`KvSnapshot::wire_bytes`](crate::host::kv_cache::KvSnapshot::wire_bytes)),
+    /// keyed by wire id — the dispatcher's migration-cost **re-probe**. A
+    /// periodic checkpoint's size is up to one checkpoint interval stale
+    /// (a long decode grows a page every 16 tokens); this is exact as of
+    /// the last committed step, computed from the sequence length alone
+    /// (no KV is copied). Mid-prefill and still-queued fresh requests
+    /// report 0 — their export ships no KV at all; queued resume entries
+    /// report their checkpoint's size.
+    pub fn live_kv_bytes(&self) -> Vec<(u64, usize)> {
+        let dims = self.engine.dims();
+        let queued = self.queue.iter().map(|e| match e {
+            QueueEntry::Fresh(req, _) => (req.id, 0),
+            QueueEntry::Resume(req, ckpt, _) => (req.id, ckpt.kv.wire_bytes()),
+        });
+        let active = self.active.iter().map(move |a| {
+            let bytes = if a.generated.is_empty() {
+                0 // still prefilling: exports travel checkpoint-free
+            } else {
+                crate::host::kv_cache::KvSnapshot::wire_bytes_for(
+                    dims.n_layers,
+                    dims.d_model,
+                    self.engine.seq_len(a.seq),
+                )
+            };
+            (a.req.id, bytes)
+        });
+        queued.chain(active).collect()
+    }
+
     /// Radix-cache occupancy for checkpoint piggybacking (`None` when the
     /// prefix cache is disabled — the dispatcher then never prunes).
     pub fn prefix_occupancy(&self) -> Option<Vec<Vec<u32>>> {
@@ -533,6 +768,9 @@ impl Scheduler {
 
     fn finish(&mut self, a: Active, now: Instant) -> GenResult {
         self.engine.free_sequence(a.seq);
+        if let Some(spec) = self.spec.as_mut() {
+            spec.drop_seq(a.seq);
+        }
         self.metrics.requests_completed += 1;
         let total = now.duration_since(a.enqueued).as_secs_f64();
         let decode_time = a
@@ -556,6 +794,8 @@ impl Scheduler {
             skipped_prompt_tokens: a.skipped,
             text: self.tokenizer.decode(&a.generated),
             tokens: a.generated,
+            spec_proposed: a.spec_proposed,
+            spec_accepted: a.spec_accepted,
             ttft_s: a
                 .first_token_at
                 .map(|t| t.duration_since(a.enqueued).as_secs_f64())
@@ -696,6 +936,145 @@ mod tests {
         for chunk in [1, 5, 16, 1024] {
             assert_eq!(run(chunk), sequential, "chunk budget {chunk} changed outputs");
         }
+    }
+
+    #[test]
+    fn speculative_scheduler_matches_vanilla_and_conserves_counters() {
+        use crate::coordinator::spec::{CartridgeEngines, SpecOpts};
+        let tiny = crate::config::ModelConfig::TINY;
+        let reqs = |s: &mut Scheduler| {
+            for i in 0..3 {
+                let mut r = GenRequest::greedy(i, &format!("speculate about tensors {i}"), 24);
+                r.stop_at_eos = false;
+                s.submit(r);
+            }
+        };
+        let mut vanilla = Scheduler::new(Engine::synthetic(&tiny, 21), SchedulerOpts::default());
+        reqs(&mut vanilla);
+        let mut want = vanilla.run_to_completion().unwrap();
+        want.sort_by_key(|r| r.id);
+
+        // a perfect draft (same weights) and an unrelated draft must both
+        // be byte-identical to vanilla — acceptance only changes speed
+        for draft_seed in [21u64, 999] {
+            let engines = CartridgeEngines::with_draft(
+                Engine::synthetic(&tiny, 21),
+                Engine::synthetic(&tiny, draft_seed),
+            );
+            let opts = SchedulerOpts {
+                spec: SpecOpts { depth: 4, adaptive: true },
+                ..SchedulerOpts::default()
+            };
+            let mut s = Scheduler::with_engines(engines, opts);
+            reqs(&mut s);
+            let mut got = s.run_to_completion().unwrap();
+            got.sort_by_key(|r| r.id);
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.tokens, w.tokens, "draft seed {draft_seed} changed outputs");
+            }
+            let m = s.metrics();
+            assert!(m.spec_proposed > 0, "no speculation happened");
+            assert_eq!(
+                m.spec_proposed,
+                m.spec_accepted + m.spec_rollbacks,
+                "draft-token conservation violated"
+            );
+            assert!(m.spec_accept.count() > 0, "acceptance histogram is empty");
+            // per-request counters reconcile with the cartridge totals
+            let (p, a): (u64, u64) = got
+                .iter()
+                .fold((0, 0), |(p, a), r| (p + r.spec_proposed, a + r.spec_accepted));
+            assert_eq!(p, m.spec_proposed);
+            assert_eq!(a, m.spec_accepted);
+            if draft_seed == 21 {
+                // identical weights agree on every greedy token
+                assert_eq!(m.spec_rollbacks, 0, "perfect draft should never be rejected");
+                assert!(m.spec_acceptance() > 0.99);
+            }
+            // no KV leaked on either engine
+            assert_eq!(s.engine().cache.stats().2, 0);
+        }
+    }
+
+    #[test]
+    fn speculation_respects_eos_and_token_budget() {
+        use crate::coordinator::spec::{CartridgeEngines, SpecOpts};
+        let tiny = crate::config::ModelConfig::TINY;
+        // stop_at_eos on and a tiny budget: a deep verify chain must clip
+        // exactly where sequential decode stops
+        let run = |spec: bool| {
+            let engines = if spec {
+                CartridgeEngines::with_draft(
+                    Engine::synthetic(&tiny, 4),
+                    Engine::synthetic(&tiny, 4),
+                )
+            } else {
+                CartridgeEngines::from(Engine::synthetic(&tiny, 4))
+            };
+            let opts = SchedulerOpts {
+                spec: SpecOpts { depth: 8, adaptive: false },
+                ..SchedulerOpts::default()
+            };
+            let mut s = Scheduler::with_engines(engines, opts);
+            for (i, max) in [(0u64, 1usize), (1, 2), (2, 3), (3, 64)] {
+                s.submit(GenRequest::greedy(i, "clip me", max));
+            }
+            let mut r = s.run_to_completion().unwrap();
+            r.sort_by_key(|x| x.id);
+            r.into_iter().map(|x| (x.tokens, x.finish)).collect::<Vec<_>>()
+        };
+        assert_eq!(run(true), run(false), "speculation changed stop behaviour");
+    }
+
+    #[test]
+    fn non_greedy_requests_never_speculate() {
+        use crate::coordinator::spec::{CartridgeEngines, SpecOpts};
+        let tiny = crate::config::ModelConfig::TINY;
+        let engines = CartridgeEngines::with_draft(
+            Engine::synthetic(&tiny, 8),
+            Engine::synthetic(&tiny, 8),
+        );
+        let opts = SchedulerOpts {
+            spec: SpecOpts { depth: 4, adaptive: false },
+            ..SchedulerOpts::default()
+        };
+        let mut s = Scheduler::with_engines(engines, opts);
+        s.submit(GenRequest {
+            id: 0,
+            prompt: "stochastic".into(),
+            max_new_tokens: 8,
+            sampling: crate::host::sampling::SamplingParams::top_k(5, 0.8),
+            stop_at_eos: false,
+        });
+        let r = s.run_to_completion().unwrap();
+        assert_eq!(r[0].tokens.len(), 8);
+        assert_eq!(r[0].spec_proposed, 0);
+        assert_eq!(s.metrics().spec_proposed, 0, "stochastic request speculated");
+    }
+
+    #[test]
+    fn live_kv_bytes_reports_exact_snapshot_sizes() {
+        let opts = SchedulerOpts { prefill_chunk_tokens: 4, ..SchedulerOpts::default() };
+        let mut s = Scheduler::new(Engine::synthetic(&crate::config::ModelConfig::TINY, 6), opts);
+        let mut long = GenRequest::greedy(0, "a decoding request", 32);
+        long.stop_at_eos = false;
+        s.submit(long);
+        s.submit(GenRequest::greedy(1, "a prompt still prefilling when probed", 4));
+        for _ in 0..6 {
+            s.step().unwrap();
+        }
+        let sizes: std::collections::HashMap<u64, usize> =
+            s.live_kv_bytes().into_iter().collect();
+        // request 0 is decoding: the report must equal the actual by-value
+        // snapshot it would export right now
+        let seq0 = s.active.iter().find(|a| a.req.id == 0).unwrap().seq;
+        let snap = s.engine().cache.snapshot_seq(seq0, 0).unwrap();
+        assert_eq!(sizes[&0], snap.wire_bytes());
+        assert!(sizes[&0] > 32);
+        // request 1 is mid-prefill (chunk 4/38): it would export nothing
+        let a1 = s.active.iter().find(|a| a.req.id == 1).unwrap();
+        assert!(a1.generated.is_empty(), "request 1 finished prefill too fast");
+        assert_eq!(sizes[&1], 0);
     }
 
     #[test]

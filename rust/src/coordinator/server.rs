@@ -17,7 +17,7 @@ use super::fleet::Fleet;
 use super::metrics::ServingMetrics;
 use super::request::GenRequest;
 use super::scheduler::SchedulerOpts;
-use crate::coordinator::engine::Engine;
+use super::spec::CartridgeEngines;
 
 pub use super::fleet::ResultHandle;
 
@@ -28,10 +28,14 @@ pub struct Server {
 
 impl Server {
     /// Start a server. `make_engine` is called on the worker thread (the
-    /// non-Send device is created there).
-    pub fn start<F>(make_engine: F, opts: SchedulerOpts) -> Result<Server>
+    /// non-Send device is created there) and may return either a bare
+    /// [`Engine`](super::engine::Engine) or a
+    /// [`CartridgeEngines`] pairing it with a draft engine for
+    /// speculative decoding.
+    pub fn start<F, B>(make_engine: F, opts: SchedulerOpts) -> Result<Server>
     where
-        F: FnOnce() -> Result<Engine> + Send + 'static,
+        B: Into<CartridgeEngines> + 'static,
+        F: FnOnce() -> Result<B> + Send + 'static,
     {
         // adapt the FnOnce to the fleet's Fn(id) factory; n = 1 means it
         // runs exactly once

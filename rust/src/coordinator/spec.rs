@@ -1,0 +1,481 @@
+//! Draft-cartridge speculative decoding: propose with a small model,
+//! verify with the big one, accept the agreeing prefix.
+//!
+//! ITA cartridges have fixed ROM-embedded weights, so a fleet is naturally
+//! heterogeneous: a small *draft* cartridge and a large *target* cartridge
+//! are just two ASICs (the paper's split-brain design; cf. Cambricon-LLM's
+//! pairing of unequal compute tiles). The target's stateless dataflow makes
+//! k-token verification nearly free — the k verify rows of one sequence
+//! ride the same mixed waves chunked prefill already uses, and one weight
+//! sweep of the (DRAM-streaming) device serves all of them.
+//!
+//! ## Protocol (per decoding sequence, per scheduling iteration)
+//!
+//! 1. **Propose.** The draft engine catches up to the canonical token
+//!    stream (prompt ++ generated), then greedily proposes up to `k` tokens
+//!    `d₁..d_k`.
+//! 2. **Verify.** The target runs `k + 1` rows of the SAME sequence in one
+//!    batched wave: the pending sampled token, then `d₁..d_k`. Row `j`'s
+//!    logits are exactly what vanilla decode would have produced after
+//!    consuming the first `j` draft tokens — prefill/decode determinism in
+//!    absolute position, the same property chunked prefill and by-ref
+//!    migration rest on.
+//! 3. **Accept.** Walk the rows in order, greedily sampling each: accept
+//!    draft tokens while the target agrees, then take the target's own
+//!    token (the *correction* at the first disagreement, or the *bonus*
+//!    after the last row when everything matched). The emitted chain is
+//!    `tokenᵢ₊₁ = argmax(target logits after tokens ..ᵢ)` — **byte-identical
+//!    to vanilla greedy by construction**, whatever the draft proposes.
+//! 4. **Roll back.** KV rows the target committed for rejected draft tokens
+//!    are discarded ([`PagedKvCache::truncate_seq`]) without disturbing
+//!    shared/COW pages; the draft's own KV rolls back the same way.
+//!
+//! Speculation state is **transient**: it exists only inside one scheduler
+//! step, so decode checkpoints, migration exports, and panic-recovery
+//! resumes — which all run between steps — never see an in-flight draft.
+//! A migrated sequence's draft context is rebuilt lazily by the next
+//! catch-up.
+//!
+//! Only greedy requests speculate (stochastic sampling would need
+//! distribution-preserving rejection sampling); others fall back to plain
+//! one-token decode rows transparently.
+//!
+//! [`PagedKvCache::truncate_seq`]: crate::host::kv_cache::PagedKvCache::truncate_seq
+
+use std::collections::HashMap;
+
+use anyhow::{ensure, Result};
+
+use super::engine::Engine;
+use crate::host::kv_cache::SeqId;
+use crate::host::sampling::{sample, SamplingParams};
+use crate::util::prng::Prng;
+
+/// Speculative-decoding configuration (carried by
+/// [`SchedulerOpts`](super::scheduler::SchedulerOpts); active only when the
+/// scheduler also holds a draft engine).
+///
+/// # Example
+///
+/// ```no_run
+/// // (no_run: rustdoc test binaries miss the libxla rpath; the same flow
+/// // is pinned by rust/tests/spec_decode_sim.rs)
+/// use ita::config::ModelConfig;
+/// use ita::coordinator::engine::Engine;
+/// use ita::coordinator::request::GenRequest;
+/// use ita::coordinator::scheduler::{Scheduler, SchedulerOpts};
+/// use ita::coordinator::spec::{CartridgeEngines, SpecOpts};
+///
+/// // a big target cartridge paired with a small draft cartridge
+/// let engines = CartridgeEngines::with_draft(
+///     Engine::synthetic(&ModelConfig::TINY, 7),
+///     Engine::synthetic(&ModelConfig::TINY, 7),
+/// );
+/// let opts = SchedulerOpts {
+///     spec: SpecOpts { depth: 4, adaptive: true },
+///     ..SchedulerOpts::default()
+/// };
+/// let mut sched = Scheduler::with_engines(engines, opts);
+/// sched.submit(GenRequest::greedy(0, "hello ita", 16));
+/// let results = sched.run_to_completion().unwrap();
+/// // greedy outputs are byte-identical to a draft-less run
+/// assert_eq!(results.len(), 1);
+/// let m = sched.metrics();
+/// assert_eq!(m.spec_proposed, m.spec_accepted + m.spec_rollbacks);
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpecOpts {
+    /// Maximum draft tokens proposed per sequence per iteration (the `k`
+    /// of classic speculative decoding). 0 disables speculation even when
+    /// a draft engine is attached.
+    pub depth: usize,
+    /// Tune the per-sequence depth from its rolling acceptance rate: a
+    /// sequence the draft predicts well climbs toward `depth`, one it
+    /// predicts badly falls toward 1, so hopeless drafts stop wasting
+    /// draft-engine work. `false` pins every sequence at `depth`.
+    pub adaptive: bool,
+}
+
+impl Default for SpecOpts {
+    fn default() -> Self {
+        SpecOpts { depth: 4, adaptive: true }
+    }
+}
+
+/// The engines one cartridge worker owns: the serving (target) engine,
+/// optionally paired with a smaller draft engine for speculative decoding.
+/// `From<Engine>` lets every existing draft-less call site keep passing a
+/// bare [`Engine`].
+pub struct CartridgeEngines {
+    pub target: Engine,
+    pub draft: Option<Engine>,
+}
+
+impl CartridgeEngines {
+    /// Pair a target cartridge with a draft cartridge. The draft must share
+    /// the target's vocabulary (it proposes token ids the target verifies);
+    /// every other dimension — layers, width, FFN — is free, and smaller is
+    /// the point.
+    pub fn with_draft(target: Engine, draft: Engine) -> CartridgeEngines {
+        CartridgeEngines { target, draft: Some(draft) }
+    }
+}
+
+impl From<Engine> for CartridgeEngines {
+    fn from(target: Engine) -> CartridgeEngines {
+        CartridgeEngines { target, draft: None }
+    }
+}
+
+/// Per-sequence adaptive-depth controller: an exponentially weighted
+/// rolling acceptance rate drives the proposal depth between 1 and the
+/// configured maximum.
+#[derive(Debug, Clone)]
+pub struct DepthController {
+    max_depth: usize,
+    adaptive: bool,
+    k: usize,
+    /// EWMA of per-wave acceptance rate (accepted / proposed).
+    rate: f64,
+}
+
+impl DepthController {
+    pub fn new(opts: &SpecOpts) -> DepthController {
+        DepthController {
+            max_depth: opts.depth.max(1),
+            adaptive: opts.adaptive,
+            // adaptive sequences start mid-range and earn their depth
+            k: if opts.adaptive { opts.depth.max(1).div_ceil(2) } else { opts.depth.max(1) },
+            rate: 0.5,
+        }
+    }
+
+    /// Draft tokens to propose next wave.
+    pub fn depth(&self) -> usize {
+        self.k
+    }
+
+    /// Rolling acceptance rate in [0, 1].
+    pub fn acceptance(&self) -> f64 {
+        self.rate
+    }
+
+    /// Fold in one verify wave's outcome.
+    pub fn observe(&mut self, accepted: usize, proposed: usize) {
+        if !self.adaptive || proposed == 0 {
+            return;
+        }
+        let wave = accepted as f64 / proposed as f64;
+        self.rate = 0.7 * self.rate + 0.3 * wave;
+        if self.rate >= 0.75 {
+            self.k = (self.k + 1).min(self.max_depth);
+        } else if self.rate < 0.35 {
+            self.k = self.k.saturating_sub(1).max(1);
+        }
+    }
+}
+
+struct DraftSeq {
+    /// The shadow sequence in the DRAFT engine's KV cache.
+    id: SeqId,
+    ctrl: DepthController,
+}
+
+/// Outcome of one verify wave, as the scheduler reports it back to
+/// [`SpecDecoder::observe`].
+#[derive(Debug, Clone, Copy)]
+pub struct VerifyOutcome {
+    /// Canonical stream length (prompt + generated) BEFORE this wave.
+    pub stream_len: usize,
+    /// Tokens actually appended to the stream this wave (accepted draft
+    /// tokens plus the correction/bonus token, after EOS / token-budget
+    /// clipping); ≥ 1.
+    pub applied: usize,
+    /// Draft tokens accepted into the stream.
+    pub accepted: usize,
+    /// Draft tokens proposed.
+    pub proposed: usize,
+}
+
+/// The draft side of speculative decoding: owns the draft [`Engine`] and a
+/// shadow sequence (plus a [`DepthController`]) per target sequence.
+pub struct SpecDecoder {
+    draft: Engine,
+    opts: SpecOpts,
+    seqs: HashMap<SeqId, DraftSeq>,
+    /// Greedy sampling never draws from it; [`sample`] just wants one.
+    rng: Prng,
+}
+
+impl SpecDecoder {
+    pub fn new(draft: Engine, opts: SpecOpts) -> SpecDecoder {
+        SpecDecoder { draft, opts, seqs: HashMap::new(), rng: Prng::new(0x5bec) }
+    }
+
+    /// Draft vocabulary (must match the target's for proposals to be
+    /// meaningful token ids).
+    pub fn vocab(&self) -> usize {
+        self.draft.dims().vocab
+    }
+
+    /// Current proposal depth for `seq` (before any wave: the configured
+    /// start depth).
+    pub fn depth(&self, seq: SeqId) -> usize {
+        self.seqs.get(&seq).map_or_else(
+            || DepthController::new(&self.opts).depth(),
+            |s| s.ctrl.depth(),
+        )
+    }
+
+    /// Propose up to `min(depth, cap)` draft tokens for the target sequence
+    /// `seq`, whose canonical token stream is `prompt ++ generated` (the
+    /// last element being the still-unconsumed sampled token).
+    ///
+    /// The draft's shadow sequence is created on first use and **catches
+    /// up** to the stream first — consuming any tokens it has not seen yet
+    /// in bucket-packed batches — so a sequence that just finished prefill,
+    /// resumed from a migration checkpoint, or took a multi-token accept
+    /// last wave is handled uniformly. Only the not-yet-consumed suffix is
+    /// ever materialized (a handful of tokens in steady state, the whole
+    /// prompt exactly once), so the per-iteration cost does not grow with
+    /// context length. Returns at least one token.
+    pub fn propose(
+        &mut self,
+        seq: SeqId,
+        prompt: &[u32],
+        generated: &[u32],
+        cap: usize,
+    ) -> Result<Vec<u32>> {
+        let total = prompt.len() + generated.len();
+        ensure!(total > 0, "propose on an empty stream");
+        ensure!(cap >= 1, "propose with a zero token cap");
+        if !self.seqs.contains_key(&seq) {
+            let id = self.draft.new_sequence();
+            self.seqs.insert(seq, DraftSeq { id, ctrl: DepthController::new(&self.opts) });
+        }
+        let (draft_id, k) = {
+            let s = self.seqs.get(&seq).expect("inserted above");
+            (s.id, s.ctrl.depth().min(cap).max(1))
+        };
+        // defensive: a shadow that somehow ran ahead of the canonical
+        // stream (it cannot, between steps) is rolled back to it
+        if self.draft.seq_len(draft_id) >= total {
+            self.draft.truncate_sequence(draft_id, total - 1)?;
+        }
+        // catch up: consume every canonical token the shadow has not seen,
+        // including the pending one — the last row's logits seed the chain
+        let have = self.draft.seq_len(draft_id);
+        let mut pending: Vec<u32> = Vec::with_capacity(total - have);
+        if have < prompt.len() {
+            pending.extend_from_slice(&prompt[have..]);
+            pending.extend_from_slice(generated);
+        } else {
+            pending.extend_from_slice(&generated[have - prompt.len()..]);
+        }
+        let bucket = self.draft.max_batch();
+        let mut last: Vec<f32> = Vec::new();
+        for chunk in pending.chunks(bucket) {
+            let logits = self.draft.verify_step(draft_id, chunk)?;
+            let v = logits.cols;
+            last = logits.data[(chunk.len() - 1) * v..chunk.len() * v].to_vec();
+        }
+        debug_assert!(!last.is_empty(), "catch-up always has >= 1 pending token");
+        let greedy = SamplingParams::greedy();
+        let mut out = Vec::with_capacity(k);
+        let mut tok = sample(&last, &greedy, &mut self.rng);
+        out.push(tok);
+        while out.len() < k {
+            let logits = self.draft.forward(&[draft_id], &[tok])?;
+            tok = sample(&logits.data, &greedy, &mut self.rng);
+            out.push(tok);
+        }
+        // shadow now holds stream.len() + k - 1 rows (the newest proposal
+        // was sampled but not consumed) — observe() reconciles it with
+        // whatever the target actually accepted
+        Ok(out)
+    }
+
+    /// Reconcile the shadow sequence with a verify wave's outcome: roll its
+    /// KV back to the longest prefix consistent with the new canonical
+    /// stream and feed the result to the depth controller.
+    pub fn observe(&mut self, seq: SeqId, outcome: VerifyOutcome) -> Result<()> {
+        let Some(s) = self.seqs.get_mut(&seq) else { return Ok(()) };
+        s.ctrl.observe(outcome.accepted, outcome.proposed);
+        // the shadow consumed stream ++ d[0..proposed-1]; of those draft
+        // tokens, only the accepted prefix matches the new stream — and it
+        // must also stay one behind the stream's still-unconsumed tail
+        let valid = outcome.stream_len
+            + outcome.accepted.min(outcome.proposed.saturating_sub(1));
+        let keep = valid
+            .min(outcome.stream_len + outcome.applied.max(1) - 1)
+            .min(self.draft.seq_len(s.id));
+        self.draft.truncate_sequence(s.id, keep)
+    }
+
+    /// Rolling acceptance rate for `seq`, if it ever speculated.
+    pub fn acceptance(&self, seq: SeqId) -> Option<f64> {
+        self.seqs.get(&seq).map(|s| s.ctrl.acceptance())
+    }
+
+    /// Drop the shadow sequence of a finished / exported / requeued target
+    /// sequence, freeing its draft-side KV pages. No-op when `seq` never
+    /// speculated.
+    pub fn drop_seq(&mut self, seq: SeqId) {
+        if let Some(s) = self.seqs.remove(&seq) {
+            self.draft.free_sequence(s.id);
+        }
+    }
+
+    /// Draft-engine KV pool statistics (for leak checks in tests).
+    pub fn draft_cache_stats(&self) -> (usize, usize, usize) {
+        self.draft.cache.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::host::tokenizer::ByteTokenizer;
+
+    #[test]
+    fn fixed_depth_controller_never_moves() {
+        let mut c = DepthController::new(&SpecOpts { depth: 6, adaptive: false });
+        assert_eq!(c.depth(), 6);
+        for _ in 0..20 {
+            c.observe(0, 6);
+        }
+        assert_eq!(c.depth(), 6, "non-adaptive depth must stay pinned");
+    }
+
+    #[test]
+    fn adaptive_depth_climbs_on_acceptance_and_falls_on_rejection() {
+        let opts = SpecOpts { depth: 8, adaptive: true };
+        let mut c = DepthController::new(&opts);
+        let start = c.depth();
+        assert!((1..=8).contains(&start));
+        for _ in 0..30 {
+            let k = c.depth();
+            c.observe(k, k); // perfect draft
+        }
+        assert_eq!(c.depth(), 8, "perfect acceptance should reach max depth");
+        for _ in 0..30 {
+            let k = c.depth();
+            c.observe(0, k); // hopeless draft
+        }
+        assert_eq!(c.depth(), 1, "zero acceptance should bottom out at 1");
+        // and it never leaves [1, max]
+        for i in 0..50 {
+            c.observe(i % 2, 1);
+            assert!((1..=8).contains(&c.depth()));
+        }
+    }
+
+    #[test]
+    fn propose_catches_up_and_proposes_greedy_draft_chain() {
+        // the draft's proposals must equal what greedily decoding the draft
+        // model itself would produce — pinned against a bare engine
+        let cfg = ModelConfig::TINY;
+        let toks = ByteTokenizer::new().encode("speculate");
+        let mut spec = SpecDecoder::new(
+            Engine::synthetic(&cfg, 3),
+            SpecOpts { depth: 4, adaptive: false },
+        );
+        let d = spec.propose(SeqId(7), &toks, &[], 16).unwrap();
+        assert_eq!(d.len(), 4);
+
+        let mut reference = Engine::synthetic(&cfg, 3);
+        let s = reference.new_sequence();
+        let mut rng = Prng::new(0);
+        let greedy = SamplingParams::greedy();
+        let mut row = reference.prefill(s, &toks).unwrap();
+        let mut want = Vec::new();
+        for i in 0..4 {
+            let t = sample(&row, &greedy, &mut rng);
+            want.push(t);
+            if i < 3 {
+                // the newest proposal is sampled but not consumed — keep
+                // the reference's committed length equal to the shadow's
+                row = reference.forward(&[s], &[t]).unwrap().data;
+            }
+        }
+        assert_eq!(d, want, "draft chain diverged from plain greedy decode");
+
+        // a fully-accepted wave leaves the shadow one row behind the new
+        // stream; the next propose consumes the gap and stays consistent
+        let mut stream = toks.clone();
+        stream.extend_from_slice(&d);
+        stream.push(want[3].wrapping_add(1) % 258); // bonus token
+        spec.observe(
+            SeqId(7),
+            VerifyOutcome { stream_len: toks.len(), applied: 5, accepted: 4, proposed: 4 },
+        )
+        .unwrap();
+        // the stream splits anywhere: pass the original prompt and the new
+        // tokens as `generated`, exercising the cross-boundary catch-up
+        let d2 = spec.propose(SeqId(7), &toks, &stream[toks.len()..], 16).unwrap();
+        assert_eq!(d2.len(), 4);
+        // reference: feed the same gap tokens (the last proposal and the
+        // bonus, which the shadow never consumed), then decode greedily
+        let gap = reference
+            .forward(&[s, s], &[stream[stream.len() - 2], stream[stream.len() - 1]])
+            .unwrap();
+        let v = gap.cols;
+        let mut row = gap.data[v..2 * v].to_vec();
+        let mut want2 = Vec::new();
+        for i in 0..4 {
+            let t = sample(&row, &greedy, &mut rng);
+            want2.push(t);
+            if i < 3 {
+                row = reference.forward(&[s], &[t]).unwrap().data;
+            }
+        }
+        assert_eq!(d2, want2, "post-accept catch-up diverged");
+    }
+
+    #[test]
+    fn rejection_rolls_the_shadow_back_to_the_accepted_prefix() {
+        let cfg = ModelConfig::TINY;
+        let toks = ByteTokenizer::new().encode("reject me");
+        let mut spec = SpecDecoder::new(
+            Engine::synthetic(&cfg, 9),
+            SpecOpts { depth: 4, adaptive: false },
+        );
+        let d = spec.propose(SeqId(1), &toks, &[], 16).unwrap();
+        assert_eq!(d.len(), 4);
+        // target rejected everything: applied = 1 correction token
+        spec.observe(
+            SeqId(1),
+            VerifyOutcome { stream_len: toks.len(), applied: 1, accepted: 0, proposed: 4 },
+        )
+        .unwrap();
+        // shadow rolled back to stream_len (it had consumed 3 draft tokens)
+        let correction = [42u32];
+        let d2 = spec.propose(SeqId(1), &toks, &correction, 16).unwrap();
+        assert_eq!(d2.len(), 4);
+        // cross-check against a fresh decoder fed the same stream: the
+        // rollback must leave no trace of the rejected tokens
+        let mut fresh = SpecDecoder::new(
+            Engine::synthetic(&cfg, 9),
+            SpecOpts { depth: 4, adaptive: false },
+        );
+        let d3 = fresh.propose(SeqId(1), &toks, &correction, 16).unwrap();
+        assert_eq!(d2, d3, "rolled-back shadow diverged from a fresh one");
+    }
+
+    #[test]
+    fn drop_seq_frees_draft_pages() {
+        let cfg = ModelConfig::TINY;
+        let toks = ByteTokenizer::new().encode("ephemeral");
+        let mut spec = SpecDecoder::new(Engine::synthetic(&cfg, 5), SpecOpts::default());
+        spec.propose(SeqId(3), &toks, &[], 8).unwrap();
+        let (_, _, live) = spec.draft_cache_stats();
+        assert_eq!(live, 1);
+        spec.drop_seq(SeqId(3));
+        let (alloc, free, live) = spec.draft_cache_stats();
+        assert_eq!(live, 0);
+        assert_eq!(alloc, free, "draft pages must return to the pool");
+        // dropping an unknown sequence is a no-op
+        spec.drop_seq(SeqId(99));
+    }
+}

@@ -22,6 +22,8 @@ use anyhow::Result;
 use super::metrics::ServingMetrics;
 use super::request::{DecodeCheckpoint, GenRequest};
 use super::scheduler::{Scheduler, SchedulerOpts};
+use super::spec::CartridgeEngines;
+#[cfg(test)]
 use crate::coordinator::engine::Engine;
 
 /// Index of a cartridge within its fleet.
@@ -52,6 +54,13 @@ pub enum WorkerMsg {
         keep_prefix: usize,
         reply: Sender<Option<ExportedRequest>>,
     },
+    /// Migration-cost re-probe: reply with the LIVE by-value KV export
+    /// size (serialized wire bytes) of every request this cartridge holds,
+    /// keyed by wire id. The dispatcher's KV-size rebalance guard asks
+    /// this at migration-decision time instead of trusting the last
+    /// periodic checkpoint's size, which is up to one checkpoint interval
+    /// stale (see [`Scheduler::live_kv_bytes`]).
+    SizeProbe(Sender<Vec<(u64, usize)>>),
     Snapshot(Sender<ServingMetrics>),
     /// Finish all accepted work, report final metrics via
     /// [`WorkerEvent::Drained`], and exit.
@@ -111,9 +120,12 @@ pub struct Worker {
 
 impl Worker {
     /// Spawn a worker. `make_engine` runs on the new thread (the device is
-    /// not `Send`); `wrap` lifts [`WorkerEvent`] into the owner's message
+    /// not `Send`) and may return either a bare
+    /// [`Engine`](super::engine::Engine) or a
+    /// [`CartridgeEngines`] pairing it with a draft engine for speculative
+    /// decoding; `wrap` lifts [`WorkerEvent`] into the owner's message
     /// type so worker events and client commands share one channel.
-    pub fn spawn<E, F>(
+    pub fn spawn<B, E, F>(
         id: CartridgeId,
         make_engine: F,
         opts: SchedulerOpts,
@@ -121,8 +133,9 @@ impl Worker {
         wrap: fn(WorkerEvent) -> E,
     ) -> Worker
     where
+        B: Into<CartridgeEngines> + 'static,
         E: Send + 'static,
-        F: FnOnce() -> Result<Engine> + Send + 'static,
+        F: FnOnce() -> Result<B> + Send + 'static,
     {
         let (tx, rx) = channel::<WorkerMsg>();
         let handle = std::thread::Builder::new()
@@ -165,7 +178,7 @@ fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
     }
 }
 
-fn worker_thread<E, F>(
+fn worker_thread<B, E, F>(
     id: CartridgeId,
     make_engine: F,
     opts: SchedulerOpts,
@@ -173,12 +186,13 @@ fn worker_thread<E, F>(
     events: Sender<E>,
     wrap: fn(WorkerEvent) -> E,
 ) where
+    B: Into<CartridgeEngines>,
     E: Send + 'static,
-    F: FnOnce() -> Result<Engine>,
+    F: FnOnce() -> Result<B>,
 {
     let boot = std::panic::catch_unwind(std::panic::AssertUnwindSafe(make_engine));
-    let engine = match boot {
-        Ok(Ok(engine)) => engine,
+    let engines: CartridgeEngines = match boot {
+        Ok(Ok(engines)) => engines.into(),
         Ok(Err(e)) => {
             let _ = events.send(wrap(WorkerEvent::BootFailed(id, format!("{e:#}"))));
             return;
@@ -188,7 +202,7 @@ fn worker_thread<E, F>(
             return;
         }
     };
-    let mut sched = Scheduler::new(engine, opts);
+    let mut sched = Scheduler::with_engines(engines, opts);
     let _ = events.send(wrap(WorkerEvent::Ready(id, sched.capacity())));
 
     let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
@@ -241,6 +255,9 @@ fn worker_loop<E>(
                         .export(ticket, keep_prefix)
                         .map(|(req, ckpt)| (req, ckpt.map(Box::new)));
                     let _ = reply.send(out);
+                }
+                Some(WorkerMsg::SizeProbe(tx)) => {
+                    let _ = tx.send(sched.live_kv_bytes());
                 }
                 Some(WorkerMsg::Snapshot(tx)) => {
                     let _ = tx.send(sched.metrics());

@@ -60,7 +60,16 @@ impl KvSnapshot {
 
     /// Serialized size in bytes (what a real host↔host migration moves).
     pub fn wire_bytes(&self) -> usize {
-        32 + 2 * self.n_layers * self.value_rows() * self.d_model * 4
+        KvSnapshot::wire_bytes_for(self.n_layers, self.d_model, self.value_rows())
+    }
+
+    /// Serialized size of a fully by-value snapshot with `rows` committed
+    /// rows of the given geometry, without building one — the single
+    /// source of truth for the wire format's size (32-byte header + K and
+    /// V f32 rows per layer). Size estimators (the fleet's live KV-size
+    /// re-probe) use this so a format change cannot silently skew them.
+    pub fn wire_bytes_for(n_layers: usize, d_model: usize, rows: usize) -> usize {
+        32 + 2 * n_layers * rows * d_model * 4
     }
 
     /// Encode to the stable little-endian wire format.
@@ -367,6 +376,39 @@ impl PagedKvCache {
         let state = self.seqs.get_mut(&id).ok_or_else(|| anyhow!("unknown seq"))?;
         state.len += 1;
         Ok(state.len)
+    }
+
+    /// Roll the committed length back to `new_len`, releasing this
+    /// sequence's hold on every page wholly beyond the new length. The
+    /// rollback primitive speculative decoding uses to discard the KV rows
+    /// of rejected draft tokens.
+    ///
+    /// Shared pages are never disturbed: the sequence only drops its *own*
+    /// reference (other holders — a donor sequence, the radix prefix cache —
+    /// keep theirs), and a partially-kept boundary page is retained as-is.
+    /// Stale rows past `new_len` are unreachable (readers stop at the
+    /// committed length) and the next [`append_at`](PagedKvCache::append_at)
+    /// overwrites them through the usual copy-on-write path, so sharers
+    /// never observe the rollback either.
+    pub fn truncate_seq(&mut self, id: SeqId, new_len: usize) -> Result<()> {
+        let keep_pages = new_len.div_ceil(self.page_size);
+        let mut doomed = Vec::new();
+        {
+            let state = self.seqs.get_mut(&id).ok_or_else(|| anyhow!("unknown seq"))?;
+            if new_len > state.len {
+                bail!("truncate_seq: new length {new_len} above committed {}", state.len);
+            }
+            for layer_pages in state.pages.iter_mut() {
+                while layer_pages.len() > keep_pages {
+                    doomed.push(layer_pages.pop().expect("len checked"));
+                }
+            }
+            state.len = new_len;
+        }
+        for idx in doomed {
+            self.release_page(idx);
+        }
+        Ok(())
     }
 
     /// Sequence length in tokens.
@@ -711,6 +753,85 @@ mod tests {
         // a fresh target works
         c.share_pages(f, &pages, 1).unwrap();
         assert_eq!(c.len(f), 1);
+    }
+
+    #[test]
+    fn truncate_rolls_back_rows_and_releases_whole_pages() {
+        let d = 4;
+        let mut c = PagedKvCache::new(2, d, 3);
+        let s = c.alloc_seq();
+        for t in 0..8 {
+            for l in 0..2 {
+                c.append(s, l, &row(d, t as f32), &row(d, -(t as f32))).unwrap();
+            }
+            c.advance(s).unwrap();
+        }
+        // 8 rows over page size 3 = 3 pages/layer
+        assert_eq!(c.stats().0, 6);
+        // roll back to 4 rows: page 2 of each layer returns to the pool,
+        // the partially-kept boundary page (rows 3..5) stays
+        c.truncate_seq(s, 4).unwrap();
+        assert_eq!(c.len(s), 4);
+        let (alloc, free, _) = c.stats();
+        assert_eq!((alloc, free), (6, 2));
+        let mut seen = 0;
+        c.for_each_kv(s, 0, |pos, k, _| {
+            assert_eq!(k[0], pos as f32);
+            seen += 1;
+        });
+        assert_eq!(seen, 4, "reads stop at the rolled-back length");
+        // re-appending after a rollback resumes at the new length and
+        // overwrites the stale slots
+        for l in 0..2 {
+            c.append(s, l, &row(d, 40.0), &row(d, 40.0)).unwrap();
+        }
+        c.advance(s).unwrap();
+        let mut rows = vec![];
+        c.for_each_kv(s, 0, |_, k, _| rows.push(k[0]));
+        assert_eq!(rows, vec![0.0, 1.0, 2.0, 3.0, 40.0]);
+        // beyond-committed and unknown-seq rollbacks are rejected
+        assert!(c.truncate_seq(s, 6).is_err());
+        assert!(c.truncate_seq(SeqId(99), 0).is_err());
+        // truncate-to-zero returns every page
+        c.truncate_seq(s, 0).unwrap();
+        let (alloc, free, _) = c.stats();
+        assert_eq!(alloc, free);
+    }
+
+    #[test]
+    fn truncate_never_disturbs_shared_pages() {
+        // a sequence sharing a donor's pages rolls back: the donor (and any
+        // other holder) must keep its pages and its rows bit-intact
+        let d = 4;
+        let mut c = PagedKvCache::new(1, d, 2);
+        let donor = c.alloc_seq();
+        for t in 0..6 {
+            c.append(donor, 0, &row(d, t as f32), &row(d, -(t as f32))).unwrap();
+            c.advance(donor).unwrap();
+        }
+        let donor_pages = vec![c.seq_pages(donor, 0).unwrap().to_vec()];
+        let b = c.alloc_seq();
+        c.share_pages(b, &donor_pages, 6).unwrap();
+        // b speculates two tokens past the shared prefix (COW on append)...
+        for t in 6..8 {
+            c.append(b, 0, &row(d, 100.0 + t as f32), &row(d, 0.0)).unwrap();
+            c.advance(b).unwrap();
+        }
+        // ...then rejects them: rollback to a length inside the shared run
+        c.truncate_seq(b, 5).unwrap();
+        assert_eq!(c.len(b), 5);
+        // the donor still holds every page and reads its original rows
+        assert_eq!(c.len(donor), 6);
+        c.for_each_kv(donor, 0, |pos, k, v| {
+            assert_eq!(k[0], pos as f32);
+            assert_eq!(v[0], -(pos as f32));
+        });
+        // b's surviving rows are the shared prefix
+        c.for_each_kv(b, 0, |pos, k, _| assert_eq!(k[0], pos as f32));
+        c.free_seq(donor);
+        c.free_seq(b);
+        let (alloc, free, _) = c.stats();
+        assert_eq!(alloc, free);
     }
 
     #[test]

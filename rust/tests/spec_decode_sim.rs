@@ -1,0 +1,319 @@
+//! Deterministic, artifact-free speculative-decoding tier: pins the one
+//! property everything rests on — **greedy transcripts are byte-identical
+//! with speculation on or off**, for every depth, every draft model, and
+//! across mid-decode migration — plus the draft-token conservation law
+//! (`proposed == accepted + rejected`) and rollback hygiene (no leaked KV
+//! pages on either engine).
+
+use std::time::Instant;
+
+use ita::config::ModelConfig;
+use ita::coordinator::engine::Engine;
+use ita::coordinator::fleet::Fleet;
+use ita::coordinator::request::GenRequest;
+use ita::coordinator::scheduler::{Scheduler, SchedulerOpts};
+use ita::coordinator::spec::{CartridgeEngines, SpecOpts};
+use ita::util::quickprop::forall;
+
+const TARGET_SEED: u64 = 0x5bec;
+
+/// A genuinely smaller draft model: 1 layer × 32 wide vs TINY's 2 × 64.
+/// Same byte-level vocabulary — proposals must be target token ids.
+const DRAFT_MODEL: ModelConfig = ModelConfig {
+    name: "draft-tiny",
+    d_model: 32,
+    n_layers: 1,
+    d_ffn: 96,
+    n_heads: 2,
+    vocab: 258,
+    w_bits: 4,
+    a_bits: 8,
+};
+
+fn requests() -> Vec<GenRequest> {
+    let prompts = [
+        "the memory wall",
+        "immutable tensors stream from rom",
+        "q",
+        "split brain serving with a draft cartridge riding along",
+    ];
+    prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let mut r = GenRequest::greedy(i as u64, p, 12 + 5 * i);
+            r.stop_at_eos = i % 2 == 0; // exercise both stop conditions
+            r
+        })
+        .collect()
+}
+
+fn run(depth: usize, draft: Option<Engine>, adaptive: bool) -> (Vec<(u64, Vec<u32>)>, Scheduler) {
+    let target = Engine::synthetic(&ModelConfig::TINY, TARGET_SEED);
+    let engines = match draft {
+        Some(d) => CartridgeEngines::with_draft(target, d),
+        None => CartridgeEngines::from(target),
+    };
+    let opts = SchedulerOpts { spec: SpecOpts { depth, adaptive }, ..SchedulerOpts::default() };
+    let mut sched = Scheduler::with_engines(engines, opts);
+    for r in requests() {
+        sched.submit(r);
+    }
+    let mut out: Vec<(u64, Vec<u32>)> =
+        sched.run_to_completion().unwrap().into_iter().map(|r| (r.id, r.tokens)).collect();
+    out.sort();
+    (out, sched)
+}
+
+#[test]
+fn transcripts_byte_identical_for_every_depth() {
+    // k = 0 is the vanilla path (speculation disabled even with a draft)
+    let (want, vanilla) = run(0, Some(Engine::synthetic(&DRAFT_MODEL, 1)), true);
+    assert_eq!(vanilla.metrics().spec_proposed, 0, "depth 0 must disable speculation");
+    for k in [2usize, 4, 8] {
+        for (draft_name, draft) in [
+            ("small", Engine::synthetic(&DRAFT_MODEL, 1)),
+            ("perfect", Engine::synthetic(&ModelConfig::TINY, TARGET_SEED)),
+        ] {
+            let (got, sched) = run(k, Some(draft), false);
+            assert_eq!(got, want, "depth {k} with {draft_name} draft changed the transcript");
+            let m = sched.metrics();
+            assert!(m.spec_proposed > 0, "depth {k}: no speculation happened");
+            assert_eq!(m.spec_proposed, m.spec_accepted + m.spec_rollbacks);
+            // every KV page returned on the target once all requests done
+            let (_, _, live) = sched.engine().cache.stats();
+            assert_eq!(live, 0, "leaked target sequences");
+        }
+        // adaptive depth is a scheduling policy, never an output change
+        let (got, _) = run(k, Some(Engine::synthetic(&DRAFT_MODEL, 1)), true);
+        assert_eq!(got, want, "adaptive depth {k} changed the transcript");
+    }
+}
+
+#[test]
+fn prop_random_draft_models_never_change_outputs_and_conserve_tokens() {
+    // whatever the draft proposes — random weights, any depth — the target
+    // transcript is invariant and every proposed token is either accepted
+    // or rolled back
+    let reference = {
+        let (want, _) = run(0, None, false);
+        want
+    };
+    forall("speculation is transcript-invariant", 8, |g| {
+        let depth = g.usize_in(1, 8);
+        let draft_seed = g.i64_in(0, i64::MAX) as u64;
+        let draft_cfg = if g.bool() { DRAFT_MODEL } else { ModelConfig::TINY };
+        let (got, sched) = run(depth, Some(Engine::synthetic(&draft_cfg, draft_seed)), g.bool());
+        assert_eq!(got, reference, "draft seed {draft_seed} depth {depth} changed outputs");
+        let m = sched.metrics();
+        assert_eq!(
+            m.spec_proposed,
+            m.spec_accepted + m.spec_rollbacks,
+            "conservation violated at draft seed {draft_seed} depth {depth}"
+        );
+        assert_eq!(m.spec_accept.count() > 0, m.spec_proposed > 0);
+    });
+}
+
+#[test]
+fn perfect_draft_accepts_everything_and_lands_multiple_tokens_per_wave() {
+    // stop_at_eos off so no EOS clipping can shorten an agreed chain:
+    // identical weights must then agree on every greedy token
+    let target = Engine::synthetic(&ModelConfig::TINY, TARGET_SEED);
+    let draft = Engine::synthetic(&ModelConfig::TINY, TARGET_SEED);
+    let opts = SchedulerOpts {
+        spec: SpecOpts { depth: 8, adaptive: false },
+        ..SchedulerOpts::default()
+    };
+    let mut sched = Scheduler::with_engines(CartridgeEngines::with_draft(target, draft), opts);
+    let mut req = GenRequest::greedy(0, "perfect agreement", 33);
+    req.stop_at_eos = false;
+    sched.submit(req);
+    let out = sched.run_to_completion().unwrap().remove(0);
+    assert_eq!(out.tokens.len(), 33);
+    let m = sched.metrics();
+    assert_eq!(m.spec_rollbacks, 0, "identical weights must agree on every greedy token");
+    assert!(m.spec_acceptance() > 0.99, "acceptance {}", m.spec_acceptance());
+    assert!(
+        m.spec_accept.fraction_at_least(1.0) > 0.9,
+        "per-wave acceptance histogram should be pinned at 1.0"
+    );
+    // accepted draft tokens genuinely replaced decode iterations
+    assert_eq!(out.spec_accepted, m.spec_accepted);
+    assert!(m.spec_accepted as usize >= 33 - 1 - 8, "too few tokens landed via drafts");
+}
+
+#[test]
+fn itl_step_records_one_gap_per_accepted_token() {
+    // the speculative run must pool one itl_step sample per generated
+    // token (not per verify wave), so percentiles stay comparable with
+    // vanilla serving
+    let (out, sched) = run(8, Some(Engine::synthetic(&ModelConfig::TINY, TARGET_SEED)), false);
+    let m = sched.metrics();
+    let tokens: u64 = out.iter().map(|(_, t)| t.len() as u64).sum();
+    assert_eq!(m.tokens_generated, tokens);
+    // every token after a stream's first records one gap sample
+    let expected_gaps = tokens - out.len() as u64;
+    assert_eq!(
+        m.itl_step.count(),
+        expected_gaps,
+        "itl_step must record per accepted token, not per wave"
+    );
+}
+
+#[test]
+fn migration_mid_speculation_is_byte_identical() {
+    // a fleet of draft-paired cartridges: a request decoding speculatively
+    // on cartridge 0 is live-migrated to cartridge 1 mid-stream; the
+    // transcript must match a request that never moved. Speculation state
+    // is transient (verified-or-rolled-back within each step), so the
+    // exported checkpoint is exactly a vanilla checkpoint.
+    let factory = |_id: usize| {
+        Ok(CartridgeEngines::with_draft(
+            Engine::synthetic(&ModelConfig::TINY, TARGET_SEED),
+            Engine::synthetic(&DRAFT_MODEL, 3),
+        ))
+    };
+    let opts = SchedulerOpts {
+        spec: SpecOpts { depth: 4, adaptive: true },
+        ..SchedulerOpts::default()
+    };
+
+    let mut req = GenRequest::greedy(7, "a speculative request worth moving", 96);
+    req.stop_at_eos = false;
+
+    // reference: served by a single speculative scheduler, never moved
+    let want = {
+        let mut s = Scheduler::with_engines(
+            CartridgeEngines::with_draft(
+                Engine::synthetic(&ModelConfig::TINY, TARGET_SEED),
+                Engine::synthetic(&DRAFT_MODEL, 3),
+            ),
+            opts,
+        );
+        s.submit(req.clone());
+        s.run_to_completion().unwrap().remove(0).tokens
+    };
+
+    let fleet = Fleet::start(2, factory, opts).unwrap();
+    let h = fleet.submit(req);
+    // wait until cartridge 0 is demonstrably decoding it (with most of the
+    // 96-token stream still ahead, the migrate lands mid-decode)
+    loop {
+        let m = fleet.metrics().unwrap();
+        if m.cartridges[0].serving.tokens_generated >= 4 {
+            break;
+        }
+        std::thread::yield_now();
+    }
+    assert!(fleet.migrate(7, 0, 1).unwrap(), "mid-decode migration refused");
+    let r = h.wait().unwrap();
+    assert_eq!(r.tokens, want, "migration during speculation changed the transcript");
+    assert_eq!(r.tokens.len(), 96);
+    let m = fleet.shutdown().unwrap();
+    assert_eq!(m.migrations, 1);
+    assert_eq!(m.failed_requests, 0);
+    let agg = m.aggregate();
+    assert_eq!(agg.spec_proposed, agg.spec_accepted + agg.spec_rollbacks);
+    assert!(agg.spec_proposed > 0, "fleet never speculated");
+    // per-request counters travel with the checkpoint: the result reports
+    // the END-TO-END totals (both cartridges' waves), which for the only
+    // request in the fleet must equal the per-cartridge sums
+    assert_eq!(r.spec_proposed, agg.spec_proposed, "counters lost across migration");
+    assert_eq!(r.spec_accepted, agg.spec_accepted);
+    assert_eq!(m.cartridges[1].serving.resumed_requests, 1);
+}
+
+#[test]
+fn speculative_fleet_under_load_matches_vanilla_fleet() {
+    // end to end: the same workload through a vanilla fleet and a
+    // draft-paired fleet, transcripts compared; acceptance metrics surface
+    // in FleetMetrics
+    let opts = SchedulerOpts {
+        spec: SpecOpts { depth: 4, adaptive: true },
+        ..SchedulerOpts::default()
+    };
+    let serve = |spec: bool| {
+        let fleet = if spec {
+            Fleet::start(
+                2,
+                |_id| {
+                    Ok(CartridgeEngines::with_draft(
+                        Engine::synthetic(&ModelConfig::TINY, TARGET_SEED),
+                        Engine::synthetic(&ModelConfig::TINY, TARGET_SEED),
+                    ))
+                },
+                opts,
+            )
+            .unwrap()
+        } else {
+            Fleet::start(
+                2,
+                |_id| Ok(Engine::synthetic(&ModelConfig::TINY, TARGET_SEED)),
+                opts,
+            )
+            .unwrap()
+        };
+        let handles: Vec<_> = requests().into_iter().map(|r| fleet.submit(r)).collect();
+        let mut out: Vec<(u64, Vec<u32>)> =
+            handles.into_iter().map(|h| h.wait().unwrap()).map(|r| (r.id, r.tokens)).collect();
+        out.sort();
+        (out, fleet.shutdown().unwrap())
+    };
+    let (want, vanilla_metrics) = serve(false);
+    let (got, spec_metrics) = serve(true);
+    assert_eq!(got, want, "speculative fleet diverged from vanilla fleet");
+    assert_eq!(vanilla_metrics.aggregate().spec_proposed, 0);
+    let agg = spec_metrics.aggregate();
+    assert!(agg.spec_proposed > 0, "draft-paired fleet never speculated");
+    assert_eq!(agg.spec_proposed, agg.spec_accepted + agg.spec_rollbacks);
+    // perfect drafts accept (almost) everything — EOS clipping on the
+    // stop_at_eos requests may reject the tail of an agreed chain
+    assert!(agg.spec_acceptance() > 0.5, "acceptance {}", agg.spec_acceptance());
+    assert!(spec_metrics.report().contains("spec_accept_rate"));
+}
+
+#[test]
+fn checkpoint_resume_after_panic_is_spec_clean() {
+    // a draft-paired scheduler's periodic decode checkpoints must restore
+    // on a draft-LESS scheduler byte-identically: checkpoints never carry
+    // speculation state
+    let opts = SchedulerOpts {
+        spec: SpecOpts { depth: 4, adaptive: false },
+        ..SchedulerOpts::default()
+    };
+    let mut req = GenRequest::greedy(0, "checkpoint me mid speculation", 40);
+    req.stop_at_eos = false;
+
+    let mut reference = Scheduler::new(Engine::synthetic(&ModelConfig::TINY, TARGET_SEED), opts);
+    reference.submit(req.clone());
+    let want = reference.run_to_completion().unwrap().remove(0).tokens;
+
+    let mut spec_sched = Scheduler::with_engines(
+        CartridgeEngines::with_draft(
+            Engine::synthetic(&ModelConfig::TINY, TARGET_SEED),
+            Engine::synthetic(&DRAFT_MODEL, 11),
+        ),
+        opts,
+    );
+    spec_sched.submit(req.clone());
+    // step until a few tokens are out, then take a between-steps checkpoint
+    for _ in 0..8 {
+        spec_sched.step().unwrap();
+    }
+    let ckpts = spec_sched.decode_checkpoints();
+    assert_eq!(ckpts.len(), 1, "request should be mid-decode");
+    let (_, ckpt) = ckpts.into_iter().next().unwrap();
+    assert_eq!(
+        ckpt.kv.len,
+        ckpt.prompt.len() + ckpt.generated.len() - 1,
+        "speculation leaked draft rows into the checkpoint KV"
+    );
+    // the generated prefix so far already matches the reference stream
+    assert_eq!(&want[..ckpt.generated.len()], &ckpt.generated[..]);
+
+    let mut survivor = Scheduler::new(Engine::synthetic(&ModelConfig::TINY, TARGET_SEED), opts);
+    survivor.submit_resume(req, ckpt, Instant::now());
+    let out = survivor.run_to_completion().unwrap();
+    assert_eq!(out[0].tokens, want, "resume from a speculative checkpoint diverged");
+}
