@@ -23,7 +23,8 @@ bench-build:
 
 # Run the end-to-end throughput bench (release/bench profile) and emit the
 # machine-readable perf record BENCH_e2e.json (throughput, prefix-cache
-# prefill skips, live-migration counts). Artifact-free: PJRT tiers skip.
+# prefill skips, live-migration counts, pipeline-stage occupancy/link
+# share). Artifact-free: PJRT tiers skip.
 bench-smoke:
 	cargo bench --bench e2e_throughput
 

@@ -1,6 +1,6 @@
 //! End-to-end serving throughput — the whole-stack number §Perf tracks.
 //!
-//! Five tiers:
+//! The tiers:
 //! * **fleet sweep** (always runs): synthetic SimDevice cartridges, sweeping
 //!   cartridge count to show host-side scale-out of the stateless device
 //!   (1 → N cartridges behind the shared admission queue).
@@ -14,6 +14,9 @@
 //!   by a multi-kilotoken prompt mid-stream, run-to-completion vs chunked
 //!   prefill — the decode inter-token gap histogram (`itl_step`) shows the
 //!   stall chunking removes.
+//! * **pipeline sweep** (always runs): the same decode workload on a
+//!   K-stage pipelined cartridge group (K ∈ {1, 2, 4}), reporting tok/s,
+//!   per-stage occupancy, and the modeled link-transfer share.
 //! * **artifact tier**: the PJRT tiny/demo-100m cartridges when artifacts
 //!   and real bindings exist (skips quietly otherwise).
 //!
@@ -30,6 +33,7 @@ use std::time::Instant;
 use ita::config::ModelConfig;
 use ita::coordinator::engine::Engine;
 use ita::coordinator::fleet::{Fleet, LeastLoaded, PrefixAffinity, Rebalance};
+use ita::coordinator::pipeline::PipelineEngine;
 use ita::coordinator::request::GenRequest;
 use ita::coordinator::scheduler::{Scheduler, SchedulerOpts};
 use ita::coordinator::spec::{CartridgeEngines, SpecOpts};
@@ -341,6 +345,60 @@ fn bench_mixed_prefill_decode(chunk_tokens: usize, long_prompt_tokens: usize) ->
     j.encode()
 }
 
+/// Pipeline-parallel sweep: the same decode-heavy workload on a K-stage
+/// pipelined cartridge group (K = 1 is the unsharded baseline — transcripts
+/// are byte-identical for every K by construction, so the interesting
+/// numbers are stage occupancy, the modeled link-transfer share, and the
+/// activation bytes crossing the inter-stage links). Returns the JSON
+/// record.
+fn bench_pipeline(stages: usize, n_requests: usize, max_tokens: usize) -> String {
+    // 4 layers so K=4 puts one layer per stage while K=2 gets two each
+    let cfg = ModelConfig {
+        name: "tiny-4l",
+        d_model: 64,
+        n_layers: 4,
+        d_ffn: 192,
+        n_heads: 4,
+        vocab: 258,
+        w_bits: 4,
+        a_bits: 8,
+    };
+    let engine = PipelineEngine::new(stages).synthetic(&cfg, 0x17A);
+    let mut sched = Scheduler::new(engine, SchedulerOpts::default());
+    for i in 0..n_requests {
+        let mut r =
+            GenRequest::greedy(i as u64, &format!("pipelined decode stream {i}"), max_tokens);
+        r.stop_at_eos = false;
+        sched.submit(r);
+    }
+    let t0 = Instant::now();
+    let results = sched.run_to_completion().expect("run");
+    let wall = t0.elapsed().as_secs_f64();
+    let tokens: usize = results.iter().map(|r| r.tokens.len()).sum();
+    let m = sched.metrics();
+    println!(
+        "bench e2e/pipeline  K={stages}  {tokens:>5} tokens in {wall:>6.2}s = {:>7.1} tok/s  \
+         (occupancy {:.2}, {} hops, {:.2} MB over link, link share {:.1}%)",
+        tokens as f64 / wall,
+        m.stage_occupancy(),
+        m.link_hops,
+        m.link_bytes as f64 / 1e6,
+        m.link_share() * 100.0,
+    );
+    let mut j = Json::default();
+    j.num("stages", stages);
+    j.num("requests", n_requests);
+    j.num("tokens", tokens);
+    j.float("wall_s", wall);
+    j.float("tok_per_s", tokens as f64 / wall);
+    j.float("stage_occupancy", m.stage_occupancy());
+    j.num("link_hops", m.link_hops);
+    j.num("link_bytes", m.link_bytes);
+    j.float("link_time_s", m.link_time_s);
+    j.float("link_share", m.link_share());
+    j.encode()
+}
+
 /// Speculative-decoding sweep: the same decode-heavy workload at draft
 /// depth k (0 = vanilla), over a small 1×32 draft model paired with the
 /// TINY target. Reports acceptance rate, rollbacks, and decoded tok/s —
@@ -477,6 +535,11 @@ fn main() {
     // acceptance rate + rollbacks land in the perf record
     let spec_sweep: Vec<String> =
         [0usize, 2, 4, 8].iter().map(|&k| bench_spec_decode(k, 8, 48)).collect();
+    // pipeline-parallel sharding: stage-count sweep on a 4-layer model —
+    // occupancy and modeled link share quantify the cost of splitting one
+    // logical cartridge across K dies
+    let pipeline_sweep: Vec<String> =
+        [1usize, 2, 4].iter().map(|&k| bench_pipeline(k, 8, 32)).collect();
     bench_config("tiny", 16, 32);
     // saturate the largest compiled bucket: at the DRAM-streaming roofline
     // every extra row in a weight sweep is almost free (§Perf iteration 5)
@@ -487,12 +550,14 @@ fn main() {
     root.str("bench", "e2e_throughput");
     // v2: added the mixed_prefill_decode sweep (chunked-prefill ITL)
     // v3: added the spec_decode sweep (draft depth, acceptance, rollbacks)
-    root.num("schema_version", 3);
+    // v4: added the pipeline sweep (stage count, occupancy, link share)
+    root.num("schema_version", 4);
     root.put("fleet_sweep", json_array(&fleet_sweep));
     root.put("shared_prefix", shared_prefix);
     root.put("migration", migration);
     root.put("mixed_prefill_decode", json_array(&mixed_sweep));
     root.put("spec_decode", json_array(&spec_sweep));
+    root.put("pipeline", json_array(&pipeline_sweep));
     let path = std::env::var("ITA_BENCH_JSON").unwrap_or_else(|_| "BENCH_e2e.json".into());
     match std::fs::write(&path, root.encode() + "\n") {
         Ok(()) => println!("bench e2e: wrote perf record to {path}"),

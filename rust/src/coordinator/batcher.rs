@@ -58,9 +58,14 @@ impl BatchPlan {
 
 /// Greedy planner: fill the largest bucket while enough sequences remain,
 /// then finish with the smallest bucket that fits the tail.
+///
+/// Zero-sized buckets are ignored (a bucket of 0 device rows is not a
+/// compilable program — and treating one as the max would loop forever);
+/// at least one positive bucket is required.
 pub fn plan(n: usize, buckets: &[usize]) -> BatchPlan {
     assert!(!buckets.is_empty());
-    let mut sorted = buckets.to_vec();
+    let mut sorted: Vec<usize> = buckets.iter().copied().filter(|&b| b > 0).collect();
+    assert!(!sorted.is_empty(), "plan: buckets contain no positive size: {buckets:?}");
     sorted.sort_unstable();
     let max = *sorted.last().unwrap();
     let mut waves = Vec::new();
@@ -121,6 +126,69 @@ pub fn plan_mixed(decode_rows: usize, prefill_rows: usize, buckets: &[usize]) ->
     MixedPlan { plan: plan(decode_rows + prefill_rows, buckets), decode_rows }
 }
 
+/// A mixed iteration scheduled onto a K-stage pipeline. The planner
+/// already composes rows into waves ([`plan_mixed`]); this composes the
+/// waves over the stages: waves enter stage 0 in order and drain through
+/// stage K−1, so with W waves the iteration occupies `W + K − 1` stage
+/// slots — the classic pipeline fill/drain bubble. Stage k+1 overlaps
+/// stage k on all interior slots; only the K−1 fill and K−1 drain slots
+/// leave stages idle. K=1 degenerates to the plain mixed plan (slots == W,
+/// occupancy 1), so single-cartridge telemetry is unchanged.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PipelinePlan {
+    pub mixed: MixedPlan,
+    /// Pipeline depth (1 = plain engine).
+    pub stages: usize,
+}
+
+impl PipelinePlan {
+    /// Stage slots this iteration occupies end to end: `W + K − 1` for W
+    /// waves (0 for an empty iteration).
+    pub fn slots(&self) -> usize {
+        let w = self.mixed.plan.waves.len();
+        if w == 0 {
+            0
+        } else {
+            w + self.stages - 1
+        }
+    }
+
+    /// Stage-slot pairs across the whole schedule: `slots() × K`, of which
+    /// `busy_stage_slots()` do work.
+    pub fn stage_slots(&self) -> usize {
+        self.slots() * self.stages
+    }
+
+    /// Stage-slot pairs actually occupied by a wave: each of the W waves
+    /// visits each of the K stages exactly once.
+    pub fn busy_stage_slots(&self) -> usize {
+        self.mixed.plan.waves.len() * self.stages
+    }
+
+    /// Fraction of stage slots doing work: `W / (W + K − 1)`. 1.0 for K=1
+    /// or an empty iteration.
+    pub fn stage_occupancy(&self) -> f64 {
+        let w = self.mixed.plan.waves.len();
+        if w == 0 {
+            return 1.0;
+        }
+        w as f64 / (w + self.stages - 1) as f64
+    }
+}
+
+/// Plan one scheduling iteration for a K-stage pipelined engine:
+/// [`plan_mixed`] row composition, then the waves streamed over `stages`
+/// stages (see [`PipelinePlan`]).
+pub fn plan_pipeline(
+    decode_rows: usize,
+    prefill_rows: usize,
+    buckets: &[usize],
+    stages: usize,
+) -> PipelinePlan {
+    assert!(stages >= 1, "pipeline needs at least one stage");
+    PipelinePlan { mixed: plan_mixed(decode_rows, prefill_rows, buckets), stages }
+}
+
 /// Padding-efficiency telemetry.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct BatchStats {
@@ -138,6 +206,11 @@ pub struct BatchStats {
     /// re-counted here: `ServingMetrics::tokens_prefilled` already tallies
     /// every executed prefill row.
     pub mixed_waves: u64,
+    /// Stage-slot pairs scheduled across all iterations (pipeline
+    /// occupancy denominator; equals `rows`-bearing slots only when K=1).
+    pub stage_slots: u64,
+    /// Stage-slot pairs that carried a wave (occupancy numerator).
+    pub busy_stage_slots: u64,
 }
 
 impl BatchStats {
@@ -155,12 +228,29 @@ impl BatchStats {
         self.mixed_waves += p.mixed_waves() as u64;
     }
 
+    /// Record a pipelined iteration: the mixed-plan row accounting plus
+    /// the stage-slot occupancy of streaming its waves over K stages.
+    pub fn record_pipeline(&mut self, p: &PipelinePlan) {
+        self.record_mixed(&p.mixed);
+        self.stage_slots += p.stage_slots() as u64;
+        self.busy_stage_slots += p.busy_stage_slots() as u64;
+    }
+
     /// Fraction of device rows wasted on padding.
     pub fn waste(&self) -> f64 {
         if self.device_rows == 0 {
             return 0.0;
         }
         self.padded_rows as f64 / self.device_rows as f64
+    }
+
+    /// Fraction of stage slots that carried a wave (1.0 when nothing has
+    /// been scheduled yet, and always 1.0 for K=1).
+    pub fn stage_occupancy(&self) -> f64 {
+        if self.stage_slots == 0 {
+            return 1.0;
+        }
+        self.busy_stage_slots as f64 / self.stage_slots as f64
     }
 }
 
@@ -248,6 +338,97 @@ mod tests {
         // pure decode / pure prefill iterations are never mixed
         assert_eq!(plan_mixed(5, 0, &[1, 2, 4, 8]).mixed_waves(), 0);
         assert_eq!(plan_mixed(0, 5, &[1, 2, 4, 8]).mixed_waves(), 0);
+    }
+
+    #[test]
+    fn zero_buckets_are_filtered_not_looped_on() {
+        // regression: `plan(n, &[0])`-style inputs used to spin forever —
+        // `left >= max` with max == 0 never shrinks `left`. Zeros are now
+        // dropped before planning.
+        let p = plan(5, &[0, 0, 4, 0]);
+        assert_eq!(p.rows(), 5);
+        for w in &p.waves {
+            assert!(w.bucket > 0);
+        }
+        // all-zero buckets cannot be planned at all
+        let err = std::panic::catch_unwind(|| plan(3, &[0, 0]));
+        assert!(err.is_err(), "all-zero buckets must be rejected, not looped on");
+    }
+
+    #[test]
+    fn prop_planning_always_terminates() {
+        // termination + soundness over arbitrary bucket sets (zeros and
+        // duplicates included): as long as one positive bucket exists the
+        // plan covers n in finite waves of positive real buckets
+        forall("plan terminates and covers n for any bucket set", 300, |g| {
+            let n = g.usize_in(0, 200);
+            let n_buckets = g.usize_in(1, 6);
+            let mut buckets: Vec<usize> = (0..n_buckets).map(|_| g.usize_in(0, 16)).collect();
+            if buckets.iter().all(|&b| b == 0) {
+                buckets.push(g.usize_in(1, 16));
+            }
+            let p = plan(n, &buckets);
+            assert_eq!(p.rows(), n);
+            for w in &p.waves {
+                assert!(w.bucket > 0 && buckets.contains(&w.bucket));
+                assert!(w.rows > 0 && w.rows <= w.bucket);
+            }
+            assert_eq!(p.device_rows(), p.rows() + p.padding());
+        });
+    }
+
+    #[test]
+    fn pipeline_plan_slots_and_occupancy() {
+        // 3 waves over 4 stages: slots = 3 + 4 − 1 = 6, occupancy 3/6
+        let p = plan_pipeline(8, 11, &[1, 2, 4, 8], 4);
+        assert_eq!(p.mixed.plan.waves.len(), 3); // 8 + 8 + 3
+        assert_eq!(p.slots(), 6);
+        assert_eq!(p.stage_slots(), 24);
+        assert_eq!(p.busy_stage_slots(), 12);
+        assert!((p.stage_occupancy() - 0.5).abs() < 1e-12);
+        // K=1 degenerates to the plain mixed plan: full occupancy
+        let k1 = plan_pipeline(8, 11, &[1, 2, 4, 8], 1);
+        assert_eq!(k1.slots(), 3);
+        assert_eq!(k1.stage_occupancy(), 1.0);
+        assert_eq!(k1.mixed, p.mixed, "row composition is stage-independent");
+    }
+
+    #[test]
+    fn pipeline_stats_accumulate() {
+        let mut s = BatchStats::default();
+        assert_eq!(s.stage_occupancy(), 1.0, "empty stats report full occupancy");
+        s.record_pipeline(&plan_pipeline(4, 0, &[1, 2, 4, 8], 2));
+        // 1 wave over 2 stages: 2 slots × 2 stages = 4, busy = 2
+        assert_eq!(s.stage_slots, 4);
+        assert_eq!(s.busy_stage_slots, 2);
+        assert!((s.stage_occupancy() - 0.5).abs() < 1e-12);
+        // mixed-row accounting still flows through
+        assert_eq!(s.rows, 4);
+        assert_eq!(s.steps, 1);
+        // K=1 recording keeps occupancy at 1.0
+        let mut s1 = BatchStats::default();
+        s1.record_pipeline(&plan_pipeline(4, 3, &[1, 2, 4, 8], 1));
+        assert_eq!(s1.stage_occupancy(), 1.0);
+    }
+
+    #[test]
+    fn prop_pipeline_occupancy_bounds() {
+        forall("pipeline occupancy in (0, 1], 1 iff K=1 or empty", 200, |g| {
+            let decode = g.usize_in(0, 30);
+            let prefill = g.usize_in(0, 30);
+            let stages = g.usize_in(1, 6);
+            let p = plan_pipeline(decode, prefill, &[1, 2, 4, 8], stages);
+            let occ = p.stage_occupancy();
+            assert!(occ > 0.0 && occ <= 1.0, "{occ}");
+            let w = p.mixed.plan.waves.len();
+            if stages == 1 || w == 0 {
+                assert_eq!(occ, 1.0);
+            } else {
+                assert!(occ < 1.0);
+            }
+            assert_eq!(p.stage_slots(), p.slots() * stages);
+            assert_eq!(p.busy_stage_slots(), w * stages);
+        });
     }
 
     #[test]

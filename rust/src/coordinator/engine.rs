@@ -1,23 +1,35 @@
-//! The Split-Brain generation engine (paper Fig. 1 + Section IV-D).
+//! The Split-Brain generation engine (paper Fig. 1 + Section IV-D),
+//! generalized to a **pipeline of K stage-cartridges** (Cambricon-LLM
+//! style: PAPERS.md chiplet-based hybrid architecture).
 //!
 //! One forward step for a batch of sequences:
 //!
 //! 1. host: embedding lookup for each sequence's current token;
-//! 2. per layer: device `qkv` → host RoPE(q,k), KV-append, causal
-//!    attention over the paged cache → device `ffn`;
-//! 3. device `logits` → host sampling (done by the caller).
+//! 2. per stage 0 → K−1, per local layer: device `qkv` → host RoPE(q,k),
+//!    KV-append into **that stage's** paged cache, causal attention over it
+//!    → device `ffn`; between stages the INT16 hidden state streams to the
+//!    next cartridge over a pluggable [`Link`] (modeled cost, accumulated
+//!    in [`link_stats`](Engine::link_stats));
+//! 3. last stage's `logits` → host sampling (done by the caller).
+//!
+//! A plain single-cartridge engine is exactly the K=1 case — same struct,
+//! same code path, no link hops — so scheduler, fleet, spec-decode, and
+//! migration code drive pipelined and plain engines identically. The
+//! K=1 ≡ plain and any-K ≡ K=1 byte-equivalences are pinned by
+//! `rust/tests/pipeline_sim.rs`.
 //!
 //! The engine also keeps the interface-traffic ledger: every host↔device
 //! crossing is accounted at the paper's INT16 wire format (Eq. 7–9), so the
 //! e2e run can be checked against the Section VI-C analytical model.
 
-use anyhow::{ensure, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 
-use crate::device::{DeviceDims, ItaDevice};
+use crate::device::{DeviceDims, DeviceStats, ItaDevice};
 use crate::host::attention::{decode_attention, AttentionConfig, AttentionScratch};
 use crate::host::embedding::EmbeddingTable;
 use crate::host::kv_cache::{KvSnapshot, PagedKvCache, SeqId};
 use crate::host::prefix_cache::PrefixCache;
+use crate::interface::link::Link;
 use crate::model::Mat;
 
 /// Interface-traffic ledger (bytes at the paper's INT16 wire width).
@@ -56,16 +68,49 @@ impl TrafficLedger {
     }
 }
 
-/// The engine: host state + a stateless device.
-pub struct Engine {
+/// Modeled inter-stage activation-handoff cost of a pipelined engine.
+/// All zero for K=1 — a plain engine never hops.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LinkStats {
+    /// Stage→stage activation transfers (one per stage boundary per wave).
+    pub hops: u64,
+    /// Bytes moved across stage boundaries (INT16 hidden states).
+    pub bytes: u64,
+    /// Modeled wall time of those transfers on the configured [`Link`]
+    /// (base latency + payload / effective bandwidth per hop).
+    pub modeled_time_s: f64,
+}
+
+/// One pipeline stage: a contiguous run of the model's layers on its own
+/// stateless device, plus the host-side paged KV for exactly those layers
+/// and an optional slice of the radix prefix cache.
+struct Stage {
     device: Box<dyn ItaDevice>,
-    pub cache: PagedKvCache,
-    /// Radix prefix cache over `cache` (None = prefill reuse disabled).
+    cache: PagedKvCache,
+    /// Radix prefix cache over this stage's `cache` (None = disabled).
     prefix: Option<PrefixCache>,
+}
+
+impl Stage {
+    fn n_layers(&self) -> usize {
+        self.cache.n_layers()
+    }
+}
+
+/// The engine: host state + K stateless stage devices (K=1 for a plain
+/// single-cartridge engine).
+pub struct Engine {
+    stages: Vec<Stage>,
+    /// Composite geometry: `n_layers` sums the stages; everything else is
+    /// uniform across them. What callers see via [`dims`](Engine::dims).
+    dims: DeviceDims,
+    /// Inter-stage activation link (unused when K=1).
+    link: Link,
     attn: AttentionConfig,
     emb: EmbeddingTable,
     scratch: AttentionScratch,
     traffic: TrafficLedger,
+    link_stats: LinkStats,
     /// tokens fully processed (prefill + decode)
     pub tokens_processed: u64,
 }
@@ -80,17 +125,59 @@ pub const PARALLEL_ATTENTION_MIN_WORK: usize = 512 * 1024;
 
 impl Engine {
     pub fn new(device: Box<dyn ItaDevice>, emb: EmbeddingTable, n_heads: usize) -> Engine {
-        let dims = device.dims();
-        assert_eq!(emb.d_model(), dims.d_model);
-        assert_eq!(dims.d_model % n_heads, 0);
+        Engine::sharded(vec![device], emb, n_heads, Link::pcie3_x4())
+    }
+
+    /// Build a pipeline-sharded engine: `devices[s]` holds a contiguous run
+    /// of the model's layers (its `dims().n_layers` is that stage's layer
+    /// count), waves flow stage 0 → K−1, and the activation handoff between
+    /// consecutive stages is costed on `link`. A single device reproduces
+    /// [`Engine::new`] exactly. All stages must agree on `d_model`,
+    /// `d_ffn`, `vocab`, and bucket sizes; the composite
+    /// [`dims`](Engine::dims) reports the summed layer count, so size
+    /// estimators ([`KvSnapshot::wire_bytes_for`]) price the full
+    /// per-stage KV without knowing about stages.
+    pub fn sharded(
+        devices: Vec<Box<dyn ItaDevice>>,
+        emb: EmbeddingTable,
+        n_heads: usize,
+        link: Link,
+    ) -> Engine {
+        assert!(!devices.is_empty(), "pipeline needs at least one stage");
+        let d0 = devices[0].dims();
+        let buckets0 = devices[0].buckets().to_vec();
+        assert_eq!(emb.d_model(), d0.d_model);
+        assert_eq!(d0.d_model % n_heads, 0);
+        let mut n_layers = 0;
+        for dev in &devices {
+            let d = dev.dims();
+            assert_eq!(d.d_model, d0.d_model, "stage d_model mismatch");
+            assert_eq!(d.d_ffn, d0.d_ffn, "stage d_ffn mismatch");
+            assert_eq!(d.vocab, d0.vocab, "stage vocab mismatch");
+            assert!(d.n_layers > 0, "empty pipeline stage");
+            assert_eq!(dev.buckets(), &buckets0[..], "stage bucket mismatch");
+            n_layers += d.n_layers;
+        }
+        let stages = devices
+            .into_iter()
+            .map(|device| {
+                let sd = device.dims();
+                Stage {
+                    cache: PagedKvCache::new(sd.n_layers, sd.d_model, PAGE_SIZE),
+                    prefix: None,
+                    device,
+                }
+            })
+            .collect();
         Engine {
-            cache: PagedKvCache::new(dims.n_layers, dims.d_model, PAGE_SIZE),
-            prefix: None,
-            attn: AttentionConfig::new(n_heads, dims.d_model / n_heads),
+            stages,
+            dims: DeviceDims { n_layers, ..d0 },
+            link,
+            attn: AttentionConfig::new(n_heads, d0.d_model / n_heads),
             emb,
-            device,
             scratch: AttentionScratch::new(),
             traffic: TrafficLedger::default(),
+            link_stats: LinkStats::default(),
             tokens_processed: 0,
         }
     }
@@ -99,129 +186,241 @@ impl Engine {
     /// [`register_prefix`](Engine::register_prefix) become matchable by
     /// [`new_sequence_with_prefix`](Engine::new_sequence_with_prefix),
     /// sharing KV pages copy-on-write under an LRU `budget_pages` cap
-    /// (0 = unbounded).
+    /// (0 = unbounded). On a pipelined engine each stage gets its share of
+    /// the budget in proportion to its layer count (the eviction pressure a
+    /// stage sees scales the same way), so the K=1 case keeps the whole
+    /// budget unchanged.
     pub fn enable_prefix_cache(&mut self, budget_pages: usize) {
-        let dims = self.device.dims();
-        self.prefix = Some(PrefixCache::new(dims.n_layers, PAGE_SIZE, budget_pages));
+        let total_layers = self.dims.n_layers;
+        for stage in &mut self.stages {
+            let budget = budget_pages * stage.n_layers() / total_layers;
+            stage.prefix = Some(PrefixCache::new(stage.n_layers(), PAGE_SIZE, budget));
+        }
     }
 
+    /// The first stage's prefix cache (utilization probes, occupancy
+    /// reports). Stages publish and evict near-lockstep, so stage 0 is
+    /// representative; grafting decisions always consult every stage.
     pub fn prefix_cache(&self) -> Option<&PrefixCache> {
-        self.prefix.as_ref()
+        self.stages[0].prefix.as_ref()
     }
 
     /// Allocate a sequence, grafting the longest cached prefix of `prompt`
     /// into it. Returns the sequence and how many leading tokens are
     /// already cached — prefill may start at that offset (always
     /// < `prompt.len()`: the last token runs through the device so its
-    /// logits exist to sample from).
+    /// logits exist to sample from). On a pipelined engine the graft length
+    /// is the **minimum** match over stages: an eviction on any stage
+    /// shortens the reuse for all of them, but never changes outputs (the
+    /// suffix is simply recomputed).
     pub fn new_sequence_with_prefix(&mut self, prompt: &[u32]) -> (SeqId, usize) {
-        let id = self.cache.alloc_seq();
-        let Some(pc) = self.prefix.as_mut() else { return (id, 0) };
-        let m = pc.lookup(prompt);
-        if m.matched == 0 {
+        let id = self.new_sequence();
+        if self.stages[0].prefix.is_none() {
             return (id, 0);
         }
-        self.cache
-            .share_pages(id, &m.pages, m.matched)
-            .expect("prefix cache returned an invalid page run");
-        (id, m.matched)
+        let mut matches = Vec::with_capacity(self.stages.len());
+        let mut matched = usize::MAX;
+        for stage in &mut self.stages {
+            let m = stage
+                .prefix
+                .as_mut()
+                .expect("prefix caches are enabled together")
+                .lookup(prompt);
+            matched = matched.min(m.matched);
+            matches.push(m);
+        }
+        if matched == 0 {
+            return (id, 0);
+        }
+        let need = matched.div_ceil(PAGE_SIZE);
+        for (stage, m) in self.stages.iter_mut().zip(&matches) {
+            let pages: Vec<Vec<usize>> = m.pages.iter().map(|p| p[..need].to_vec()).collect();
+            stage
+                .cache
+                .share_pages(id, &pages, matched)
+                .expect("prefix cache returned an invalid page run");
+        }
+        (id, matched)
     }
 
-    /// Publish `prompt`'s KV (fully prefilled on `id`) into the prefix
-    /// cache so later requests can skip its prefill. No-op when the prefix
-    /// cache is disabled.
+    /// Publish `prompt`'s KV (fully prefilled on `id`) into every stage's
+    /// prefix cache so later requests can skip its prefill. No-op when the
+    /// prefix cache is disabled.
     pub fn register_prefix(&mut self, id: SeqId, prompt: &[u32]) {
-        if let Some(pc) = self.prefix.as_mut() {
-            pc.insert(prompt, id, &mut self.cache)
-                .expect("publishing a prefilled prompt cannot fail");
+        for stage in &mut self.stages {
+            let Stage { cache, prefix, .. } = stage;
+            if let Some(pc) = prefix.as_mut() {
+                pc.insert(prompt, id, cache)
+                    .expect("publishing a prefilled prompt cannot fail");
+            }
         }
     }
 
-    /// Longest cached prefix of `prompt`, without mutating LRU state.
+    /// Longest cached prefix of `prompt` across all stages, without
+    /// mutating LRU state.
     pub fn cached_prefix_len(&self, prompt: &[u32]) -> usize {
-        self.prefix.as_ref().map_or(0, |pc| pc.peek(prompt))
+        self.stages
+            .iter()
+            .map(|s| s.prefix.as_ref().map_or(0, |pc| pc.peek(prompt)))
+            .min()
+            .unwrap_or(0)
     }
 
     /// Rebuild a migrated or checkpointed sequence from `snap`. When the
     /// snapshot omits a leading `by_ref_len` run, this engine's radix cache
     /// must still hold that prefix of `prompt` (the migration probe
-    /// promised it): the run is grafted by reference through COW page
-    /// sharing and only the remaining rows are written by value. Fails —
-    /// without leaking the sequence — if the promise broke (the prefix was
-    /// evicted between probe and restore); the caller then falls back to a
-    /// plain re-prefill.
+    /// promised it) — on every stage: the run is grafted by reference
+    /// through COW page sharing per stage and only the remaining rows are
+    /// written by value. The snapshot carries full composite geometry (all
+    /// stages' layers concatenated stage 0 first, wire-identical to a plain
+    /// engine's), so plain↔pipelined cross-migration needs no wire change.
+    /// Fails — without leaking the sequence on any stage — if the promise
+    /// broke (the prefix was evicted between probe and restore); the caller
+    /// then falls back to a plain re-prefill.
     pub fn restore_sequence(&mut self, snap: &KvSnapshot, prompt: &[u32]) -> Result<SeqId> {
-        let id = self.cache.alloc_seq();
-        let grafted = if snap.by_ref_len == 0 {
-            Ok(())
-        } else {
-            match self.prefix.as_mut() {
-                None => Err(anyhow::anyhow!("by-ref snapshot but prefix cache is disabled")),
-                Some(pc) => {
+        ensure!(
+            snap.n_layers == self.dims.n_layers && snap.d_model == self.dims.d_model,
+            "snapshot geometry {}x{} != engine {}x{}",
+            snap.n_layers,
+            snap.d_model,
+            self.dims.n_layers,
+            self.dims.d_model
+        );
+        let id = self.new_sequence();
+        let layer_counts: Vec<usize> = self.stages.iter().map(|s| s.n_layers()).collect();
+        let restored = (|| -> Result<()> {
+            let parts = snap.split_stages(&layer_counts)?;
+            for (stage, part) in self.stages.iter_mut().zip(&parts) {
+                if part.by_ref_len > 0 {
+                    let Stage { cache, prefix, .. } = stage;
+                    let Some(pc) = prefix.as_mut() else {
+                        bail!("by-ref snapshot but prefix cache is disabled");
+                    };
                     let m = pc.lookup(prompt);
-                    if m.matched < snap.by_ref_len {
-                        Err(anyhow::anyhow!(
+                    if m.matched < part.by_ref_len {
+                        bail!(
                             "cached prefix shrank to {} < promised {} tokens",
                             m.matched,
-                            snap.by_ref_len
-                        ))
-                    } else {
-                        let need = snap.by_ref_len.div_ceil(self.cache.page_size());
-                        let pages: Vec<Vec<usize>> =
-                            m.pages.iter().map(|p| p[..need].to_vec()).collect();
-                        self.cache.share_pages(id, &pages, snap.by_ref_len)
+                            part.by_ref_len
+                        );
                     }
+                    let need = part.by_ref_len.div_ceil(cache.page_size());
+                    let pages: Vec<Vec<usize>> =
+                        m.pages.iter().map(|p| p[..need].to_vec()).collect();
+                    cache.share_pages(id, &pages, part.by_ref_len)?;
                 }
+                stage.cache.restore_seq(id, part)?;
             }
-        };
-        if let Err(e) = grafted.and_then(|_| self.cache.restore_seq(id, snap)) {
-            self.cache.free_seq(id);
+            Ok(())
+        })();
+        if let Err(e) = restored {
+            self.free_sequence(id);
             return Err(e);
         }
         Ok(id)
+    }
+
+    /// Serialize one sequence's committed KV into a portable composite
+    /// [`KvSnapshot`]: the per-stage snapshots concatenated in stage order,
+    /// byte-identical on the wire to a plain engine's snapshot of the same
+    /// model. `from_pos` leading rows ride by reference (see
+    /// [`PagedKvCache::snapshot_seq`]).
+    pub fn snapshot_seq(&self, id: SeqId, from_pos: usize) -> Result<KvSnapshot> {
+        let parts: Result<Vec<KvSnapshot>> =
+            self.stages.iter().map(|s| s.cache.snapshot_seq(id, from_pos)).collect();
+        KvSnapshot::concat_stages(&parts?)
     }
 
     /// Artifact-free engine over a [`SimDevice`](crate::device::sim::SimDevice)
     /// with [`ModelWeights::synthetic`](crate::model::ModelWeights::synthetic)
     /// weights — one simulated ITA cartridge. Deterministic under
     /// `(cfg, seed)`; the deterministic test tier and the fleet example/bench
-    /// build their cartridges through this.
+    /// build their cartridges through this. The pipelined counterpart is
+    /// [`PipelineEngine::synthetic`](super::pipeline::PipelineEngine).
     pub fn synthetic(cfg: &crate::config::ModelConfig, seed: u64) -> Engine {
         let dev = crate::device::sim::SimDevice::synthetic(cfg, vec![1, 2, 4, 8], seed);
         let emb = EmbeddingTable::new(dev.weights().emb.clone());
         Engine::new(Box::new(dev), emb, cfg.n_heads)
     }
 
+    /// Composite geometry: `n_layers` is the sum over stages, so KV-size
+    /// estimators see the full pipelined footprint.
     pub fn dims(&self) -> DeviceDims {
-        self.device.dims()
+        self.dims
+    }
+
+    /// Pipeline depth (1 = plain engine).
+    pub fn n_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// The inter-stage activation link.
+    pub fn link(&self) -> Link {
+        self.link
+    }
+
+    /// Accumulated modeled inter-stage transfer cost (all zero for K=1).
+    pub fn link_stats(&self) -> LinkStats {
+        self.link_stats
     }
 
     pub fn max_batch(&self) -> usize {
-        self.device.buckets().iter().copied().max().unwrap_or(1)
+        self.stages[0].device.buckets().iter().copied().max().unwrap_or(1)
     }
 
     pub fn bucket_sizes(&self) -> Vec<usize> {
-        self.device.buckets().to_vec()
+        self.stages[0].device.buckets().to_vec()
     }
 
+    /// Allocate a fresh sequence on every stage. Stage caches allocate in
+    /// lockstep (all sequence ops fan out through the engine), so the ids
+    /// agree and one [`SeqId`] names the sequence on all of them.
     pub fn new_sequence(&mut self) -> SeqId {
-        self.cache.alloc_seq()
+        let id = self.stages[0].cache.alloc_seq();
+        for stage in &mut self.stages[1..] {
+            let sid = stage.cache.alloc_seq();
+            debug_assert_eq!(sid, id, "stage caches out of lockstep");
+        }
+        id
     }
 
     pub fn free_sequence(&mut self, id: SeqId) {
-        self.cache.free_seq(id);
+        for stage in &mut self.stages {
+            stage.cache.free_seq(id);
+        }
     }
 
     pub fn seq_len(&self, id: SeqId) -> usize {
-        self.cache.len(id)
+        self.stages[0].cache.len(id)
+    }
+
+    /// Pool statistics summed over stages: (allocated pages, free pages,
+    /// live sequences — identical on every stage, reported once).
+    pub fn cache_stats(&self) -> (usize, usize, usize) {
+        let mut alloc = 0;
+        let mut free = 0;
+        for stage in &self.stages {
+            let (a, f, _) = stage.cache.stats();
+            alloc += a;
+            free += f;
+        }
+        (alloc, free, self.stages[0].cache.stats().2)
     }
 
     pub fn traffic(&self) -> TrafficLedger {
         self.traffic
     }
 
-    pub fn device_stats(&self) -> crate::device::DeviceStats {
-        self.device.stats()
+    /// Device call/MAC counters summed over stages.
+    pub fn device_stats(&self) -> DeviceStats {
+        let mut total = DeviceStats::default();
+        for stage in &self.stages {
+            let st = stage.device.stats();
+            total.calls += st.calls;
+            total.macs += st.macs;
+            total.padded_rows += st.padded_rows;
+        }
+        total
     }
 
     /// Process one token for each row in the batch; returns logits
@@ -230,6 +429,13 @@ impl Engine {
     /// `tokens[i]` is fed at position `cache.len(id) + (#earlier rows of
     /// the same id in this batch)`. Causality holds because every row's
     /// K/V is appended before any row's attention runs.
+    ///
+    /// On a pipelined engine the wave flows stage 0 → K−1: each stage runs
+    /// its local layers against its own KV pages, then the hidden state
+    /// crosses the configured [`Link`] (b·d_model·2 bytes of INT16
+    /// activations, accumulated into [`link_stats`](Engine::link_stats) —
+    /// a modeled cost; the simulated handoff itself is exact, so
+    /// arithmetic and outputs are bit-identical to K=1).
     ///
     /// **Partial-prefill contract.** Because each row's position is derived
     /// from the committed cache length, a prefill interrupted after any
@@ -247,14 +453,15 @@ impl Engine {
     pub fn forward(&mut self, ids: &[SeqId], tokens: &[u32]) -> Result<Mat> {
         ensure!(ids.len() == tokens.len() && !ids.is_empty());
         ensure!(ids.len() <= self.max_batch(), "batch exceeds device buckets");
-        let dims = self.device.dims();
+        let dims = self.dims;
         let (b, d) = (ids.len(), dims.d_model);
 
-        // per-row positions, accounting for repeated sequence ids
+        // per-row positions, accounting for repeated sequence ids (stage
+        // caches advance in lockstep — stage 0 speaks for all)
         let mut positions = Vec::with_capacity(b);
         for i in 0..b {
             let earlier = ids[..i].iter().filter(|&&x| x == ids[i]).count();
-            positions.push(self.cache.len(ids[i]) + earlier);
+            positions.push(self.stages[0].cache.len(ids[i]) + earlier);
         }
 
         // host: embedding gather
@@ -262,79 +469,100 @@ impl Engine {
         self.emb.gather(tokens, &mut h.data);
 
         let mut attn_out = Mat::zeros(b, d);
-        for layer in 0..dims.n_layers {
-            // device: QKV projection (hardwired weights)
-            let (mut q, mut k, v) = self.device.qkv(layer, &h)?;
-            self.traffic.h2d_bytes += (b * d * 2) as u64; // h in
-            self.traffic.d2h_bytes += (3 * b * d * 2) as u64; // q,k,v out
-            self.traffic.protocol_d2h_bytes += (3 * b * d * 2) as u64;
-
-            // host: RoPE + KV append (serial: &mut cache) ...
-            for i in 0..b {
-                let pos = positions[i];
-                self.attn.apply_rope(q.row_mut(i), pos);
-                self.attn.apply_rope(k.row_mut(i), pos);
-                self.cache.append_at(ids[i], layer, pos, k.row(i), v.row(i))?;
+        let n_stages = self.stages.len();
+        for si in 0..n_stages {
+            if si > 0 {
+                // stage boundary: the INT16 hidden state streams to the
+                // next cartridge over the link (modeled cost only)
+                let hop = Link::activation_hop_bytes(b, d);
+                self.link_stats.hops += 1;
+                self.link_stats.bytes += hop;
+                self.link_stats.modeled_time_s += self.link.transfer_time_s(hop);
             }
-            // ... then attention for every sequence — in parallel only when
-            // the per-row work amortizes a thread spawn (long contexts);
-            // short-context batches run serially on the reused scratch
-            let max_work = positions.iter().map(|p| (p + 1) * d).max().unwrap_or(0);
-            if b == 1 || max_work < PARALLEL_ATTENTION_MIN_WORK {
+            let stage = &mut self.stages[si];
+            let stage_layers = stage.n_layers();
+            for layer in 0..stage_layers {
+                // device: QKV projection (hardwired weights)
+                let (mut q, mut k, v) = stage.device.qkv(layer, &h)?;
+                self.traffic.h2d_bytes += (b * d * 2) as u64; // h in
+                self.traffic.d2h_bytes += (3 * b * d * 2) as u64; // q,k,v out
+                self.traffic.protocol_d2h_bytes += (3 * b * d * 2) as u64;
+
+                // host: RoPE + KV append (serial: &mut cache) ...
                 for i in 0..b {
-                    decode_attention(
-                        &self.attn,
-                        &self.cache,
-                        ids[i],
-                        layer,
-                        positions[i] + 1, // attends to itself
-                        q.row(i),
-                        attn_out.row_mut(i),
-                        &mut self.scratch,
-                    );
+                    let pos = positions[i];
+                    self.attn.apply_rope(q.row_mut(i), pos);
+                    self.attn.apply_rope(k.row_mut(i), pos);
+                    stage.cache.append_at(ids[i], layer, pos, k.row(i), v.row(i))?;
                 }
-            } else {
-                let cache = &self.cache;
-                let attn = &self.attn;
-                let d_model = d;
-                let q_ref = &q;
-                let mut rows: Vec<&mut [f32]> = attn_out.data.chunks_mut(d_model).collect();
-                std::thread::scope(|s| {
-                    for (i, row) in rows.drain(..).enumerate() {
-                        let id = ids[i];
-                        let pos = positions[i];
-                        s.spawn(move || {
-                            let mut scratch = AttentionScratch::new();
-                            decode_attention(
-                                attn,
-                                cache,
-                                id,
-                                layer,
-                                pos + 1,
-                                q_ref.row(i),
-                                row,
-                                &mut scratch,
-                            );
-                        });
+                // ... then attention for every sequence — in parallel only when
+                // the per-row work amortizes a thread spawn (long contexts);
+                // short-context batches run serially on the reused scratch
+                let max_work = positions.iter().map(|p| (p + 1) * d).max().unwrap_or(0);
+                if b == 1 || max_work < PARALLEL_ATTENTION_MIN_WORK {
+                    for i in 0..b {
+                        decode_attention(
+                            &self.attn,
+                            &stage.cache,
+                            ids[i],
+                            layer,
+                            positions[i] + 1, // attends to itself
+                            q.row(i),
+                            attn_out.row_mut(i),
+                            &mut self.scratch,
+                        );
                     }
-                });
-            }
+                } else {
+                    let cache = &stage.cache;
+                    let attn = &self.attn;
+                    let d_model = d;
+                    let q_ref = &q;
+                    let mut rows: Vec<&mut [f32]> =
+                        attn_out.data.chunks_mut(d_model).collect();
+                    std::thread::scope(|s| {
+                        for (i, row) in rows.drain(..).enumerate() {
+                            let id = ids[i];
+                            let pos = positions[i];
+                            s.spawn(move || {
+                                let mut scratch = AttentionScratch::new();
+                                decode_attention(
+                                    attn,
+                                    cache,
+                                    id,
+                                    layer,
+                                    pos + 1,
+                                    q_ref.row(i),
+                                    row,
+                                    &mut scratch,
+                                );
+                            });
+                        }
+                    });
+                }
 
-            // device: Wo + residual + FFN
-            h = self.device.ffn(layer, &h, &attn_out)?;
-            self.traffic.h2d_bytes += (2 * b * d * 2) as u64; // h + attn in
-            self.traffic.d2h_bytes += (b * d * 2) as u64; // h_next out
-            self.traffic.protocol_h2d_bytes += (b * d * 2) as u64; // attn in
+                // device: Wo + residual + FFN
+                h = stage.device.ffn(layer, &h, &attn_out)?;
+                self.traffic.h2d_bytes += (2 * b * d * 2) as u64; // h + attn in
+                self.traffic.d2h_bytes += (b * d * 2) as u64; // h_next out
+                self.traffic.protocol_h2d_bytes += (b * d * 2) as u64; // attn in
+            }
         }
 
-        // commit the token for every sequence
+        // commit the token for every sequence, on every stage
         for &id in ids {
-            self.cache.advance(id)?;
+            for stage in &mut self.stages {
+                stage.cache.advance(id)?;
+            }
         }
         self.tokens_processed += b as u64;
 
-        // device: final logits
-        let logits = self.device.logits(&h)?;
+        // device: final logits (last stage holds the LM head)
+        let logits = self
+            .stages
+            .last_mut()
+            .ok_or_else(|| anyhow!("engine has no stages"))?
+            .device
+            .logits(&h)?;
         self.traffic.h2d_bytes += (b * d * 2) as u64;
         self.traffic.d2h_bytes += (b * dims.vocab * 2) as u64;
         self.traffic.protocol_d2h_bytes += (b * dims.vocab * 2) as u64;
@@ -362,14 +590,17 @@ impl Engine {
         self.forward(&vec![id; tokens.len()], tokens)
     }
 
-    /// Roll a sequence's committed KV back to `new_len` rows, discarding
-    /// the rows speculative decoding committed for rejected draft tokens.
-    /// Shared/COW pages are never disturbed (see
+    /// Roll a sequence's committed KV back to `new_len` rows — on every
+    /// stage — discarding the rows speculative decoding committed for
+    /// rejected draft tokens. Shared/COW pages are never disturbed (see
     /// [`PagedKvCache::truncate_seq`](crate::host::kv_cache::PagedKvCache::truncate_seq));
     /// the interface-traffic and MAC ledgers keep the rolled-back rows —
     /// the device really did that work.
     pub fn truncate_sequence(&mut self, id: SeqId, new_len: usize) -> Result<()> {
-        self.cache.truncate_seq(id, new_len)
+        for stage in &mut self.stages {
+            stage.cache.truncate_seq(id, new_len)?;
+        }
+        Ok(())
     }
 
     /// Prefill a prompt; returns the logits row after the last token.
@@ -443,6 +674,9 @@ mod tests {
         assert_eq!(logits.cols, cfg.vocab);
         assert!(logits.data.iter().all(|v| v.is_finite()));
         assert_eq!(e.seq_len(s), 1);
+        // a plain engine is the K=1 pipeline: no stages, no link traffic
+        assert_eq!(e.n_stages(), 1);
+        assert_eq!(e.link_stats(), LinkStats::default());
     }
 
     #[test]
@@ -466,7 +700,7 @@ mod tests {
         let mut a = Engine::synthetic(&cfg, 5);
         let sa = a.new_sequence();
         a.prefill(sa, &toks).unwrap();
-        let snap = a.cache.snapshot_seq(sa, 0).unwrap();
+        let snap = a.snapshot_seq(sa, 0).unwrap();
         let mut b = Engine::synthetic(&cfg, 5);
         let sb = b.restore_sequence(&snap, &toks).unwrap();
         assert_eq!(b.seq_len(sb), a.seq_len(sa));
@@ -625,10 +859,10 @@ mod tests {
         let Some(mut e) = engine() else { return };
         let s = e.new_sequence();
         e.forward(&[s], &[5]).unwrap();
-        let (alloc, _, _) = e.cache.stats();
+        let (alloc, _, _) = e.cache_stats();
         assert!(alloc > 0);
         e.free_sequence(s);
-        let (_, free, live) = e.cache.stats();
+        let (_, free, live) = e.cache_stats();
         assert_eq!(free, alloc);
         assert_eq!(live, 0);
     }

@@ -11,8 +11,14 @@ pub struct LatencyRecorder {
 }
 
 impl LatencyRecorder {
+    /// Record one sample. Non-finite values (NaN/±inf — a poisoned clock
+    /// delta) are dropped at the door so they can never reach the sort in
+    /// [`percentile`](LatencyRecorder::percentile) or skew
+    /// [`mean`](LatencyRecorder::mean).
     pub fn record(&mut self, seconds: f64) {
-        self.samples_s.push(seconds);
+        if seconds.is_finite() {
+            self.samples_s.push(seconds);
+        }
     }
 
     /// Fold another recorder's samples in (fleet aggregation).
@@ -31,13 +37,17 @@ impl LatencyRecorder {
         self.samples_s.iter().sum::<f64>() / self.samples_s.len() as f64
     }
 
-    /// Percentile in [0, 100].
+    /// Percentile; `p` is clamped to [0, 100] (p=110 used to index past
+    /// the end and panic). Total order via `f64::total_cmp` — no
+    /// `partial_cmp().unwrap()` to die on, though `record` already keeps
+    /// non-finite samples out.
     pub fn percentile(&self, p: f64) -> f64 {
         if self.samples_s.is_empty() {
             return 0.0;
         }
         let mut s = self.samples_s.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s.sort_by(f64::total_cmp);
+        let p = p.clamp(0.0, 100.0);
         let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
         s[idx]
     }
@@ -226,6 +236,22 @@ pub struct ServingMetrics {
     /// cartridge's acceptance profile is not lost with it.
     pub spec_accept: RatioHistogram,
     pub batch_waste: f64,
+    /// Pipeline depth of the engine behind these metrics (1 = plain
+    /// cartridge). Merging takes the max — a fleet aggregate reports its
+    /// deepest pipeline.
+    pub pipeline_stages: u64,
+    /// Inter-stage activation transfers (0 for K=1).
+    pub link_hops: u64,
+    /// Bytes moved stage→stage (INT16 hidden states; 0 for K=1).
+    pub link_bytes: u64,
+    /// Modeled wall time of the inter-stage transfers on the engine's
+    /// configured link.
+    pub link_time_s: f64,
+    /// Stage-slot pairs scheduled (pipeline occupancy denominator; see
+    /// [`BatchStats::stage_occupancy`](super::batcher::BatchStats)).
+    pub stage_slots: u64,
+    /// Stage-slot pairs that carried a wave (occupancy numerator).
+    pub stage_busy_slots: u64,
     pub interface_bytes: u64,
     pub device_macs: u64,
     /// Full interface ledger of this engine's cartridge, so the paper's
@@ -250,6 +276,24 @@ impl ServingMetrics {
             return 0.0;
         }
         self.spec_accepted as f64 / self.spec_proposed as f64
+    }
+
+    /// Fraction of pipeline stage slots that carried a wave. 1.0 for a
+    /// plain engine (no fill/drain bubble) or before anything ran.
+    pub fn stage_occupancy(&self) -> f64 {
+        if self.stage_slots == 0 {
+            return 1.0;
+        }
+        self.stage_busy_slots as f64 / self.stage_slots as f64
+    }
+
+    /// Share of the wall clock the modeled inter-stage transfers account
+    /// for (0.0 for K=1 or a clockless snapshot).
+    pub fn link_share(&self) -> f64 {
+        if self.wall_s == 0.0 {
+            return 0.0;
+        }
+        self.link_time_s / self.wall_s
     }
 
     /// Clone the counters and ledgers, leaving the per-sample latency
@@ -279,6 +323,12 @@ impl ServingMetrics {
             spec_rollbacks: self.spec_rollbacks,
             spec_accept: self.spec_accept.clone(),
             batch_waste: self.batch_waste,
+            pipeline_stages: self.pipeline_stages,
+            link_hops: self.link_hops,
+            link_bytes: self.link_bytes,
+            link_time_s: self.link_time_s,
+            stage_slots: self.stage_slots,
+            stage_busy_slots: self.stage_busy_slots,
             interface_bytes: self.interface_bytes,
             device_macs: self.device_macs,
             traffic: self.traffic,
@@ -311,6 +361,12 @@ impl ServingMetrics {
         self.spec_accepted += other.spec_accepted;
         self.spec_rollbacks += other.spec_rollbacks;
         self.spec_accept.merge(&other.spec_accept);
+        self.pipeline_stages = self.pipeline_stages.max(other.pipeline_stages);
+        self.link_hops += other.link_hops;
+        self.link_bytes += other.link_bytes;
+        self.link_time_s += other.link_time_s;
+        self.stage_slots += other.stage_slots;
+        self.stage_busy_slots += other.stage_busy_slots;
         self.interface_bytes += other.interface_bytes;
         self.device_macs += other.device_macs;
         self.traffic.add(&other.traffic);
@@ -328,6 +384,7 @@ impl ServingMetrics {
              spec_proposed={} spec_accepted={} spec_rollbacks={} spec_accept_rate={:.2} \
              wall={:.2}s decode_throughput={:.1} tok/s ttft_p50={:.1}ms ttft_p95={:.1}ms \
              itl_p50={:.2}ms itl_p95={:.2}ms itl_step_p99={:.2}ms batch_waste={:.1}% \
+             stages={} stage_occupancy={:.2} link_bytes={} \
              interface={:.2} MB device_macs={:.2}G",
             self.requests_completed,
             self.tokens_prefilled,
@@ -350,6 +407,9 @@ impl ServingMetrics {
             self.itl.percentile(95.0) * 1e3,
             self.itl_step.percentile(99.0) * 1e3,
             self.batch_waste * 100.0,
+            self.pipeline_stages.max(1),
+            self.stage_occupancy(),
+            self.link_bytes,
             self.interface_bytes as f64 / 1e6,
             self.device_macs as f64 / 1e9,
         )
@@ -519,6 +579,37 @@ mod tests {
     }
 
     #[test]
+    fn percentile_survives_nan_samples() {
+        // regression: a NaN sample used to kill the whole recorder —
+        // `sort_by(partial_cmp().unwrap())` panicked on the first query.
+        // Non-finite samples are now dropped at record time.
+        let mut r = LatencyRecorder::default();
+        r.record(0.2);
+        r.record(f64::NAN);
+        r.record(0.1);
+        r.record(f64::INFINITY);
+        r.record(f64::NEG_INFINITY);
+        assert_eq!(r.count(), 2, "non-finite samples are dropped");
+        assert_eq!(r.percentile(0.0), 0.1);
+        assert_eq!(r.percentile(100.0), 0.2);
+        assert!((r.mean() - 0.15).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_clamps_out_of_range_p() {
+        // regression: p > 100 used to compute an index past the end and
+        // panic; p < 0 underflowed toward wrap. Both now clamp.
+        let mut r = LatencyRecorder::default();
+        for i in 1..=10 {
+            r.record(i as f64);
+        }
+        assert_eq!(r.percentile(110.0), 10.0);
+        assert_eq!(r.percentile(f64::INFINITY), 10.0);
+        assert_eq!(r.percentile(-5.0), 1.0);
+        assert_eq!(r.percentile(f64::NAN), 1.0, "NaN p clamps to the floor");
+    }
+
+    #[test]
     fn gap_histogram_buckets_and_percentiles() {
         let mut h = GapHistogram::default();
         assert_eq!(h.percentile(99.0), 0.0);
@@ -568,6 +659,125 @@ mod tests {
         other.record(0.5);
         h.merge(&other);
         assert_eq!(h.count(), 7);
+    }
+
+    #[test]
+    fn merging_empty_histograms_is_identity() {
+        // empty ⊕ empty stays empty; populated ⊕ empty is unchanged
+        let mut g = GapHistogram::default();
+        g.merge(&GapHistogram::default());
+        assert_eq!(g.count(), 0);
+        assert_eq!(g.percentile(50.0), 0.0);
+        g.record(100e-6);
+        let before = g.percentile(100.0);
+        g.merge(&GapHistogram::default());
+        assert_eq!(g.count(), 1);
+        assert_eq!(g.percentile(100.0), before);
+        let mut r = RatioHistogram::default();
+        r.merge(&RatioHistogram::default());
+        assert_eq!(r.count(), 0);
+        assert_eq!(r.mean(), 0.0);
+        r.record(0.5);
+        r.merge(&RatioHistogram::default());
+        assert_eq!(r.count(), 1);
+        assert!((r.mean() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gap_histogram_power_of_two_boundaries() {
+        // a sample at exactly 2^i µs belongs to bucket i (half-open
+        // [2^i, 2^(i+1)) ranges), so its reported upper edge is 2^(i+1) µs
+        for i in [0, 3, 10] {
+            let mut h = GapHistogram::default();
+            h.record(2f64.powi(i) * 1e-6);
+            let edge = h.percentile(100.0);
+            let expect = 2f64.powi(i + 1) * 1e-6;
+            assert!(
+                (edge - expect).abs() < expect * 1e-9,
+                "2^{i} µs reported edge {edge}, want {expect}"
+            );
+        }
+        // just under a boundary stays in the lower bucket
+        let mut h = GapHistogram::default();
+        h.record(8e-6 * 0.999);
+        assert!((h.percentile(100.0) - 8e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ratio_histogram_boundary_at_one() {
+        // exactly 1.0 lands in the top bucket (index 10), and the
+        // at-least query at 1.0 sees only those samples
+        let mut h = RatioHistogram::default();
+        h.record(1.0);
+        h.record(0.999); // bucket 9
+        h.record(0.9); // bucket 9 (half-open lower edge)
+        assert_eq!(h.count(), 3);
+        assert!((h.fraction_at_least(1.0) - 1.0 / 3.0).abs() < 1e-12);
+        assert!((h.fraction_at_least(0.9) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn counter_snapshot_keeps_histograms_drops_exact_recorders() {
+        // the worker-checkpoint strip: itl_step / spec_accept (fixed
+        // footprint) survive, ttft / itl (per-sample) are emptied
+        let mut m = ServingMetrics::default();
+        m.ttft.record(0.1);
+        m.itl.record(0.01);
+        m.itl_step.record(0.002);
+        m.itl_step.record(0.004);
+        m.spec_accept.record(0.75);
+        let c = m.clone_counters();
+        assert_eq!(c.ttft.count(), 0, "exact recorders are dropped");
+        assert_eq!(c.itl.count(), 0);
+        assert_eq!(c.itl_step.count(), 2, "itl_step survives the strip");
+        assert_eq!(
+            c.itl_step.percentile(100.0),
+            m.itl_step.percentile(100.0),
+            "bucket contents survive, not just counts"
+        );
+        assert_eq!(c.spec_accept.count(), 1, "spec_accept survives the strip");
+        assert!((c.spec_accept.mean() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pipeline_fields_merge_and_report() {
+        let mut a = ServingMetrics {
+            pipeline_stages: 2,
+            link_hops: 10,
+            link_bytes: 1000,
+            link_time_s: 0.5,
+            stage_slots: 30,
+            stage_busy_slots: 20,
+            wall_s: 2.0,
+            ..Default::default()
+        };
+        let b = ServingMetrics {
+            pipeline_stages: 4,
+            link_hops: 5,
+            link_bytes: 500,
+            link_time_s: 0.25,
+            stage_slots: 10,
+            stage_busy_slots: 10,
+            wall_s: 1.0,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.pipeline_stages, 4, "deepest pipeline wins");
+        assert_eq!(a.link_hops, 15);
+        assert_eq!(a.link_bytes, 1500);
+        assert!((a.link_time_s - 0.75).abs() < 1e-12);
+        assert!((a.stage_occupancy() - 0.75).abs() < 1e-12);
+        assert!((a.link_share() - 0.375).abs() < 1e-12);
+        // counter snapshots carry the pipeline fields
+        let c = a.clone_counters();
+        assert_eq!(c.pipeline_stages, 4);
+        assert_eq!(c.link_bytes, 1500);
+        assert_eq!(c.stage_slots, 40);
+        assert!(a.report().contains("stage_occupancy=0.75"));
+        // a plain engine's snapshot reports occupancy 1.0, link share 0
+        let plain = ServingMetrics::default();
+        assert_eq!(plain.stage_occupancy(), 1.0);
+        assert_eq!(plain.link_share(), 0.0);
     }
 
     #[test]

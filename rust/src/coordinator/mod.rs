@@ -17,6 +17,15 @@
 //!   synchronously so it is unit-testable without threads; greedy outputs
 //!   are byte-identical for every chunk budget
 //!   (`rust/tests/continuous_batching_sim.rs`).
+//! * [`pipeline`] — pipeline-parallel cartridge sharding: models larger
+//!   than one fixed-weight die run as K stage-cartridges, each holding a
+//!   contiguous layer slice and its own paged KV, with the INT16 hidden
+//!   state streaming stage → stage over a priced
+//!   [`Link`](crate::interface::link::Link).
+//!   [`PipelineEngine`](pipeline::PipelineEngine) builds an ordinary
+//!   [`Engine`], so everything above (scheduler, fleet, migration, spec
+//!   decode) treats a pipeline group as one logical cartridge; K=1 ≡ plain
+//!   and any-K ≡ K=1, byte-identical (`rust/tests/pipeline_sim.rs`).
 //! * [`spec`] — draft-cartridge speculative decoding: a scheduler built
 //!   over [`CartridgeEngines::with_draft`](spec::CartridgeEngines::with_draft)
 //!   pairs the target engine with a smaller draft engine; each greedy
@@ -71,6 +80,7 @@ pub mod batcher;
 pub mod engine;
 pub mod fleet;
 pub mod metrics;
+pub mod pipeline;
 pub mod request;
 pub mod scheduler;
 pub mod server;
@@ -83,6 +93,7 @@ pub use fleet::{
     Dispatch, Fleet, LeastLoaded, PrefixAffinity, Rebalance, ResultHandle, RoundRobin,
 };
 pub use metrics::{CartridgeMetrics, FleetMetrics, ServingMetrics};
+pub use pipeline::PipelineEngine;
 pub use request::{DecodeCheckpoint, GenRequest, GenResult};
 pub use server::Server;
 pub use spec::{CartridgeEngines, SpecOpts};

@@ -1,0 +1,215 @@
+//! Pipeline-parallel cartridge sharding (ROADMAP item 1; Cambricon-LLM in
+//! PAPERS.md): a model larger than one fixed-weight die is served by K
+//! stage-cartridges, each burned with a contiguous run of layers, with the
+//! INT16 hidden state streaming stage → stage over a host-priced [`Link`].
+//!
+//! [`PipelineEngine`] is the *builder*: it partitions a model's layers
+//! across K simulated stage devices and assembles them into the ordinary
+//! [`Engine`] via [`Engine::sharded`] — the scheduler, fleet, spec-decode,
+//! and migration layers see the same `Engine` type they always did, so a
+//! pipeline group IS one logical cartridge to everything above it.
+//!
+//! The safety rail is the repo's differential discipline:
+//! * K=1 is byte-identical to [`Engine::synthetic`] by construction (same
+//!   weight stream, same code path, no link hops);
+//! * any K is byte-identical to K=1, because stage handoff is exact in the
+//!   simulation (the link only accrues modeled cost) and every layer sees
+//!   the same hidden state and the same own-stage KV it would have seen
+//!   unsharded. Pinned in `rust/tests/pipeline_sim.rs`.
+
+use std::ops::Range;
+
+use crate::config::ModelConfig;
+use crate::coordinator::engine::Engine;
+use crate::device::sim::SimDevice;
+use crate::device::{DeviceDims, ItaDevice};
+use crate::host::embedding::EmbeddingTable;
+use crate::interface::link::Link;
+use crate::model::ModelWeights;
+
+/// Balanced contiguous partition of `n_layers` layers into `k` stages:
+/// the first `n_layers % k` stages take one extra layer. Every layer is
+/// covered exactly once, in order.
+pub fn partition_layers(n_layers: usize, k: usize) -> Vec<Range<usize>> {
+    assert!(k >= 1, "pipeline needs at least one stage");
+    assert!(k <= n_layers, "more stages ({k}) than layers ({n_layers})");
+    let base = n_layers / k;
+    let extra = n_layers % k;
+    let mut out = Vec::with_capacity(k);
+    let mut at = 0;
+    for s in 0..k {
+        let take = base + usize::from(s < extra);
+        out.push(at..at + take);
+        at += take;
+    }
+    debug_assert_eq!(at, n_layers);
+    out
+}
+
+/// Builder for a pipeline-sharded [`Engine`] over simulated stage devices.
+///
+/// ```no_run
+/// use ita::config::ModelConfig;
+/// use ita::coordinator::pipeline::PipelineEngine;
+/// use ita::interface::link::Link;
+/// let engine = PipelineEngine::new(2).link(Link::tb4())
+///     .synthetic(&ModelConfig::TINY, 7);
+/// assert_eq!(engine.n_stages(), 2);
+/// ```
+#[derive(Debug, Clone)]
+pub struct PipelineEngine {
+    stages: usize,
+    link: Link,
+    buckets: Vec<usize>,
+}
+
+impl PipelineEngine {
+    /// A K-stage pipeline over [`Link::pcie3_x4`] with the standard
+    /// `[1, 2, 4, 8]` batch buckets ([`Engine::synthetic`]'s defaults).
+    pub fn new(stages: usize) -> PipelineEngine {
+        assert!(stages >= 1, "pipeline needs at least one stage");
+        PipelineEngine { stages, link: Link::pcie3_x4(), buckets: vec![1, 2, 4, 8] }
+    }
+
+    /// Override the inter-stage activation link.
+    pub fn link(mut self, link: Link) -> PipelineEngine {
+        self.link = link;
+        self
+    }
+
+    /// Override the compiled batch buckets (every stage gets the same set).
+    pub fn buckets(mut self, buckets: Vec<usize>) -> PipelineEngine {
+        assert!(!buckets.is_empty());
+        self.buckets = buckets;
+        self
+    }
+
+    /// Build the sharded engine over synthetic weights. The full weight set
+    /// is generated ONCE from `(cfg, seed)` — exactly the stream
+    /// [`Engine::synthetic`] draws — and each stage device receives its
+    /// contiguous layer slice of it, so stage s runs bit-identical
+    /// arithmetic to layers `partition_layers(..)[s]` of the unsharded
+    /// engine. K=1 therefore *is* the plain synthetic engine.
+    pub fn synthetic(&self, cfg: &ModelConfig, seed: u64) -> Engine {
+        let full = ModelWeights::synthetic(cfg, seed);
+        let emb = EmbeddingTable::new(full.emb.clone());
+        let parts = partition_layers(cfg.n_layers, self.stages);
+        let mut devices: Vec<Box<dyn ItaDevice>> = Vec::with_capacity(self.stages);
+        let mut layers = full.layers.into_iter();
+        for range in &parts {
+            let stage_weights = ModelWeights {
+                layers: layers.by_ref().take(range.len()).collect(),
+                gf: full.gf.clone(),
+                we: full.we.clone(),
+                emb: full.emb.clone(),
+            };
+            let dims = DeviceDims {
+                d_model: cfg.d_model,
+                n_layers: range.len(),
+                d_ffn: cfg.d_ffn,
+                vocab: cfg.vocab,
+            };
+            devices.push(Box::new(SimDevice::from_weights(
+                dims,
+                stage_weights,
+                self.buckets.clone(),
+            )));
+        }
+        Engine::sharded(devices, emb, cfg.n_heads, self.link)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::host::tokenizer::ByteTokenizer;
+
+    #[test]
+    fn partition_is_balanced_contiguous_and_total() {
+        assert_eq!(partition_layers(4, 1), vec![0..4]);
+        assert_eq!(partition_layers(4, 2), vec![0..2, 2..4]);
+        assert_eq!(partition_layers(4, 4), vec![0..1, 1..2, 2..3, 3..4]);
+        assert_eq!(partition_layers(5, 2), vec![0..3, 3..5]);
+        assert_eq!(partition_layers(7, 3), vec![0..3, 3..5, 5..7]);
+        for (n, k) in [(1, 1), (13, 5), (32, 4), (40, 7)] {
+            let parts = partition_layers(n, k);
+            assert_eq!(parts.len(), k);
+            let mut at = 0;
+            for p in &parts {
+                assert_eq!(p.start, at, "contiguous");
+                assert!(!p.is_empty(), "no empty stage");
+                at = p.end;
+            }
+            assert_eq!(at, n, "covers all layers");
+            let sizes: Vec<usize> = parts.iter().map(|p| p.len()).collect();
+            let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(max - min <= 1, "balanced: {sizes:?}");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn partition_rejects_more_stages_than_layers() {
+        partition_layers(2, 3);
+    }
+
+    #[test]
+    fn k1_pipeline_is_plain_synthetic_engine() {
+        let cfg = ModelConfig::TINY;
+        let toks = ByteTokenizer::new().encode("pipeline k=1");
+        let mut plain = Engine::synthetic(&cfg, 11);
+        let mut piped = PipelineEngine::new(1).synthetic(&cfg, 11);
+        assert_eq!(piped.n_stages(), 1);
+        assert_eq!(piped.dims(), plain.dims());
+        let sa = plain.new_sequence();
+        let sb = piped.new_sequence();
+        let la = plain.prefill(sa, &toks).unwrap();
+        let lb = piped.prefill(sb, &toks).unwrap();
+        assert_eq!(la, lb, "K=1 pipeline must be byte-identical to plain");
+        assert_eq!(piped.link_stats().hops, 0, "K=1 never hops");
+    }
+
+    #[test]
+    fn k2_matches_k1_bit_for_bit() {
+        let cfg = ModelConfig::TINY; // 2 layers → 1 per stage
+        let toks = ByteTokenizer::new().encode("pipeline k=2");
+        let mut one = PipelineEngine::new(1).synthetic(&cfg, 21);
+        let mut two = PipelineEngine::new(2).synthetic(&cfg, 21);
+        let sa = one.new_sequence();
+        let sb = two.new_sequence();
+        assert_eq!(one.prefill(sa, &toks).unwrap(), two.prefill(sb, &toks).unwrap());
+        // decode a few greedy steps; logits stay identical
+        for t in [3u32, 99, 200] {
+            let la = one.forward(&[sa], &[t]).unwrap();
+            let lb = two.forward(&[sb], &[t]).unwrap();
+            assert_eq!(la.data, lb.data);
+        }
+        // link accounting: one hop per forward call on the 2-stage engine
+        let calls = (toks.len() as u64).div_ceil(one.max_batch() as u64) + 3;
+        assert_eq!(two.link_stats().hops, calls);
+        assert!(two.link_stats().modeled_time_s > 0.0);
+        assert_eq!(one.link_stats().hops, 0);
+    }
+
+    #[test]
+    fn custom_link_and_buckets_are_applied() {
+        let cfg = ModelConfig::TINY;
+        let e = PipelineEngine::new(2).link(Link::usb3()).buckets(vec![1, 2]).synthetic(&cfg, 3);
+        assert_eq!(e.link().kind, crate::interface::link::LinkKind::Usb3);
+        assert_eq!(e.max_batch(), 2);
+        assert_eq!(e.bucket_sizes(), vec![1, 2]);
+    }
+
+    #[test]
+    fn pipelined_snapshot_concatenates_to_full_geometry() {
+        let cfg = ModelConfig::TINY;
+        let toks = ByteTokenizer::new().encode("snap");
+        let mut e = PipelineEngine::new(2).synthetic(&cfg, 5);
+        let s = e.new_sequence();
+        e.prefill(s, &toks).unwrap();
+        let snap = e.snapshot_seq(s, 0).unwrap();
+        assert_eq!(snap.n_layers, cfg.n_layers);
+        assert_eq!(snap.d_model, cfg.d_model);
+        assert_eq!(snap.len, toks.len());
+    }
+}

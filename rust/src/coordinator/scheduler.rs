@@ -66,7 +66,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use super::batcher::{plan_mixed, BatchStats};
+use super::batcher::{plan_pipeline, BatchStats};
 use super::engine::Engine;
 use super::metrics::ServingMetrics;
 use super::request::{DecodeCheckpoint, FinishReason, GenRequest, GenResult};
@@ -359,9 +359,18 @@ impl Scheduler {
             self.metrics.prefill_chunks += 1;
         }
 
+        // stage-aware plan: rows compose into waves exactly as before; on a
+        // pipelined engine the waves additionally stream over the K stages
+        // (stage k+1 overlapping stage k), which the occupancy telemetry
+        // tracks. K=1 degenerates to the plain mixed plan.
         let buckets = self.engine.bucket_sizes();
-        let p = plan_mixed(decode_rows, rows.len() - decode_rows, &buckets);
-        self.batch_stats.record_mixed(&p);
+        let p = plan_pipeline(
+            decode_rows,
+            rows.len() - decode_rows,
+            &buckets,
+            self.engine.n_stages(),
+        );
+        self.batch_stats.record_pipeline(&p);
 
         // run the waves; sample decode rows and the final prompt row of
         // any sequence whose prefill completes this iteration, exactly as
@@ -378,7 +387,7 @@ impl Scheduler {
         let mut sampled: Vec<(usize, Vec<u32>, bool)> = Vec::new(); // (idx, tokens, first)
         let mut chains: Vec<Vec<Vec<f32>>> = vec![Vec::new(); self.active.len()];
         let mut offset = 0;
-        for w in &p.plan.waves {
+        for w in &p.mixed.plan.waves {
             let end = offset + w.rows;
             let logits = self.engine.forward(&ids[offset..end], &tokens[offset..end])?;
             let v = logits.cols;
@@ -680,7 +689,6 @@ impl Scheduler {
             .min(self.engine.seq_len(a.seq));
         let kv = self
             .engine
-            .cache
             .snapshot_seq(a.seq, by_ref)
             .expect("active sequences snapshot cleanly");
         self.engine.free_sequence(a.seq);
@@ -708,7 +716,6 @@ impl Scheduler {
             .map(|a| {
                 let kv = self
                     .engine
-                    .cache
                     .snapshot_seq(a.seq, 0)
                     .expect("active sequences snapshot cleanly");
                 let ckpt = DecodeCheckpoint {
@@ -828,6 +835,13 @@ impl Scheduler {
         m.wall_s = self.started.elapsed().as_secs_f64();
         m.batch_waste = self.batch_stats.waste();
         m.mixed_waves = self.batch_stats.mixed_waves;
+        m.pipeline_stages = self.engine.n_stages() as u64;
+        let link = self.engine.link_stats();
+        m.link_hops = link.hops;
+        m.link_bytes = link.bytes;
+        m.link_time_s = link.modeled_time_s;
+        m.stage_slots = self.batch_stats.stage_slots;
+        m.stage_busy_slots = self.batch_stats.busy_stage_slots;
         m.traffic = self.engine.traffic();
         m.interface_bytes = m.traffic.total();
         m.device_macs = self.engine.device_stats().macs;
@@ -992,7 +1006,7 @@ mod tests {
                 assert!(m.spec_acceptance() > 0.99);
             }
             // no KV leaked on either engine
-            assert_eq!(s.engine().cache.stats().2, 0);
+            assert_eq!(s.engine().cache_stats().2, 0);
         }
     }
 
@@ -1068,7 +1082,7 @@ mod tests {
         // request 0 is decoding: the report must equal the actual by-value
         // snapshot it would export right now
         let seq0 = s.active.iter().find(|a| a.req.id == 0).unwrap().seq;
-        let snap = s.engine().cache.snapshot_seq(seq0, 0).unwrap();
+        let snap = s.engine().snapshot_seq(seq0, 0).unwrap();
         assert_eq!(sizes[&0], snap.wire_bytes());
         assert!(sizes[&0] > 32);
         // request 1 is mid-prefill (chunk 4/38): it would export nothing
@@ -1097,7 +1111,7 @@ mod tests {
         assert!(ckpt.is_none(), "mid-prefill export must not carry a checkpoint");
         assert_eq!(a.metrics().migrated_out, 0);
         // the partial sequence's pages were freed with it
-        assert_eq!(a.engine().cache.stats().2, 0);
+        assert_eq!(a.engine().cache_stats().2, 0);
 
         let mut b = Scheduler::new(Engine::synthetic(&tiny, 7), opts);
         b.submit(req2);
@@ -1133,7 +1147,7 @@ mod tests {
         assert_eq!(ckpt.kv.by_ref_len, 0);
         // the exported sequence's pages left with it (the prefix cache may
         // still hold refs, but no live sequence remains)
-        assert_eq!(a.engine().cache.stats().2, 0);
+        assert_eq!(a.engine().cache_stats().2, 0);
 
         let mut b = Scheduler::new(Engine::synthetic(&crate::config::ModelConfig::TINY, 7), opts);
         b.submit(GenRequest::greedy(9, "unrelated warmup traffic", 4));
@@ -1205,7 +1219,7 @@ mod tests {
         assert_eq!(m.requests_completed, 7);
         assert!(m.tokens_generated >= 7);
         // all KV pages returned
-        let (_, free, live) = s.engine().cache.stats();
+        let (_, free, live) = s.engine().cache_stats();
         assert_eq!(live, 0);
         assert!(free > 0);
     }

@@ -328,7 +328,7 @@ impl SpecDecoder {
 
     /// Draft-engine KV pool statistics (for leak checks in tests).
     pub fn draft_cache_stats(&self) -> (usize, usize, usize) {
-        self.draft.cache.stats()
+        self.draft.cache_stats()
     }
 }
 

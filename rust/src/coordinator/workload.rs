@@ -7,6 +7,7 @@
 //! deterministic under a seed so every run in EXPERIMENTS.md is replayable.
 
 use crate::host::sampling::SamplingParams;
+use crate::host::tokenizer::ByteTokenizer;
 use crate::util::prng::Prng;
 
 use super::request::GenRequest;
@@ -67,6 +68,13 @@ const CORPUS: &[&str] = &[
 
 /// Generate a deterministic workload.
 pub fn generate(spec: &WorkloadSpec) -> Vec<TimedRequest> {
+    generate_with_corpus(spec, CORPUS)
+}
+
+/// As [`generate`], over a caller-supplied sentence corpus (tests use a
+/// multi-byte corpus to pin the UTF-8 handling).
+fn generate_with_corpus(spec: &WorkloadSpec, corpus: &[&str]) -> Vec<TimedRequest> {
+    let tok = ByteTokenizer::new();
     let mut rng = Prng::new(spec.seed);
     let mut t = 0.0;
     let mut out = Vec::with_capacity(spec.n_requests);
@@ -74,16 +82,25 @@ pub fn generate(spec: &WorkloadSpec) -> Vec<TimedRequest> {
         if let Arrivals::Poisson(rate) = spec.arrivals {
             t += rng.exponential(rate);
         }
-        // build a prompt of the target token length from corpus sentences
+        // build a prompt of the target length in pre-BOS *tokenizer tokens*
+        // from corpus sentences
         let target = rng.range_usize(spec.prompt_len.0, spec.prompt_len.1);
         let mut prompt = String::new();
-        while prompt.len() < target {
+        while tok.token_count(&prompt) - 1 < target {
             if !prompt.is_empty() {
                 prompt.push(' ');
             }
-            prompt.push_str(CORPUS[rng.range_usize(0, CORPUS.len() - 1)]);
+            prompt.push_str(corpus[rng.range_usize(0, corpus.len() - 1)]);
         }
-        prompt.truncate(target);
+        // trim to the token budget without splitting a UTF-8 scalar: the
+        // byte tokenizer emits one token per byte, so the byte offset of
+        // the budget may land mid-character — back off to a boundary
+        // rather than panic in String::truncate
+        let mut cut = target.min(prompt.len());
+        while !prompt.is_char_boundary(cut) {
+            cut -= 1;
+        }
+        prompt.truncate(cut);
         out.push(TimedRequest {
             at_s: t,
             request: GenRequest {
@@ -179,6 +196,40 @@ mod tests {
         let s = stats(&reqs);
         // 500 arrivals at 100/s ≈ 5 s ± statistical slack
         assert!((3.5..7.0).contains(&s.duration_s), "{}", s.duration_s);
+    }
+
+    #[test]
+    fn multibyte_corpus_never_panics_and_respects_token_budget() {
+        // regression: generate() used to measure prompts in bytes and call
+        // String::truncate at the raw byte offset, which panics on any
+        // corpus containing multi-byte characters. Lengths are tokenizer
+        // tokens now and the trim backs off to a char boundary.
+        let corpus: &[&str] = &[
+            "算力墙支配边缘推理场景。",
+            "重みはコンパイル時の定数です。",
+            "Κανονικά προσημασμένα ψηφία — μισοί αθροιστές.",
+            "Расщеплённый мозг: хост владеет состоянием.",
+        ];
+        let tok = ByteTokenizer::new();
+        forall("multibyte workload generation", 40, |g| {
+            let lo = g.usize_in(1, 12);
+            let hi = lo + g.usize_in(0, 40);
+            let spec = WorkloadSpec {
+                n_requests: 8,
+                arrivals: Arrivals::Closed,
+                prompt_len: (lo, hi),
+                output_len: (1, 4),
+                sampling: SamplingParams::greedy(),
+                seed: g.i64_in(0, 1 << 30) as u64,
+            };
+            for r in generate_with_corpus(&spec, corpus) {
+                // would have panicked above; also: never over budget, and
+                // the prompt round-trips the tokenizer cleanly
+                assert!(tok.token_count(&r.request.prompt) - 1 <= hi);
+                let ids = tok.encode(&r.request.prompt);
+                assert_eq!(ids.len(), r.request.prompt.len() + 1, "BOS + one token per byte");
+            }
+        });
     }
 
     #[test]

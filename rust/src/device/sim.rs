@@ -56,6 +56,17 @@ impl SimDevice {
         }
     }
 
+    /// Assemble a device from pre-built weights — the pipeline sharder's
+    /// entry point: it generates ONE full synthetic weight set, slices a
+    /// contiguous layer run per stage, and hands each slice here (so the
+    /// stage arithmetic is bit-identical to the unsharded device's).
+    /// `dims.n_layers` must match `weights.layers.len()`.
+    pub fn from_weights(dims: DeviceDims, weights: ModelWeights, buckets: Vec<usize>) -> SimDevice {
+        assert!(!buckets.is_empty());
+        assert_eq!(dims.n_layers, weights.layers.len());
+        SimDevice { dims, weights, buckets, stats: DeviceStats::default() }
+    }
+
     pub fn weights(&self) -> &ModelWeights {
         &self.weights
     }

@@ -89,6 +89,80 @@ impl KvSnapshot {
         out
     }
 
+    /// Concatenate per-stage snapshots of ONE sequence (each covering a
+    /// contiguous run of the model's layers, stage 0 first) into a single
+    /// full-geometry snapshot. Because the wire format is per-layer-major,
+    /// the result is byte-identical to a snapshot a plain unsharded engine
+    /// would have taken — so pipelined sequences migrate and checkpoint
+    /// over the existing wire with no format change. All parts must agree
+    /// on `d_model`, `len`, and `by_ref_len`.
+    pub fn concat_stages(parts: &[KvSnapshot]) -> Result<KvSnapshot> {
+        let first = parts.first().ok_or_else(|| anyhow!("concat_stages: no parts"))?;
+        let mut k = Vec::new();
+        let mut v = Vec::new();
+        let mut n_layers = 0;
+        for p in parts {
+            if p.d_model != first.d_model || p.len != first.len || p.by_ref_len != first.by_ref_len
+            {
+                bail!(
+                    "concat_stages: stage geometry mismatch ({}x{} rows {}/{} vs {}x{} rows {}/{})",
+                    p.n_layers,
+                    p.d_model,
+                    p.by_ref_len,
+                    p.len,
+                    first.n_layers,
+                    first.d_model,
+                    first.by_ref_len,
+                    first.len
+                );
+            }
+            n_layers += p.n_layers;
+            k.extend(p.k.iter().cloned());
+            v.extend(p.v.iter().cloned());
+        }
+        Ok(KvSnapshot {
+            n_layers,
+            d_model: first.d_model,
+            len: first.len,
+            by_ref_len: first.by_ref_len,
+            k,
+            v,
+        })
+    }
+
+    /// Inverse of [`concat_stages`](KvSnapshot::concat_stages): split a
+    /// full-geometry snapshot into per-stage snapshots covering
+    /// `layer_counts[s]` consecutive layers each (stage 0 first). The
+    /// counts must sum to `n_layers`. This is how a pipelined engine
+    /// restores a snapshot taken anywhere — by a plain engine or by a
+    /// pipeline of a different depth.
+    pub fn split_stages(&self, layer_counts: &[usize]) -> Result<Vec<KvSnapshot>> {
+        let total: usize = layer_counts.iter().sum();
+        if total != self.n_layers {
+            bail!(
+                "split_stages: stage layers sum to {total}, snapshot has {}",
+                self.n_layers
+            );
+        }
+        if layer_counts.iter().any(|&c| c == 0) {
+            bail!("split_stages: empty stage");
+        }
+        let mut parts = Vec::with_capacity(layer_counts.len());
+        let mut at = 0;
+        for &count in layer_counts {
+            parts.push(KvSnapshot {
+                n_layers: count,
+                d_model: self.d_model,
+                len: self.len,
+                by_ref_len: self.by_ref_len,
+                k: self.k[at..at + count].to_vec(),
+                v: self.v[at..at + count].to_vec(),
+            });
+            at += count;
+        }
+        Ok(parts)
+    }
+
     /// Decode a [`to_bytes`](KvSnapshot::to_bytes) buffer, validating
     /// geometry against the declared header.
     pub fn from_bytes(bytes: &[u8]) -> Result<KvSnapshot> {
@@ -951,6 +1025,64 @@ mod tests {
         let by_ref = c.snapshot_seq(a, 1).unwrap();
         let fresh = c.alloc_seq();
         assert!(c.restore_seq(fresh, &by_ref).is_err(), "fresh target lacks the prefix");
+    }
+
+    #[test]
+    fn concat_split_stages_roundtrip_wire_identical() {
+        // a 4-layer sequence split 2+1+1 and re-concatenated must be
+        // byte-identical on the wire to the unsplit snapshot — the property
+        // pipelined migration rides on
+        let d = 3;
+        let mut c = PagedKvCache::new(4, d, 2);
+        let a = c.alloc_seq();
+        for t in 0..5 {
+            for l in 0..4 {
+                c.append(a, l, &row(d, (10 * t + l) as f32), &row(d, -(t as f32))).unwrap();
+            }
+            c.advance(a).unwrap();
+        }
+        let whole = c.snapshot_seq(a, 1).unwrap();
+        let parts = whole.split_stages(&[2, 1, 1]).unwrap();
+        assert_eq!(parts.len(), 3);
+        assert_eq!(parts[0].n_layers, 2);
+        for p in &parts {
+            assert_eq!((p.len, p.by_ref_len, p.d_model), (5, 1, d));
+        }
+        let back = KvSnapshot::concat_stages(&parts).unwrap();
+        assert_eq!(back, whole);
+        assert_eq!(back.to_bytes(), whole.to_bytes());
+        // each part restores into a cache of its own stage geometry
+        let mut stage0 = PagedKvCache::new(2, d, 4);
+        let s = stage0.alloc_seq();
+        // fake the by-ref prefix row so committed length matches
+        stage0.append(s, 0, &row(d, 0.0), &row(d, 0.0)).unwrap();
+        stage0.append(s, 1, &row(d, 1.0), &row(d, 0.0)).unwrap();
+        stage0.advance(s).unwrap();
+        stage0.restore_seq(s, &parts[0]).unwrap();
+        assert_eq!(stage0.len(s), 5);
+    }
+
+    #[test]
+    fn concat_split_stages_reject_bad_geometry() {
+        let d = 2;
+        let mut c = PagedKvCache::new(3, d, 2);
+        let a = c.alloc_seq();
+        for _ in 0..2 {
+            for l in 0..3 {
+                c.append(a, l, &row(d, 1.0), &row(d, 1.0)).unwrap();
+            }
+            c.advance(a).unwrap();
+        }
+        let snap = c.snapshot_seq(a, 0).unwrap();
+        assert!(snap.split_stages(&[2, 2]).is_err(), "counts exceed layers");
+        assert!(snap.split_stages(&[3, 0]).is_err(), "empty stage");
+        assert!(snap.split_stages(&[2]).is_err(), "counts fall short");
+        assert!(KvSnapshot::concat_stages(&[]).is_err(), "no parts");
+        // parts disagreeing on len are rejected
+        let mut parts = snap.split_stages(&[1, 1, 1]).unwrap();
+        parts[1].len += 1;
+        parts[1].by_ref_len += 1; // keep value_rows consistent
+        assert!(KvSnapshot::concat_stages(&parts).is_err());
     }
 
     #[test]

@@ -92,6 +92,13 @@ impl Link {
     pub fn sustains(&self, bytes_per_s: f64) -> bool {
         self.effective_bps >= bytes_per_s
     }
+
+    /// Bytes of one pipeline-stage activation handoff: `rows` INT16
+    /// hidden-state vectors of width `d_model` (2 bytes per element —
+    /// the inter-cartridge wire format of the sharded engine).
+    pub const fn activation_hop_bytes(rows: usize, d_model: usize) -> u64 {
+        (rows * d_model * 2) as u64
+    }
 }
 
 #[cfg(test)]
@@ -122,6 +129,16 @@ mod tests {
         for l in Link::ALL {
             assert!(l.sustains(16.64e6), "{:?}", l.kind);
         }
+    }
+
+    #[test]
+    fn activation_hop_is_int16_rows() {
+        assert_eq!(Link::activation_hop_bytes(1, 64), 128);
+        assert_eq!(Link::activation_hop_bytes(8, 768), 8 * 768 * 2);
+        assert_eq!(Link::activation_hop_bytes(0, 4096), 0);
+        // a single decode row at d=768 crosses PCIe in ~2 µs-dominated time
+        let t = Link::pcie3_x4().transfer_time_s(Link::activation_hop_bytes(1, 768));
+        assert!(t > 2e-6 && t < 3e-6, "{t}");
     }
 
     #[test]

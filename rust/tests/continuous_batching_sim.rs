@@ -230,8 +230,8 @@ fn chunked_prefill_kv_pages_bit_identical_for_random_budgets() {
         }
 
         assert_eq!(whole.seq_len(sa), chunked.seq_len(sb));
-        let snap_whole = whole.cache.snapshot_seq(sa, 0).unwrap();
-        let snap_chunked = chunked.cache.snapshot_seq(sb, 0).unwrap();
+        let snap_whole = whole.snapshot_seq(sa, 0).unwrap();
+        let snap_chunked = chunked.snapshot_seq(sb, 0).unwrap();
         assert_eq!(
             snap_whole, snap_chunked,
             "chunked prefill KV diverged (case seed {:#x})",

@@ -81,7 +81,7 @@ fn transcripts_byte_identical_for_every_depth() {
             assert!(m.spec_proposed > 0, "depth {k}: no speculation happened");
             assert_eq!(m.spec_proposed, m.spec_accepted + m.spec_rollbacks);
             // every KV page returned on the target once all requests done
-            let (_, _, live) = sched.engine().cache.stats();
+            let (_, _, live) = sched.engine().cache_stats();
             assert_eq!(live, 0, "leaked target sequences");
         }
         // adaptive depth is a scheduling policy, never an output change
