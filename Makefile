@@ -7,7 +7,7 @@ ARTIFACTS ?= artifacts
 CONFIGS   ?= tiny,demo-100m
 PY        ?= python3
 
-.PHONY: all build test bench-build bench-smoke smoke docs artifacts clean-artifacts
+.PHONY: all build test bench-build bench-smoke smoke trace-check docs artifacts clean-artifacts
 
 all: build
 
@@ -32,6 +32,16 @@ bench-smoke:
 smoke:
 	ITA_FLEET_CARTRIDGES=2 ITA_FLEET_REQUESTS=12 ITA_FLEET_TOKENS=8 \
 		cargo run --release --example serve_fleet
+
+# Observability smoke: serve with tracing on, emit the Perfetto timeline +
+# metrics snapshot (JSON and Prometheus text), then schema-check both —
+# including the rail that every request's queued+active spans sum to its
+# reported E2E latency. See docs/observability.md.
+trace-check:
+	ITA_FLEET_CARTRIDGES=2 ITA_FLEET_REQUESTS=12 ITA_FLEET_TOKENS=8 \
+		ITA_FLEET_TRACE=trace.json ITA_FLEET_METRICS=metrics.json \
+		cargo run --release --example serve_fleet
+	cargo run --release --example trace_check -- trace.json metrics.json
 
 # Build the public API docs with warnings denied (broken intra-doc links
 # and malformed examples fail). CI runs this; keep it green.

@@ -17,6 +17,9 @@
 //! * **pipeline sweep** (always runs): the same decode workload on a
 //!   K-stage pipelined cartridge group (K ∈ {1, 2, 4}), reporting tok/s,
 //!   per-stage occupancy, and the modeled link-transfer share.
+//! * **tracing overhead** (always runs): one decode workload with the
+//!   request-lifecycle trace recorder off vs on — the off path must stay
+//!   free (≤1% tok/s delta is the acceptance target).
 //! * **artifact tier**: the PJRT tiny/demo-100m cartridges when artifacts
 //!   and real bindings exist (skips quietly otherwise).
 //!
@@ -33,6 +36,7 @@ use std::time::Instant;
 use ita::config::ModelConfig;
 use ita::coordinator::engine::Engine;
 use ita::coordinator::fleet::{Fleet, LeastLoaded, PrefixAffinity, Rebalance};
+use ita::coordinator::metrics::ServingMetrics;
 use ita::coordinator::pipeline::PipelineEngine;
 use ita::coordinator::request::GenRequest;
 use ita::coordinator::scheduler::{Scheduler, SchedulerOpts};
@@ -42,52 +46,15 @@ use ita::device::sim::SimDevice;
 use ita::host::embedding::EmbeddingTable;
 use ita::host::sampling::SamplingParams;
 use ita::runtime::weights::load_artifacts;
+use ita::util::json::{json_array, Json};
 
-/// Minimal JSON object builder (no serde in the offline vendor set). Values
-/// arrive pre-encoded; the `num`/`float`/`str` helpers cover what we emit.
-#[derive(Default)]
-struct Json(Vec<(String, String)>);
-
-impl Json {
-    fn put(&mut self, key: &str, encoded_value: String) -> &mut Self {
-        self.0.push((key.to_string(), encoded_value));
-        self
-    }
-
-    fn num<T: std::fmt::Display>(&mut self, key: &str, v: T) -> &mut Self {
-        self.put(key, v.to_string())
-    }
-
-    fn float(&mut self, key: &str, v: f64) -> &mut Self {
-        // JSON has no NaN/inf; clamp to null rather than emit garbage
-        if v.is_finite() {
-            self.put(key, format!("{v:.4}"))
-        } else {
-            self.put(key, "null".to_string())
-        }
-    }
-
-    fn str(&mut self, key: &str, v: &str) -> &mut Self {
-        let escaped: String = v
-            .chars()
-            .flat_map(|c| match c {
-                '"' => vec!['\\', '"'],
-                '\\' => vec!['\\', '\\'],
-                c if (c as u32) < 0x20 => format!("\\u{:04x}", c as u32).chars().collect(),
-                c => vec![c],
-            })
-            .collect();
-        self.put(key, format!("\"{escaped}\""))
-    }
-
-    fn encode(&self) -> String {
-        let fields: Vec<String> = self.0.iter().map(|(k, v)| format!("\"{k}\": {v}")).collect();
-        format!("{{{}}}", fields.join(", "))
-    }
-}
-
-fn json_array(items: &[String]) -> String {
-    format!("[{}]", items.join(", "))
+/// The observability keys every sweep carries (schema v5): modeled
+/// joules/token from the device MAC ledger and the admission queue-wait
+/// percentiles. See `docs/observability.md` for the methodology.
+fn put_observability(j: &mut Json, m: &ServingMetrics) {
+    j.float("joules_per_token", m.joules_per_token());
+    j.float("queue_wait_p50_ms", m.queue_wait.percentile(50.0) * 1e3);
+    j.float("queue_wait_p99_ms", m.queue_wait.percentile(99.0) * 1e3);
 }
 
 /// Sweep cartridge count over a fixed workload; prints aggregate tok/s and
@@ -134,6 +101,7 @@ fn bench_fleet(cartridges: usize, n_requests: usize, max_tokens: usize) -> Strin
     j.float("tok_per_s", tokens as f64 / wall);
     j.num("requeued", m.requeued_requests);
     j.num("interface_bytes", m.aggregate().interface_bytes);
+    put_observability(&mut j, &m.aggregate());
     j.encode()
 }
 
@@ -192,6 +160,7 @@ fn bench_migration(n_requests: usize, long_tokens: usize, short_tokens: usize) -
     j.num("resumed_requests", agg.resumed_requests);
     j.num("restored_tokens", agg.restored_tokens);
     j.num("migrated_out", agg.migrated_out);
+    put_observability(&mut j, &agg);
     j.encode()
 }
 
@@ -283,6 +252,45 @@ fn bench_shared_prefix(n_requests: usize, max_tokens: usize) -> String {
     j.float("wall_s_cache_off", wall_off);
     j.float("wall_s_cache_on", wall_on);
     j.num("affinity_fleet_prefill_skipped", agg.prefill_skipped_tokens);
+    put_observability(&mut j, &m_on);
+    j.encode()
+}
+
+/// The zero-cost-when-disabled rail: run one decode-heavy scheduler
+/// workload with tracing off (the default) and again with a live trace
+/// ring, and record the tok/s delta. The disabled path is a single bool
+/// load per wave, so the delta should be wall-clock noise (the acceptance
+/// target is ≤1%); the record keeps it measurable across PRs rather than
+/// asserted in-process, where a loaded CI runner would flake.
+fn bench_tracing_overhead(n_requests: usize, max_tokens: usize) -> String {
+    let run = |trace_capacity: usize| {
+        let opts = SchedulerOpts { trace_capacity, ..SchedulerOpts::default() };
+        let mut sched = Scheduler::new(Engine::synthetic(&ModelConfig::TINY, 0x17A), opts);
+        for i in 0..n_requests {
+            let mut r =
+                GenRequest::greedy(i as u64, &format!("traced decode stream {i}"), max_tokens);
+            r.stop_at_eos = false;
+            sched.submit(r);
+        }
+        let t0 = Instant::now();
+        let results = sched.run_to_completion().expect("run");
+        let wall = t0.elapsed().as_secs_f64();
+        let tokens: usize = results.iter().map(|r| r.tokens.len()).sum();
+        (tokens as f64 / wall, tokens)
+    };
+    let (off, tokens) = run(0);
+    let (on, _) = run(1 << 16);
+    let delta_pct = (off - on) / off * 100.0;
+    println!(
+        "bench e2e/trace-overhead {tokens:>5} tokens: {off:>7.1} tok/s untraced, \
+         {on:>7.1} tok/s traced ({delta_pct:+.2}% delta)"
+    );
+    let mut j = Json::default();
+    j.num("requests", n_requests);
+    j.num("tokens", tokens);
+    j.float("tok_per_s_untraced", off);
+    j.float("tok_per_s_traced", on);
+    j.float("delta_pct", delta_pct);
     j.encode()
 }
 
@@ -342,6 +350,7 @@ fn bench_mixed_prefill_decode(chunk_tokens: usize, long_prompt_tokens: usize) ->
     j.float("itl_step_p50_ms", m.itl_step.percentile(50.0) * 1e3);
     j.float("itl_step_p99_ms", m.itl_step.percentile(99.0) * 1e3);
     j.float("itl_step_max_ms", m.itl_step.percentile(100.0) * 1e3);
+    put_observability(&mut j, &m);
     j.encode()
 }
 
@@ -396,6 +405,7 @@ fn bench_pipeline(stages: usize, n_requests: usize, max_tokens: usize) -> String
     j.num("link_bytes", m.link_bytes);
     j.float("link_time_s", m.link_time_s);
     j.float("link_share", m.link_share());
+    put_observability(&mut j, &m);
     j.encode()
 }
 
@@ -462,6 +472,7 @@ fn bench_spec_decode(depth: usize, n_requests: usize, max_tokens: usize) -> Stri
     j.float("acceptance_rate", m.spec_acceptance());
     j.float("itl_step_p50_ms", m.itl_step.percentile(50.0) * 1e3);
     j.float("itl_step_p99_ms", m.itl_step.percentile(99.0) * 1e3);
+    put_observability(&mut j, &m);
     j.encode()
 }
 
@@ -540,6 +551,9 @@ fn main() {
     // logical cartridge across K dies
     let pipeline_sweep: Vec<String> =
         [1usize, 2, 4].iter().map(|&k| bench_pipeline(k, 8, 32)).collect();
+    // request-lifecycle tracing must be free when off: same workload with
+    // the recorder disabled vs live, tok/s delta in the record
+    let tracing_overhead = bench_tracing_overhead(8, 64);
     bench_config("tiny", 16, 32);
     // saturate the largest compiled bucket: at the DRAM-streaming roofline
     // every extra row in a weight sweep is almost free (§Perf iteration 5)
@@ -551,13 +565,16 @@ fn main() {
     // v2: added the mixed_prefill_decode sweep (chunked-prefill ITL)
     // v3: added the spec_decode sweep (draft depth, acceptance, rollbacks)
     // v4: added the pipeline sweep (stage count, occupancy, link share)
-    root.num("schema_version", 4);
+    // v5: every sweep carries joules_per_token + queue_wait p50/p99; added
+    //     the tracing_overhead record (traced vs untraced tok/s delta)
+    root.num("schema_version", 5);
     root.put("fleet_sweep", json_array(&fleet_sweep));
     root.put("shared_prefix", shared_prefix);
     root.put("migration", migration);
     root.put("mixed_prefill_decode", json_array(&mixed_sweep));
     root.put("spec_decode", json_array(&spec_sweep));
     root.put("pipeline", json_array(&pipeline_sweep));
+    root.put("tracing_overhead", tracing_overhead);
     let path = std::env::var("ITA_BENCH_JSON").unwrap_or_else(|_| "BENCH_e2e.json".into());
     match std::fs::write(&path, root.encode() + "\n") {
         Ok(()) => println!("bench e2e: wrote perf record to {path}"),

@@ -3,9 +3,11 @@
 //! queue, then reconcile fleet-level metrics against the per-cartridge
 //! breakdowns (the paper's Eq. 7–11 interface accounting stays per-device).
 //!
-//!     cargo run --release --example serve_fleet
+//!     cargo run --release --example serve_fleet -- [--trace out.json]
+//!     [--metrics metrics.json]
 //!     [ITA_FLEET_CARTRIDGES=4] [ITA_FLEET_REQUESTS=32] [ITA_FLEET_TOKENS=16]
-//!     [ITA_FLEET_DISPATCH=affinity|least-loaded|rebalance]
+//!     [ITA_FLEET_DISPATCH=affinity|least-loaded|rebalance|energy]
+//!     [ITA_FLEET_TRACE=out.json] [ITA_FLEET_METRICS=metrics.json]
 //!
 //! Runs artifact-free: each cartridge is an `Engine::synthetic` SimDevice
 //! (identical weights per cartridge, as if N copies of one neural cartridge
@@ -13,6 +15,13 @@
 //! The workload draws prompts from a small corpus, so repeated prefixes hit
 //! each cartridge's radix prefix cache; the default `affinity` dispatch
 //! routes shared prefixes onto the cartridge already holding them.
+//!
+//! With `--trace` the fleet records every request's lifecycle (admit, queue
+//! wait, prefill chunks, waves, speculation, checkpoint/migrate, complete)
+//! and writes a Chrome/Perfetto `trace_events` JSON — open it at
+//! <https://ui.perfetto.dev>. With `--metrics` it writes the unified
+//! `MetricsRegistry` snapshot as JSON plus a Prometheus text exposition at
+//! `<path>.prom`. See `docs/observability.md`.
 
 use std::time::{Duration, Instant};
 
@@ -20,12 +29,24 @@ use anyhow::Result;
 
 use ita::config::ModelConfig;
 use ita::coordinator::engine::Engine;
-use ita::coordinator::fleet::{Dispatch, Fleet, LeastLoaded, PrefixAffinity, Rebalance};
+use ita::coordinator::fleet::{
+    Dispatch, EnergyAware, Fleet, LeastLoaded, PrefixAffinity, Rebalance,
+};
+use ita::coordinator::metrics::MetricsRegistry;
 use ita::coordinator::scheduler::SchedulerOpts;
 use ita::coordinator::workload::{self, Arrivals, WorkloadSpec};
 
 fn env_or(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// `--flag value` from argv, falling back to an environment variable.
+fn arg_or_env(flag: &str, env: &str) -> Option<String> {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == flag)
+        .and_then(|i| args.get(i + 1).cloned())
+        .or_else(|| std::env::var(env).ok())
 }
 
 fn main() -> Result<()> {
@@ -38,14 +59,26 @@ fn main() -> Result<()> {
         "least-loaded" => Box::new(LeastLoaded),
         // prefix-affinity placement + live KV migration off hot cartridges
         "rebalance" => Box::new(Rebalance::new(Box::new(PrefixAffinity::new()))),
+        // modeled joules/token routing with thermal backoff
+        "energy" => Box::new(EnergyAware::new()),
         _ => Box::new(PrefixAffinity::new()),
     };
+    let trace_path = arg_or_env("--trace", "ITA_FLEET_TRACE");
+    let metrics_path = arg_or_env("--metrics", "ITA_FLEET_METRICS");
 
     println!("== ITA fleet serving driver ==");
     println!(
         "cartridges={cartridges} requests={n_requests} max_new_tokens={max_tokens} \
-         dispatch={dispatch_name}\n"
+         dispatch={dispatch_name} trace={}\n",
+        trace_path.as_deref().unwrap_or("off")
     );
+
+    let mut opts = SchedulerOpts::default();
+    if trace_path.is_some() {
+        // per-cartridge ring: plenty for the smoke workloads, drops oldest
+        // (and reports the drop count in the trace) if a run outgrows it
+        opts.trace_capacity = 1 << 16;
+    }
 
     let t_boot = Instant::now();
     let fleet = Fleet::with_dispatch(
@@ -56,7 +89,7 @@ fn main() -> Result<()> {
             eprintln!("[boot] cartridge {id} ready (synthetic tiny weights)");
             Ok(engine)
         },
-        SchedulerOpts::default(),
+        opts,
         dispatch,
     )?;
     println!("fleet up in {:.2}s ({cartridges} cartridges)\n", t_boot.elapsed().as_secs_f64());
@@ -89,7 +122,7 @@ fn main() -> Result<()> {
     }
     let wall = t0.elapsed().as_secs_f64();
 
-    let m = fleet.shutdown()?;
+    let (m, trace) = fleet.shutdown_traced()?;
     println!("\n== results ==");
     println!("{}", m.report());
     println!(
@@ -118,5 +151,33 @@ fn main() -> Result<()> {
         total_prompt,
         100.0 * agg.prefill_skipped_tokens as f64 / total_prompt.max(1) as f64
     );
+
+    if let Some(path) = &trace_path {
+        std::fs::write(path, trace.perfetto_json())?;
+        println!(
+            "\ntrace: {} events ({} dropped) -> {path} (open at ui.perfetto.dev)",
+            trace.events.len(),
+            trace.dropped
+        );
+        // flight recorder: the slowest requests, with their full event chains
+        for c in trace.request_chains().into_iter().take(3) {
+            let waves =
+                c.events.iter().filter(|e| e.kind == ita::coordinator::TraceKind::Wave).count();
+            println!(
+                "  slowest req {}: {:.2} ms end-to-end, {} events, {} waves",
+                c.req,
+                c.total_us as f64 / 1e3,
+                c.events.len(),
+                waves
+            );
+        }
+    }
+    if let Some(path) = &metrics_path {
+        let snap = MetricsRegistry::from_fleet(m).snapshot();
+        std::fs::write(path, snap.to_json())?;
+        let prom = format!("{path}.prom");
+        std::fs::write(&prom, snap.to_prometheus())?;
+        println!("metrics: snapshot -> {path} (JSON) + {prom} (Prometheus)");
+    }
     Ok(())
 }

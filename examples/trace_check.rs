@@ -1,0 +1,152 @@
+//! Schema checker for the observability artifacts: validates a Perfetto
+//! trace (and optionally a metrics snapshot) emitted by `serve_fleet`.
+//!
+//!     cargo run --release --example trace_check -- trace.json [metrics.json]
+//!
+//! Checks, exiting non-zero on the first violation:
+//!
+//! * `traceEvents` is a non-empty array and every event carries the
+//!   Chrome/Perfetto required fields (`name`, `ph`, `pid`, `tid`, `ts`;
+//!   complete events additionally `dur`);
+//! * every request's `queued` + `active` span durations sum to the E2E
+//!   latency its `complete` event reports, within 3 µs of rounding — the
+//!   acceptance rail for the trace: per-request spans account for the
+//!   request's entire reported latency;
+//! * at least one `wave` span exists (a trace with no device work is a
+//!   plumbing bug, not a quiet run);
+//! * the metrics snapshot (if given) exposes the aggregate keys the
+//!   dashboards scrape: `requests_completed`, `energy_j`,
+//!   `queue_wait_p50_s`, `queue_wait_p99_s`, `joules_per_token`.
+//!
+//! Used by `make trace-check` and the CI bench-smoke job; the invariants it
+//! pins are documented in `docs/observability.md`.
+
+use anyhow::{bail, Context, Result};
+
+use ita::util::json::{parse, JsonValue};
+
+/// Span/arg accounting for one traced request.
+#[derive(Default)]
+struct ReqCheck {
+    queued_us: u64,
+    active_us: u64,
+    total_us: Option<u64>,
+}
+
+fn field<'a>(ev: &'a JsonValue, key: &str, i: usize) -> Result<&'a JsonValue> {
+    ev.get(key).with_context(|| format!("event {i} missing required field {key:?}"))
+}
+
+fn check_trace(text: &str) -> Result<(usize, usize)> {
+    let root = parse(text).context("trace is not valid JSON")?;
+    let events = root
+        .get("traceEvents")
+        .and_then(JsonValue::as_array)
+        .context("root has no traceEvents array")?;
+    if events.is_empty() {
+        bail!("traceEvents is empty");
+    }
+
+    let mut reqs: std::collections::BTreeMap<u64, ReqCheck> = Default::default();
+    let mut waves = 0usize;
+    for (i, ev) in events.iter().enumerate() {
+        let name = field(ev, "name", i)?.as_str().context("name is not a string")?;
+        let ph = field(ev, "ph", i)?.as_str().context("ph is not a string")?;
+        field(ev, "pid", i)?.as_f64().context("pid is not a number")?;
+        field(ev, "tid", i)?.as_f64().context("tid is not a number")?;
+        if ph == "M" {
+            continue; // metadata events carry no timestamp semantics
+        }
+        field(ev, "ts", i)?.as_f64().context("ts is not a number")?;
+        let dur = match ph {
+            "X" => Some(
+                field(ev, "dur", i)?.as_f64().context("dur is not a number")? as u64,
+            ),
+            "i" => None,
+            other => bail!("event {i} has unexpected phase {other:?}"),
+        };
+        if name == "wave" {
+            waves += 1;
+        }
+        let Some(req) = ev.get("args").and_then(|a| a.get("req")).and_then(JsonValue::as_f64)
+        else {
+            continue;
+        };
+        let entry = reqs.entry(req as u64).or_default();
+        match name {
+            "queued" => entry.queued_us += dur.unwrap_or(0),
+            "active" => entry.active_us += dur.unwrap_or(0),
+            "complete" => {
+                entry.total_us = ev
+                    .get("args")
+                    .and_then(|a| a.get("total_us"))
+                    .and_then(JsonValue::as_f64)
+                    .map(|v| v as u64)
+            }
+            _ => {}
+        }
+    }
+    if waves == 0 {
+        bail!("trace has no wave spans");
+    }
+
+    // the acceptance rail: queued + active account for the reported E2E
+    // latency of every completed request, within span-rounding tolerance
+    let mut completed = 0usize;
+    for (req, c) in &reqs {
+        let Some(total) = c.total_us else { continue };
+        completed += 1;
+        let sum = c.queued_us + c.active_us;
+        let gap = sum.abs_diff(total);
+        if gap > 3 {
+            bail!(
+                "req {req}: queued {} + active {} = {sum} µs, but complete reports \
+                 {total} µs (gap {gap} µs > 3 µs tolerance)",
+                c.queued_us,
+                c.active_us
+            );
+        }
+    }
+    if completed == 0 {
+        bail!("no request in the trace carries a complete event");
+    }
+    Ok((events.len(), completed))
+}
+
+fn check_metrics(text: &str) -> Result<()> {
+    let root = parse(text).context("metrics snapshot is not valid JSON")?;
+    match root.get("schema").and_then(JsonValue::as_str) {
+        Some("ita-metrics-v1") => {}
+        other => bail!("unexpected metrics schema {other:?}"),
+    }
+    let agg = root.get("aggregate").context("snapshot has no aggregate object")?;
+    let keys = [
+        "requests_completed",
+        "energy_j",
+        "queue_wait_p50_s",
+        "queue_wait_p99_s",
+        "joules_per_token",
+    ];
+    for key in keys {
+        if agg.get(key).is_none() {
+            bail!("aggregate is missing {key:?}");
+        }
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let trace_path = args.get(1).map(String::as_str).unwrap_or("trace.json");
+    let text = std::fs::read_to_string(trace_path)
+        .with_context(|| format!("reading {trace_path}"))?;
+    let (events, completed) = check_trace(&text)?;
+    println!("trace-check: {trace_path} ok ({events} events, {completed} completed requests)");
+    if let Some(metrics_path) = args.get(2) {
+        let text = std::fs::read_to_string(metrics_path)
+            .with_context(|| format!("reading {metrics_path}"))?;
+        check_metrics(&text)?;
+        println!("trace-check: {metrics_path} ok (ita-metrics-v1 aggregate keys present)");
+    }
+    Ok(())
+}

@@ -354,6 +354,13 @@ impl Engine {
         self.stages.len()
     }
 
+    /// Per-stage layer counts (length = [`n_stages`](Engine::n_stages)).
+    /// The trace exporter splits wave spans into modeled per-stage slices
+    /// proportional to these.
+    pub fn stage_layers(&self) -> Vec<usize> {
+        self.stages.iter().map(Stage::n_layers).collect()
+    }
+
     /// The inter-stage activation link.
     pub fn link(&self) -> Link {
         self.link

@@ -52,7 +52,9 @@ use super::metrics::{CartridgeMetrics, FleetMetrics, ServingMetrics};
 use super::request::{DecodeCheckpoint, FinishReason, GenRequest, GenResult};
 use super::scheduler::SchedulerOpts;
 use super::spec::CartridgeEngines;
+use super::trace::{FleetTrace, TraceEvent, TraceKind};
 use super::worker::{CartridgeId, Worker, WorkerEvent, WorkerMsg};
+use crate::area::thermal::ThermalModel;
 #[cfg(test)]
 use super::engine::Engine;
 
@@ -105,13 +107,21 @@ pub trait Dispatch: Send {
         let _ = cartridge;
     }
 
-    /// Called on every periodic worker checkpoint. `occupancy` is the
-    /// cartridge's radix prefix-cache occupancy (root-to-leaf token paths),
-    /// or `None` when its prefix cache is disabled. Stateful policies
-    /// reconcile their predictions against what the cartridge actually
-    /// holds — see [`PrefixAffinity`]'s stale-shadow invalidation.
-    fn checkpoint(&mut self, cartridge: usize, occupancy: Option<&[Vec<u32>]>) {
-        let _ = (cartridge, occupancy);
+    /// Called on every worker checkpoint. `metrics` is the cartridge's
+    /// latest counter snapshot (energy, tokens, wall time — what
+    /// [`EnergyAware`] learns its joules/token and power draw from);
+    /// `occupancy` is the cartridge's radix prefix-cache occupancy
+    /// (root-to-leaf token paths), or `None` when its prefix cache is
+    /// disabled. Stateful policies reconcile their predictions against what
+    /// the cartridge actually holds — see [`PrefixAffinity`]'s stale-shadow
+    /// invalidation.
+    fn checkpoint(
+        &mut self,
+        cartridge: usize,
+        metrics: &ServingMetrics,
+        occupancy: Option<&[Vec<u32>]>,
+    ) {
+        let _ = (cartridge, metrics, occupancy);
     }
 
     /// Called after every queue pump with the raw outstanding-request count
@@ -324,7 +334,12 @@ impl Dispatch for PrefixAffinity {
         }
     }
 
-    fn checkpoint(&mut self, cartridge: usize, occupancy: Option<&[Vec<u32>]>) {
+    fn checkpoint(
+        &mut self,
+        cartridge: usize,
+        _metrics: &ServingMetrics,
+        occupancy: Option<&[Vec<u32>]>,
+    ) {
         let Some(occ) = occupancy else { return };
         self.ensure_slots(cartridge + 1);
         self.epochs[cartridge] += 1;
@@ -342,6 +357,104 @@ impl Dispatch for PrefixAffinity {
             occ.iter().map(|p| cpl(p, toks)).max().unwrap_or(0) >= min_match
         });
         self.confirmed[cartridge] = occ.to_vec();
+    }
+}
+
+/// Energy-aware dispatch: route each request to the eligible cartridge
+/// with the lowest modeled joules per generated token, and back off
+/// cartridges whose modeled junction temperature says they are thermally
+/// throttled.
+///
+/// The policy learns from the counter snapshots workers piggyback on their
+/// checkpoints ([`Dispatch::checkpoint`]): joules/token is
+/// `energy_j / tokens_generated` and average power draw is
+/// `energy_j / wall_s`, both from the same modeled energy account the
+/// scheduler derives from device MAC counts at the ITA operating point
+/// ([`EnergyParams::ita`](crate::energy::EnergyParams::ita), PAPER.md
+/// Table III). A cartridge whose power puts its steady-state junction
+/// temperature ([`ThermalModel::junction_c`]) above the throttle limit
+/// ranks behind every cool cartridge regardless of its per-token price — a
+/// physical ITA deck would be clamping its wave rate there anyway.
+///
+/// Cartridges with no telemetry yet rank as cheapest (0 J/token,
+/// unthrottled): cold slots attract traffic and start producing telemetry
+/// instead of starving forever. Within a rank, lower load then lower index
+/// wins, so the policy degrades to [`LeastLoaded`] on a homogeneous,
+/// cool fleet.
+pub struct EnergyAware {
+    thermal: ThermalModel,
+    /// Junction temperature (°C) above which a cartridge is treated as
+    /// thermally throttled.
+    tj_limit_c: f64,
+    /// Per-cartridge `(joules_per_token, avg_power_w)` learned from worker
+    /// checkpoints; `None` until the first useful snapshot.
+    stats: Vec<Option<(f64, f64)>>,
+}
+
+impl EnergyAware {
+    /// Defaults: the passive-BGA thermal model (θja 12 °C/W, 45 °C ambient
+    /// inside a host chassis) and the standard 85 °C commercial junction
+    /// throttle point.
+    pub fn new() -> EnergyAware {
+        EnergyAware::with_thermal(ThermalModel::passive_bga(), 85.0)
+    }
+
+    pub fn with_thermal(thermal: ThermalModel, tj_limit_c: f64) -> EnergyAware {
+        EnergyAware { thermal, tj_limit_c, stats: Vec::new() }
+    }
+
+    fn throttled(&self, power_w: f64) -> bool {
+        self.thermal.junction_c(power_w) > self.tj_limit_c
+    }
+}
+
+impl Default for EnergyAware {
+    fn default() -> Self {
+        EnergyAware::new()
+    }
+}
+
+impl Dispatch for EnergyAware {
+    fn pick(&mut self, loads: &[Option<usize>], _req: &GenRequest) -> Option<usize> {
+        // lexicographic rank: unthrottled first, then lowest joules/token,
+        // then load, then index. Always returns Some when any slot is Some
+        // (the Dispatch contract) — a throttled cartridge still serves when
+        // it is the only one eligible.
+        let mut best: Option<(bool, f64, usize, usize)> = None;
+        for (i, load) in loads.iter().enumerate() {
+            let Some(load) = *load else { continue };
+            let (jpt, power) = self.stats.get(i).copied().flatten().unwrap_or((0.0, 0.0));
+            let key = (self.throttled(power), jpt, load, i);
+            if best.map_or(true, |b| key < b) {
+                best = Some(key);
+            }
+        }
+        best.map(|(_, _, _, i)| i)
+    }
+
+    fn cartridge_lost(&mut self, cartridge: usize) {
+        if let Some(s) = self.stats.get_mut(cartridge) {
+            *s = None; // its telemetry died with its engine
+        }
+    }
+
+    fn checkpoint(
+        &mut self,
+        cartridge: usize,
+        metrics: &ServingMetrics,
+        _occupancy: Option<&[Vec<u32>]>,
+    ) {
+        while self.stats.len() <= cartridge {
+            self.stats.push(None);
+        }
+        // a snapshot without generated tokens has no per-token price yet;
+        // keep whatever was learned before rather than poisoning it
+        if metrics.tokens_generated == 0 || metrics.wall_s <= 0.0 {
+            return;
+        }
+        let jpt = metrics.energy_j / metrics.tokens_generated as f64;
+        let power = metrics.energy_j / metrics.wall_s;
+        self.stats[cartridge] = Some((jpt, power));
     }
 }
 
@@ -402,8 +515,13 @@ impl Dispatch for Rebalance {
         self.inner.cartridge_lost(cartridge);
     }
 
-    fn checkpoint(&mut self, cartridge: usize, occupancy: Option<&[Vec<u32>]>) {
-        self.inner.checkpoint(cartridge, occupancy);
+    fn checkpoint(
+        &mut self,
+        cartridge: usize,
+        metrics: &ServingMetrics,
+        occupancy: Option<&[Vec<u32>]>,
+    ) {
+        self.inner.checkpoint(cartridge, metrics, occupancy);
     }
 
     fn rebalance(&mut self, loads: &[Option<usize>]) -> Option<(usize, usize)> {
@@ -445,7 +563,7 @@ struct Pending {
 enum FleetMsg {
     Submit(GenRequest, Sender<GenResult>),
     Metrics(Sender<FleetMetrics>),
-    Shutdown(Sender<FleetMetrics>),
+    Shutdown(Sender<(FleetMetrics, FleetTrace)>),
     /// Live-migrate the request with client id `id` from cartridge `from`
     /// to cartridge `to`; replies whether it actually moved.
     Migrate { id: u64, from: usize, to: usize, reply: Sender<bool> },
@@ -532,6 +650,14 @@ impl Fleet {
         if n == 0 {
             bail!("a fleet needs at least one cartridge");
         }
+        // one shared trace epoch for the whole fleet, injected before any
+        // worker boots: cross-cartridge timestamps (export on the source,
+        // resume on the target) are then comparable in the merged timeline
+        let mut opts = opts;
+        if opts.trace_capacity > 0 && opts.trace_epoch.is_none() {
+            opts.trace_epoch = Some(Instant::now());
+        }
+        let trace = TraceSink::new(&opts, n);
         let factory = Arc::new(factory);
         let (tx, rx) = channel::<FleetMsg>();
         let mut slots: Vec<Slot> = (0..n)
@@ -562,7 +688,7 @@ impl Fleet {
 
         let handle = std::thread::Builder::new()
             .name("ita-fleet-dispatch".into())
-            .spawn(move || dispatcher(slots, rx, dispatch))
+            .spawn(move || dispatcher(slots, rx, dispatch, trace))
             .expect("spawn fleet dispatcher thread");
         Ok(Fleet { tx: Mutex::new(tx), handle: Some(handle), n_cartridges: n })
     }
@@ -614,14 +740,22 @@ impl Fleet {
 
     /// Stop admission, drain all in-flight work, stop every worker; returns
     /// final metrics.
-    pub fn shutdown(mut self) -> Result<FleetMetrics> {
+    pub fn shutdown(self) -> Result<FleetMetrics> {
+        Ok(self.shutdown_traced()?.0)
+    }
+
+    /// [`Fleet::shutdown`], additionally returning the merged
+    /// request-lifecycle trace ([`FleetTrace`]) collected from every
+    /// cartridge. The trace is empty unless the fleet was started with
+    /// [`SchedulerOpts::trace_capacity`] > 0.
+    pub fn shutdown_traced(mut self) -> Result<(FleetMetrics, FleetTrace)> {
         let (tx, rx) = channel();
         self.send(FleetMsg::Shutdown(tx))?;
-        let m = rx.recv().map_err(|_| anyhow!("fleet gone"))?;
+        let out = rx.recv().map_err(|_| anyhow!("fleet gone"))?;
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
-        Ok(m)
+        Ok(out)
     }
 }
 
@@ -701,12 +835,82 @@ struct Counters {
     checkpoint_resumes: u64,
 }
 
-fn dispatcher(mut slots: Vec<Slot>, rx: Receiver<FleetMsg>, mut dispatch: Box<dyn Dispatch>) {
+/// Dispatcher-side trace collector: absorbs every worker's drained event
+/// batches, stamps each event with its cartridge id, adds fleet-level
+/// events (migrations), and bounds total memory at one extra ring's worth
+/// per cartridge plus one for the dispatcher itself.
+struct TraceSink {
+    enabled: bool,
+    epoch: Option<Instant>,
+    cap: usize,
+    events: Vec<TraceEvent>,
+    dropped: u64,
+}
+
+impl TraceSink {
+    fn new(opts: &SchedulerOpts, n: usize) -> TraceSink {
+        TraceSink {
+            enabled: opts.trace_capacity > 0,
+            epoch: opts.trace_epoch,
+            cap: opts.trace_capacity.saturating_mul(n + 1),
+            events: Vec::new(),
+            dropped: 0,
+        }
+    }
+
+    fn push(&mut self, ev: TraceEvent) {
+        if self.events.len() >= self.cap {
+            self.dropped += 1;
+        } else {
+            self.events.push(ev);
+        }
+    }
+
+    /// Merge one worker's checkpoint batch, stamping the cartridge id.
+    fn absorb(&mut self, cartridge: usize, events: Vec<TraceEvent>, ring_dropped: u64) {
+        self.dropped += ring_dropped;
+        if !self.enabled {
+            return;
+        }
+        for mut ev in events {
+            ev.cartridge = cartridge as u32;
+            self.push(ev);
+        }
+    }
+
+    /// Stamp a fleet-level `Migrate` instant (the workers only ever see
+    /// their own half of the move — Export on the source, Resume on the
+    /// target; this event ties the two together).
+    fn migrate(&mut self, ticket: u64, from: usize, to: usize) {
+        let Some(epoch) = self.epoch else { return };
+        if !self.enabled {
+            return;
+        }
+        let ts = Instant::now().saturating_duration_since(epoch).as_micros() as u64;
+        let mut ev = TraceEvent::at(ts, TraceKind::Migrate);
+        ev.req = ticket;
+        ev.cartridge = from as u32;
+        ev.a = from as u64;
+        ev.b = to as u64;
+        self.push(ev);
+    }
+
+    fn finish(&mut self) -> FleetTrace {
+        FleetTrace::new(std::mem::take(&mut self.events), self.dropped)
+    }
+}
+
+fn dispatcher(
+    mut slots: Vec<Slot>,
+    rx: Receiver<FleetMsg>,
+    mut dispatch: Box<dyn Dispatch>,
+    mut trace: TraceSink,
+) {
     let started = Instant::now();
     let mut queue: VecDeque<Pending> = VecDeque::new();
     let mut next_ticket: u64 = 0;
     let mut counters = Counters::default();
-    let mut shutdown_reply: Option<Sender<FleetMetrics>> = None;
+    let mut shutdown_reply: Option<Sender<(FleetMetrics, FleetTrace)>> = None;
 
     loop {
         let msg = match rx.recv() {
@@ -746,6 +950,7 @@ fn dispatcher(mut slots: Vec<Slot>, rx: Receiver<FleetMsg>, mut dispatch: Box<dy
                         &mut queue,
                         dispatch.as_mut(),
                         &mut counters,
+                        &mut trace,
                         t,
                         from,
                         to,
@@ -765,6 +970,13 @@ fn dispatcher(mut slots: Vec<Slot>, rx: Receiver<FleetMsg>, mut dispatch: Box<dy
             }
             FleetMsg::Event(WorkerEvent::Checkpoint(w, report)) => {
                 let report = *report;
+                // merge this cartridge's trace batch into the fleet timeline
+                trace.absorb(w, report.events, report.trace_dropped);
+                // let the policy reconcile its shadow state with what the
+                // cartridge's cache actually holds — and learn from the
+                // fresh counters (EnergyAware's joules/token) before the
+                // slot consumes them
+                dispatch.checkpoint(w, &report.metrics, report.prefix_occupancy.as_deref());
                 slots[w].checkpoint = Some(report.metrics);
                 // refresh each in-flight request's recovery checkpoint, and
                 // learn the model's per-row KV wire cost for the guard
@@ -776,9 +988,6 @@ fn dispatcher(mut slots: Vec<Slot>, rx: Receiver<FleetMsg>, mut dispatch: Box<dy
                         p.checkpoint = Some(Box::new(ckpt));
                     }
                 }
-                // let the policy reconcile its shadow state with what the
-                // cartridge's cache actually holds
-                dispatch.checkpoint(w, report.prefix_occupancy.as_deref());
             }
             FleetMsg::Event(WorkerEvent::Died(w, reason)) => {
                 eprintln!("[ita-fleet] cartridge {w} died: {reason}");
@@ -860,6 +1069,7 @@ fn dispatcher(mut slots: Vec<Slot>, rx: Receiver<FleetMsg>, mut dispatch: Box<dy
                         &mut queue,
                         dispatch.as_mut(),
                         &mut counters,
+                        &mut trace,
                         ticket,
                         from,
                         to,
@@ -872,7 +1082,7 @@ fn dispatcher(mut slots: Vec<Slot>, rx: Receiver<FleetMsg>, mut dispatch: Box<dy
         }
 
         if let Some(reply) = &shutdown_reply {
-            if try_finish(&mut slots, &queue, started, &counters, reply) {
+            if try_finish(&mut slots, &queue, started, &counters, &mut trace, reply) {
                 return;
             }
         }
@@ -997,6 +1207,7 @@ fn migrate_ticket(
     queue: &mut VecDeque<Pending>,
     dispatch: &mut dyn Dispatch,
     counters: &mut Counters,
+    trace: &mut TraceSink,
     ticket: u64,
     from: usize,
     to: usize,
@@ -1054,6 +1265,7 @@ fn migrate_ticket(
         if live {
             counters.migrations += 1;
         }
+        trace.migrate(ticket, from, to);
         true
     } else {
         // the target died as we handed over: requeue with the recovery
@@ -1071,7 +1283,8 @@ fn try_finish(
     queue: &VecDeque<Pending>,
     started: Instant,
     counters: &Counters,
-    reply: &Sender<FleetMetrics>,
+    trace: &mut TraceSink,
+    reply: &Sender<(FleetMetrics, FleetTrace)>,
 ) -> bool {
     if !queue.is_empty() || slots.iter().any(|s| !s.in_flight.is_empty()) {
         return false;
@@ -1088,7 +1301,7 @@ fn try_finish(
         for s in slots.iter_mut() {
             s.worker.join();
         }
-        let _ = reply.send(snapshot(slots, started, counters));
+        let _ = reply.send((snapshot(slots, started, counters), trace.finish()));
         return true;
     }
     false
@@ -1363,14 +1576,15 @@ mod tests {
         assert_eq!(d.pick(&[Some(0), Some(3)], &b), Some(1));
         // first checkpoint without the prefix: grace period (the placement
         // may still be in flight) — routing unchanged
-        d.checkpoint(1, Some(&[]));
+        let m = ServingMetrics::default();
+        d.checkpoint(1, &m, Some(&[]));
         assert_eq!(d.pick(&[Some(0), Some(3)], &b), Some(1));
         // second empty checkpoint: a full interval passed and the cache
         // still doesn't hold it → stale entry dropped, fallback wins
-        d.checkpoint(1, Some(&[]));
+        d.checkpoint(1, &m, Some(&[]));
         assert_eq!(d.pick(&[Some(0), Some(3)], &b), Some(0));
         // confirmed occupancy alone (no recent placement) attracts traffic
-        d.checkpoint(0, Some(&[tok.encode(&format!("{sys} Q1"))]));
+        d.checkpoint(0, &m, Some(&[tok.encode(&format!("{sys} Q1"))]));
         assert_eq!(d.pick(&[Some(3), Some(0)], &b), Some(0));
     }
 
@@ -1384,9 +1598,78 @@ mod tests {
         let b = GenRequest::greedy(1, &format!("{sys} Q2"), 1);
         d.ensure_slots(2);
         d.placed(1, &a);
-        d.checkpoint(1, None);
-        d.checkpoint(1, None);
+        let m = ServingMetrics::default();
+        d.checkpoint(1, &m, None);
+        d.checkpoint(1, &m, None);
         assert_eq!(d.pick(&[Some(0), Some(3)], &b), Some(1));
+    }
+
+    #[test]
+    fn energy_aware_prefers_cheap_and_backs_off_throttled() {
+        let mut d = EnergyAware::new();
+        let r = any_req();
+        // no telemetry yet: every cartridge ranks as cheapest, so the
+        // policy degrades to least-loaded (then lowest index)
+        assert_eq!(d.pick(&[Some(2), Some(1)], &r), Some(1));
+        assert_eq!(d.pick(&[None, None], &r), None);
+        // skewed fleet: cartridge 0 models cheap tokens, cartridge 1
+        // expensive ones (e.g. a draft-paired slot burning extra MACs)
+        let cheap = ServingMetrics {
+            tokens_generated: 1_000,
+            energy_j: 0.5, // 0.5 mJ/token, 0.05 W — far below throttle
+            wall_s: 10.0,
+            ..ServingMetrics::default()
+        };
+        let pricey = ServingMetrics {
+            tokens_generated: 1_000,
+            energy_j: 2.0, // 2 mJ/token, 0.2 W
+            wall_s: 10.0,
+            ..ServingMetrics::default()
+        };
+        d.checkpoint(0, &cheap, None);
+        d.checkpoint(1, &pricey, None);
+        // lowest joules/token wins even against a load imbalance
+        assert_eq!(d.pick(&[Some(3), Some(0)], &r), Some(0));
+        // thermal backoff: passive BGA (θja 12 °C/W, 45 °C ambient)
+        // throttles above (85 − 45) / 12 ≈ 3.33 W. Make cartridge 0 the
+        // cheapest per token but hot — it must lose to the pricier cool one
+        let hot = ServingMetrics {
+            tokens_generated: 1_000_000, // 0.05 mJ/token — cheapest by far
+            energy_j: 50.0,              // 5 W → junction 105 °C
+            wall_s: 10.0,
+            ..ServingMetrics::default()
+        };
+        d.checkpoint(0, &hot, None);
+        assert_eq!(d.pick(&[Some(0), Some(3)], &r), Some(1));
+        // the Dispatch contract holds: a throttled cartridge still serves
+        // when it is the only eligible slot
+        assert_eq!(d.pick(&[Some(0), None], &r), Some(0));
+        // an empty snapshot never poisons learned telemetry
+        d.checkpoint(0, &ServingMetrics::default(), None);
+        assert_eq!(d.pick(&[Some(0), Some(3)], &r), Some(1), "hot stats kept");
+        // losing the cartridge resets it to unknown (optimistically cheap)
+        d.cartridge_lost(0);
+        assert_eq!(d.pick(&[Some(0), Some(0)], &r), Some(0));
+    }
+
+    #[test]
+    fn energy_aware_fleet_serves_all() {
+        let fleet = Fleet::with_dispatch(
+            2,
+            |_id| Ok(Engine::synthetic(&ModelConfig::TINY, 42)),
+            SchedulerOpts::default(),
+            Box::new(EnergyAware::new()),
+        )
+        .unwrap();
+        let handles: Vec<_> =
+            (0..6).map(|i| fleet.submit(GenRequest::greedy(i, "energy aware", 4))).collect();
+        for h in handles {
+            assert!(!h.wait().unwrap().tokens.is_empty());
+        }
+        let m = fleet.shutdown().unwrap();
+        assert_eq!(m.aggregate().requests_completed, 6);
+        assert_eq!(m.failed_requests, 0);
+        assert!(m.aggregate().energy_j > 0.0, "modeled energy accounted");
     }
 
     #[test]

@@ -219,6 +219,10 @@ pub struct ServingMetrics {
     /// `BENCH_e2e.json`). Log-bucketed ([`GapHistogram`]) because it fires
     /// once per decoded token forever.
     pub itl_step: GapHistogram,
+    /// Queue wait per admitted request: enqueue → admit (the time a request
+    /// spent waiting for an active slot, including requeue/migration
+    /// round-trips). Log-bucketed so it survives worker checkpoints.
+    pub queue_wait: GapHistogram,
     /// Draft tokens proposed by the speculative-decoding draft engine.
     /// Conservation law (pinned by `rust/tests/spec_decode_sim.rs`):
     /// `spec_proposed == spec_accepted + spec_rollbacks`, always.
@@ -254,6 +258,11 @@ pub struct ServingMetrics {
     pub stage_busy_slots: u64,
     pub interface_bytes: u64,
     pub device_macs: u64,
+    /// Modeled device energy for the run (joules): every MAC the cartridge
+    /// — target *and* draft engine — executed, priced at the paper's
+    /// Table II ITA stack (4.05 pJ/MAC). Note `device_macs` counts only the
+    /// target engine; the draft's MACs appear here but not there.
+    pub energy_j: f64,
     /// Full interface ledger of this engine's cartridge, so the paper's
     /// Eq. 7–11 accounting reconciles per device even inside a fleet
     /// (`interface_bytes == traffic.total()`).
@@ -318,6 +327,7 @@ impl ServingMetrics {
             ttft: LatencyRecorder::default(),
             itl: LatencyRecorder::default(),
             itl_step: self.itl_step.clone(),
+            queue_wait: self.queue_wait.clone(),
             spec_proposed: self.spec_proposed,
             spec_accepted: self.spec_accepted,
             spec_rollbacks: self.spec_rollbacks,
@@ -331,6 +341,7 @@ impl ServingMetrics {
             stage_busy_slots: self.stage_busy_slots,
             interface_bytes: self.interface_bytes,
             device_macs: self.device_macs,
+            energy_j: self.energy_j,
             traffic: self.traffic,
         }
     }
@@ -357,6 +368,7 @@ impl ServingMetrics {
         self.ttft.merge(&other.ttft);
         self.itl.merge(&other.itl);
         self.itl_step.merge(&other.itl_step);
+        self.queue_wait.merge(&other.queue_wait);
         self.spec_proposed += other.spec_proposed;
         self.spec_accepted += other.spec_accepted;
         self.spec_rollbacks += other.spec_rollbacks;
@@ -369,6 +381,7 @@ impl ServingMetrics {
         self.stage_busy_slots += other.stage_busy_slots;
         self.interface_bytes += other.interface_bytes;
         self.device_macs += other.device_macs;
+        self.energy_j += other.energy_j;
         self.traffic.add(&other.traffic);
     }
 
@@ -377,15 +390,114 @@ impl ServingMetrics {
         self.device_macs as f64 * pj_per_mac * 1e-12
     }
 
+    /// Modeled joules per generated token (`energy_j / tokens_generated`;
+    /// 0.0 before anything decoded). The serving-side counterpart of the
+    /// paper's Table III per-token energy comparison — prefill and draft
+    /// work are amortized over the tokens actually delivered.
+    pub fn joules_per_token(&self) -> f64 {
+        if self.tokens_generated == 0 {
+            return 0.0;
+        }
+        self.energy_j / self.tokens_generated as f64
+    }
+
+    /// Every numeric field as a stable `(name, value)` list — the registry
+    /// export surface and the anti-drift contract for
+    /// [`merge`](Self::merge) / [`clone_counters`](Self::clone_counters).
+    ///
+    /// The exhaustive destructure (no `..`) is load-bearing: adding a field
+    /// to [`ServingMetrics`] without threading it through here is a compile
+    /// error, and the field-coverage tests then force it through `merge`
+    /// and `clone_counters` too. Histograms/recorders expand to
+    /// count + percentile entries.
+    pub fn numeric_fields(&self) -> Vec<(&'static str, f64)> {
+        let ServingMetrics {
+            requests_completed,
+            tokens_generated,
+            tokens_prefilled,
+            prefill_skipped_tokens,
+            restored_tokens,
+            resumed_requests,
+            migrated_out,
+            mixed_waves,
+            prefill_chunks,
+            wall_s,
+            ttft,
+            itl,
+            itl_step,
+            queue_wait,
+            spec_proposed,
+            spec_accepted,
+            spec_rollbacks,
+            spec_accept,
+            batch_waste,
+            pipeline_stages,
+            link_hops,
+            link_bytes,
+            link_time_s,
+            stage_slots,
+            stage_busy_slots,
+            interface_bytes,
+            device_macs,
+            energy_j,
+            traffic,
+        } = self;
+        let TrafficLedger { d2h_bytes, h2d_bytes, protocol_d2h_bytes, protocol_h2d_bytes } =
+            traffic;
+        vec![
+            ("requests_completed", *requests_completed as f64),
+            ("tokens_generated", *tokens_generated as f64),
+            ("tokens_prefilled", *tokens_prefilled as f64),
+            ("prefill_skipped_tokens", *prefill_skipped_tokens as f64),
+            ("restored_tokens", *restored_tokens as f64),
+            ("resumed_requests", *resumed_requests as f64),
+            ("migrated_out", *migrated_out as f64),
+            ("mixed_waves", *mixed_waves as f64),
+            ("prefill_chunks", *prefill_chunks as f64),
+            ("wall_s", *wall_s),
+            ("ttft_count", ttft.count() as f64),
+            ("ttft_p50_s", ttft.percentile(50.0)),
+            ("ttft_p95_s", ttft.percentile(95.0)),
+            ("itl_count", itl.count() as f64),
+            ("itl_p50_s", itl.percentile(50.0)),
+            ("itl_p95_s", itl.percentile(95.0)),
+            ("itl_step_count", itl_step.count() as f64),
+            ("itl_step_p50_s", itl_step.percentile(50.0)),
+            ("itl_step_p99_s", itl_step.percentile(99.0)),
+            ("queue_wait_count", queue_wait.count() as f64),
+            ("queue_wait_p50_s", queue_wait.percentile(50.0)),
+            ("queue_wait_p99_s", queue_wait.percentile(99.0)),
+            ("spec_proposed", *spec_proposed as f64),
+            ("spec_accepted", *spec_accepted as f64),
+            ("spec_rollbacks", *spec_rollbacks as f64),
+            ("spec_accept_count", spec_accept.count() as f64),
+            ("spec_accept_mean", spec_accept.mean()),
+            ("batch_waste", *batch_waste),
+            ("pipeline_stages", *pipeline_stages as f64),
+            ("link_hops", *link_hops as f64),
+            ("link_bytes", *link_bytes as f64),
+            ("link_time_s", *link_time_s),
+            ("stage_slots", *stage_slots as f64),
+            ("stage_busy_slots", *stage_busy_slots as f64),
+            ("interface_bytes", *interface_bytes as f64),
+            ("device_macs", *device_macs as f64),
+            ("energy_j", *energy_j),
+            ("traffic_d2h_bytes", *d2h_bytes as f64),
+            ("traffic_h2d_bytes", *h2d_bytes as f64),
+            ("traffic_protocol_d2h_bytes", *protocol_d2h_bytes as f64),
+            ("traffic_protocol_h2d_bytes", *protocol_h2d_bytes as f64),
+        ]
+    }
+
     pub fn report(&self) -> String {
         format!(
             "requests={} prefill_tokens={} prefill_skipped={} restored={} resumed={} \
              migrated_out={} decode_tokens={} mixed_waves={} prefill_chunks={} \
              spec_proposed={} spec_accepted={} spec_rollbacks={} spec_accept_rate={:.2} \
              wall={:.2}s decode_throughput={:.1} tok/s ttft_p50={:.1}ms ttft_p95={:.1}ms \
-             itl_p50={:.2}ms itl_p95={:.2}ms itl_step_p99={:.2}ms batch_waste={:.1}% \
-             stages={} stage_occupancy={:.2} link_bytes={} \
-             interface={:.2} MB device_macs={:.2}G",
+             itl_p50={:.2}ms itl_p95={:.2}ms itl_step_p99={:.2}ms queue_p99={:.1}ms \
+             batch_waste={:.1}% stages={} stage_occupancy={:.2} link_bytes={} \
+             interface={:.2} MB device_macs={:.2}G energy={:.3}mJ j_per_tok={:.3}uJ",
             self.requests_completed,
             self.tokens_prefilled,
             self.prefill_skipped_tokens,
@@ -406,12 +518,15 @@ impl ServingMetrics {
             self.itl.percentile(50.0) * 1e3,
             self.itl.percentile(95.0) * 1e3,
             self.itl_step.percentile(99.0) * 1e3,
+            self.queue_wait.percentile(99.0) * 1e3,
             self.batch_waste * 100.0,
             self.pipeline_stages.max(1),
             self.stage_occupancy(),
             self.link_bytes,
             self.interface_bytes as f64 / 1e6,
             self.device_macs as f64 / 1e9,
+            self.energy_j * 1e3,
+            self.joules_per_token() * 1e6,
         )
     }
 }
@@ -487,6 +602,153 @@ impl FleetMetrics {
             ));
         }
         out.push_str(&format!("  total: {}", self.aggregate().report()));
+        out
+    }
+}
+
+/// One cartridge's slice of a [`MetricsSnapshot`].
+#[derive(Debug, Clone)]
+pub struct CartridgeSnapshot {
+    pub cartridge: usize,
+    pub alive: bool,
+    pub fields: Vec<(&'static str, f64)>,
+}
+
+/// The unified telemetry registry: wraps a [`FleetMetrics`] (or a single
+/// engine's [`ServingMetrics`] as the n=1 fleet) and renders one
+/// [`MetricsSnapshot`] covering fleet counters, the aggregate, derived
+/// rates, and per-cartridge breakdowns — the single export surface behind
+/// both the JSON snapshot and the Prometheus text exposition.
+#[derive(Debug, Clone)]
+pub struct MetricsRegistry {
+    fleet: FleetMetrics,
+}
+
+impl MetricsRegistry {
+    pub fn from_fleet(fleet: FleetMetrics) -> MetricsRegistry {
+        MetricsRegistry { fleet }
+    }
+
+    /// Wrap one engine's metrics as a single-cartridge fleet.
+    pub fn from_serving(m: ServingMetrics) -> MetricsRegistry {
+        let wall_s = m.wall_s;
+        MetricsRegistry {
+            fleet: FleetMetrics {
+                cartridges: vec![CartridgeMetrics { cartridge: 0, alive: true, serving: m }],
+                wall_s,
+                ..FleetMetrics::default()
+            },
+        }
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let fleet = vec![
+            ("fleet_cartridges", self.fleet.cartridges.len() as f64),
+            (
+                "fleet_alive",
+                self.fleet.cartridges.iter().filter(|c| c.alive).count() as f64,
+            ),
+            ("fleet_requeued_requests", self.fleet.requeued_requests as f64),
+            ("fleet_failed_requests", self.fleet.failed_requests as f64),
+            ("fleet_migrations", self.fleet.migrations as f64),
+            ("fleet_checkpoint_resumes", self.fleet.checkpoint_resumes as f64),
+            ("fleet_wall_s", self.fleet.wall_s),
+        ];
+        let agg = self.fleet.aggregate();
+        let mut aggregate = agg.numeric_fields();
+        aggregate.push(("decode_tok_per_s", agg.decode_tok_per_s()));
+        aggregate.push(("spec_acceptance", agg.spec_acceptance()));
+        aggregate.push(("stage_occupancy", agg.stage_occupancy()));
+        aggregate.push(("link_share", agg.link_share()));
+        aggregate.push(("joules_per_token", agg.joules_per_token()));
+        let cartridges = self
+            .fleet
+            .cartridges
+            .iter()
+            .map(|c| CartridgeSnapshot {
+                cartridge: c.cartridge,
+                alive: c.alive,
+                fields: c.serving.numeric_fields(),
+            })
+            .collect();
+        MetricsSnapshot { fleet, aggregate, cartridges }
+    }
+}
+
+/// A rendered, self-contained metrics snapshot (plain numbers — safe to
+/// serialize, diff, or ship to a scraper).
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    /// Dispatcher-level counters (`fleet_*`).
+    pub fleet: Vec<(&'static str, f64)>,
+    /// Fleet aggregate: every [`ServingMetrics::numeric_fields`] entry plus
+    /// derived rates (`decode_tok_per_s`, `joules_per_token`, …).
+    pub aggregate: Vec<(&'static str, f64)>,
+    /// Per-cartridge breakdowns.
+    pub cartridges: Vec<CartridgeSnapshot>,
+}
+
+impl MetricsSnapshot {
+    /// Look a value up by name: aggregate entries first, then `fleet_*`.
+    pub fn get(&self, name: &str) -> Option<f64> {
+        self.aggregate
+            .iter()
+            .chain(self.fleet.iter())
+            .find(|(n, _)| *n == name)
+            .map(|(_, v)| *v)
+    }
+
+    /// JSON document: `{"schema": "ita-metrics-v1", "fleet": {…},
+    /// "aggregate": {…}, "cartridges": [{…}]}`.
+    pub fn to_json(&self) -> String {
+        use crate::util::json::{json_array, Json};
+        let obj = |fields: &[(&'static str, f64)]| {
+            let mut j = Json::default();
+            for (name, v) in fields {
+                j.float_full(name, *v);
+            }
+            j.encode()
+        };
+        let cartridges: Vec<String> = self
+            .cartridges
+            .iter()
+            .map(|c| {
+                let mut j = Json::default();
+                j.num("cartridge", c.cartridge);
+                j.bool("alive", c.alive);
+                for (name, v) in &c.fields {
+                    j.float_full(name, *v);
+                }
+                j.encode()
+            })
+            .collect();
+        let mut root = Json::default();
+        root.str("schema", "ita-metrics-v1");
+        root.put("fleet", obj(&self.fleet));
+        root.put("aggregate", obj(&self.aggregate));
+        root.put("cartridges", json_array(&cartridges));
+        root.encode()
+    }
+
+    /// Prometheus text exposition format (version 0.0.4): every metric as
+    /// an `ita_`-prefixed gauge, aggregate unlabeled, per-cartridge values
+    /// labeled `{cartridge="N"}`.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, v) in &self.fleet {
+            out.push_str(&format!("# TYPE ita_{name} gauge\nita_{name} {v}\n"));
+        }
+        for (name, v) in &self.aggregate {
+            out.push_str(&format!("# TYPE ita_{name} gauge\nita_{name} {v}\n"));
+            for c in &self.cartridges {
+                if let Some((_, cv)) = c.fields.iter().find(|(n, _)| n == name) {
+                    out.push_str(&format!(
+                        "ita_{name}{{cartridge=\"{}\"}} {cv}\n",
+                        c.cartridge
+                    ));
+                }
+            }
+        }
         out
     }
 }
@@ -825,5 +1087,169 @@ mod tests {
         let m = ServingMetrics { device_macs: 1_000_000_000_000, ..Default::default() };
         // 1e12 MACs × 4.05 pJ = 4.05 J
         assert!((m.modeled_device_energy_j(4.05) - 4.05).abs() < 1e-9);
+    }
+
+    #[test]
+    fn joules_per_token_math() {
+        let m = ServingMetrics { tokens_generated: 10, energy_j: 0.05, ..Default::default() };
+        assert!((m.joules_per_token() - 0.005).abs() < 1e-12);
+        assert_eq!(ServingMetrics::default().joules_per_token(), 0.0, "no tokens, no NaN");
+        let mut a = ServingMetrics { energy_j: 1.0, ..Default::default() };
+        a.merge(&ServingMetrics { energy_j: 0.5, ..Default::default() });
+        assert!((a.energy_j - 1.5).abs() < 1e-12, "merge sums energy");
+    }
+
+    /// Every field nonzero, via an exhaustive literal (no `..`): adding a
+    /// [`ServingMetrics`] field without updating this fixture — and through
+    /// it the merge / clone_counters coverage tests — is a compile error.
+    fn fully_populated() -> ServingMetrics {
+        ServingMetrics {
+            requests_completed: 3,
+            tokens_generated: 41,
+            tokens_prefilled: 37,
+            prefill_skipped_tokens: 11,
+            restored_tokens: 5,
+            resumed_requests: 2,
+            migrated_out: 1,
+            mixed_waves: 7,
+            prefill_chunks: 13,
+            wall_s: 2.5,
+            ttft: {
+                let mut r = LatencyRecorder::default();
+                r.record(0.125);
+                r
+            },
+            itl: {
+                let mut r = LatencyRecorder::default();
+                r.record(0.03);
+                r
+            },
+            itl_step: {
+                let mut h = GapHistogram::default();
+                h.record(0.002);
+                h
+            },
+            queue_wait: {
+                let mut h = GapHistogram::default();
+                h.record(0.05);
+                h
+            },
+            spec_proposed: 17,
+            spec_accepted: 12,
+            spec_rollbacks: 5,
+            spec_accept: {
+                let mut h = RatioHistogram::default();
+                h.record(0.7);
+                h
+            },
+            batch_waste: 0.25,
+            pipeline_stages: 2,
+            link_hops: 19,
+            link_bytes: 2048,
+            link_time_s: 0.125,
+            stage_slots: 40,
+            stage_busy_slots: 30,
+            interface_bytes: 4096,
+            device_macs: 1_000_000,
+            energy_j: 0.004,
+            traffic: TrafficLedger {
+                d2h_bytes: 100,
+                h2d_bytes: 200,
+                protocol_d2h_bytes: 30,
+                protocol_h2d_bytes: 40,
+            },
+        }
+    }
+
+    #[test]
+    fn merge_covers_every_numeric_field() {
+        // merging a fully-populated snapshot into a default one must move
+        // every exported numeric field off zero — a field added to the
+        // struct but forgotten in merge() shows up here as a stuck zero
+        let mut merged = ServingMetrics::default();
+        merged.merge(&fully_populated());
+        for (name, v) in merged.numeric_fields() {
+            assert!(v != 0.0, "field {name} did not participate in merge");
+        }
+    }
+
+    #[test]
+    fn counter_snapshot_covers_every_numeric_field() {
+        // clone_counters may drop ONLY the per-sample recorders (ttft/itl);
+        // every other field must survive the checkpoint strip bit-exact
+        let dropped = [
+            "ttft_count",
+            "ttft_p50_s",
+            "ttft_p95_s",
+            "itl_count",
+            "itl_p50_s",
+            "itl_p95_s",
+        ];
+        let full = fully_populated();
+        let snap = full.clone_counters();
+        for ((name, before), (n2, after)) in
+            full.numeric_fields().iter().zip(snap.numeric_fields())
+        {
+            assert_eq!(*name, n2);
+            if dropped.contains(name) {
+                assert_eq!(after, 0.0, "{name} should be stripped by clone_counters");
+            } else {
+                assert!(*before != 0.0, "{name} not populated by the fixture");
+                assert!(
+                    (before - after).abs() < 1e-12,
+                    "{name} was dropped by clone_counters ({before} -> {after})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn registry_snapshot_exports_json_and_prometheus() {
+        use crate::util::json::parse;
+        let fm = FleetMetrics {
+            cartridges: vec![
+                CartridgeMetrics { cartridge: 0, alive: true, serving: fully_populated() },
+                CartridgeMetrics {
+                    cartridge: 1,
+                    alive: false,
+                    serving: ServingMetrics::default(),
+                },
+            ],
+            migrations: 1,
+            wall_s: 2.0,
+            ..Default::default()
+        };
+        let snap = MetricsRegistry::from_fleet(fm).snapshot();
+        assert_eq!(snap.get("requests_completed"), Some(3.0));
+        assert_eq!(snap.get("fleet_cartridges"), Some(2.0));
+        assert_eq!(snap.get("fleet_alive"), Some(1.0));
+        assert!(snap.get("joules_per_token").expect("derived entry") > 0.0);
+        assert_eq!(snap.get("no_such_metric"), None);
+
+        // JSON round-trips through the in-repo parser
+        let doc = parse(&snap.to_json()).expect("valid JSON");
+        assert_eq!(doc.get("schema").and_then(|v| v.as_str()), Some("ita-metrics-v1"));
+        assert_eq!(
+            doc.get("aggregate")
+                .and_then(|a| a.get("tokens_generated"))
+                .and_then(|v| v.as_f64()),
+            Some(41.0)
+        );
+        let carts = doc.get("cartridges").and_then(|v| v.as_array()).expect("array");
+        assert_eq!(carts.len(), 2);
+        assert_eq!(carts[1].get("alive"), Some(&crate::util::json::JsonValue::Bool(false)));
+
+        // Prometheus exposition: TYPE line, unlabeled aggregate, labeled
+        // per-cartridge series
+        let prom = snap.to_prometheus();
+        assert!(prom.contains("# TYPE ita_tokens_generated gauge"));
+        assert!(prom.contains("ita_tokens_generated 41\n"));
+        assert!(prom.contains("ita_tokens_generated{cartridge=\"0\"} 41\n"));
+        assert!(prom.contains("ita_fleet_migrations 1\n"));
+
+        // n=1 wrapper: one engine's metrics behave as a one-cartridge fleet
+        let one = MetricsRegistry::from_serving(fully_populated()).snapshot();
+        assert_eq!(one.get("fleet_cartridges"), Some(1.0));
+        assert!((one.get("decode_tok_per_s").expect("derived") - 41.0 / 2.5).abs() < 1e-9);
     }
 }

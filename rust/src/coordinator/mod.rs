@@ -59,7 +59,16 @@
 //!   `n = 1` case of the fleet.
 //! * [`metrics`] — latency/throughput/traffic accounting, per engine
 //!   ([`metrics::ServingMetrics`]) and per fleet with per-cartridge
-//!   breakdowns ([`metrics::FleetMetrics`]).
+//!   breakdowns ([`metrics::FleetMetrics`]); the unified
+//!   [`MetricsRegistry`](metrics::MetricsRegistry) renders one snapshot as
+//!   JSON or Prometheus text.
+//! * [`trace`] — request-lifecycle tracing: a ring-buffered, zero-cost-
+//!   when-disabled event recorder the scheduler stamps per admit / prefill
+//!   chunk / wave / speculation step / checkpoint / migrate / complete,
+//!   drained through worker checkpoints into a fleet-wide
+//!   [`FleetTrace`](trace::FleetTrace) that exports a Chrome/Perfetto
+//!   timeline and a flight-recorder dump of the slowest requests
+//!   (`docs/observability.md`).
 //! * [`workload`] — deterministic synthetic workloads for benches/examples.
 //!
 //! ## Test tiers
@@ -85,16 +94,21 @@ pub mod request;
 pub mod scheduler;
 pub mod server;
 pub mod spec;
+pub mod trace;
 pub mod worker;
 pub mod workload;
 
 pub use engine::Engine;
 pub use fleet::{
-    Dispatch, Fleet, LeastLoaded, PrefixAffinity, Rebalance, ResultHandle, RoundRobin,
+    Dispatch, EnergyAware, Fleet, LeastLoaded, PrefixAffinity, Rebalance, ResultHandle,
+    RoundRobin,
 };
-pub use metrics::{CartridgeMetrics, FleetMetrics, ServingMetrics};
+pub use metrics::{
+    CartridgeMetrics, FleetMetrics, MetricsRegistry, MetricsSnapshot, ServingMetrics,
+};
 pub use pipeline::PipelineEngine;
 pub use request::{DecodeCheckpoint, GenRequest, GenResult};
 pub use server::Server;
 pub use spec::{CartridgeEngines, SpecOpts};
+pub use trace::{FleetTrace, TraceEvent, TraceKind, TraceRecorder};
 pub use worker::{CartridgeId, CheckpointReport, Worker, WorkerEvent, WorkerMsg};

@@ -46,6 +46,37 @@ pub fn partition_layers(n_layers: usize, k: usize) -> Vec<Range<usize>> {
     out
 }
 
+/// Split one wave's measured duration into K modeled per-stage
+/// `(offset_us, dur_us)` slices for the trace timeline: compute time is
+/// apportioned proportionally to each stage's layer count, and the wave's
+/// modeled link time (`link_us`, capped at the wave duration) is spread
+/// evenly across the K−1 inter-stage gaps. Offsets are relative to the
+/// wave's start.
+///
+/// These slices are *modeled*, like stage occupancy: the sim executes
+/// stages sequentially inside one `forward`, so the trace shows where the
+/// time would go on physical stage dies, not separately-measured spans.
+pub fn stage_spans(dur_us: u64, link_us: u64, layers: &[usize]) -> Vec<(u64, u64)> {
+    assert!(!layers.is_empty(), "stage_spans needs at least one stage");
+    let k = layers.len();
+    let total_layers: usize = layers.iter().sum::<usize>().max(1);
+    let hops = (k - 1) as u64;
+    let link_total = link_us.min(dur_us);
+    let compute = dur_us - link_total;
+    let gap = if hops > 0 { link_total / hops } else { 0 };
+    let mut out = Vec::with_capacity(k);
+    let mut at = 0u64;
+    for (s, &l) in layers.iter().enumerate() {
+        let d = (compute as u128 * l as u128 / total_layers as u128) as u64;
+        out.push((at, d.max(1)));
+        at += d;
+        if s + 1 < k {
+            at += gap;
+        }
+    }
+    out
+}
+
 /// Builder for a pipeline-sharded [`Engine`] over simulated stage devices.
 ///
 /// ```no_run
@@ -151,6 +182,31 @@ mod tests {
     #[should_panic]
     fn partition_rejects_more_stages_than_layers() {
         partition_layers(2, 3);
+    }
+
+    #[test]
+    fn stage_spans_are_ordered_proportional_and_bounded() {
+        // 3 layers + 1 layer over a 900 µs wave with 100 µs of link time:
+        // two stages, one 50 µs gap each side of ... actually one gap
+        let spans = stage_spans(900, 100, &[3, 1]);
+        assert_eq!(spans.len(), 2);
+        let (o0, d0) = spans[0];
+        let (o1, d1) = spans[1];
+        assert_eq!(o0, 0);
+        // compute = 800 µs split 3:1
+        assert_eq!(d0, 600);
+        assert_eq!(d1, 200);
+        // stage 1 starts after stage 0 plus the link gap
+        assert_eq!(o1, 600 + 100);
+        assert!(o1 + d1 <= 900, "spans stay inside the wave");
+        // degenerate cases: single stage spans the whole compute time;
+        // link time larger than the wave clamps instead of underflowing
+        assert_eq!(stage_spans(50, 0, &[4]), vec![(0, 50)]);
+        let clamped = stage_spans(10, 10_000, &[1, 1]);
+        assert_eq!(clamped.len(), 2);
+        assert!(clamped.iter().all(|&(o, d)| o + d <= 10 + 10_000));
+        // zero-duration wave still yields non-zero (1 µs floor) spans
+        assert!(stage_spans(0, 0, &[1, 1]).iter().all(|&(_, d)| d >= 1));
     }
 
     #[test]

@@ -71,6 +71,7 @@ use super::engine::Engine;
 use super::metrics::ServingMetrics;
 use super::request::{DecodeCheckpoint, FinishReason, GenRequest, GenResult};
 use super::spec::{CartridgeEngines, SpecDecoder, SpecOpts, VerifyOutcome};
+use super::trace::{TraceEvent, TraceKind, TraceRecorder, WAVE_NONE};
 use crate::host::kv_cache::SeqId;
 use crate::host::sampling::sample;
 use crate::host::tokenizer::{ByteTokenizer, EOS};
@@ -104,6 +105,16 @@ pub struct SchedulerOpts {
     /// [`CartridgeEngines::with_draft`]); `depth: 0` disables speculation
     /// even then. Greedy outputs are byte-identical either way.
     pub spec: SpecOpts,
+    /// Request-lifecycle trace ring capacity (events). 0 disables tracing
+    /// entirely — every instrumentation site reduces to one inlined bool
+    /// load, no timestamps are taken, nothing allocates (the bench sweep's
+    /// `tracing_overhead` record pins this). When the ring fills between
+    /// worker drains, the oldest events are dropped and counted.
+    pub trace_capacity: usize,
+    /// Shared trace clock origin. The fleet injects one epoch before
+    /// spawning workers so cross-cartridge timestamps are comparable;
+    /// `None` (the standalone default) anchors at scheduler construction.
+    pub trace_epoch: Option<Instant>,
 }
 
 impl Default for SchedulerOpts {
@@ -114,6 +125,8 @@ impl Default for SchedulerOpts {
             prefix_cache_pages: 8192,
             prefill_chunk_tokens: 64,
             spec: SpecOpts::default(),
+            trace_capacity: 0,
+            trace_epoch: None,
         }
     }
 }
@@ -142,6 +155,9 @@ struct Active {
     spec_proposed: u64,
     spec_accepted: u64,
     enqueued: Instant,
+    /// when admission pulled this request off the queue (queue-wait end;
+    /// the trace splits E2E into a Queued and an Active span here)
+    admitted: Instant,
     first_token_at: Option<Instant>,
     /// when the previous token was sampled (per-token gap accounting —
     /// [`ServingMetrics::itl_step`] samples are measured from here)
@@ -201,6 +217,16 @@ pub struct Scheduler {
     batch_stats: BatchStats,
     metrics: ServingMetrics,
     started: Instant,
+    /// Request-lifecycle event ring (no-op unless
+    /// [`SchedulerOpts::trace_capacity`] > 0).
+    trace: TraceRecorder,
+    /// Monotone wave sequence number — the join key between `Wave` spans
+    /// and the `Tokens` events attributing committed tokens to them.
+    wave_seq: u64,
+    /// Modeled energy per MAC (pJ) for the ITA operating point
+    /// ([`EnergyParams::ita`](crate::energy::EnergyParams::ita)); scales
+    /// device MAC counts into [`ServingMetrics::energy_j`].
+    pj_per_mac: f64,
 }
 
 impl Scheduler {
@@ -236,6 +262,11 @@ impl Scheduler {
             }
             _ => None,
         };
+        let trace = if opts.trace_capacity > 0 {
+            TraceRecorder::new(opts.trace_capacity, opts.trace_epoch.unwrap_or_else(Instant::now))
+        } else {
+            TraceRecorder::disabled()
+        };
         Scheduler {
             engine,
             spec,
@@ -247,6 +278,9 @@ impl Scheduler {
             batch_stats: BatchStats::default(),
             metrics: ServingMetrics::default(),
             started: Instant::now(),
+            trace,
+            wave_seq: 0,
+            pj_per_mac: crate::energy::EnergyParams::default().ita().total_pj(),
         }
     }
 
@@ -312,7 +346,16 @@ impl Scheduler {
                 let remaining = a.req.max_new_tokens.saturating_sub(a.generated.len());
                 if a.req.sampling.temperature <= 0.0 && remaining > 1 {
                     match spec.propose(seq, &a.prompt, &a.generated, remaining - 1) {
-                        Ok(d) => drafts[i] = d,
+                        Ok(d) => {
+                            if self.trace.enabled() && !d.is_empty() {
+                                let mut ev =
+                                    TraceEvent::at(self.trace.now_us(), TraceKind::SpecPropose);
+                                ev.req = a.req.id;
+                                ev.a = d.len() as u64;
+                                self.trace.record(ev);
+                            }
+                            drafts[i] = d;
+                        }
                         // a draft-engine failure degrades that sequence to
                         // plain decode; the target engine is untouched
                         Err(e) => eprintln!(
@@ -357,6 +400,13 @@ impl Scheduler {
             }
             budget -= take;
             self.metrics.prefill_chunks += 1;
+            if self.trace.enabled() {
+                let mut ev = TraceEvent::at(self.trace.now_us(), TraceKind::PrefillChunk);
+                ev.req = a.req.id;
+                ev.a = take as u64;
+                ev.b = (a.prefilled + take) as u64;
+                self.trace.record(ev);
+            }
         }
 
         // stage-aware plan: rows compose into waves exactly as before; on a
@@ -386,10 +436,58 @@ impl Scheduler {
         // stochastic rows.
         let mut sampled: Vec<(usize, Vec<u32>, bool)> = Vec::new(); // (idx, tokens, first)
         let mut chains: Vec<Vec<Vec<f32>>> = vec![Vec::new(); self.active.len()];
+        // per verify row, the wave it rode (aligned with `chains[i]`) — the
+        // join key that later attributes each accepted token to its wave
+        let tracing = self.trace.enabled();
+        let mut chain_waves: Vec<Vec<u64>> =
+            if tracing { vec![Vec::new(); self.active.len()] } else { Vec::new() };
         let mut offset = 0;
         for w in &p.mixed.plan.waves {
             let end = offset + w.rows;
+            // wave span bookkeeping: deltas of the engine's cumulative MAC
+            // and modeled-link counters bound this wave's energy/link share
+            let (t0, macs0, link0) = if tracing {
+                (
+                    self.trace.now_us(),
+                    self.engine.device_stats().macs,
+                    self.engine.link_stats().modeled_time_s,
+                )
+            } else {
+                (0, 0, 0.0)
+            };
             let logits = self.engine.forward(&ids[offset..end], &tokens[offset..end])?;
+            let wid = if tracing {
+                self.wave_seq += 1;
+                let wid = self.wave_seq;
+                let dur = self.trace.now_us().saturating_sub(t0).max(1);
+                let link_us = ((self.engine.link_stats().modeled_time_s - link0) * 1e6)
+                    .round()
+                    .max(0.0) as u64;
+                let macs = self.engine.device_stats().macs - macs0;
+                let mut ev = TraceEvent::at(t0, TraceKind::Wave);
+                ev.dur_us = dur;
+                ev.wave = wid;
+                ev.a = w.bucket as u64;
+                ev.b = w.rows as u64;
+                ev.link_us = link_us;
+                ev.energy_j = macs as f64 * self.pj_per_mac * 1e-12;
+                self.trace.record(ev);
+                // pipelined engine: modeled per-stage slices of the wave
+                let layers = self.engine.stage_layers();
+                if layers.len() > 1 {
+                    let spans = super::pipeline::stage_spans(dur, link_us, &layers);
+                    for (s, (off, d)) in spans.into_iter().enumerate() {
+                        let mut sev = TraceEvent::at(t0 + off, TraceKind::StageSpan);
+                        sev.dur_us = d;
+                        sev.wave = wid;
+                        sev.a = s as u64;
+                        self.trace.record(sev);
+                    }
+                }
+                wid
+            } else {
+                WAVE_NONE
+            };
             let v = logits.cols;
             for r in 0..w.rows {
                 let row = &logits.data[r * v..(r + 1) * v];
@@ -397,8 +495,21 @@ impl Scheduler {
                     Row::Decode(i) => {
                         let tok = sample(row, &self.active[i].req.sampling, &mut self.rng);
                         sampled.push((i, vec![tok], false));
+                        if tracing {
+                            let mut ev =
+                                TraceEvent::at(self.trace.now_us(), TraceKind::Tokens);
+                            ev.req = self.active[i].req.id;
+                            ev.wave = wid;
+                            ev.a = 1;
+                            self.trace.record(ev);
+                        }
                     }
-                    Row::Verify(i) => chains[i].push(row.to_vec()),
+                    Row::Verify(i) => {
+                        chains[i].push(row.to_vec());
+                        if tracing {
+                            chain_waves[i].push(wid);
+                        }
+                    }
                     Row::Prefill(i) => {
                         self.active[i].prefilled += 1;
                         self.metrics.tokens_prefilled += 1;
@@ -406,6 +517,14 @@ impl Scheduler {
                             // final prompt row: its logits seed the stream
                             let tok = sample(row, &self.active[i].req.sampling, &mut self.rng);
                             sampled.push((i, vec![tok], true));
+                            if tracing {
+                                let mut ev =
+                                    TraceEvent::at(self.trace.now_us(), TraceKind::Tokens);
+                                ev.req = self.active[i].req.id;
+                                ev.wave = wid;
+                                ev.a = 1;
+                                self.trace.record(ev);
+                            }
                         }
                     }
                 }
@@ -420,7 +539,43 @@ impl Scheduler {
             if chains[i].is_empty() {
                 continue;
             }
+            let (p0, a0) = (self.active[i].spec_proposed, self.active[i].spec_accepted);
             let out = self.accept_verified(i, &drafts[i], &chains[i])?;
+            if tracing {
+                let rid = self.active[i].req.id;
+                let now = self.trace.now_us();
+                let dp = self.active[i].spec_proposed - p0;
+                let da = self.active[i].spec_accepted - a0;
+                let mut acc = TraceEvent::at(now, TraceKind::SpecAccept);
+                acc.req = rid;
+                acc.a = da;
+                acc.b = dp;
+                self.trace.record(acc);
+                if dp > da {
+                    let mut rb = TraceEvent::at(now, TraceKind::SpecRollback);
+                    rb.req = rid;
+                    rb.a = dp - da;
+                    self.trace.record(rb);
+                }
+                // attribute the committed tokens to the wave(s) whose rows
+                // produced them: token j came from verify row j, and a
+                // chain may span waves
+                let waves = &chain_waves[i];
+                let mut j = 0;
+                while j < out.len() {
+                    let wid = waves[j];
+                    let mut k = j + 1;
+                    while k < out.len() && waves[k] == wid {
+                        k += 1;
+                    }
+                    let mut tev = TraceEvent::at(now, TraceKind::Tokens);
+                    tev.req = rid;
+                    tev.wave = wid;
+                    tev.a = (k - j) as u64;
+                    self.trace.record(tev);
+                    j = k;
+                }
+            }
             sampled.push((i, out, false));
         }
 
@@ -553,11 +708,20 @@ impl Scheduler {
             let Some(entry) = self.queue.pop_front() else { break };
             match entry {
                 QueueEntry::Fresh(req, enqueued) => {
+                    let now = Instant::now();
+                    self.metrics.queue_wait.record(now.duration_since(enqueued).as_secs_f64());
                     let prompt = self.tokenizer.encode(&req.prompt);
                     // graft the longest cached prefix; only the suffix will
                     // prefill, chunk by chunk
                     let (seq, skipped) = self.engine.new_sequence_with_prefix(&prompt);
                     self.metrics.prefill_skipped_tokens += skipped as u64;
+                    if self.trace.enabled() {
+                        let mut ev = TraceEvent::at(self.trace.ts_us(now), TraceKind::Admit);
+                        ev.req = req.id;
+                        ev.a = now.duration_since(enqueued).as_micros() as u64;
+                        ev.b = prompt.len() as u64;
+                        self.trace.record(ev);
+                    }
                     self.active.push(Active {
                         prefilled: skipped,
                         prompt,
@@ -570,6 +734,7 @@ impl Scheduler {
                         spec_proposed: 0,
                         spec_accepted: 0,
                         enqueued,
+                        admitted: now,
                         first_token_at: None,
                         last_token_at: None,
                     });
@@ -621,6 +786,16 @@ impl Scheduler {
         self.engine.register_prefix(seq, &prompt);
         let next = *generated.last().expect("checked non-empty above");
         let now = Instant::now();
+        // the requeue/migration round-trip is queue wait too — recovery
+        // latency shows up in the queue-wait percentiles, not just TTFT
+        self.metrics.queue_wait.record(now.duration_since(enqueued).as_secs_f64());
+        if self.trace.enabled() {
+            let mut ev = TraceEvent::at(self.trace.ts_us(now), TraceKind::Resume);
+            ev.req = req.id;
+            ev.a = kv.value_rows() as u64;
+            ev.b = kv.by_ref_len as u64;
+            self.trace.record(ev);
+        }
         // time-to-resumed-service: keeps recovery latency visible in the
         // pooled TTFT percentiles (a dead cartridge's genuine sample was
         // stripped with its checkpoint; after a live migration this is one
@@ -640,6 +815,7 @@ impl Scheduler {
             spec_proposed,
             spec_accepted,
             enqueued,
+            admitted: now,
             first_token_at: Some(now),
             last_token_at: Some(now),
         });
@@ -682,6 +858,11 @@ impl Scheduler {
             // restarts cleanly elsewhere (byte-identical outputs either
             // way — prefill is deterministic in absolute position)
             self.engine.free_sequence(a.seq);
+            if self.trace.enabled() {
+                let mut ev = TraceEvent::at(self.trace.now_us(), TraceKind::Export);
+                ev.req = a.req.id;
+                self.trace.record(ev);
+            }
             return Some((a.req, None));
         }
         let by_ref = keep_prefix
@@ -693,6 +874,13 @@ impl Scheduler {
             .expect("active sequences snapshot cleanly");
         self.engine.free_sequence(a.seq);
         self.metrics.migrated_out += 1;
+        if self.trace.enabled() {
+            let mut ev = TraceEvent::at(self.trace.now_us(), TraceKind::Export);
+            ev.req = a.req.id;
+            ev.a = kv.value_rows() as u64;
+            ev.b = kv.by_ref_len as u64;
+            self.trace.record(ev);
+        }
         let ckpt = DecodeCheckpoint {
             prompt: a.prompt,
             generated: a.generated,
@@ -790,6 +978,31 @@ impl Scheduler {
         let intervals = a.generated.len().saturating_sub(a.resumed_len.max(1));
         let itl = if intervals > 0 { decode_time / intervals as f64 } else { 0.0 };
         self.metrics.itl.record(itl);
+        if self.trace.enabled() {
+            // lifecycle spans: Queued [enqueue → admit] + Active [admit →
+            // complete] tile the request's E2E latency, so their durations
+            // sum to the Complete event's reported total within rounding
+            // (the `trace_check` schema checker pins a 3 µs tolerance)
+            let enq = self.trace.ts_us(a.enqueued);
+            let adm = self.trace.ts_us(a.admitted);
+            let end = self.trace.ts_us(now);
+            let rid = a.req.id;
+            let toks = a.generated.len() as u64;
+            let mut q = TraceEvent::at(enq, TraceKind::Queued);
+            q.dur_us = adm.saturating_sub(enq);
+            q.req = rid;
+            self.trace.record(q);
+            let mut act = TraceEvent::at(adm, TraceKind::Active);
+            act.dur_us = end.saturating_sub(adm);
+            act.req = rid;
+            act.a = toks;
+            self.trace.record(act);
+            let mut c = TraceEvent::at(end, TraceKind::Complete);
+            c.req = rid;
+            c.a = toks;
+            c.b = (total * 1e6).round() as u64;
+            self.trace.record(c);
+        }
         let finish = if a.req.stop_at_eos && a.generated.last() == Some(&EOS) {
             FinishReason::Eos
         } else {
@@ -844,11 +1057,44 @@ impl Scheduler {
         m.stage_busy_slots = self.batch_stats.busy_stage_slots;
         m.traffic = self.engine.traffic();
         m.interface_bytes = m.traffic.total();
-        m.device_macs = self.engine.device_stats().macs;
+        let macs = self.engine.device_stats().macs;
+        m.device_macs = macs;
+        // modeled energy covers the target AND draft engines' MAC work at
+        // the ITA operating point; `device_macs` stays target-only so the
+        // established counter keeps its meaning
+        let draft_macs = self.spec.as_ref().map_or(0, |s| s.device_macs());
+        m.energy_j = (macs + draft_macs) as f64 * self.pj_per_mac * 1e-12;
     }
 
     pub fn engine(&self) -> &Engine {
         &self.engine
+    }
+
+    /// True when request-lifecycle tracing is on
+    /// ([`SchedulerOpts::trace_capacity`] > 0).
+    pub fn trace_enabled(&self) -> bool {
+        self.trace.enabled()
+    }
+
+    /// Drain every event recorded since the last drain — the worker
+    /// piggybacks these on its periodic checkpoints.
+    pub fn take_trace_events(&mut self) -> Vec<TraceEvent> {
+        self.trace.drain()
+    }
+
+    /// Return and reset the count of events lost to ring overflow.
+    pub fn take_trace_dropped(&mut self) -> u64 {
+        self.trace.take_dropped()
+    }
+
+    /// Stamp a periodic-checkpoint instant on the trace (`n` = decode
+    /// checkpoints carried in the report).
+    pub fn note_checkpoint(&mut self, n: usize) {
+        if self.trace.enabled() {
+            let mut ev = TraceEvent::at(self.trace.now_us(), TraceKind::Checkpoint);
+            ev.a = n as u64;
+            self.trace.record(ev);
+        }
     }
 }
 

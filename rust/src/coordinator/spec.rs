@@ -330,6 +330,13 @@ impl SpecDecoder {
     pub fn draft_cache_stats(&self) -> (usize, usize, usize) {
         self.draft.cache_stats()
     }
+
+    /// Total MACs the draft engine's device has executed — the speculation
+    /// share of the cartridge's energy accounting
+    /// ([`ServingMetrics::energy_j`](super::metrics::ServingMetrics::energy_j)).
+    pub fn device_macs(&self) -> u64 {
+        self.draft.device_stats().macs
+    }
 }
 
 #[cfg(test)]

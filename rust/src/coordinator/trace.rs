@@ -1,0 +1,572 @@
+//! Request-lifecycle tracing: a lock-cheap, ring-buffered event recorder the
+//! scheduler stamps on the hot path, plus the fleet-level exporters that turn
+//! the collected events into a Chrome/Perfetto timeline, and a
+//! flight-recorder dump of the slowest requests.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Zero cost when disabled.** Every instrumentation site is gated on
+//!    [`TraceRecorder::enabled`] (an inlined bool load); no timestamps are
+//!    taken and no allocation happens on the disabled path. The bench sweep
+//!    pins the disabled-overhead claim (`tracing_overhead` record in
+//!    `BENCH_e2e.json`).
+//! 2. **Bounded memory.** Events land in a fixed-capacity ring; when full,
+//!    the oldest events are dropped and counted (`dropped`). Workers drain
+//!    their rings into [`CheckpointReport`]s, so in steady state the ring
+//!    only holds one checkpoint interval's worth of events.
+//! 3. **One shared clock.** All timestamps are µs since a single trace
+//!    epoch ([`SchedulerOpts::trace_epoch`], injected by the fleet before
+//!    workers boot), so cross-cartridge causality (export before resume,
+//!    migrate between the two) holds in the merged timeline.
+//!
+//! Events are flat [`Copy`] structs — a kind tag plus two generic operands
+//! (`a`, `b`) whose meaning is per-kind (see [`TraceKind`]). This keeps the
+//! ring allocation-free and the recorder branch-cheap.
+//!
+//! [`CheckpointReport`]: super::worker::CheckpointReport
+//! [`SchedulerOpts::trace_epoch`]: super::scheduler::SchedulerOpts::trace_epoch
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use crate::util::json::{json_array, Json};
+
+/// Sentinel for events not tied to a request (wave/stage spans).
+pub const REQ_NONE: u64 = u64::MAX;
+/// Sentinel for events not tied to a wave.
+pub const WAVE_NONE: u64 = u64::MAX;
+
+/// What happened. The `a`/`b` operand meaning is listed per variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceKind {
+    /// Request left the queue and became active. `a` = queue wait (µs),
+    /// `b` = prompt tokens.
+    Admit,
+    /// Span: enqueue → admit (duration = queue wait).
+    Queued,
+    /// Span: admit → complete (active service time). `a` = tokens generated.
+    Active,
+    /// One prefill chunk rode a wave. `a` = chunk tokens, `b` = prompt
+    /// tokens prefilled so far.
+    PrefillChunk,
+    /// Span: one device forward (decode/mixed/verify wave). `a` = bucket,
+    /// `b` = rows; `link_us`/`energy_j` carry the modeled link time and
+    /// wave energy.
+    Wave,
+    /// Span: modeled per-stage slice of a wave (pipelined engines only).
+    /// `a` = stage index.
+    StageSpan,
+    /// Draft proposed a chain. `a` = proposed tokens.
+    SpecPropose,
+    /// Verify wave accepted a prefix. `a` = accepted, `b` = proposed.
+    SpecAccept,
+    /// Verify wave rolled back rejected rows. `a` = rejected tokens.
+    SpecRollback,
+    /// Committed tokens attributed to one wave. `a` = token count.
+    Tokens,
+    /// Periodic decode checkpoint. `a` = checkpoints carried.
+    Checkpoint,
+    /// Request state left this cartridge. `a` = by-value KV rows,
+    /// `b` = by-ref rows.
+    Export,
+    /// Request state restored on this cartridge. `a` = by-value KV rows,
+    /// `b` = by-ref rows.
+    Resume,
+    /// Fleet moved the request. `a` = source cartridge, `b` = target.
+    Migrate,
+    /// Request finished. `a` = tokens generated, `b` = reported E2E (µs).
+    Complete,
+}
+
+impl TraceKind {
+    /// Stable lowercase name (trace JSON `name` field; pinned by tests and
+    /// the `trace_check` schema checker).
+    pub fn name(self) -> &'static str {
+        match self {
+            TraceKind::Admit => "admit",
+            TraceKind::Queued => "queued",
+            TraceKind::Active => "active",
+            TraceKind::PrefillChunk => "prefill_chunk",
+            TraceKind::Wave => "wave",
+            TraceKind::StageSpan => "stage",
+            TraceKind::SpecPropose => "spec_propose",
+            TraceKind::SpecAccept => "spec_accept",
+            TraceKind::SpecRollback => "spec_rollback",
+            TraceKind::Tokens => "tokens",
+            TraceKind::Checkpoint => "checkpoint",
+            TraceKind::Export => "export",
+            TraceKind::Resume => "resume",
+            TraceKind::Migrate => "migrate",
+            TraceKind::Complete => "complete",
+        }
+    }
+
+    /// Span kinds render as Perfetto duration events (`ph: "X"`); the rest
+    /// are thread-scoped instants (`ph: "i"`).
+    pub fn is_span(self) -> bool {
+        matches!(
+            self,
+            TraceKind::Queued | TraceKind::Active | TraceKind::Wave | TraceKind::StageSpan
+        )
+    }
+}
+
+/// One recorded event. Flat and `Copy` so the ring never allocates.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceEvent {
+    /// µs since the trace epoch.
+    pub ts_us: u64,
+    /// Span duration in µs (0 for instants).
+    pub dur_us: u64,
+    pub kind: TraceKind,
+    /// Wire ticket (fleet-unique), or [`REQ_NONE`].
+    pub req: u64,
+    /// Stamped by the fleet dispatcher when it absorbs worker events.
+    pub cartridge: u32,
+    /// Wave sequence number within the recording scheduler, or
+    /// [`WAVE_NONE`].
+    pub wave: u64,
+    /// Kind-specific operand (see [`TraceKind`]).
+    pub a: u64,
+    /// Kind-specific operand (see [`TraceKind`]).
+    pub b: u64,
+    /// Modeled link-transfer share of a wave span (µs).
+    pub link_us: u64,
+    /// Modeled device energy of a wave span (joules).
+    pub energy_j: f64,
+}
+
+impl TraceEvent {
+    /// An instant of `kind` at `ts_us` with all operands zeroed/none.
+    pub fn at(ts_us: u64, kind: TraceKind) -> TraceEvent {
+        TraceEvent {
+            ts_us,
+            dur_us: 0,
+            kind,
+            req: REQ_NONE,
+            cartridge: 0,
+            wave: WAVE_NONE,
+            a: 0,
+            b: 0,
+            link_us: 0,
+            energy_j: 0.0,
+        }
+    }
+}
+
+/// Ring-buffered per-scheduler event recorder. One per scheduler, drained
+/// into checkpoint reports by the worker loop; never shared across threads,
+/// so recording is a branch plus a `VecDeque` push.
+pub struct TraceRecorder {
+    enabled: bool,
+    epoch: Instant,
+    ring: VecDeque<TraceEvent>,
+    capacity: usize,
+    dropped: u64,
+}
+
+impl TraceRecorder {
+    /// The no-op recorder: [`TraceRecorder::enabled`] is false,
+    /// [`TraceRecorder::record`] discards.
+    pub fn disabled() -> TraceRecorder {
+        TraceRecorder {
+            enabled: false,
+            epoch: Instant::now(),
+            ring: VecDeque::new(),
+            capacity: 0,
+            dropped: 0,
+        }
+    }
+
+    /// An enabled recorder holding at most `capacity` events, stamping
+    /// timestamps relative to `epoch`.
+    pub fn new(capacity: usize, epoch: Instant) -> TraceRecorder {
+        TraceRecorder {
+            enabled: capacity > 0,
+            epoch,
+            ring: VecDeque::with_capacity(capacity.min(4096)),
+            capacity,
+            dropped: 0,
+        }
+    }
+
+    /// Gate every instrumentation site on this — it inlines to a bool load,
+    /// which is the entire disabled-path cost.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn epoch(&self) -> Instant {
+        self.epoch
+    }
+
+    /// µs since the trace epoch, now.
+    pub fn now_us(&self) -> u64 {
+        self.ts_us(Instant::now())
+    }
+
+    /// µs since the trace epoch at `at` (0 if `at` predates the epoch).
+    pub fn ts_us(&self, at: Instant) -> u64 {
+        at.saturating_duration_since(self.epoch).as_micros() as u64
+    }
+
+    /// Push an event; drops (and counts) the oldest when the ring is full.
+    pub fn record(&mut self, ev: TraceEvent) {
+        if !self.enabled {
+            return;
+        }
+        if self.ring.len() >= self.capacity {
+            self.ring.pop_front();
+            self.dropped += 1;
+        }
+        self.ring.push_back(ev);
+    }
+
+    /// Take everything recorded since the last drain.
+    pub fn drain(&mut self) -> Vec<TraceEvent> {
+        self.ring.drain(..).collect()
+    }
+
+    /// Events lost to ring overflow so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Return and reset the overflow-drop counter (drained alongside the
+    /// events, so checkpoint reports carry per-interval deltas).
+    pub fn take_dropped(&mut self) -> u64 {
+        std::mem::take(&mut self.dropped)
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+}
+
+/// One request's full event chain, reconstructed from the merged fleet
+/// timeline (flight-recorder unit).
+#[derive(Debug, Clone)]
+pub struct RequestChain {
+    /// Wire ticket.
+    pub req: u64,
+    /// Reported E2E latency (µs) from the `Complete` event, or the chain's
+    /// timestamp extent if the request never completed.
+    pub total_us: u64,
+    /// The request's events, in timestamp order.
+    pub events: Vec<TraceEvent>,
+}
+
+/// The merged, cartridge-stamped event timeline a fleet shutdown returns
+/// (see `Fleet::shutdown_traced`), with the exporters on top.
+#[derive(Debug, Clone, Default)]
+pub struct FleetTrace {
+    /// All events, sorted by timestamp.
+    pub events: Vec<TraceEvent>,
+    /// Events lost to ring/sink overflow across all cartridges.
+    pub dropped: u64,
+}
+
+impl FleetTrace {
+    /// Build from raw events (sorts by timestamp, then wave/kind for a
+    /// stable order at equal timestamps).
+    pub fn new(mut events: Vec<TraceEvent>, dropped: u64) -> FleetTrace {
+        events.sort_by_key(|e| (e.ts_us, e.cartridge, e.wave, e.req));
+        FleetTrace { events, dropped }
+    }
+
+    /// Chrome/Perfetto `trace_events` JSON: load the string (written to a
+    /// file) at <https://ui.perfetto.dev> or `chrome://tracing`. One process
+    /// per cartridge; per cartridge one `waves` track, one track per
+    /// pipeline stage, a `control` track (checkpoints/migrations), and one
+    /// track per request carrying its lifecycle chain.
+    pub fn perfetto_json(&self) -> String {
+        const TID_WAVES: u64 = 0;
+        const TID_STAGE_BASE: u64 = 1; // + stage index
+        const TID_CONTROL: u64 = 90;
+        const TID_REQ_BASE: u64 = 100; // + wire ticket
+
+        let mut out: Vec<String> = Vec::with_capacity(self.events.len() + 16);
+        // (pid, tid) -> track name, emitted as metadata events up front
+        let mut tracks: Vec<(u32, u64, String)> = Vec::new();
+        let mut track_seen = std::collections::HashSet::new();
+        let mut pids = std::collections::HashSet::new();
+
+        for ev in &self.events {
+            let pid = ev.cartridge;
+            let (tid, track_name) = match ev.kind {
+                TraceKind::Wave => (TID_WAVES, "waves".to_string()),
+                TraceKind::StageSpan => {
+                    (TID_STAGE_BASE + ev.a, format!("stage {}", ev.a))
+                }
+                TraceKind::Checkpoint | TraceKind::Migrate => {
+                    (TID_CONTROL, "control".to_string())
+                }
+                _ => (TID_REQ_BASE + ev.req, format!("req {}", ev.req)),
+            };
+            pids.insert(pid);
+            if track_seen.insert((pid, tid)) {
+                tracks.push((pid, tid, track_name));
+            }
+
+            let mut j = Json::default();
+            j.str("name", ev.kind.name());
+            if ev.kind.is_span() {
+                j.str("ph", "X");
+                j.num("dur", ev.dur_us.max(1));
+            } else {
+                j.str("ph", "i");
+                j.str("s", "t");
+            }
+            j.num("pid", pid);
+            j.num("tid", tid);
+            j.num("ts", ev.ts_us);
+            j.str("cat", "ita");
+            j.put("args", Self::args_json(ev));
+            out.push(j.encode());
+        }
+
+        // metadata events so Perfetto labels the tracks
+        let mut meta: Vec<String> = Vec::new();
+        let mut pid_list: Vec<u32> = pids.into_iter().collect();
+        pid_list.sort_unstable();
+        for pid in pid_list {
+            let mut j = Json::default();
+            j.str("name", "process_name");
+            j.str("ph", "M");
+            j.num("pid", pid);
+            let mut args = Json::default();
+            args.str("name", &format!("cartridge {pid}"));
+            j.put("args", args.encode());
+            meta.push(j.encode());
+        }
+        tracks.sort_by(|x, y| (x.0, x.1).cmp(&(y.0, y.1)));
+        for (pid, tid, name) in tracks {
+            let mut j = Json::default();
+            j.str("name", "thread_name");
+            j.str("ph", "M");
+            j.num("pid", pid);
+            j.num("tid", tid);
+            let mut args = Json::default();
+            args.str("name", &name);
+            j.put("args", args.encode());
+            meta.push(j.encode());
+        }
+        meta.extend(out);
+
+        let mut root = Json::default();
+        root.put("traceEvents", json_array(&meta));
+        root.str("displayTimeUnit", "ms");
+        root.num("ita_dropped_events", self.dropped);
+        root.encode()
+    }
+
+    fn args_json(ev: &TraceEvent) -> String {
+        let mut args = Json::default();
+        if ev.req != REQ_NONE {
+            args.num("req", ev.req);
+        }
+        if ev.wave != WAVE_NONE {
+            args.num("wave", ev.wave);
+        }
+        match ev.kind {
+            TraceKind::Admit => {
+                args.num("queue_wait_us", ev.a).num("prompt_tokens", ev.b);
+            }
+            TraceKind::Queued => {}
+            TraceKind::Active => {
+                args.num("tokens", ev.a);
+            }
+            TraceKind::PrefillChunk => {
+                args.num("tokens", ev.a).num("prefilled", ev.b);
+            }
+            TraceKind::Wave => {
+                args.num("bucket", ev.a)
+                    .num("rows", ev.b)
+                    .num("link_us", ev.link_us)
+                    .float("energy_uj", ev.energy_j * 1e6);
+            }
+            TraceKind::StageSpan => {
+                args.num("stage", ev.a);
+            }
+            TraceKind::SpecPropose => {
+                args.num("proposed", ev.a);
+            }
+            TraceKind::SpecAccept => {
+                args.num("accepted", ev.a).num("proposed", ev.b);
+            }
+            TraceKind::SpecRollback => {
+                args.num("rejected", ev.a);
+            }
+            TraceKind::Tokens => {
+                args.num("count", ev.a);
+            }
+            TraceKind::Checkpoint => {
+                args.num("decode_ckpts", ev.a);
+            }
+            TraceKind::Export | TraceKind::Resume => {
+                args.num("rows", ev.a).num("by_ref", ev.b);
+            }
+            TraceKind::Migrate => {
+                args.num("from", ev.a).num("to", ev.b);
+            }
+            TraceKind::Complete => {
+                args.num("tokens", ev.a).num("total_us", ev.b);
+            }
+        }
+        args.encode()
+    }
+
+    /// Group the timeline into per-request chains, slowest first.
+    pub fn request_chains(&self) -> Vec<RequestChain> {
+        let mut by_req: std::collections::HashMap<u64, Vec<TraceEvent>> =
+            std::collections::HashMap::new();
+        for ev in &self.events {
+            if ev.req != REQ_NONE {
+                by_req.entry(ev.req).or_default().push(*ev);
+            }
+        }
+        let mut chains: Vec<RequestChain> = by_req
+            .into_iter()
+            .map(|(req, events)| {
+                let total_us = events
+                    .iter()
+                    .find(|e| e.kind == TraceKind::Complete)
+                    .map(|e| e.b)
+                    .unwrap_or_else(|| {
+                        let lo = events.iter().map(|e| e.ts_us).min().unwrap_or(0);
+                        let hi = events
+                            .iter()
+                            .map(|e| e.ts_us + e.dur_us)
+                            .max()
+                            .unwrap_or(0);
+                        hi.saturating_sub(lo)
+                    });
+                RequestChain { req, total_us, events }
+            })
+            .collect();
+        chains.sort_by_key(|c| (std::cmp::Reverse(c.total_us), c.req));
+        chains
+    }
+
+    /// Flight-recorder dump: the `n` slowest requests with their full event
+    /// chains, as a standalone JSON document.
+    pub fn flight_recorder(&self, n: usize) -> String {
+        let chains: Vec<String> = self
+            .request_chains()
+            .into_iter()
+            .take(n)
+            .map(|c| {
+                let events: Vec<String> = c
+                    .events
+                    .iter()
+                    .map(|e| {
+                        let mut j = Json::default();
+                        j.num("ts_us", e.ts_us);
+                        j.str("kind", e.kind.name());
+                        if e.dur_us > 0 {
+                            j.num("dur_us", e.dur_us);
+                        }
+                        j.num("cartridge", e.cartridge);
+                        if e.wave != WAVE_NONE {
+                            j.num("wave", e.wave);
+                        }
+                        j.num("a", e.a);
+                        j.num("b", e.b);
+                        j.encode()
+                    })
+                    .collect();
+                let mut j = Json::default();
+                j.num("req", c.req);
+                j.num("total_us", c.total_us);
+                j.put("events", json_array(&events));
+                j.encode()
+            })
+            .collect();
+        let mut root = Json::default();
+        root.put("slowest", json_array(&chains));
+        root.num("dropped_events", self.dropped);
+        root.encode()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::{parse, JsonValue};
+
+    #[test]
+    fn disabled_recorder_discards_for_free() {
+        let mut t = TraceRecorder::disabled();
+        assert!(!t.enabled());
+        t.record(TraceEvent::at(1, TraceKind::Admit));
+        assert!(t.is_empty());
+        assert_eq!(t.dropped(), 0);
+    }
+
+    #[test]
+    fn ring_caps_and_counts_drops() {
+        let mut t = TraceRecorder::new(2, Instant::now());
+        assert!(t.enabled());
+        for i in 0..5u64 {
+            t.record(TraceEvent::at(i, TraceKind::Wave));
+        }
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.dropped(), 3);
+        let evs = t.drain();
+        assert_eq!(evs[0].ts_us, 3);
+        assert_eq!(evs[1].ts_us, 4);
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn perfetto_export_is_valid_json_with_tracks() {
+        let mut wave = TraceEvent::at(10, TraceKind::Wave);
+        wave.dur_us = 5;
+        wave.wave = 1;
+        wave.a = 4;
+        wave.b = 3;
+        wave.energy_j = 1e-6;
+        let mut complete = TraceEvent::at(20, TraceKind::Complete);
+        complete.req = 0;
+        complete.a = 7;
+        complete.b = 19;
+        let trace = FleetTrace::new(vec![complete, wave], 0);
+        // sorted by ts: wave first
+        assert_eq!(trace.events[0].kind, TraceKind::Wave);
+        let doc = parse(&trace.perfetto_json()).expect("valid JSON");
+        let events = doc.get("traceEvents").and_then(JsonValue::as_array).expect("array");
+        // 2 events + process_name + 2 thread_name metadata
+        assert_eq!(events.len(), 5);
+        let wave_ev = events
+            .iter()
+            .find(|e| e.get("name").and_then(JsonValue::as_str) == Some("wave"))
+            .expect("wave event");
+        assert_eq!(wave_ev.get("ph").and_then(JsonValue::as_str), Some("X"));
+        assert_eq!(wave_ev.get("dur").and_then(JsonValue::as_f64), Some(5.0));
+        let args = wave_ev.get("args").expect("args");
+        assert_eq!(args.get("bucket").and_then(JsonValue::as_f64), Some(4.0));
+    }
+
+    #[test]
+    fn flight_recorder_ranks_slowest_first() {
+        let mut fast = TraceEvent::at(5, TraceKind::Complete);
+        fast.req = 1;
+        fast.b = 100;
+        let mut slow = TraceEvent::at(9, TraceKind::Complete);
+        slow.req = 2;
+        slow.b = 900;
+        let trace = FleetTrace::new(vec![fast, slow], 0);
+        let chains = trace.request_chains();
+        assert_eq!(chains[0].req, 2);
+        assert_eq!(chains[0].total_us, 900);
+        let doc = parse(&trace.flight_recorder(1)).expect("valid JSON");
+        let slowest = doc.get("slowest").and_then(JsonValue::as_array).expect("array");
+        assert_eq!(slowest.len(), 1);
+        assert_eq!(slowest[0].get("req").and_then(JsonValue::as_f64), Some(2.0));
+    }
+}

@@ -88,6 +88,13 @@ pub struct CheckpointReport {
     /// Dispatch policies use it to invalidate stale shadow-index entries
     /// for prefixes this cartridge evicted.
     pub prefix_occupancy: Option<Vec<Vec<u32>>>,
+    /// Request-lifecycle trace events recorded since the previous
+    /// checkpoint (empty when tracing is off). The dispatcher stamps each
+    /// with this cartridge's id and merges them into the fleet timeline.
+    pub events: Vec<super::trace::TraceEvent>,
+    /// Events this cartridge's trace ring dropped since the previous
+    /// checkpoint (per-interval delta, summed fleet-side).
+    pub trace_dropped: u64,
 }
 
 /// Events a worker emits on the shared event channel.
@@ -297,7 +304,21 @@ fn worker_loop<E>(
                         } else {
                             (Vec::new(), None)
                         };
-                        let report = CheckpointReport { metrics: snap, decode, prefix_occupancy };
+                        if periodic {
+                            sched.note_checkpoint(decode.len());
+                        }
+                        // checkpoints double as the trace drain: in steady
+                        // state the ring never holds more than one
+                        // checkpoint interval's worth of events
+                        let trace_events = sched.take_trace_events();
+                        let trace_dropped = sched.take_trace_dropped();
+                        let report = CheckpointReport {
+                            metrics: snap,
+                            decode,
+                            prefix_occupancy,
+                            events: trace_events,
+                            trace_dropped,
+                        };
                         let _ = events.send(wrap(WorkerEvent::Checkpoint(id, Box::new(report))));
                     }
                 }
@@ -309,6 +330,23 @@ fn worker_loop<E>(
                 }
             }
         } else if draining {
+            // flush any trace events recorded since the last checkpoint —
+            // the final requests' Complete/span events would otherwise die
+            // with this thread
+            if sched.trace_enabled() {
+                let leftover = sched.take_trace_events();
+                let trace_dropped = sched.take_trace_dropped();
+                if !leftover.is_empty() || trace_dropped > 0 {
+                    let report = CheckpointReport {
+                        metrics: sched.counter_metrics(),
+                        decode: Vec::new(),
+                        prefix_occupancy: None,
+                        events: leftover,
+                        trace_dropped,
+                    };
+                    let _ = events.send(wrap(WorkerEvent::Checkpoint(id, Box::new(report))));
+                }
+            }
             let _ = events.send(wrap(WorkerEvent::Drained(id, sched.metrics())));
             return;
         }

@@ -1,0 +1,348 @@
+//! Hand-rolled JSON: an ordered object builder for the telemetry exporters
+//! (trace timelines, metrics snapshots, bench records) and a minimal
+//! recursive-descent parser for the schema checkers that validate them.
+//!
+//! The offline vendor set has no serde; everything the repo emits or reads
+//! back is plain JSON small enough that a few hundred lines of hand-rolled
+//! code beats a dependency. Values arrive pre-encoded in the builder; the
+//! `num`/`float`/`str` helpers cover what we emit.
+
+use anyhow::{bail, Result};
+
+/// Ordered JSON object builder. Keys keep insertion order so emitted records
+/// diff cleanly across runs.
+#[derive(Default)]
+pub struct Json(Vec<(String, String)>);
+
+impl Json {
+    pub fn put(&mut self, key: &str, encoded_value: String) -> &mut Self {
+        self.0.push((key.to_string(), encoded_value));
+        self
+    }
+
+    pub fn num<T: std::fmt::Display>(&mut self, key: &str, v: T) -> &mut Self {
+        self.put(key, v.to_string())
+    }
+
+    pub fn float(&mut self, key: &str, v: f64) -> &mut Self {
+        // JSON has no NaN/inf; clamp to null rather than emit garbage
+        if v.is_finite() {
+            self.put(key, format!("{v:.4}"))
+        } else {
+            self.put(key, "null".to_string())
+        }
+    }
+
+    /// Full-precision float (timeline timestamps need more than 4 digits).
+    pub fn float_full(&mut self, key: &str, v: f64) -> &mut Self {
+        if v.is_finite() {
+            self.put(key, format!("{v}"))
+        } else {
+            self.put(key, "null".to_string())
+        }
+    }
+
+    pub fn str(&mut self, key: &str, v: &str) -> &mut Self {
+        self.put(key, format!("\"{}\"", escape(v)))
+    }
+
+    pub fn bool(&mut self, key: &str, v: bool) -> &mut Self {
+        self.put(key, v.to_string())
+    }
+
+    pub fn encode(&self) -> String {
+        let fields: Vec<String> = self.0.iter().map(|(k, v)| format!("\"{k}\": {v}")).collect();
+        format!("{{{}}}", fields.join(", "))
+    }
+}
+
+/// Encode pre-serialized items as a JSON array.
+pub fn json_array(items: &[String]) -> String {
+    format!("[{}]", items.join(", "))
+}
+
+/// Escape a string for inclusion between JSON double quotes.
+pub fn escape(v: &str) -> String {
+    v.chars()
+        .flat_map(|c| match c {
+            '"' => vec!['\\', '"'],
+            '\\' => vec!['\\', '\\'],
+            c if (c as u32) < 0x20 => format!("\\u{:04x}", c as u32).chars().collect(),
+            c => vec![c],
+        })
+        .collect()
+}
+
+/// Parsed JSON value. Numbers are kept as f64 — everything the repo's
+/// records carry fits (timestamps are µs, counters stay far below 2^53).
+#[derive(Debug, Clone, PartialEq)]
+pub enum JsonValue {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Array(Vec<JsonValue>),
+    Object(Vec<(String, JsonValue)>),
+}
+
+impl JsonValue {
+    /// Object field lookup (None for non-objects or missing keys).
+    pub fn get(&self, key: &str) -> Option<&JsonValue> {
+        match self {
+            JsonValue::Object(fields) => {
+                fields.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            JsonValue::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            JsonValue::Str(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[JsonValue]> {
+        match self {
+            JsonValue::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_object(&self) -> Option<&[(String, JsonValue)]> {
+        match self {
+            JsonValue::Object(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Parse a JSON document. Strict enough for round-tripping our own records;
+/// not a general-purpose validator (duplicate keys are kept, first wins on
+/// [`JsonValue::get`]).
+pub fn parse(text: &str) -> Result<JsonValue> {
+    let bytes = text.as_bytes();
+    let mut pos = 0usize;
+    let v = parse_value(bytes, &mut pos)?;
+    skip_ws(bytes, &mut pos);
+    if pos != bytes.len() {
+        bail!("trailing garbage at byte {pos}");
+    }
+    Ok(v)
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn expect(b: &[u8], pos: &mut usize, c: u8) -> Result<()> {
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == c {
+        *pos += 1;
+        Ok(())
+    } else {
+        bail!("expected '{}' at byte {}", c as char, *pos)
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<JsonValue> {
+    skip_ws(b, pos);
+    match b.get(*pos) {
+        None => bail!("unexpected end of input"),
+        Some(b'{') => parse_object(b, pos),
+        Some(b'[') => parse_array(b, pos),
+        Some(b'"') => Ok(JsonValue::Str(parse_string(b, pos)?)),
+        Some(b't') => parse_lit(b, pos, "true", JsonValue::Bool(true)),
+        Some(b'f') => parse_lit(b, pos, "false", JsonValue::Bool(false)),
+        Some(b'n') => parse_lit(b, pos, "null", JsonValue::Null),
+        Some(_) => parse_number(b, pos),
+    }
+}
+
+fn parse_lit(b: &[u8], pos: &mut usize, lit: &str, v: JsonValue) -> Result<JsonValue> {
+    if b[*pos..].starts_with(lit.as_bytes()) {
+        *pos += lit.len();
+        Ok(v)
+    } else {
+        bail!("bad literal at byte {}", *pos)
+    }
+}
+
+fn parse_number(b: &[u8], pos: &mut usize) -> Result<JsonValue> {
+    let start = *pos;
+    while *pos < b.len()
+        && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+    {
+        *pos += 1;
+    }
+    let s = std::str::from_utf8(&b[start..*pos])?;
+    match s.parse::<f64>() {
+        Ok(v) => Ok(JsonValue::Num(v)),
+        Err(_) => bail!("bad number {s:?} at byte {start}"),
+    }
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String> {
+    expect(b, pos, b'"')?;
+    let mut out = String::new();
+    while *pos < b.len() {
+        match b[*pos] {
+            b'"' => {
+                *pos += 1;
+                return Ok(out);
+            }
+            b'\\' => {
+                *pos += 1;
+                match b.get(*pos) {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b'b') => out.push('\u{8}'),
+                    Some(b'f') => out.push('\u{c}'),
+                    Some(b'u') => {
+                        let hex = b
+                            .get(*pos + 1..*pos + 5)
+                            .ok_or_else(|| anyhow::anyhow!("truncated \\u escape"))?;
+                        let code = u32::from_str_radix(std::str::from_utf8(hex)?, 16)?;
+                        out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        *pos += 4;
+                    }
+                    _ => bail!("bad escape at byte {}", *pos),
+                }
+                *pos += 1;
+            }
+            c => {
+                // multi-byte UTF-8 sequences pass through verbatim
+                let ch_len = utf8_len(c);
+                let chunk = b
+                    .get(*pos..*pos + ch_len)
+                    .ok_or_else(|| anyhow::anyhow!("truncated UTF-8 in string"))?;
+                out.push_str(std::str::from_utf8(chunk)?);
+                *pos += ch_len;
+            }
+        }
+    }
+    bail!("unterminated string")
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0x00..=0x7f => 1,
+        0xc0..=0xdf => 2,
+        0xe0..=0xef => 3,
+        _ => 4,
+    }
+}
+
+fn parse_array(b: &[u8], pos: &mut usize) -> Result<JsonValue> {
+    expect(b, pos, b'[')?;
+    let mut items = Vec::new();
+    skip_ws(b, pos);
+    if b.get(*pos) == Some(&b']') {
+        *pos += 1;
+        return Ok(JsonValue::Array(items));
+    }
+    loop {
+        items.push(parse_value(b, pos)?);
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            Some(b',') => *pos += 1,
+            Some(b']') => {
+                *pos += 1;
+                return Ok(JsonValue::Array(items));
+            }
+            _ => bail!("expected ',' or ']' at byte {}", *pos),
+        }
+    }
+}
+
+fn parse_object(b: &[u8], pos: &mut usize) -> Result<JsonValue> {
+    expect(b, pos, b'{')?;
+    let mut fields = Vec::new();
+    skip_ws(b, pos);
+    if b.get(*pos) == Some(&b'}') {
+        *pos += 1;
+        return Ok(JsonValue::Object(fields));
+    }
+    loop {
+        skip_ws(b, pos);
+        let key = parse_string(b, pos)?;
+        expect(b, pos, b':')?;
+        let value = parse_value(b, pos)?;
+        fields.push((key, value));
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            Some(b',') => *pos += 1,
+            Some(b'}') => {
+                *pos += 1;
+                return Ok(JsonValue::Object(fields));
+            }
+            _ => bail!("expected ',' or '}}' at byte {}", *pos),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_round_trips_through_parser() {
+        let mut j = Json::default();
+        j.str("name", "wave \"7\"\n");
+        j.num("count", 42u64);
+        j.float("share", 0.1234);
+        j.bool("enabled", true);
+        j.put("items", json_array(&["1".into(), "2".into()]));
+        let v = parse(&j.encode()).expect("parse");
+        assert_eq!(v.get("name").and_then(JsonValue::as_str), Some("wave \"7\"\n"));
+        assert_eq!(v.get("count").and_then(JsonValue::as_f64), Some(42.0));
+        assert_eq!(v.get("share").and_then(JsonValue::as_f64), Some(0.1234));
+        assert_eq!(v.get("enabled"), Some(&JsonValue::Bool(true)));
+        assert_eq!(v.get("items").and_then(JsonValue::as_array).map(<[_]>::len), Some(2));
+    }
+
+    #[test]
+    fn float_clamps_non_finite_to_null() {
+        let mut j = Json::default();
+        j.float("bad", f64::NAN);
+        let v = parse(&j.encode()).expect("parse");
+        assert_eq!(v.get("bad"), Some(&JsonValue::Null));
+    }
+
+    #[test]
+    fn parser_handles_nesting_and_ws() {
+        let v = parse(" { \"a\" : [ 1 , { \"b\" : null } , -2.5e1 ] } ").expect("parse");
+        let arr = v.get("a").and_then(JsonValue::as_array).expect("array");
+        assert_eq!(arr[0].as_f64(), Some(1.0));
+        assert_eq!(arr[1].get("b"), Some(&JsonValue::Null));
+        assert_eq!(arr[2].as_f64(), Some(-25.0));
+    }
+
+    #[test]
+    fn parser_rejects_garbage() {
+        assert!(parse("{\"a\": }").is_err());
+        assert!(parse("[1, 2").is_err());
+        assert!(parse("{} trailing").is_err());
+        assert!(parse("\"unterminated").is_err());
+    }
+
+    #[test]
+    fn parser_keeps_utf8() {
+        let v = parse("{\"s\": \"π ≈ 3\"}").expect("parse");
+        assert_eq!(v.get("s").and_then(JsonValue::as_str), Some("π ≈ 3"));
+    }
+}

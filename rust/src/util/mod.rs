@@ -6,6 +6,7 @@
 
 pub mod benchkit;
 pub mod fmt;
+pub mod json;
 pub mod prng;
 pub mod quickprop;
 

@@ -1,0 +1,374 @@
+//! Observability integration tier: the request-lifecycle trace must tell
+//! the truth. Deterministic and artifact-free (synthetic SimDevice
+//! weights); green from a clean checkout.
+//!
+//! The rails:
+//!
+//! * every request's event chain is complete (admit / queued / active /
+//!   complete exactly once) and causally ordered, and the queued+active
+//!   spans tile the reported E2E latency within rounding;
+//! * every committed token is attributed to exactly one device wave span —
+//!   including tokens accepted out of speculative verify chains, and
+//!   rollbacks reconcile with the speculation counters;
+//! * the chain stays complete and causal across a mid-decode fleet
+//!   migration (export on the source before resume on the target, one
+//!   migrate event, tokens conserved across cartridges) and across a
+//!   worker panic + checkpoint resume;
+//! * tracing off (the default) records nothing at all.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use ita::config::ModelConfig;
+use ita::coordinator::engine::Engine;
+use ita::coordinator::fleet::Fleet;
+use ita::coordinator::request::{FinishReason, GenRequest};
+use ita::coordinator::scheduler::{Scheduler, SchedulerOpts};
+use ita::coordinator::spec::{CartridgeEngines, SpecOpts};
+use ita::coordinator::trace::{TraceEvent, TraceKind, WAVE_NONE};
+use ita::device::sim::SimDevice;
+use ita::device::{DeviceDims, DeviceStats, ItaDevice};
+use ita::host::embedding::EmbeddingTable;
+use ita::model::{Mat, ModelWeights};
+
+const WEIGHT_SEED: u64 = 0x17A;
+
+fn traced_opts() -> SchedulerOpts {
+    SchedulerOpts { trace_capacity: 1 << 16, ..SchedulerOpts::default() }
+}
+
+fn long_request(id: u64, prompt: &str, max_new_tokens: usize) -> GenRequest {
+    let mut r = GenRequest::greedy(id, prompt, max_new_tokens);
+    r.stop_at_eos = false;
+    r
+}
+
+/// Events of `kind` for wire ticket `req`, in recorded order.
+fn of_kind(events: &[TraceEvent], req: u64, kind: TraceKind) -> Vec<TraceEvent> {
+    events.iter().filter(|e| e.req == req && e.kind == kind).copied().collect()
+}
+
+/// The chain-completeness rail for one request: admit/queued/active/complete
+/// exactly once, causally ordered, spans tiling the reported E2E latency.
+/// Returns the complete event.
+fn assert_chain(events: &[TraceEvent], req: u64) -> TraceEvent {
+    let admit = of_kind(events, req, TraceKind::Admit);
+    let queued = of_kind(events, req, TraceKind::Queued);
+    let active = of_kind(events, req, TraceKind::Active);
+    let complete = of_kind(events, req, TraceKind::Complete);
+    assert_eq!(admit.len(), 1, "req {req}: {} admit events", admit.len());
+    assert_eq!(queued.len(), 1, "req {req}: {} queued spans", queued.len());
+    assert_eq!(active.len(), 1, "req {req}: {} active spans", active.len());
+    assert_eq!(complete.len(), 1, "req {req}: {} complete events", complete.len());
+    let (q, a, c) = (queued[0], active[0], complete[0]);
+    assert!(q.ts_us <= admit[0].ts_us, "req {req}: queued after admit");
+    assert!(admit[0].ts_us <= a.ts_us, "req {req}: active before admit");
+    assert!(a.ts_us + a.dur_us <= c.ts_us + 3, "req {req}: active outlives complete");
+    // queued + active tile the E2E latency the complete event reports
+    let sum = q.dur_us + a.dur_us;
+    let gap = sum.abs_diff(c.b);
+    assert!(
+        gap <= 3,
+        "req {req}: queued {} + active {} = {sum} µs vs reported {} µs (gap {gap})",
+        q.dur_us,
+        a.dur_us,
+        c.b
+    );
+    assert_eq!(c.a, a.a, "req {req}: token counts disagree between active and complete");
+    c
+}
+
+/// Every `tokens` commit for `req` points at exactly one recorded wave span
+/// on its own cartridge (wave sequence numbers are per-scheduler); returns
+/// the total committed token count.
+fn assert_tokens_have_waves(events: &[TraceEvent], req: u64) -> u64 {
+    let waves: std::collections::HashSet<(u32, u64)> = events
+        .iter()
+        .filter(|e| e.kind == TraceKind::Wave)
+        .map(|e| {
+            assert_ne!(e.wave, WAVE_NONE, "wave span without a sequence number");
+            (e.cartridge, e.wave)
+        })
+        .collect();
+    let mut total = 0;
+    for t in of_kind(events, req, TraceKind::Tokens) {
+        assert_ne!(t.wave, WAVE_NONE, "req {req}: tokens commit without a wave");
+        assert!(
+            waves.contains(&(t.cartridge, t.wave)),
+            "req {req}: tokens commit cites wave {} on cartridge {} but no such span exists",
+            t.wave,
+            t.cartridge
+        );
+        assert!(t.a > 0, "req {req}: empty tokens commit");
+        total += t.a;
+    }
+    total
+}
+
+// ---------------------------------------------------------------------------
+// single scheduler: chains, token↔wave attribution, speculation accounting
+// ---------------------------------------------------------------------------
+
+#[test]
+fn chains_complete_with_speculative_rollbacks() {
+    // a mismatched draft (different weights) keeps acceptance well below
+    // 100%, so verify waves roll back rejected rows — the hardest case for
+    // token↔wave attribution
+    let draft_cfg = ModelConfig {
+        name: "draft-tiny",
+        d_model: 32,
+        n_layers: 1,
+        d_ffn: 96,
+        n_heads: 2,
+        vocab: 258,
+        w_bits: 4,
+        a_bits: 8,
+    };
+    let opts = SchedulerOpts {
+        spec: SpecOpts { depth: 4, adaptive: true },
+        ..traced_opts()
+    };
+    let engines = CartridgeEngines::with_draft(
+        Engine::synthetic(&ModelConfig::TINY, WEIGHT_SEED),
+        Engine::synthetic(&draft_cfg, 0xD),
+    );
+    let mut sched = Scheduler::with_engines(engines, opts);
+    let reqs: Vec<GenRequest> =
+        (0..4).map(|i| long_request(i, &format!("traced stream {i}"), 24)).collect();
+    for r in &reqs {
+        sched.submit(r.clone());
+    }
+    let mut results = sched.run_to_completion().unwrap();
+    results.sort_by_key(|r| r.id);
+    let m = sched.metrics();
+    let events = sched.take_trace_events();
+    assert!(!events.is_empty());
+    assert_eq!(sched.take_trace_dropped(), 0, "ring overflowed in a tiny run");
+
+    for r in &results {
+        let c = assert_chain(&events, r.id);
+        assert_eq!(c.a as usize, r.tokens.len(), "req {}: token count", r.id);
+        // every committed token came out of exactly one wave span
+        let committed = assert_tokens_have_waves(&events, r.id);
+        assert_eq!(committed as usize, r.tokens.len(), "req {}: tokens↔waves", r.id);
+    }
+
+    // speculation events reconcile with the counters: proposals either
+    // landed (accept) or rolled back, nothing invented or lost
+    let proposed: u64 = events
+        .iter()
+        .filter(|e| e.kind == TraceKind::SpecPropose)
+        .map(|e| e.a)
+        .sum();
+    let accepted: u64 = events
+        .iter()
+        .filter(|e| e.kind == TraceKind::SpecAccept)
+        .map(|e| e.a)
+        .sum();
+    let rolled_back: u64 = events
+        .iter()
+        .filter(|e| e.kind == TraceKind::SpecRollback)
+        .map(|e| e.a)
+        .sum();
+    assert_eq!(proposed, m.spec_proposed, "propose events vs counter");
+    assert_eq!(accepted, m.spec_accepted, "accept events vs counter");
+    assert_eq!(rolled_back, m.spec_rollbacks, "rollback events vs counter");
+    assert_eq!(proposed, accepted + rolled_back, "speculation conservation");
+    assert!(m.spec_proposed > 0, "draft never proposed");
+    assert!(m.spec_rollbacks > 0, "mismatched draft never rolled back");
+}
+
+// ---------------------------------------------------------------------------
+// fleet: mid-decode migration keeps the chain complete and causal
+// ---------------------------------------------------------------------------
+
+#[test]
+fn migration_chain_is_causal_across_cartridges() {
+    let fleet = Fleet::start(
+        2,
+        |_id| Ok(Engine::synthetic(&ModelConfig::TINY, WEIGHT_SEED)),
+        traced_opts(),
+    )
+    .unwrap();
+    let h = fleet.submit(long_request(0, "the memory wall", 96));
+    loop {
+        let m = fleet.metrics().unwrap();
+        if m.cartridges[0].serving.tokens_generated >= 6 {
+            break;
+        }
+        std::thread::yield_now();
+    }
+    assert!(fleet.migrate(0, 0, 1).unwrap(), "mid-decode migration refused");
+    let r = h.wait().unwrap();
+    assert_eq!(r.finish, FinishReason::MaxTokens);
+    let (m, trace) = fleet.shutdown_traced().unwrap();
+    assert_eq!(m.migrations, 1, "{}", m.report());
+    let events = &trace.events;
+
+    // one migrate marker, stamped on the source cartridge
+    let migrates: Vec<&TraceEvent> =
+        events.iter().filter(|e| e.kind == TraceKind::Migrate).collect();
+    assert_eq!(migrates.len(), 1);
+    assert_eq!((migrates[0].a, migrates[0].b), (0, 1));
+    assert_eq!(migrates[0].req, 0, "migrate carries the wire ticket");
+
+    // export leaves the source before resume lands on the target — the
+    // shared trace epoch makes the cross-cartridge comparison meaningful
+    let exports = of_kind(events, 0, TraceKind::Export);
+    let resumes = of_kind(events, 0, TraceKind::Resume);
+    assert_eq!(exports.len(), 1, "exactly one export");
+    assert_eq!(resumes.len(), 1, "exactly one resume");
+    assert_eq!(exports[0].cartridge, 0);
+    assert_eq!(resumes[0].cartridge, 1);
+    assert!(exports[0].a > 0, "mid-decode export carried no KV rows");
+    assert!(
+        exports[0].ts_us <= resumes[0].ts_us,
+        "resume ({} µs) precedes export ({} µs)",
+        resumes[0].ts_us,
+        exports[0].ts_us
+    );
+
+    // the chain ends on the target, and tokens are conserved across the
+    // move: commits on the source plus commits on the target cover every
+    // generated token exactly once
+    let completes = of_kind(events, 0, TraceKind::Complete);
+    assert_eq!(completes.len(), 1);
+    assert_eq!(completes[0].cartridge, 1, "completion on the target cartridge");
+    assert_eq!(completes[0].a as usize, r.tokens.len());
+    let committed = assert_tokens_have_waves(events, 0);
+    assert_eq!(committed as usize, r.tokens.len(), "tokens lost or duplicated in the move");
+    let source_commits: u64 = of_kind(events, 0, TraceKind::Tokens)
+        .iter()
+        .filter(|e| e.cartridge == 0)
+        .map(|e| e.a)
+        .sum();
+    assert!(source_commits >= 6, "source never decoded before the migration");
+}
+
+// ---------------------------------------------------------------------------
+// fleet: worker panic + checkpoint resume keeps the surviving chain sound
+// ---------------------------------------------------------------------------
+
+/// A cartridge that panics on QKV call number `fault_at` — late enough that
+/// periodic checkpoints (every 16 worker steps) have flushed the admit event
+/// and a decode checkpoint off the doomed worker first.
+struct FaultyDevice {
+    inner: SimDevice,
+    calls: Arc<AtomicUsize>,
+    fault_at: usize,
+}
+
+impl ItaDevice for FaultyDevice {
+    fn dims(&self) -> DeviceDims {
+        self.inner.dims()
+    }
+
+    fn buckets(&self) -> &[usize] {
+        self.inner.buckets()
+    }
+
+    fn qkv(&mut self, layer: usize, h: &Mat) -> anyhow::Result<(Mat, Mat, Mat)> {
+        if self.calls.fetch_add(1, Ordering::SeqCst) == self.fault_at {
+            panic!("injected cartridge fault");
+        }
+        self.inner.qkv(layer, h)
+    }
+
+    fn ffn(&mut self, layer: usize, h: &Mat, attn: &Mat) -> anyhow::Result<Mat> {
+        self.inner.ffn(layer, h, attn)
+    }
+
+    fn logits(&mut self, h: &Mat) -> anyhow::Result<Mat> {
+        self.inner.logits(h)
+    }
+
+    fn stats(&self) -> DeviceStats {
+        self.inner.stats()
+    }
+}
+
+#[test]
+fn panic_resume_chain_survives_on_healthy_cartridge() {
+    let calls = Arc::new(AtomicUsize::new(0));
+    let calls2 = Arc::clone(&calls);
+    let fleet = Fleet::start(
+        2,
+        move |id| {
+            let dev = SimDevice::synthetic(&ModelConfig::TINY, vec![1, 2, 4, 8], WEIGHT_SEED);
+            let emb = EmbeddingTable::new(
+                ModelWeights::synthetic(&ModelConfig::TINY, WEIGHT_SEED).emb,
+            );
+            if id == 0 {
+                // TINY runs 2 QKV calls per wave, so call 150 lands around
+                // decode step 74 — long after the step-16/32/48/64 periodic
+                // checkpoints drained the trace ring and a decode checkpoint
+                let faulty =
+                    FaultyDevice { inner: dev, calls: Arc::clone(&calls2), fault_at: 150 };
+                Ok(Engine::new(Box::new(faulty), emb, ModelConfig::TINY.n_heads))
+            } else {
+                Ok(Engine::new(Box::new(dev), emb, ModelConfig::TINY.n_heads))
+            }
+        },
+        traced_opts(),
+    )
+    .unwrap();
+
+    let h = fleet.submit(long_request(0, "the memory wall", 96));
+    let r = h.wait().expect("requeued request still completes");
+    assert_eq!(r.finish, FinishReason::MaxTokens);
+    assert_eq!(r.tokens.len(), 96);
+    assert!(calls.load(Ordering::SeqCst) > 150, "fault was never triggered");
+    let (m, trace) = fleet.shutdown_traced().unwrap();
+    assert_eq!(m.checkpoint_resumes, 1, "{}", m.report());
+    assert_eq!(m.requeued_requests, 1);
+    let events = &trace.events;
+
+    // the admit on the doomed cartridge survived via a periodic checkpoint,
+    // and the resume landed later on the healthy one
+    let admits = of_kind(events, 0, TraceKind::Admit);
+    assert_eq!(admits.len(), 1, "admit lost with the dead worker");
+    assert_eq!(admits[0].cartridge, 0);
+    let resumes = of_kind(events, 0, TraceKind::Resume);
+    assert_eq!(resumes.len(), 1);
+    assert_eq!(resumes[0].cartridge, 1, "resume on the survivor");
+    assert!(resumes[0].a > 0, "resume restored no KV rows");
+    assert!(admits[0].ts_us <= resumes[0].ts_us, "resume precedes admit");
+    let completes = of_kind(events, 0, TraceKind::Complete);
+    assert_eq!(completes.len(), 1);
+    assert_eq!(completes[0].cartridge, 1);
+    // events recorded after the dead worker's last checkpoint died with it;
+    // the survivor's commits still map onto real wave spans
+    let survivor: Vec<TraceEvent> =
+        events.iter().filter(|e| e.cartridge == 1).copied().collect();
+    let committed = assert_tokens_have_waves(&survivor, 0);
+    assert!(committed > 0, "survivor committed no traced tokens");
+}
+
+// ---------------------------------------------------------------------------
+// off by default: no events, no cost
+// ---------------------------------------------------------------------------
+
+#[test]
+fn disabled_tracing_records_nothing() {
+    let mut sched = Scheduler::new(
+        Engine::synthetic(&ModelConfig::TINY, WEIGHT_SEED),
+        SchedulerOpts::default(),
+    );
+    sched.submit(long_request(0, "quiet", 8));
+    sched.run_to_completion().unwrap();
+    assert!(!sched.trace_enabled());
+    assert!(sched.take_trace_events().is_empty());
+    assert_eq!(sched.take_trace_dropped(), 0);
+
+    let fleet = Fleet::start(
+        2,
+        |_id| Ok(Engine::synthetic(&ModelConfig::TINY, WEIGHT_SEED)),
+        SchedulerOpts::default(),
+    )
+    .unwrap();
+    let h = fleet.submit(long_request(1, "quiet fleet", 8));
+    h.wait().unwrap();
+    let (_, trace) = fleet.shutdown_traced().unwrap();
+    assert!(trace.events.is_empty(), "untraced fleet produced events");
+    assert_eq!(trace.dropped, 0);
+}

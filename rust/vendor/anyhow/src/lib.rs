@@ -103,6 +103,18 @@ impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
     }
 }
 
+// Like the real anyhow: `None` becomes an error carrying the context
+// message (there is no inner error to wrap).
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
 /// Construct an [`Error`] from a format string.
 #[macro_export]
 macro_rules! anyhow {
@@ -176,6 +188,15 @@ mod tests {
             Ok(())
         }
         assert!(format!("{}", f(1).unwrap_err()).contains("v == 0"));
+    }
+
+    #[test]
+    fn context_on_option() {
+        let some: Option<u32> = Some(7);
+        assert_eq!(some.context("missing").unwrap(), 7);
+        let none: Option<u32> = None;
+        let e = none.with_context(|| "field absent").unwrap_err();
+        assert_eq!(format!("{e}"), "field absent");
     }
 
     #[test]
