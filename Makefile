@@ -7,7 +7,7 @@ ARTIFACTS ?= artifacts
 CONFIGS   ?= tiny,demo-100m
 PY        ?= python3
 
-.PHONY: all build test bench-build bench-smoke smoke trace-check docs artifacts clean-artifacts
+.PHONY: all build test bench-build bench-smoke smoke trace-check docs docs-check artifacts clean-artifacts
 
 all: build
 
@@ -47,6 +47,13 @@ trace-check:
 # and malformed examples fail). CI runs this; keep it green.
 docs:
 	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+# Fail on dead relative links in the markdown docs (README.md,
+# rust/src/coordinator/README.md, docs/*.md). CI runs this next to the
+# rustdoc deny-warnings pass, so doc restructures can't orphan a
+# cross-reference.
+docs-check:
+	cargo run --release --example check_links
 
 # AOT path: JAX device blocks -> HLO text + weight blobs under
 # $(ARTIFACTS)/<config>/ (MANIFEST.txt, weights.bin, programs/*.hlo.txt).

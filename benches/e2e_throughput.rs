@@ -20,6 +20,12 @@
 //! * **tracing overhead** (always runs): one decode workload with the
 //!   request-lifecycle trace recorder off vs on — the off path must stay
 //!   free (≤1% tok/s delta is the acceptance target).
+//! * **overload sweep** (always runs): bursty arrival storms at 10× and
+//!   100× the serially-measured service rate through the streaming front
+//!   door, baseline (admit everything) vs admission-controlled (ITL target
+//!   + queue-wait budget + adaptive prefill) — reporting the p99 inter-token
+//!   latency of *admitted* requests, the shed rate, and goodput. The
+//!   contract under test is `docs/serving-front-door.md`.
 //! * **artifact tier**: the PJRT tiny/demo-100m cartridges when artifacts
 //!   and real bindings exist (skips quietly otherwise).
 //!
@@ -31,16 +37,18 @@
 //! queryable across PRs).
 
 use std::path::PathBuf;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use ita::config::ModelConfig;
 use ita::coordinator::engine::Engine;
 use ita::coordinator::fleet::{Fleet, LeastLoaded, PrefixAffinity, Rebalance};
+use ita::coordinator::frontdoor::{FrontDoor, FrontDoorOpts, SubmitError};
 use ita::coordinator::metrics::ServingMetrics;
 use ita::coordinator::pipeline::PipelineEngine;
 use ita::coordinator::request::GenRequest;
 use ita::coordinator::scheduler::{Scheduler, SchedulerOpts};
 use ita::coordinator::spec::{CartridgeEngines, SpecOpts};
+use ita::coordinator::workload::{self, Arrivals, WorkloadSpec};
 use ita::device::pjrt::PjrtDevice;
 use ita::device::sim::SimDevice;
 use ita::host::embedding::EmbeddingTable;
@@ -476,6 +484,136 @@ fn bench_spec_decode(depth: usize, n_requests: usize, max_tokens: usize) -> Stri
     j.encode()
 }
 
+/// p99 by sort (mutates its input); 0 on empty.
+fn p99(xs: &mut [f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.sort_by(|a, b| a.total_cmp(b));
+    xs[((xs.len() - 1) as f64 * 0.99).round() as usize]
+}
+
+/// Serial calibration for the overload sweep: one request in flight at a
+/// time through a default front door. Returns (service rate in req/s, p99
+/// per-request inter-token latency) — the reference the overload multiples
+/// and the ITL SLO target are defined against.
+fn calibrate_uncontended() -> (f64, f64) {
+    let front = FrontDoor::start(
+        2,
+        |_id| Ok(Engine::synthetic(&ModelConfig::TINY, 0x17A)),
+        SchedulerOpts::default(),
+        FrontDoorOpts::default(),
+    )
+    .expect("calibration front door");
+    let timed = workload::generate(&WorkloadSpec {
+        arrivals: Arrivals::Closed,
+        ..WorkloadSpec::e2e_default(16)
+    });
+    let n = timed.len();
+    let mut itls = Vec::new();
+    let t0 = Instant::now();
+    for tr in timed {
+        let r = front.submit(tr.request).expect("uncontended submit").wait().expect("completes");
+        if r.tokens.len() > 1 {
+            itls.push(r.itl_s);
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    front.shutdown().expect("calibration shutdown");
+    (n as f64 / wall.max(1e-9), p99(&mut itls))
+}
+
+/// Overload sweep: a bursty arrival storm at `overload`× the calibrated
+/// service rate through the streaming front door. `admission = false` is
+/// the baseline (admit everything, no SLO); `admission = true` configures
+/// the ITL target (capping concurrent decodes per cartridge), a queue-wait
+/// budget (shedding with a typed `Overloaded` error), and the adaptive
+/// prefill controller. Reports the p99 inter-token latency of admitted
+/// requests, the shed rate against offered load, and goodput. Returns the
+/// JSON record.
+fn bench_overload(
+    overload: f64,
+    service_rate: f64,
+    target_itl_s: f64,
+    admission: bool,
+) -> String {
+    let door = if admission {
+        FrontDoorOpts {
+            target_itl_s: Some(target_itl_s),
+            queue_budget_s: Some(0.25),
+            adaptive_prefill: true,
+        }
+    } else {
+        FrontDoorOpts::default()
+    };
+    let front = FrontDoor::start(
+        2,
+        |_id| Ok(Engine::synthetic(&ModelConfig::TINY, 0x17A)),
+        SchedulerOpts::default(),
+        door,
+    )
+    .expect("front door start");
+    let spec = WorkloadSpec {
+        arrivals: Arrivals::Bursty {
+            base: service_rate * overload * 0.1,
+            peak: service_rate * overload,
+            period_s: 0.5,
+            duty: 0.5,
+        },
+        heavy_tail_alpha: Some(1.5),
+        ..WorkloadSpec::e2e_default(96)
+    };
+    let offered = spec.n_requests;
+    let t0 = Instant::now();
+    let mut streams = Vec::new();
+    let mut shed = 0usize;
+    for tr in workload::generate(&spec) {
+        let wait = tr.at_s - t0.elapsed().as_secs_f64();
+        if wait > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(wait));
+        }
+        match front.submit(tr.request) {
+            Ok(s) => streams.push(s),
+            Err(SubmitError::Overloaded { .. }) => shed += 1,
+            Err(SubmitError::Closed) => panic!("fleet closed mid-bench"),
+        }
+    }
+    let results: Vec<_> =
+        streams.into_iter().map(|s| s.wait().expect("admitted request completes")).collect();
+    let wall = t0.elapsed().as_secs_f64();
+    let m = front.shutdown().expect("fleet shutdown");
+    let mut itls: Vec<f64> =
+        results.iter().filter(|r| r.tokens.len() > 1).map(|r| r.itl_s).collect();
+    let p99_itl = p99(&mut itls);
+    let shed_rate = shed as f64 / offered as f64;
+    let goodput = results.len() as f64 / wall.max(1e-9);
+    let label = if admission { "admission" } else { "baseline " };
+    println!(
+        "bench e2e/overload x{overload:<5.0} {label} {offered:>3} offered, {:>3} admitted, \
+         {shed:>3} shed ({:>4.0}%)  p99 itl {:>7.2} ms (target {:.2} ms)  \
+         goodput {goodput:>6.1} req/s",
+        results.len(),
+        shed_rate * 100.0,
+        p99_itl * 1e3,
+        target_itl_s * 1e3,
+    );
+    let mut j = Json::default();
+    j.float("overload_x", overload);
+    j.str("mode", if admission { "admission" } else { "baseline" });
+    j.num("offered", offered);
+    j.num("admitted", results.len());
+    j.num("shed", shed);
+    j.float("shed_rate", shed_rate);
+    j.float("p99_itl_ms", p99_itl * 1e3);
+    j.float("target_itl_ms", target_itl_s * 1e3);
+    j.float("goodput_req_per_s", goodput);
+    j.float("wall_s", wall);
+    j.num("fleet_shed_requests", m.shed_requests);
+    j.num("fleet_cancelled_requests", m.cancelled_requests);
+    put_observability(&mut j, &m.aggregate());
+    j.encode()
+}
+
 fn bench_config(name: &str, n_requests: usize, max_tokens: usize) -> Option<()> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts").join(name);
     if !dir.join("MANIFEST.txt").exists() {
@@ -554,6 +692,22 @@ fn main() {
     // request-lifecycle tracing must be free when off: same workload with
     // the recorder disabled vs live, tok/s delta in the record
     let tracing_overhead = bench_tracing_overhead(8, 64);
+    // overload storms through the streaming front door: baseline (admit
+    // everything) vs admission-controlled, at 10× and 100× the serially
+    // calibrated service rate
+    let (service_rate, itl_uncontended) = calibrate_uncontended();
+    let target_itl_s = (itl_uncontended * 3.0).max(1e-4);
+    println!(
+        "bench e2e/overload calibrated: {service_rate:.1} req/s serial, \
+         p99 itl {:.2} ms -> SLO target {:.2} ms",
+        itl_uncontended * 1e3,
+        target_itl_s * 1e3
+    );
+    let mut overload_sweep = Vec::new();
+    for x in [10.0f64, 100.0] {
+        overload_sweep.push(bench_overload(x, service_rate, target_itl_s, false));
+        overload_sweep.push(bench_overload(x, service_rate, target_itl_s, true));
+    }
     bench_config("tiny", 16, 32);
     // saturate the largest compiled bucket: at the DRAM-streaming roofline
     // every extra row in a weight sweep is almost free (§Perf iteration 5)
@@ -567,7 +721,10 @@ fn main() {
     // v4: added the pipeline sweep (stage count, occupancy, link share)
     // v5: every sweep carries joules_per_token + queue_wait p50/p99; added
     //     the tracing_overhead record (traced vs untraced tok/s delta)
-    root.num("schema_version", 5);
+    // v6: added the overload sweep (bursty storms at 10×/100× the measured
+    //     service rate through the streaming front door; p99 admitted ITL,
+    //     shed rate, and goodput, baseline vs admission-controlled)
+    root.num("schema_version", 6);
     root.put("fleet_sweep", json_array(&fleet_sweep));
     root.put("shared_prefix", shared_prefix);
     root.put("migration", migration);
@@ -575,6 +732,7 @@ fn main() {
     root.put("spec_decode", json_array(&spec_sweep));
     root.put("pipeline", json_array(&pipeline_sweep));
     root.put("tracing_overhead", tracing_overhead);
+    root.put("overload", json_array(&overload_sweep));
     let path = std::env::var("ITA_BENCH_JSON").unwrap_or_else(|_| "BENCH_e2e.json".into());
     match std::fs::write(&path, root.encode() + "\n") {
         Ok(()) => println!("bench e2e: wrote perf record to {path}"),

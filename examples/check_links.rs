@@ -1,0 +1,98 @@
+//! Dead-link checker for the repo's markdown docs (`make docs-check`).
+//!
+//!     cargo run --release --example check_links [-- file.md ...]
+//!
+//! With no arguments it scans `README.md`, `rust/src/coordinator/README.md`,
+//! and every `docs/*.md`. For each markdown link `[text](target)` whose
+//! target is *relative* (no scheme, not a pure `#fragment`), the target —
+//! minus any fragment — must exist on disk relative to the file containing
+//! the link. Exits nonzero listing every dead link, so doc restructures
+//! that orphan a cross-reference fail CI rather than shipping.
+
+use std::path::{Path, PathBuf};
+
+/// Extract every `](target)` link target from markdown text.
+fn links(text: &str) -> Vec<String> {
+    let bytes = text.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i + 1 < bytes.len() {
+        if bytes[i] == b']' && bytes[i + 1] == b'(' {
+            if let Some(end) = text[i + 2..].find(')') {
+                out.push(text[i + 2..i + 2 + end].to_string());
+                i += 2 + end;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+fn default_files() -> Vec<PathBuf> {
+    let mut v =
+        vec![PathBuf::from("README.md"), PathBuf::from("rust/src/coordinator/README.md")];
+    if let Ok(rd) = std::fs::read_dir("docs") {
+        for e in rd.flatten() {
+            let p = e.path();
+            if p.extension().is_some_and(|x| x == "md") {
+                v.push(p);
+            }
+        }
+    }
+    v.sort();
+    v
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let files: Vec<PathBuf> = if args.is_empty() {
+        default_files()
+    } else {
+        args.into_iter().map(PathBuf::from).collect()
+    };
+    let mut checked = 0usize;
+    let mut dead = 0usize;
+    for f in &files {
+        let text = match std::fs::read_to_string(f) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("check-links: cannot read {}: {e}", f.display());
+                std::process::exit(2);
+            }
+        };
+        let base = f.parent().unwrap_or_else(|| Path::new("."));
+        for raw in links(&text) {
+            // `](path "title")` → path; skip absolute/external/fragment-only
+            let target = raw.split_whitespace().next().unwrap_or("");
+            if target.is_empty()
+                || target.starts_with('#')
+                || target.starts_with("mailto:")
+                || target.contains("://")
+            {
+                continue;
+            }
+            let path_part = target.split('#').next().unwrap_or("");
+            if path_part.is_empty() {
+                continue;
+            }
+            checked += 1;
+            let resolved = base.join(path_part);
+            if !resolved.exists() {
+                dead += 1;
+                eprintln!(
+                    "check-links: dead link in {}: ({target}) -> {}",
+                    f.display(),
+                    resolved.display()
+                );
+            }
+        }
+    }
+    println!(
+        "check-links: {checked} relative links across {} files, {dead} dead",
+        files.len()
+    );
+    if dead > 0 {
+        std::process::exit(1);
+    }
+}

@@ -1,6 +1,6 @@
 //! Multi-cartridge serving driver: shard a deterministic synthetic workload
-//! across a fleet of simulated ITA cartridges behind the shared admission
-//! queue, then reconcile fleet-level metrics against the per-cartridge
+//! across a fleet of simulated ITA cartridges behind the streaming front
+//! door, then reconcile fleet-level metrics against the per-cartridge
 //! breakdowns (the paper's Eq. 7–11 interface accounting stays per-device).
 //!
 //!     cargo run --release --example serve_fleet -- [--trace out.json]
@@ -8,6 +8,8 @@
 //!     [ITA_FLEET_CARTRIDGES=4] [ITA_FLEET_REQUESTS=32] [ITA_FLEET_TOKENS=16]
 //!     [ITA_FLEET_DISPATCH=affinity|least-loaded|rebalance|energy]
 //!     [ITA_FLEET_TRACE=out.json] [ITA_FLEET_METRICS=metrics.json]
+//!     [ITA_FLEET_TARGET_ITL_MS=10] [ITA_FLEET_QUEUE_BUDGET_MS=250]
+//!     [ITA_FLEET_ADAPTIVE_PREFILL=1]
 //!
 //! Runs artifact-free: each cartridge is an `Engine::synthetic` SimDevice
 //! (identical weights per cartridge, as if N copies of one neural cartridge
@@ -15,6 +17,14 @@
 //! The workload draws prompts from a small corpus, so repeated prefixes hit
 //! each cartridge's radix prefix cache; the default `affinity` dispatch
 //! routes shared prefixes onto the cartridge already holding them.
+//!
+//! Requests go through the streaming [`FrontDoor`]: every submission gets a
+//! token stream that the driver drains incrementally and checks against the
+//! final result (exactly-once delivery). The SLO knobs are **off by
+//! default** — set `ITA_FLEET_QUEUE_BUDGET_MS` / `ITA_FLEET_TARGET_ITL_MS`
+//! to watch admission control shed and the adaptive prefill budget
+//! retarget under overload. The full contract is
+//! `docs/serving-front-door.md`.
 //!
 //! With `--trace` the fleet records every request's lifecycle (admit, queue
 //! wait, prefill chunks, waves, speculation, checkpoint/migrate, complete)
@@ -25,19 +35,23 @@
 
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use ita::config::ModelConfig;
 use ita::coordinator::engine::Engine;
-use ita::coordinator::fleet::{
-    Dispatch, EnergyAware, Fleet, LeastLoaded, PrefixAffinity, Rebalance,
-};
+use ita::coordinator::fleet::{Dispatch, EnergyAware, LeastLoaded, PrefixAffinity, Rebalance};
+use ita::coordinator::frontdoor::{FrontDoor, FrontDoorOpts, SubmitError};
 use ita::coordinator::metrics::MetricsRegistry;
 use ita::coordinator::scheduler::SchedulerOpts;
+use ita::coordinator::stream::StreamItem;
 use ita::coordinator::workload::{self, Arrivals, WorkloadSpec};
 
 fn env_or(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env_ms(key: &str) -> Option<f64> {
+    std::env::var(key).ok().and_then(|v| v.parse::<f64>().ok()).map(|ms| ms / 1e3)
 }
 
 /// `--flag value` from argv, falling back to an environment variable.
@@ -65,12 +79,21 @@ fn main() -> Result<()> {
     };
     let trace_path = arg_or_env("--trace", "ITA_FLEET_TRACE");
     let metrics_path = arg_or_env("--metrics", "ITA_FLEET_METRICS");
+    // SLO knobs — all off by default, so the stock run never sheds or
+    // cancels and the trace rail (examples/trace_check.rs) stays exact
+    let door = FrontDoorOpts {
+        target_itl_s: env_ms("ITA_FLEET_TARGET_ITL_MS"),
+        queue_budget_s: env_ms("ITA_FLEET_QUEUE_BUDGET_MS"),
+        adaptive_prefill: std::env::var("ITA_FLEET_ADAPTIVE_PREFILL").is_ok(),
+    };
 
     println!("== ITA fleet serving driver ==");
     println!(
         "cartridges={cartridges} requests={n_requests} max_new_tokens={max_tokens} \
-         dispatch={dispatch_name} trace={}\n",
-        trace_path.as_deref().unwrap_or("off")
+         dispatch={dispatch_name} trace={} target_itl={} queue_budget={}\n",
+        trace_path.as_deref().unwrap_or("off"),
+        door.target_itl_s.map_or("off".into(), |s| format!("{:.0}ms", s * 1e3)),
+        door.queue_budget_s.map_or("off".into(), |s| format!("{:.0}ms", s * 1e3)),
     );
 
     let mut opts = SchedulerOpts::default();
@@ -81,7 +104,7 @@ fn main() -> Result<()> {
     }
 
     let t_boot = Instant::now();
-    let fleet = Fleet::with_dispatch(
+    let front = FrontDoor::with_dispatch(
         cartridges,
         |id| {
             // one model, one chip: every cartridge carries the same weights
@@ -91,6 +114,7 @@ fn main() -> Result<()> {
         },
         opts,
         dispatch,
+        door,
     )?;
     println!("fleet up in {:.2}s ({cartridges} cartridges)\n", t_boot.elapsed().as_secs_f64());
 
@@ -108,27 +132,61 @@ fn main() -> Result<()> {
     );
 
     let t0 = Instant::now();
-    let mut handles = Vec::new();
+    let mut streams = Vec::new();
+    let mut shed = 0usize;
     for tr in timed {
         let wait = tr.at_s - t0.elapsed().as_secs_f64();
         if wait > 0.0 {
             std::thread::sleep(Duration::from_secs_f64(wait));
         }
-        handles.push(fleet.submit(tr.request));
+        match front.submit(tr.request) {
+            Ok(s) => streams.push(s),
+            Err(SubmitError::Overloaded { projected_wait_s, budget_s }) => {
+                shed += 1;
+                eprintln!(
+                    "[shed] projected queue wait {:.0}ms > budget {:.0}ms",
+                    projected_wait_s * 1e3,
+                    budget_s * 1e3
+                );
+            }
+            Err(SubmitError::Closed) => bail!("fleet closed during submission"),
+        }
     }
+    // drain every stream incrementally and hold the front door to its
+    // contract: the concatenated stream equals the final result, exactly
     let mut total_tokens = 0usize;
-    for h in handles {
-        total_tokens += h.wait()?.tokens.len();
+    let mut token_batches = 0usize;
+    for mut s in streams {
+        let mut streamed = Vec::new();
+        let result = loop {
+            match s.recv() {
+                Some(StreamItem::Tokens(t)) => {
+                    token_batches += 1;
+                    streamed.extend(t);
+                }
+                Some(StreamItem::End(r)) => break *r,
+                None => bail!("a stream was severed before its request completed"),
+            }
+        };
+        assert_eq!(streamed, result.tokens, "stream must concatenate to the final result");
+        total_tokens += result.tokens.len();
     }
     let wall = t0.elapsed().as_secs_f64();
 
-    let (m, trace) = fleet.shutdown_traced()?;
+    let (m, trace) = front.shutdown_traced()?;
     println!("\n== results ==");
     println!("{}", m.report());
     println!(
-        "\nend-to-end: {total_tokens} tokens in {wall:.1}s = {:.1} tok/s aggregate",
+        "\nend-to-end: {total_tokens} tokens in {wall:.1}s = {:.1} tok/s aggregate \
+         ({token_batches} stream batches, {shed} shed at the door)",
         total_tokens as f64 / wall
     );
+    if m.shed_requests > 0 || m.cancelled_requests > 0 {
+        println!(
+            "front door: {} shed (never reached a device), {} cancelled",
+            m.shed_requests, m.cancelled_requests
+        );
+    }
 
     // reconciliation: the fleet aggregate must equal the sum of the
     // per-cartridge ledgers — the Split-Brain accounting stays per device

@@ -41,6 +41,7 @@
 //! special case of this machinery.
 
 use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -48,10 +49,12 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
-use super::metrics::{CartridgeMetrics, FleetMetrics, ServingMetrics};
+use super::frontdoor::{FrontDoorOpts, Priority, QoS, SubmitError};
+use super::metrics::{CartridgeMetrics, FleetMetrics, GapHistogram, ServingMetrics};
 use super::request::{DecodeCheckpoint, FinishReason, GenRequest, GenResult};
 use super::scheduler::SchedulerOpts;
 use super::spec::CartridgeEngines;
+use super::stream::{CancelHandle, StreamItem, TokenStream};
 use super::trace::{FleetTrace, TraceEvent, TraceKind};
 use super::worker::{CartridgeId, Worker, WorkerEvent, WorkerMsg};
 use crate::area::thermal::ThermalModel;
@@ -361,9 +364,9 @@ impl Dispatch for PrefixAffinity {
 }
 
 /// Energy-aware dispatch: route each request to the eligible cartridge
-/// with the lowest modeled joules per generated token, and back off
-/// cartridges whose modeled junction temperature says they are thermally
-/// throttled.
+/// with the lowest modeled **energy–delay product** — joules per generated
+/// token × measured wave latency — and back off cartridges whose modeled
+/// junction temperature says they are thermally throttled.
 ///
 /// The policy learns from the counter snapshots workers piggyback on their
 /// checkpoints ([`Dispatch::checkpoint`]): joules/token is
@@ -371,15 +374,22 @@ impl Dispatch for PrefixAffinity {
 /// `energy_j / wall_s`, both from the same modeled energy account the
 /// scheduler derives from device MAC counts at the ITA operating point
 /// ([`EnergyParams::ita`](crate::energy::EnergyParams::ita), PAPER.md
-/// Table III). A cartridge whose power puts its steady-state junction
-/// temperature ([`ThermalModel::junction_c`]) above the throttle limit
-/// ranks behind every cool cartridge regardless of its per-token price — a
-/// physical ITA deck would be clamping its wave rate there anyway.
+/// Table III). Wave latency comes from the `itl_step` histogram deltas
+/// between consecutive checkpoints (an EWMA of the mean step gap), so a
+/// cartridge that models cheap tokens but *measures* slow waves — a
+/// degraded link, a draft pair burning verify time — no longer wins on
+/// modeled energy alone (the ROADMAP standing gap). A cartridge whose
+/// power puts its steady-state junction temperature
+/// ([`ThermalModel::junction_c`]) above the throttle limit ranks behind
+/// every cool cartridge regardless of its product — a physical ITA deck
+/// would be clamping its wave rate there anyway.
 ///
 /// Cartridges with no telemetry yet rank as cheapest (0 J/token,
 /// unthrottled): cold slots attract traffic and start producing telemetry
-/// instead of starving forever. Within a rank, lower load then lower index
-/// wins, so the policy degrades to [`LeastLoaded`] on a homogeneous,
+/// instead of starving forever. Until a cartridge has *latency* telemetry
+/// its delay factor is a neutral 1, so modeled-energy ordering is
+/// preserved rather than zeroed out. Within a rank, lower load then lower
+/// index wins, so the policy degrades to [`LeastLoaded`] on a homogeneous,
 /// cool fleet.
 pub struct EnergyAware {
     thermal: ThermalModel,
@@ -389,6 +399,12 @@ pub struct EnergyAware {
     /// Per-cartridge `(joules_per_token, avg_power_w)` learned from worker
     /// checkpoints; `None` until the first useful snapshot.
     stats: Vec<Option<(f64, f64)>>,
+    /// Per-cartridge cumulative `itl_step` histogram at the last
+    /// checkpoint, for interval deltas.
+    last_step: Vec<GapHistogram>,
+    /// Per-cartridge EWMA of the measured mean wave latency (seconds);
+    /// `None` until the first checkpoint interval with decode steps.
+    step_s: Vec<Option<f64>>,
 }
 
 impl EnergyAware {
@@ -400,11 +416,25 @@ impl EnergyAware {
     }
 
     pub fn with_thermal(thermal: ThermalModel, tj_limit_c: f64) -> EnergyAware {
-        EnergyAware { thermal, tj_limit_c, stats: Vec::new() }
+        EnergyAware {
+            thermal,
+            tj_limit_c,
+            stats: Vec::new(),
+            last_step: Vec::new(),
+            step_s: Vec::new(),
+        }
     }
 
     fn throttled(&self, power_w: f64) -> bool {
         self.thermal.junction_c(power_w) > self.tj_limit_c
+    }
+
+    fn ensure_slots(&mut self, n: usize) {
+        while self.stats.len() < n {
+            self.stats.push(None);
+            self.last_step.push(GapHistogram::default());
+            self.step_s.push(None);
+        }
     }
 }
 
@@ -416,15 +446,18 @@ impl Default for EnergyAware {
 
 impl Dispatch for EnergyAware {
     fn pick(&mut self, loads: &[Option<usize>], _req: &GenRequest) -> Option<usize> {
-        // lexicographic rank: unthrottled first, then lowest joules/token,
-        // then load, then index. Always returns Some when any slot is Some
-        // (the Dispatch contract) — a throttled cartridge still serves when
-        // it is the only one eligible.
+        // lexicographic rank: unthrottled first, then lowest energy-delay
+        // product (joules/token × measured step latency, neutral delay 1
+        // until latency telemetry exists), then load, then index. Always
+        // returns Some when any slot is Some (the Dispatch contract) — a
+        // throttled cartridge still serves when it is the only one
+        // eligible.
         let mut best: Option<(bool, f64, usize, usize)> = None;
         for (i, load) in loads.iter().enumerate() {
             let Some(load) = *load else { continue };
             let (jpt, power) = self.stats.get(i).copied().flatten().unwrap_or((0.0, 0.0));
-            let key = (self.throttled(power), jpt, load, i);
+            let delay = self.step_s.get(i).copied().flatten().unwrap_or(1.0);
+            let key = (self.throttled(power), jpt * delay, load, i);
             if best.map_or(true, |b| key < b) {
                 best = Some(key);
             }
@@ -436,6 +469,12 @@ impl Dispatch for EnergyAware {
         if let Some(s) = self.stats.get_mut(cartridge) {
             *s = None; // its telemetry died with its engine
         }
+        if let Some(s) = self.step_s.get_mut(cartridge) {
+            *s = None;
+        }
+        if let Some(h) = self.last_step.get_mut(cartridge) {
+            *h = GapHistogram::default();
+        }
     }
 
     fn checkpoint(
@@ -444,8 +483,18 @@ impl Dispatch for EnergyAware {
         metrics: &ServingMetrics,
         _occupancy: Option<&[Vec<u32>]>,
     ) {
-        while self.stats.len() <= cartridge {
-            self.stats.push(None);
+        self.ensure_slots(cartridge + 1);
+        // measured wave latency: the mean of the itl_step samples recorded
+        // since the previous checkpoint, EWMA-blended (a restarting worker
+        // resets its counters, which diff() treats as an empty interval)
+        let delta = metrics.itl_step.diff(&self.last_step[cartridge]);
+        self.last_step[cartridge] = metrics.itl_step.clone();
+        if delta.count() > 0 {
+            let mean = delta.mean();
+            self.step_s[cartridge] = Some(match self.step_s[cartridge] {
+                Some(prev) => prev + 0.3 * (mean - prev),
+                None => mean,
+            });
         }
         // a snapshot without generated tokens has no per-token price yet;
         // keep whatever was learned before rather than poisoning it
@@ -545,11 +594,34 @@ impl Dispatch for Rebalance {
     }
 }
 
+/// Where one request's output goes: the legacy unary reply channel
+/// ([`Fleet::submit`]) or a front-door token stream, which additionally
+/// receives per-step [`StreamItem::Tokens`] batches before the terminal
+/// [`StreamItem::End`].
+enum Reply {
+    Unary(Sender<GenResult>),
+    Stream(Sender<StreamItem>),
+}
+
+impl Reply {
+    /// Deliver the final result (ignoring a disappeared client, as ever).
+    fn finish(&self, result: GenResult) {
+        match self {
+            Reply::Unary(tx) => {
+                let _ = tx.send(result);
+            }
+            Reply::Stream(tx) => {
+                let _ = tx.send(StreamItem::End(Box::new(result)));
+            }
+        }
+    }
+}
+
 /// A pending result: the original request (kept for requeue), the instant
 /// it entered the admission queue (latency metrics count from here, and it
 /// survives requeue so time lost on a dead cartridge stays visible), the
-/// last known decode checkpoint (panic recovery resumes from it), and the
-/// client's reply channel.
+/// last known decode checkpoint (panic recovery resumes from it), the
+/// client's reply channel, and the front-door QoS/stream bookkeeping.
 struct Pending {
     req: GenRequest,
     arrived: Instant,
@@ -557,11 +629,65 @@ struct Pending {
     /// [`CheckpointReport`], or the fresh export after a migration. A
     /// requeue resumes decode from here instead of restarting prefill.
     checkpoint: Option<Box<DecodeCheckpoint>>,
-    tx: Sender<GenResult>,
+    reply: Reply,
+    qos: QoS,
+    /// Admission cost in tokens (prompt + output budget) — the unit the
+    /// fair queue, the drain-rate EWMA, and the wait projection share.
+    cost: u64,
+    /// Fleet-unique admission id, for cancellation routing (streaming
+    /// submissions only; unary ones cannot be cancelled).
+    admission: Option<u64>,
+    /// A [`WorkerMsg::Cancel`] was already forwarded for this request —
+    /// the preemption result is on its way, don't send another.
+    cancel_sent: bool,
+    /// Tokens already delivered on the stream, and how many upcoming
+    /// commits to suppress after a checkpoint requeue re-decodes tokens
+    /// the client already saw (exactly-once delivery across failover).
+    streamed: usize,
+    replay_skip: usize,
+}
+
+impl Pending {
+    fn unary(req: GenRequest, tx: Sender<GenResult>) -> Pending {
+        let cost = admission_cost(&req);
+        Pending {
+            req,
+            arrived: Instant::now(),
+            checkpoint: None,
+            reply: Reply::Unary(tx),
+            qos: QoS::default(),
+            cost,
+            admission: None,
+            cancel_sent: false,
+            streamed: 0,
+            replay_skip: 0,
+        }
+    }
+}
+
+/// Admission cost of a request, in tokens: prompt prefill work plus its
+/// full output budget — an upper bound that keeps the wait projection
+/// conservative (shedding early beats melting queues).
+fn admission_cost(req: &GenRequest) -> u64 {
+    let prompt = crate::host::tokenizer::ByteTokenizer::new().token_count(&req.prompt);
+    (prompt + req.max_new_tokens) as u64
 }
 
 enum FleetMsg {
     Submit(GenRequest, Sender<GenResult>),
+    /// Front-door streaming submission. The dispatcher decides admission
+    /// synchronously — the caller blocks on `admit` — so a shed request
+    /// provably never reaches a device and never occupies queue memory.
+    SubmitStream {
+        req: GenRequest,
+        qos: QoS,
+        admission: u64,
+        items: Sender<StreamItem>,
+        admit: Sender<std::result::Result<(), SubmitError>>,
+    },
+    /// Cancel the streaming submission with this admission id: dequeue it
+    /// if still queued, otherwise preempt it on its worker.
+    Cancel(u64),
     Metrics(Sender<FleetMetrics>),
     Shutdown(Sender<(FleetMetrics, FleetTrace)>),
     /// Live-migrate the request with client id `id` from cartridge `from`
@@ -617,6 +743,9 @@ pub struct Fleet {
     tx: Mutex<Sender<FleetMsg>>,
     handle: Option<JoinHandle<()>>,
     n_cartridges: usize,
+    /// Admission-id allocator for streaming submissions (see
+    /// [`Fleet::submit_stream`]).
+    next_admission: AtomicU64,
 }
 
 impl Fleet {
@@ -642,6 +771,24 @@ impl Fleet {
         factory: F,
         opts: SchedulerOpts,
         dispatch: Box<dyn Dispatch>,
+    ) -> Result<Fleet>
+    where
+        B: Into<CartridgeEngines> + 'static,
+        F: Fn(CartridgeId) -> Result<B> + Send + Sync + 'static,
+    {
+        Fleet::boot(n, factory, opts, dispatch, FrontDoorOpts::default())
+    }
+
+    /// [`Fleet::with_dispatch`] plus the front door's SLO configuration —
+    /// the constructor [`FrontDoor`](super::frontdoor::FrontDoor) uses.
+    /// With `FrontDoorOpts::default()` the SLO machinery is inert, so the
+    /// public constructors above are the unconfigured special case.
+    pub(crate) fn boot<F, B>(
+        n: usize,
+        factory: F,
+        opts: SchedulerOpts,
+        dispatch: Box<dyn Dispatch>,
+        door: FrontDoorOpts,
     ) -> Result<Fleet>
     where
         B: Into<CartridgeEngines> + 'static,
@@ -686,11 +833,17 @@ impl Fleet {
             }
         }
 
+        let slo = SloState::new(door, n, opts.prefill_chunk_tokens);
         let handle = std::thread::Builder::new()
             .name("ita-fleet-dispatch".into())
-            .spawn(move || dispatcher(slots, rx, dispatch, trace))
+            .spawn(move || dispatcher(slots, rx, dispatch, trace, slo))
             .expect("spawn fleet dispatcher thread");
-        Ok(Fleet { tx: Mutex::new(tx), handle: Some(handle), n_cartridges: n })
+        Ok(Fleet {
+            tx: Mutex::new(tx),
+            handle: Some(handle),
+            n_cartridges: n,
+            next_admission: AtomicU64::new(0),
+        })
     }
 
     pub fn cartridges(&self) -> usize {
@@ -710,6 +863,47 @@ impl Fleet {
         let (tx, rx) = channel();
         let _ = self.send(FleetMsg::Submit(req, tx));
         ResultHandle { rx }
+    }
+
+    /// Streaming admission — the front door's submit path. Blocks for the
+    /// dispatcher's synchronous admission decision: `Ok` hands back the
+    /// token stream (with its cancellation handle), `Err` means the
+    /// request was shed at the door and provably never reached a device.
+    /// Unlike [`Fleet::submit`], this path is subject to admission control
+    /// — see [`FrontDoor`](super::frontdoor::FrontDoor).
+    pub(crate) fn submit_stream(
+        &self,
+        req: GenRequest,
+        qos: QoS,
+    ) -> std::result::Result<TokenStream, SubmitError> {
+        let admission = self.next_admission.fetch_add(1, Ordering::Relaxed);
+        let (items_tx, items_rx) = channel();
+        let (admit_tx, admit_rx) = channel();
+        let sender = match self.tx.lock() {
+            Ok(tx) => tx.clone(),
+            Err(_) => return Err(SubmitError::Closed),
+        };
+        let sent = sender
+            .send(FleetMsg::SubmitStream {
+                req,
+                qos,
+                admission,
+                items: items_tx,
+                admit: admit_tx,
+            })
+            .is_ok();
+        if !sent {
+            return Err(SubmitError::Closed);
+        }
+        match admit_rx.recv() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => return Err(e),
+            Err(_) => return Err(SubmitError::Closed),
+        }
+        let cancel = CancelHandle::new(move || {
+            let _ = sender.send(FleetMsg::Cancel(admission));
+        });
+        Ok(TokenStream::new(items_rx, cancel))
     }
 
     /// Live fleet snapshot with per-cartridge breakdowns.
@@ -826,6 +1020,322 @@ fn failed_result(req: &GenRequest) -> GenResult {
     }
 }
 
+/// Result for a request cancelled while still queued: it never reached a
+/// device, so every counter is zero and only the queue time is real.
+fn cancelled_result(req: &GenRequest, arrived: Instant) -> GenResult {
+    GenResult {
+        id: req.id,
+        prompt_tokens: 0,
+        skipped_prompt_tokens: 0,
+        tokens: Vec::new(),
+        text: String::new(),
+        spec_proposed: 0,
+        spec_accepted: 0,
+        ttft_s: 0.0,
+        itl_s: 0.0,
+        total_s: arrived.elapsed().as_secs_f64(),
+        finish: FinishReason::Cancelled,
+    }
+}
+
+/// One FIFO lane of the admission queue: a `(priority class, tenant)`
+/// pair, with the start-time fair-queueing state for its class.
+struct Lane {
+    priority: Priority,
+    tenant: u64,
+    weight: u64,
+    fifo: VecDeque<Pending>,
+    /// Admission cost this lane has been served so far — its fair-queueing
+    /// virtual clock is `served / weight`.
+    served: u64,
+}
+
+/// The front door's admission queue: strict priority between classes,
+/// weighted fair queueing between tenants within a class, FIFO within a
+/// `(class, tenant)` lane — and an `urgent` FCFS row ahead of everything
+/// for requeued orphans of a dead cartridge (they have waited longest, and
+/// their recovery ordering predates the fair queue).
+///
+/// Fairness is start-time fair queueing over admission cost: the next pop
+/// serves the non-empty lane with the smallest `served / weight` in the
+/// highest non-empty priority class (ties → lowest lane index, which keeps
+/// single-tenant traffic plain FIFO). A lane (re)joining the rotation
+/// starts at its class's current virtual service floor, so a long-idle
+/// tenant cannot burst past tenants that kept the fleet busy.
+struct AdmissionQueue {
+    urgent: VecDeque<Pending>,
+    lanes: Vec<Lane>,
+    len: usize,
+}
+
+impl AdmissionQueue {
+    fn new() -> AdmissionQueue {
+        AdmissionQueue { urgent: VecDeque::new(), lanes: Vec::new(), len: 0 }
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    fn push(&mut self, p: Pending) {
+        self.len += 1;
+        let prio = p.qos.priority;
+        let tenant = p.qos.tenant;
+        let weight = p.qos.weight.max(1) as u64;
+        // the class's current virtual service floor (over lanes actively
+        // competing); an empty class starts its clock at 0
+        let floor = self
+            .lanes
+            .iter()
+            .filter(|l| l.priority == prio && !l.fifo.is_empty())
+            .map(|l| l.served / l.weight)
+            .min()
+            .unwrap_or(0);
+        if let Some(lane) =
+            self.lanes.iter_mut().find(|l| l.priority == prio && l.tenant == tenant)
+        {
+            if lane.fifo.is_empty() {
+                lane.served = lane.served.max(floor.saturating_mul(lane.weight));
+            }
+            lane.weight = weight; // latest declared share wins
+            lane.fifo.push_back(p);
+        } else {
+            self.lanes.push(Lane {
+                priority: prio,
+                tenant,
+                weight,
+                served: floor.saturating_mul(weight),
+                fifo: VecDeque::from([p]),
+            });
+        }
+    }
+
+    /// Requeued orphans go ahead of every lane, preserving the caller's
+    /// push-front ordering (earliest arrival ends up at the very front).
+    fn requeue_front(&mut self, p: Pending) {
+        self.len += 1;
+        self.urgent.push_front(p);
+    }
+
+    /// Index of the lane the next non-urgent pop serves: lowest virtual
+    /// clock (`served/weight`, compared exactly by cross-multiplication)
+    /// among non-empty lanes of the highest non-empty priority class.
+    fn next_lane(&self) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for (i, lane) in self.lanes.iter().enumerate() {
+            if lane.fifo.is_empty() {
+                continue;
+            }
+            match best {
+                None => best = Some(i),
+                Some(b) => {
+                    let cur = &self.lanes[b];
+                    if lane.priority < cur.priority
+                        || (lane.priority == cur.priority
+                            && (lane.served as u128) * (cur.weight as u128)
+                                < (cur.served as u128) * (lane.weight as u128))
+                    {
+                        best = Some(i);
+                    }
+                }
+            }
+        }
+        best
+    }
+
+    /// The entry the next [`pop`](AdmissionQueue::pop) returns (the
+    /// dispatcher shows it to the placement policy first).
+    fn peek(&self) -> Option<&Pending> {
+        if let Some(p) = self.urgent.front() {
+            return Some(p);
+        }
+        self.next_lane().and_then(|i| self.lanes[i].fifo.front())
+    }
+
+    fn pop(&mut self) -> Option<Pending> {
+        if let Some(p) = self.urgent.pop_front() {
+            self.len -= 1;
+            return Some(p);
+        }
+        let i = self.next_lane()?;
+        let p = self.lanes[i].fifo.pop_front()?;
+        self.lanes[i].served = self.lanes[i].served.saturating_add(p.cost.max(1));
+        self.len -= 1;
+        Some(p)
+    }
+
+    /// Remove the queued entry with this admission id, if any.
+    fn cancel(&mut self, admission: u64) -> Option<Pending> {
+        let hit = |p: &Pending| p.admission == Some(admission);
+        if let Some(i) = self.urgent.iter().position(hit) {
+            self.len -= 1;
+            return self.urgent.remove(i);
+        }
+        for lane in self.lanes.iter_mut() {
+            if let Some(i) = lane.fifo.iter().position(hit) {
+                self.len -= 1;
+                return lane.fifo.remove(i);
+            }
+        }
+        None
+    }
+
+    /// Total queued admission cost at or ahead of `prio` — the work a new
+    /// arrival of that class would wait behind (urgent entries count
+    /// regardless of class: they precede everything).
+    fn cost_ahead(&self, prio: Priority) -> u64 {
+        let urgent: u64 = self.urgent.iter().map(|p| p.cost).sum();
+        let lanes: u64 = self
+            .lanes
+            .iter()
+            .filter(|l| l.priority <= prio)
+            .flat_map(|l| l.fifo.iter())
+            .map(|p| p.cost)
+            .sum();
+        urgent.saturating_add(lanes)
+    }
+
+    /// Drain everything, in no particular order (total fleet loss — every
+    /// entry fails identically).
+    fn drain(&mut self) -> Vec<Pending> {
+        self.len = 0;
+        let mut out: Vec<Pending> = self.urgent.drain(..).collect();
+        for lane in self.lanes.iter_mut() {
+            out.extend(lane.fifo.drain(..));
+        }
+        out
+    }
+}
+
+/// Dispatcher-side SLO machinery, configured by
+/// [`FrontDoorOpts`](super::frontdoor::FrontDoorOpts) and driven entirely
+/// by measured telemetry: the `itl_step` histogram deltas piggybacked on
+/// worker checkpoints (wave latency → concurrency cap + adaptive prefill)
+/// and completed-request admission cost over wall time (drain rate → queue
+/// wait projection → shedding). With the default all-`None` config every
+/// method is a no-op and the dispatcher behaves exactly as before.
+struct SloState {
+    cfg: FrontDoorOpts,
+    /// Per-cartridge cumulative `itl_step` at the last checkpoint.
+    last_step: Vec<GapHistogram>,
+    /// EWMA of measured per-decode-row wave latency (seconds).
+    row_cost_s: Option<f64>,
+    /// Concurrent-decode cap per cartridge solving
+    /// `target_itl ≈ rows × row_cost`; `None` until telemetry exists.
+    cap: Option<usize>,
+    /// Current prefill chunk per cartridge (adaptive controller state).
+    chunk: Vec<usize>,
+    /// EWMA fleet drain rate, in admission-cost tokens per second.
+    drain_rate: Option<f64>,
+    drained_cost: u64,
+    window_start: Instant,
+}
+
+/// EWMA blend factor for all SLO telemetry.
+const SLO_ALPHA: f64 = 0.3;
+/// Minimum observation window before folding drained cost into the rate.
+const DRAIN_WINDOW_S: f64 = 0.02;
+/// Adaptive prefill chunk clamp (tokens per scheduler iteration).
+const CHUNK_MIN: usize = 16;
+const CHUNK_MAX: usize = 1024;
+
+impl SloState {
+    fn new(cfg: FrontDoorOpts, n: usize, initial_chunk: usize) -> SloState {
+        SloState {
+            cfg,
+            last_step: vec![GapHistogram::default(); n],
+            row_cost_s: None,
+            cap: None,
+            chunk: vec![initial_chunk; n],
+            drain_rate: None,
+            drained_cost: 0,
+            window_start: Instant::now(),
+        }
+    }
+
+    /// Learn from one worker checkpoint: the measured mean wave latency
+    /// since its previous checkpoint updates the per-row cost (and with it
+    /// the fleet-wide concurrency cap), and — when adaptive prefill is on
+    /// — retargets this cartridge's prefill chunk budget multiplicatively
+    /// toward the ITL target (Sarathi's insight: the chunk size is the
+    /// knob that trades prefill throughput against decode stall).
+    fn on_checkpoint(&mut self, w: usize, metrics: &ServingMetrics, in_flight: usize, worker: &Worker) {
+        let Some(target) = self.cfg.target_itl_s else { return };
+        if w >= self.last_step.len() {
+            return;
+        }
+        let delta = metrics.itl_step.diff(&self.last_step[w]);
+        self.last_step[w] = metrics.itl_step.clone();
+        if delta.count() == 0 {
+            return;
+        }
+        let step_s = delta.mean();
+        let per_row = step_s / in_flight.max(1) as f64;
+        let blended = match self.row_cost_s {
+            Some(prev) => prev + SLO_ALPHA * (per_row - prev),
+            None => per_row,
+        };
+        self.row_cost_s = Some(blended);
+        if blended > 0.0 {
+            self.cap = Some(((target / blended) as usize).clamp(1, 4096));
+        }
+        if self.cfg.adaptive_prefill {
+            let cur = self.chunk[w].max(CHUNK_MIN);
+            let next = ((cur as f64) * (target / step_s.max(1e-9)))
+                .clamp(CHUNK_MIN as f64, CHUNK_MAX as f64) as usize;
+            if next != self.chunk[w] {
+                self.chunk[w] = next;
+                let _ = worker.send(WorkerMsg::SetPrefillChunk(next));
+            }
+        }
+    }
+
+    /// Account a finished (completed, failed, or cancelled) request toward
+    /// the drain-rate EWMA.
+    fn note_drained(&mut self, cost: u64) {
+        self.drained_cost = self.drained_cost.saturating_add(cost);
+        let dt = self.window_start.elapsed().as_secs_f64();
+        if dt >= DRAIN_WINDOW_S {
+            let inst = self.drained_cost as f64 / dt;
+            self.drain_rate = Some(match self.drain_rate {
+                Some(prev) => prev + SLO_ALPHA * (inst - prev),
+                None => inst,
+            });
+            self.drained_cost = 0;
+            self.window_start = Instant::now();
+        }
+    }
+
+    /// Shed decision for a streaming arrival: `Some((projected, budget))`
+    /// iff a queue budget is configured, a drain rate has been measured,
+    /// and the projected wait for this priority class exceeds the budget.
+    /// With zero telemetry the door admits optimistically — shedding
+    /// before any request ever drained would reject the very traffic that
+    /// produces the telemetry.
+    fn shed(&self, queue: &AdmissionQueue, prio: Priority) -> Option<(f64, f64)> {
+        let budget = self.cfg.queue_budget_s?;
+        let rate = self.drain_rate?;
+        if rate <= 0.0 {
+            return None;
+        }
+        let projected = queue.cost_ahead(prio) as f64 / rate;
+        (projected > budget).then_some((projected, budget))
+    }
+
+    /// A slot's effective concurrent-decode limit: its capacity, tightened
+    /// by the ITL-derived cap.
+    fn slot_cap(&self, capacity: usize) -> usize {
+        match self.cap {
+            Some(c) => capacity.min(c),
+            None => capacity,
+        }
+    }
+}
+
 /// Dispatcher-side counters surfaced in [`FleetMetrics`].
 #[derive(Default)]
 struct Counters {
@@ -833,6 +1343,11 @@ struct Counters {
     failed: u64,
     migrations: u64,
     checkpoint_resumes: u64,
+    /// Streaming submissions rejected by admission control.
+    shed: u64,
+    /// Requests that ended [`FinishReason::Cancelled`] (explicit cancel or
+    /// dropped stream), queued or in flight.
+    cancelled: u64,
 }
 
 /// Dispatcher-side trace collector: absorbs every worker's drained event
@@ -895,6 +1410,37 @@ impl TraceSink {
         self.push(ev);
     }
 
+    /// Stamp a fleet-level `Shed` instant: the request was rejected at the
+    /// door, so no cartridge ring will ever record it — this is its only
+    /// trace. `a`/`b` carry the SLO math (projected wait vs budget, µs).
+    fn shed(&mut self, client_id: u64, projected_s: f64, budget_s: f64) {
+        let Some(epoch) = self.epoch else { return };
+        if !self.enabled {
+            return;
+        }
+        let ts = Instant::now().saturating_duration_since(epoch).as_micros() as u64;
+        let mut ev = TraceEvent::at(ts, TraceKind::Shed);
+        ev.req = client_id;
+        ev.a = (projected_s * 1e6) as u64;
+        ev.b = (budget_s * 1e6) as u64;
+        self.push(ev);
+    }
+
+    /// Stamp a fleet-level `Cancel` instant. `in_flight` says whether the
+    /// request had reached a worker — if so, that worker's own `Preempt`
+    /// event (KV rows freed) follows in its next checkpoint batch.
+    fn cancel(&mut self, client_id: u64, in_flight: bool) {
+        let Some(epoch) = self.epoch else { return };
+        if !self.enabled {
+            return;
+        }
+        let ts = Instant::now().saturating_duration_since(epoch).as_micros() as u64;
+        let mut ev = TraceEvent::at(ts, TraceKind::Cancel);
+        ev.req = client_id;
+        ev.a = in_flight as u64;
+        self.push(ev);
+    }
+
     fn finish(&mut self) -> FleetTrace {
         FleetTrace::new(std::mem::take(&mut self.events), self.dropped)
     }
@@ -905,9 +1451,10 @@ fn dispatcher(
     rx: Receiver<FleetMsg>,
     mut dispatch: Box<dyn Dispatch>,
     mut trace: TraceSink,
+    mut slo: SloState,
 ) {
     let started = Instant::now();
-    let mut queue: VecDeque<Pending> = VecDeque::new();
+    let mut queue = AdmissionQueue::new();
     let mut next_ticket: u64 = 0;
     let mut counters = Counters::default();
     let mut shutdown_reply: Option<Sender<(FleetMetrics, FleetTrace)>> = None;
@@ -921,14 +1468,69 @@ fn dispatcher(
         match msg {
             FleetMsg::Submit(req, tx) => {
                 if shutdown_reply.is_none() {
-                    queue.push_back(Pending {
+                    queue.push(Pending::unary(req, tx));
+                }
+                // after shutdown: drop tx — the client's wait() errors out
+            }
+            FleetMsg::SubmitStream { req, qos, admission, items, admit } => {
+                if shutdown_reply.is_some() {
+                    let _ = admit.send(Err(SubmitError::Closed));
+                } else if let Some((projected, budget)) = slo.shed(&queue, qos.priority) {
+                    // admission control: reject before the request costs
+                    // queue memory or device work — the only record of it
+                    // is the counter and the trace instant
+                    counters.shed += 1;
+                    trace.shed(req.id, projected, budget);
+                    let _ = admit.send(Err(SubmitError::Overloaded {
+                        projected_wait_s: projected,
+                        budget_s: budget,
+                    }));
+                } else {
+                    let cost = admission_cost(&req);
+                    queue.push(Pending {
                         req,
                         arrived: Instant::now(),
                         checkpoint: None,
-                        tx,
+                        reply: Reply::Stream(items),
+                        qos,
+                        cost,
+                        admission: Some(admission),
+                        cancel_sent: false,
+                        streamed: 0,
+                        replay_skip: 0,
                     });
+                    let _ = admit.send(Ok(()));
                 }
-                // after shutdown: drop tx — the client's wait() errors out
+            }
+            FleetMsg::Cancel(admission) => {
+                if let Some(p) = queue.cancel(admission) {
+                    // still queued: it never reached a device — reply with
+                    // the empty partial directly
+                    counters.cancelled += 1;
+                    trace.cancel(p.req.id, false);
+                    p.reply.finish(cancelled_result(&p.req, p.arrived));
+                    slo.note_drained(p.cost);
+                } else {
+                    // in flight somewhere: forward as first-class scheduler
+                    // preemption; the partial result comes back through the
+                    // normal Done path
+                    'live: for slot in slots.iter_mut() {
+                        if slot.dead {
+                            continue;
+                        }
+                        for (ticket, p) in slot.in_flight.iter_mut() {
+                            if p.admission == Some(admission) {
+                                if !p.cancel_sent {
+                                    p.cancel_sent = true;
+                                    trace.cancel(p.req.id, true);
+                                    let _ = slot.worker.send(WorkerMsg::Cancel(*ticket));
+                                }
+                                break 'live;
+                            }
+                        }
+                    }
+                    // unknown id: already completed — benign no-op
+                }
             }
             FleetMsg::Metrics(reply) => {
                 let _ = reply.send(snapshot(&slots, started, &counters));
@@ -959,13 +1561,42 @@ fn dispatcher(
                 };
                 let _ = reply.send(moved);
             }
+            FleetMsg::Event(WorkerEvent::Tokens(w, batches)) => {
+                let slot = &mut slots[w];
+                for (ticket, mut toks) in batches {
+                    let Some(p) = slot.in_flight.get_mut(&ticket) else { continue };
+                    let Reply::Stream(items) = &p.reply else { continue };
+                    // suppress commits a checkpoint requeue re-decodes —
+                    // the client already saw them (exactly-once delivery)
+                    if p.replay_skip > 0 {
+                        let skip = p.replay_skip.min(toks.len());
+                        toks.drain(..skip);
+                        p.replay_skip -= skip;
+                        if toks.is_empty() {
+                            continue;
+                        }
+                    }
+                    p.streamed += toks.len();
+                    if items.send(StreamItem::Tokens(toks)).is_err() && !p.cancel_sent {
+                        // the client dropped its receiver: disconnect IS
+                        // cancellation — stop decoding for no one
+                        p.cancel_sent = true;
+                        trace.cancel(p.req.id, true);
+                        let _ = slot.worker.send(WorkerMsg::Cancel(ticket));
+                    }
+                }
+            }
             FleetMsg::Event(WorkerEvent::Done(w, mut result)) => {
                 // on the wire the request id IS the ticket (see pump), so
                 // routing is exact even when clients reuse ids; restore the
                 // client's id before replying
                 if let Some(p) = slots[w].in_flight.remove(&result.id) {
+                    if result.finish == FinishReason::Cancelled {
+                        counters.cancelled += 1;
+                    }
+                    slo.note_drained(p.cost);
                     result.id = p.req.id;
-                    let _ = p.tx.send(result);
+                    p.reply.finish(result);
                 }
             }
             FleetMsg::Event(WorkerEvent::Checkpoint(w, report)) => {
@@ -977,6 +1608,9 @@ fn dispatcher(
                 // fresh counters (EnergyAware's joules/token) before the
                 // slot consumes them
                 dispatch.checkpoint(w, &report.metrics, report.prefix_occupancy.as_deref());
+                // the SLO controller learns measured wave latency from the
+                // same snapshot (concurrency cap + adaptive prefill)
+                slo.on_checkpoint(w, &report.metrics, slots[w].in_flight.len(), &slots[w].worker);
                 slots[w].checkpoint = Some(report.metrics);
                 // refresh each in-flight request's recovery checkpoint, and
                 // learn the model's per-row KV wire cost for the guard
@@ -1003,8 +1637,14 @@ fn dispatcher(
                 // Each carries its last decode checkpoint, so the survivor
                 // restores KV instead of re-prefilling.
                 orphans.sort_by_key(|p| p.arrived);
-                for p in orphans.into_iter().rev() {
-                    queue.push_front(p);
+                for mut p in orphans.into_iter().rev() {
+                    // a resume replays decode from the last checkpoint; the
+                    // stream already delivered everything up to `streamed`,
+                    // so suppress the overlap (no checkpoint ⇒ a prefill
+                    // restart replays the whole output)
+                    let resumed = p.checkpoint.as_ref().map_or(0, |c| c.generated.len());
+                    p.replay_skip = p.streamed.saturating_sub(resumed);
+                    queue.requeue_front(p);
                 }
             }
             FleetMsg::Event(WorkerEvent::Drained(w, metrics)) => {
@@ -1014,7 +1654,7 @@ fn dispatcher(
             FleetMsg::Event(_) => {}
         }
 
-        pump(&mut slots, &mut queue, dispatch.as_mut(), &mut next_ticket, &mut counters);
+        pump(&mut slots, &mut queue, dispatch.as_mut(), &mut next_ticket, &mut counters, &slo);
 
         // load-spread rebalancing: at most one migration per wakeup (the
         // dance blocks on two worker replies), skipped once draining
@@ -1076,7 +1716,7 @@ fn dispatcher(
                     );
                     // a failed handover may have requeued the request
                     let d = dispatch.as_mut();
-                    pump(&mut slots, &mut queue, d, &mut next_ticket, &mut counters);
+                    pump(&mut slots, &mut queue, d, &mut next_ticket, &mut counters, &slo);
                 }
             }
         }
@@ -1090,36 +1730,39 @@ fn dispatcher(
 }
 
 /// Assign queued requests to cartridges until the queue empties or every
-/// eligible cartridge is at capacity. Requests carrying a decode checkpoint
-/// (requeued after their cartridge died) are handed over as resumes.
+/// eligible cartridge is at capacity (tightened by the SLO concurrency
+/// cap). Requests carrying a decode checkpoint (requeued after their
+/// cartridge died) are handed over as resumes.
 fn pump(
     slots: &mut [Slot],
-    queue: &mut VecDeque<Pending>,
+    queue: &mut AdmissionQueue,
     dispatch: &mut dyn Dispatch,
     next_ticket: &mut u64,
     counters: &mut Counters,
+    slo: &SloState,
 ) {
     while !queue.is_empty() {
         if !slots.iter().any(Slot::accepting) {
             // total fleet loss: fail everything still queued, loudly
-            while let Some(p) = queue.pop_front() {
+            for p in queue.drain() {
                 counters.failed += 1;
-                let _ = p.tx.send(failed_result(&p.req));
+                p.reply.finish(failed_result(&p.req));
             }
             return;
         }
         let loads: Vec<Option<usize>> = slots
             .iter()
             .map(|s| {
-                (s.accepting() && s.in_flight.len() < s.capacity).then(|| s.in_flight.len())
+                (s.accepting() && s.in_flight.len() < slo.slot_cap(s.capacity))
+                    .then(|| s.in_flight.len())
             })
             .collect();
-        let front = queue.front().expect("queue non-empty");
+        let front = queue.peek().expect("queue non-empty");
         let Some(w) = dispatch.pick(&loads, &front.req) else { return };
         if loads.get(w).copied().flatten().is_none() {
             return; // defensive: policy picked an ineligible cartridge
         }
-        let p = queue.pop_front().expect("queue non-empty");
+        let p = queue.pop().expect("queue non-empty");
         // rewrite the id on the wire to a fleet-unique ticket so completion
         // routing stays exact even when clients reuse request ids; the
         // client-visible id is restored from `Pending::req` on Done
@@ -1143,7 +1786,7 @@ fn pump(
             // channel closed without a Died event (shouldn't happen) —
             // mark dead and retry the request elsewhere
             slots[w].dead = true;
-            queue.push_front(p);
+            queue.requeue_front(p);
         }
     }
 }
@@ -1204,7 +1847,7 @@ fn rebalance_candidate(
 /// whether the request actually moved.
 fn migrate_ticket(
     slots: &mut [Slot],
-    queue: &mut VecDeque<Pending>,
+    queue: &mut AdmissionQueue,
     dispatch: &mut dyn Dispatch,
     counters: &mut Counters,
     trace: &mut TraceSink,
@@ -1271,7 +1914,7 @@ fn migrate_ticket(
         // the target died as we handed over: requeue with the recovery
         // checkpoint; the caller re-pumps
         slots[to].dead = true;
-        queue.push_front(p);
+        queue.requeue_front(p);
         false
     }
 }
@@ -1280,7 +1923,7 @@ fn migrate_ticket(
 /// all workers; once every worker has drained (or died), reply and finish.
 fn try_finish(
     slots: &mut [Slot],
-    queue: &VecDeque<Pending>,
+    queue: &AdmissionQueue,
     started: Instant,
     counters: &Counters,
     trace: &mut TraceSink,
@@ -1353,6 +1996,8 @@ fn snapshot(slots: &[Slot], started: Instant, counters: &Counters) -> FleetMetri
         failed_requests: counters.failed,
         migrations: counters.migrations,
         checkpoint_resumes: counters.checkpoint_resumes,
+        shed_requests: counters.shed,
+        cancelled_requests: counters.cancelled,
         wall_s: started.elapsed().as_secs_f64(),
     }
 }
@@ -1441,12 +2086,9 @@ mod tests {
         };
         let pending = |ckpt: Option<DecodeCheckpoint>| {
             let (tx, _rx) = channel();
-            Pending {
-                req: GenRequest::greedy(0, "x", 4),
-                arrived: Instant::now(),
-                checkpoint: ckpt.map(Box::new),
-                tx,
-            }
+            let mut p = Pending::unary(GenRequest::greedy(0, "x", 4), tx);
+            p.checkpoint = ckpt.map(Box::new);
+            p
         };
         let big = DecodeCheckpoint {
             prompt: vec![1],
@@ -1497,12 +2139,9 @@ mod tests {
         };
         let pending = |ckpt: Option<DecodeCheckpoint>| {
             let (tx, _rx) = channel();
-            Pending {
-                req: GenRequest::greedy(0, "x", 4),
-                arrived: Instant::now(),
-                checkpoint: ckpt.map(Box::new),
-                tx,
-            }
+            let mut p = Pending::unary(GenRequest::greedy(0, "x", 4), tx);
+            p.checkpoint = ckpt.map(Box::new);
+            p
         };
         // the checkpoint says "small" (1 row), but the request kept
         // decoding for a full checkpoint interval since — the live probe
@@ -1777,5 +2416,276 @@ mod tests {
             SchedulerOpts::default()
         )
         .is_err());
+    }
+
+    fn queued(id: u64, qos: QoS, cost: u64) -> Pending {
+        let (tx, _rx) = channel();
+        let mut p = Pending::unary(GenRequest::greedy(id, "q", 1), tx);
+        p.qos = qos;
+        p.cost = cost;
+        p.admission = Some(id);
+        p
+    }
+
+    #[test]
+    fn admission_queue_is_strict_priority_then_weighted_fair() {
+        let mut q = AdmissionQueue::new();
+        let std_a = QoS::default().for_tenant(1, 1);
+        let std_b = QoS::default().for_tenant(2, 2);
+        q.push(queued(10, QoS::batch(), 100));
+        q.push(queued(1, std_a, 100));
+        q.push(queued(2, std_a, 100));
+        q.push(queued(3, std_b, 100));
+        q.push(queued(4, std_b, 100));
+        q.push(queued(20, QoS::interactive(), 100));
+        assert_eq!(q.len(), 6);
+        // interactive first, batch dead last; within Standard the weight-2
+        // tenant drains two pops per weight-1 pop (start-time fair
+        // queueing over admission cost)
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|p| p.req.id).collect();
+        assert_eq!(order, vec![20, 1, 3, 4, 2, 10]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn admission_queue_idle_tenant_cannot_burst_past_active_ones() {
+        let mut q = AdmissionQueue::new();
+        let t1 = QoS::default().for_tenant(1, 1);
+        let t2 = QoS::default().for_tenant(2, 1);
+        // tenant 1 drains 400 cost while tenant 2 is idle
+        for i in 0..4 {
+            q.push(queued(i, t1, 100));
+        }
+        for _ in 0..4 {
+            q.pop().unwrap();
+        }
+        // both tenants now queue a backlog; the late joiner starts at the
+        // class's virtual floor, so service alternates instead of tenant 2
+        // draining its whole backlog first
+        for i in [10, 11, 12] {
+            q.push(queued(i, t1, 100));
+        }
+        for i in [20, 21, 22] {
+            q.push(queued(i, t2, 100));
+        }
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|p| p.req.id).collect();
+        assert_eq!(order, vec![10, 20, 11, 21, 12, 22]);
+    }
+
+    #[test]
+    fn admission_queue_cost_ahead_and_urgent_lane() {
+        let mut q = AdmissionQueue::new();
+        q.push(queued(1, QoS::interactive(), 10));
+        q.push(queued(2, QoS::default(), 20));
+        q.push(queued(3, QoS::batch(), 40));
+        assert_eq!(q.cost_ahead(Priority::Interactive), 10);
+        assert_eq!(q.cost_ahead(Priority::Standard), 30);
+        assert_eq!(q.cost_ahead(Priority::Batch), 70);
+        // requeued orphans precede everything — even interactive traffic —
+        // and their cost counts against every arrival
+        let (tx, _rx) = channel();
+        let mut orphan = Pending::unary(GenRequest::greedy(9, "orphan", 1), tx);
+        orphan.cost = 5;
+        q.requeue_front(orphan);
+        assert_eq!(q.cost_ahead(Priority::Interactive), 15);
+        assert_eq!(q.peek().unwrap().req.id, 9);
+        assert_eq!(q.pop().unwrap().req.id, 9);
+        assert_eq!(q.pop().unwrap().req.id, 1);
+    }
+
+    #[test]
+    fn admission_queue_cancel_removes_the_exact_entry() {
+        let mut q = AdmissionQueue::new();
+        q.push(queued(1, QoS::default(), 10));
+        q.push(queued(2, QoS::default(), 10));
+        assert_eq!(q.cancel(1).unwrap().req.id, 1);
+        assert!(q.cancel(1).is_none(), "already removed");
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.pop().unwrap().req.id, 2);
+        assert!(q.pop().is_none());
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn slo_shed_uses_projected_wait_against_the_budget() {
+        let cfg = FrontDoorOpts { queue_budget_s: Some(0.5), ..FrontDoorOpts::default() };
+        let mut slo = SloState::new(cfg, 1, 0);
+        let mut q = AdmissionQueue::new();
+        q.push(queued(1, QoS::default(), 1000));
+        // no drain telemetry yet: admit optimistically — shedding with
+        // zero telemetry would reject the traffic that produces it
+        assert!(slo.shed(&q, Priority::Batch).is_none());
+        slo.drain_rate = Some(1000.0); // cost tokens per second
+        let (projected, budget) = slo.shed(&q, Priority::Batch).unwrap();
+        assert!((projected - 1.0).abs() < 1e-9, "1000 queued / 1000 per s = 1 s");
+        assert!((budget - 0.5).abs() < 1e-9);
+        // a higher-priority arrival waits behind none of that queue
+        assert!(slo.shed(&q, Priority::Interactive).is_none());
+        // a generous budget admits everything
+        slo.cfg.queue_budget_s = Some(2.0);
+        assert!(slo.shed(&q, Priority::Batch).is_none());
+        // and no budget means never shed, whatever the backlog
+        slo.cfg.queue_budget_s = None;
+        assert!(slo.shed(&q, Priority::Batch).is_none());
+    }
+
+    #[test]
+    fn slo_concurrency_cap_solves_target_over_row_cost() {
+        let cfg = FrontDoorOpts { target_itl_s: Some(0.01), ..FrontDoorOpts::default() };
+        let mut slo = SloState::new(cfg, 1, 0);
+        assert_eq!(slo.slot_cap(8), 8, "no telemetry: capacity untouched");
+        // a checkpoint measuring ~4 ms waves with 2 rows in flight gives a
+        // ~2 ms row cost → cap ≈ 10 ms / 2 ms = 5 concurrent decodes
+        let mut m = ServingMetrics::default();
+        for _ in 0..64 {
+            m.itl_step.record(0.004);
+        }
+        let (etx, _erx) = channel();
+        let worker = Worker::spawn(
+            0,
+            || Ok(Engine::synthetic(&ModelConfig::TINY, 11)),
+            SchedulerOpts::default(),
+            etx,
+            |e: WorkerEvent| e,
+        );
+        slo.on_checkpoint(0, &m, 2, &worker);
+        let cap = slo.slot_cap(64);
+        assert!(cap < 64, "measured latency must tighten a loose capacity");
+        assert!((1..=16).contains(&cap), "cap {cap} should be near target/row_cost");
+        assert_eq!(slo.slot_cap(1), 1, "cap never exceeds real capacity");
+    }
+
+    #[test]
+    fn energy_aware_folds_measured_wave_latency_into_the_rank() {
+        let mut d = EnergyAware::new();
+        let r = any_req();
+        let with_step = |gap_s: f64| {
+            let mut m = ServingMetrics {
+                tokens_generated: 1_000,
+                energy_j: 1.0, // identical modeled joules/token on both
+                wall_s: 10.0,
+                ..ServingMetrics::default()
+            };
+            for _ in 0..32 {
+                m.itl_step.record(gap_s);
+            }
+            m
+        };
+        // same modeled energy, but cartridge 1 *measures* 8× slower waves
+        // (a degraded link, a draft pair burning verify time) — the
+        // ROADMAP gap: modeled-energy-only ranking could not see this
+        d.checkpoint(0, &with_step(0.001), None);
+        d.checkpoint(1, &with_step(0.008), None);
+        assert_eq!(
+            d.pick(&[Some(1), Some(0)], &r),
+            Some(0),
+            "the slow cartridge must lose on energy-delay product despite its lighter load"
+        );
+        // losing the fast cartridge resets its latency telemetry too
+        d.cartridge_lost(0);
+        assert_eq!(d.pick(&[Some(0), Some(0)], &r), Some(0), "reset slot ranks cheapest");
+    }
+
+    #[test]
+    fn streamed_tokens_match_the_final_result() {
+        let opts = SchedulerOpts { stream_tokens: true, ..SchedulerOpts::default() };
+        let fleet = Fleet::boot(
+            2,
+            |_id| Ok(Engine::synthetic(&ModelConfig::TINY, 42)),
+            opts,
+            Box::new(LeastLoaded),
+            FrontDoorOpts::default(),
+        )
+        .unwrap();
+        let mut streams: Vec<_> = (0..4)
+            .map(|i| {
+                fleet
+                    .submit_stream(GenRequest::greedy(i, &format!("stream {i}"), 6), QoS::default())
+                    .unwrap()
+            })
+            .collect();
+        for (i, s) in streams.iter_mut().enumerate() {
+            let mut toks = Vec::new();
+            let result = loop {
+                match s.recv() {
+                    Some(StreamItem::Tokens(t)) => toks.extend(t),
+                    Some(StreamItem::End(r)) => break *r,
+                    None => panic!("stream severed"),
+                }
+            };
+            assert_eq!(result.id, i as u64);
+            assert!(!toks.is_empty());
+            assert_eq!(toks, result.tokens, "stream must concatenate to the final output");
+        }
+        drop(streams);
+        let m = fleet.shutdown().unwrap();
+        assert_eq!(m.aggregate().requests_completed, 4);
+        assert_eq!(m.shed_requests, 0);
+        assert_eq!(m.cancelled_requests, 0);
+    }
+
+    #[test]
+    fn cancelling_a_stream_preempts_and_returns_the_partial() {
+        let opts = SchedulerOpts { stream_tokens: true, ..SchedulerOpts::default() };
+        let fleet = Fleet::boot(
+            1,
+            |_id| Ok(Engine::synthetic(&ModelConfig::TINY, 42)),
+            opts,
+            Box::new(LeastLoaded),
+            FrontDoorOpts::default(),
+        )
+        .unwrap();
+        let mut req = GenRequest::greedy(5, "cancel me mid decode", 512);
+        req.stop_at_eos = false;
+        let mut stream = fleet.submit_stream(req, QoS::default()).unwrap();
+        // wait for the first committed tokens so the cancel lands mid-decode
+        let mut toks = loop {
+            match stream.recv() {
+                Some(StreamItem::Tokens(t)) => break t,
+                Some(StreamItem::End(r)) => panic!("finished before cancel: {:?}", r.finish),
+                None => panic!("stream severed"),
+            }
+        };
+        stream.cancel_handle().cancel();
+        let result = loop {
+            match stream.recv() {
+                Some(StreamItem::Tokens(t)) => toks.extend(t),
+                Some(StreamItem::End(r)) => break *r,
+                None => panic!("stream severed"),
+            }
+        };
+        assert_eq!(result.finish, FinishReason::Cancelled);
+        assert_eq!(result.id, 5);
+        assert!(result.tokens.len() < 512, "must not have decoded to completion");
+        assert_eq!(toks, result.tokens, "partial stream matches the partial result");
+        let m = fleet.shutdown().unwrap();
+        assert_eq!(m.cancelled_requests, 1);
+        assert_eq!(m.failed_requests, 0);
+    }
+
+    #[test]
+    fn dropping_a_stream_cancels_server_side() {
+        let opts = SchedulerOpts { stream_tokens: true, ..SchedulerOpts::default() };
+        let fleet = Fleet::boot(
+            1,
+            |_id| Ok(Engine::synthetic(&ModelConfig::TINY, 42)),
+            opts,
+            Box::new(LeastLoaded),
+            FrontDoorOpts::default(),
+        )
+        .unwrap();
+        let mut req = GenRequest::greedy(6, "disconnecting client", 512);
+        req.stop_at_eos = false;
+        let mut stream = fleet.submit_stream(req, QoS::default()).unwrap();
+        // ensure decode started, then walk away without cancelling
+        loop {
+            if let Some(StreamItem::Tokens(_)) = stream.recv() {
+                break;
+            }
+        }
+        drop(stream); // Drop fires the cancel handle
+        let m = fleet.shutdown().unwrap();
+        assert_eq!(m.cancelled_requests, 1, "disconnect must become a preemption");
+        assert_eq!(m.failed_requests, 0);
     }
 }

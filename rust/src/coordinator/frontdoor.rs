@@ -1,0 +1,340 @@
+//! The overload-grade async front door: streaming ingress, priorities,
+//! per-tenant fairness, and SLO-driven admission control over a [`Fleet`].
+//!
+//! ```text
+//!   clients ──▶ FrontDoor::submit_with(req, QoS) ─┬─▶ Err(Overloaded)   (shed at the door)
+//!                                                 └─▶ TokenStream
+//!                    │                                   ▲
+//!                    ▼                                   │ per-step StreamItem::Tokens,
+//!            admission queue (strict priority,           │ one StreamItem::End
+//!            weighted fair queueing per tenant)          │
+//!                    │ pump                              │
+//!                    ▼                                   │
+//!            fleet dispatcher ── WorkerEvent::Tokens ────┘
+//!              │        ▲
+//!              │        └── checkpoints drive the ITL controller:
+//!              │            concurrency cap + adaptive prefill chunk
+//!              ▼
+//!            cartridge workers (cancel = first-class preemption)
+//! ```
+//!
+//! The front door is pure host-side coordination — the Split-Brain device
+//! contract is untouched. Three SLO mechanisms, all optional and all driven
+//! by measured telemetry rather than static configuration:
+//!
+//! * **Admission control** ([`FrontDoorOpts::queue_budget_s`]): projected
+//!   queue wait for the arriving priority class (queued admission cost ÷
+//!   EWMA fleet drain rate) is compared against the budget; arrivals that
+//!   would wait longer are rejected with [`SubmitError::Overloaded`]
+//!   *before* they consume queue memory or device work — shedding load
+//!   before queues melt, instead of timing out requests after the fact.
+//! * **ITL concurrency cap** ([`FrontDoorOpts::target_itl_s`]): measured
+//!   per-wave decode latency (the `itl_step` histogram deltas piggybacked
+//!   on worker checkpoints) yields a per-row wave cost; the dispatcher caps
+//!   concurrent decodes per cartridge at `target_itl / row_cost` so
+//!   admitted requests keep their inter-token latency inside the SLO.
+//! * **Adaptive prefill** ([`FrontDoorOpts::adaptive_prefill`]):
+//!   Sarathi-style — instead of a static
+//!   [`prefill_chunk_tokens`](super::scheduler::SchedulerOpts::prefill_chunk_tokens),
+//!   the chunk budget is retargeted multiplicatively from the measured wave
+//!   latency so prefill work per iteration shrinks (or grows) until mixed
+//!   waves fit the ITL target.
+//!
+//! Scheduling across admitted requests: strict priority between
+//! [`Priority`] classes, start-time weighted fair queueing between tenants
+//! within a class, FIFO within a tenant. Cancellation (explicit via
+//! [`CancelHandle`](super::stream::CancelHandle), or implicit when a client
+//! drops its [`TokenStream`]) propagates into the scheduler as first-class
+//! preemption: KV pages are freed immediately and the stream ends with the
+//! partial result.
+//!
+//! The full serving contract is documented in `docs/serving-front-door.md`.
+
+use std::fmt;
+
+use anyhow::Result;
+
+use super::fleet::{Dispatch, Fleet, LeastLoaded};
+use super::metrics::FleetMetrics;
+use super::request::GenRequest;
+use super::scheduler::SchedulerOpts;
+use super::spec::CartridgeEngines;
+use super::stream::TokenStream;
+use super::trace::FleetTrace;
+use super::worker::CartridgeId;
+
+/// Priority class of a request. Strict: a queued `Interactive` request is
+/// always dispatched before any queued `Standard` one, which beats any
+/// `Batch` one. Fairness (weights) applies only *within* a class — across
+/// classes there is none by design, so batch traffic can never starve
+/// interactive traffic, only the reverse.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    /// Latency-sensitive traffic (chat, completion-as-you-type).
+    Interactive,
+    /// The default class.
+    Standard,
+    /// Throughput traffic that tolerates queueing (evals, batch scoring).
+    Batch,
+}
+
+/// Quality-of-service envelope for one submission: priority class, tenant,
+/// and the tenant's fair-queueing weight within the class (a weight-2
+/// tenant drains twice the admission cost per unit service of a weight-1
+/// tenant under contention; weights below 1 are clamped to 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct QoS {
+    pub priority: Priority,
+    pub tenant: u64,
+    pub weight: u32,
+}
+
+impl Default for QoS {
+    /// `Standard` priority, tenant 0, weight 1.
+    fn default() -> QoS {
+        QoS { priority: Priority::Standard, tenant: 0, weight: 1 }
+    }
+}
+
+impl QoS {
+    /// [`Priority::Interactive`], tenant 0, weight 1.
+    pub fn interactive() -> QoS {
+        QoS { priority: Priority::Interactive, ..QoS::default() }
+    }
+
+    /// [`Priority::Batch`], tenant 0, weight 1.
+    pub fn batch() -> QoS {
+        QoS { priority: Priority::Batch, ..QoS::default() }
+    }
+
+    /// Tag this envelope with a tenant id and fair-share weight.
+    pub fn for_tenant(mut self, tenant: u64, weight: u32) -> QoS {
+        self.tenant = tenant;
+        self.weight = weight.max(1);
+        self
+    }
+}
+
+/// Why a streaming submission was rejected at the door.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SubmitError {
+    /// Admission control shed the request: the projected queue wait for its
+    /// priority class exceeds the configured
+    /// [`queue_budget_s`](FrontDoorOpts::queue_budget_s). The request never
+    /// reached a device — retry later, with backoff proportional to
+    /// `projected_wait_s`.
+    Overloaded { projected_wait_s: f64, budget_s: f64 },
+    /// The fleet has shut down (or is draining) and accepts no new work.
+    Closed,
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::Overloaded { projected_wait_s, budget_s } => write!(
+                f,
+                "overloaded: projected queue wait {projected_wait_s:.3}s exceeds SLO budget {budget_s:.3}s"
+            ),
+            SubmitError::Closed => write!(f, "fleet is shut down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// SLO configuration for the front door. The default is fully permissive —
+/// no shedding, no concurrency cap, static prefill chunking — which makes
+/// [`FrontDoor`] a drop-in streaming wrapper over [`Fleet`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FrontDoorOpts {
+    /// Target inter-token latency (seconds). When set, the dispatcher caps
+    /// concurrent decodes per cartridge from measured wave latency, and
+    /// [`adaptive_prefill`](FrontDoorOpts::adaptive_prefill) retargets the
+    /// prefill chunk against this budget.
+    pub target_itl_s: Option<f64>,
+    /// Queue-wait SLO budget (seconds). When set, streaming submissions
+    /// whose projected wait exceeds it are rejected with
+    /// [`SubmitError::Overloaded`]. Unset ⇒ never shed.
+    pub queue_budget_s: Option<f64>,
+    /// Retarget each cartridge's prefill chunk budget from measured wave
+    /// latency (requires [`target_itl_s`](FrontDoorOpts::target_itl_s)).
+    pub adaptive_prefill: bool,
+}
+
+/// Streaming, SLO-aware ingress over a [`Fleet`] — see the
+/// [module docs](self) for the architecture and `docs/serving-front-door.md`
+/// for the full serving contract.
+///
+/// ```
+/// use ita::config::ModelConfig;
+/// use ita::coordinator::engine::Engine;
+/// use ita::coordinator::frontdoor::{FrontDoor, FrontDoorOpts};
+/// use ita::coordinator::request::GenRequest;
+/// use ita::coordinator::scheduler::SchedulerOpts;
+/// use ita::coordinator::stream::StreamItem;
+///
+/// let door = FrontDoor::start(
+///     2,
+///     |_id| Ok(Engine::synthetic(&ModelConfig::TINY, 8)),
+///     SchedulerOpts::default(),
+///     FrontDoorOpts::default(),
+/// )
+/// .unwrap();
+///
+/// let mut stream = door.submit(GenRequest::greedy(0, "hello ita", 8)).unwrap();
+/// let mut streamed = Vec::new();
+/// let result = loop {
+///     match stream.recv() {
+///         Some(StreamItem::Tokens(t)) => streamed.extend(t),
+///         Some(StreamItem::End(r)) => break *r,
+///         None => panic!("stream severed before completion"),
+///     }
+/// };
+/// // the incremental tokens concatenate to exactly the final output
+/// assert_eq!(streamed, result.tokens);
+/// door.shutdown().unwrap();
+/// ```
+pub struct FrontDoor {
+    fleet: Fleet,
+}
+
+impl FrontDoor {
+    /// Boot `n` cartridges behind a streaming front door with the default
+    /// least-loaded dispatch policy.
+    pub fn start<F, B>(
+        n: usize,
+        factory: F,
+        opts: SchedulerOpts,
+        door: FrontDoorOpts,
+    ) -> Result<FrontDoor>
+    where
+        B: Into<CartridgeEngines> + 'static,
+        F: Fn(CartridgeId) -> Result<B> + Send + Sync + 'static,
+    {
+        FrontDoor::with_dispatch(n, factory, opts, Box::new(LeastLoaded), door)
+    }
+
+    /// [`FrontDoor::start`] with an explicit [`Dispatch`] policy.
+    ///
+    /// Token streaming is forced on in the scheduler options — the front
+    /// door is precisely the consumer the scheduler's streaming buffer
+    /// exists for.
+    pub fn with_dispatch<F, B>(
+        n: usize,
+        factory: F,
+        mut opts: SchedulerOpts,
+        dispatch: Box<dyn Dispatch>,
+        door: FrontDoorOpts,
+    ) -> Result<FrontDoor>
+    where
+        B: Into<CartridgeEngines> + 'static,
+        F: Fn(CartridgeId) -> Result<B> + Send + Sync + 'static,
+    {
+        opts.stream_tokens = true;
+        Ok(FrontDoor { fleet: Fleet::boot(n, factory, opts, dispatch, door)? })
+    }
+
+    /// Submit with default [`QoS`] (standard priority, tenant 0).
+    pub fn submit(&self, req: GenRequest) -> Result<TokenStream, SubmitError> {
+        self.fleet.submit_stream(req, QoS::default())
+    }
+
+    /// Submit with an explicit [`QoS`] envelope. Subject to admission
+    /// control when a queue budget is configured; returns the token stream
+    /// only for admitted requests.
+    ///
+    /// ```
+    /// use ita::config::ModelConfig;
+    /// use ita::coordinator::engine::Engine;
+    /// use ita::coordinator::frontdoor::{FrontDoor, FrontDoorOpts, QoS};
+    /// use ita::coordinator::request::GenRequest;
+    /// use ita::coordinator::scheduler::SchedulerOpts;
+    ///
+    /// let door = FrontDoor::start(
+    ///     1,
+    ///     |_id| Ok(Engine::synthetic(&ModelConfig::TINY, 8)),
+    ///     SchedulerOpts::default(),
+    ///     FrontDoorOpts::default(),
+    /// )
+    /// .unwrap();
+    ///
+    /// let stream = door
+    ///     .submit_with(
+    ///         GenRequest::greedy(1, "deadline-sensitive", 64),
+    ///         QoS::interactive().for_tenant(42, 2),
+    ///     )
+    ///     .unwrap();
+    ///
+    /// // a watchdog can preempt from another thread at any time; the
+    /// // stream then ends with a partial result marked Cancelled
+    /// let watchdog = stream.cancel_handle();
+    /// watchdog.cancel();
+    /// let partial = stream.wait().unwrap();
+    /// assert_eq!(partial.finish, ita::coordinator::request::FinishReason::Cancelled);
+    /// door.shutdown().unwrap();
+    /// ```
+    pub fn submit_with(&self, req: GenRequest, qos: QoS) -> Result<TokenStream, SubmitError> {
+        self.fleet.submit_stream(req, qos)
+    }
+
+    /// The wrapped fleet, for unary submission, explicit migration, or
+    /// anything else the streaming surface doesn't cover.
+    pub fn fleet(&self) -> &Fleet {
+        &self.fleet
+    }
+
+    /// Number of cartridges behind the door.
+    pub fn cartridges(&self) -> usize {
+        self.fleet.cartridges()
+    }
+
+    /// Aggregated fleet metrics (includes `shed_requests` /
+    /// `cancelled_requests`).
+    pub fn metrics(&self) -> Result<FleetMetrics> {
+        self.fleet.metrics()
+    }
+
+    /// Drain in-flight work and stop every cartridge.
+    pub fn shutdown(self) -> Result<FleetMetrics> {
+        self.fleet.shutdown()
+    }
+
+    /// [`FrontDoor::shutdown`], also returning the fleet-wide trace.
+    pub fn shutdown_traced(self) -> Result<(FleetMetrics, FleetTrace)> {
+        self.fleet.shutdown_traced()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qos_constructors_and_ordering() {
+        assert!(Priority::Interactive < Priority::Standard);
+        assert!(Priority::Standard < Priority::Batch);
+        let q = QoS::default();
+        assert_eq!((q.priority, q.tenant, q.weight), (Priority::Standard, 0, 1));
+        assert_eq!(QoS::interactive().priority, Priority::Interactive);
+        assert_eq!(QoS::batch().priority, Priority::Batch);
+        let t = QoS::batch().for_tenant(7, 0);
+        assert_eq!((t.tenant, t.weight), (7, 1), "weight 0 clamps to 1");
+    }
+
+    #[test]
+    fn submit_error_displays_the_slo_math() {
+        let e = SubmitError::Overloaded { projected_wait_s: 1.25, budget_s: 0.5 };
+        let msg = e.to_string();
+        assert!(msg.contains("1.250"), "{msg}");
+        assert!(msg.contains("0.500"), "{msg}");
+        assert_eq!(SubmitError::Closed.to_string(), "fleet is shut down");
+    }
+
+    #[test]
+    fn default_opts_are_fully_permissive() {
+        let o = FrontDoorOpts::default();
+        assert!(o.target_itl_s.is_none());
+        assert!(o.queue_budget_s.is_none());
+        assert!(!o.adaptive_prefill);
+    }
+}

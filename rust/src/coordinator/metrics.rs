@@ -95,6 +95,38 @@ impl GapHistogram {
         self.count
     }
 
+    /// The samples recorded since `earlier` was snapshotted: per-bucket
+    /// saturating subtraction. Histograms are cumulative for the life of a
+    /// cartridge, so controllers that want *interval* percentiles (e.g. the
+    /// adaptive-prefill loop reading recent `itl_step` latency) diff the
+    /// current histogram against the copy they kept from the last tick.
+    /// Saturating: if `earlier` is not actually a prefix of `self` (merged
+    /// from different sources), buckets clamp at 0 instead of wrapping.
+    pub fn diff(&self, earlier: &GapHistogram) -> GapHistogram {
+        let mut out = GapHistogram::default();
+        for (i, (a, b)) in self.buckets.iter().zip(&earlier.buckets).enumerate() {
+            out.buckets[i] = a.saturating_sub(*b);
+        }
+        out.count = out.buckets.iter().sum();
+        out
+    }
+
+    /// Mean of the bucket upper edges weighted by count, in seconds —
+    /// a cheap central estimate for controllers (within 2× like the
+    /// percentiles; 0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let sum: f64 = self
+            .buckets
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| c as f64 * 2f64.powi(i as i32 + 1) * 1e-6)
+            .sum();
+        sum / self.count as f64
+    }
+
     /// Percentile in [0, 100]: the upper edge, in seconds, of the bucket
     /// holding that rank (0.0 when empty).
     pub fn percentile(&self, p: f64) -> f64 {
@@ -196,6 +228,12 @@ pub struct ServingMetrics {
     pub resumed_requests: u64,
     /// Requests this cartridge exported to another mid-decode.
     pub migrated_out: u64,
+    /// Requests preempted mid-flight on this cartridge by a client cancel:
+    /// the scheduler evicted the rows and freed the KV pages before the
+    /// request finished ([`Scheduler::cancel`]).
+    ///
+    /// [`Scheduler::cancel`]: super::scheduler::Scheduler::cancel
+    pub preempted_requests: u64,
     /// Device waves that carried BOTH decode rows and prefill-chunk rows —
     /// iteration-level continuous batching at work. Note this counts wave
     /// *composition*, not the chunking policy: even run-to-completion
@@ -321,6 +359,7 @@ impl ServingMetrics {
             restored_tokens: self.restored_tokens,
             resumed_requests: self.resumed_requests,
             migrated_out: self.migrated_out,
+            preempted_requests: self.preempted_requests,
             mixed_waves: self.mixed_waves,
             prefill_chunks: self.prefill_chunks,
             wall_s: self.wall_s,
@@ -362,6 +401,7 @@ impl ServingMetrics {
         self.restored_tokens += other.restored_tokens;
         self.resumed_requests += other.resumed_requests;
         self.migrated_out += other.migrated_out;
+        self.preempted_requests += other.preempted_requests;
         self.mixed_waves += other.mixed_waves;
         self.prefill_chunks += other.prefill_chunks;
         self.wall_s = self.wall_s.max(other.wall_s);
@@ -419,6 +459,7 @@ impl ServingMetrics {
             restored_tokens,
             resumed_requests,
             migrated_out,
+            preempted_requests,
             mixed_waves,
             prefill_chunks,
             wall_s,
@@ -452,6 +493,7 @@ impl ServingMetrics {
             ("restored_tokens", *restored_tokens as f64),
             ("resumed_requests", *resumed_requests as f64),
             ("migrated_out", *migrated_out as f64),
+            ("preempted_requests", *preempted_requests as f64),
             ("mixed_waves", *mixed_waves as f64),
             ("prefill_chunks", *prefill_chunks as f64),
             ("wall_s", *wall_s),
@@ -492,7 +534,7 @@ impl ServingMetrics {
     pub fn report(&self) -> String {
         format!(
             "requests={} prefill_tokens={} prefill_skipped={} restored={} resumed={} \
-             migrated_out={} decode_tokens={} mixed_waves={} prefill_chunks={} \
+             migrated_out={} preempted={} decode_tokens={} mixed_waves={} prefill_chunks={} \
              spec_proposed={} spec_accepted={} spec_rollbacks={} spec_accept_rate={:.2} \
              wall={:.2}s decode_throughput={:.1} tok/s ttft_p50={:.1}ms ttft_p95={:.1}ms \
              itl_p50={:.2}ms itl_p95={:.2}ms itl_step_p99={:.2}ms queue_p99={:.1}ms \
@@ -504,6 +546,7 @@ impl ServingMetrics {
             self.restored_tokens,
             self.resumed_requests,
             self.migrated_out,
+            self.preempted_requests,
             self.tokens_generated,
             self.mixed_waves,
             self.prefill_chunks,
@@ -566,6 +609,13 @@ pub struct FleetMetrics {
     /// Requeued requests that resumed from their last decode checkpoint
     /// instead of restarting at prefill (panic recovery).
     pub checkpoint_resumes: u64,
+    /// Requests rejected by admission control before they ever queued
+    /// (projected queue wait exceeded the class SLO budget). A shed
+    /// request never reaches a device.
+    pub shed_requests: u64,
+    /// Requests cancelled by their client (explicit cancel or a dropped
+    /// token stream) — whether still queued or already in flight.
+    pub cancelled_requests: u64,
     /// Dispatcher wall clock.
     pub wall_s: f64,
 }
@@ -585,13 +635,15 @@ impl FleetMetrics {
     pub fn report(&self) -> String {
         let mut out = format!(
             "fleet: {} cartridges ({} alive), requeued={} failed={} migrations={} \
-             checkpoint_resumes={}\n",
+             checkpoint_resumes={} shed={} cancelled={}\n",
             self.cartridges.len(),
             self.cartridges.iter().filter(|c| c.alive).count(),
             self.requeued_requests,
             self.failed_requests,
             self.migrations,
             self.checkpoint_resumes,
+            self.shed_requests,
+            self.cancelled_requests,
         );
         for c in &self.cartridges {
             out.push_str(&format!(
@@ -652,6 +704,8 @@ impl MetricsRegistry {
             ("fleet_failed_requests", self.fleet.failed_requests as f64),
             ("fleet_migrations", self.fleet.migrations as f64),
             ("fleet_checkpoint_resumes", self.fleet.checkpoint_resumes as f64),
+            ("fleet_shed_requests", self.fleet.shed_requests as f64),
+            ("fleet_cancelled_requests", self.fleet.cancelled_requests as f64),
             ("fleet_wall_s", self.fleet.wall_s),
         ];
         let agg = self.fleet.aggregate();
@@ -901,6 +955,37 @@ mod tests {
     }
 
     #[test]
+    fn gap_histogram_diff_yields_interval_samples() {
+        // cumulative histogram at t0, more samples by t1: diff isolates the
+        // interval — the controller input for adaptive prefill
+        let mut h = GapHistogram::default();
+        h.record(100e-6);
+        h.record(100e-6);
+        let snap = h.clone();
+        h.record(1.0);
+        h.record(1.0);
+        h.record(1.0);
+        let d = h.diff(&snap);
+        assert_eq!(d.count(), 3);
+        // the interval was all slow samples; the old fast ones are gone
+        assert!(d.percentile(0.0) >= 1.0, "p0 = {}", d.percentile(0.0));
+        // diff against a non-prefix saturates instead of wrapping
+        let mut other = GapHistogram::default();
+        for _ in 0..10 {
+            other.record(100e-6);
+        }
+        let sat = h.diff(&other);
+        assert_eq!(sat.count(), 3, "fast bucket clamped at 0, slow kept");
+        // empty diff empty is empty; mean of empty is 0
+        assert_eq!(GapHistogram::default().diff(&GapHistogram::default()).count(), 0);
+        assert_eq!(GapHistogram::default().mean(), 0.0);
+        // mean is the count-weighted bucket upper edge (within 2x)
+        let mut m = GapHistogram::default();
+        m.record(100e-6);
+        assert!(m.mean() >= 100e-6 && m.mean() <= 400e-6, "mean = {}", m.mean());
+    }
+
+    #[test]
     fn ratio_histogram_buckets_means_and_merges() {
         let mut h = RatioHistogram::default();
         assert_eq!(h.mean(), 0.0);
@@ -1111,6 +1196,7 @@ mod tests {
             restored_tokens: 5,
             resumed_requests: 2,
             migrated_out: 1,
+            preempted_requests: 4,
             mixed_waves: 7,
             prefill_chunks: 13,
             wall_s: 2.5,

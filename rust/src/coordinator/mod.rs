@@ -69,7 +69,24 @@
 //!   [`FleetTrace`](trace::FleetTrace) that exports a Chrome/Perfetto
 //!   timeline and a flight-recorder dump of the slowest requests
 //!   (`docs/observability.md`).
-//! * [`workload`] — deterministic synthetic workloads for benches/examples.
+//! * [`frontdoor`] — the overload-grade async front door over the fleet:
+//!   streaming submission ([`FrontDoor::submit`](frontdoor::FrontDoor::submit)
+//!   returns a [`TokenStream`](stream::TokenStream) fed from per-step worker
+//!   token batches), priority classes + per-tenant weighted fairness in the
+//!   admission queue ([`QoS`](frontdoor::QoS)), admission-control shedding
+//!   against a queue-wait SLO budget (typed
+//!   [`SubmitError::Overloaded`](frontdoor::SubmitError) with the projected
+//!   wait), and a Sarathi-style adaptive prefill budget solved from measured
+//!   wave latency. The serving contract is `docs/serving-front-door.md`.
+//! * [`stream`] — the client half of the front door:
+//!   [`TokenStream`](stream::TokenStream) /
+//!   [`StreamItem`](stream::StreamItem) with exactly-once token delivery
+//!   (including across cartridge failover), and idempotent
+//!   [`CancelHandle`](stream::CancelHandle)s; dropping an unfinished stream
+//!   cancels the request server-side (disconnect IS cancellation).
+//! * [`workload`] — deterministic synthetic workloads for benches/examples:
+//!   closed/Poisson/bursty/diurnal arrivals, heavy-tail prompt mixes, and
+//!   trace replay for overload benchmarking.
 //!
 //! ## Test tiers
 //!
@@ -88,12 +105,14 @@
 pub mod batcher;
 pub mod engine;
 pub mod fleet;
+pub mod frontdoor;
 pub mod metrics;
 pub mod pipeline;
 pub mod request;
 pub mod scheduler;
 pub mod server;
 pub mod spec;
+pub mod stream;
 pub mod trace;
 pub mod worker;
 pub mod workload;
@@ -103,6 +122,7 @@ pub use fleet::{
     Dispatch, EnergyAware, Fleet, LeastLoaded, PrefixAffinity, Rebalance, ResultHandle,
     RoundRobin,
 };
+pub use frontdoor::{FrontDoor, FrontDoorOpts, Priority, QoS, SubmitError};
 pub use metrics::{
     CartridgeMetrics, FleetMetrics, MetricsRegistry, MetricsSnapshot, ServingMetrics,
 };
@@ -110,5 +130,6 @@ pub use pipeline::PipelineEngine;
 pub use request::{DecodeCheckpoint, GenRequest, GenResult};
 pub use server::Server;
 pub use spec::{CartridgeEngines, SpecOpts};
+pub use stream::{CancelHandle, StreamItem, TokenStream};
 pub use trace::{FleetTrace, TraceEvent, TraceKind, TraceRecorder};
 pub use worker::{CartridgeId, CheckpointReport, Worker, WorkerEvent, WorkerMsg};

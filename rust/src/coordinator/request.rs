@@ -60,6 +60,10 @@ pub enum FinishReason {
     MaxTokens,
     Eos,
     Error,
+    /// The client cancelled (or its token stream was dropped) before the
+    /// request finished; [`GenResult::tokens`] holds the partial output
+    /// committed before the preemption landed.
+    Cancelled,
 }
 
 /// Everything another cartridge needs to continue a request mid-decode:

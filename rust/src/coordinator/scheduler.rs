@@ -115,6 +115,11 @@ pub struct SchedulerOpts {
     /// spawning workers so cross-cartridge timestamps are comparable;
     /// `None` (the standalone default) anchors at scheduler construction.
     pub trace_epoch: Option<Instant>,
+    /// Buffer committed tokens per step for streaming delivery
+    /// ([`Scheduler::take_streamed`]). The front door turns these into
+    /// per-request token streams; off (the default) nothing is buffered
+    /// and completion-only serving pays nothing.
+    pub stream_tokens: bool,
 }
 
 impl Default for SchedulerOpts {
@@ -127,6 +132,7 @@ impl Default for SchedulerOpts {
             spec: SpecOpts::default(),
             trace_capacity: 0,
             trace_epoch: None,
+            stream_tokens: false,
         }
     }
 }
@@ -223,6 +229,10 @@ pub struct Scheduler {
     /// Monotone wave sequence number — the join key between `Wave` spans
     /// and the `Tokens` events attributing committed tokens to them.
     wave_seq: u64,
+    /// Tokens committed since the last [`take_streamed`](Self::take_streamed)
+    /// drain, per wire ticket — only populated when
+    /// [`SchedulerOpts::stream_tokens`] is on.
+    streamed: Vec<(u64, Vec<u32>)>,
     /// Modeled energy per MAC (pJ) for the ITA operating point
     /// ([`EnergyParams::ita`](crate::energy::EnergyParams::ita)); scales
     /// device MAC counts into [`ServingMetrics::energy_j`].
@@ -280,6 +290,7 @@ impl Scheduler {
             started: Instant::now(),
             trace,
             wave_seq: 0,
+            streamed: Vec::new(),
             pj_per_mac: crate::energy::EnergyParams::default().ita().total_pj(),
         }
     }
@@ -585,6 +596,9 @@ impl Scheduler {
             let n = toks.len() as u64;
             self.metrics.tokens_generated += n;
             let a = &mut self.active[*i];
+            if self.opts.stream_tokens {
+                self.streamed.push((a.req.id, toks.clone()));
+            }
             a.generated.extend_from_slice(toks);
             a.next_token = *toks.last().expect("sampled entries are non-empty");
             if *first {
@@ -889,6 +903,110 @@ impl Scheduler {
             spec_accepted: a.spec_accepted,
         };
         Some((a.req, Some(ckpt)))
+    }
+
+    /// First-class preemption: remove the request with wire id `ticket`
+    /// from the queue or the active set, free its KV pages, and return a
+    /// partial [`GenResult`] ([`FinishReason::Cancelled`]) holding whatever
+    /// output was committed before the cancel landed. `None` when the
+    /// ticket is unknown or already completed — callers treat that as a
+    /// benign race with completion.
+    ///
+    /// Cancellation is the eviction half of [`export`](Self::export) minus
+    /// the checkpoint: the sequence's KV pages and draft shadow are
+    /// dropped, surviving requests are untouched, and the freed slot
+    /// admits queued work on the next step.
+    pub fn cancel(&mut self, ticket: u64) -> Option<GenResult> {
+        let now = Instant::now();
+        if let Some(i) = self.queue.iter().position(|e| e.id() == ticket) {
+            let (req, prompt_tokens, generated, sp, sa, enq) = match self.queue.remove(i) {
+                Some(QueueEntry::Fresh(req, enq)) => {
+                    let n = self.tokenizer.encode(&req.prompt).len();
+                    (req, n, Vec::new(), 0, 0, enq)
+                }
+                // a queued checkpoint holds its KV by value — dropping the
+                // entry is the whole eviction
+                Some(QueueEntry::Resume(req, ckpt, enq)) => {
+                    let n = ckpt.prompt.len();
+                    (req, n, ckpt.generated, ckpt.spec_proposed, ckpt.spec_accepted, enq)
+                }
+                None => return None,
+            };
+            self.metrics.preempted_requests += 1;
+            if self.trace.enabled() {
+                let mut ev = TraceEvent::at(self.trace.ts_us(now), TraceKind::Preempt);
+                ev.req = req.id;
+                ev.a = generated.len() as u64;
+                self.trace.record(ev);
+            }
+            let total = now.duration_since(enq).as_secs_f64();
+            return Some(GenResult {
+                id: req.id,
+                prompt_tokens,
+                skipped_prompt_tokens: 0,
+                text: self.tokenizer.decode(&generated),
+                tokens: generated,
+                spec_proposed: sp,
+                spec_accepted: sa,
+                ttft_s: 0.0,
+                itl_s: 0.0,
+                total_s: total,
+                finish: FinishReason::Cancelled,
+            });
+        }
+        let i = self.active.iter().position(|a| a.req.id == ticket)?;
+        // stable removal, as everywhere else: admission order is preserved
+        let a = self.active.remove(i);
+        if let Some(spec) = self.spec.as_mut() {
+            spec.drop_seq(a.seq);
+        }
+        let kv_rows = self.engine.seq_len(a.seq) as u64;
+        self.engine.free_sequence(a.seq);
+        self.metrics.preempted_requests += 1;
+        if self.trace.enabled() {
+            let mut ev = TraceEvent::at(self.trace.ts_us(now), TraceKind::Preempt);
+            ev.req = a.req.id;
+            ev.a = a.generated.len() as u64;
+            ev.b = kv_rows;
+            self.trace.record(ev);
+        }
+        Some(GenResult {
+            id: a.req.id,
+            prompt_tokens: a.prompt.len(),
+            skipped_prompt_tokens: a.skipped,
+            text: self.tokenizer.decode(&a.generated),
+            tokens: a.generated,
+            spec_proposed: a.spec_proposed,
+            spec_accepted: a.spec_accepted,
+            ttft_s: a
+                .first_token_at
+                .map(|t| t.duration_since(a.enqueued).as_secs_f64())
+                .unwrap_or(0.0),
+            itl_s: 0.0,
+            total_s: now.duration_since(a.enqueued).as_secs_f64(),
+            finish: FinishReason::Cancelled,
+        })
+    }
+
+    /// Replace the prefill chunk budget for subsequent steps — the
+    /// adaptive-prefill controller's knob (0 = run-to-completion prefill).
+    /// Takes effect at the next step's row composition; in-flight chunks
+    /// are unaffected.
+    pub fn set_prefill_chunk(&mut self, n: usize) {
+        self.opts.prefill_chunk_tokens = n;
+    }
+
+    /// Current prefill chunk budget (tokens per step; 0 = unchunked).
+    pub fn prefill_chunk_tokens(&self) -> usize {
+        self.opts.prefill_chunk_tokens
+    }
+
+    /// Drain the tokens committed since the last drain, per wire ticket.
+    /// Always empty unless [`SchedulerOpts::stream_tokens`] is on. The
+    /// worker drains after every step and forwards the batches to the
+    /// dispatcher, which fans them out to per-request token streams.
+    pub fn take_streamed(&mut self) -> Vec<(u64, Vec<u32>)> {
+        std::mem::take(&mut self.streamed)
     }
 
     /// By-value decode checkpoints of every request that has started
@@ -1528,5 +1646,90 @@ mod tests {
         assert!(m.wall_s > 0.0);
         assert!(m.interface_bytes > 0);
         assert!(m.device_macs > 0);
+    }
+
+    #[test]
+    fn cancel_mid_decode_frees_kv_and_leaves_survivors_byte_identical() {
+        let tiny = crate::config::ModelConfig::TINY;
+        let opts = SchedulerOpts::default();
+        // uncontended reference run for the surviving request
+        let mut survivor = GenRequest::greedy(1, "the survivor", 12);
+        survivor.stop_at_eos = false;
+        let mut solo = Scheduler::new(Engine::synthetic(&tiny, 6), opts);
+        solo.submit(survivor.clone());
+        let want = solo.run_to_completion().unwrap().remove(0);
+
+        let mut s = Scheduler::new(Engine::synthetic(&tiny, 6), opts);
+        let mut victim = GenRequest::greedy(0, "cancel me please", 64);
+        victim.stop_at_eos = false;
+        s.submit(victim);
+        s.submit(survivor);
+        for _ in 0..4 {
+            s.step().unwrap();
+        }
+        let partial = s.cancel(0).expect("victim is in flight");
+        assert_eq!(partial.finish, FinishReason::Cancelled);
+        assert!(!partial.tokens.is_empty(), "decode had started before the cancel");
+        assert_eq!(s.metrics().preempted_requests, 1);
+        // unknown / already-cancelled tickets are a benign no-op
+        assert!(s.cancel(0).is_none());
+        assert!(s.cancel(99).is_none());
+        let got = s.run_to_completion().unwrap().remove(0);
+        assert_eq!(got.tokens, want.tokens, "cancel disturbed a survivor");
+        // every KV page came back, the victim's included
+        assert_eq!(s.engine().cache_stats().2, 0);
+    }
+
+    #[test]
+    fn cancel_while_queued_returns_empty_partial() {
+        let tiny = crate::config::ModelConfig::TINY;
+        let opts = SchedulerOpts { max_active: 1, ..SchedulerOpts::default() };
+        let mut s = Scheduler::new(Engine::synthetic(&tiny, 6), opts);
+        s.submit(GenRequest::greedy(0, "occupies the only slot", 8));
+        s.submit(GenRequest::greedy(1, "never admitted", 8));
+        s.step().unwrap(); // admits request 0 only
+        let r = s.cancel(1).expect("request 1 is still queued");
+        assert_eq!(r.finish, FinishReason::Cancelled);
+        assert!(r.tokens.is_empty());
+        assert!(r.prompt_tokens > 0);
+        assert_eq!(s.run_to_completion().unwrap().len(), 1);
+        assert_eq!(s.engine().cache_stats().2, 0);
+    }
+
+    #[test]
+    fn streamed_tokens_concatenate_to_final_output() {
+        let tiny = crate::config::ModelConfig::TINY;
+        let opts = SchedulerOpts { stream_tokens: true, ..SchedulerOpts::default() };
+        let mut s = Scheduler::new(Engine::synthetic(&tiny, 4), opts);
+        s.submit(GenRequest::greedy(0, "stream me", 9));
+        s.submit(GenRequest::greedy(1, "and me too", 7));
+        let mut streamed: std::collections::HashMap<u64, Vec<u32>> = Default::default();
+        let mut done = Vec::new();
+        while s.pending() > 0 {
+            done.extend(s.step().unwrap());
+            for (id, toks) in s.take_streamed() {
+                streamed.entry(id).or_default().extend(toks);
+            }
+        }
+        assert_eq!(done.len(), 2);
+        for r in &done {
+            assert_eq!(streamed[&r.id], r.tokens, "stream diverged for request {}", r.id);
+        }
+        assert!(s.take_streamed().is_empty(), "drain must reset the buffer");
+    }
+
+    #[test]
+    fn set_prefill_chunk_applies_to_subsequent_steps() {
+        let tiny = crate::config::ModelConfig::TINY;
+        let opts = SchedulerOpts { prefill_chunk_tokens: 4, ..SchedulerOpts::default() };
+        let mut s = Scheduler::new(Engine::synthetic(&tiny, 6), opts);
+        assert_eq!(s.prefill_chunk_tokens(), 4);
+        s.submit(GenRequest::greedy(0, "a long prompt that prefills over several chunks", 2));
+        s.step().unwrap(); // one 4-token chunk under the old budget
+        assert_eq!(s.active[0].prefilled, 4);
+        s.set_prefill_chunk(0); // unchunked: the rest runs in one wave
+        s.step().unwrap();
+        let a = &s.active[0];
+        assert_eq!(a.prefilled, a.prompt.len());
     }
 }

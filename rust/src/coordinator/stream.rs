@@ -1,0 +1,274 @@
+//! Per-request token streams and cancellation handles — the client half of
+//! the front door ([`frontdoor`](super::frontdoor)).
+//!
+//! A [`TokenStream`] is fed by the dispatcher from per-step
+//! [`WorkerEvent::Tokens`](super::worker::WorkerEvent::Tokens) batches and
+//! terminates with exactly one [`StreamItem::End`] carrying the full
+//! [`GenResult`]. Dropping an unfinished stream cancels the request — a
+//! disconnected client must not keep burning decode waves — and an explicit
+//! [`CancelHandle`] offers the same preemption without dropping the stream,
+//! so the partial result can still be observed.
+//!
+//! The contract (ordering, replay-after-failover, cancellation guarantees)
+//! is specified in `docs/serving-front-door.md`.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, TryRecvError};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use super::request::GenResult;
+
+/// One item of a request's token stream.
+#[derive(Debug)]
+pub enum StreamItem {
+    /// Tokens committed by one scheduler step, in generation order (never
+    /// empty). Batching per step keeps channel traffic O(waves) rather
+    /// than O(tokens).
+    Tokens(Vec<u32>),
+    /// Terminal item: the request's complete [`GenResult`]. `tokens`
+    /// inside it is the authoritative full output — the concatenation of
+    /// every prior [`StreamItem::Tokens`] equals it (exactly-once token
+    /// delivery, including across cartridge failover). `finish` reports
+    /// [`Cancelled`](super::request::FinishReason::Cancelled) when the
+    /// request was preempted, [`Error`](super::request::FinishReason::Error)
+    /// when the fleet lost every cartridge.
+    End(Box<GenResult>),
+}
+
+struct CancelInner {
+    fire: Box<dyn Fn() + Send + Sync>,
+    fired: AtomicBool,
+}
+
+/// Idempotent, clonable cancellation handle for one in-flight request.
+///
+/// The first [`cancel`](CancelHandle::cancel) (from any clone — including
+/// the implicit one when an unfinished [`TokenStream`] is dropped) asks the
+/// fleet to preempt the request: its KV pages are freed and the stream ends
+/// with a partial result marked
+/// [`Cancelled`](super::request::FinishReason::Cancelled). Cancelling a
+/// request that already completed is a benign no-op — the stream ends with
+/// the finished result instead.
+pub struct CancelHandle {
+    inner: Arc<CancelInner>,
+}
+
+impl Clone for CancelHandle {
+    fn clone(&self) -> CancelHandle {
+        CancelHandle { inner: Arc::clone(&self.inner) }
+    }
+}
+
+impl CancelHandle {
+    pub(crate) fn new(fire: impl Fn() + Send + Sync + 'static) -> CancelHandle {
+        CancelHandle {
+            inner: Arc::new(CancelInner { fire: Box::new(fire), fired: AtomicBool::new(false) }),
+        }
+    }
+
+    /// Request preemption. Only the first call (across all clones) sends
+    /// anything; the rest are no-ops.
+    pub fn cancel(&self) {
+        if !self.inner.fired.swap(true, Ordering::SeqCst) {
+            (self.inner.fire)();
+        }
+    }
+
+    /// Whether any clone of this handle has fired.
+    pub fn is_cancelled(&self) -> bool {
+        self.inner.fired.load(Ordering::SeqCst)
+    }
+}
+
+/// Receiving half of one request's token stream (see [`StreamItem`]).
+///
+/// Dropping the stream before its [`StreamItem::End`] arrived cancels the
+/// request — disconnect IS cancellation, the serving contract's core
+/// guarantee. Use [`wait`](TokenStream::wait) to drain to completion, or
+/// [`recv`](TokenStream::recv)/[`try_recv`](TokenStream::try_recv) to
+/// consume incrementally.
+pub struct TokenStream {
+    rx: Receiver<StreamItem>,
+    cancel: CancelHandle,
+    done: bool,
+}
+
+impl TokenStream {
+    pub(crate) fn new(rx: Receiver<StreamItem>, cancel: CancelHandle) -> TokenStream {
+        TokenStream { rx, cancel, done: false }
+    }
+
+    /// A cancellation handle for this request, usable from any thread
+    /// (e.g. a timeout watchdog) while this stream keeps being consumed.
+    pub fn cancel_handle(&self) -> CancelHandle {
+        self.cancel.clone()
+    }
+
+    /// Block for the next item. Returns `None` after the terminal
+    /// [`StreamItem::End`] was delivered, or if the fleet went away
+    /// without ever finishing the request.
+    pub fn recv(&mut self) -> Option<StreamItem> {
+        if self.done {
+            return None;
+        }
+        match self.rx.recv() {
+            Ok(item) => {
+                if matches!(item, StreamItem::End(_)) {
+                    self.done = true;
+                }
+                Some(item)
+            }
+            Err(_) => {
+                self.done = true;
+                None
+            }
+        }
+    }
+
+    /// Non-blocking [`recv`](TokenStream::recv): `None` when no item is
+    /// ready right now (or the stream is finished).
+    pub fn try_recv(&mut self) -> Option<StreamItem> {
+        if self.done {
+            return None;
+        }
+        match self.rx.try_recv() {
+            Ok(item) => {
+                if matches!(item, StreamItem::End(_)) {
+                    self.done = true;
+                }
+                Some(item)
+            }
+            Err(TryRecvError::Empty) => None,
+            Err(TryRecvError::Disconnected) => {
+                self.done = true;
+                None
+            }
+        }
+    }
+
+    /// Drain the stream to completion and return the final result —
+    /// equivalent to [`ResultHandle::wait`](super::fleet::ResultHandle::wait)
+    /// for clients that don't care about incremental tokens.
+    pub fn wait(mut self) -> Result<GenResult> {
+        while let Some(item) = self.recv() {
+            if let StreamItem::End(r) = item {
+                return Ok(*r);
+            }
+        }
+        Err(anyhow!("stream closed before the request completed"))
+    }
+}
+
+impl Drop for TokenStream {
+    fn drop(&mut self) {
+        // disconnect IS cancellation: a stream dropped before End means
+        // nobody is reading this request's tokens anymore
+        if !self.done {
+            self.cancel.cancel();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::mpsc::channel;
+
+    use super::*;
+
+    fn counted_handle() -> (CancelHandle, Arc<AtomicUsize>) {
+        let fires = Arc::new(AtomicUsize::new(0));
+        let f = Arc::clone(&fires);
+        let h = CancelHandle::new(move || {
+            f.fetch_add(1, Ordering::SeqCst);
+        });
+        (h, fires)
+    }
+
+    #[test]
+    fn cancel_fires_exactly_once_across_clones() {
+        let (h, fires) = counted_handle();
+        let h2 = h.clone();
+        assert!(!h.is_cancelled());
+        h.cancel();
+        h2.cancel();
+        h.cancel();
+        assert_eq!(fires.load(Ordering::SeqCst), 1);
+        assert!(h2.is_cancelled());
+    }
+
+    #[test]
+    fn dropping_an_unfinished_stream_cancels() {
+        let (h, fires) = counted_handle();
+        let (_tx, rx) = channel();
+        drop(TokenStream::new(rx, h));
+        assert_eq!(fires.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn finished_stream_does_not_cancel_on_drop() {
+        let (h, fires) = counted_handle();
+        let (tx, rx) = channel();
+        let mut s = TokenStream::new(rx, h);
+        tx.send(StreamItem::Tokens(vec![1, 2])).unwrap();
+        tx.send(StreamItem::End(Box::new(crate::coordinator::request::GenResult {
+            id: 0,
+            prompt_tokens: 1,
+            skipped_prompt_tokens: 0,
+            tokens: vec![1, 2],
+            text: String::new(),
+            spec_proposed: 0,
+            spec_accepted: 0,
+            ttft_s: 0.0,
+            itl_s: 0.0,
+            total_s: 0.0,
+            finish: crate::coordinator::request::FinishReason::MaxTokens,
+        })))
+        .unwrap();
+        assert!(matches!(s.recv(), Some(StreamItem::Tokens(t)) if t == vec![1, 2]));
+        assert!(matches!(s.recv(), Some(StreamItem::End(_))));
+        assert!(s.recv().is_none(), "stream is exhausted after End");
+        drop(s);
+        assert_eq!(fires.load(Ordering::SeqCst), 0, "completed stream must not cancel");
+    }
+
+    #[test]
+    fn wait_returns_the_final_result() {
+        let (h, fires) = counted_handle();
+        let (tx, rx) = channel();
+        let s = TokenStream::new(rx, h);
+        tx.send(StreamItem::Tokens(vec![7])).unwrap();
+        tx.send(StreamItem::End(Box::new(crate::coordinator::request::GenResult {
+            id: 9,
+            prompt_tokens: 1,
+            skipped_prompt_tokens: 0,
+            tokens: vec![7],
+            text: String::new(),
+            spec_proposed: 0,
+            spec_accepted: 0,
+            ttft_s: 0.0,
+            itl_s: 0.0,
+            total_s: 0.0,
+            finish: crate::coordinator::request::FinishReason::Eos,
+        })))
+        .unwrap();
+        let r = s.wait().unwrap();
+        assert_eq!(r.id, 9);
+        assert_eq!(fires.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn severed_channel_ends_the_stream_and_wait_errors() {
+        let (h, _fires) = counted_handle();
+        let (tx, rx) = channel::<StreamItem>();
+        drop(tx);
+        let mut s = TokenStream::new(rx, h);
+        assert!(s.recv().is_none());
+        let (h2, _fires2) = counted_handle();
+        let (tx2, rx2) = channel::<StreamItem>();
+        drop(tx2);
+        assert!(TokenStream::new(rx2, h2).wait().is_err());
+    }
+}

@@ -76,6 +76,18 @@ pub enum TraceKind {
     Migrate,
     /// Request finished. `a` = tokens generated, `b` = reported E2E (µs).
     Complete,
+    /// Client cancelled (or its stream disconnected). Recorded by the
+    /// dispatcher when the cancel lands. `a` = 1 if the request was already
+    /// placed on a cartridge, 0 if it was still queued.
+    Cancel,
+    /// Admission control rejected the request before it ever queued.
+    /// `a` = projected queue wait (µs), `b` = the SLO budget it exceeded
+    /// (µs). `req` is the *client* id — a shed request never gets a ticket.
+    Shed,
+    /// A cancel reached the scheduler mid-flight: the request's rows were
+    /// evicted and its KV pages freed. `a` = tokens generated at eviction,
+    /// `b` = KV rows freed.
+    Preempt,
 }
 
 impl TraceKind {
@@ -98,6 +110,9 @@ impl TraceKind {
             TraceKind::Resume => "resume",
             TraceKind::Migrate => "migrate",
             TraceKind::Complete => "complete",
+            TraceKind::Cancel => "cancel",
+            TraceKind::Shed => "shed",
+            TraceKind::Preempt => "preempt",
         }
     }
 
@@ -303,7 +318,7 @@ impl FleetTrace {
                 TraceKind::StageSpan => {
                     (TID_STAGE_BASE + ev.a, format!("stage {}", ev.a))
                 }
-                TraceKind::Checkpoint | TraceKind::Migrate => {
+                TraceKind::Checkpoint | TraceKind::Migrate | TraceKind::Shed => {
                     (TID_CONTROL, "control".to_string())
                 }
                 _ => (TID_REQ_BASE + ev.req, format!("req {}", ev.req)),
@@ -416,6 +431,15 @@ impl FleetTrace {
             }
             TraceKind::Complete => {
                 args.num("tokens", ev.a).num("total_us", ev.b);
+            }
+            TraceKind::Cancel => {
+                args.num("in_flight", ev.a);
+            }
+            TraceKind::Shed => {
+                args.num("projected_wait_us", ev.a).num("slo_budget_us", ev.b);
+            }
+            TraceKind::Preempt => {
+                args.num("tokens", ev.a).num("kv_rows_freed", ev.b);
             }
         }
         args.encode()

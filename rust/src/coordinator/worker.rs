@@ -61,6 +61,17 @@ pub enum WorkerMsg {
     /// periodic checkpoint's size, which is up to one checkpoint interval
     /// stale (see [`Scheduler::live_kv_bytes`]).
     SizeProbe(Sender<Vec<(u64, usize)>>),
+    /// First-class preemption: evict the request with this wire id (its KV
+    /// pages are freed, surviving requests untouched) and report the
+    /// partial output via [`WorkerEvent::Done`] with
+    /// [`FinishReason::Cancelled`](super::request::FinishReason::Cancelled).
+    /// Unknown or already-completed tickets are ignored — a benign race
+    /// with completion, the owner gets the finished result instead.
+    Cancel(u64),
+    /// Replace the scheduler's prefill chunk budget (tokens per step, 0 =
+    /// run-to-completion) — the fleet's adaptive-prefill controller steers
+    /// this against the ITL SLO.
+    SetPrefillChunk(usize),
     Snapshot(Sender<ServingMetrics>),
     /// Finish all accepted work, report final metrics via
     /// [`WorkerEvent::Drained`], and exit.
@@ -105,6 +116,11 @@ pub enum WorkerEvent {
     BootFailed(CartridgeId, String),
     /// One request finished.
     Done(CartridgeId, super::request::GenResult),
+    /// Tokens committed this step, per wire id — emitted only when
+    /// [`SchedulerOpts::stream_tokens`] is on. The dispatcher fans these
+    /// out to per-request token streams; batching per step keeps the event
+    /// channel traffic O(waves), not O(tokens).
+    Tokens(CartridgeId, Vec<(u64, Vec<u32>)>),
     /// Periodic checkpoint (see [`CheckpointReport`]). The owner keeps the
     /// latest one so a cartridge that later dies mid-request still
     /// contributes its counters to fleet aggregates, and its in-flight
@@ -266,6 +282,12 @@ fn worker_loop<E>(
                 Some(WorkerMsg::SizeProbe(tx)) => {
                     let _ = tx.send(sched.live_kv_bytes());
                 }
+                Some(WorkerMsg::Cancel(ticket)) => {
+                    if let Some(result) = sched.cancel(ticket) {
+                        let _ = events.send(wrap(WorkerEvent::Done(id, result)));
+                    }
+                }
+                Some(WorkerMsg::SetPrefillChunk(n)) => sched.set_prefill_chunk(n),
                 Some(WorkerMsg::Snapshot(tx)) => {
                     let _ = tx.send(sched.metrics());
                 }
@@ -277,6 +299,13 @@ fn worker_loop<E>(
         if sched.pending() > 0 {
             match sched.step() {
                 Ok(done) => {
+                    // stream committed tokens before the completions they
+                    // belong to, so a request's stream never sees its End
+                    // ahead of its final tokens
+                    let streamed = sched.take_streamed();
+                    if !streamed.is_empty() {
+                        let _ = events.send(wrap(WorkerEvent::Tokens(id, streamed)));
+                    }
                     let completed = !done.is_empty();
                     for result in done {
                         let _ = events.send(wrap(WorkerEvent::Done(id, result)));

@@ -1,10 +1,17 @@
-//! Synthetic serving-workload generator: arrival processes and
-//! prompt/output length distributions for the e2e driver and benches.
+//! Synthetic serving-workload generator and trace-replay load generator:
+//! arrival processes and prompt/output length distributions for the e2e
+//! driver, the overload bench, and the examples.
 //!
 //! Serving results are meaningless without a defined workload; this module
-//! pins ours: Poisson arrivals (or a closed loop), log-normal-ish prompt
-//! lengths drawn from a fixed corpus, geometric output lengths — all
-//! deterministic under a seed so every run in EXPERIMENTS.md is replayable.
+//! pins ours: closed-loop, Poisson, bursty (on/off), or diurnal (sinusoid)
+//! arrivals — the non-homogeneous ones sampled exactly by Poisson thinning —
+//! prompt lengths drawn uniformly or from a bounded-Pareto heavy tail over
+//! a fixed corpus, and geometric output lengths. Everything is
+//! deterministic under a seed so every run in EXPERIMENTS.md is replayable,
+//! and [`from_trace`]/[`parse_trace_csv`] replay captured arrival traces
+//! through the same prompt synthesis.
+
+use anyhow::{bail, Result};
 
 use crate::host::sampling::SamplingParams;
 use crate::host::tokenizer::ByteTokenizer;
@@ -13,12 +20,67 @@ use crate::util::prng::Prng;
 use super::request::GenRequest;
 
 /// Arrival process.
+///
+/// The time-varying shapes ([`Bursty`](Arrivals::Bursty),
+/// [`Diurnal`](Arrivals::Diurnal)) are sampled by **Poisson thinning**:
+/// candidate arrivals are drawn at the envelope rate `max(base, peak)` and
+/// each is accepted with probability `λ(t) / envelope`, which samples the
+/// exact non-homogeneous process rather than a per-bucket approximation.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Arrivals {
     /// All requests present at t=0 (offline / batch benchmark).
     Closed,
     /// Poisson with the given rate (req/s).
     Poisson(f64),
+    /// On/off bursts: `peak` req/s during the first `duty` fraction of
+    /// every `period_s`-second window, `base` req/s the rest of the time.
+    /// The overload bench uses this to slam the admission queue.
+    Bursty { base: f64, peak: f64, period_s: f64, duty: f64 },
+    /// Sinusoidal day/night swing: rate moves smoothly between `base`
+    /// (phase 0, trough) and `peak` (mid-period crest) over each
+    /// `period_s`-second cycle.
+    Diurnal { base: f64, peak: f64, period_s: f64 },
+}
+
+impl Arrivals {
+    /// Advance from arrival time `t` to the next arrival.
+    fn advance(self, t: f64, rng: &mut Prng) -> f64 {
+        match self {
+            Arrivals::Closed => t,
+            Arrivals::Poisson(rate) => t + rng.exponential(rate),
+            Arrivals::Bursty { base, peak, period_s, duty } => {
+                thin(t, base.max(peak), rng, |x| {
+                    let phase = (x / period_s.max(1e-9)).fract();
+                    if phase < duty {
+                        peak
+                    } else {
+                        base
+                    }
+                })
+            }
+            Arrivals::Diurnal { base, peak, period_s } => {
+                thin(t, base.max(peak), rng, |x| {
+                    let phase = (x / period_s.max(1e-9)).fract();
+                    let swell = 0.5 * (1.0 - (2.0 * std::f64::consts::PI * phase).cos());
+                    base + (peak - base) * swell
+                })
+            }
+        }
+    }
+}
+
+/// Poisson thinning: draw candidates at the envelope rate `cap`, accept
+/// each with probability `lambda(t) / cap`.
+fn thin(mut t: f64, cap: f64, rng: &mut Prng, lambda: impl Fn(f64) -> f64) -> f64 {
+    if cap <= 0.0 {
+        return t; // degenerate spec: no traffic ever accelerates
+    }
+    loop {
+        t += rng.exponential(cap);
+        if rng.uniform() * cap <= lambda(t) {
+            return t;
+        }
+    }
 }
 
 /// Workload shape.
@@ -30,6 +92,11 @@ pub struct WorkloadSpec {
     pub prompt_len: (usize, usize),
     /// Inclusive output-length range.
     pub output_len: (usize, usize),
+    /// `Some(alpha)` draws prompt lengths from a bounded Pareto over
+    /// `prompt_len` (shape `alpha`; smaller = heavier tail) instead of
+    /// uniformly: most prompts hug the floor, a heavy tail reaches the
+    /// ceiling — the mix that makes chunked prefill matter.
+    pub heavy_tail_alpha: Option<f64>,
     pub sampling: SamplingParams,
     pub seed: u64,
 }
@@ -42,6 +109,7 @@ impl WorkloadSpec {
             arrivals: Arrivals::Poisson(20.0),
             prompt_len: (8, 48),
             output_len: (8, 32),
+            heavy_tail_alpha: None,
             sampling: SamplingParams::greedy(),
             seed: 2026,
         }
@@ -79,33 +147,16 @@ fn generate_with_corpus(spec: &WorkloadSpec, corpus: &[&str]) -> Vec<TimedReques
     let mut t = 0.0;
     let mut out = Vec::with_capacity(spec.n_requests);
     for i in 0..spec.n_requests {
-        if let Arrivals::Poisson(rate) = spec.arrivals {
-            t += rng.exponential(rate);
-        }
-        // build a prompt of the target length in pre-BOS *tokenizer tokens*
-        // from corpus sentences
-        let target = rng.range_usize(spec.prompt_len.0, spec.prompt_len.1);
-        let mut prompt = String::new();
-        while tok.token_count(&prompt) - 1 < target {
-            if !prompt.is_empty() {
-                prompt.push(' ');
-            }
-            prompt.push_str(corpus[rng.range_usize(0, corpus.len() - 1)]);
-        }
-        // trim to the token budget without splitting a UTF-8 scalar: the
-        // byte tokenizer emits one token per byte, so the byte offset of
-        // the budget may land mid-character — back off to a boundary
-        // rather than panic in String::truncate
-        let mut cut = target.min(prompt.len());
-        while !prompt.is_char_boundary(cut) {
-            cut -= 1;
-        }
-        prompt.truncate(cut);
+        t = spec.arrivals.advance(t, &mut rng);
+        let target = match spec.heavy_tail_alpha {
+            Some(alpha) => pareto_len(spec.prompt_len, alpha, &mut rng),
+            None => rng.range_usize(spec.prompt_len.0, spec.prompt_len.1),
+        };
         out.push(TimedRequest {
             at_s: t,
             request: GenRequest {
                 id: i as u64,
-                prompt,
+                prompt: build_prompt(&tok, &mut rng, corpus, target),
                 max_new_tokens: rng.range_usize(spec.output_len.0, spec.output_len.1),
                 sampling: spec.sampling,
                 stop_at_eos: false,
@@ -113,6 +164,104 @@ fn generate_with_corpus(spec: &WorkloadSpec, corpus: &[&str]) -> Vec<TimedReques
         });
     }
     out
+}
+
+/// Bounded-Pareto draw over `[lo, hi]` with shape `alpha`.
+fn pareto_len((lo, hi): (usize, usize), alpha: f64, rng: &mut Prng) -> usize {
+    if hi <= lo {
+        return lo;
+    }
+    // u ∈ (0, 1]: uniform() is [0, 1), so invert through 1 - u
+    let u = 1.0 - rng.uniform();
+    let x = lo.max(1) as f64 / u.powf(1.0 / alpha.max(1e-6));
+    (x as usize).clamp(lo, hi)
+}
+
+/// Build a prompt of `target` pre-BOS *tokenizer tokens* from corpus
+/// sentences.
+fn build_prompt(tok: &ByteTokenizer, rng: &mut Prng, corpus: &[&str], target: usize) -> String {
+    let mut prompt = String::new();
+    while tok.token_count(&prompt) - 1 < target {
+        if !prompt.is_empty() {
+            prompt.push(' ');
+        }
+        prompt.push_str(corpus[rng.range_usize(0, corpus.len() - 1)]);
+    }
+    // trim to the token budget without splitting a UTF-8 scalar: the
+    // byte tokenizer emits one token per byte, so the byte offset of
+    // the budget may land mid-character — back off to a boundary
+    // rather than panic in String::truncate
+    let mut cut = target.min(prompt.len());
+    while !prompt.is_char_boundary(cut) {
+        cut -= 1;
+    }
+    prompt.truncate(cut);
+    prompt
+}
+
+/// One record of an arrival trace, for replaying captured traffic through
+/// the synthetic prompt builder.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceRecord {
+    pub at_s: f64,
+    pub prompt_tokens: usize,
+    pub max_new_tokens: usize,
+}
+
+/// Replay an arrival trace: request `i` arrives at `trace[i].at_s` with a
+/// deterministic corpus prompt of `prompt_tokens` pre-BOS tokens and the
+/// recorded output budget.
+pub fn from_trace(trace: &[TraceRecord], sampling: SamplingParams, seed: u64) -> Vec<TimedRequest> {
+    let tok = ByteTokenizer::new();
+    let mut rng = Prng::new(seed);
+    trace
+        .iter()
+        .enumerate()
+        .map(|(i, rec)| TimedRequest {
+            at_s: rec.at_s,
+            request: GenRequest {
+                id: i as u64,
+                prompt: build_prompt(&tok, &mut rng, CORPUS, rec.prompt_tokens.max(1)),
+                max_new_tokens: rec.max_new_tokens.max(1),
+                sampling,
+                stop_at_eos: false,
+            },
+        })
+        .collect()
+}
+
+/// Parse an `at_s,prompt_tokens,max_new_tokens` CSV into a trace, sorted
+/// by arrival time. Blank lines and `#` comments are skipped; one header
+/// row before the first record is tolerated.
+pub fn parse_trace_csv(text: &str) -> Result<Vec<TraceRecord>> {
+    let mut out: Vec<TraceRecord> = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let cols: Vec<&str> = line.split(',').map(str::trim).collect();
+        if cols.len() != 3 {
+            bail!("trace line {}: expected 3 columns, got {}", lineno + 1, cols.len());
+        }
+        let at_s = match cols[0].parse::<f64>() {
+            Ok(v) => v,
+            // a non-numeric first column before any record is the header
+            Err(_) if out.is_empty() => continue,
+            Err(e) => bail!("trace line {}: bad at_s {:?}: {}", lineno + 1, cols[0], e),
+        };
+        let parse_count = |col: &str| -> Result<usize> {
+            col.parse::<usize>()
+                .map_err(|e| anyhow::anyhow!("trace line {}: bad count {:?}: {}", lineno + 1, col, e))
+        };
+        out.push(TraceRecord {
+            at_s,
+            prompt_tokens: parse_count(cols[1])?,
+            max_new_tokens: parse_count(cols[2])?,
+        });
+    }
+    out.sort_by(|a, b| a.at_s.total_cmp(&b.at_s));
+    Ok(out)
 }
 
 /// Aggregate workload statistics (for reporting).
@@ -172,6 +321,7 @@ mod tests {
                 arrivals: Arrivals::Poisson(50.0),
                 prompt_len: (lo, hi),
                 output_len: (olo, ohi),
+                heavy_tail_alpha: None,
                 sampling: SamplingParams::greedy(),
                 seed: g.i64_in(0, 1 << 30) as u64,
             };
@@ -219,6 +369,7 @@ mod tests {
                 arrivals: Arrivals::Closed,
                 prompt_len: (lo, hi),
                 output_len: (1, 4),
+                heavy_tail_alpha: None,
                 sampling: SamplingParams::greedy(),
                 seed: g.i64_in(0, 1 << 30) as u64,
             };
@@ -239,5 +390,85 @@ mod tests {
         let s = stats(&reqs);
         assert!(s.total_prompt_tokens >= 4 * (spec.prompt_len.0 + 1));
         assert!(s.total_output_budget >= 4 * spec.output_len.0);
+    }
+
+    #[test]
+    fn bursty_arrivals_cluster_in_the_duty_window() {
+        let spec = WorkloadSpec {
+            arrivals: Arrivals::Bursty { base: 2.0, peak: 200.0, period_s: 1.0, duty: 0.2 },
+            ..WorkloadSpec::e2e_default(400)
+        };
+        let reqs = generate(&spec);
+        for w in reqs.windows(2) {
+            assert!(w[1].at_s >= w[0].at_s, "arrivals must be monotone");
+        }
+        // in-burst mass ≈ 200·0.2 / (200·0.2 + 2·0.8) ≈ 96%; assert ≥ 80%
+        let in_burst = reqs.iter().filter(|r| r.at_s % 1.0 < 0.2).count();
+        assert!(
+            in_burst * 10 >= reqs.len() * 8,
+            "{in_burst}/{} arrivals inside the 20% duty window",
+            reqs.len()
+        );
+    }
+
+    #[test]
+    fn diurnal_arrivals_follow_the_sinusoid() {
+        let spec = WorkloadSpec {
+            arrivals: Arrivals::Diurnal { base: 5.0, peak: 100.0, period_s: 2.0 },
+            ..WorkloadSpec::e2e_default(600)
+        };
+        let reqs = generate(&spec);
+        // the rate crests mid-period: the middle half of each cycle holds
+        // ~79% of the mass for this base/peak; assert ≥ 70%
+        let mid = reqs
+            .iter()
+            .filter(|r| {
+                let phase = (r.at_s / 2.0).fract();
+                (0.25..0.75).contains(&phase)
+            })
+            .count();
+        assert!(mid * 10 >= reqs.len() * 7, "{mid}/{} arrivals in the crest half", reqs.len());
+    }
+
+    #[test]
+    fn heavy_tail_prompts_stay_bounded_and_skew_short() {
+        let spec = WorkloadSpec {
+            prompt_len: (8, 512),
+            heavy_tail_alpha: Some(1.1),
+            ..WorkloadSpec::e2e_default(200)
+        };
+        let tok = ByteTokenizer::new();
+        let mut lens: Vec<usize> =
+            generate(&spec).iter().map(|r| tok.token_count(&r.request.prompt) - 1).collect();
+        lens.sort_unstable();
+        assert!(lens.iter().all(|&l| l <= 512), "bounded above");
+        let median = lens[lens.len() / 2];
+        let max = *lens.last().unwrap();
+        assert!(median <= 32, "median {median} should hug the floor");
+        assert!(max >= 64, "max {max} should reach into the tail");
+    }
+
+    #[test]
+    fn trace_replay_round_trips_the_csv() {
+        let csv = "at_s,prompt_tokens,max_new_tokens\n0.5,12,4\n# comment\n0.0,8,2\n\n1.25,40,16\n";
+        let trace = parse_trace_csv(csv).unwrap();
+        assert_eq!(trace.len(), 3, "header/comment/blank lines skipped");
+        assert_eq!(trace[0], TraceRecord { at_s: 0.0, prompt_tokens: 8, max_new_tokens: 2 });
+        assert_eq!(trace[2].at_s, 1.25, "records sorted by arrival time");
+        let reqs = from_trace(&trace, SamplingParams::greedy(), 7);
+        assert_eq!(reqs.len(), 3);
+        let tok = ByteTokenizer::new();
+        for (r, rec) in reqs.iter().zip(&trace) {
+            assert!((r.at_s - rec.at_s).abs() < 1e-12);
+            assert!(tok.token_count(&r.request.prompt) - 1 <= rec.prompt_tokens);
+            assert_eq!(r.request.max_new_tokens, rec.max_new_tokens);
+        }
+        // replay is deterministic under the seed
+        let again = from_trace(&trace, SamplingParams::greedy(), 7);
+        for (a, b) in reqs.iter().zip(&again) {
+            assert_eq!(a.request.prompt, b.request.prompt);
+        }
+        assert!(parse_trace_csv("1.0,2").is_err(), "wrong column count");
+        assert!(parse_trace_csv("0.0,x,1").is_err(), "bad token count");
     }
 }

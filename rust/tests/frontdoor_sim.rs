@@ -1,0 +1,239 @@
+//! Deterministic, artifact-free front-door tier: drives the streaming
+//! ingress (`FrontDoor`) end-to-end on `SimDevice` cartridges with
+//! synthetic INT4 weights — no PJRT, no `make artifacts`, green from a
+//! clean checkout.
+//!
+//! Pins the serving contract of `docs/serving-front-door.md`:
+//! * cancellation is first-class preemption — a cancelled request frees
+//!   every KV page it held (refcount conservation) and survivors decode
+//!   byte-identically to an uncontended run;
+//! * a shed request never reaches a device — the typed `Overloaded`
+//!   rejection happens entirely at the admission queue;
+//! * the streaming surface is equivalent to unary submission: the
+//!   concatenated token stream equals the unary result, byte for byte.
+
+use std::time::Duration;
+
+use ita::config::ModelConfig;
+use ita::coordinator::engine::Engine;
+use ita::coordinator::frontdoor::{FrontDoor, FrontDoorOpts, QoS, SubmitError};
+use ita::coordinator::request::{FinishReason, GenRequest};
+use ita::coordinator::scheduler::{Scheduler, SchedulerOpts};
+use ita::coordinator::stream::{StreamItem, TokenStream};
+
+const WEIGHT_SEED: u64 = 0xF00D;
+
+fn front(n: usize, opts: SchedulerOpts, door: FrontDoorOpts) -> FrontDoor {
+    FrontDoor::start(
+        n,
+        |_id| Ok(Engine::synthetic(&ModelConfig::TINY, WEIGHT_SEED)),
+        opts,
+        door,
+    )
+    .expect("front door boots")
+}
+
+fn endless(id: u64, prompt: &str, max_new_tokens: usize) -> GenRequest {
+    let mut r = GenRequest::greedy(id, prompt, max_new_tokens);
+    r.stop_at_eos = false;
+    r
+}
+
+/// Drain a stream, asserting the incremental batches concatenate to the
+/// final result, and return (id, tokens, finish).
+fn drain(mut s: TokenStream) -> (u64, Vec<u32>, FinishReason) {
+    let mut toks = Vec::new();
+    let result = loop {
+        match s.recv() {
+            Some(StreamItem::Tokens(t)) => toks.extend(t),
+            Some(StreamItem::End(r)) => break *r,
+            None => panic!("stream severed before its request completed"),
+        }
+    };
+    assert_eq!(toks, result.tokens, "stream must concatenate to the final result");
+    (result.id, result.tokens, result.finish)
+}
+
+#[test]
+fn cancellation_conserves_kv_page_refcounts() {
+    // prefix cache off so the page ledger is exact: after a drain every
+    // allocated page must be back on the free list
+    let opts = SchedulerOpts { prefix_cache_pages: 0, ..SchedulerOpts::default() };
+    let mut s = Scheduler::new(Engine::synthetic(&ModelConfig::TINY, WEIGHT_SEED), opts);
+    for i in 0..6 {
+        s.submit(endless(i, &format!("kv conservation stream {i}"), 48));
+    }
+    for _ in 0..6 {
+        s.step().expect("warmup step");
+    }
+    // preempt half the field mid-decode
+    for victim in [0, 2, 4] {
+        let partial = s.cancel(victim).expect("victim is in flight");
+        assert_eq!(partial.finish, FinishReason::Cancelled);
+    }
+    s.run_to_completion().expect("survivors run out");
+    let (pool, free, live) = s.engine().cache_stats();
+    assert_eq!(live, 0, "no live sequences after the drain");
+    assert_eq!(free, pool, "every KV page returned, the cancelled requests' included");
+}
+
+#[test]
+fn cancel_leaves_survivors_byte_identical_to_uncontended_run() {
+    let survivors =
+        |offset: u64| (0..4).map(move |i| endless(offset + i, "the survivor corpus", 12));
+
+    // uncontended reference transcript
+    let reference = front(1, SchedulerOpts::default(), FrontDoorOpts::default());
+    let mut want: Vec<(u64, Vec<u32>)> = survivors(0)
+        .map(|r| reference.submit(r).expect("submit"))
+        .collect::<Vec<_>>()
+        .into_iter()
+        .map(|s| {
+            let (id, toks, finish) = drain(s);
+            assert_eq!(finish, FinishReason::MaxTokens);
+            (id, toks)
+        })
+        .collect();
+    want.sort();
+    reference.shutdown().expect("shutdown");
+
+    // contended run: a long-running victim shares waves with the
+    // survivors, then gets preempted mid-decode
+    let door = front(1, SchedulerOpts::default(), FrontDoorOpts::default());
+    let mut victim = door.submit(endless(9, "victim to cancel", 256)).expect("submit victim");
+    loop {
+        // wait until the victim is decoding so the cancel lands mid-flight
+        match victim.recv() {
+            Some(StreamItem::Tokens(_)) => break,
+            Some(StreamItem::End(r)) => panic!("victim finished early: {:?}", r.finish),
+            None => panic!("victim stream severed"),
+        }
+    }
+    let streams: Vec<_> = survivors(0).map(|r| door.submit(r).expect("submit")).collect();
+    victim.cancel_handle().cancel();
+    // keep draining the victim: the partial result still arrives
+    let partial = loop {
+        match victim.recv() {
+            Some(StreamItem::Tokens(_)) => {}
+            Some(StreamItem::End(r)) => break *r,
+            None => panic!("victim stream severed"),
+        }
+    };
+    assert_eq!(partial.finish, FinishReason::Cancelled);
+    assert!(partial.tokens.len() < 256, "victim must not have decoded to completion");
+    let mut got: Vec<(u64, Vec<u32>)> = streams
+        .into_iter()
+        .map(|s| {
+            let (id, toks, finish) = drain(s);
+            assert_eq!(finish, FinishReason::MaxTokens);
+            (id, toks)
+        })
+        .collect();
+    got.sort();
+    assert_eq!(got, want, "preemption disturbed a surviving request's bytes");
+    let m = door.shutdown().expect("shutdown");
+    assert_eq!(m.cancelled_requests, 1);
+    assert_eq!(m.aggregate().preempted_requests, 1);
+    assert_eq!(m.failed_requests, 0);
+}
+
+#[test]
+fn shed_requests_never_reach_a_device() {
+    // one cartridge, one decode slot, and a microscopic queue budget: any
+    // projected wait at all sheds — but only once the controller has
+    // measured a drain rate, so serial warmup traffic always admits
+    let opts = SchedulerOpts { max_active: 1, ..SchedulerOpts::default() };
+    let door_opts =
+        FrontDoorOpts { queue_budget_s: Some(1e-6), ..FrontDoorOpts::default() };
+    let door = front(1, opts, door_opts);
+
+    // teach the drain-rate estimator: serial submissions see an empty
+    // queue (projected wait 0), so admission control stays open
+    let mut completed = 0usize;
+    for i in 0..6 {
+        let (_, toks, finish) = drain(
+            door.submit(endless(i, "warm the drain rate estimator", 8)).expect("warmup admits"),
+        );
+        assert_eq!(finish, FinishReason::MaxTokens);
+        assert!(!toks.is_empty());
+        completed += 1;
+        std::thread::sleep(Duration::from_millis(8));
+    }
+
+    // occupy the only slot, then queue one more: the *next* arrival
+    // projects a positive wait and must shed against the 1µs budget
+    let occupant = door.submit(endless(90, "occupy the only decode slot", 600)).expect("admits");
+    let queued = door.submit(endless(91, "wait in line", 8)).expect("empty queue admits");
+    let mut admitted_probes = Vec::new();
+    let mut shed = 0usize;
+    for i in 0..5 {
+        match door.submit_with(endless(100 + i, "probe the front door", 8), QoS::batch()) {
+            Err(SubmitError::Overloaded { projected_wait_s, budget_s }) => {
+                assert!(projected_wait_s > budget_s);
+                shed += 1;
+                break;
+            }
+            Ok(s) => admitted_probes.push(s),
+            Err(SubmitError::Closed) => panic!("fleet closed mid-test"),
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(shed >= 1, "admission control never engaged");
+
+    // free the slot and drain everything that was admitted
+    occupant.cancel_handle().cancel();
+    let (_, _, finish) = drain(occupant);
+    assert_eq!(finish, FinishReason::Cancelled);
+    let (_, toks, finish) = drain(queued);
+    assert_eq!(finish, FinishReason::MaxTokens);
+    assert!(!toks.is_empty());
+    completed += 1;
+    for s in admitted_probes {
+        let (_, _, finish) = drain(s);
+        assert_eq!(finish, FinishReason::MaxTokens);
+        completed += 1;
+    }
+
+    let m = door.shutdown().expect("shutdown");
+    assert_eq!(m.shed_requests, shed as u64);
+    // the shed request left no trace on any device: completed-on-cartridge
+    // counts exactly the admitted-and-finished set, preempted counts the
+    // cancelled occupant, and nothing else ever ran
+    assert_eq!(m.aggregate().requests_completed, completed as u64);
+    assert_eq!(m.aggregate().preempted_requests, 1);
+    assert_eq!(m.cancelled_requests, 1);
+    assert_eq!(m.failed_requests, 0);
+}
+
+#[test]
+fn streaming_and_unary_submission_agree() {
+    let prompts = ["the memory wall", "immutable tensors", "one model one chip", "split brain"];
+    let reqs: Vec<GenRequest> =
+        (0..8).map(|i| endless(i as u64, prompts[i % prompts.len()], 10)).collect();
+
+    let door = front(2, SchedulerOpts::default(), FrontDoorOpts::default());
+    // unary through the wrapped fleet (streaming stays out of the path)
+    let handles: Vec<_> = reqs.iter().map(|r| door.fleet().submit(r.clone())).collect();
+    let mut want: Vec<(u64, Vec<u32>)> = handles
+        .into_iter()
+        .map(|h| {
+            let r = h.wait().expect("unary completes");
+            (r.id, r.tokens)
+        })
+        .collect();
+    want.sort();
+    // streaming, same workload on the same fleet
+    let streams: Vec<_> = reqs.iter().map(|r| door.submit(r.clone()).expect("admits")).collect();
+    let mut got: Vec<(u64, Vec<u32>)> = streams
+        .into_iter()
+        .map(|s| {
+            let (id, toks, _) = drain(s);
+            (id, toks)
+        })
+        .collect();
+    got.sort();
+    assert_eq!(got, want, "streaming and unary submission disagree");
+    let m = door.shutdown().expect("shutdown");
+    assert_eq!(m.shed_requests, 0);
+    assert_eq!(m.cancelled_requests, 0);
+}
