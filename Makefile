@@ -7,7 +7,7 @@ ARTIFACTS ?= artifacts
 CONFIGS   ?= tiny,demo-100m
 PY        ?= python3
 
-.PHONY: all build test bench-build bench-smoke smoke trace-check docs docs-check artifacts clean-artifacts
+.PHONY: all build test test-registry-check bench-build bench-smoke smoke trace-check docs docs-check artifacts clean-artifacts
 
 all: build
 
@@ -17,6 +17,19 @@ build:
 test:
 	cargo test -q
 
+# Cargo.toml sets `autotests = false` (tests live under rust/tests), so a
+# test file without a [[test]] entry SILENTLY never runs. Fail loudly
+# instead: every rust/tests/*.rs must be declared. CI runs this.
+test-registry-check:
+	@missing=0; \
+	for f in rust/tests/*.rs; do \
+		name=$$(basename $$f .rs); \
+		grep -q "^name = \"$$name\"$$" Cargo.toml || { \
+			echo "UNREGISTERED TEST: $$f has no [[test]] entry in Cargo.toml"; \
+			missing=1; }; \
+	done; \
+	[ $$missing -eq 0 ] && echo "test registry OK: every rust/tests/*.rs is declared"
+
 # Compile-check every bench target without running them (CI).
 bench-build:
 	cargo bench --no-run
@@ -24,7 +37,8 @@ bench-build:
 # Run the end-to-end throughput bench (release/bench profile) and emit the
 # machine-readable perf record BENCH_e2e.json (throughput, prefix-cache
 # prefill skips, live-migration counts, pipeline-stage occupancy/link
-# share). Artifact-free: PJRT tiers skip.
+# share, KV bytes-per-session under quantized cold pages + spill churn).
+# Artifact-free: PJRT tiers skip.
 bench-smoke:
 	cargo bench --bench e2e_throughput
 

@@ -20,6 +20,11 @@
 //! * **tracing overhead** (always runs): one decode workload with the
 //!   request-lifecycle trace recorder off vs on — the off path must stay
 //!   free (≤1% tok/s delta is the acceptance target).
+//! * **kv capacity sweep** (always runs): peak resident KV bytes per
+//!   session under fp32/int8/int4 cold-page encodings (the
+//!   sessions-per-arena win of quantized cold pages), plus fp32/int8 legs
+//!   under a deliberately tight byte budget with the disk spill tier
+//!   holding the workload together. See `docs/kv-memory-tiers.md`.
 //! * **overload sweep** (always runs): bursty arrival storms at 10× and
 //!   100× the serially-measured service rate through the streaming front
 //!   door, baseline (admit everything) vs admission-controlled (ITL target
@@ -46,12 +51,13 @@ use ita::coordinator::frontdoor::{FrontDoor, FrontDoorOpts, SubmitError};
 use ita::coordinator::metrics::ServingMetrics;
 use ita::coordinator::pipeline::PipelineEngine;
 use ita::coordinator::request::GenRequest;
-use ita::coordinator::scheduler::{Scheduler, SchedulerOpts};
+use ita::coordinator::scheduler::{KvMemOpts, Scheduler, SchedulerOpts};
 use ita::coordinator::spec::{CartridgeEngines, SpecOpts};
 use ita::coordinator::workload::{self, Arrivals, WorkloadSpec};
 use ita::device::pjrt::PjrtDevice;
 use ita::device::sim::SimDevice;
 use ita::host::embedding::EmbeddingTable;
+use ita::host::kv_cache::{KvQuantTag, KvSnapshot};
 use ita::host::sampling::SamplingParams;
 use ita::runtime::weights::load_artifacts;
 use ita::util::json::{json_array, Json};
@@ -614,6 +620,90 @@ fn bench_overload(
     j.encode()
 }
 
+/// KV memory-tier sweep (`docs/kv-memory-tiers.md`): the same decode
+/// workload under each cold-page encoding (fp32/int8/int4), sampling the
+/// peak resident KV bytes every step — the number that decides how many
+/// concurrent sessions a fixed KV arena sustains. `budget_bytes > 0` legs
+/// additionally enable the disk spill tier under that (deliberately tight)
+/// budget, reporting the spill churn it takes to hold the workload.
+/// Streams are pinned elsewhere (`rust/tests/kv_quant_sim.rs` /
+/// `kv_spill_sim.rs`); here the interesting numbers are bytes and tok/s.
+/// Returns the JSON record.
+fn bench_kv_capacity(tag: KvQuantTag, budget_bytes: usize) -> String {
+    let n_requests = 8usize;
+    let max_tokens = 32usize;
+    let spill = budget_bytes > 0;
+    let opts = SchedulerOpts {
+        kv_mem: KvMemOpts { quant: tag, hot_window: 16, budget_bytes, spill },
+        ..SchedulerOpts::default()
+    };
+    let mut sched = Scheduler::new(Engine::synthetic(&ModelConfig::TINY, 0x17A), opts);
+    for i in 0..n_requests {
+        let mut r = GenRequest::greedy(i as u64, &format!("kv capacity session {i}"), max_tokens);
+        r.stop_at_eos = false;
+        sched.submit(r);
+    }
+    let t0 = Instant::now();
+    let mut peak_resident = 0usize;
+    let mut results = Vec::new();
+    while sched.pending() > 0 {
+        results.extend(sched.step().expect("step"));
+        peak_resident = peak_resident.max(sched.engine().kv_resident_bytes());
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let tokens: usize = results.iter().map(|r| r.tokens.len()).sum();
+    let m = sched.metrics();
+    let bytes_per_session = peak_resident / n_requests;
+    // sessions a fixed 4 MiB KV arena sustains at this peak footprint
+    // (only meaningful for unbudgeted legs — a budget caps the peak)
+    const ARENA_BYTES: usize = 4 << 20;
+    let sessions = if bytes_per_session == 0 { 0 } else { ARENA_BYTES / bytes_per_session };
+    // steady-state checkpoint cost at the final context length: a full
+    // snapshot vs one 8-token delta (24-byte envelope + appended rows);
+    // wire_bytes_for is the wire format's single source of truth
+    let ctx = results.first().map(|r| r.prompt_tokens + r.tokens.len() - 1).unwrap_or(0);
+    let cfg = &ModelConfig::TINY;
+    let full_ckpt = KvSnapshot::wire_bytes_for(cfg.n_layers, cfg.d_model, ctx);
+    let delta_ckpt = 24 + KvSnapshot::wire_bytes_for(cfg.n_layers, cfg.d_model, 8);
+    let label = match tag {
+        KvQuantTag::Fp32 => "fp32",
+        KvQuantTag::Int8Block => "int8",
+        KvQuantTag::Int4Block => "int4",
+    };
+    println!(
+        "bench e2e/kv-capacity {label} budget {budget_bytes:>6}  {tokens:>4} tokens in \
+         {wall:>5.2}s = {:>7.1} tok/s  (peak {:>6} B resident, {:>5} B/session, \
+         {sessions:>4} sessions/4MiB, {} pages quantized, {} spills)",
+        tokens as f64 / wall,
+        peak_resident,
+        bytes_per_session,
+        m.kv_pages_quantized,
+        m.kv_spills,
+    );
+    let mut j = Json::default();
+    j.str("quant", label);
+    j.num("budget_bytes", budget_bytes);
+    j.str("spill", if spill { "on" } else { "off" });
+    j.num("requests", n_requests);
+    j.num("tokens", tokens);
+    j.float("wall_s", wall);
+    j.float("tok_per_s", tokens as f64 / wall);
+    j.num("peak_resident_bytes", peak_resident);
+    j.num("bytes_per_session", bytes_per_session);
+    j.num("sessions_at_4mib", sessions);
+    j.num("kv_pages_quantized", m.kv_pages_quantized);
+    j.num("kv_spills", m.kv_spills);
+    j.num("kv_unspills", m.kv_unspills);
+    j.num("kv_spill_bytes", m.kv_spill_bytes);
+    j.num("full_checkpoint_bytes", full_ckpt);
+    j.num("delta_checkpoint_bytes", delta_ckpt);
+    // actually-emitted periodic checkpoint bytes, full vs delta
+    j.num("ckpt_full_bytes", m.ckpt_full_bytes);
+    j.num("ckpt_delta_bytes", m.ckpt_delta_bytes);
+    put_observability(&mut j, &m);
+    j.encode()
+}
+
 fn bench_config(name: &str, n_requests: usize, max_tokens: usize) -> Option<()> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts").join(name);
     if !dir.join("MANIFEST.txt").exists() {
@@ -692,6 +782,16 @@ fn main() {
     // request-lifecycle tracing must be free when off: same workload with
     // the recorder disabled vs live, tok/s delta in the record
     let tracing_overhead = bench_tracing_overhead(8, 64);
+    // KV memory tiers: peak per-session footprint under each cold-page
+    // encoding (the session-capacity win of int8/int4), then fp32 and int8
+    // under a deliberately tight 16 KiB budget with the disk spill tier
+    // holding the same workload together
+    let mut kv_capacity_sweep = Vec::new();
+    for tag in [KvQuantTag::Fp32, KvQuantTag::Int8Block, KvQuantTag::Int4Block] {
+        kv_capacity_sweep.push(bench_kv_capacity(tag, 0));
+    }
+    kv_capacity_sweep.push(bench_kv_capacity(KvQuantTag::Fp32, 16 << 10));
+    kv_capacity_sweep.push(bench_kv_capacity(KvQuantTag::Int8Block, 16 << 10));
     // overload storms through the streaming front door: baseline (admit
     // everything) vs admission-controlled, at 10× and 100× the serially
     // calibrated service rate
@@ -724,7 +824,10 @@ fn main() {
     // v6: added the overload sweep (bursty storms at 10×/100× the measured
     //     service rate through the streaming front door; p99 admitted ITL,
     //     shed rate, and goodput, baseline vs admission-controlled)
-    root.num("schema_version", 6);
+    // v7: added the kv_capacity sweep (peak resident KV bytes per session
+    //     under fp32/int8/int4 cold pages, sessions-per-arena, spill-tier
+    //     churn under a tight budget, full vs delta checkpoint bytes)
+    root.num("schema_version", 7);
     root.put("fleet_sweep", json_array(&fleet_sweep));
     root.put("shared_prefix", shared_prefix);
     root.put("migration", migration);
@@ -732,6 +835,7 @@ fn main() {
     root.put("spec_decode", json_array(&spec_sweep));
     root.put("pipeline", json_array(&pipeline_sweep));
     root.put("tracing_overhead", tracing_overhead);
+    root.put("kv_capacity", json_array(&kv_capacity_sweep));
     root.put("overload", json_array(&overload_sweep));
     let path = std::env::var("ITA_BENCH_JSON").unwrap_or_else(|_| "BENCH_e2e.json".into());
     match std::fs::write(&path, root.encode() + "\n") {

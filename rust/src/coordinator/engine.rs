@@ -414,6 +414,33 @@ impl Engine {
         (alloc, free, self.stages[0].cache.stats().2)
     }
 
+    /// Install a cold-page KV quantization policy on every stage cache
+    /// (ROADMAP item 3a). `KvQuantTag::Fp32` (the default) keeps every page
+    /// exact — the configuration all byte-differentials run under.
+    pub fn set_kv_quant(&mut self, policy: crate::host::kv_cache::KvQuantPolicy) {
+        for stage in &mut self.stages {
+            stage.cache.set_quant_policy(policy);
+        }
+    }
+
+    /// Bytes of referenced KV pages across all stage caches, at their
+    /// actual encoded size — what a scheduler byte budget is charged
+    /// against.
+    pub fn kv_resident_bytes(&self) -> usize {
+        self.stages.iter().map(|s| s.cache.resident_bytes()).sum()
+    }
+
+    /// (pages quantized, pages materialized) summed over stages.
+    pub fn kv_quant_stats(&self) -> (u64, u64) {
+        let mut q = 0;
+        let mut m = 0;
+        for stage in &self.stages {
+            q += stage.cache.pages_quantized;
+            m += stage.cache.pages_materialized;
+        }
+        (q, m)
+    }
+
     pub fn traffic(&self) -> TrafficLedger {
         self.traffic
     }

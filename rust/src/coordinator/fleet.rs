@@ -629,6 +629,10 @@ struct Pending {
     /// [`CheckpointReport`], or the fresh export after a migration. A
     /// requeue resumes decode from here instead of restarting prefill.
     checkpoint: Option<Box<DecodeCheckpoint>>,
+    /// Chain id of `checkpoint` (the scheduler's checkpoint counter value
+    /// it was composed up to). Deltas in later reports fold onto the stored
+    /// checkpoint only when their `base_id` matches; 0 = no chain.
+    checkpoint_id: u64,
     reply: Reply,
     qos: QoS,
     /// Admission cost in tokens (prompt + output budget) — the unit the
@@ -654,6 +658,7 @@ impl Pending {
             req,
             arrived: Instant::now(),
             checkpoint: None,
+            checkpoint_id: 0,
             reply: Reply::Unary(tx),
             qos: QoS::default(),
             cost,
@@ -1491,6 +1496,7 @@ fn dispatcher(
                         req,
                         arrived: Instant::now(),
                         checkpoint: None,
+                        checkpoint_id: 0,
                         reply: Reply::Stream(items),
                         qos,
                         cost,
@@ -1612,14 +1618,27 @@ fn dispatcher(
                 // same snapshot (concurrency cap + adaptive prefill)
                 slo.on_checkpoint(w, &report.metrics, slots[w].in_flight.len(), &slots[w].worker);
                 slots[w].checkpoint = Some(report.metrics);
-                // refresh each in-flight request's recovery checkpoint, and
-                // learn the model's per-row KV wire cost for the guard
-                for (ticket, ckpt) in report.decode {
-                    if ckpt.kv.len > 0 {
-                        slots[w].kv_bytes_per_row = Some(ckpt.kv.wire_bytes() / ckpt.kv.len);
-                    }
-                    if let Some(p) = slots[w].in_flight.get_mut(&ticket) {
-                        p.checkpoint = Some(Box::new(ckpt));
+                // refresh each in-flight request's recovery checkpoint.
+                // Updates arrive as a full snapshot (first per request, or
+                // after any discontinuity) or a delta that folds onto the
+                // stored checkpoint when the chain ids line up; a broken
+                // chain drops the stored checkpoint rather than keep a
+                // stale one that would silently lose tokens on recovery.
+                for (ticket, update) in report.decode {
+                    let Some(p) = slots[w].in_flight.get_mut(&ticket) else { continue };
+                    let stored = p.checkpoint.take().map(|c| (p.checkpoint_id, *c));
+                    match update.fold(stored) {
+                        Some((id, ckpt)) => {
+                            // learn the model's per-row KV wire cost for the
+                            // migration guard, from the composed snapshot
+                            if ckpt.kv.len > 0 {
+                                slots[w].kv_bytes_per_row =
+                                    Some(ckpt.kv.wire_bytes() / ckpt.kv.len);
+                            }
+                            p.checkpoint_id = id;
+                            p.checkpoint = Some(Box::new(ckpt));
+                        }
+                        None => p.checkpoint_id = 0,
                     }
                 }
             }
@@ -1644,6 +1663,9 @@ fn dispatcher(
                     // restart replays the whole output)
                     let resumed = p.checkpoint.as_ref().map_or(0, |c| c.generated.len());
                     p.replay_skip = p.streamed.saturating_sub(resumed);
+                    // the survivor starts a fresh chain (its first update
+                    // is always full) — the old chain id must not linger
+                    p.checkpoint_id = 0;
                     queue.requeue_front(p);
                 }
             }
@@ -1892,6 +1914,9 @@ fn migrate_ticket(
     if let Some(c) = &ckpt {
         if c.kv.by_ref_len == 0 {
             p.checkpoint = Some(c.clone());
+            // the target scheduler opens a fresh checkpoint chain; deltas
+            // from the old chain must not fold onto this export
+            p.checkpoint_id = 0;
         }
     }
     // 3. resume on the target (plain submit if it never started decoding —

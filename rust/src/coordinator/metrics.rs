@@ -234,6 +234,36 @@ pub struct ServingMetrics {
     ///
     /// [`Scheduler::cancel`]: super::scheduler::Scheduler::cancel
     pub preempted_requests: u64,
+    /// Sequences paged out to the disk spill tier by the KV byte budget
+    /// ([`KvMemOpts::budget_bytes`]); one count per spill, so a sequence
+    /// that bounces counts each trip.
+    ///
+    /// [`KvMemOpts::budget_bytes`]: super::scheduler::KvMemOpts::budget_bytes
+    pub kv_spills: u64,
+    /// Spilled sequences restored into the engine ahead of their next
+    /// decode step. In a drained scheduler `kv_unspills` equals
+    /// `kv_spills` minus the spilled sequences cancelled or migrated away.
+    pub kv_unspills: u64,
+    /// Snapshot wire bytes written to the spill file.
+    pub kv_spill_bytes: u64,
+    /// Snapshot wire bytes read back from the spill file.
+    pub kv_unspill_bytes: u64,
+    /// KV pages block-quantized by the cold sweep
+    /// ([`KvQuantPolicy`](crate::host::kv_cache::KvQuantPolicy)).
+    pub kv_pages_quantized: u64,
+    /// Quantized pages materialized back to FP32 by a copy-on-write
+    /// append (each is a page the hot window gave up early).
+    pub kv_pages_materialized: u64,
+    /// Wire bytes of full [`KvSnapshot`] periodic checkpoints. Together
+    /// with `ckpt_delta_bytes` this prices the delta-checkpoint win:
+    /// all-full checkpointing would cost O(context) per interval.
+    ///
+    /// [`KvSnapshot`]: crate::host::kv_cache::KvSnapshot
+    pub ckpt_full_bytes: u64,
+    /// Wire bytes of delta periodic checkpoints
+    /// ([`KvSnapshotDelta`](crate::host::kv_cache::KvSnapshotDelta)) —
+    /// steady-state cost O(tokens per interval).
+    pub ckpt_delta_bytes: u64,
     /// Device waves that carried BOTH decode rows and prefill-chunk rows —
     /// iteration-level continuous batching at work. Note this counts wave
     /// *composition*, not the chunking policy: even run-to-completion
@@ -360,6 +390,14 @@ impl ServingMetrics {
             resumed_requests: self.resumed_requests,
             migrated_out: self.migrated_out,
             preempted_requests: self.preempted_requests,
+            kv_spills: self.kv_spills,
+            kv_unspills: self.kv_unspills,
+            kv_spill_bytes: self.kv_spill_bytes,
+            kv_unspill_bytes: self.kv_unspill_bytes,
+            kv_pages_quantized: self.kv_pages_quantized,
+            kv_pages_materialized: self.kv_pages_materialized,
+            ckpt_full_bytes: self.ckpt_full_bytes,
+            ckpt_delta_bytes: self.ckpt_delta_bytes,
             mixed_waves: self.mixed_waves,
             prefill_chunks: self.prefill_chunks,
             wall_s: self.wall_s,
@@ -402,6 +440,14 @@ impl ServingMetrics {
         self.resumed_requests += other.resumed_requests;
         self.migrated_out += other.migrated_out;
         self.preempted_requests += other.preempted_requests;
+        self.kv_spills += other.kv_spills;
+        self.kv_unspills += other.kv_unspills;
+        self.kv_spill_bytes += other.kv_spill_bytes;
+        self.kv_unspill_bytes += other.kv_unspill_bytes;
+        self.kv_pages_quantized += other.kv_pages_quantized;
+        self.kv_pages_materialized += other.kv_pages_materialized;
+        self.ckpt_full_bytes += other.ckpt_full_bytes;
+        self.ckpt_delta_bytes += other.ckpt_delta_bytes;
         self.mixed_waves += other.mixed_waves;
         self.prefill_chunks += other.prefill_chunks;
         self.wall_s = self.wall_s.max(other.wall_s);
@@ -460,6 +506,14 @@ impl ServingMetrics {
             resumed_requests,
             migrated_out,
             preempted_requests,
+            kv_spills,
+            kv_unspills,
+            kv_spill_bytes,
+            kv_unspill_bytes,
+            kv_pages_quantized,
+            kv_pages_materialized,
+            ckpt_full_bytes,
+            ckpt_delta_bytes,
             mixed_waves,
             prefill_chunks,
             wall_s,
@@ -494,6 +548,14 @@ impl ServingMetrics {
             ("resumed_requests", *resumed_requests as f64),
             ("migrated_out", *migrated_out as f64),
             ("preempted_requests", *preempted_requests as f64),
+            ("kv_spills", *kv_spills as f64),
+            ("kv_unspills", *kv_unspills as f64),
+            ("kv_spill_bytes", *kv_spill_bytes as f64),
+            ("kv_unspill_bytes", *kv_unspill_bytes as f64),
+            ("kv_pages_quantized", *kv_pages_quantized as f64),
+            ("kv_pages_materialized", *kv_pages_materialized as f64),
+            ("ckpt_full_bytes", *ckpt_full_bytes as f64),
+            ("ckpt_delta_bytes", *ckpt_delta_bytes as f64),
             ("mixed_waves", *mixed_waves as f64),
             ("prefill_chunks", *prefill_chunks as f64),
             ("wall_s", *wall_s),
@@ -534,7 +596,8 @@ impl ServingMetrics {
     pub fn report(&self) -> String {
         format!(
             "requests={} prefill_tokens={} prefill_skipped={} restored={} resumed={} \
-             migrated_out={} preempted={} decode_tokens={} mixed_waves={} prefill_chunks={} \
+             migrated_out={} preempted={} kv_spills={} kv_unspills={} kv_quant_pages={} \
+             ckpt_full={}B ckpt_delta={}B decode_tokens={} mixed_waves={} prefill_chunks={} \
              spec_proposed={} spec_accepted={} spec_rollbacks={} spec_accept_rate={:.2} \
              wall={:.2}s decode_throughput={:.1} tok/s ttft_p50={:.1}ms ttft_p95={:.1}ms \
              itl_p50={:.2}ms itl_p95={:.2}ms itl_step_p99={:.2}ms queue_p99={:.1}ms \
@@ -547,6 +610,11 @@ impl ServingMetrics {
             self.resumed_requests,
             self.migrated_out,
             self.preempted_requests,
+            self.kv_spills,
+            self.kv_unspills,
+            self.kv_pages_quantized,
+            self.ckpt_full_bytes,
+            self.ckpt_delta_bytes,
             self.tokens_generated,
             self.mixed_waves,
             self.prefill_chunks,
@@ -1197,6 +1265,14 @@ mod tests {
             resumed_requests: 2,
             migrated_out: 1,
             preempted_requests: 4,
+            kv_spills: 6,
+            kv_unspills: 5,
+            kv_spill_bytes: 8192,
+            kv_unspill_bytes: 7168,
+            kv_pages_quantized: 21,
+            kv_pages_materialized: 3,
+            ckpt_full_bytes: 16384,
+            ckpt_delta_bytes: 1024,
             mixed_waves: 7,
             prefill_chunks: 13,
             wall_s: 2.5,

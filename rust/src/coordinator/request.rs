@@ -1,7 +1,7 @@
 //! Generation request/result types, plus the portable decode checkpoint
 //! that migration and panic-resume ship between cartridges.
 
-use crate::host::kv_cache::KvSnapshot;
+use crate::host::kv_cache::{KvSnapshot, KvSnapshotDelta};
 use crate::host::sampling::SamplingParams;
 
 /// A generation request submitted to the server.
@@ -114,6 +114,99 @@ impl DecodeCheckpoint {
     /// Committed KV rows a restore must reproduce.
     pub fn committed_len(&self) -> usize {
         self.kv.len
+    }
+}
+
+/// KV payload of one periodic checkpoint update: the first checkpoint of a
+/// request (and the first after any break in the chain) ships the full
+/// snapshot; steady-state updates ship only the rows appended since the
+/// previous checkpoint as a [`KvSnapshotDelta`]. The receiver composes
+/// deltas onto its stored full snapshot ([`KvSnapshotDelta::apply`]),
+/// checking the chain ids; a delta whose `base_id` does not match is
+/// dropped along with the stored checkpoint (the request then degrades to
+/// re-prefill on panic until the next `Full` arrives).
+#[derive(Debug, Clone)]
+pub enum KvCheckpoint {
+    Full {
+        /// Chain id of this checkpoint state (deltas extend it by naming
+        /// it as their `base_id`).
+        id: u64,
+        snap: KvSnapshot,
+    },
+    Delta(KvSnapshotDelta),
+}
+
+impl KvCheckpoint {
+    /// Chain id of the state this update produces.
+    pub fn id(&self) -> u64 {
+        match self {
+            KvCheckpoint::Full { id, .. } => *id,
+            KvCheckpoint::Delta(d) => d.id,
+        }
+    }
+
+    /// Committed KV rows of the checkpoint state.
+    pub fn committed_len(&self) -> usize {
+        match self {
+            KvCheckpoint::Full { snap, .. } => snap.len,
+            KvCheckpoint::Delta(d) => d.rows.len,
+        }
+    }
+
+    /// Bytes this update would move on the wire — the delta-checkpoint
+    /// win is exactly `Full::wire_bytes - Delta::wire_bytes` per interval.
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            KvCheckpoint::Full { snap, .. } => snap.wire_bytes(),
+            KvCheckpoint::Delta(d) => d.wire_bytes(),
+        }
+    }
+}
+
+/// One periodic per-request checkpoint update emitted by a worker: the
+/// request's token state plus the incremental KV payload. The dispatcher
+/// folds it into its stored [`DecodeCheckpoint`] for panic-requeue.
+#[derive(Debug, Clone)]
+pub struct CheckpointUpdate {
+    pub prompt: Vec<u32>,
+    /// Tokens generated so far (never empty — same contract as
+    /// [`DecodeCheckpoint::generated`]).
+    pub generated: Vec<u32>,
+    pub kv: KvCheckpoint,
+    pub spec_proposed: u64,
+    pub spec_accepted: u64,
+}
+
+impl CheckpointUpdate {
+    /// Fold this update into the receiver's stored full checkpoint.
+    /// `stored` is the previous `(chain id, checkpoint)` pair, if any.
+    /// Returns the new pair, or `None` when the chain broke (delta without
+    /// a matching base) — the caller must then drop its stored checkpoint.
+    pub fn fold(
+        self,
+        stored: Option<(u64, DecodeCheckpoint)>,
+    ) -> Option<(u64, DecodeCheckpoint)> {
+        let kv = match self.kv {
+            KvCheckpoint::Full { id, snap } => Some((id, snap)),
+            KvCheckpoint::Delta(d) => match stored {
+                Some((id, prev)) if id == d.base_id => {
+                    d.apply(&prev.kv).ok().map(|snap| (d.id, snap))
+                }
+                _ => None,
+            },
+        };
+        kv.map(|(id, snap)| {
+            (
+                id,
+                DecodeCheckpoint {
+                    prompt: self.prompt,
+                    generated: self.generated,
+                    kv: snap,
+                    spec_proposed: self.spec_proposed,
+                    spec_accepted: self.spec_accepted,
+                },
+            )
+        })
     }
 }
 

@@ -40,6 +40,20 @@
 //! greedy outputs stay byte-identical to a draft-less run
 //! (`rust/tests/spec_decode_sim.rs`).
 //!
+//! ## KV memory tiers
+//!
+//! [`KvMemOpts`] adds two capacity levers (`docs/kv-memory-tiers.md`):
+//! cold KV pages beyond a hot window are block-quantized in place
+//! (INT8/INT4, dequantized on read), and a resident-byte budget backed by
+//! a disk spill tier ([`KvSpill`]) pages whole idle sequences out when the
+//! cache runs over, restoring them before their next decode step. Both
+//! default off; with the defaults every existing byte-identity
+//! differential holds unchanged, and spill round-trips are byte-identical
+//! on their own (`rust/tests/kv_spill_sim.rs`). Periodic decode
+//! checkpoints ship as a full-snapshot-then-deltas chain
+//! ([`Scheduler::decode_checkpoints`]), so steady-state checkpoint cost is
+//! O(tokens per interval) rather than O(context).
+//!
 //! [`CartridgeEngines::with_draft`]: super::spec::CartridgeEngines::with_draft
 //! [`SpecOpts::depth`]: super::spec::SpecOpts::depth
 //!
@@ -69,10 +83,13 @@ use anyhow::Result;
 use super::batcher::{plan_pipeline, BatchStats};
 use super::engine::Engine;
 use super::metrics::ServingMetrics;
-use super::request::{DecodeCheckpoint, FinishReason, GenRequest, GenResult};
+use super::request::{
+    CheckpointUpdate, DecodeCheckpoint, FinishReason, GenRequest, GenResult, KvCheckpoint,
+};
 use super::spec::{CartridgeEngines, SpecDecoder, SpecOpts, VerifyOutcome};
 use super::trace::{TraceEvent, TraceKind, TraceRecorder, WAVE_NONE};
-use crate::host::kv_cache::SeqId;
+use crate::host::kv_cache::{KvQuantPolicy, KvQuantTag, KvSnapshotDelta, SeqId};
+use crate::host::kv_spill::KvSpill;
 use crate::host::sampling::sample;
 use crate::host::tokenizer::{ByteTokenizer, EOS};
 use crate::util::prng::Prng;
@@ -120,6 +137,10 @@ pub struct SchedulerOpts {
     /// per-request token streams; off (the default) nothing is buffered
     /// and completion-only serving pays nothing.
     pub stream_tokens: bool,
+    /// KV memory tiering: cold-page quantization and the disk spill tier
+    /// (`docs/kv-memory-tiers.md`). The defaults keep every byte-identity
+    /// differential intact: FP32 pages, no budget, no spill.
+    pub kv_mem: KvMemOpts,
 }
 
 impl Default for SchedulerOpts {
@@ -133,7 +154,39 @@ impl Default for SchedulerOpts {
             trace_capacity: 0,
             trace_epoch: None,
             stream_tokens: false,
+            kv_mem: KvMemOpts::default(),
         }
+    }
+}
+
+/// KV memory-tier options (`docs/kv-memory-tiers.md`): cold-page block
+/// quantization inside the paged cache, and a byte budget backed by the
+/// disk spill tier. All default off; with the defaults every output is
+/// byte-identical to a build without these features.
+#[derive(Debug, Clone, Copy)]
+pub struct KvMemOpts {
+    /// Storage encoding for cold KV pages ([`KvQuantTag::Fp32`] = off).
+    /// Quantized reads change logits within the bound pinned by
+    /// `rust/tests/kv_quant_sim.rs`; greedy argmax streams stay identical
+    /// on the sim workloads.
+    pub quant: KvQuantTag,
+    /// Trailing tokens always kept FP32 (the quantization hot window).
+    pub hot_window: usize,
+    /// Resident KV byte budget (0 = unlimited). With [`spill`] set, going
+    /// over budget pages whole idle sequences' KV to disk; they are
+    /// restored — byte-identically, when quantization is off — before
+    /// their next decode step.
+    ///
+    /// [`spill`]: KvMemOpts::spill
+    pub budget_bytes: usize,
+    /// Enable the disk spill tier ([`KvSpill`]). Without it the budget is
+    /// advisory (reported, never enforced).
+    pub spill: bool,
+}
+
+impl Default for KvMemOpts {
+    fn default() -> Self {
+        KvMemOpts { quant: KvQuantTag::Fp32, hot_window: 64, budget_bytes: 0, spill: false }
     }
 }
 
@@ -160,6 +213,12 @@ struct Active {
     /// decoding telemetry; both 0 without a draft engine)
     spec_proposed: u64,
     spec_accepted: u64,
+    /// chain id of the last periodic checkpoint emitted for this request
+    /// (0 = none yet → the next checkpoint ships a full snapshot; nonzero →
+    /// it ships only the rows appended since as a [`KvSnapshotDelta`])
+    ckpt_id: u64,
+    /// committed KV rows covered by checkpoint `ckpt_id`
+    ckpt_len: usize,
     enqueued: Instant,
     /// when admission pulled this request off the queue (queue-wait end;
     /// the trace splits E2E into a Queued and an Active span here)
@@ -208,6 +267,15 @@ impl QueueEntry {
     }
 }
 
+/// A decoding sequence whose KV currently lives in the spill file: the
+/// full [`Active`] bookkeeping minus its engine pages (`a.seq` is stale —
+/// the restore allocates a fresh sequence and rewrites it).
+struct SpilledSeq {
+    a: Active,
+    /// spill-file bytes held (the snapshot's wire size)
+    bytes: usize,
+}
+
 /// Synchronous continuous-batching scheduler over one engine (plus an
 /// optional draft engine for speculative decoding).
 pub struct Scheduler {
@@ -237,6 +305,14 @@ pub struct Scheduler {
     /// ([`EnergyParams::ita`](crate::energy::EnergyParams::ita)); scales
     /// device MAC counts into [`ServingMetrics::energy_j`].
     pj_per_mac: f64,
+    /// Disk spill tier (Some iff [`KvMemOpts::spill`] and a nonzero
+    /// budget; falls back to None — budget unenforced — if the backing
+    /// file cannot be created).
+    spill: Option<KvSpill>,
+    /// Sequences currently paged out, oldest first (restore order).
+    spilled: Vec<SpilledSeq>,
+    /// Monotone checkpoint-chain id source (0 is reserved for "none").
+    next_ckpt_id: u64,
 }
 
 impl Scheduler {
@@ -257,6 +333,23 @@ impl Scheduler {
         if opts.prefix_cache_pages > 0 {
             engine.enable_prefix_cache(opts.prefix_cache_pages);
         }
+        if opts.kv_mem.quant != KvQuantTag::Fp32 {
+            engine.set_kv_quant(KvQuantPolicy {
+                tag: opts.kv_mem.quant,
+                hot_window: opts.kv_mem.hot_window,
+            });
+        }
+        let spill = if opts.kv_mem.spill && opts.kv_mem.budget_bytes > 0 {
+            match KvSpill::new() {
+                Ok(sp) => Some(sp),
+                Err(e) => {
+                    eprintln!("[ita-scheduler] spill tier unavailable ({e:#}); budget unenforced");
+                    None
+                }
+            }
+        } else {
+            None
+        };
         let spec = match draft {
             Some(d) if opts.spec.depth > 0 => {
                 if d.dims().vocab == engine.dims().vocab {
@@ -292,6 +385,9 @@ impl Scheduler {
             wave_seq: 0,
             streamed: Vec::new(),
             pj_per_mac: crate::energy::EnergyParams::default().ita().total_pj(),
+            spill,
+            spilled: Vec::new(),
+            next_ckpt_id: 0,
         }
     }
 
@@ -316,7 +412,7 @@ impl Scheduler {
     }
 
     pub fn pending(&self) -> usize {
-        self.queue.len() + self.active.len()
+        self.queue.len() + self.active.len() + self.spilled.len()
     }
 
     /// Resolved concurrent-decode capacity (the fleet dispatcher caps each
@@ -331,6 +427,7 @@ impl Scheduler {
     /// run it, sample, and harvest completions.
     pub fn step(&mut self) -> Result<Vec<GenResult>> {
         let mut done = self.admit();
+        self.enforce_kv_budget();
         if self.active.is_empty() {
             return Ok(done);
         }
@@ -747,6 +844,8 @@ impl Scheduler {
                         next_token: 0, // set when the final prompt row samples
                         spec_proposed: 0,
                         spec_accepted: 0,
+                        ckpt_id: 0,
+                        ckpt_len: 0,
                         enqueued,
                         admitted: now,
                         first_token_at: None,
@@ -828,11 +927,136 @@ impl Scheduler {
             // end-to-end totals for the request, not per-cartridge slices
             spec_proposed,
             spec_accepted,
+            // the delta chain does not survive a move between schedulers:
+            // the first checkpoint here re-ships a full snapshot
+            ckpt_id: 0,
+            ckpt_len: 0,
             enqueued,
             admitted: now,
             first_token_at: Some(now),
             last_token_at: Some(now),
         });
+    }
+
+    /// Enforce [`KvMemOpts::budget_bytes`] around this step: first wake
+    /// spilled sequences that fit back under the budget (or, if nothing is
+    /// active at all, the oldest one unconditionally — spilled work must
+    /// not deadlock behind a too-small budget), then page out the newest
+    /// decoding sequences until the resident bytes fit. The last active
+    /// sequence is never spilled, so every step makes decode progress and
+    /// the forced wake cannot ping-pong.
+    fn enforce_kv_budget(&mut self) {
+        if self.spill.is_none() {
+            return;
+        }
+        let budget = self.opts.kv_mem.budget_bytes;
+        // wake path: oldest first, FCFS like admission
+        while !self.spilled.is_empty() {
+            let forced = self.active.is_empty();
+            let fits = self.active.len() < self.opts.max_active
+                && self.engine.kv_resident_bytes() + self.spilled[0].bytes <= budget;
+            if !forced && !fits {
+                break;
+            }
+            self.unspill_front();
+            if forced {
+                break; // one at a time when over budget; it decodes first
+            }
+        }
+        // spill path: newest decoding sequence out first (the oldest are
+        // closest to completion — evicting them last keeps FCFS latency)
+        while self.engine.kv_resident_bytes() > budget && self.active.len() > 1 {
+            let Some(i) = self.active.iter().rposition(|a| !a.generated.is_empty()) else {
+                break; // only mid-prefill sequences left: nothing to spill
+            };
+            if !self.spill_to_disk(i) {
+                break;
+            }
+        }
+    }
+
+    /// Page `active[i]`'s KV out to the spill file. Returns false (leaving
+    /// the sequence active) if the write failed — over-budget is better
+    /// than losing decode state.
+    fn spill_to_disk(&mut self, i: usize) -> bool {
+        let seq = self.active[i].seq;
+        let snap = self.engine.snapshot_seq(seq, 0).expect("active sequences snapshot cleanly");
+        let ticket = self.active[i].req.id;
+        let bytes = match self.spill.as_mut().expect("caller checked").spill(ticket, &snap) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("[ita-scheduler] spill of request {ticket} failed ({e:#}); kept resident");
+                return false;
+            }
+        };
+        // stable removal: `active` stays in admission order
+        let a = self.active.remove(i);
+        if let Some(spec) = self.spec.as_mut() {
+            spec.drop_seq(a.seq);
+        }
+        self.engine.free_sequence(a.seq);
+        self.metrics.kv_spills += 1;
+        self.metrics.kv_spill_bytes += bytes as u64;
+        if self.trace.enabled() {
+            let mut ev = TraceEvent::at(self.trace.now_us(), TraceKind::Spill);
+            ev.req = ticket;
+            ev.a = snap.len as u64;
+            ev.b = bytes as u64;
+            self.trace.record(ev);
+        }
+        self.spilled.push(SpilledSeq { a, bytes });
+        true
+    }
+
+    /// Restore the oldest spilled sequence into the engine and return it
+    /// to the active set. Spill + restore round-trips the exact snapshot
+    /// bytes, so with quantization off the sequence's subsequent decode is
+    /// byte-identical to never having been spilled (restored pages start
+    /// FP32 either way; a quantizing cache re-quantizes them on the next
+    /// cold sweep).
+    fn unspill_front(&mut self) {
+        let SpilledSeq { mut a, bytes } = self.spilled.remove(0);
+        let ticket = a.req.id;
+        let restored = self
+            .spill
+            .as_mut()
+            .expect("spilled entries imply a spill tier")
+            .restore(ticket)
+            .and_then(|snap| self.engine.restore_sequence(&snap, &a.prompt));
+        match restored {
+            Ok(seq) => {
+                a.seq = seq;
+                self.metrics.kv_unspills += 1;
+                self.metrics.kv_unspill_bytes += bytes as u64;
+                if self.trace.enabled() {
+                    let mut ev = TraceEvent::at(self.trace.now_us(), TraceKind::Unspill);
+                    ev.req = ticket;
+                    ev.a = self.engine.seq_len(seq) as u64;
+                    ev.b = bytes as u64;
+                    self.trace.record(ev);
+                }
+                self.active.push(a);
+            }
+            Err(e) => {
+                // disk or restore failure: degrade to a plain re-prefill —
+                // deterministic decode regenerates the same stream
+                eprintln!(
+                    "[ita-scheduler] unspill of request {ticket} failed ({e:#}); re-prefilling"
+                );
+                self.queue.push_front(QueueEntry::Fresh(a.req, a.enqueued));
+            }
+        }
+    }
+
+    /// Resident KV bytes across the engine's stages — what the budget is
+    /// enforced against (quantized pages count their packed size).
+    pub fn kv_resident_bytes(&self) -> usize {
+        self.engine.kv_resident_bytes()
+    }
+
+    /// Sequences currently paged out to the spill tier.
+    pub fn spilled_len(&self) -> usize {
+        self.spilled.len()
     }
 
     /// Extract the request with wire id `ticket` for migration to another
@@ -857,6 +1081,41 @@ impl Scheduler {
                 Some(QueueEntry::Resume(req, ckpt, _)) => Some((req, Some(*ckpt))),
                 None => None,
             };
+        }
+        if let Some(i) = self.spilled.iter().position(|s| s.a.req.id == ticket) {
+            // a spilled sequence migrates straight from the spill file —
+            // its engine pages are already gone. The snapshot is by value
+            // (keep_prefix is ignored: re-slicing rows for a by-ref export
+            // is not worth the copy it would take here).
+            let SpilledSeq { a, .. } = self.spilled.remove(i);
+            let kv = match self.spill.as_mut().expect("spilled entries imply a spill tier")
+                .restore(ticket)
+            {
+                Ok(kv) => kv,
+                Err(e) => {
+                    // checkpoint-free export: the target re-prefills
+                    eprintln!(
+                        "[ita-scheduler] export of spilled request {ticket} lost its KV \
+                         ({e:#}); exporting checkpoint-free"
+                    );
+                    return Some((a.req, None));
+                }
+            };
+            self.metrics.migrated_out += 1;
+            if self.trace.enabled() {
+                let mut ev = TraceEvent::at(self.trace.now_us(), TraceKind::Export);
+                ev.req = ticket;
+                ev.a = kv.value_rows() as u64;
+                self.trace.record(ev);
+            }
+            let ckpt = DecodeCheckpoint {
+                prompt: a.prompt,
+                generated: a.generated,
+                kv,
+                spec_proposed: a.spec_proposed,
+                spec_accepted: a.spec_accepted,
+            };
+            return Some((a.req, Some(ckpt)));
         }
         let i = self.active.iter().position(|a| a.req.id == ticket)?;
         // stable removal: `active` stays in admission order (see harvest)
@@ -954,6 +1213,35 @@ impl Scheduler {
                 finish: FinishReason::Cancelled,
             });
         }
+        if let Some(i) = self.spilled.iter().position(|s| s.a.req.id == ticket) {
+            // a spilled victim's pages live only in the spill file: drop
+            // the region without reading it back
+            let SpilledSeq { a, .. } = self.spilled.remove(i);
+            self.spill.as_mut().expect("spilled entries imply a spill tier").discard(ticket);
+            self.metrics.preempted_requests += 1;
+            if self.trace.enabled() {
+                let mut ev = TraceEvent::at(self.trace.ts_us(now), TraceKind::Preempt);
+                ev.req = ticket;
+                ev.a = a.generated.len() as u64;
+                self.trace.record(ev);
+            }
+            return Some(GenResult {
+                id: a.req.id,
+                prompt_tokens: a.prompt.len(),
+                skipped_prompt_tokens: a.skipped,
+                text: self.tokenizer.decode(&a.generated),
+                tokens: a.generated,
+                spec_proposed: a.spec_proposed,
+                spec_accepted: a.spec_accepted,
+                ttft_s: a
+                    .first_token_at
+                    .map(|t| t.duration_since(a.enqueued).as_secs_f64())
+                    .unwrap_or(0.0),
+                itl_s: 0.0,
+                total_s: now.duration_since(a.enqueued).as_secs_f64(),
+                finish: FinishReason::Cancelled,
+            });
+        }
         let i = self.active.iter().position(|a| a.req.id == ticket)?;
         // stable removal, as everywhere else: admission order is preserved
         let a = self.active.remove(i);
@@ -1009,31 +1297,74 @@ impl Scheduler {
         std::mem::take(&mut self.streamed)
     }
 
-    /// By-value decode checkpoints of every request that has started
-    /// decoding, keyed by wire id (mid-prefill requests have no decode
-    /// state and are skipped). The worker piggybacks these on its periodic
-    /// metric checkpoints, so if this cartridge later panics the dispatcher
-    /// resumes each request from its last checkpointed decode step instead
-    /// of prefill.
-    pub fn decode_checkpoints(&self) -> Vec<(u64, DecodeCheckpoint)> {
-        self.active
-            .iter()
-            .filter(|a| !a.generated.is_empty())
-            .map(|a| {
-                let kv = self
+    /// Periodic decode-checkpoint updates for every request that has
+    /// started decoding, keyed by wire id (mid-prefill requests have no
+    /// decode state and are skipped). The worker piggybacks these on its
+    /// periodic metric checkpoints, so if this cartridge later panics the
+    /// dispatcher resumes each request from its last checkpointed decode
+    /// step instead of prefill.
+    ///
+    /// The first update per request ships a full [`KvSnapshot`]; steady-
+    /// state updates ship only the rows appended since the previous one as
+    /// a [`KvSnapshotDelta`] naming that checkpoint's chain id — so the
+    /// per-interval checkpoint cost is O(tokens decoded this interval),
+    /// not O(context). Per-ticket channel FIFO ordering makes the chain
+    /// reliable; a receiver that loses the chain drops its stored
+    /// checkpoint and the *next* call here re-ships a full snapshot only
+    /// if this scheduler also lost its state (requeue) — the normal
+    /// degradation is re-prefill, exactly the pre-delta behaviour.
+    ///
+    /// Sequences currently in the spill tier are skipped: spill is
+    /// lossless, their chain state is retained, and the delta chain simply
+    /// resumes after the restore.
+    ///
+    /// [`KvSnapshot`]: crate::host::kv_cache::KvSnapshot
+    pub fn decode_checkpoints(&mut self) -> Vec<(u64, CheckpointUpdate)> {
+        let mut out = Vec::new();
+        for a in &mut self.active {
+            if a.generated.is_empty() {
+                continue;
+            }
+            let committed = self.engine.seq_len(a.seq);
+            self.next_ckpt_id += 1;
+            let id = self.next_ckpt_id;
+            let kv = if a.ckpt_id == 0 {
+                let snap = self
                     .engine
                     .snapshot_seq(a.seq, 0)
                     .expect("active sequences snapshot cleanly");
-                let ckpt = DecodeCheckpoint {
+                self.metrics.ckpt_full_bytes += snap.wire_bytes() as u64;
+                a.ckpt_id = id;
+                a.ckpt_len = snap.len;
+                KvCheckpoint::Full { id, snap }
+            } else {
+                // rows appended since the last checkpoint travel by value;
+                // the `by_ref_len` header names the retained base rows
+                // (min() is defensive — commits are monotone between
+                // checkpoints, rollbacks resolve within a step)
+                let from = a.ckpt_len.min(committed);
+                let rows = self
+                    .engine
+                    .snapshot_seq(a.seq, from)
+                    .expect("active sequences snapshot cleanly");
+                let delta = KvSnapshotDelta { base_id: a.ckpt_id, id, rows };
+                self.metrics.ckpt_delta_bytes += delta.wire_bytes() as u64;
+                a.ckpt_id = id;
+                a.ckpt_len = delta.rows.len;
+                KvCheckpoint::Delta(delta)
+            };
+            out.push((
+                a.req.id,
+                CheckpointUpdate {
                     prompt: a.prompt.clone(),
                     generated: a.generated.clone(),
                     kv,
                     spec_proposed: a.spec_proposed,
                     spec_accepted: a.spec_accepted,
-                };
-                (a.req.id, ckpt)
-            })
-            .collect()
+                },
+            ));
+        }
+        out
     }
 
     /// Longest prefix of `prompt` this cartridge's radix cache holds right
@@ -1070,7 +1401,9 @@ impl Scheduler {
             };
             (a.req.id, bytes)
         });
-        queued.chain(active).collect()
+        // spilled sequences export exactly the snapshot already on disk
+        let spilled = self.spilled.iter().map(|s| (s.a.req.id, s.bytes));
+        queued.chain(active).chain(spilled).collect()
     }
 
     /// Radix-cache occupancy for checkpoint piggybacking (`None` when the
@@ -1182,6 +1515,9 @@ impl Scheduler {
         // established counter keeps its meaning
         let draft_macs = self.spec.as_ref().map_or(0, |s| s.device_macs());
         m.energy_j = (macs + draft_macs) as f64 * self.pj_per_mac * 1e-12;
+        let (quantized, materialized) = self.engine.kv_quant_stats();
+        m.kv_pages_quantized = quantized;
+        m.kv_pages_materialized = materialized;
     }
 
     pub fn engine(&self) -> &Engine {
@@ -1716,6 +2052,80 @@ mod tests {
             assert_eq!(streamed[&r.id], r.tokens, "stream diverged for request {}", r.id);
         }
         assert!(s.take_streamed().is_empty(), "drain must reset the buffer");
+    }
+
+    #[test]
+    fn decode_checkpoints_chain_full_then_delta() {
+        let tiny = crate::config::ModelConfig::TINY;
+        let mut s = Scheduler::new(Engine::synthetic(&tiny, 12), SchedulerOpts::default());
+        let mut r = GenRequest::greedy(0, "delta checkpoint chain", 32);
+        r.stop_at_eos = false;
+        s.submit(r);
+        for _ in 0..4 {
+            s.step().unwrap();
+        }
+        let mut ups = s.decode_checkpoints();
+        assert_eq!(ups.len(), 1);
+        let (ticket, up) = ups.remove(0);
+        assert_eq!(ticket, 0);
+        assert!(matches!(up.kv, KvCheckpoint::Full { .. }), "first update ships the snapshot");
+        let full_bytes = up.kv.wire_bytes();
+        let mut stored = up.fold(None).expect("full update always folds");
+        for _ in 0..3 {
+            s.step().unwrap();
+        }
+        let (_, up) = s.decode_checkpoints().remove(0);
+        let KvCheckpoint::Delta(ref d) = up.kv else { panic!("second update must be a delta") };
+        assert_eq!(d.base_id, stored.0, "delta must extend the stored chain");
+        assert!(up.kv.wire_bytes() < full_bytes, "delta carries only the appended rows");
+        stored = up.fold(Some(stored)).expect("chained delta folds");
+        // the composed checkpoint equals the full snapshot taken right now
+        let seq = s.active[0].seq;
+        let want = s.engine().snapshot_seq(seq, 0).unwrap();
+        assert_eq!(stored.1.kv, want, "base ∘ delta diverged from a full snapshot");
+        assert_eq!(stored.1.generated, s.active[0].generated);
+        // a delta arriving without its base breaks the chain: no fold
+        for _ in 0..2 {
+            s.step().unwrap();
+        }
+        let (_, up) = s.decode_checkpoints().remove(0);
+        assert!(up.fold(None).is_none(), "orphan delta must not produce a checkpoint");
+    }
+
+    #[test]
+    fn kv_budget_spills_and_restores_byte_identically() {
+        let tiny = crate::config::ModelConfig::TINY;
+        let reqs = |s: &mut Scheduler| {
+            for i in 0..3 {
+                let mut r = GenRequest::greedy(i, &format!("spill differential {i}"), 12);
+                r.stop_at_eos = false;
+                s.submit(r);
+            }
+        };
+        let mut vanilla = Scheduler::new(Engine::synthetic(&tiny, 13), SchedulerOpts::default());
+        reqs(&mut vanilla);
+        let mut want = vanilla.run_to_completion().unwrap();
+        want.sort_by_key(|r| r.id);
+
+        // a 1-byte budget forces everything but the front sequence out
+        let opts = SchedulerOpts {
+            kv_mem: KvMemOpts { budget_bytes: 1, spill: true, ..KvMemOpts::default() },
+            ..SchedulerOpts::default()
+        };
+        let mut s = Scheduler::new(Engine::synthetic(&tiny, 13), opts);
+        reqs(&mut s);
+        let mut got = s.run_to_completion().unwrap();
+        got.sort_by_key(|r| r.id);
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.tokens, w.tokens, "spill round-trip changed outputs");
+        }
+        let m = s.metrics();
+        assert!(m.kv_spills > 0, "a 1-byte budget must force spills");
+        assert!(m.kv_unspills > 0, "spilled sequences must come back");
+        assert!(m.kv_spill_bytes >= m.kv_unspill_bytes);
+        assert_eq!(s.spilled_len(), 0, "nothing may be left in the spill tier");
+        assert_eq!(s.engine().cache_stats().2, 0);
     }
 
     #[test]

@@ -88,6 +88,12 @@ pub enum TraceKind {
     /// evicted and its KV pages freed. `a` = tokens generated at eviction,
     /// `b` = KV rows freed.
     Preempt,
+    /// The KV budget paged this sequence out to the disk spill tier.
+    /// `a` = KV rows spilled, `b` = spill-file bytes.
+    Spill,
+    /// The sequence's KV was restored from the spill tier ahead of its
+    /// next decode step. `a` = KV rows restored, `b` = spill-file bytes.
+    Unspill,
 }
 
 impl TraceKind {
@@ -113,6 +119,8 @@ impl TraceKind {
             TraceKind::Cancel => "cancel",
             TraceKind::Shed => "shed",
             TraceKind::Preempt => "preempt",
+            TraceKind::Spill => "spill",
+            TraceKind::Unspill => "unspill",
         }
     }
 
@@ -440,6 +448,9 @@ impl FleetTrace {
             }
             TraceKind::Preempt => {
                 args.num("tokens", ev.a).num("kv_rows_freed", ev.b);
+            }
+            TraceKind::Spill | TraceKind::Unspill => {
+                args.num("rows", ev.a).num("bytes", ev.b);
             }
         }
         args.encode()

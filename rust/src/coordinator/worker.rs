@@ -20,7 +20,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use super::metrics::ServingMetrics;
-use super::request::{DecodeCheckpoint, GenRequest};
+use super::request::{CheckpointUpdate, DecodeCheckpoint, GenRequest};
 use super::scheduler::{Scheduler, SchedulerOpts};
 use super::spec::CartridgeEngines;
 #[cfg(test)]
@@ -88,11 +88,15 @@ pub struct CheckpointReport {
     /// (`ttft`/`itl`) are stripped to keep checkpoints O(1) — the
     /// fixed-footprint `itl_step` histogram rides along.
     pub metrics: ServingMetrics,
-    /// By-value decode checkpoints of every active request, keyed by wire
-    /// id (periodic checkpoints only; empty otherwise). If the cartridge
-    /// later panics, the owner resumes each request from here instead of
-    /// restarting its prefill.
-    pub decode: Vec<(u64, DecodeCheckpoint)>,
+    /// Decode-checkpoint updates of every active request, keyed by wire id
+    /// (periodic checkpoints only; empty otherwise). The first update per
+    /// request carries a full KV snapshot; steady-state updates carry only
+    /// the rows appended since the previous checkpoint
+    /// ([`Scheduler::decode_checkpoints`]). The owner folds each into its
+    /// stored [`DecodeCheckpoint`] ([`CheckpointUpdate::fold`]); if the
+    /// cartridge later panics, it resumes each request from there instead
+    /// of restarting its prefill.
+    pub decode: Vec<(u64, CheckpointUpdate)>,
     /// Radix prefix-cache occupancy (root-to-leaf token paths). `None`
     /// when the cache is disabled or on metrics-only checkpoints — policies
     /// must treat `None` as "no information", never as "empty cache".
@@ -452,14 +456,22 @@ mod tests {
         loop {
             match erx.recv().unwrap() {
                 WorkerEvent::Checkpoint(0, report) => {
-                    if let Some((ticket, ckpt)) = report.decode.first() {
+                    if let Some((ticket, up)) = report.decode.first() {
                         assert_eq!(*ticket, 3);
-                        assert!(!ckpt.generated.is_empty());
+                        assert!(!up.generated.is_empty());
                         assert_eq!(
-                            ckpt.kv.len,
-                            ckpt.prompt.len() + ckpt.generated.len() - 1,
+                            up.kv.committed_len(),
+                            up.prompt.len() + up.generated.len() - 1,
                             "checkpoint KV length invariant"
                         );
+                        if !saw_payload {
+                            // the request's first checkpoint ships the full
+                            // snapshot; later ones ride the delta chain
+                            assert!(
+                                matches!(up.kv, crate::coordinator::request::KvCheckpoint::Full { .. }),
+                                "first periodic checkpoint must be a full snapshot"
+                            );
+                        }
                         // prefix cache is on by default → occupancy rides along
                         assert!(report.prefix_occupancy.is_some());
                         saw_payload = true;

@@ -6,7 +6,7 @@
 //! Section VII-E) — the `host_attention` bench measures exactly this path
 //! and feeds the measured number back into the Table III latency model.
 
-use super::kv_cache::{PagedKvCache, SeqId};
+use super::kv_cache::{DequantScratch, PagedKvCache, SeqId};
 
 /// Attention geometry + RoPE base.
 #[derive(Debug, Clone, Copy)]
@@ -55,11 +55,14 @@ pub struct AttentionScratch {
     /// score matrix [t, n_heads], row-major — filled in one contiguous
     /// sweep over the cached K rows
     scores: Vec<f32>,
+    /// dequantization arena for quantized cold KV pages (unused — and
+    /// unallocated — when the cache is all-FP32)
+    dequant: DequantScratch,
 }
 
 impl AttentionScratch {
     pub fn new() -> Self {
-        AttentionScratch { scores: Vec::new() }
+        AttentionScratch { scores: Vec::new(), dequant: DequantScratch::new() }
     }
 }
 
@@ -125,7 +128,9 @@ pub fn decode_attention(
     let hd = cfg.head_dim;
     let nh = cfg.n_heads;
     let inv_sqrt = 1.0 / (hd as f32).sqrt();
-    let runs = cache.page_runs(seq, layer, t);
+    // dequant-aware: FP pages come back zero-copy, quantized cold pages are
+    // expanded into this thread's scratch arena
+    let runs = cache.page_runs_dequant(seq, layer, t, &mut scratch.dequant);
 
     // pass 1: one contiguous sweep over K rows, all heads per row
     // (row-major traversal: each cached K row is touched exactly once)

@@ -21,9 +21,43 @@ use std::collections::HashMap;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::quant::kv as kvq;
+
 /// Opaque sequence handle.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct SeqId(pub u64);
+
+/// Per-page storage encoding of KV rows (ROADMAP item 3a). `Fp32` is exact;
+/// the block-quantized tags trade bounded error (see
+/// `docs/kv-memory-tiers.md`) for 4×/8× smaller cold pages. The tag names
+/// the *target* encoding for cold pages; hot pages, shared pages, and pages
+/// being written always stay `Fp32`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KvQuantTag {
+    #[default]
+    Fp32,
+    /// INT8 per-token-row symmetric block quantization.
+    Int8Block,
+    /// INT4 (packed nibbles) per-token-row symmetric block quantization.
+    Int4Block,
+}
+
+/// Cold-page quantization policy: pages whose every row lies more than
+/// `hot_window` positions behind the committed length are re-encoded to
+/// `tag`. `Fp32` disables quantization entirely (the default — every
+/// existing byte-differential runs with it).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvQuantPolicy {
+    pub tag: KvQuantTag,
+    /// Number of most-recent positions guaranteed to stay exact FP32.
+    pub hot_window: usize,
+}
+
+impl Default for KvQuantPolicy {
+    fn default() -> Self {
+        KvQuantPolicy { tag: KvQuantTag::Fp32, hot_window: 64 }
+    }
+}
 
 /// Serialized KV state of one sequence — the unit of cross-cartridge
 /// migration. The Split-Brain contract makes this portable by design: all
@@ -178,6 +212,14 @@ impl KvSnapshot {
         if by_ref_len > len {
             bail!("kv snapshot header: by_ref_len {by_ref_len} > len {len}");
         }
+        // geometry sanity: with zero value rows (len == by_ref_len, or a
+        // zero d_model) the size check below degenerates to `bytes == 32`
+        // and would accept ANY declared layer count — and the capacity
+        // pre-allocation would oblige. Cap the geometry at bounds no real
+        // model approaches.
+        if n_layers == 0 || n_layers > 1 << 16 || d_model == 0 || d_model > 1 << 24 {
+            bail!("kv snapshot header: implausible geometry {n_layers}x{d_model}");
+        }
         let rows = len - by_ref_len;
         // checked: a corrupt (or hostile — this is the cross-host wire
         // format) header must fail cleanly, not wrap the size check and
@@ -206,10 +248,276 @@ impl KvSnapshot {
     }
 }
 
-struct Page {
-    /// [page_size, d_model]
+/// Wire magic of the [`KvSnapshotDelta`] format (v2 of the KV wire). The
+/// value is deliberately enormous: a legacy [`KvSnapshot`] header starts
+/// with `n_layers`, which no sane model approaches, so the two formats are
+/// unambiguous from the first 8 bytes. See `docs/kv-snapshot-format.md`.
+pub const KV_DELTA_MAGIC: u64 = u64::from_le_bytes(*b"ITAKVD2\0");
+
+/// Incremental decode checkpoint (ROADMAP item 3b): the KV rows appended
+/// (or re-written after a speculative rollback) since a prior checkpoint,
+/// instead of the whole context. Steady-state checkpoint cost drops from
+/// O(context) to O(checkpoint interval).
+///
+/// Chain semantics: every checkpoint state carries an id; a delta names the
+/// state it extends (`base_id`) and the state it produces (`id`). The
+/// receiver composes `apply(base)` only when its stored checkpoint's id
+/// equals `base_id` — otherwise the chain is broken (a lost or reordered
+/// update) and it must discard its checkpoint and wait for the next full
+/// snapshot rather than apply the delta to the wrong base.
+///
+/// `rows` reuses the [`KvSnapshot`] layout with a twist: `rows.by_ref_len`
+/// is the number of leading base rows *retained* (≤ the base's length —
+/// strictly smaller after a rollback truncated the sequence), and
+/// `rows.len` is the new total length. Rows `by_ref_len..len` travel by
+/// value.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KvSnapshotDelta {
+    /// Checkpoint id this delta extends.
+    pub base_id: u64,
+    /// Checkpoint id of the composed result.
+    pub id: u64,
+    /// The appended rows (`by_ref_len` = retained base rows).
+    pub rows: KvSnapshot,
+}
+
+impl KvSnapshotDelta {
+    /// Serialized size in bytes: 24-byte envelope + the embedded snapshot.
+    pub fn wire_bytes(&self) -> usize {
+        24 + self.rows.wire_bytes()
+    }
+
+    /// Encode: `[magic, base_id, id]` as little-endian u64, then the
+    /// embedded [`KvSnapshot`] bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.wire_bytes());
+        for field in [KV_DELTA_MAGIC, self.base_id, self.id] {
+            out.extend_from_slice(&field.to_le_bytes());
+        }
+        out.extend_from_slice(&self.rows.to_bytes());
+        out
+    }
+
+    /// Decode and validate a [`to_bytes`](KvSnapshotDelta::to_bytes)
+    /// buffer. Hostile input is rejected exactly like the base format:
+    /// truncated envelope, wrong magic, and any embedded-snapshot
+    /// corruption all fail cleanly.
+    pub fn from_bytes(bytes: &[u8]) -> Result<KvSnapshotDelta> {
+        if bytes.len() < 24 {
+            bail!("kv delta truncated: {} envelope bytes", bytes.len());
+        }
+        let word = |i: usize| {
+            let mut b = [0u8; 8];
+            b.copy_from_slice(&bytes[i * 8..(i + 1) * 8]);
+            u64::from_le_bytes(b)
+        };
+        if word(0) != KV_DELTA_MAGIC {
+            bail!("kv delta: bad magic {:#018x}", word(0));
+        }
+        let rows = KvSnapshot::from_bytes(&bytes[24..])?;
+        Ok(KvSnapshotDelta { base_id: word(1), id: word(2), rows })
+    }
+
+    /// Compose this delta onto a **full** base snapshot, producing the full
+    /// snapshot of the new checkpoint state: the base's first
+    /// `rows.by_ref_len` rows (a rollback retains fewer than all of them)
+    /// followed by the delta's by-value rows. The caller is responsible for
+    /// the id check (`base_id` vs its stored checkpoint id); geometry and
+    /// length consistency are validated here.
+    pub fn apply(&self, base: &KvSnapshot) -> Result<KvSnapshot> {
+        if base.by_ref_len != 0 {
+            bail!("kv delta: base snapshot is not fully by-value");
+        }
+        if base.n_layers != self.rows.n_layers || base.d_model != self.rows.d_model {
+            bail!(
+                "kv delta: geometry {}x{} != base {}x{}",
+                self.rows.n_layers,
+                self.rows.d_model,
+                base.n_layers,
+                base.d_model
+            );
+        }
+        let keep = self.rows.by_ref_len;
+        if keep > base.len {
+            bail!("kv delta: retains {keep} rows, base holds {}", base.len);
+        }
+        let d = base.d_model;
+        let rows = self.rows.value_rows();
+        let mut k = Vec::with_capacity(base.n_layers);
+        let mut v = Vec::with_capacity(base.n_layers);
+        for layer in 0..base.n_layers {
+            if self.rows.k[layer].len() != rows * d || self.rows.v[layer].len() != rows * d {
+                bail!("kv delta: layer {layer} row data truncated");
+            }
+            let mut kl = base.k[layer][..keep * d].to_vec();
+            kl.extend_from_slice(&self.rows.k[layer]);
+            let mut vl = base.v[layer][..keep * d].to_vec();
+            vl.extend_from_slice(&self.rows.v[layer]);
+            k.push(kl);
+            v.push(vl);
+        }
+        Ok(KvSnapshot {
+            n_layers: base.n_layers,
+            d_model: d,
+            len: self.rows.len,
+            by_ref_len: 0,
+            k,
+            v,
+        })
+    }
+}
+
+/// One pool page: `page_size` token rows of K and V for one (sequence,
+/// layer) stream, in one of the [`KvQuantTag`] encodings. Quantized
+/// variants store a per-token-row scale for K and V separately.
+#[derive(Clone)]
+enum Page {
+    Fp32 { k: Vec<f32>, v: Vec<f32> },
+    Int8 { k: Vec<i8>, v: Vec<i8>, k_scale: Vec<f32>, v_scale: Vec<f32> },
+    Int4 { k: Vec<u8>, v: Vec<u8>, k_scale: Vec<f32>, v_scale: Vec<f32> },
+}
+
+impl Page {
+    fn fp32(cells: usize) -> Page {
+        Page::Fp32 { k: vec![0.0; cells], v: vec![0.0; cells] }
+    }
+
+    fn is_fp(&self) -> bool {
+        matches!(self, Page::Fp32 { .. })
+    }
+
+    /// Direct FP row storage, if this page is unquantized.
+    fn fp_rows(&self) -> Option<(&[f32], &[f32])> {
+        match self {
+            Page::Fp32 { k, v } => Some((k, v)),
+            _ => None,
+        }
+    }
+
+    /// Dequantize the first `rows` token rows into the caller's buffers
+    /// (`rows * d` floats each). No-op-copy for FP pages.
+    fn dequant_rows_into(&self, d: usize, rows: usize, k_out: &mut [f32], v_out: &mut [f32]) {
+        match self {
+            Page::Fp32 { k, v } => {
+                k_out.copy_from_slice(&k[..rows * d]);
+                v_out.copy_from_slice(&v[..rows * d]);
+            }
+            Page::Int8 { k, v, k_scale, v_scale } => {
+                for r in 0..rows {
+                    kvq::dequant_row_i8(
+                        &k[r * d..(r + 1) * d],
+                        k_scale[r],
+                        &mut k_out[r * d..(r + 1) * d],
+                    );
+                    kvq::dequant_row_i8(
+                        &v[r * d..(r + 1) * d],
+                        v_scale[r],
+                        &mut v_out[r * d..(r + 1) * d],
+                    );
+                }
+            }
+            Page::Int4 { k, v, k_scale, v_scale } => {
+                let stride = d.div_ceil(2);
+                for r in 0..rows {
+                    kvq::dequant_row_i4(
+                        &k[r * stride..(r + 1) * stride],
+                        k_scale[r],
+                        &mut k_out[r * d..(r + 1) * d],
+                    );
+                    kvq::dequant_row_i4(
+                        &v[r * stride..(r + 1) * stride],
+                        v_scale[r],
+                        &mut v_out[r * d..(r + 1) * d],
+                    );
+                }
+            }
+        }
+    }
+
+    /// Re-encode an FP page to `tag`; returns whether a conversion
+    /// happened (already-quantized and FP-target pages are left alone).
+    fn quantize(&mut self, tag: KvQuantTag, page_size: usize, d: usize) -> bool {
+        let Page::Fp32 { k, v } = self else { return false };
+        match tag {
+            KvQuantTag::Fp32 => false,
+            KvQuantTag::Int8Block => {
+                let mut qk = Vec::with_capacity(page_size * d);
+                let mut qv = Vec::with_capacity(page_size * d);
+                let mut ks = Vec::with_capacity(page_size);
+                let mut vs = Vec::with_capacity(page_size);
+                for r in 0..page_size {
+                    let (qr, s) = kvq::quant_row_i8(&k[r * d..(r + 1) * d]);
+                    qk.extend_from_slice(&qr);
+                    ks.push(s);
+                    let (qr, s) = kvq::quant_row_i8(&v[r * d..(r + 1) * d]);
+                    qv.extend_from_slice(&qr);
+                    vs.push(s);
+                }
+                *self = Page::Int8 { k: qk, v: qv, k_scale: ks, v_scale: vs };
+                true
+            }
+            KvQuantTag::Int4Block => {
+                let stride = d.div_ceil(2);
+                let mut qk = Vec::with_capacity(page_size * stride);
+                let mut qv = Vec::with_capacity(page_size * stride);
+                let mut ks = Vec::with_capacity(page_size);
+                let mut vs = Vec::with_capacity(page_size);
+                for r in 0..page_size {
+                    let (qr, s) = kvq::quant_row_i4(&k[r * d..(r + 1) * d]);
+                    qk.extend_from_slice(&qr);
+                    ks.push(s);
+                    let (qr, s) = kvq::quant_row_i4(&v[r * d..(r + 1) * d]);
+                    qv.extend_from_slice(&qr);
+                    vs.push(s);
+                }
+                *self = Page::Int4 { k: qk, v: qv, k_scale: ks, v_scale: vs };
+                true
+            }
+        }
+    }
+
+    /// Expand a quantized page back to FP storage (the write path runs on
+    /// exact rows only); returns whether a conversion happened.
+    fn materialize(&mut self, page_size: usize, d: usize) -> bool {
+        if self.is_fp() {
+            return false;
+        }
+        let mut k = vec![0.0; page_size * d];
+        let mut v = vec![0.0; page_size * d];
+        self.dequant_rows_into(d, page_size, &mut k, &mut v);
+        *self = Page::Fp32 { k, v };
+        true
+    }
+
+    /// Actual storage bytes of this page's encoding (data + scales).
+    fn store_bytes(&self) -> usize {
+        match self {
+            Page::Fp32 { k, v } => (k.len() + v.len()) * 4,
+            Page::Int8 { k, v, k_scale, v_scale } => {
+                k.len() + v.len() + (k_scale.len() + v_scale.len()) * 4
+            }
+            Page::Int4 { k, v, k_scale, v_scale } => {
+                k.len() + v.len() + (k_scale.len() + v_scale.len()) * 4
+            }
+        }
+    }
+}
+
+/// Reusable dequantization arena for [`PagedKvCache::page_runs_dequant`]:
+/// quantized pages are expanded here so the attention kernel reads plain
+/// FP slices either way. One per attention thread (it lives inside
+/// `AttentionScratch`), so concurrent readers of a shared cache never
+/// contend.
+#[derive(Default)]
+pub struct DequantScratch {
     k: Vec<f32>,
     v: Vec<f32>,
+}
+
+impl DequantScratch {
+    pub fn new() -> DequantScratch {
+        DequantScratch::default()
+    }
 }
 
 struct SeqState {
@@ -217,6 +525,9 @@ struct SeqState {
     pages: Vec<Vec<usize>>,
     /// tokens currently stored
     len: usize,
+    /// leading pages already swept by the cold-quantization cursor (the
+    /// same count applies to every layer)
+    cold_pages: usize,
 }
 
 /// Paged KV cache over all layers of one model.
@@ -230,10 +541,15 @@ pub struct PagedKvCache {
     free: Vec<usize>,
     seqs: HashMap<SeqId, SeqState>,
     next_id: u64,
+    quant: KvQuantPolicy,
     /// high-water mark of allocated pages (capacity telemetry)
     pub peak_pages: usize,
     /// pages copied by copy-on-write (sharing telemetry)
     pub cow_copies: u64,
+    /// cold pages re-encoded to the quantized tag (telemetry)
+    pub pages_quantized: u64,
+    /// quantized pages expanded back to FP32 for a write (telemetry)
+    pub pages_materialized: u64,
 }
 
 impl PagedKvCache {
@@ -248,8 +564,11 @@ impl PagedKvCache {
             free: Vec::new(),
             seqs: HashMap::new(),
             next_id: 0,
+            quant: KvQuantPolicy::default(),
             peak_pages: 0,
             cow_copies: 0,
+            pages_quantized: 0,
+            pages_materialized: 0,
         }
     }
 
@@ -261,13 +580,24 @@ impl PagedKvCache {
         self.n_layers
     }
 
+    /// Install a cold-page quantization policy. Applies to pages that *go*
+    /// cold from here on; already-resident pages are swept as their
+    /// sequences advance past the hot window.
+    pub fn set_quant_policy(&mut self, policy: KvQuantPolicy) {
+        self.quant = policy;
+    }
+
+    pub fn quant_policy(&self) -> KvQuantPolicy {
+        self.quant
+    }
+
     /// Register a new sequence.
     pub fn alloc_seq(&mut self) -> SeqId {
         let id = SeqId(self.next_id);
         self.next_id += 1;
         self.seqs.insert(
             id,
-            SeqState { pages: vec![Vec::new(); self.n_layers], len: 0 },
+            SeqState { pages: vec![Vec::new(); self.n_layers], len: 0, cold_pages: 0 },
         );
         id
     }
@@ -285,15 +615,18 @@ impl PagedKvCache {
     }
 
     fn grab_page(&mut self) -> usize {
+        let cells = self.page_size * self.d_model;
         if let Some(idx) = self.free.pop() {
             self.refs[idx] = 1;
+            // a recycled page may carry a stale quantized encoding; hand
+            // out zeroed FP32 so writers never see the previous tenant
+            if !self.pool[idx].is_fp() {
+                self.pool[idx] = Page::fp32(cells);
+            }
             idx
         } else {
             let idx = self.pool.len();
-            self.pool.push(Page {
-                k: vec![0.0; self.page_size * self.d_model],
-                v: vec![0.0; self.page_size * self.d_model],
-            });
+            self.pool.push(Page::fp32(cells));
             self.refs.push(1);
             self.peak_pages = self.peak_pages.max(self.pool.len());
             idx
@@ -388,8 +721,9 @@ impl PagedKvCache {
             let (lo, hi) = self.pool.split_at_mut(old);
             (&hi[0], &mut lo[fresh])
         };
-        dst.k.copy_from_slice(&src.k);
-        dst.v.copy_from_slice(&src.v);
+        // the copy preserves the source encoding; a write into a quantized
+        // COW copy materializes it in append_at, never the shared original
+        *dst = src.clone();
         self.release_page(old);
         self.seqs.get_mut(&id).unwrap().pages[layer][page_no] = fresh;
         self.cow_copies += 1;
@@ -439,9 +773,16 @@ impl PagedKvCache {
         }
         // writes never leak into a page another holder can still read
         let pidx = self.cow_page(id, layer, page_no)?;
-        let page = &mut self.pool[pidx];
-        page.k[slot * d..(slot + 1) * d].copy_from_slice(k);
-        page.v[slot * d..(slot + 1) * d].copy_from_slice(v);
+        // writes land on exact rows only: a quantized target (e.g. a COW
+        // copy of a cold page) is expanded back to FP32 first
+        if self.pool[pidx].materialize(page_size, d) {
+            self.pages_materialized += 1;
+        }
+        let Page::Fp32 { k: pk, v: pv } = &mut self.pool[pidx] else {
+            unreachable!("materialize left a quantized page")
+        };
+        pk[slot * d..(slot + 1) * d].copy_from_slice(k);
+        pv[slot * d..(slot + 1) * d].copy_from_slice(v);
         Ok(())
     }
 
@@ -449,7 +790,41 @@ impl PagedKvCache {
     pub fn advance(&mut self, id: SeqId) -> Result<usize> {
         let state = self.seqs.get_mut(&id).ok_or_else(|| anyhow!("unknown seq"))?;
         state.len += 1;
-        Ok(state.len)
+        let len = state.len;
+        if self.quant.tag != KvQuantTag::Fp32 {
+            self.quantize_cold(id);
+        }
+        Ok(len)
+    }
+
+    /// Sweep newly-cold pages of `id` into the quantized encoding: every
+    /// page whose *last* row has fallen `hot_window` or more positions
+    /// behind the committed length. The per-sequence cursor makes the sweep
+    /// O(new cold pages), not O(context), per advance. Shared pages
+    /// (refcount > 1) are skipped — quantization is a lossy in-place
+    /// rewrite, and other holders (a donor sequence, the radix prefix
+    /// cache) must keep reading exact rows; the cursor still moves, so they
+    /// are simply left FP32 forever rather than re-visited.
+    fn quantize_cold(&mut self, id: SeqId) {
+        let Some(state) = self.seqs.get(&id) else { return };
+        let cold_limit = state.len.saturating_sub(self.quant.hot_window) / self.page_size;
+        let from = state.cold_pages;
+        if cold_limit <= from {
+            return;
+        }
+        let mut targets = Vec::new();
+        for layer_pages in &state.pages {
+            for page_no in from..cold_limit.min(layer_pages.len()) {
+                targets.push(layer_pages[page_no]);
+            }
+        }
+        self.seqs.get_mut(&id).unwrap().cold_pages = cold_limit;
+        let (tag, page_size, d) = (self.quant.tag, self.page_size, self.d_model);
+        for pidx in targets {
+            if self.refs[pidx] == 1 && self.pool[pidx].quantize(tag, page_size, d) {
+                self.pages_quantized += 1;
+            }
+        }
     }
 
     /// Roll the committed length back to `new_len`, releasing this
@@ -478,6 +853,7 @@ impl PagedKvCache {
                 }
             }
             state.len = new_len;
+            state.cold_pages = state.cold_pages.min(keep_pages);
         }
         for idx in doomed {
             self.release_page(idx);
@@ -496,15 +872,28 @@ impl PagedKvCache {
 
     /// Visit the stored K/V rows of (seq, layer) for positions `0..len`;
     /// `f(pos, k_row, v_row)`. Iterates page-contiguously (cache-friendly).
+    /// Quantized pages are dequantized transparently — callers (snapshots,
+    /// tests) always observe FP rows.
     pub fn for_each_kv(&self, id: SeqId, layer: usize, mut f: impl FnMut(usize, &[f32], &[f32])) {
         let Some(state) = self.seqs.get(&id) else { return };
         let d = self.d_model;
         let mut pos = 0;
+        let mut dq_k = Vec::new();
+        let mut dq_v = Vec::new();
         for &pidx in &state.pages[layer] {
             let page = &self.pool[pidx];
             let in_page = (state.len - pos).min(self.page_size);
+            let (pk, pv): (&[f32], &[f32]) = match page.fp_rows() {
+                Some(rows) => rows,
+                None => {
+                    dq_k.resize(in_page * d, 0.0);
+                    dq_v.resize(in_page * d, 0.0);
+                    page.dequant_rows_into(d, in_page, &mut dq_k, &mut dq_v);
+                    (&dq_k, &dq_v)
+                }
+            };
             for slot in 0..in_page {
-                f(pos, &page.k[slot * d..(slot + 1) * d], &page.v[slot * d..(slot + 1) * d]);
+                f(pos, &pk[slot * d..(slot + 1) * d], &pv[slot * d..(slot + 1) * d]);
                 pos += 1;
             }
             if pos >= state.len {
@@ -519,6 +908,9 @@ impl PagedKvCache {
     /// appended this step (decode attends to the token's own fresh K/V
     /// before [`advance`]). The attention hot path works on whole pages
     /// without per-row dispatch.
+    ///
+    /// FP-only: panics on a quantized page. Readers that may encounter
+    /// quantized pages use [`page_runs_dequant`](PagedKvCache::page_runs_dequant).
     pub fn page_runs(&self, id: SeqId, layer: usize, upto: usize) -> Vec<(usize, &[f32], &[f32])> {
         let Some(state) = self.seqs.get(&id) else { return vec![] };
         let d = self.d_model;
@@ -530,12 +922,74 @@ impl PagedKvCache {
             if pos >= limit {
                 break;
             }
-            let page = &self.pool[pidx];
+            let (pk, pv) = self.pool[pidx]
+                .fp_rows()
+                .expect("page_runs on a quantized page; use page_runs_dequant");
             let rows = (limit - pos).min(self.page_size);
-            out.push((pos, &page.k[..rows * d], &page.v[..rows * d]));
+            out.push((pos, &pk[..rows * d], &pv[..rows * d]));
             pos += rows;
         }
         out
+    }
+
+    /// [`page_runs`](PagedKvCache::page_runs) for caches that may hold
+    /// quantized pages: FP pages are returned zero-copy straight from the
+    /// pool; quantized pages are dequantized into `scratch` (one arena per
+    /// attention thread) and the returned slices borrow from there. Same
+    /// `(start_pos, k, v)` contract either way.
+    pub fn page_runs_dequant<'a>(
+        &'a self,
+        id: SeqId,
+        layer: usize,
+        upto: usize,
+        scratch: &'a mut DequantScratch,
+    ) -> Vec<(usize, &'a [f32], &'a [f32])> {
+        let Some(state) = self.seqs.get(&id) else { return vec![] };
+        let d = self.d_model;
+        let capacity = state.pages[layer].len() * self.page_size;
+        let limit = upto.min(capacity);
+        // phase 1: plan the runs, expanding quantized pages into the
+        // scratch arena (the unique mutable borrow ends with this loop)
+        enum Src {
+            Pool(usize),
+            Scratch(usize),
+        }
+        let mut plan = Vec::with_capacity(state.pages[layer].len());
+        let mut pos = 0;
+        let mut used = 0;
+        scratch.k.clear();
+        scratch.v.clear();
+        for &pidx in &state.pages[layer] {
+            if pos >= limit {
+                break;
+            }
+            let rows = (limit - pos).min(self.page_size);
+            let page = &self.pool[pidx];
+            if page.is_fp() {
+                plan.push((pos, rows, Src::Pool(pidx)));
+            } else {
+                scratch.k.resize(used + rows * d, 0.0);
+                scratch.v.resize(used + rows * d, 0.0);
+                page.dequant_rows_into(d, rows, &mut scratch.k[used..], &mut scratch.v[used..]);
+                plan.push((pos, rows, Src::Scratch(used)));
+                used += rows * d;
+            }
+            pos += rows;
+        }
+        // phase 2: materialize slices (shared reborrow of pool + scratch)
+        plan.into_iter()
+            .map(|(start, rows, src)| match src {
+                Src::Pool(pidx) => {
+                    let (pk, pv) = self.pool[pidx].fp_rows().expect("planned as FP");
+                    (start, &pk[..rows * d], &pv[..rows * d])
+                }
+                Src::Scratch(off) => (
+                    start,
+                    &scratch.k[off..off + rows * d],
+                    &scratch.v[off..off + rows * d],
+                ),
+            })
+            .collect()
     }
 
     /// Serialize one sequence's committed KV rows into a portable
@@ -625,9 +1079,22 @@ impl PagedKvCache {
         (self.pool.len(), self.free.len(), self.seqs.len())
     }
 
-    /// Host-RAM bytes currently held by the pool.
+    /// Host-RAM bytes currently held by the pool (free pages included —
+    /// they stay resident until the process exits).
     pub fn pool_bytes(&self) -> usize {
-        self.pool.len() * 2 * self.page_size * self.d_model * 4
+        self.pool.iter().map(Page::store_bytes).sum()
+    }
+
+    /// Bytes of pages some holder still references — what a page *budget*
+    /// is charged against. Quantized pages count at their encoded size, so
+    /// quantization directly buys budget headroom.
+    pub fn resident_bytes(&self) -> usize {
+        self.pool
+            .iter()
+            .zip(&self.refs)
+            .filter(|(_, &r)| r > 0)
+            .map(|(p, _)| p.store_bytes())
+            .sum()
     }
 }
 
@@ -1092,5 +1559,256 @@ mod tests {
         c.append(s, 0, &row(8, 0.0), &row(8, 0.0)).unwrap();
         c.advance(s).unwrap();
         assert_eq!(c.pool_bytes(), 2 * 4 * 8 * 4);
+        assert_eq!(c.resident_bytes(), 2 * 4 * 8 * 4);
+        c.free_seq(s);
+        assert_eq!(c.pool_bytes(), 2 * 4 * 8 * 4, "free pages stay resident");
+        assert_eq!(c.resident_bytes(), 0);
+    }
+
+    fn fill_seq(c: &mut PagedKvCache, s: SeqId, d: usize, layers: usize, tokens: usize) {
+        for t in 0..tokens {
+            for l in 0..layers {
+                let tag = (10 * t + l) as f32 * 0.01;
+                c.append(s, l, &row(d, tag), &row(d, -tag)).unwrap();
+            }
+            c.advance(s).unwrap();
+        }
+    }
+
+    #[test]
+    fn cold_pages_quantize_and_shrink_resident_bytes() {
+        let d = 8;
+        let mut c = PagedKvCache::new(2, d, 4);
+        c.set_quant_policy(KvQuantPolicy { tag: KvQuantTag::Int8Block, hot_window: 8 });
+        let s = c.alloc_seq();
+        fill_seq(&mut c, s, d, 2, 24);
+        // 24 tokens, hot window 8 → positions 0..16 cold → pages 0..4
+        assert_eq!(c.pages_quantized, 8, "4 cold pages × 2 layers");
+        let fp_all = 6 * 2 * 2 * 4 * d * 4; // 6 pages/layer × 2 layers, fp32
+        assert!(c.resident_bytes() < fp_all, "{} !< {fp_all}", c.resident_bytes());
+        // reads still see approximately the written values, exact page
+        // structure: every position visited once, error within scale/2
+        let mut count = 0;
+        c.for_each_kv(s, 1, |pos, k, v| {
+            let tag = (10 * pos + 1) as f32 * 0.01;
+            assert!((k[0] - tag).abs() < 0.01, "pos {pos}: {} vs {tag}", k[0]);
+            assert!((v[0] + tag).abs() < 0.01);
+            count += 1;
+        });
+        assert_eq!(count, 24);
+        // hot rows are untouched FP (page 5 holds rows 20..24)
+        let mut scratch = DequantScratch::new();
+        let runs = c.page_runs_dequant(s, 0, 24, &mut scratch);
+        assert_eq!(runs.len(), 6);
+        let (start, kq, _) = &runs[5];
+        assert_eq!(*start, 20);
+        assert_eq!(kq[0], 2.00, "hot row exact");
+    }
+
+    #[test]
+    fn page_runs_dequant_matches_for_each_kv() {
+        forall("dequant runs agree with row iteration", 40, |g| {
+            let d = g.usize_in(1, 10);
+            let page = g.usize_in(1, 5);
+            let hot = g.usize_in(0, 12);
+            let tag = if g.usize_in(0, 1) == 0 { KvQuantTag::Int8Block } else { KvQuantTag::Int4Block };
+            let mut c = PagedKvCache::new(1, d, page);
+            c.set_quant_policy(KvQuantPolicy { tag, hot_window: hot });
+            let s = c.alloc_seq();
+            let tokens = g.usize_in(1, 30);
+            for _ in 0..tokens {
+                let kr = g.vec_f32_normal(d);
+                let vr = g.vec_f32_normal(d);
+                c.append(s, 0, &kr, &vr).unwrap();
+                c.advance(s).unwrap();
+            }
+            let mut rows_k = Vec::new();
+            c.for_each_kv(s, 0, |_, k, _| rows_k.extend_from_slice(k));
+            let mut scratch = DequantScratch::new();
+            let runs = c.page_runs_dequant(s, 0, tokens, &mut scratch);
+            let mut runs_k = Vec::new();
+            for (_, k, _) in runs {
+                runs_k.extend_from_slice(k);
+            }
+            assert_eq!(rows_k, runs_k);
+        });
+    }
+
+    #[test]
+    fn quantized_cow_append_materializes_and_leaves_sharers_exact() {
+        let d = 4;
+        let mut c = PagedKvCache::new(1, d, 2);
+        c.set_quant_policy(KvQuantPolicy { tag: KvQuantTag::Int8Block, hot_window: 0 });
+        let s = c.alloc_seq();
+        fill_seq(&mut c, s, d, 1, 4); // both pages go cold immediately
+        assert_eq!(c.pages_quantized, 2);
+        // roll back into the quantized last page, then re-append: the write
+        // path must materialize the page back to FP32
+        c.truncate_seq(s, 3).unwrap();
+        c.append(s, 0, &row(d, 9.0), &row(d, 9.0)).unwrap();
+        c.advance(s).unwrap();
+        assert_eq!(c.pages_materialized, 1);
+        let mut last = 0.0;
+        c.for_each_kv(s, 0, |pos, k, _| {
+            if pos == 3 {
+                last = k[0];
+            }
+        });
+        assert_eq!(last, 9.0, "materialized write is exact");
+    }
+
+    #[test]
+    fn shared_pages_never_quantize() {
+        // a donor's pages grafted into another sequence (refcount 2) must
+        // stay FP32 even when the sharer's cold cursor passes them: lossy
+        // rewrites of shared storage would corrupt the other holder
+        let d = 4;
+        let mut c = PagedKvCache::new(1, d, 2);
+        c.set_quant_policy(KvQuantPolicy { tag: KvQuantTag::Int4Block, hot_window: 4 });
+        let donor = c.alloc_seq();
+        for t in 0..4 {
+            // hot window covers the whole donor: nothing quantizes yet
+            c.append(donor, 0, &row(d, 0.123 + t as f32), &row(d, 0.0)).unwrap();
+            c.advance(donor).unwrap();
+        }
+        assert_eq!(c.pages_quantized, 0);
+        let pages = vec![c.seq_pages(donor, 0).unwrap().to_vec()];
+        let b = c.alloc_seq();
+        c.share_pages(b, &pages, 4).unwrap();
+        // drive b far past the hot window so its sweep covers the graft
+        for t in 4..12 {
+            c.append(b, 0, &row(d, t as f32), &row(d, 0.0)).unwrap();
+            c.advance(b).unwrap();
+        }
+        // b's own cold pages quantized; the shared pages (refcount 2) did not
+        assert_eq!(c.pages_quantized, 2, "only b's exclusively-owned cold pages");
+        assert_eq!(c.page_refcount(pages[0][0]), 2);
+        assert_eq!(c.page_refcount(pages[0][1]), 2);
+        c.for_each_kv(donor, 0, |pos, k, _| {
+            assert_eq!(k[0], 0.123 + pos as f32, "shared page stays exact");
+        });
+    }
+
+    #[test]
+    fn recycled_quantized_pages_hand_out_zeroed_fp() {
+        let d = 4;
+        let mut c = PagedKvCache::new(1, d, 2);
+        c.set_quant_policy(KvQuantPolicy { tag: KvQuantTag::Int8Block, hot_window: 0 });
+        let s = c.alloc_seq();
+        fill_seq(&mut c, s, d, 1, 4);
+        assert!(c.pages_quantized > 0);
+        c.free_seq(s);
+        // new sequence reuses the freed (quantized) pages; reads of its own
+        // rows must be exact and stale data must not leak
+        let b = c.alloc_seq();
+        c.append(b, 0, &row(d, 5.0), &row(d, 5.0)).unwrap();
+        c.advance(b).unwrap();
+        assert_eq!(c.stats().0, 2, "pages recycled, not grown");
+        c.for_each_kv(b, 0, |_, k, v| {
+            assert_eq!(k[0], 5.0);
+            assert_eq!(v[0], 5.0);
+        });
+    }
+
+    #[test]
+    fn fp32_policy_never_touches_pages() {
+        // the default policy is the do-nothing path every byte-differential
+        // rides on: no page may change encoding, no counter may move
+        let d = 4;
+        let mut c = PagedKvCache::new(2, d, 2);
+        let s = c.alloc_seq();
+        fill_seq(&mut c, s, d, 2, 12);
+        assert_eq!(c.pages_quantized, 0);
+        assert_eq!(c.pages_materialized, 0);
+        // page_runs (the FP-only fast path) works on every page
+        assert!(!c.page_runs(s, 0, 12).is_empty());
+    }
+
+    #[test]
+    fn delta_apply_composes_to_full_snapshot() {
+        let d = 4;
+        let mut c = PagedKvCache::new(2, d, 3);
+        let a = c.alloc_seq();
+        fill_seq(&mut c, a, d, 2, 5);
+        let base = c.snapshot_seq(a, 0).unwrap();
+        fill_seq(&mut c, a, d, 2, 3); // 3 more tokens → len 8
+        let delta = KvSnapshotDelta {
+            base_id: 7,
+            id: 8,
+            rows: c.snapshot_seq(a, 5).unwrap(),
+        };
+        assert_eq!(delta.rows.value_rows(), 3);
+        let composed = delta.apply(&base).unwrap();
+        let full = c.snapshot_seq(a, 0).unwrap();
+        assert_eq!(composed, full, "base ∘ delta ≡ full snapshot");
+        assert!(delta.wire_bytes() < full.wire_bytes(), "delta is smaller on the wire");
+    }
+
+    #[test]
+    fn delta_apply_handles_rollback_truncation() {
+        // a speculative rollback below the last checkpoint retains fewer
+        // base rows: by_ref_len < base.len truncates on apply
+        let d = 2;
+        let mut c = PagedKvCache::new(1, d, 2);
+        let a = c.alloc_seq();
+        fill_seq(&mut c, a, d, 1, 6);
+        let base = c.snapshot_seq(a, 0).unwrap();
+        c.truncate_seq(a, 4).unwrap();
+        fill_seq(&mut c, a, d, 1, 1); // len 5, rows 4.. rewritten
+        let delta = KvSnapshotDelta { base_id: 1, id: 2, rows: c.snapshot_seq(a, 4).unwrap() };
+        let composed = delta.apply(&base).unwrap();
+        assert_eq!(composed, c.snapshot_seq(a, 0).unwrap());
+        assert_eq!(composed.len, 5);
+    }
+
+    #[test]
+    fn delta_wire_roundtrip_and_hostile_rejection() {
+        let d = 2;
+        let mut c = PagedKvCache::new(1, d, 2);
+        let a = c.alloc_seq();
+        fill_seq(&mut c, a, d, 1, 3);
+        let delta = KvSnapshotDelta { base_id: 3, id: 4, rows: c.snapshot_seq(a, 1).unwrap() };
+        let bytes = delta.to_bytes();
+        assert_eq!(bytes.len(), delta.wire_bytes());
+        assert_eq!(KvSnapshotDelta::from_bytes(&bytes).unwrap(), delta);
+        // truncated envelope / bad magic / corrupt embedded snapshot
+        assert!(KvSnapshotDelta::from_bytes(&bytes[..16]).is_err());
+        let mut evil = bytes.clone();
+        evil[0] ^= 0xFF;
+        assert!(KvSnapshotDelta::from_bytes(&evil).is_err());
+        assert!(KvSnapshotDelta::from_bytes(&bytes[..bytes.len() - 4]).is_err());
+        // a plain KvSnapshot buffer is not mistaken for a delta
+        assert!(KvSnapshotDelta::from_bytes(&delta.rows.to_bytes()).is_err());
+    }
+
+    #[test]
+    fn delta_apply_rejects_bad_bases() {
+        let d = 2;
+        let mut c = PagedKvCache::new(1, d, 2);
+        let a = c.alloc_seq();
+        fill_seq(&mut c, a, d, 1, 4);
+        let base = c.snapshot_seq(a, 0).unwrap();
+        fill_seq(&mut c, a, d, 1, 2);
+        let delta = KvSnapshotDelta { base_id: 1, id: 2, rows: c.snapshot_seq(a, 4).unwrap() };
+        // base with by-ref rows is not a full snapshot
+        let partial = c.snapshot_seq(a, 2).unwrap();
+        assert!(delta.apply(&partial).is_err());
+        // geometry mismatch
+        let mut other = PagedKvCache::new(2, d, 2);
+        let o = other.alloc_seq();
+        fill_seq(&mut other, o, d, 2, 4);
+        assert!(delta.apply(&other.snapshot_seq(o, 0).unwrap()).is_err());
+        // delta retaining more rows than the base holds
+        let short = KvSnapshot {
+            n_layers: 1,
+            d_model: d,
+            len: 2,
+            by_ref_len: 0,
+            k: vec![vec![0.0; 2 * d]],
+            v: vec![vec![0.0; 2 * d]],
+        };
+        assert!(delta.apply(&short).is_err());
+        // the good base still works
+        assert!(delta.apply(&base).is_ok());
     }
 }

@@ -1,0 +1,286 @@
+//! Disk spill tier for cold sequences' KV (ROADMAP item 3c).
+//!
+//! When the paged cache runs over its byte budget, the scheduler serializes
+//! whole idle sequences ([`KvSnapshot`] wire bytes) into a spill file and
+//! frees their pages; the next time the sequence is touched it is restored
+//! page-by-page. This turns "evict = recompute the whole prefill" into
+//! "evict = reload from disk" for idle multi-turn sessions — the same
+//! trade Cambricon-LLM makes with flash-tiered KV.
+//!
+//! File format: a bag of [`KvSnapshot::to_bytes`] records at arbitrary
+//! offsets, tracked only by the in-memory region table (the file is an
+//! extension of process memory, not an interchange format; it is deleted on
+//! drop and never outlives the process). Freed regions are reused
+//! first-fit, with adjacent free regions coalesced, so steady-state
+//! spill/restore churn does not grow the file.
+//!
+//! Plain `Seek` + `Read`/`Write` keep this portable (no unix-only mmap or
+//! pread); one spill file serves one scheduler, so there is no cross-thread
+//! contention to optimize for.
+
+use std::collections::HashMap;
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::kv_cache::KvSnapshot;
+
+/// Distinguishes spill files of schedulers coexisting in one process
+/// (every fleet worker owns one).
+static SPILL_FILE_SEQ: AtomicU64 = AtomicU64::new(0);
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Region {
+    off: u64,
+    len: u64,
+}
+
+/// Append-ish spill file with first-fit region reuse. Keys are caller
+/// tickets; one entry per key.
+pub struct KvSpill {
+    file: File,
+    path: PathBuf,
+    entries: HashMap<u64, Region>,
+    /// freed regions, kept sorted by offset and coalesced
+    free: Vec<Region>,
+    /// file high-water mark (fresh allocations land here)
+    end: u64,
+}
+
+impl KvSpill {
+    /// Create the backing file in the OS temp directory. It is removed on
+    /// drop; a crash leaves at most one stale temp file per worker.
+    pub fn new() -> Result<KvSpill> {
+        let path = std::env::temp_dir().join(format!(
+            "ita-kv-spill-{}-{}.bin",
+            std::process::id(),
+            SPILL_FILE_SEQ.fetch_add(1, Ordering::Relaxed),
+        ));
+        let file = OpenOptions::new()
+            .create_new(true)
+            .read(true)
+            .write(true)
+            .open(&path)
+            .with_context(|| format!("kv spill: create {}", path.display()))?;
+        Ok(KvSpill { file, path, entries: HashMap::new(), free: Vec::new(), end: 0 })
+    }
+
+    /// Write one sequence's snapshot under `key`; returns the bytes spilled.
+    /// A key may hold at most one entry at a time.
+    pub fn spill(&mut self, key: u64, snap: &KvSnapshot) -> Result<usize> {
+        if self.entries.contains_key(&key) {
+            bail!("kv spill: key {key} already spilled");
+        }
+        let bytes = snap.to_bytes();
+        let region = self.alloc(bytes.len() as u64);
+        self.file
+            .seek(SeekFrom::Start(region.off))
+            .and_then(|_| self.file.write_all(&bytes))
+            .with_context(|| format!("kv spill: write {} bytes", bytes.len()))?;
+        self.entries.insert(key, region);
+        Ok(bytes.len())
+    }
+
+    /// Read back and remove the entry under `key`, freeing its region.
+    pub fn restore(&mut self, key: u64) -> Result<KvSnapshot> {
+        let region = self
+            .entries
+            .remove(&key)
+            .ok_or_else(|| anyhow!("kv spill: key {key} not spilled"))?;
+        let mut bytes = vec![0u8; region.len as usize];
+        let read = self
+            .file
+            .seek(SeekFrom::Start(region.off))
+            .and_then(|_| self.file.read_exact(&mut bytes))
+            .with_context(|| format!("kv spill: read {} bytes", region.len));
+        self.release(region);
+        read?;
+        KvSnapshot::from_bytes(&bytes)
+    }
+
+    /// Drop the entry under `key` without reading it back (cancellation —
+    /// the bytes will never be wanted). Returns whether it existed.
+    pub fn discard(&mut self, key: u64) -> bool {
+        match self.entries.remove(&key) {
+            Some(region) => {
+                self.release(region);
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn contains(&self, key: u64) -> bool {
+        self.entries.contains_key(&key)
+    }
+
+    /// Live entries.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Bytes held by live entries (what the budget got back).
+    pub fn spilled_bytes(&self) -> usize {
+        self.entries.values().map(|r| r.len as usize).sum()
+    }
+
+    /// Size of the backing file (high-water mark; free regions included).
+    pub fn file_bytes(&self) -> u64 {
+        self.end
+    }
+
+    /// First-fit over freed regions, else extend the file.
+    fn alloc(&mut self, len: u64) -> Region {
+        for i in 0..self.free.len() {
+            if self.free[i].len >= len {
+                let hit = self.free[i];
+                let leftover = hit.len - len;
+                if leftover == 0 {
+                    self.free.remove(i);
+                } else {
+                    self.free[i] = Region { off: hit.off + len, len: leftover };
+                }
+                return Region { off: hit.off, len };
+            }
+        }
+        let region = Region { off: self.end, len };
+        self.end += len;
+        region
+    }
+
+    /// Return a region to the free list, coalescing with neighbors so
+    /// repeated spill/restore of different-size snapshots cannot shatter
+    /// the file into unusable fragments.
+    fn release(&mut self, region: Region) {
+        let at = self.free.partition_point(|r| r.off < region.off);
+        self.free.insert(at, region);
+        // merge right neighbor, then left
+        if at + 1 < self.free.len() && self.free[at].off + self.free[at].len == self.free[at + 1].off
+        {
+            self.free[at].len += self.free[at + 1].len;
+            self.free.remove(at + 1);
+        }
+        if at > 0 && self.free[at - 1].off + self.free[at - 1].len == self.free[at].off {
+            self.free[at - 1].len += self.free[at].len;
+            self.free.remove(at);
+        }
+    }
+}
+
+impl Drop for KvSpill {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(len: usize, fill: f32) -> KvSnapshot {
+        let d = 4;
+        KvSnapshot {
+            n_layers: 2,
+            d_model: d,
+            len,
+            by_ref_len: 0,
+            k: vec![vec![fill; len * d]; 2],
+            v: vec![vec![-fill; len * d]; 2],
+        }
+    }
+
+    #[test]
+    fn spill_restore_roundtrips_bytes() {
+        let mut sp = KvSpill::new().unwrap();
+        let a = snap(3, 1.5);
+        let b = snap(7, -2.25);
+        let a_bytes = sp.spill(10, &a).unwrap();
+        assert_eq!(a_bytes, a.wire_bytes());
+        sp.spill(11, &b).unwrap();
+        assert_eq!(sp.len(), 2);
+        assert_eq!(sp.spilled_bytes(), a.wire_bytes() + b.wire_bytes());
+        assert!(sp.contains(10));
+        // restore in the opposite order; contents are exact
+        assert_eq!(sp.restore(11).unwrap(), b);
+        assert_eq!(sp.restore(10).unwrap(), a);
+        assert!(sp.is_empty());
+        assert_eq!(sp.spilled_bytes(), 0);
+    }
+
+    #[test]
+    fn duplicate_and_missing_keys_are_rejected() {
+        let mut sp = KvSpill::new().unwrap();
+        sp.spill(1, &snap(2, 0.5)).unwrap();
+        assert!(sp.spill(1, &snap(2, 0.5)).is_err(), "duplicate key");
+        assert!(sp.restore(2).is_err(), "missing key");
+        assert!(sp.contains(1), "failed ops leave the entry intact");
+        assert_eq!(sp.restore(1).unwrap(), snap(2, 0.5));
+    }
+
+    #[test]
+    fn discard_frees_the_region_without_reading() {
+        let mut sp = KvSpill::new().unwrap();
+        sp.spill(1, &snap(4, 1.0)).unwrap();
+        let high_water = sp.file_bytes();
+        assert!(sp.discard(1));
+        assert!(!sp.discard(1), "second discard is a no-op");
+        assert!(sp.is_empty());
+        // the freed region is reused, not leaked
+        sp.spill(2, &snap(4, 2.0)).unwrap();
+        assert_eq!(sp.file_bytes(), high_water);
+    }
+
+    #[test]
+    fn freed_regions_are_reused_not_grown() {
+        let mut sp = KvSpill::new().unwrap();
+        sp.spill(1, &snap(5, 1.0)).unwrap();
+        sp.spill(2, &snap(5, 2.0)).unwrap();
+        let high_water = sp.file_bytes();
+        // churn: restore and re-spill same-size snapshots many times
+        for round in 0..20 {
+            let f = round as f32;
+            sp.restore(1).unwrap();
+            sp.spill(1, &snap(5, f)).unwrap();
+            sp.restore(2).unwrap();
+            sp.spill(2, &snap(5, -f)).unwrap();
+        }
+        assert_eq!(sp.file_bytes(), high_water, "steady-state churn reuses regions");
+        assert_eq!(sp.restore(1).unwrap(), snap(5, 19.0));
+    }
+
+    #[test]
+    fn adjacent_free_regions_coalesce() {
+        let mut sp = KvSpill::new().unwrap();
+        // three small entries back to back, freed out of order
+        sp.spill(1, &snap(1, 1.0)).unwrap();
+        sp.spill(2, &snap(1, 2.0)).unwrap();
+        sp.spill(3, &snap(1, 3.0)).unwrap();
+        let high_water = sp.file_bytes();
+        sp.restore(1).unwrap();
+        sp.restore(3).unwrap();
+        sp.restore(2).unwrap();
+        // one big entry the size of all three must fit without growing the
+        // file — only possible if the free regions merged
+        let big = snap(3, 9.0);
+        assert!(big.wire_bytes() <= high_water as usize);
+        sp.spill(4, &big).unwrap();
+        assert_eq!(sp.file_bytes(), high_water);
+        assert_eq!(sp.restore(4).unwrap(), big);
+    }
+
+    #[test]
+    fn backing_file_is_deleted_on_drop() {
+        let sp = KvSpill::new().unwrap();
+        let path = sp.path.clone();
+        assert!(path.exists());
+        drop(sp);
+        assert!(!path.exists());
+    }
+}

@@ -4,7 +4,9 @@
 //! * [`tokenizer`] — text ↔ token ids (lightweight vocabulary lookup).
 //! * [`embedding`] — token-embedding table lookup.
 //! * [`kv_cache`] — paged KV-cache manager in host RAM, with refcounted
-//!   pages, page sharing, and copy-on-write.
+//!   pages, page sharing, copy-on-write, and cold-page block quantization.
+//! * [`kv_spill`] — disk spill tier paging whole idle sequences' KV out of
+//!   RAM when the cache is over budget.
 //! * [`prefix_cache`] — radix tree of cached prompt prefixes over the
 //!   paged KV pool (cross-request prefill reuse).
 //! * [`attention`] — softmax(QKᵀ/√d)V over the cached context, with RoPE.
@@ -13,12 +15,14 @@
 pub mod attention;
 pub mod embedding;
 pub mod kv_cache;
+pub mod kv_spill;
 pub mod prefix_cache;
 pub mod sampling;
 pub mod tokenizer;
 
 pub use attention::AttentionConfig;
-pub use kv_cache::{PagedKvCache, SeqId};
+pub use kv_cache::{KvQuantPolicy, KvQuantTag, PagedKvCache, SeqId};
+pub use kv_spill::KvSpill;
 pub use prefix_cache::{PrefixCache, PrefixMatch};
 pub use sampling::{sample, SamplingParams};
 pub use tokenizer::ByteTokenizer;

@@ -1,0 +1,113 @@
+//! Block quantization for cold KV-cache rows (ROADMAP item 3a).
+//!
+//! A "block" is one token row of `d_model` floats — the natural unit of the
+//! paged KV cache, where every append writes exactly one row per layer. Rows
+//! are quantized symmetrically with a per-row scale, exactly the
+//! [`quant_act_row`](super::quant_act_row) recipe the CSD activation path
+//! already uses (round-half-to-even, scale floor 1e-8), so the error model
+//! in `docs/kv-memory-tiers.md` carries over: the absolute dequantization
+//! error of any element is at most `scale / 2`, and `scale = max|row| / qmax`.
+//!
+//! INT4 packs two signed nibbles per byte (low nibble first); an odd
+//! `d_model` leaves the final high nibble zero.
+
+use super::qmax;
+
+/// Quantize one row to INT8 with a per-row symmetric scale.
+pub fn quant_row_i8(row: &[f32]) -> (Vec<i8>, f32) {
+    super::quant_act_row(row, 8)
+}
+
+/// Dequantize an INT8 row produced by [`quant_row_i8`] into `out`.
+pub fn dequant_row_i8(q: &[i8], scale: f32, out: &mut [f32]) {
+    assert_eq!(q.len(), out.len());
+    for (o, &v) in out.iter_mut().zip(q) {
+        *o = v as f32 * scale;
+    }
+}
+
+/// Quantize one row to INT4, packed two values per byte (low nibble first).
+/// Returns `(packed, scale)` with `packed.len() == row.len().div_ceil(2)`.
+pub fn quant_row_i4(row: &[f32]) -> (Vec<u8>, f32) {
+    let q = qmax(4) as f32;
+    let m = row.iter().fold(0f32, |acc, v| acc.max(v.abs()));
+    let s = (m / q).max(1e-8);
+    let mut packed = vec![0u8; row.len().div_ceil(2)];
+    for (i, v) in row.iter().enumerate() {
+        let nib = (v / s).round_ties_even().clamp(-q, q) as i8;
+        let bits = (nib as u8) & 0x0F;
+        if i % 2 == 0 {
+            packed[i / 2] = bits;
+        } else {
+            packed[i / 2] |= bits << 4;
+        }
+    }
+    (packed, s)
+}
+
+/// Dequantize an INT4 row produced by [`quant_row_i4`]; `out.len()` is the
+/// original element count.
+pub fn dequant_row_i4(packed: &[u8], scale: f32, out: &mut [f32]) {
+    assert_eq!(packed.len(), out.len().div_ceil(2));
+    for (i, o) in out.iter_mut().enumerate() {
+        let byte = packed[i / 2];
+        let nib = if i % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+        // sign-extend the 4-bit two's-complement value
+        let v = ((nib << 4) as i8) >> 4;
+        *o = v as f32 * scale;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickprop::forall;
+
+    #[test]
+    fn i8_roundtrip_error_bounded_by_half_scale() {
+        forall("kv int8 roundtrip error <= scale/2", 200, |g| {
+            let n = g.usize_in(1, 96);
+            let x = g.vec_f32_normal(n);
+            let (q, s) = quant_row_i8(&x);
+            let mut out = vec![0f32; n];
+            dequant_row_i8(&q, s, &mut out);
+            for (v, dq) in x.iter().zip(&out) {
+                assert!((v - dq).abs() <= s * 0.5 + 1e-6, "{v} {dq} {s}");
+            }
+        });
+    }
+
+    #[test]
+    fn i4_roundtrip_error_bounded_by_half_scale() {
+        forall("kv int4 roundtrip error <= scale/2", 200, |g| {
+            let n = g.usize_in(1, 96);
+            let x = g.vec_f32_normal(n);
+            let (q, s) = quant_row_i4(&x);
+            assert_eq!(q.len(), n.div_ceil(2));
+            let mut out = vec![0f32; n];
+            dequant_row_i4(&q, s, &mut out);
+            for (v, dq) in x.iter().zip(&out) {
+                assert!((v - dq).abs() <= s * 0.5 + 1e-6, "{v} {dq} {s}");
+            }
+        });
+    }
+
+    #[test]
+    fn i4_packs_negative_nibbles() {
+        // row max 7.0 gives scale 1.0: values quantize to themselves
+        let x = [-7.0f32, 7.0, -1.0];
+        let (q, s) = quant_row_i4(&x);
+        assert!((s - 1.0).abs() < 1e-6);
+        let mut out = [0f32; 3];
+        dequant_row_i4(&q, s, &mut out);
+        assert_eq!(out, [-7.0, 7.0, -1.0]);
+    }
+
+    #[test]
+    fn zero_rows_stay_zero() {
+        let (q8, _) = quant_row_i8(&[0.0; 5]);
+        assert!(q8.iter().all(|&v| v == 0));
+        let (q4, _) = quant_row_i4(&[0.0; 5]);
+        assert!(q4.iter().all(|&v| v == 0));
+    }
+}

@@ -9,6 +9,7 @@
 //! 3. the FPGA mapper (shift-add LUT trees).
 
 pub mod csd;
+pub mod kv;
 
 pub use csd::{csd_digits, csd_nonzero, Csd};
 

@@ -5,7 +5,7 @@
 //! referenced prefix nodes. Seeded through `util::prng::Prng` (via the
 //! quickprop harness), so every failure is replayable.
 
-use ita::host::kv_cache::{PagedKvCache, SeqId};
+use ita::host::kv_cache::{KvSnapshot, KvSnapshotDelta, PagedKvCache, SeqId, KV_DELTA_MAGIC};
 use ita::host::prefix_cache::PrefixCache;
 use ita::util::quickprop::forall;
 
@@ -576,4 +576,178 @@ fn prop_interleaved_sequences_never_alias() {
             assert_eq!(rows, lens[w]);
         }
     });
+}
+
+#[test]
+fn prop_delta_chain_composes_to_the_full_snapshot() {
+    // delta checkpoints (ROADMAP item 3b): for ANY history of appends and
+    // speculative rollbacks, a receiver that stores the first full snapshot
+    // and then folds wire-roundtripped deltas onto it must hold exactly the
+    // full snapshot a from-scratch export would produce — structurally,
+    // on the wire, and through an actual restore
+    forall("delta chains compose to full snapshots", 40, |g| {
+        let layers = g.usize_in(1, 3);
+        let d = g.usize_in(1, 6);
+        let page = g.usize_in(1, 4);
+        let mut c = PagedKvCache::new(layers, d, page);
+        let id = c.alloc_seq();
+        let mut tag = 0u32;
+        // receiver state: (chain id, composed full snapshot)
+        let mut stored: Option<(u64, KvSnapshot)> = None;
+        let mut next_id: u64 = 1;
+
+        for _seg in 0..g.usize_in(2, 6) {
+            // mutate between checkpoints: an optional rollback (the
+            // speculative-rejection path — it may cut BELOW the stored
+            // checkpoint's length) followed by fresh appends
+            if g.bool() && c.len(id) > 0 {
+                c.truncate_seq(id, g.usize_in(0, c.len(id))).unwrap();
+            }
+            for _ in 0..g.usize_in(0, 7) {
+                tag += 1;
+                for layer in 0..layers {
+                    let val = (tag * 8 + layer as u32) as f32;
+                    c.append(id, layer, &vec![val; d], &vec![-val; d]).unwrap();
+                }
+                c.advance(id).unwrap();
+            }
+
+            // emit this segment's checkpoint: the first ships the full
+            // snapshot, the rest ship only rows past the retained prefix
+            stored = Some(match stored.take() {
+                None => (next_id, c.snapshot_seq(id, 0).unwrap()),
+                Some((base_id, base)) => {
+                    let keep = base.len.min(c.len(id));
+                    let delta = KvSnapshotDelta {
+                        base_id,
+                        id: next_id,
+                        rows: c.snapshot_seq(id, keep).unwrap(),
+                    };
+                    // the wire roundtrip is lossless
+                    let delta = KvSnapshotDelta::from_bytes(&delta.to_bytes()).unwrap();
+                    (delta.id, delta.apply(&base).unwrap())
+                }
+            });
+            next_id += 1;
+
+            let (_, snap) = stored.as_ref().unwrap();
+            let full = c.snapshot_seq(id, 0).unwrap();
+            assert_eq!(snap, &full, "composed state diverged from the full snapshot");
+            assert_eq!(snap.to_bytes(), full.to_bytes(), "wire encodings diverged");
+        }
+
+        // the composed snapshot actually restores: a fresh sequence rebuilt
+        // from it reads row-for-row identical to the original
+        let (_, snap) = stored.unwrap();
+        let r = c.alloc_seq();
+        c.restore_seq(r, &snap).unwrap();
+        assert_eq!(c.len(r), c.len(id));
+        for l in 0..layers {
+            let mut want: Vec<(Vec<f32>, Vec<f32>)> = Vec::new();
+            c.for_each_kv(id, l, |_pos, k, v| want.push((k.to_vec(), v.to_vec())));
+            let mut got: Vec<(Vec<f32>, Vec<f32>)> = Vec::new();
+            c.for_each_kv(r, l, |_pos, k, v| got.push((k.to_vec(), v.to_vec())));
+            assert_eq!(got, want, "layer {l} rows diverged after restoring the composed state");
+        }
+    });
+}
+
+#[test]
+fn delta_wire_rejects_hostile_and_out_of_order_input() {
+    use ita::coordinator::request::{CheckpointUpdate, DecodeCheckpoint, KvCheckpoint};
+
+    let mut c = PagedKvCache::new(2, 4, 4);
+    let id = c.alloc_seq();
+    for t in 0..6u32 {
+        for l in 0..2 {
+            let val = (t * 10 + l as u32) as f32;
+            c.append(id, l, &[val; 4], &[-val; 4]).unwrap();
+        }
+        c.advance(id).unwrap();
+    }
+    let base = c.snapshot_seq(id, 0).unwrap();
+    for t in 6..8u32 {
+        for l in 0..2 {
+            let val = (t * 10 + l as u32) as f32;
+            c.append(id, l, &[val; 4], &[-val; 4]).unwrap();
+        }
+        c.advance(id).unwrap();
+    }
+    let delta = KvSnapshotDelta { base_id: 1, id: 2, rows: c.snapshot_seq(id, 6).unwrap() };
+    let wire = delta.to_bytes();
+    assert_eq!(KvSnapshotDelta::from_bytes(&wire).unwrap(), delta);
+
+    // truncations: inside the envelope, envelope-only, and mid-payload
+    for cut in [0usize, 8, 23, 24, wire.len() - 3] {
+        assert!(
+            KvSnapshotDelta::from_bytes(&wire[..cut]).is_err(),
+            "accepted a {cut}-byte prefix of a {}-byte delta",
+            wire.len()
+        );
+    }
+    // wrong magic
+    let mut bad = wire.clone();
+    bad[0] ^= 1;
+    assert!(KvSnapshotDelta::from_bytes(&bad).is_err(), "accepted a flipped magic byte");
+    // a legacy full snapshot is not a delta, and a delta is not a legacy
+    // snapshot (its magic reads as an implausible layer count) — the two
+    // wire formats must stay unambiguous from the first 8 bytes
+    assert!(KvSnapshotDelta::from_bytes(&base.to_bytes()).is_err());
+    assert!(KvSnapshot::from_bytes(&wire).is_err());
+
+    // hostile header: zero value rows (len == by_ref_len) with a huge
+    // declared layer count passes a naive size check — it must be rejected
+    // cleanly, not drive a giant allocation
+    let mut hostile = Vec::new();
+    for w in [u64::MAX >> 8, 64, 5, 5] {
+        hostile.extend_from_slice(&w.to_le_bytes());
+    }
+    assert!(KvSnapshot::from_bytes(&hostile).is_err(), "hostile header accepted");
+    // the same header smuggled through the delta envelope
+    let mut wrapped = Vec::new();
+    for w in [KV_DELTA_MAGIC, 1, 2] {
+        wrapped.extend_from_slice(&w.to_le_bytes());
+    }
+    wrapped.extend_from_slice(&hostile);
+    assert!(KvSnapshotDelta::from_bytes(&wrapped).is_err(), "wrapped hostile header accepted");
+
+    // apply() guards: retaining more rows than the base holds…
+    let mut over = delta.clone();
+    over.rows.by_ref_len = base.len + 1;
+    over.rows.len = base.len + 3;
+    assert!(over.apply(&base).is_err(), "delta retained rows the base never had");
+    // …mismatched geometry…
+    let mut skewed = delta.clone();
+    skewed.rows.d_model = 8;
+    assert!(skewed.apply(&base).is_err(), "geometry mismatch accepted");
+    // …and a base that is not fully by value
+    let mut partial = base.clone();
+    partial.by_ref_len = 2;
+    assert!(delta.apply(&partial).is_err(), "by-ref base accepted");
+
+    // out-of-order chains: a delta folded with no stored base, or onto the
+    // wrong chain id, must drop the chain — never compose onto a wrong base
+    let upd = || CheckpointUpdate {
+        prompt: vec![1, 2, 3],
+        generated: vec![4],
+        kv: KvCheckpoint::Delta(delta.clone()),
+        spec_proposed: 0,
+        spec_accepted: 0,
+    };
+    let ckpt = DecodeCheckpoint {
+        prompt: vec![1, 2, 3],
+        generated: vec![4],
+        kv: base.clone(),
+        spec_proposed: 0,
+        spec_accepted: 0,
+    };
+    assert!(upd().fold(None).is_none(), "delta without a stored base must break the chain");
+    assert!(
+        upd().fold(Some((7, ckpt.clone()))).is_none(),
+        "delta onto a mismatched chain id must break the chain"
+    );
+    let (nid, folded) = upd().fold(Some((1, ckpt))).expect("a matching base folds");
+    assert_eq!(nid, 2);
+    assert_eq!(folded.kv.len, 8);
+    assert_eq!(folded.kv, c.snapshot_seq(id, 0).unwrap());
 }

@@ -1,0 +1,205 @@
+//! Logits-error-bound harness for cold-page KV quantization (ROADMAP item
+//! 3a) — the test tier that *pins* what the quantized encodings are allowed
+//! to do to the model's outputs.
+//!
+//! Method: two engines built from the same synthetic weights decode the
+//! same teacher-forced token stream (both are fed the exact engine's greedy
+//! argmax, so their KV contents describe identical token histories and the
+//! logits stay comparable position-for-position). One engine quantizes
+//! cold KV pages per the policy under test; the other stays exact. At
+//! every decode step the harness measures `max |Δlogit|` over the vocab
+//! and checks it against the tag's stated envelope.
+//!
+//! The envelopes are **deliberately generous regression bounds**, not
+//! tight analytical ones: they are scaled to the step's exact-logit L∞
+//! (quantization error is relative to row magnitudes) with an absolute
+//! floor, and sized with several× headroom over what per-token-row
+//! symmetric block quantization produces on the sim model. Their job is to
+//! catch encoding regressions — a broken scale, a sign-extension bug, a
+//! misrouted page — which blow past any such envelope by orders of
+//! magnitude, while never flaking on benign arithmetic drift.
+//!
+//! Greedy argmax: INT8's error sits far below typical top-1 margins, so
+//! its argmax stream is asserted identical outright (here and end-to-end
+//! through the scheduler). INT4 is ~18× coarser, so its identity is
+//! asserted exactly where the bound *guarantees* it — whenever the exact
+//! top-2 margin exceeds twice the step's envelope, a within-bound
+//! perturbation cannot flip the argmax.
+
+use ita::config::ModelConfig;
+use ita::coordinator::engine::Engine;
+use ita::coordinator::request::GenRequest;
+use ita::coordinator::scheduler::{KvMemOpts, Scheduler, SchedulerOpts};
+use ita::host::kv_cache::{KvQuantPolicy, KvQuantTag};
+
+const SEED: u64 = 0x17A2;
+const PROMPT_TOKENS: usize = 48;
+const DECODE_STEPS: usize = 40;
+
+/// Stated error envelopes, per tag: `bound(step) = REL · L∞(exact logits)
+/// + ABS`. INT8 (per-token-row symmetric, 1/254 of the row range per
+/// element) lands well under 25% of the logit scale; INT4 (1/14 of the row
+/// range) under 75%.
+const INT8_REL: f32 = 0.25;
+const INT8_ABS: f32 = 0.25;
+const INT4_REL: f32 = 0.75;
+const INT4_ABS: f32 = 0.75;
+
+fn envelope(tag: KvQuantTag) -> (f32, f32) {
+    match tag {
+        KvQuantTag::Fp32 => (0.0, 0.0),
+        KvQuantTag::Int8Block => (INT8_REL, INT8_ABS),
+        KvQuantTag::Int4Block => (INT4_REL, INT4_ABS),
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Exact top-1 − top-2 gap: if it exceeds `2 · bound`, a perturbation
+/// within `bound` provably cannot change the argmax.
+fn top2_margin(xs: &[f32]) -> f32 {
+    let (mut a, mut b) = (f32::NEG_INFINITY, f32::NEG_INFINITY);
+    for &x in xs {
+        if x > a {
+            b = a;
+            a = x;
+        } else if x > b {
+            b = x;
+        }
+    }
+    a - b
+}
+
+struct Step {
+    max_err: f32,
+    bound: f32,
+    margin: f32,
+    argmax_flipped: bool,
+}
+
+/// Teacher-forced dual-engine run; returns per-step stats plus the
+/// quantizing engine's (pages quantized, pages materialized) counters.
+fn teacher_forced(tag: KvQuantTag, hot_window: usize) -> (Vec<Step>, (u64, u64)) {
+    let cfg = ModelConfig::TINY;
+    let prompt: Vec<u32> = (0..PROMPT_TOKENS).map(|i| ((i * 37 + 11) % cfg.vocab) as u32).collect();
+    let mut exact = Engine::synthetic(&cfg, SEED);
+    let mut quant = Engine::synthetic(&cfg, SEED);
+    quant.set_kv_quant(KvQuantPolicy { tag, hot_window });
+    let e = exact.new_sequence();
+    let q = quant.new_sequence();
+    let mut le = exact.prefill(e, &prompt).unwrap();
+    let mut lq = quant.prefill(q, &prompt).unwrap();
+    let (rel, abs) = envelope(tag);
+    let mut steps = Vec::with_capacity(DECODE_STEPS);
+    for _ in 0..DECODE_STEPS {
+        let linf = le.iter().fold(0f32, |m, x| m.max(x.abs()));
+        let max_err = le
+            .iter()
+            .zip(&lq)
+            .fold(0f32, |m, (a, b)| m.max((a - b).abs()));
+        steps.push(Step {
+            max_err,
+            bound: rel * linf + abs,
+            margin: top2_margin(&le),
+            argmax_flipped: argmax(&le) != argmax(&lq),
+        });
+        let next = argmax(&le) as u32;
+        le = exact.forward(&[e], &[next]).unwrap().row(0).to_vec();
+        lq = quant.forward(&[q], &[next]).unwrap().row(0).to_vec();
+    }
+    (steps, quant.kv_quant_stats())
+}
+
+#[test]
+fn fp32_policy_is_bytewise_inert() {
+    // installing the Fp32 tag — even with a zero hot window — must leave
+    // every logit bit-identical and quantize nothing: this is the
+    // configuration all byte-identity differentials run under
+    let (steps, (quantized, materialized)) = teacher_forced(KvQuantTag::Fp32, 0);
+    for (i, s) in steps.iter().enumerate() {
+        assert_eq!(s.max_err, 0.0, "step {i}: Fp32 policy changed a logit");
+        assert!(!s.argmax_flipped, "step {i}: Fp32 policy changed the argmax");
+    }
+    assert_eq!((quantized, materialized), (0, 0), "Fp32 policy touched a page");
+}
+
+#[test]
+fn quantized_cold_pages_keep_logits_within_the_stated_envelope() {
+    for tag in [KvQuantTag::Int8Block, KvQuantTag::Int4Block] {
+        for hot_window in [0usize, 16, 48] {
+            let (steps, (quantized, _)) = teacher_forced(tag, hot_window);
+            for (i, s) in steps.iter().enumerate() {
+                assert!(
+                    s.max_err <= s.bound,
+                    "{tag:?} hot={hot_window} step {i}: |Δlogit| {} exceeds envelope {}",
+                    s.max_err,
+                    s.bound
+                );
+            }
+            // the run must actually have exercised the encoding: the
+            // context (88 rows) leaves cold pages under every window here
+            assert!(quantized > 0, "{tag:?} hot={hot_window}: no page was ever quantized");
+        }
+    }
+}
+
+#[test]
+fn greedy_argmax_survives_quantization() {
+    // INT8: identity outright, at every step and window
+    for hot_window in [0usize, 16] {
+        let (steps, _) = teacher_forced(KvQuantTag::Int8Block, hot_window);
+        for (i, s) in steps.iter().enumerate() {
+            assert!(!s.argmax_flipped, "int8 hot={hot_window} step {i}: greedy argmax flipped");
+        }
+    }
+    // INT4: identity wherever the envelope guarantees it (margin > 2·bound)
+    for hot_window in [0usize, 16] {
+        let (steps, _) = teacher_forced(KvQuantTag::Int4Block, hot_window);
+        for (i, s) in steps.iter().enumerate() {
+            if s.margin > 2.0 * s.bound {
+                assert!(
+                    !s.argmax_flipped,
+                    "int4 hot={hot_window} step {i}: argmax flipped despite margin {} > 2×bound {}",
+                    s.margin,
+                    s.bound
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn scheduler_greedy_stream_is_identical_with_int8_cold_pages() {
+    // end-to-end: the continuous-batching scheduler with INT8 cold pages
+    // must emit the same greedy token streams as the exact configuration —
+    // the claim `KvMemOpts::quant` documents for the sim workloads
+    let run = |quant: KvQuantTag| {
+        let opts = SchedulerOpts {
+            kv_mem: KvMemOpts { quant, hot_window: 16, ..KvMemOpts::default() },
+            ..SchedulerOpts::default()
+        };
+        let mut s = Scheduler::new(Engine::synthetic(&ModelConfig::TINY, SEED), opts);
+        for i in 0..2 {
+            let mut r = GenRequest::greedy(i, &format!("cold page quantization differential {i}"), 24);
+            r.stop_at_eos = false;
+            s.submit(r);
+        }
+        let mut out = s.run_to_completion().unwrap();
+        out.sort_by_key(|r| r.id);
+        let quantized = s.metrics().kv_pages_quantized;
+        (out.into_iter().map(|r| (r.id, r.tokens)).collect::<Vec<_>>(), quantized)
+    };
+    let (want, exact_pages) = run(KvQuantTag::Fp32);
+    let (got, quant_pages) = run(KvQuantTag::Int8Block);
+    assert_eq!(exact_pages, 0);
+    assert!(quant_pages > 0, "int8 run never quantized a cold page");
+    assert_eq!(got, want, "int8 cold pages changed a greedy stream");
+}

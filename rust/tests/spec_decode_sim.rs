@@ -303,7 +303,10 @@ fn checkpoint_resume_after_panic_is_spec_clean() {
     }
     let ckpts = spec_sched.decode_checkpoints();
     assert_eq!(ckpts.len(), 1, "request should be mid-decode");
-    let (_, ckpt) = ckpts.into_iter().next().unwrap();
+    let (_, update) = ckpts.into_iter().next().unwrap();
+    // the first checkpoint of a request is always a full snapshot, so it
+    // folds without any stored base
+    let (_, ckpt) = update.fold(None).expect("first checkpoint update must be full");
     assert_eq!(
         ckpt.kv.len,
         ckpt.prompt.len() + ckpt.generated.len() - 1,
