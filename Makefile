@@ -7,7 +7,7 @@ ARTIFACTS ?= artifacts
 CONFIGS   ?= tiny,demo-100m
 PY        ?= python3
 
-.PHONY: all build test test-registry-check bench-build bench-smoke smoke trace-check docs docs-check artifacts clean-artifacts
+.PHONY: all build test test-registry-check bench-build bench-smoke smoke trace-check status-check docs docs-check artifacts clean-artifacts
 
 all: build
 
@@ -56,6 +56,15 @@ trace-check:
 		ITA_FLEET_TRACE=trace.json ITA_FLEET_METRICS=metrics.json \
 		cargo run --release --example serve_fleet
 	cargo run --release --example trace_check -- trace.json metrics.json
+
+# Live status-surface smoke: boot serve_fleet with an ephemeral status
+# port, SLOs declared, and tail-sampled tracing, then validate /status
+# (ita-status-v1 JSON schema), /metrics (Prometheus text-format lint +
+# counter monotonicity across two scrapes), and /trace (flight-recorder
+# JSON) against the running fleet. See docs/observability.md.
+status-check:
+	cargo build --release --example serve_fleet --example status_check
+	cargo run --release --example status_check
 
 # Build the public API docs with warnings denied (broken intra-doc links
 # and malformed examples fail). CI runs this; keep it green.

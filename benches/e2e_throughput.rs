@@ -20,6 +20,13 @@
 //! * **tracing overhead** (always runs): one decode workload with the
 //!   request-lifecycle trace recorder off vs on — the off path must stay
 //!   free (≤1% tok/s delta is the acceptance target).
+//! * **live telemetry** (always runs): the same front-door workload at the
+//!   three observability postures — plane off, production (SLOs declared +
+//!   tail-sampled always-on tracing), and full post-mortem tracing — with
+//!   the tail-sampled tok/s overhead recorded (≤3% is the acceptance
+//!   target), plus a per-tenant overload storm whose labeled series give
+//!   each `(tenant, class)` lane its own shed rate and admitted-ITL tail.
+//!   The contract under test is `docs/observability.md`.
 //! * **kv capacity sweep** (always runs): peak resident KV bytes per
 //!   session under fp32/int8/int4 cold-page encodings (the
 //!   sessions-per-arena win of quantized cold pages), plus fp32/int8 legs
@@ -47,12 +54,13 @@ use std::time::{Duration, Instant};
 use ita::config::ModelConfig;
 use ita::coordinator::engine::Engine;
 use ita::coordinator::fleet::{Fleet, LeastLoaded, PrefixAffinity, Rebalance};
-use ita::coordinator::frontdoor::{FrontDoor, FrontDoorOpts, SubmitError};
+use ita::coordinator::frontdoor::{FrontDoor, FrontDoorOpts, QoS, SubmitError};
 use ita::coordinator::metrics::ServingMetrics;
 use ita::coordinator::pipeline::PipelineEngine;
 use ita::coordinator::request::GenRequest;
 use ita::coordinator::scheduler::{KvMemOpts, Scheduler, SchedulerOpts};
 use ita::coordinator::spec::{CartridgeEngines, SpecOpts};
+use ita::coordinator::telemetry::SloSpec;
 use ita::coordinator::workload::{self, Arrivals, WorkloadSpec};
 use ita::device::pjrt::PjrtDevice;
 use ita::device::sim::SimDevice;
@@ -305,6 +313,178 @@ fn bench_tracing_overhead(n_requests: usize, max_tokens: usize) -> String {
     j.float("tok_per_s_untraced", off);
     j.float("tok_per_s_traced", on);
     j.float("delta_pct", delta_pct);
+    j.encode()
+}
+
+/// Live-observability-plane cost: the same streaming front-door workload
+/// at the three postures — plane effectively off (no SLOs, no tracing),
+/// production (SLOs declared + tail-sampled always-on tracing under a hard
+/// event budget), and full post-mortem tracing (SLOs + retain-everything
+/// sink). The tail-sampled tok/s overhead against the off baseline is the
+/// ≤3% acceptance number; the record keeps it measurable across PRs. Then
+/// a per-tenant overload storm through a tight queue budget: the labeled
+/// series give each `(tenant, class)` lane its own shed rate, admitted-ITL
+/// tail, and queue-wait percentiles, with any burn-rate alert state at
+/// shutdown recorded alongside. Returns the JSON record.
+fn bench_live_telemetry(n_requests: usize, max_tokens: usize) -> String {
+    // regime = (label, trace_capacity, tail_budget, SLOs declared)
+    let regimes: [(&str, usize, Option<usize>, bool); 3] = [
+        ("off", 0, None, false),
+        ("tail_sampled", 1 << 14, Some(4096), true),
+        ("full", 1 << 14, None, true),
+    ];
+    let mut records = Vec::new();
+    let mut rates = Vec::new();
+    for (label, trace_capacity, tail, slo) in regimes {
+        let opts = SchedulerOpts { trace_capacity, ..SchedulerOpts::default() };
+        let slo_spec = if slo {
+            Some(SloSpec { p99_itl_s: Some(0.05), availability: Some(0.99), ..SloSpec::default() })
+        } else {
+            None
+        };
+        let door_opts =
+            FrontDoorOpts { slo: slo_spec, trace_tail_budget: tail, ..FrontDoorOpts::default() };
+        let front = FrontDoor::start(
+            2,
+            |_id| Ok(Engine::synthetic(&ModelConfig::TINY, 0x17A)),
+            opts,
+            door_opts,
+        )
+        .expect("front door start");
+        let t0 = Instant::now();
+        let streams: Vec<_> = (0..n_requests)
+            .map(|i| {
+                let mut r = GenRequest::greedy(
+                    i as u64,
+                    &format!("telemetry regime stream {i}"),
+                    max_tokens,
+                );
+                r.stop_at_eos = false;
+                let lane = QoS::default().for_tenant((i % 3) as u64 + 1, 1);
+                front.submit_with(r, lane).expect("uncontended submit")
+            })
+            .collect();
+        let mut tokens = 0usize;
+        for s in streams {
+            tokens += s.wait().expect("request completes").tokens.len();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let m = front.shutdown().expect("fleet shutdown");
+        let tok_per_s = tokens as f64 / wall;
+        rates.push(tok_per_s);
+        println!(
+            "bench e2e/live-telemetry {label:<12} {tokens:>5} tokens in {wall:>6.2}s = \
+             {tok_per_s:>7.1} tok/s  ({} tenant series, {} trace events dropped)",
+            m.tenants.len(),
+            m.trace_dropped_total,
+        );
+        let mut j = Json::default();
+        j.str("regime", label);
+        j.num("requests", n_requests);
+        j.num("tokens", tokens);
+        j.float("wall_s", wall);
+        j.float("tok_per_s", tok_per_s);
+        j.num("tenant_series", m.tenants.len());
+        j.num("trace_dropped_total", m.trace_dropped_total);
+        records.push(j.encode());
+    }
+    let tail_overhead_pct = (rates[0] - rates[1]) / rates[0] * 100.0;
+    let full_overhead_pct = (rates[0] - rates[2]) / rates[0] * 100.0;
+    println!(
+        "bench e2e/live-telemetry tail-sampled overhead {tail_overhead_pct:+.2}% vs off \
+         (acceptance ≤3%), full tracing {full_overhead_pct:+.2}%"
+    );
+
+    // per-tenant overload storm: one cartridge, two decode slots, a tight
+    // queue budget — three (tenant, class) lanes share the door and the
+    // labeled series split the storm's damage per lane
+    let opts = SchedulerOpts { max_active: 2, ..SchedulerOpts::default() };
+    let door_opts = FrontDoorOpts {
+        queue_budget_s: Some(0.05),
+        slo: Some(SloSpec { availability: Some(0.99), ..SloSpec::default() }),
+        ..FrontDoorOpts::default()
+    };
+    let front = FrontDoor::start(
+        1,
+        |_id| Ok(Engine::synthetic(&ModelConfig::TINY, 0x17A)),
+        opts,
+        door_opts,
+    )
+    .expect("front door start");
+    let lanes = [
+        QoS::interactive().for_tenant(1, 1),
+        QoS::default().for_tenant(2, 1),
+        QoS::batch().for_tenant(3, 1),
+    ];
+    // serial warmup teaches the admission controller its drain rate
+    for i in 0..4u64 {
+        let mut r = GenRequest::greedy(1000 + i, "warm the estimator", 8);
+        r.stop_at_eos = false;
+        front.submit_with(r, lanes[1]).expect("warmup admits").wait().expect("completes");
+    }
+    let offered = 48usize;
+    let t0 = Instant::now();
+    let mut streams = Vec::new();
+    let mut shed = 0usize;
+    for i in 0..offered {
+        let mut r = GenRequest::greedy(i as u64, &format!("tenant storm {i}"), 16);
+        r.stop_at_eos = false;
+        match front.submit_with(r, lanes[i % 3]) {
+            Ok(s) => streams.push(s),
+            Err(SubmitError::Overloaded { .. }) => shed += 1,
+            Err(SubmitError::Closed) => panic!("fleet closed mid-bench"),
+        }
+    }
+    let admitted = streams.len();
+    for s in streams {
+        s.wait().expect("admitted request completes");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = front.shutdown().expect("fleet shutdown");
+    let mut rows = Vec::new();
+    for t in &m.tenants {
+        println!(
+            "bench e2e/tenant-overload t{} {:<11} admitted {:>2}, shed {:>2}, \
+             itl p99 {:>7.2} ms, wait p99 {:>7.2} ms",
+            t.tenant,
+            t.class,
+            t.admitted,
+            t.shed,
+            t.itl.percentile(99.0) * 1e3,
+            t.queue_wait.percentile(99.0) * 1e3,
+        );
+        let mut r = Json::default();
+        r.num("tenant", t.tenant);
+        r.str("class", t.class);
+        r.num("admitted", t.admitted);
+        r.num("shed", t.shed);
+        r.num("completed", t.requests_completed);
+        r.float("itl_p99_ms", t.itl.percentile(99.0) * 1e3);
+        r.float("queue_wait_p99_ms", t.queue_wait.percentile(99.0) * 1e3);
+        rows.push(r.encode());
+    }
+    let mut alerts = Vec::new();
+    for a in &m.alerts {
+        let mut r = Json::default();
+        r.str("slo", a.slo);
+        r.str("state", a.state.name());
+        r.float("fast_burn", a.fast_burn);
+        r.float("slow_burn", a.slow_burn);
+        alerts.push(r.encode());
+    }
+
+    let mut j = Json::default();
+    j.put("regimes", json_array(&records));
+    j.float("tail_overhead_pct", tail_overhead_pct);
+    j.float("full_overhead_pct", full_overhead_pct);
+    let mut storm = Json::default();
+    storm.num("offered", offered);
+    storm.num("admitted", admitted);
+    storm.num("shed", shed);
+    storm.float("wall_s", wall);
+    storm.put("tenants", json_array(&rows));
+    storm.put("alerts", json_array(&alerts));
+    j.put("tenant_overload", storm.encode());
     j.encode()
 }
 
@@ -782,6 +962,10 @@ fn main() {
     // request-lifecycle tracing must be free when off: same workload with
     // the recorder disabled vs live, tok/s delta in the record
     let tracing_overhead = bench_tracing_overhead(8, 64);
+    // the live observability plane at its three postures (off, tail-sampled
+    // production, full post-mortem) + a per-tenant overload storm whose
+    // labeled series split the damage per (tenant, class) lane
+    let live_telemetry = bench_live_telemetry(8, 64);
     // KV memory tiers: peak per-session footprint under each cold-page
     // encoding (the session-capacity win of int8/int4), then fp32 and int8
     // under a deliberately tight 16 KiB budget with the disk spill tier
@@ -827,7 +1011,11 @@ fn main() {
     // v7: added the kv_capacity sweep (peak resident KV bytes per session
     //     under fp32/int8/int4 cold pages, sessions-per-arena, spill-tier
     //     churn under a tight budget, full vs delta checkpoint bytes)
-    root.num("schema_version", 7);
+    // v8: added the live_telemetry record (tok/s at the off / tail-sampled
+    //     / full-tracing observability postures with the tail-sampled
+    //     overhead pin, plus the per-tenant overload storm: per-lane shed
+    //     rate, admitted-ITL and queue-wait p99s, alert state at shutdown)
+    root.num("schema_version", 8);
     root.put("fleet_sweep", json_array(&fleet_sweep));
     root.put("shared_prefix", shared_prefix);
     root.put("migration", migration);
@@ -835,6 +1023,7 @@ fn main() {
     root.put("spec_decode", json_array(&spec_sweep));
     root.put("pipeline", json_array(&pipeline_sweep));
     root.put("tracing_overhead", tracing_overhead);
+    root.put("live_telemetry", live_telemetry);
     root.put("kv_capacity", json_array(&kv_capacity_sweep));
     root.put("overload", json_array(&overload_sweep));
     let path = std::env::var("ITA_BENCH_JSON").unwrap_or_else(|_| "BENCH_e2e.json".into());

@@ -4,12 +4,15 @@
 //! breakdowns (the paper's Eq. 7–11 interface accounting stays per-device).
 //!
 //!     cargo run --release --example serve_fleet -- [--trace out.json]
-//!     [--metrics metrics.json]
+//!     [--metrics metrics.json] [--status-port 9090]
 //!     [ITA_FLEET_CARTRIDGES=4] [ITA_FLEET_REQUESTS=32] [ITA_FLEET_TOKENS=16]
 //!     [ITA_FLEET_DISPATCH=affinity|least-loaded|rebalance|energy]
 //!     [ITA_FLEET_TRACE=out.json] [ITA_FLEET_METRICS=metrics.json]
 //!     [ITA_FLEET_TARGET_ITL_MS=10] [ITA_FLEET_QUEUE_BUDGET_MS=250]
 //!     [ITA_FLEET_ADAPTIVE_PREFILL=1]
+//!     [ITA_FLEET_STATUS_PORT=9090] [ITA_FLEET_STATUS_LINGER_MS=0]
+//!     [ITA_FLEET_SLO_ITL_MS=50] [ITA_FLEET_SLO_AVAILABILITY=0.999]
+//!     [ITA_FLEET_TRACE_TAIL=16384]
 //!
 //! Runs artifact-free: each cartridge is an `Engine::synthetic` SimDevice
 //! (identical weights per cartridge, as if N copies of one neural cartridge
@@ -32,7 +35,19 @@
 //! <https://ui.perfetto.dev>. With `--metrics` it writes the unified
 //! `MetricsRegistry` snapshot as JSON plus a Prometheus text exposition at
 //! `<path>.prom`. See `docs/observability.md`.
+//!
+//! With `--status-port` (or `ITA_FLEET_STATUS_PORT`; port `0` = ephemeral)
+//! a dependency-free HTTP endpoint serves the live observability plane
+//! while the workload runs: `/metrics` (Prometheus text), `/status`
+//! (positional `StatusSnapshot` JSON), `/trace` (flight-recorder tail).
+//! `ITA_FLEET_SLO_ITL_MS` / `ITA_FLEET_SLO_AVAILABILITY` declare SLOs for
+//! burn-rate alerting, `ITA_FLEET_TRACE_TAIL` switches tracing to
+//! tail-based sampling under that event budget, and
+//! `ITA_FLEET_STATUS_LINGER_MS` keeps the endpoint up after the workload
+//! drains (for scrapers — see `examples/status_check.rs`). All of it is
+//! **off by default**.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
@@ -44,7 +59,8 @@ use ita::coordinator::frontdoor::{FrontDoor, FrontDoorOpts, SubmitError};
 use ita::coordinator::metrics::MetricsRegistry;
 use ita::coordinator::scheduler::SchedulerOpts;
 use ita::coordinator::stream::StreamItem;
-use ita::coordinator::workload::{self, Arrivals, WorkloadSpec};
+use ita::coordinator::telemetry::SloSpec;
+use ita::coordinator::workload::{self, Arrivals, TimedRequest, WorkloadSpec};
 
 fn env_or(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -79,12 +95,28 @@ fn main() -> Result<()> {
     };
     let trace_path = arg_or_env("--trace", "ITA_FLEET_TRACE");
     let metrics_path = arg_or_env("--metrics", "ITA_FLEET_METRICS");
+    let status_port: Option<u16> =
+        arg_or_env("--status-port", "ITA_FLEET_STATUS_PORT").and_then(|v| v.parse().ok());
+    let linger_s = env_ms("ITA_FLEET_STATUS_LINGER_MS").unwrap_or(0.0);
     // SLO knobs — all off by default, so the stock run never sheds or
     // cancels and the trace rail (examples/trace_check.rs) stays exact
+    let slo_itl = env_ms("ITA_FLEET_SLO_ITL_MS");
+    let slo_avail = std::env::var("ITA_FLEET_SLO_AVAILABILITY")
+        .ok()
+        .and_then(|v| v.parse::<f64>().ok());
+    let slo = (slo_itl.is_some() || slo_avail.is_some()).then(|| SloSpec {
+        p99_itl_s: slo_itl,
+        availability: slo_avail,
+        ..SloSpec::default()
+    });
     let door = FrontDoorOpts {
         target_itl_s: env_ms("ITA_FLEET_TARGET_ITL_MS"),
         queue_budget_s: env_ms("ITA_FLEET_QUEUE_BUDGET_MS"),
         adaptive_prefill: std::env::var("ITA_FLEET_ADAPTIVE_PREFILL").is_ok(),
+        slo,
+        trace_tail_budget: std::env::var("ITA_FLEET_TRACE_TAIL")
+            .ok()
+            .and_then(|v| v.parse().ok()),
     };
 
     println!("== ITA fleet serving driver ==");
@@ -97,7 +129,7 @@ fn main() -> Result<()> {
     );
 
     let mut opts = SchedulerOpts::default();
-    if trace_path.is_some() {
+    if trace_path.is_some() || door.trace_tail_budget.is_some() {
         // per-cartridge ring: plenty for the smoke workloads, drops oldest
         // (and reports the drop count in the trace) if a run outgrows it
         opts.trace_capacity = 1 << 16;
@@ -132,46 +164,37 @@ fn main() -> Result<()> {
     );
 
     let t0 = Instant::now();
-    let mut streams = Vec::new();
     let mut shed = 0usize;
-    for tr in timed {
-        let wait = tr.at_s - t0.elapsed().as_secs_f64();
-        if wait > 0.0 {
-            std::thread::sleep(Duration::from_secs_f64(wait));
-        }
-        match front.submit(tr.request) {
-            Ok(s) => streams.push(s),
-            Err(SubmitError::Overloaded { projected_wait_s, budget_s }) => {
-                shed += 1;
-                eprintln!(
-                    "[shed] projected queue wait {:.0}ms > budget {:.0}ms",
-                    projected_wait_s * 1e3,
-                    budget_s * 1e3
-                );
-            }
-            Err(SubmitError::Closed) => bail!("fleet closed during submission"),
-        }
-    }
-    // drain every stream incrementally and hold the front door to its
-    // contract: the concatenated stream equals the final result, exactly
     let mut total_tokens = 0usize;
     let mut token_batches = 0usize;
-    for mut s in streams {
-        let mut streamed = Vec::new();
-        let result = loop {
-            match s.recv() {
-                Some(StreamItem::Tokens(t)) => {
-                    token_batches += 1;
-                    streamed.extend(t);
-                }
-                Some(StreamItem::End(r)) => break *r,
-                None => bail!("a stream was severed before its request completed"),
-            }
-        };
-        assert_eq!(streamed, result.tokens, "stream must concatenate to the final result");
-        total_tokens += result.tokens.len();
-    }
-    let wall = t0.elapsed().as_secs_f64();
+    let mut wall = 0.0f64;
+    // the status server borrows the front door for the workload's duration
+    // (plus the linger window), so both live inside one thread scope
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|scope| -> Result<()> {
+        if let Some(port) = status_port {
+            let listener = std::net::TcpListener::bind(("127.0.0.1", port))?;
+            listener.set_nonblocking(true)?;
+            // parseable announcement (port 0 binds an ephemeral port);
+            // flushed because a piped stdout is block-buffered and
+            // scrapers wait on this exact line
+            println!("status: listening on http://{}", listener.local_addr()?);
+            use std::io::Write as _;
+            std::io::stdout().flush()?;
+            scope.spawn(|| serve_status(listener, &front, &stop));
+        }
+        // `stop` is stored on every exit path — an early bail must not
+        // leave the server thread spinning past the scope's end
+        let run =
+            run_workload(&front, timed, t0, &mut shed, &mut total_tokens, &mut token_batches);
+        wall = t0.elapsed().as_secs_f64();
+        // hold the endpoint open for scrapers before tearing down
+        if run.is_ok() && status_port.is_some() && linger_s > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(linger_s));
+        }
+        stop.store(true, Ordering::Relaxed);
+        run
+    })?;
 
     let (m, trace) = front.shutdown_traced()?;
     println!("\n== results ==");
@@ -238,4 +261,104 @@ fn main() -> Result<()> {
         println!("metrics: snapshot -> {path} (JSON) + {prom} (Prometheus)");
     }
     Ok(())
+}
+
+/// Submit the timed workload through the front door at its declared
+/// arrival times, then drain every stream and hold the exactly-once
+/// contract. Counters accumulate into the caller's slots so the report
+/// survives an early error.
+fn run_workload(
+    front: &FrontDoor,
+    timed: Vec<TimedRequest>,
+    t0: Instant,
+    shed: &mut usize,
+    total_tokens: &mut usize,
+    token_batches: &mut usize,
+) -> Result<()> {
+    let mut streams = Vec::new();
+    for tr in timed {
+        let wait = tr.at_s - t0.elapsed().as_secs_f64();
+        if wait > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(wait));
+        }
+        match front.submit(tr.request) {
+            Ok(s) => streams.push(s),
+            Err(SubmitError::Overloaded { projected_wait_s, budget_s }) => {
+                *shed += 1;
+                eprintln!(
+                    "[shed] projected queue wait {:.0}ms > budget {:.0}ms",
+                    projected_wait_s * 1e3,
+                    budget_s * 1e3
+                );
+            }
+            Err(SubmitError::Closed) => bail!("fleet closed during submission"),
+        }
+    }
+    // drain every stream incrementally and hold the front door to its
+    // contract: the concatenated stream equals the final result, exactly
+    for mut s in streams {
+        let mut streamed = Vec::new();
+        let result = loop {
+            match s.recv() {
+                Some(StreamItem::Tokens(t)) => {
+                    *token_batches += 1;
+                    streamed.extend(t);
+                }
+                Some(StreamItem::End(r)) => break *r,
+                None => bail!("a stream was severed before its request completed"),
+            }
+        };
+        assert_eq!(streamed, result.tokens, "stream must concatenate to the final result");
+        *total_tokens += result.tokens.len();
+    }
+    Ok(())
+}
+
+/// Minimal dependency-free HTTP/1.1 responder for the observability plane:
+/// `/metrics` (Prometheus text format), `/status` (positional
+/// [`StatusSnapshot`](ita::coordinator::StatusSnapshot) JSON), `/trace`
+/// (flight-recorder tail JSON). One request per connection, nonblocking
+/// accept so the `stop` flag is honoured within ~10 ms.
+fn serve_status(listener: std::net::TcpListener, front: &FrontDoor, stop: &AtomicBool) {
+    use std::io::{Read as _, Write as _};
+    while !stop.load(Ordering::Relaxed) {
+        let mut conn = match listener.accept() {
+            Ok((c, _)) => c,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+            Err(_) => return,
+        };
+        let _ = conn.set_read_timeout(Some(Duration::from_millis(500)));
+        let mut buf = [0u8; 1024];
+        let n = conn.read(&mut buf).unwrap_or(0);
+        let req = String::from_utf8_lossy(&buf[..n]);
+        let path = req.split_whitespace().nth(1).unwrap_or("/");
+        let (status_line, content_type, body) = match path {
+            "/metrics" => match front.metrics() {
+                Ok(m) => (
+                    "200 OK",
+                    "text/plain; version=0.0.4",
+                    MetricsRegistry::from_fleet(m).snapshot().to_prometheus(),
+                ),
+                Err(e) => ("500 Internal Server Error", "text/plain", e.to_string()),
+            },
+            "/status" => match front.status() {
+                Ok(s) => ("200 OK", "application/json", s.to_json()),
+                Err(e) => ("500 Internal Server Error", "text/plain", e.to_string()),
+            },
+            "/trace" => match front.status() {
+                Ok(s) => ("200 OK", "application/json", s.trace_json()),
+                Err(e) => ("500 Internal Server Error", "text/plain", e.to_string()),
+            },
+            _ => ("404 Not Found", "text/plain", "see /metrics /status /trace\n".to_string()),
+        };
+        let _ = write!(
+            conn,
+            "HTTP/1.1 {status_line}\r\nContent-Type: {content_type}\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        );
+    }
 }

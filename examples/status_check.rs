@@ -1,0 +1,244 @@
+//! End-to-end checker for the live status surface: boots a real
+//! `serve_fleet --status-port 0` sibling process, waits for its port
+//! announcement, then validates the three endpoints while the fleet is
+//! serving:
+//!
+//! * `/status` — well-formed `ita-status-v1` JSON: schema tag, numeric
+//!   `wall_s`/`queued`/`urgent`, a non-empty `cartridges` array with the
+//!   occupancy fields, `queues`/`alerts`/`tenants` arrays, and the
+//!   flight-recorder `trace` object;
+//! * `/metrics` — Prometheus text-format lint (metric-name and label
+//!   syntax, parseable sample values, no duplicate series), scraped twice
+//!   to assert counter monotonicity across scrapes;
+//! * `/trace` — valid JSON with a `recent` event array and a `dropped`
+//!   count.
+//!
+//! Used by `make status-check` and CI; the endpoint contract is documented
+//! in `docs/observability.md`.
+//!
+//!     cargo run --release --example status_check
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use ita::util::json::{parse, JsonValue};
+
+/// Counter-like series (by substring of the metric name) that must never
+/// decrease between two scrapes of one live fleet.
+const COUNTERS: [&str; 8] = [
+    "requests_completed",
+    "tokens_generated",
+    "shed",
+    "cancelled",
+    "requeued",
+    "migrations",
+    "admitted",
+    "trace_dropped_total",
+];
+
+/// One-shot HTTP/1.1 GET against the status endpoint; returns the body of
+/// a 200 response.
+fn http_get(addr: &str, path: &str) -> Result<String> {
+    let mut conn = std::net::TcpStream::connect(addr)
+        .with_context(|| format!("connecting to {addr}"))?;
+    conn.set_read_timeout(Some(Duration::from_secs(10)))?;
+    write!(conn, "GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n")?;
+    let mut raw = String::new();
+    conn.read_to_string(&mut raw).with_context(|| format!("reading GET {path}"))?;
+    let (head, body) =
+        raw.split_once("\r\n\r\n").with_context(|| format!("GET {path}: no header/body split"))?;
+    let status = head.lines().next().unwrap_or("");
+    if !status.contains("200") {
+        bail!("GET {path}: {status}");
+    }
+    Ok(body.to_string())
+}
+
+fn num(v: &JsonValue, key: &str, what: &str) -> Result<f64> {
+    v.get(key)
+        .and_then(JsonValue::as_f64)
+        .with_context(|| format!("{what} missing numeric {key:?}"))
+}
+
+/// Validate the `/status` document; returns (cartridges, alerts, tenants).
+fn check_status(body: &str) -> Result<(usize, usize, usize)> {
+    let root = parse(body).context("/status is not valid JSON")?;
+    match root.get("schema").and_then(JsonValue::as_str) {
+        Some("ita-status-v1") => {}
+        other => bail!("unexpected status schema {other:?}"),
+    }
+    for key in ["wall_s", "queued", "urgent"] {
+        num(&root, key, "status")?;
+    }
+    // present but possibly null until the fleet has drained anything
+    root.get("drain_rate_cost_per_s").context("status missing drain_rate_cost_per_s")?;
+    let cartridges = root
+        .get("cartridges")
+        .and_then(JsonValue::as_array)
+        .context("status has no cartridges array")?;
+    if cartridges.is_empty() {
+        bail!("status reports zero cartridges");
+    }
+    for (i, c) in cartridges.iter().enumerate() {
+        let what = format!("cartridge {i}");
+        for key in ["cartridge", "in_flight", "capacity", "active_rows"] {
+            num(c, key, &what)?;
+        }
+        match c.get("alive") {
+            Some(JsonValue::Bool(_)) => {}
+            other => bail!("{what} has non-bool alive: {other:?}"),
+        }
+    }
+    for key in ["queues", "alerts", "tenants"] {
+        root.get(key)
+            .and_then(JsonValue::as_array)
+            .with_context(|| format!("status has no {key} array"))?;
+    }
+    let trace = root.get("trace").context("status has no trace object")?;
+    trace.get("recent").and_then(JsonValue::as_array).context("trace has no recent array")?;
+    num(trace, "dropped", "trace")?;
+    let alerts = root.get("alerts").and_then(JsonValue::as_array).unwrap_or(&[]).len();
+    let tenants = root.get("tenants").and_then(JsonValue::as_array).unwrap_or(&[]).len();
+    Ok((cartridges.len(), alerts, tenants))
+}
+
+/// Syntax-check one sample's series part: `name` or `name{k="v",...}`.
+fn check_series_syntax(s: &str) -> Result<()> {
+    let (name, labels) = match s.split_once('{') {
+        Some((n, rest)) => (n, Some(rest.strip_suffix('}').context("unterminated label set")?)),
+        None => (s, None),
+    };
+    let name_ok = !name.is_empty()
+        && !name.starts_with(|c: char| c.is_ascii_digit())
+        && name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':');
+    if !name_ok {
+        bail!("bad metric name {name:?}");
+    }
+    if let Some(labels) = labels {
+        // none of our label values embed ',' or '=', so plain splits lint them
+        for pair in labels.split(',') {
+            let (k, v) =
+                pair.split_once('=').with_context(|| format!("label {pair:?} has no '='"))?;
+            let key_ok = !k.is_empty()
+                && !k.starts_with(|c: char| c.is_ascii_digit())
+                && k.chars().all(|c| c.is_ascii_alphanumeric() || c == '_');
+            if !key_ok {
+                bail!("bad label name {k:?}");
+            }
+            if v.len() < 2 || !v.starts_with('"') || !v.ends_with('"') {
+                bail!("label value {v} is not double-quoted");
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Lint one `/metrics` exposition and index it as series → value.
+fn lint_prometheus(text: &str) -> Result<BTreeMap<String, f64>> {
+    let mut series = BTreeMap::new();
+    for (i, line) in text.lines().enumerate() {
+        let ctx = || format!("metrics line {}: {line:?}", i + 1);
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('#') {
+            match rest.split_whitespace().next() {
+                Some("HELP") | Some("TYPE") => continue,
+                _ => bail!("{}: unexpected comment form", ctx()),
+            }
+        }
+        let (key, value) = line.rsplit_once(' ').with_context(|| format!("{}: no value", ctx()))?;
+        value.parse::<f64>().with_context(|| format!("{}: unparseable value", ctx()))?;
+        check_series_syntax(key).with_context(&ctx)?;
+        if series.insert(key.to_string(), value.parse::<f64>().unwrap()).is_some() {
+            bail!("{}: duplicate series", ctx());
+        }
+    }
+    if !series.keys().any(|k| k.starts_with("ita_")) {
+        bail!("exposition carries no ita_ series");
+    }
+    Ok(series)
+}
+
+fn main() -> Result<()> {
+    // the sibling binary cargo built alongside this example
+    let exe = std::env::current_exe().context("locating status_check binary")?;
+    let server = exe.parent().context("no parent dir")?.join("serve_fleet");
+    if !server.exists() {
+        bail!("{} not found — build it first (make status-check does)", server.display());
+    }
+
+    let mut child = std::process::Command::new(&server)
+        .env("ITA_FLEET_CARTRIDGES", "2")
+        .env("ITA_FLEET_REQUESTS", "12")
+        .env("ITA_FLEET_TOKENS", "8")
+        .env("ITA_FLEET_STATUS_PORT", "0")
+        .env("ITA_FLEET_STATUS_LINGER_MS", "8000")
+        .env("ITA_FLEET_SLO_ITL_MS", "50")
+        .env("ITA_FLEET_SLO_AVAILABILITY", "0.99")
+        .env("ITA_FLEET_TRACE_TAIL", "16384")
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .context("spawning serve_fleet")?;
+    let result = run_checks(&mut child);
+    let _ = child.kill();
+    let _ = child.wait();
+    result
+}
+
+fn run_checks(child: &mut std::process::Child) -> Result<()> {
+    let stdout = child.stdout.take().context("child stdout not piped")?;
+    let mut lines = BufReader::new(stdout).lines();
+    let addr = loop {
+        let line = match lines.next() {
+            Some(l) => l.context("reading serve_fleet stdout")?,
+            None => bail!("serve_fleet exited before announcing the status port"),
+        };
+        if let Some(rest) = line.strip_prefix("status: listening on http://") {
+            break rest.trim().to_string();
+        }
+    };
+    // keep draining the pipe so the child never blocks on a full buffer
+    std::thread::spawn(move || {
+        for _ in lines.flatten() {}
+    });
+
+    let (cartridges, alerts, tenants) = check_status(&http_get(&addr, "/status")?)?;
+    println!(
+        "status-check: /status ok ({cartridges} cartridges, {alerts} alerts, {tenants} \
+         tenant series)"
+    );
+
+    let first = lint_prometheus(&http_get(&addr, "/metrics")?)?;
+    std::thread::sleep(Duration::from_millis(300));
+    let second = lint_prometheus(&http_get(&addr, "/metrics")?)?;
+    let mut checked = 0usize;
+    for (key, after) in &second {
+        let Some(before) = first.get(key) else { continue };
+        let name = key.split('{').next().unwrap_or("");
+        if COUNTERS.iter().any(|c| name.contains(c)) {
+            checked += 1;
+            if after < before {
+                bail!("counter {key} went backwards across scrapes: {before} -> {after}");
+            }
+        }
+    }
+    if checked == 0 {
+        bail!("no counter series found to check for monotonicity");
+    }
+    println!(
+        "status-check: /metrics ok ({} series linted, {checked} counters monotonic)",
+        second.len()
+    );
+
+    let trace = parse(&http_get(&addr, "/trace")?).context("/trace is not valid JSON")?;
+    let recent =
+        trace.get("recent").and_then(JsonValue::as_array).context("/trace has no recent array")?;
+    num(&trace, "dropped", "/trace")?;
+    println!("status-check: /trace ok ({} recent events)", recent.len());
+    Ok(())
+}

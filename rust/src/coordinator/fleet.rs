@@ -55,7 +55,10 @@ use super::request::{DecodeCheckpoint, FinishReason, GenRequest, GenResult};
 use super::scheduler::SchedulerOpts;
 use super::spec::CartridgeEngines;
 use super::stream::{CancelHandle, StreamItem, TokenStream};
-use super::trace::{FleetTrace, TraceEvent, TraceKind};
+use super::telemetry::{
+    AlertTransition, CartridgeStatus, ObservabilityPlane, QueueStatus, StatusSnapshot,
+};
+use super::trace::{FleetTrace, TailSampler, TailSamplerOpts, TraceEvent, TraceKind};
 use super::worker::{CartridgeId, Worker, WorkerEvent, WorkerMsg};
 use crate::area::thermal::ThermalModel;
 #[cfg(test)]
@@ -694,6 +697,9 @@ enum FleetMsg {
     /// if still queued, otherwise preempt it on its worker.
     Cancel(u64),
     Metrics(Sender<FleetMetrics>),
+    /// Pull the live positional status surface (queue depths, occupancy,
+    /// alert states, flight-recorder tail) — `FrontDoor::status()`.
+    Status(Sender<StatusSnapshot>),
     Shutdown(Sender<(FleetMetrics, FleetTrace)>),
     /// Live-migrate the request with client id `id` from cartridge `from`
     /// to cartridge `to`; replies whether it actually moved.
@@ -809,7 +815,8 @@ impl Fleet {
         if opts.trace_capacity > 0 && opts.trace_epoch.is_none() {
             opts.trace_epoch = Some(Instant::now());
         }
-        let trace = TraceSink::new(&opts, n);
+        let trace = TraceSink::new(&opts, &door, n);
+        let plane = ObservabilityPlane::new(door.slo);
         let factory = Arc::new(factory);
         let (tx, rx) = channel::<FleetMsg>();
         let mut slots: Vec<Slot> = (0..n)
@@ -841,7 +848,7 @@ impl Fleet {
         let slo = SloState::new(door, n, opts.prefill_chunk_tokens);
         let handle = std::thread::Builder::new()
             .name("ita-fleet-dispatch".into())
-            .spawn(move || dispatcher(slots, rx, dispatch, trace, slo))
+            .spawn(move || dispatcher(slots, rx, dispatch, trace, slo, plane))
             .expect("spawn fleet dispatcher thread");
         Ok(Fleet {
             tx: Mutex::new(tx),
@@ -918,6 +925,17 @@ impl Fleet {
         rx.recv().map_err(|_| anyhow!("fleet gone"))
     }
 
+    /// Live positional status: what is queued, placed, and alerting right
+    /// now — per-cartridge occupancy, per-`(class, tenant)` queue depths,
+    /// the drain-rate EWMA, SLO alert states, and the flight-recorder tail
+    /// of recent trace events. Unlike [`Fleet::metrics`] this never blocks
+    /// on worker step boundaries, so it is cheap enough to poll.
+    pub fn status(&self) -> Result<StatusSnapshot> {
+        let (tx, rx) = channel();
+        self.send(FleetMsg::Status(tx))?;
+        rx.recv().map_err(|_| anyhow!("fleet gone"))
+    }
+
     /// Live-migrate the request with client id `id` from cartridge `from`
     /// to cartridge `to`: its decode state is exported as a
     /// [`DecodeCheckpoint`] (prompt-prefix pages the target already caches
@@ -985,6 +1003,12 @@ struct Slot {
     /// KV-size rebalance guard lower-bound the cost of moving a request
     /// that has not checkpointed yet by its prompt length alone.
     kv_bytes_per_row: Option<usize>,
+    /// Rows actively decoding per the worker's last checkpoint
+    /// ([`CheckpointReport::active_rows`](super::worker::CheckpointReport)),
+    /// surfaced on the status page next to the dispatcher-side
+    /// `in_flight` count (the two differ while requests queue inside the
+    /// scheduler).
+    active_rows: usize,
     /// ticket → pending result, for completion routing and requeue.
     in_flight: HashMap<u64, Pending>,
 }
@@ -999,6 +1023,7 @@ impl Slot {
             drained: None,
             checkpoint: None,
             kv_bytes_per_row: None,
+            active_rows: 0,
             in_flight: HashMap::new(),
         }
     }
@@ -1204,6 +1229,22 @@ impl AdmissionQueue {
         urgent.saturating_add(lanes)
     }
 
+    /// Per-lane depths for the status surface, interactive class first,
+    /// empty lanes elided.
+    fn lane_status(&self) -> Vec<QueueStatus> {
+        let mut lanes: Vec<&Lane> = self.lanes.iter().filter(|l| !l.fifo.is_empty()).collect();
+        lanes.sort_by_key(|l| (l.priority, l.tenant));
+        lanes
+            .into_iter()
+            .map(|l| QueueStatus {
+                class: l.priority.name(),
+                tenant: l.tenant,
+                depth: l.fifo.len(),
+                cost: l.fifo.iter().map(|p| p.cost).sum(),
+            })
+            .collect()
+    }
+
     /// Drain everything, in no particular order (total fleet loss — every
     /// entry fails identically).
     fn drain(&mut self) -> Vec<Pending> {
@@ -1355,35 +1396,90 @@ struct Counters {
     cancelled: u64,
 }
 
+/// Flight-recorder tail length kept for the status surface (events, not
+/// bytes — `TraceEvent` is a flat 80-byte record).
+const RECENT_CAP: usize = 256;
+
 /// Dispatcher-side trace collector: absorbs every worker's drained event
 /// batches, stamps each event with its cartridge id, adds fleet-level
-/// events (migrations), and bounds total memory at one extra ring's worth
-/// per cartridge plus one for the dispatcher itself.
+/// events (migrations, shed/cancel instants, SLO alert edges), and bounds
+/// total memory at one extra ring's worth per cartridge plus one for the
+/// dispatcher itself.
+///
+/// With [`FrontDoorOpts::trace_tail_budget`] set, events route through a
+/// [`TailSampler`] instead of the flat vec: complete chains are retained
+/// only for flagged (shed / cancelled / migrated / requeued) or slowest
+/// requests plus a head-sampled cross-section, under that hard event
+/// budget — the always-on production mode (`docs/observability.md`).
+/// Either way the last [`RECENT_CAP`] events feed the status page.
 struct TraceSink {
     enabled: bool,
     epoch: Option<Instant>,
     cap: usize,
     events: Vec<TraceEvent>,
+    /// Tail-sampling mode; `None` = keep-everything (bounded by `cap`).
+    tail: Option<TailSampler>,
+    /// Rolling flight-recorder tail for [`StatusSnapshot::recent`].
+    recent: VecDeque<TraceEvent>,
     dropped: u64,
 }
 
 impl TraceSink {
-    fn new(opts: &SchedulerOpts, n: usize) -> TraceSink {
+    fn new(opts: &SchedulerOpts, door: &FrontDoorOpts, n: usize) -> TraceSink {
+        let tail = match door.trace_tail_budget {
+            Some(budget) if opts.trace_capacity > 0 => Some(TailSampler::new(TailSamplerOpts {
+                budget_events: budget,
+                ..TailSamplerOpts::default()
+            })),
+            _ => None,
+        };
         TraceSink {
             enabled: opts.trace_capacity > 0,
             epoch: opts.trace_epoch,
             cap: opts.trace_capacity.saturating_mul(n + 1),
             events: Vec::new(),
+            tail,
+            recent: VecDeque::new(),
             dropped: 0,
         }
     }
 
     fn push(&mut self, ev: TraceEvent) {
-        if self.events.len() >= self.cap {
+        if self.recent.len() >= RECENT_CAP {
+            self.recent.pop_front();
+        }
+        self.recent.push_back(ev);
+        if let Some(tail) = &mut self.tail {
+            tail.offer(ev);
+        } else if self.events.len() >= self.cap {
             self.dropped += 1;
         } else {
             self.events.push(ev);
         }
+    }
+
+    /// Total events lost anywhere in the pipeline: worker ring overflow,
+    /// sink overflow, and tail-sampling drops — `trace_dropped_total`.
+    fn dropped_total(&self) -> u64 {
+        self.dropped + self.tail.as_ref().map_or(0, |t| t.dropped())
+    }
+
+    /// The flight-recorder tail, oldest first.
+    fn recent(&self) -> Vec<TraceEvent> {
+        self.recent.iter().copied().collect()
+    }
+
+    /// Stamp a fleet-level `Alert` instant for one SLO alert edge.
+    fn alert(&mut self, t: &AlertTransition) {
+        let Some(epoch) = self.epoch else { return };
+        if !self.enabled {
+            return;
+        }
+        let ts = Instant::now().saturating_duration_since(epoch).as_micros() as u64;
+        let mut ev = TraceEvent::at(ts, TraceKind::Alert);
+        ev.a = (t.slo == "availability") as u64;
+        ev.b = t.firing as u64;
+        self.push(ev);
     }
 
     /// Merge one worker's checkpoint batch, stamping the cartridge id.
@@ -1447,7 +1543,14 @@ impl TraceSink {
     }
 
     fn finish(&mut self) -> FleetTrace {
-        FleetTrace::new(std::mem::take(&mut self.events), self.dropped)
+        let mut events = std::mem::take(&mut self.events);
+        let mut dropped = self.dropped;
+        if let Some(tail) = self.tail.take() {
+            let (sampled, tail_dropped) = tail.finish();
+            events.extend(sampled);
+            dropped += tail_dropped;
+        }
+        FleetTrace::new(events, dropped)
     }
 }
 
@@ -1457,6 +1560,7 @@ fn dispatcher(
     mut dispatch: Box<dyn Dispatch>,
     mut trace: TraceSink,
     mut slo: SloState,
+    mut plane: ObservabilityPlane,
 ) {
     let started = Instant::now();
     let mut queue = AdmissionQueue::new();
@@ -1473,6 +1577,7 @@ fn dispatcher(
         match msg {
             FleetMsg::Submit(req, tx) => {
                 if shutdown_reply.is_none() {
+                    plane.on_admitted(QoS::default());
                     queue.push(Pending::unary(req, tx));
                 }
                 // after shutdown: drop tx — the client's wait() errors out
@@ -1485,6 +1590,7 @@ fn dispatcher(
                     // queue memory or device work — the only record of it
                     // is the counter and the trace instant
                     counters.shed += 1;
+                    plane.on_shed(qos);
                     trace.shed(req.id, projected, budget);
                     let _ = admit.send(Err(SubmitError::Overloaded {
                         projected_wait_s: projected,
@@ -1492,6 +1598,7 @@ fn dispatcher(
                     }));
                 } else {
                     let cost = admission_cost(&req);
+                    plane.on_admitted(qos);
                     queue.push(Pending {
                         req,
                         arrived: Instant::now(),
@@ -1513,6 +1620,7 @@ fn dispatcher(
                     // still queued: it never reached a device — reply with
                     // the empty partial directly
                     counters.cancelled += 1;
+                    plane.on_cancelled(p.qos);
                     trace.cancel(p.req.id, false);
                     p.reply.finish(cancelled_result(&p.req, p.arrived));
                     slo.note_drained(p.cost);
@@ -1539,7 +1647,39 @@ fn dispatcher(
                 }
             }
             FleetMsg::Metrics(reply) => {
-                let _ = reply.send(snapshot(&slots, started, &counters));
+                // every pull re-evaluates the alerts, so they clear even
+                // when no traffic (and so no checkpoint) arrives anymore
+                for t in plane.evaluate() {
+                    trace.alert(&t);
+                }
+                let _ = reply.send(snapshot(&slots, started, &counters, &plane, &trace));
+            }
+            FleetMsg::Status(reply) => {
+                for t in plane.evaluate() {
+                    trace.alert(&t);
+                }
+                let cartridges = slots
+                    .iter()
+                    .map(|s| CartridgeStatus {
+                        cartridge: s.worker.id,
+                        alive: !s.dead,
+                        in_flight: s.in_flight.len(),
+                        capacity: slo.slot_cap(s.capacity),
+                        active_rows: s.active_rows,
+                    })
+                    .collect();
+                let _ = reply.send(StatusSnapshot {
+                    wall_s: started.elapsed().as_secs_f64(),
+                    queued: queue.len(),
+                    urgent: queue.urgent.len(),
+                    drain_rate: slo.drain_rate,
+                    cartridges,
+                    queues: queue.lane_status(),
+                    alerts: plane.alerts(),
+                    tenants: plane.tenant_metrics(),
+                    recent: trace.recent(),
+                    trace_dropped: trace.dropped_total(),
+                });
             }
             FleetMsg::Shutdown(reply) => {
                 shutdown_reply = Some(reply);
@@ -1559,6 +1699,7 @@ fn dispatcher(
                         dispatch.as_mut(),
                         &mut counters,
                         &mut trace,
+                        &mut plane,
                         t,
                         from,
                         to,
@@ -1599,6 +1740,9 @@ fn dispatcher(
                 if let Some(p) = slots[w].in_flight.remove(&result.id) {
                     if result.finish == FinishReason::Cancelled {
                         counters.cancelled += 1;
+                        plane.on_cancelled(p.qos);
+                    } else {
+                        plane.on_done(p.qos, result.tokens.len() as u64, result.itl_s);
                     }
                     slo.note_drained(p.cost);
                     result.id = p.req.id;
@@ -1618,6 +1762,12 @@ fn dispatcher(
                 // same snapshot (concurrency cap + adaptive prefill)
                 slo.on_checkpoint(w, &report.metrics, slots[w].in_flight.len(), &slots[w].worker);
                 slots[w].checkpoint = Some(report.metrics);
+                slots[w].active_rows = report.active_rows;
+                // the checkpoint drain is the observability plane's heart-
+                // beat: roll the burn-rate windows and stamp alert edges
+                for t in plane.evaluate() {
+                    trace.alert(&t);
+                }
                 // refresh each in-flight request's recovery checkpoint.
                 // Updates arrive as a full snapshot (first per request, or
                 // after any discontinuity) or a delta that folds onto the
@@ -1657,6 +1807,7 @@ fn dispatcher(
                 // restores KV instead of re-prefilling.
                 orphans.sort_by_key(|p| p.arrived);
                 for mut p in orphans.into_iter().rev() {
+                    plane.on_requeued(p.qos);
                     // a resume replays decode from the last checkpoint; the
                     // stream already delivered everything up to `streamed`,
                     // so suppress the overlap (no checkpoint ⇒ a prefill
@@ -1676,7 +1827,15 @@ fn dispatcher(
             FleetMsg::Event(_) => {}
         }
 
-        pump(&mut slots, &mut queue, dispatch.as_mut(), &mut next_ticket, &mut counters, &slo);
+        pump(
+            &mut slots,
+            &mut queue,
+            dispatch.as_mut(),
+            &mut next_ticket,
+            &mut counters,
+            &slo,
+            &mut plane,
+        );
 
         // load-spread rebalancing: at most one migration per wakeup (the
         // dance blocks on two worker replies), skipped once draining
@@ -1732,19 +1891,28 @@ fn dispatcher(
                         dispatch.as_mut(),
                         &mut counters,
                         &mut trace,
+                        &mut plane,
                         ticket,
                         from,
                         to,
                     );
                     // a failed handover may have requeued the request
                     let d = dispatch.as_mut();
-                    pump(&mut slots, &mut queue, d, &mut next_ticket, &mut counters, &slo);
+                    pump(
+                        &mut slots,
+                        &mut queue,
+                        d,
+                        &mut next_ticket,
+                        &mut counters,
+                        &slo,
+                        &mut plane,
+                    );
                 }
             }
         }
 
         if let Some(reply) = &shutdown_reply {
-            if try_finish(&mut slots, &queue, started, &counters, &mut trace, reply) {
+            if try_finish(&mut slots, &queue, started, &counters, &mut trace, &plane, reply) {
                 return;
             }
         }
@@ -1762,6 +1930,7 @@ fn pump(
     next_ticket: &mut u64,
     counters: &mut Counters,
     slo: &SloState,
+    plane: &mut ObservabilityPlane,
 ) {
     while !queue.is_empty() {
         if !slots.iter().any(Slot::accepting) {
@@ -1803,6 +1972,7 @@ fn pump(
                 counters.checkpoint_resumes += 1;
             }
             dispatch.placed(w, &p.req);
+            plane.on_dispatched(p.qos, p.arrived.elapsed().as_secs_f64());
             slots[w].in_flight.insert(ticket, p);
         } else {
             // channel closed without a Died event (shouldn't happen) —
@@ -1873,6 +2043,7 @@ fn migrate_ticket(
     dispatch: &mut dyn Dispatch,
     counters: &mut Counters,
     trace: &mut TraceSink,
+    plane: &mut ObservabilityPlane,
     ticket: u64,
     from: usize,
     to: usize,
@@ -1929,9 +2100,11 @@ fn migrate_ticket(
     };
     if slots[to].worker.send(msg) {
         dispatch.placed(to, &p.req);
+        let qos = p.qos;
         slots[to].in_flight.insert(ticket, p);
         if live {
             counters.migrations += 1;
+            plane.on_migrated(qos);
         }
         trace.migrate(ticket, from, to);
         true
@@ -1952,6 +2125,7 @@ fn try_finish(
     started: Instant,
     counters: &Counters,
     trace: &mut TraceSink,
+    plane: &ObservabilityPlane,
     reply: &Sender<(FleetMetrics, FleetTrace)>,
 ) -> bool {
     if !queue.is_empty() || slots.iter().any(|s| !s.in_flight.is_empty()) {
@@ -1969,7 +2143,8 @@ fn try_finish(
         for s in slots.iter_mut() {
             s.worker.join();
         }
-        let _ = reply.send((snapshot(slots, started, counters), trace.finish()));
+        let metrics = snapshot(slots, started, counters, plane, trace);
+        let _ = reply.send((metrics, trace.finish()));
         return true;
     }
     false
@@ -1980,7 +2155,13 @@ fn try_finish(
 /// cartridges, and defaults only when a cartridge died before ever
 /// checkpointing. Live snapshots block until each busy worker finishes its
 /// current step (exact counters, like the pre-fleet `Server::metrics()`).
-fn snapshot(slots: &[Slot], started: Instant, counters: &Counters) -> FleetMetrics {
+fn snapshot(
+    slots: &[Slot],
+    started: Instant,
+    counters: &Counters,
+    plane: &ObservabilityPlane,
+    trace: &TraceSink,
+) -> FleetMetrics {
     // fan all snapshot requests out first, then collect: concurrent slow
     // workers overlap their waits instead of stalling the dispatcher for
     // one timeout per cartridge
@@ -2023,6 +2204,9 @@ fn snapshot(slots: &[Slot], started: Instant, counters: &Counters) -> FleetMetri
         checkpoint_resumes: counters.checkpoint_resumes,
         shed_requests: counters.shed,
         cancelled_requests: counters.cancelled,
+        trace_dropped_total: trace.dropped_total(),
+        tenants: plane.tenant_metrics(),
+        alerts: plane.alerts(),
         wall_s: started.elapsed().as_secs_f64(),
     }
 }

@@ -60,6 +60,7 @@ use super::request::GenRequest;
 use super::scheduler::SchedulerOpts;
 use super::spec::CartridgeEngines;
 use super::stream::TokenStream;
+use super::telemetry::{SloSpec, StatusSnapshot};
 use super::trace::FleetTrace;
 use super::worker::CartridgeId;
 
@@ -76,6 +77,28 @@ pub enum Priority {
     Standard,
     /// Throughput traffic that tolerates queueing (evals, batch scoring).
     Batch,
+}
+
+impl Priority {
+    /// Stable label used by the telemetry plane (`class=` in Prometheus,
+    /// `"class"` in the status/metrics JSON).
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Standard => "standard",
+            Priority::Batch => "batch",
+        }
+    }
+
+    /// Strict-priority rank: 0 = most urgent. Used as a sort key by the
+    /// telemetry plane so snapshots list interactive tenants first.
+    pub fn rank(self) -> u8 {
+        match self {
+            Priority::Interactive => 0,
+            Priority::Standard => 1,
+            Priority::Batch => 2,
+        }
+    }
 }
 
 /// Quality-of-service envelope for one submission: priority class, tenant,
@@ -159,6 +182,22 @@ pub struct FrontDoorOpts {
     /// Retarget each cartridge's prefill chunk budget from measured wave
     /// latency (requires [`target_itl_s`](FrontDoorOpts::target_itl_s)).
     pub adaptive_prefill: bool,
+    /// Service-level objectives for the live observability plane. When
+    /// set, the dispatcher evaluates multi-window burn-rate alerts over
+    /// the declared targets and surfaces them in
+    /// [`FleetMetrics::alerts`](super::metrics::FleetMetrics::alerts) and
+    /// [`StatusSnapshot::alerts`]. Unset ⇒ labeled series only, no
+    /// alerting.
+    pub slo: Option<SloSpec>,
+    /// Switch the fleet trace sink to tail-based sampling with this hard
+    /// event budget (see
+    /// [`TailSampler`](super::trace::TailSampler)): complete chains are
+    /// retained only for slow, shed, cancelled, migrated, or requeued
+    /// requests (plus a head-sampled cross-section), making always-on
+    /// tracing production-viable. Requires
+    /// [`trace_capacity`](super::scheduler::SchedulerOpts::trace_capacity)
+    /// to be set; unset ⇒ the sink retains everything (post-mortem mode).
+    pub trace_tail_budget: Option<usize>,
 }
 
 /// Streaming, SLO-aware ingress over a [`Fleet`] — see the
@@ -294,6 +333,15 @@ impl FrontDoor {
         self.fleet.metrics()
     }
 
+    /// The live control-room view: per-cartridge occupancy, per-lane
+    /// queue depths, drain-rate EWMA, SLO alert states, the per-tenant ×
+    /// class series, and the flight-recorder tail. Positional (what is
+    /// happening *now*) where [`metrics`](FrontDoor::metrics) is
+    /// cumulative; `serve_fleet --status-port` serves it as JSON.
+    pub fn status(&self) -> Result<StatusSnapshot> {
+        self.fleet.status()
+    }
+
     /// Drain in-flight work and stop every cartridge.
     pub fn shutdown(self) -> Result<FleetMetrics> {
         self.fleet.shutdown()
@@ -336,5 +384,15 @@ mod tests {
         assert!(o.target_itl_s.is_none());
         assert!(o.queue_budget_s.is_none());
         assert!(!o.adaptive_prefill);
+        assert!(o.slo.is_none());
+        assert!(o.trace_tail_budget.is_none());
+    }
+
+    #[test]
+    fn priority_labels_are_stable() {
+        assert_eq!(Priority::Interactive.name(), "interactive");
+        assert_eq!(Priority::Standard.name(), "standard");
+        assert_eq!(Priority::Batch.name(), "batch");
+        assert!(Priority::Interactive.rank() < Priority::Batch.rank());
     }
 }

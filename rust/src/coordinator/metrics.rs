@@ -1,8 +1,11 @@
 //! Serving metrics: latency histograms, throughput, traffic — per engine
 //! ([`ServingMetrics`]), and per fleet with per-cartridge breakdowns
-//! ([`FleetMetrics`] / [`CartridgeMetrics`]).
+//! ([`FleetMetrics`] / [`CartridgeMetrics`]), plus the live per-tenant ×
+//! class series and SLO alert postures maintained by
+//! [`telemetry`](super::telemetry).
 
 use super::engine::TrafficLedger;
+use super::telemetry::{alerts_json, tenants_json, AlertSnapshot, AlertState, TenantClassMetrics};
 
 /// Fixed-capacity latency recorder with percentile queries.
 #[derive(Debug, Clone, Default)]
@@ -684,6 +687,17 @@ pub struct FleetMetrics {
     /// Requests cancelled by their client (explicit cancel or a dropped
     /// token stream) — whether still queued or already in flight.
     pub cancelled_requests: u64,
+    /// Trace events lost to recorder-ring/sink overflow or tail-sampling
+    /// drops, fleet-wide (0 when tracing is off).
+    pub trace_dropped_total: u64,
+    /// Live per-tenant × priority-class series from the observability
+    /// plane. These sum exactly to the dispatcher counters above (pinned
+    /// by `rust/tests/telemetry_sim.rs`).
+    pub tenants: Vec<TenantClassMetrics>,
+    /// SLO burn-rate alert postures (empty unless
+    /// [`FrontDoorOpts::slo`](super::frontdoor::FrontDoorOpts::slo) is
+    /// set).
+    pub alerts: Vec<AlertSnapshot>,
     /// Dispatcher wall clock.
     pub wall_s: f64,
 }
@@ -774,6 +788,7 @@ impl MetricsRegistry {
             ("fleet_checkpoint_resumes", self.fleet.checkpoint_resumes as f64),
             ("fleet_shed_requests", self.fleet.shed_requests as f64),
             ("fleet_cancelled_requests", self.fleet.cancelled_requests as f64),
+            ("trace_dropped_total", self.fleet.trace_dropped_total as f64),
             ("fleet_wall_s", self.fleet.wall_s),
         ];
         let agg = self.fleet.aggregate();
@@ -793,7 +808,13 @@ impl MetricsRegistry {
                 fields: c.serving.numeric_fields(),
             })
             .collect();
-        MetricsSnapshot { fleet, aggregate, cartridges }
+        MetricsSnapshot {
+            fleet,
+            aggregate,
+            cartridges,
+            tenants: self.fleet.tenants.clone(),
+            alerts: self.fleet.alerts.clone(),
+        }
     }
 }
 
@@ -808,6 +829,10 @@ pub struct MetricsSnapshot {
     pub aggregate: Vec<(&'static str, f64)>,
     /// Per-cartridge breakdowns.
     pub cartridges: Vec<CartridgeSnapshot>,
+    /// Per-tenant × priority-class labeled series (`tenant=`/`class=`).
+    pub tenants: Vec<TenantClassMetrics>,
+    /// SLO alert postures (`slo=` labeled).
+    pub alerts: Vec<AlertSnapshot>,
 }
 
 impl MetricsSnapshot {
@@ -849,12 +874,16 @@ impl MetricsSnapshot {
         root.put("fleet", obj(&self.fleet));
         root.put("aggregate", obj(&self.aggregate));
         root.put("cartridges", json_array(&cartridges));
+        root.put("tenants", tenants_json(&self.tenants));
+        root.put("alerts", alerts_json(&self.alerts));
         root.encode()
     }
 
     /// Prometheus text exposition format (version 0.0.4): every metric as
     /// an `ita_`-prefixed gauge, aggregate unlabeled, per-cartridge values
-    /// labeled `{cartridge="N"}`.
+    /// labeled `{cartridge="N"}`, per-tenant series labeled
+    /// `{tenant="T",class="C"}`, and SLO alert postures labeled
+    /// `{slo="S"}`.
     pub fn to_prometheus(&self) -> String {
         let mut out = String::new();
         for (name, v) in &self.fleet {
@@ -867,6 +896,49 @@ impl MetricsSnapshot {
                     out.push_str(&format!(
                         "ita_{name}{{cartridge=\"{}\"}} {cv}\n",
                         c.cartridge
+                    ));
+                }
+            }
+        }
+        type TenantField = (&'static str, fn(&TenantClassMetrics) -> f64);
+        let tenant_fields: &[TenantField] = &[
+            ("tenant_admitted", |t| t.admitted as f64),
+            ("tenant_requests_completed", |t| t.requests_completed as f64),
+            ("tenant_tokens_generated", |t| t.tokens_generated as f64),
+            ("tenant_shed", |t| t.shed as f64),
+            ("tenant_cancelled", |t| t.cancelled as f64),
+            ("tenant_requeued", |t| t.requeued as f64),
+            ("tenant_migrated", |t| t.migrated as f64),
+            ("tenant_queue_wait_p99_s", |t| t.queue_wait.percentile(99.0)),
+            ("tenant_itl_p99_s", |t| t.itl.percentile(99.0)),
+        ];
+        if !self.tenants.is_empty() {
+            for (name, field) in tenant_fields {
+                out.push_str(&format!("# TYPE ita_{name} gauge\n"));
+                for t in &self.tenants {
+                    out.push_str(&format!(
+                        "ita_{name}{{tenant=\"{}\",class=\"{}\"}} {}\n",
+                        t.tenant,
+                        t.class,
+                        field(t)
+                    ));
+                }
+            }
+        }
+        type AlertField = (&'static str, fn(&AlertSnapshot) -> f64);
+        let alert_fields: &[AlertField] = &[
+            ("slo_alert_firing", |a| (a.state == AlertState::Firing) as u64 as f64),
+            ("slo_burn_fast", |a| a.fast_burn),
+            ("slo_burn_slow", |a| a.slow_burn),
+        ];
+        if !self.alerts.is_empty() {
+            for (name, field) in alert_fields {
+                out.push_str(&format!("# TYPE ita_{name} gauge\n"));
+                for a in &self.alerts {
+                    out.push_str(&format!(
+                        "ita_{name}{{slo=\"{}\"}} {}\n",
+                        a.slo,
+                        field(a)
                     ));
                 }
             }
@@ -1413,5 +1485,57 @@ mod tests {
         let one = MetricsRegistry::from_serving(fully_populated()).snapshot();
         assert_eq!(one.get("fleet_cartridges"), Some(1.0));
         assert!((one.get("decode_tok_per_s").expect("derived") - 41.0 / 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tenant_and_alert_series_export_with_labels() {
+        use crate::util::json::parse;
+        let mut row = TenantClassMetrics {
+            tenant: 42,
+            class: "interactive",
+            admitted: 6,
+            requests_completed: 5,
+            tokens_generated: 70,
+            shed: 1,
+            ..TenantClassMetrics::default()
+        };
+        row.itl.record(0.004);
+        let fm = FleetMetrics {
+            trace_dropped_total: 9,
+            tenants: vec![row],
+            alerts: vec![AlertSnapshot {
+                slo: "availability",
+                state: AlertState::Firing,
+                fast_burn: 12.5,
+                slow_burn: 4.0,
+                since_s: 1.0,
+            }],
+            ..Default::default()
+        };
+        let snap = MetricsRegistry::from_fleet(fm).snapshot();
+        assert_eq!(snap.get("trace_dropped_total"), Some(9.0));
+
+        let doc = parse(&snap.to_json()).expect("valid JSON");
+        let tenants = doc.get("tenants").and_then(|v| v.as_array()).expect("tenants array");
+        assert_eq!(tenants[0].get("tenant").and_then(|v| v.as_f64()), Some(42.0));
+        assert_eq!(tenants[0].get("class").and_then(|v| v.as_str()), Some("interactive"));
+        assert_eq!(tenants[0].get("tokens_generated").and_then(|v| v.as_f64()), Some(70.0));
+        let alerts = doc.get("alerts").and_then(|v| v.as_array()).expect("alerts array");
+        assert_eq!(alerts[0].get("state").and_then(|v| v.as_str()), Some("firing"));
+
+        let prom = snap.to_prometheus();
+        assert!(prom.contains("ita_trace_dropped_total 9\n"));
+        assert!(prom.contains("# TYPE ita_tenant_requests_completed gauge"));
+        assert!(prom
+            .contains("ita_tenant_requests_completed{tenant=\"42\",class=\"interactive\"} 5\n"));
+        assert!(prom.contains("ita_tenant_shed{tenant=\"42\",class=\"interactive\"} 1\n"));
+        assert!(prom.contains("ita_slo_alert_firing{slo=\"availability\"} 1\n"));
+        assert!(prom.contains("ita_slo_burn_fast{slo=\"availability\"} 12.5\n"));
+
+        // a fleet with no tenants/alerts exports no labeled series at all
+        let bare = MetricsRegistry::from_fleet(FleetMetrics::default()).snapshot();
+        let prom = bare.to_prometheus();
+        assert!(!prom.contains("tenant_"));
+        assert!(!prom.contains("slo_"));
     }
 }

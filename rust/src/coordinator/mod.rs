@@ -84,6 +84,20 @@
 //!   (including across cartridge failover), and idempotent
 //!   [`CancelHandle`](stream::CancelHandle)s; dropping an unfinished stream
 //!   cancels the request server-side (disconnect IS cancellation).
+//! * [`telemetry`] — the live observability plane over all of the above:
+//!   per-tenant × priority-class labeled series
+//!   ([`TenantClassMetrics`](telemetry::TenantClassMetrics)) threaded from
+//!   [`QoS`](frontdoor::QoS) through the dispatcher into the metrics
+//!   expositions, Google-SRE-style multi-window burn-rate alerting over
+//!   declared SLOs ([`SloSpec`](telemetry::SloSpec), fast ≈ 5 s / slow
+//!   ≈ 60 s windows, transitions stamped as trace instants), and the
+//!   pull-able [`StatusSnapshot`](telemetry::StatusSnapshot) control-room
+//!   view ([`FrontDoor::status`](frontdoor::FrontDoor::status), served
+//!   over HTTP by `serve_fleet --status-port`). With
+//!   [`trace_tail_budget`](frontdoor::FrontDoorOpts::trace_tail_budget)
+//!   the trace sink switches to tail-based sampling
+//!   ([`TailSampler`](trace::TailSampler)) so tracing stays always-on
+//!   under a hard memory budget (`docs/observability.md`).
 //! * [`workload`] — deterministic synthetic workloads for benches/examples:
 //!   closed/Poisson/bursty/diurnal arrivals, heavy-tail prompt mixes, and
 //!   trace replay for overload benchmarking.
@@ -113,6 +127,7 @@ pub mod scheduler;
 pub mod server;
 pub mod spec;
 pub mod stream;
+pub mod telemetry;
 pub mod trace;
 pub mod worker;
 pub mod workload;
@@ -131,5 +146,8 @@ pub use request::{DecodeCheckpoint, GenRequest, GenResult};
 pub use server::Server;
 pub use spec::{CartridgeEngines, SpecOpts};
 pub use stream::{CancelHandle, StreamItem, TokenStream};
-pub use trace::{FleetTrace, TraceEvent, TraceKind, TraceRecorder};
+pub use telemetry::{
+    AlertSnapshot, AlertState, ObservabilityPlane, SloSpec, StatusSnapshot, TenantClassMetrics,
+};
+pub use trace::{FleetTrace, TailSampler, TraceEvent, TraceKind, TraceRecorder};
 pub use worker::{CartridgeId, CheckpointReport, Worker, WorkerEvent, WorkerMsg};

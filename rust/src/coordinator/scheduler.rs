@@ -415,6 +415,13 @@ impl Scheduler {
         self.queue.len() + self.active.len() + self.spilled.len()
     }
 
+    /// Rows actively decoding right now (excludes queued and spilled
+    /// sequences). Rides worker checkpoints into the fleet's live status
+    /// surface as per-cartridge occupancy.
+    pub fn active_rows(&self) -> usize {
+        self.active.len()
+    }
+
     /// Resolved concurrent-decode capacity (the fleet dispatcher caps each
     /// worker's outstanding requests at this).
     pub fn capacity(&self) -> usize {

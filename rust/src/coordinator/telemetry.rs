@@ -1,0 +1,709 @@
+//! Live observability plane: per-tenant × priority-class accounting,
+//! SLO burn-rate alerting, and the pull-able fleet status surface.
+//!
+//! Everything the tracing/metrics stack built so far is *post-mortem* —
+//! traces and metrics only materialise at `Fleet::shutdown_traced()`. This
+//! module is the live half: the dispatcher feeds every admission, shed,
+//! cancel, requeue, migration, dispatch, and completion into an
+//! [`ObservabilityPlane`], which maintains
+//!
+//! * **labeled series** — one [`TenantClassMetrics`] row per
+//!   `(tenant, class)` pair that ever touched the door: request/token
+//!   counters plus queue-wait and inter-token-latency histograms. These
+//!   flow into `FleetMetrics` and from there into the `ita-metrics-v1`
+//!   JSON and Prometheus expositions with `tenant=`/`class=` labels.
+//! * **SLO burn-rate alerts** — an [`SloSpec`] declares a p99-ITL target
+//!   and/or an availability target (1 − shed rate). Each SLO is evaluated
+//!   Google-SRE style over two rolling windows (fast ≈ 5 s, slow ≈ 60 s):
+//!   the *burn rate* is the observed bad-event fraction divided by the
+//!   SLO's error budget, and the alert fires only when **both** windows
+//!   burn faster than [`BURN_FIRE`] (the slow window proves it is not a
+//!   blip, the fast window proves it is still happening). It clears when
+//!   the fast window recovers. Transitions are emitted as
+//!   `TraceKind::Alert` instants and surfaced in `FleetMetrics::alerts`.
+//! * **status snapshots** — [`StatusSnapshot`] is the pull-able control
+//!   room view (`FrontDoor::status()`, and HTTP via
+//!   `serve_fleet --status-port`): per-cartridge occupancy, per-lane
+//!   queue depths, the drain-rate EWMA, alert states, the labeled series,
+//!   and a flight-recorder tail of recent trace events.
+//!
+//! The plane is dispatcher-owned and lock-free: all hooks run on the
+//! dispatcher thread at points where the per-request `QoS` is already in
+//! hand, so per-tenant counters sum *exactly* to the fleet aggregates
+//! (pinned by `rust/tests/telemetry_sim.rs`).
+
+use std::collections::BTreeMap;
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use super::frontdoor::{Priority, QoS};
+use super::metrics::GapHistogram;
+use super::trace::TraceEvent;
+use crate::util::json::{json_array, Json};
+
+/// Service-level objectives for the fleet, declared at boot via
+/// `FrontDoorOpts::slo`. Both objectives are optional; `None` disables
+/// that alert entirely. The window widths default to the Google-SRE-style
+/// fast ≈ 5 s / slow ≈ 60 s pair and exist as fields so simulations can
+/// compress time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloSpec {
+    /// Target p99 inter-token latency in seconds: a completed request
+    /// whose mean ITL exceeds this burns the 1% latency error budget.
+    pub p99_itl_s: Option<f64>,
+    /// Availability target in (0, 1): e.g. `0.99` grants a 1% error
+    /// budget of shed requests (availability = 1 − shed rate).
+    pub availability: Option<f64>,
+    /// Fast alerting window (seconds). Default 5 s.
+    pub fast_window_s: f64,
+    /// Slow alerting window (seconds). Default 60 s.
+    pub slow_window_s: f64,
+}
+
+impl Default for SloSpec {
+    fn default() -> Self {
+        SloSpec { p99_itl_s: None, availability: None, fast_window_s: 5.0, slow_window_s: 60.0 }
+    }
+}
+
+impl SloSpec {
+    /// True if neither objective is set (the plane skips burn tracking).
+    pub fn is_empty(&self) -> bool {
+        self.p99_itl_s.is_none() && self.availability.is_none()
+    }
+}
+
+/// Burn-rate threshold: an alert fires when the error budget is being
+/// consumed at ≥ 2× the rate that would exactly exhaust it over the SLO
+/// period, in *both* windows.
+pub const BURN_FIRE: f64 = 2.0;
+
+/// Minimum events inside a window before its burn rate is trusted — a
+/// single bad request in an idle fleet is not an outage.
+const MIN_WINDOW_EVENTS: u64 = 8;
+
+/// Width of one burn-window ring bucket, as a fraction of the fast
+/// window (the slow window reuses the same ring at coarser granularity).
+const BUCKETS_PER_FAST_WINDOW: usize = 10;
+
+/// Alert lifecycle: `Ok` ⇄ `Firing`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AlertState {
+    Ok,
+    Firing,
+}
+
+impl AlertState {
+    pub fn name(self) -> &'static str {
+        match self {
+            AlertState::Ok => "ok",
+            AlertState::Firing => "firing",
+        }
+    }
+}
+
+/// One SLO's alert posture at snapshot time.
+#[derive(Debug, Clone)]
+pub struct AlertSnapshot {
+    /// SLO identity: `"itl_p99"` or `"availability"`.
+    pub slo: &'static str,
+    pub state: AlertState,
+    /// Burn rate over the fast window (1.0 = budget exactly exhausted at
+    /// the SLO rate; ≥ [`BURN_FIRE`] in both windows fires the alert).
+    pub fast_burn: f64,
+    /// Burn rate over the slow window.
+    pub slow_burn: f64,
+    /// Seconds since the last `Ok` ⇄ `Firing` transition.
+    pub since_s: f64,
+}
+
+/// An `Ok` ⇄ `Firing` edge, returned by [`ObservabilityPlane::evaluate`]
+/// so the dispatcher can stamp a `TraceKind::Alert` instant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AlertTransition {
+    pub slo: &'static str,
+    pub firing: bool,
+}
+
+/// Per-`(tenant, class)` labeled series — the snapshot form that rides in
+/// `FleetMetrics::tenants` and the metrics expositions.
+#[derive(Debug, Clone, Default)]
+pub struct TenantClassMetrics {
+    pub tenant: u64,
+    /// Priority class label: `"interactive"`, `"standard"`, or `"batch"`.
+    pub class: &'static str,
+    /// Streams/requests admitted past the front door.
+    pub admitted: u64,
+    /// Requests that ran to a non-cancelled finish.
+    pub requests_completed: u64,
+    /// Tokens delivered by completed requests.
+    pub tokens_generated: u64,
+    /// Typed `Overloaded` rejections at the admission queue.
+    pub shed: u64,
+    /// Client-cancelled requests (queued or in flight).
+    pub cancelled: u64,
+    /// Orphans re-queued after a cartridge death.
+    pub requeued: u64,
+    /// Live migrations between cartridges.
+    pub migrated: u64,
+    /// Admission-to-dispatch wait per placement.
+    pub queue_wait: GapHistogram,
+    /// Mean inter-token latency per completed request.
+    pub itl: GapHistogram,
+}
+
+// ---------------------------------------------------------------------------
+// burn-rate tracking
+// ---------------------------------------------------------------------------
+
+/// Good/bad event counts for one ring bucket.
+#[derive(Debug, Clone, Copy, Default)]
+struct Bucket {
+    good: u64,
+    bad: u64,
+}
+
+/// One SLO's multi-window burn-rate state: a ring of time buckets wide
+/// enough to cover the slow window, rolled forward on every record and
+/// evaluate. Pure function of `(events, now_s)` — the caller supplies the
+/// clock, so tests drive synthetic time.
+#[derive(Debug)]
+struct SloTracker {
+    name: &'static str,
+    /// Allowed bad-event fraction (1 − availability, or 1 % for p99).
+    budget: f64,
+    bucket_s: f64,
+    fast_buckets: usize,
+    slow_buckets: usize,
+    /// `ring.back()` is the bucket at `epoch`; `ring.front()` the oldest.
+    ring: VecDeque<Bucket>,
+    epoch: u64,
+    state: AlertState,
+    since_s: f64,
+}
+
+impl SloTracker {
+    fn new(name: &'static str, budget: f64, fast_s: f64, slow_s: f64) -> SloTracker {
+        let bucket_s = (fast_s / BUCKETS_PER_FAST_WINDOW as f64).max(1e-3);
+        let fast_buckets = (fast_s / bucket_s).ceil().max(1.0) as usize;
+        let slow_buckets = (slow_s / bucket_s).ceil().max(1.0) as usize;
+        SloTracker {
+            name,
+            budget: budget.max(1e-9),
+            bucket_s,
+            fast_buckets,
+            slow_buckets,
+            ring: VecDeque::from(vec![Bucket::default()]),
+            epoch: 0,
+            state: AlertState::Ok,
+            since_s: 0.0,
+        }
+    }
+
+    /// Advance the ring so `ring.back()` covers `now_s`.
+    fn roll(&mut self, now_s: f64) {
+        let target = (now_s / self.bucket_s) as u64;
+        while self.epoch < target {
+            self.epoch += 1;
+            self.ring.push_back(Bucket::default());
+            while self.ring.len() > self.slow_buckets {
+                self.ring.pop_front();
+            }
+        }
+    }
+
+    fn record(&mut self, bad: bool, now_s: f64) {
+        self.roll(now_s);
+        let b = self.ring.back_mut().expect("ring is never empty");
+        if bad {
+            b.bad += 1;
+        } else {
+            b.good += 1;
+        }
+    }
+
+    /// Burn rate over the trailing `n` buckets: bad fraction ÷ budget.
+    /// Windows with fewer than [`MIN_WINDOW_EVENTS`] events read 0.
+    fn burn(&self, n: usize) -> f64 {
+        let tail = self.ring.iter().rev().take(n);
+        let (mut good, mut bad) = (0u64, 0u64);
+        for b in tail {
+            good += b.good;
+            bad += b.bad;
+        }
+        let total = good + bad;
+        if total < MIN_WINDOW_EVENTS {
+            return 0.0;
+        }
+        (bad as f64 / total as f64) / self.budget
+    }
+
+    /// Roll to `now_s`, re-derive the alert state, and return the edge if
+    /// it flipped. Fire: both windows ≥ [`BURN_FIRE`]. Clear: the fast
+    /// window dropped back under the line (the slow window is left to
+    /// drain — it only gates *entry*, so a recovered fleet is not pinned
+    /// `Firing` for a full slow window).
+    fn evaluate(&mut self, now_s: f64) -> Option<AlertTransition> {
+        self.roll(now_s);
+        let fast = self.burn(self.fast_buckets);
+        let slow = self.burn(self.slow_buckets);
+        let next = match self.state {
+            AlertState::Ok if fast >= BURN_FIRE && slow >= BURN_FIRE => AlertState::Firing,
+            AlertState::Firing if fast < BURN_FIRE => AlertState::Ok,
+            s => s,
+        };
+        if next != self.state {
+            self.state = next;
+            self.since_s = now_s;
+            return Some(AlertTransition { slo: self.name, firing: next == AlertState::Firing });
+        }
+        None
+    }
+
+    fn snapshot(&self, now_s: f64) -> AlertSnapshot {
+        AlertSnapshot {
+            slo: self.name,
+            state: self.state,
+            fast_burn: self.burn(self.fast_buckets),
+            slow_burn: self.burn(self.slow_buckets),
+            since_s: (now_s - self.since_s).max(0.0),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the plane
+// ---------------------------------------------------------------------------
+
+/// Dispatcher-owned live telemetry: labeled series plus SLO trackers.
+/// All methods are plain calls on the dispatcher thread — no locks, no
+/// channels, nothing on the worker hot path.
+#[derive(Debug)]
+pub struct ObservabilityPlane {
+    started: Instant,
+    /// Keyed by `(class rank, tenant)` so snapshots list interactive
+    /// tenants first, deterministically.
+    series: BTreeMap<(u8, u64), TenantClassMetrics>,
+    itl_target_s: Option<f64>,
+    itl: Option<SloTracker>,
+    avail: Option<SloTracker>,
+}
+
+impl ObservabilityPlane {
+    pub fn new(spec: Option<SloSpec>) -> ObservabilityPlane {
+        let spec = spec.unwrap_or_default();
+        let itl = spec.p99_itl_s.map(|_| {
+            // a p99 target grants a fixed 1% latency error budget
+            SloTracker::new("itl_p99", 0.01, spec.fast_window_s, spec.slow_window_s)
+        });
+        let avail = spec.availability.map(|a| {
+            SloTracker::new("availability", 1.0 - a, spec.fast_window_s, spec.slow_window_s)
+        });
+        ObservabilityPlane {
+            started: Instant::now(),
+            series: BTreeMap::new(),
+            itl_target_s: spec.p99_itl_s,
+            itl,
+            avail,
+        }
+    }
+
+    fn now_s(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    fn row(&mut self, qos: QoS) -> &mut TenantClassMetrics {
+        let key = (qos.priority.rank(), qos.tenant);
+        self.series.entry(key).or_insert_with(|| TenantClassMetrics {
+            tenant: qos.tenant,
+            class: qos.priority.name(),
+            ..TenantClassMetrics::default()
+        })
+    }
+
+    /// A stream made it past admission control.
+    pub fn on_admitted(&mut self, qos: QoS) {
+        self.row(qos).admitted += 1;
+        if let Some(t) = self.avail.as_mut() {
+            t.record(false, self.started.elapsed().as_secs_f64());
+        }
+    }
+
+    /// Admission control rejected a stream (`SubmitError::Overloaded`).
+    pub fn on_shed(&mut self, qos: QoS) {
+        self.row(qos).shed += 1;
+        if let Some(t) = self.avail.as_mut() {
+            t.record(true, self.started.elapsed().as_secs_f64());
+        }
+    }
+
+    /// A queued or in-flight request was cancelled by its client.
+    pub fn on_cancelled(&mut self, qos: QoS) {
+        self.row(qos).cancelled += 1;
+    }
+
+    /// An orphan was re-queued after its cartridge died.
+    pub fn on_requeued(&mut self, qos: QoS) {
+        self.row(qos).requeued += 1;
+    }
+
+    /// A live request migrated between cartridges.
+    pub fn on_migrated(&mut self, qos: QoS) {
+        self.row(qos).migrated += 1;
+    }
+
+    /// A queued request was placed on a cartridge after `wait_s` in line.
+    pub fn on_dispatched(&mut self, qos: QoS, wait_s: f64) {
+        self.row(qos).queue_wait.record(wait_s);
+    }
+
+    /// A request ran to a non-cancelled finish.
+    pub fn on_done(&mut self, qos: QoS, tokens: u64, itl_s: f64) {
+        let row = self.row(qos);
+        row.requests_completed += 1;
+        row.tokens_generated += tokens;
+        if itl_s > 0.0 {
+            row.itl.record(itl_s);
+        }
+        if let (Some(t), Some(target)) = (self.itl.as_mut(), self.itl_target_s) {
+            t.record(itl_s > target, self.started.elapsed().as_secs_f64());
+        }
+    }
+
+    /// Re-derive alert states (called from the `CheckpointReport` drain
+    /// path and on every metrics/status pull) and return any `Ok` ⇄
+    /// `Firing` edges so the caller can stamp trace instants.
+    pub fn evaluate(&mut self) -> Vec<AlertTransition> {
+        let now = self.now_s();
+        [self.itl.as_mut(), self.avail.as_mut()]
+            .into_iter()
+            .flatten()
+            .filter_map(|t| t.evaluate(now))
+            .collect()
+    }
+
+    /// Current alert posture, one row per configured SLO.
+    pub fn alerts(&self) -> Vec<AlertSnapshot> {
+        let now = self.now_s();
+        [self.itl.as_ref(), self.avail.as_ref()]
+            .into_iter()
+            .flatten()
+            .map(|t| t.snapshot(now))
+            .collect()
+    }
+
+    /// The labeled series, interactive tenants first.
+    pub fn tenant_metrics(&self) -> Vec<TenantClassMetrics> {
+        self.series.values().cloned().collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// status surface
+// ---------------------------------------------------------------------------
+
+/// One cartridge's live occupancy in a [`StatusSnapshot`].
+#[derive(Debug, Clone)]
+pub struct CartridgeStatus {
+    pub cartridge: usize,
+    pub alive: bool,
+    /// Dispatcher-side in-flight count (placed, not yet `Done`).
+    pub in_flight: usize,
+    /// Dispatch slot capacity (scheduler `max_active`).
+    pub capacity: usize,
+    /// Rows actively decoding per the cartridge's last checkpoint.
+    pub active_rows: usize,
+}
+
+/// One admission-queue lane's depth in a [`StatusSnapshot`].
+#[derive(Debug, Clone)]
+pub struct QueueStatus {
+    pub class: &'static str,
+    pub tenant: u64,
+    /// Queued requests in this lane.
+    pub depth: usize,
+    /// Summed admission cost (prompt + decode-budget tokens) queued.
+    pub cost: u64,
+}
+
+/// The pull-able control-room view returned by `FrontDoor::status()` and
+/// served as JSON on `serve_fleet --status-port /status`. Unlike
+/// `FleetMetrics` this is *positional* — what is queued, placed, and
+/// alerting right now — rather than cumulative.
+#[derive(Debug, Clone)]
+pub struct StatusSnapshot {
+    /// Seconds since fleet boot.
+    pub wall_s: f64,
+    /// Total queued requests across all lanes (urgent row included).
+    pub queued: usize,
+    /// Depth of the urgent (requeue/migration) FCFS row.
+    pub urgent: usize,
+    /// Fleet drain-rate EWMA in cost-tokens/s (`None` until measured).
+    pub drain_rate: Option<f64>,
+    pub cartridges: Vec<CartridgeStatus>,
+    pub queues: Vec<QueueStatus>,
+    pub alerts: Vec<AlertSnapshot>,
+    pub tenants: Vec<TenantClassMetrics>,
+    /// Flight-recorder tail: the most recent trace events (empty when
+    /// tracing is off).
+    pub recent: Vec<TraceEvent>,
+    /// Trace events lost to ring/sink overflow or tail-sampling drops.
+    pub trace_dropped: u64,
+}
+
+fn tenant_json(t: &TenantClassMetrics) -> String {
+    let mut j = Json::default();
+    j.num("tenant", t.tenant)
+        .str("class", t.class)
+        .num("admitted", t.admitted)
+        .num("requests_completed", t.requests_completed)
+        .num("tokens_generated", t.tokens_generated)
+        .num("shed", t.shed)
+        .num("cancelled", t.cancelled)
+        .num("requeued", t.requeued)
+        .num("migrated", t.migrated)
+        .float("queue_wait_p50_s", t.queue_wait.percentile(50.0))
+        .float("queue_wait_p99_s", t.queue_wait.percentile(99.0))
+        .float("itl_p50_s", t.itl.percentile(50.0))
+        .float("itl_p99_s", t.itl.percentile(99.0));
+    j.encode()
+}
+
+fn alert_json(a: &AlertSnapshot) -> String {
+    let mut j = Json::default();
+    j.str("slo", a.slo)
+        .str("state", a.state.name())
+        .float("fast_burn", a.fast_burn)
+        .float("slow_burn", a.slow_burn)
+        .float("since_s", a.since_s);
+    j.encode()
+}
+
+fn event_json(e: &TraceEvent) -> String {
+    let mut j = Json::default();
+    j.num("ts_us", e.ts_us)
+        .str("kind", e.kind.name())
+        .num("cartridge", e.cartridge)
+        .num("req", e.req)
+        .num("wave", e.wave);
+    j.encode()
+}
+
+impl StatusSnapshot {
+    /// Serialise for the `/status` endpoint (`"schema": "ita-status-v1"`).
+    pub fn to_json(&self) -> String {
+        let cartridges: Vec<String> = self
+            .cartridges
+            .iter()
+            .map(|c| {
+                let mut j = Json::default();
+                j.num("cartridge", c.cartridge)
+                    .bool("alive", c.alive)
+                    .num("in_flight", c.in_flight)
+                    .num("capacity", c.capacity)
+                    .num("active_rows", c.active_rows);
+                j.encode()
+            })
+            .collect();
+        let queues: Vec<String> = self
+            .queues
+            .iter()
+            .map(|q| {
+                let mut j = Json::default();
+                j.str("class", q.class).num("tenant", q.tenant).num("depth", q.depth).num(
+                    "cost", q.cost,
+                );
+                j.encode()
+            })
+            .collect();
+        let alerts: Vec<String> = self.alerts.iter().map(alert_json).collect();
+        let tenants: Vec<String> = self.tenants.iter().map(tenant_json).collect();
+
+        let mut root = Json::default();
+        root.str("schema", "ita-status-v1")
+            .float("wall_s", self.wall_s)
+            .num("queued", self.queued)
+            .num("urgent", self.urgent);
+        match self.drain_rate {
+            Some(r) => root.float("drain_rate_cost_per_s", r),
+            None => root.put("drain_rate_cost_per_s", "null".to_string()),
+        };
+        root.put("cartridges", json_array(&cartridges))
+            .put("queues", json_array(&queues))
+            .put("alerts", json_array(&alerts))
+            .put("tenants", json_array(&tenants))
+            .put("trace", self.trace_json());
+        root.encode()
+    }
+
+    /// The flight-recorder tail alone, for the `/trace` endpoint.
+    pub fn trace_json(&self) -> String {
+        let recent: Vec<String> = self.recent.iter().map(event_json).collect();
+        let mut j = Json::default();
+        j.put("recent", json_array(&recent)).num("dropped", self.trace_dropped);
+        j.encode()
+    }
+}
+
+/// Serialise the labeled series for the `ita-metrics-v1` JSON snapshot.
+pub fn tenants_json(tenants: &[TenantClassMetrics]) -> String {
+    let rows: Vec<String> = tenants.iter().map(tenant_json).collect();
+    json_array(&rows)
+}
+
+/// Serialise the alert postures for the `ita-metrics-v1` JSON snapshot.
+pub fn alerts_json(alerts: &[AlertSnapshot]) -> String {
+    let rows: Vec<String> = alerts.iter().map(alert_json).collect();
+    json_array(&rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn qos(priority: Priority, tenant: u64) -> QoS {
+        QoS { priority, tenant, weight: 1 }
+    }
+
+    #[test]
+    fn series_rows_are_keyed_by_class_then_tenant() {
+        let mut plane = ObservabilityPlane::new(None);
+        plane.on_admitted(qos(Priority::Batch, 7));
+        plane.on_admitted(qos(Priority::Interactive, 9));
+        plane.on_done(qos(Priority::Batch, 7), 12, 0.01);
+        plane.on_shed(qos(Priority::Interactive, 9));
+        let rows = plane.tenant_metrics();
+        assert_eq!(rows.len(), 2);
+        // interactive sorts first regardless of insertion order
+        assert_eq!((rows[0].class, rows[0].tenant), ("interactive", 9));
+        assert_eq!(rows[0].shed, 1);
+        assert_eq!((rows[1].class, rows[1].tenant), ("batch", 7));
+        assert_eq!(rows[1].requests_completed, 1);
+        assert_eq!(rows[1].tokens_generated, 12);
+        assert_eq!(rows[1].itl.count(), 1);
+    }
+
+    #[test]
+    fn burn_tracker_fires_on_sustained_burn_and_clears_on_recovery() {
+        // availability 0.99 → 1% budget; 50% bad burns at rate 50
+        let mut t = SloTracker::new("availability", 0.01, 1.0, 4.0);
+        for i in 0..40 {
+            let now = i as f64 * 0.05; // 2 s of traffic
+            t.record(i % 2 == 0, now);
+        }
+        let edge = t.evaluate(2.0).expect("sustained 50% bad fires");
+        assert!(edge.firing);
+        assert_eq!(t.state, AlertState::Firing);
+        assert!(t.burn(t.fast_buckets) > BURN_FIRE);
+
+        // healthy traffic pushes the bad events out of the fast window
+        for i in 0..40 {
+            let now = 2.0 + i as f64 * 0.05;
+            t.record(false, now);
+        }
+        let edge = t.evaluate(4.0).expect("fast-window recovery clears");
+        assert!(!edge.firing);
+        assert_eq!(t.state, AlertState::Ok);
+    }
+
+    #[test]
+    fn burn_tracker_ignores_sparse_windows() {
+        // one lonely bad event must not page anyone
+        let mut t = SloTracker::new("availability", 0.01, 1.0, 4.0);
+        t.record(true, 0.1);
+        assert!(t.evaluate(0.2).is_none());
+        assert_eq!(t.state, AlertState::Ok);
+        assert_eq!(t.burn(t.fast_buckets), 0.0);
+    }
+
+    #[test]
+    fn slow_window_gates_entry_but_not_exit() {
+        let mut t = SloTracker::new("availability", 0.01, 1.0, 8.0);
+        // long healthy history fills the slow window with good events
+        for i in 0..800 {
+            t.record(false, i as f64 * 0.01); // 8 s
+        }
+        // a 1 s burst of 100% bad: fast window burns hot, slow window is
+        // still diluted by history → no fire
+        for i in 0..20 {
+            t.record(true, 8.0 + i as f64 * 0.05);
+        }
+        assert!(t.burn(t.fast_buckets) >= BURN_FIRE);
+        assert!(t.evaluate(9.0).is_none(), "slow window must veto a short blip");
+        assert_eq!(t.state, AlertState::Ok);
+    }
+
+    #[test]
+    fn plane_evaluate_emits_each_edge_exactly_once() {
+        let spec = SloSpec {
+            availability: Some(0.99),
+            fast_window_s: 0.2,
+            slow_window_s: 0.4,
+            ..SloSpec::default()
+        };
+        let mut plane = ObservabilityPlane::new(Some(spec));
+        let q = qos(Priority::Standard, 1);
+        for _ in 0..64 {
+            plane.on_shed(q);
+        }
+        // give wall time a chance to stay inside the fast window — the
+        // records above land in bucket(now) regardless
+        let edges = plane.evaluate();
+        assert_eq!(edges.len(), 1);
+        assert!(edges[0].firing);
+        assert_eq!(edges[0].slo, "availability");
+        // steady state: no repeated edge
+        assert!(plane.evaluate().is_empty());
+        let alerts = plane.alerts();
+        assert_eq!(alerts.len(), 1);
+        assert_eq!(alerts[0].state, AlertState::Firing);
+        // wait out the fast window with good traffic, then it clears
+        std::thread::sleep(std::time::Duration::from_millis(250));
+        for _ in 0..64 {
+            plane.on_admitted(q);
+        }
+        let edges = plane.evaluate();
+        assert_eq!(edges.len(), 1);
+        assert!(!edges[0].firing);
+    }
+
+    #[test]
+    fn status_snapshot_serialises_round_trippable_json() {
+        let mut plane = ObservabilityPlane::new(Some(SloSpec {
+            availability: Some(0.9),
+            ..SloSpec::default()
+        }));
+        plane.on_admitted(qos(Priority::Interactive, 3));
+        plane.on_done(qos(Priority::Interactive, 3), 5, 0.002);
+        let snap = StatusSnapshot {
+            wall_s: 1.5,
+            queued: 2,
+            urgent: 1,
+            drain_rate: Some(123.0),
+            cartridges: vec![CartridgeStatus {
+                cartridge: 0,
+                alive: true,
+                in_flight: 2,
+                capacity: 8,
+                active_rows: 2,
+            }],
+            queues: vec![QueueStatus { class: "batch", tenant: 0, depth: 2, cost: 64 }],
+            alerts: plane.alerts(),
+            tenants: plane.tenant_metrics(),
+            recent: Vec::new(),
+            trace_dropped: 4,
+        };
+        let parsed = crate::util::json::parse(&snap.to_json()).expect("valid json");
+        assert_eq!(parsed.get("schema").and_then(|v| v.as_str()), Some("ita-status-v1"));
+        assert_eq!(parsed.get("queued").and_then(|v| v.as_f64()), Some(2.0));
+        let carts = parsed.get("cartridges").and_then(|v| v.as_array()).unwrap();
+        assert_eq!(carts.len(), 1);
+        assert_eq!(carts[0].get("capacity").and_then(|v| v.as_f64()), Some(8.0));
+        let tenants = parsed.get("tenants").and_then(|v| v.as_array()).unwrap();
+        assert_eq!(tenants[0].get("class").and_then(|v| v.as_str()), Some("interactive"));
+        let alerts = parsed.get("alerts").and_then(|v| v.as_array()).unwrap();
+        assert_eq!(alerts[0].get("state").and_then(|v| v.as_str()), Some("ok"));
+        let trace = parsed.get("trace").unwrap();
+        assert_eq!(trace.get("dropped").and_then(|v| v.as_f64()), Some(4.0));
+    }
+}

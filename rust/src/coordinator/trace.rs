@@ -94,6 +94,11 @@ pub enum TraceKind {
     /// The sequence's KV was restored from the spill tier ahead of its
     /// next decode step. `a` = KV rows restored, `b` = spill-file bytes.
     Unspill,
+    /// An SLO burn-rate alert transitioned (see
+    /// `coordinator::telemetry`). `a` = SLO id (0 = `itl_p99`,
+    /// 1 = `availability`), `b` = 1 on fire / 0 on clear. Not tied to a
+    /// request ([`REQ_NONE`]); renders on the control track.
+    Alert,
 }
 
 impl TraceKind {
@@ -121,6 +126,7 @@ impl TraceKind {
             TraceKind::Preempt => "preempt",
             TraceKind::Spill => "spill",
             TraceKind::Unspill => "unspill",
+            TraceKind::Alert => "alert",
         }
     }
 
@@ -326,9 +332,8 @@ impl FleetTrace {
                 TraceKind::StageSpan => {
                     (TID_STAGE_BASE + ev.a, format!("stage {}", ev.a))
                 }
-                TraceKind::Checkpoint | TraceKind::Migrate | TraceKind::Shed => {
-                    (TID_CONTROL, "control".to_string())
-                }
+                TraceKind::Checkpoint | TraceKind::Migrate | TraceKind::Shed
+                | TraceKind::Alert => (TID_CONTROL, "control".to_string()),
                 _ => (TID_REQ_BASE + ev.req, format!("req {}", ev.req)),
             };
             pids.insert(pid);
@@ -452,6 +457,10 @@ impl FleetTrace {
             TraceKind::Spill | TraceKind::Unspill => {
                 args.num("rows", ev.a).num("bytes", ev.b);
             }
+            TraceKind::Alert => {
+                args.str("slo", if ev.a == 0 { "itl_p99" } else { "availability" })
+                    .bool("firing", ev.b == 1);
+            }
         }
         args.encode()
     }
@@ -529,6 +538,243 @@ impl FleetTrace {
     }
 }
 
+// ---------------------------------------------------------------------------
+// tail-based sampling
+// ---------------------------------------------------------------------------
+
+/// Retention policy for [`TailSampler`].
+#[derive(Debug, Clone, Copy)]
+pub struct TailSamplerOpts {
+    /// Hard cap on retained events across all chains and the ambient
+    /// ring. Evictions count into `dropped`.
+    pub budget_events: usize,
+    /// Keep the `k` slowest completed chains (by reported E2E latency).
+    pub slow_k: usize,
+    /// Head-sample one in `n` of the remaining completed chains (ticket
+    /// modulo), preserving an unbiased cross-section of normal traffic.
+    /// 0 disables head sampling.
+    pub head_every: u64,
+}
+
+impl Default for TailSamplerOpts {
+    fn default() -> Self {
+        TailSamplerOpts { budget_events: 1 << 14, slow_k: 8, head_every: 64 }
+    }
+}
+
+/// Why a completed chain was retained. Eviction under budget pressure
+/// prefers the least interesting reason first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+enum KeepReason {
+    /// Head-sampled cross-section (first to go under pressure).
+    Head,
+    /// Among the top-k slowest.
+    Slow,
+    /// Shed, cancelled, preempted, migrated, or requeued — the outliers
+    /// tail sampling exists to keep (last to go).
+    Flagged,
+}
+
+#[derive(Debug)]
+struct SampledChain {
+    score: u64,
+    reason: KeepReason,
+    events: Vec<TraceEvent>,
+}
+
+/// Tail-based trace sampling: buffers each request's event chain until it
+/// completes, then keeps the chain only if the request was *interesting*
+/// — shed, cancelled, preempted, migrated, or requeued (flagged on sight
+/// of the corresponding events), among the top-k slowest, or head-sampled
+/// — all under a hard event budget. This is what makes always-on tracing
+/// production-viable: memory is bounded by policy, not by traffic, and
+/// the events worth a post-incident look are exactly the ones retained.
+///
+/// Events not tied to a request (wave/stage spans, checkpoints, alerts)
+/// go to a bounded ambient ring so the timeline keeps its utilization
+/// context without unbounded growth.
+#[derive(Debug)]
+pub struct TailSampler {
+    opts: TailSamplerOpts,
+    /// In-flight chains: ticket → (flagged, events).
+    open: std::collections::HashMap<u64, (bool, Vec<TraceEvent>)>,
+    open_events: usize,
+    kept: Vec<SampledChain>,
+    kept_events: usize,
+    ambient: VecDeque<TraceEvent>,
+    ambient_cap: usize,
+    dropped: u64,
+}
+
+impl TailSampler {
+    pub fn new(opts: TailSamplerOpts) -> TailSampler {
+        TailSampler {
+            opts,
+            open: std::collections::HashMap::new(),
+            open_events: 0,
+            kept: Vec::new(),
+            kept_events: 0,
+            ambient: VecDeque::new(),
+            ambient_cap: (opts.budget_events / 4).max(16),
+            dropped: 0,
+        }
+    }
+
+    /// Events lost to sampling decisions and budget evictions so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Events currently retained (open + kept + ambient).
+    pub fn retained(&self) -> usize {
+        self.open_events + self.kept_events + self.ambient.len()
+    }
+
+    /// Offer one event to the sampler; it is either buffered, retained,
+    /// or dropped-and-counted according to the retention policy.
+    pub fn offer(&mut self, ev: TraceEvent) {
+        if ev.req == REQ_NONE {
+            if self.ambient.len() >= self.ambient_cap {
+                self.ambient.pop_front();
+                self.dropped += 1;
+            }
+            self.ambient.push_back(ev);
+            return;
+        }
+        // dispatcher-side shed/cancel instants are keyed by *client* id
+        // (a shed request never gets a ticket) and arrive as standalone
+        // chains: always retain
+        if matches!(ev.kind, TraceKind::Shed | TraceKind::Cancel) {
+            self.kept_events += 1;
+            self.kept.push(SampledChain {
+                score: u64::MAX,
+                reason: KeepReason::Flagged,
+                events: vec![ev],
+            });
+            self.enforce_budget();
+            return;
+        }
+        let entry = self.open.entry(ev.req).or_insert_with(|| (false, Vec::new()));
+        if matches!(
+            ev.kind,
+            TraceKind::Export | TraceKind::Resume | TraceKind::Preempt | TraceKind::Migrate
+        ) {
+            entry.0 = true;
+        }
+        entry.1.push(ev);
+        self.open_events += 1;
+        if ev.kind == TraceKind::Complete {
+            let (flagged, events) = self.open.remove(&ev.req).expect("chain just touched");
+            self.open_events -= events.len();
+            self.close(ev.req, ev.b, flagged, events);
+        } else if self.open_events > self.opts.budget_events {
+            // runaway open set (chains that never complete): shed the
+            // largest un-flagged chain, or the largest outright
+            let victim = self
+                .open
+                .iter()
+                .min_by_key(|(_, (flagged, v))| (*flagged, std::cmp::Reverse(v.len())))
+                .map(|(k, _)| *k);
+            if let Some(k) = victim {
+                let (_, v) = self.open.remove(&k).expect("victim exists");
+                self.open_events -= v.len();
+                self.dropped += v.len() as u64;
+            }
+        }
+    }
+
+    /// Completed-chain retention decision.
+    fn close(&mut self, req: u64, score: u64, flagged: bool, events: Vec<TraceEvent>) {
+        let reason = if flagged {
+            Some(KeepReason::Flagged)
+        } else if self.opts.head_every > 0 && req % self.opts.head_every == 0 {
+            Some(KeepReason::Head)
+        } else if self.qualifies_slow(score) {
+            Some(KeepReason::Slow)
+        } else {
+            None
+        };
+        match reason {
+            None => self.dropped += events.len() as u64,
+            Some(reason) => {
+                self.kept_events += events.len();
+                self.kept.push(SampledChain { score, reason, events });
+                if reason == KeepReason::Slow {
+                    self.prune_slow();
+                }
+                self.enforce_budget();
+            }
+        }
+    }
+
+    fn qualifies_slow(&self, score: u64) -> bool {
+        let slow: Vec<u64> = self
+            .kept
+            .iter()
+            .filter(|c| c.reason == KeepReason::Slow)
+            .map(|c| c.score)
+            .collect();
+        slow.len() < self.opts.slow_k || slow.iter().any(|&s| score > s)
+    }
+
+    /// Keep only the k slowest among `Slow`-retained chains.
+    fn prune_slow(&mut self) {
+        loop {
+            let slow_count =
+                self.kept.iter().filter(|c| c.reason == KeepReason::Slow).count();
+            if slow_count <= self.opts.slow_k {
+                return;
+            }
+            let victim = self
+                .kept
+                .iter()
+                .enumerate()
+                .filter(|(_, c)| c.reason == KeepReason::Slow)
+                .min_by_key(|(_, c)| c.score)
+                .map(|(i, _)| i)
+                .expect("slow_count > 0");
+            let chain = self.kept.remove(victim);
+            self.kept_events -= chain.events.len();
+            self.dropped += chain.events.len() as u64;
+        }
+    }
+
+    /// Hard budget: evict kept chains least-interesting-first (`Head`,
+    /// then fastest `Slow`, then oldest `Flagged`), then ambient events.
+    fn enforce_budget(&mut self) {
+        while self.retained() > self.opts.budget_events {
+            let victim = self
+                .kept
+                .iter()
+                .enumerate()
+                .min_by_key(|(i, c)| (c.reason, c.score, *i))
+                .map(|(i, _)| i);
+            if let Some(i) = victim {
+                let chain = self.kept.remove(i);
+                self.kept_events -= chain.events.len();
+                self.dropped += chain.events.len() as u64;
+            } else if self.ambient.pop_front().is_some() {
+                self.dropped += 1;
+            } else {
+                return; // only open chains remain; offer() bounds those
+            }
+        }
+    }
+
+    /// All retained events (ambient + kept + still-open chains) and the
+    /// total drop count, consumed at fleet shutdown.
+    pub fn finish(self) -> (Vec<TraceEvent>, u64) {
+        let mut events: Vec<TraceEvent> = self.ambient.into_iter().collect();
+        for chain in self.kept {
+            events.extend(chain.events);
+        }
+        for (_, (_, chain)) in self.open {
+            events.extend(chain);
+        }
+        (events, self.dropped)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -603,5 +849,110 @@ mod tests {
         let slowest = doc.get("slowest").and_then(JsonValue::as_array).expect("array");
         assert_eq!(slowest.len(), 1);
         assert_eq!(slowest[0].get("req").and_then(JsonValue::as_f64), Some(2.0));
+    }
+
+    /// A minimal admit→complete chain for request `req` with reported E2E
+    /// latency `total_us`.
+    fn chain(req: u64, total_us: u64) -> Vec<TraceEvent> {
+        let mut admit = TraceEvent::at(1, TraceKind::Admit);
+        admit.req = req;
+        let mut complete = TraceEvent::at(1 + total_us, TraceKind::Complete);
+        complete.req = req;
+        complete.b = total_us;
+        vec![admit, complete]
+    }
+
+    #[test]
+    fn tail_sampler_keeps_flagged_and_slow_chains_drops_the_rest() {
+        let opts = TailSamplerOpts { budget_events: 1 << 10, slow_k: 2, head_every: 0 };
+        let mut s = TailSampler::new(opts);
+        // 20 unremarkable fast chains (odd tickets so head sampling — even
+        // disabled here — can't save them), one slow outlier, one preempted
+        for i in 0..20u64 {
+            for ev in chain(2 * i + 1, 100 + i) {
+                s.offer(ev);
+            }
+        }
+        for ev in chain(101, 90_000) {
+            s.offer(ev);
+        }
+        let mut preempt = TraceEvent::at(5, TraceKind::Preempt);
+        preempt.req = 103;
+        s.offer(preempt);
+        let mut complete = TraceEvent::at(6, TraceKind::Complete);
+        complete.req = 103;
+        complete.b = 1; // fastest of all — retained anyway, it was flagged
+        s.offer(complete);
+
+        let dropped_before = s.dropped();
+        assert!(dropped_before > 0, "unremarkable chains must be dropped");
+        let (events, dropped) = s.finish();
+        assert_eq!(dropped, dropped_before);
+        let reqs: std::collections::HashSet<u64> =
+            events.iter().map(|e| e.req).filter(|&r| r != REQ_NONE).collect();
+        assert!(reqs.contains(&101), "slowest chain retained");
+        assert!(reqs.contains(&103), "preempted chain retained");
+        // the slow outlier displaced one of the two previously-slowest
+        // unremarkable chains (scores 118, 119): only the slower survives
+        assert!(reqs.contains(&39), "top-k slowest retained: {reqs:?}");
+        assert!(!reqs.contains(&37), "displaced from top-k by the outlier: {reqs:?}");
+        assert!(!reqs.contains(&1), "fast unflagged chain sampled away");
+    }
+
+    #[test]
+    fn tail_sampler_head_samples_a_cross_section() {
+        let opts = TailSamplerOpts { budget_events: 1 << 10, slow_k: 0, head_every: 8 };
+        let mut s = TailSampler::new(opts);
+        for i in 0..32u64 {
+            for ev in chain(i, 100) {
+                s.offer(ev);
+            }
+        }
+        let (events, _) = s.finish();
+        let reqs: std::collections::HashSet<u64> =
+            events.iter().map(|e| e.req).collect();
+        assert_eq!(reqs, [0u64, 8, 16, 24].into_iter().collect());
+    }
+
+    #[test]
+    fn tail_sampler_enforces_the_event_budget() {
+        let opts = TailSamplerOpts { budget_events: 8, slow_k: 64, head_every: 0 };
+        let mut s = TailSampler::new(opts);
+        // every chain qualifies as "slow" (slow_k is huge) but the hard
+        // budget caps retention anyway
+        for i in 0..50u64 {
+            for ev in chain(i, 100 + i) {
+                s.offer(ev);
+            }
+        }
+        assert!(s.retained() <= 8, "budget violated: {} events", s.retained());
+        // shed instants (flagged) survive budget pressure at the expense
+        // of slow chains
+        let mut shed = TraceEvent::at(9, TraceKind::Shed);
+        shed.req = 999;
+        s.offer(shed);
+        let (events, dropped) = s.finish();
+        assert!(events.iter().any(|e| e.kind == TraceKind::Shed));
+        assert!(dropped >= 92, "evictions counted: {dropped}");
+    }
+
+    #[test]
+    fn tail_sampler_bounds_ambient_and_open_sets() {
+        let opts = TailSamplerOpts { budget_events: 16, slow_k: 4, head_every: 0 };
+        let mut s = TailSampler::new(opts);
+        for i in 0..100u64 {
+            let mut wave = TraceEvent::at(i, TraceKind::Wave);
+            wave.dur_us = 1;
+            s.offer(wave); // req = REQ_NONE → ambient ring
+        }
+        assert!(s.retained() <= 16);
+        // chains that never complete can't pin unbounded memory either
+        for i in 0..100u64 {
+            let mut admit = TraceEvent::at(i, TraceKind::Admit);
+            admit.req = i;
+            s.offer(admit);
+        }
+        assert!(s.retained() <= 2 * 16, "open set unbounded: {}", s.retained());
+        assert!(s.dropped() > 0);
     }
 }

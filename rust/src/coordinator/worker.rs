@@ -110,6 +110,12 @@ pub struct CheckpointReport {
     /// Events this cartridge's trace ring dropped since the previous
     /// checkpoint (per-interval delta, summed fleet-side).
     pub trace_dropped: u64,
+    /// Rows actively decoding when the checkpoint was cut
+    /// ([`Scheduler::active_rows`]) — the live-occupancy signal behind the
+    /// fleet status surface.
+    ///
+    /// [`Scheduler::active_rows`]: super::scheduler::Scheduler::active_rows
+    pub active_rows: usize,
 }
 
 /// Events a worker emits on the shared event channel.
@@ -351,6 +357,7 @@ fn worker_loop<E>(
                             prefix_occupancy,
                             events: trace_events,
                             trace_dropped,
+                            active_rows: sched.active_rows(),
                         };
                         let _ = events.send(wrap(WorkerEvent::Checkpoint(id, Box::new(report))));
                     }
@@ -376,6 +383,7 @@ fn worker_loop<E>(
                         prefix_occupancy: None,
                         events: leftover,
                         trace_dropped,
+                        active_rows: sched.active_rows(),
                     };
                     let _ = events.send(wrap(WorkerEvent::Checkpoint(id, Box::new(report))));
                 }

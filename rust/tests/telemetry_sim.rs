@@ -1,0 +1,457 @@
+//! Deterministic telemetry-plane tier: pins the conservation contract of
+//! the live observability plane (`coordinator::telemetry`) on `SimDevice`
+//! fleets — artifact-free, green from a clean checkout.
+//!
+//! * The per-tenant × priority-class labeled series sum *exactly* to the
+//!   fleet aggregates — across clean runs, admission-control shedding,
+//!   client cancellation, worker-panic requeue, and live migration. Every
+//!   request is attributed to the `(tenant, class)` that submitted it, and
+//!   none is counted twice.
+//! * A burst-overload simulation drives the availability burn rate over
+//!   the fire line in both windows: the alert fires, both edges are
+//!   stamped into the trace as `Alert` instants, and the alert clears once
+//!   the load subsides.
+//! * Sink overflow is counted: a tiny trace ring must report its drops in
+//!   `FleetMetrics::trace_dropped_total`, on the status surface, and in
+//!   the Prometheus exposition.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use ita::config::ModelConfig;
+use ita::coordinator::engine::Engine;
+use ita::coordinator::frontdoor::{FrontDoor, FrontDoorOpts, QoS, SubmitError};
+use ita::coordinator::metrics::{FleetMetrics, MetricsRegistry};
+use ita::coordinator::request::{FinishReason, GenRequest};
+use ita::coordinator::scheduler::SchedulerOpts;
+use ita::coordinator::stream::{StreamItem, TokenStream};
+use ita::coordinator::telemetry::{AlertState, SloSpec, TenantClassMetrics};
+use ita::coordinator::trace::TraceKind;
+use ita::device::sim::SimDevice;
+use ita::device::{DeviceDims, DeviceStats, ItaDevice};
+use ita::host::embedding::EmbeddingTable;
+use ita::model::{Mat, ModelWeights};
+
+const WEIGHT_SEED: u64 = 0x7E1E;
+
+fn front(n: usize, opts: SchedulerOpts, door: FrontDoorOpts) -> FrontDoor {
+    FrontDoor::start(
+        n,
+        |_id| Ok(Engine::synthetic(&ModelConfig::TINY, WEIGHT_SEED)),
+        opts,
+        door,
+    )
+    .expect("front door boots")
+}
+
+fn endless(id: u64, prompt: &str, max_new_tokens: usize) -> GenRequest {
+    let mut r = GenRequest::greedy(id, prompt, max_new_tokens);
+    r.stop_at_eos = false;
+    r
+}
+
+/// Drain a stream, asserting the incremental batches concatenate to the
+/// final result, and return (id, tokens, finish).
+fn drain(mut s: TokenStream) -> (u64, Vec<u32>, FinishReason) {
+    let mut toks = Vec::new();
+    let result = loop {
+        match s.recv() {
+            Some(StreamItem::Tokens(t)) => toks.extend(t),
+            Some(StreamItem::End(r)) => break *r,
+            None => panic!("stream severed before its request completed"),
+        }
+    };
+    assert_eq!(toks, result.tokens, "stream must concatenate to the final result");
+    (result.id, result.tokens, result.finish)
+}
+
+/// The labeled series row for one (class, tenant) pair.
+fn row<'a>(m: &'a FleetMetrics, class: &str, tenant: u64) -> &'a TenantClassMetrics {
+    m.tenants
+        .iter()
+        .find(|t| t.class == class && t.tenant == tenant)
+        .unwrap_or_else(|| panic!("no series row for ({class}, tenant {tenant})"))
+}
+
+/// Sum one counter across every labeled series row.
+fn total(m: &FleetMetrics, field: fn(&TenantClassMetrics) -> u64) -> u64 {
+    m.tenants.iter().map(field).sum()
+}
+
+#[test]
+fn clean_run_series_sum_exactly_to_fleet_aggregates() {
+    let door = front(2, SchedulerOpts::default(), FrontDoorOpts::default());
+    let lanes = [
+        QoS::interactive().for_tenant(1, 1),
+        QoS::default().for_tenant(2, 2),
+        QoS::batch().for_tenant(3, 1),
+    ];
+    let streams: Vec<_> = (0..9)
+        .map(|i| {
+            let req = endless(i as u64, &format!("tenant workload {i}"), 6);
+            door.submit_with(req, lanes[i % 3]).expect("uncontended fleet admits")
+        })
+        .collect();
+    for s in streams {
+        let (_, toks, finish) = drain(s);
+        assert_eq!(finish, FinishReason::MaxTokens);
+        assert_eq!(toks.len(), 6);
+    }
+    let m = door.shutdown().expect("shutdown");
+
+    // one row per (tenant, class) pair, interactive tenants first
+    assert_eq!(m.tenants.len(), 3);
+    assert_eq!((m.tenants[0].class, m.tenants[0].tenant), ("interactive", 1));
+    assert_eq!((m.tenants[1].class, m.tenants[1].tenant), ("standard", 2));
+    assert_eq!((m.tenants[2].class, m.tenants[2].tenant), ("batch", 3));
+    for t in &m.tenants {
+        assert_eq!(t.admitted, 3, "tenant {} admitted", t.tenant);
+        assert_eq!(t.requests_completed, 3);
+        assert_eq!(t.tokens_generated, 18);
+        assert_eq!(t.queue_wait.count(), 3, "one dispatch per admitted request");
+        assert_eq!(t.shed + t.cancelled + t.requeued + t.migrated, 0);
+    }
+    let agg = m.aggregate();
+    assert_eq!(total(&m, |t| t.requests_completed), agg.requests_completed);
+    assert_eq!(total(&m, |t| t.tokens_generated), agg.tokens_generated);
+    assert_eq!(total(&m, |t| t.admitted), 9);
+    assert_eq!(m.shed_requests + m.cancelled_requests + m.requeued_requests + m.migrations, 0);
+    assert!(m.alerts.is_empty(), "no SLO declared, no alert rows");
+}
+
+#[test]
+fn shed_and_cancel_land_in_the_right_series_rows() {
+    // one cartridge, one decode slot, a microscopic queue budget: any
+    // projected wait at all sheds — once a drain rate has been measured
+    let opts = SchedulerOpts { max_active: 1, ..SchedulerOpts::default() };
+    let door_opts = FrontDoorOpts { queue_budget_s: Some(1e-6), ..FrontDoorOpts::default() };
+    let door = front(1, opts, door_opts);
+
+    // teach the drain-rate estimator: serial traffic sees an empty queue
+    let mut completed = 0u64;
+    for i in 0..6 {
+        let (_, _, finish) = drain(
+            door.submit_with(endless(i, "warm the estimator", 8), QoS::default().for_tenant(1, 1))
+                .expect("warmup admits"),
+        );
+        assert_eq!(finish, FinishReason::MaxTokens);
+        completed += 1;
+        std::thread::sleep(Duration::from_millis(8));
+    }
+
+    // occupy the only slot, queue one, then probe until the batch tenant
+    // sheds against the 1 µs budget
+    let occupant = door
+        .submit_with(endless(90, "occupy the slot", 600), QoS::interactive().for_tenant(2, 1))
+        .expect("admits");
+    // wait until the occupant is demonstrably mid-decode so the probes
+    // and the cancel below land against an occupied slot
+    loop {
+        let m = door.metrics().expect("metrics");
+        if m.aggregate().tokens_generated > 48 {
+            break;
+        }
+        std::thread::yield_now();
+    }
+    let queued = door
+        .submit_with(endless(91, "wait in line", 8), QoS::interactive().for_tenant(2, 1))
+        .expect("empty queue admits");
+    let mut probes = Vec::new();
+    let mut shed = 0u64;
+    for i in 0..5 {
+        match door.submit_with(endless(100 + i, "probe", 8), QoS::batch().for_tenant(3, 1)) {
+            Err(SubmitError::Overloaded { .. }) => {
+                shed += 1;
+                break;
+            }
+            Ok(s) => probes.push(s),
+            Err(SubmitError::Closed) => panic!("fleet closed mid-test"),
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(shed >= 1, "admission control never engaged");
+
+    occupant.cancel_handle().cancel();
+    let (_, _, finish) = drain(occupant);
+    assert_eq!(finish, FinishReason::Cancelled);
+    let (_, _, finish) = drain(queued);
+    assert_eq!(finish, FinishReason::MaxTokens);
+    completed += 1;
+    for s in probes {
+        let (_, _, finish) = drain(s);
+        assert_eq!(finish, FinishReason::MaxTokens);
+        completed += 1;
+    }
+
+    let m = door.shutdown().expect("shutdown");
+    // the shed and the cancel are attributed to the tenants that caused
+    // them, and the labeled series sum exactly to the fleet counters
+    assert_eq!(row(&m, "batch", 3).shed, shed);
+    assert_eq!(row(&m, "interactive", 2).cancelled, 1);
+    assert_eq!(total(&m, |t| t.shed), m.shed_requests);
+    assert_eq!(total(&m, |t| t.cancelled), m.cancelled_requests);
+    assert_eq!(m.cancelled_requests, 1);
+    assert_eq!(total(&m, |t| t.requests_completed), completed);
+    assert_eq!(total(&m, |t| t.requests_completed), m.aggregate().requests_completed);
+    // every admitted stream either completed or was cancelled, and shed
+    // requests never dispatched: wait samples count placements only
+    assert_eq!(total(&m, |t| t.admitted), completed + 1);
+    assert_eq!(total(&m, |t| t.queue_wait.count()), completed + 1);
+}
+
+/// A cartridge that panics on QKV call number `fault_at` — the worker dies
+/// mid-request and the fleet must requeue its orphans onto a healthy
+/// cartridge (same injection as `fleet_sim.rs`, here with QoS attached).
+struct FaultyDevice {
+    inner: SimDevice,
+    calls: Arc<AtomicUsize>,
+    fault_at: usize,
+}
+
+impl ItaDevice for FaultyDevice {
+    fn dims(&self) -> DeviceDims {
+        self.inner.dims()
+    }
+
+    fn buckets(&self) -> &[usize] {
+        self.inner.buckets()
+    }
+
+    fn qkv(&mut self, layer: usize, h: &Mat) -> anyhow::Result<(Mat, Mat, Mat)> {
+        if self.calls.fetch_add(1, Ordering::SeqCst) == self.fault_at {
+            panic!("injected cartridge fault");
+        }
+        self.inner.qkv(layer, h)
+    }
+
+    fn ffn(&mut self, layer: usize, h: &Mat, attn: &Mat) -> anyhow::Result<Mat> {
+        self.inner.ffn(layer, h, attn)
+    }
+
+    fn logits(&mut self, h: &Mat) -> anyhow::Result<Mat> {
+        self.inner.logits(h)
+    }
+
+    fn stats(&self) -> DeviceStats {
+        self.inner.stats()
+    }
+}
+
+#[test]
+fn panic_requeue_is_attributed_to_the_orphaned_tenants() {
+    let faults = Arc::new(AtomicUsize::new(0));
+    let faults2 = Arc::clone(&faults);
+    let door = FrontDoor::start(
+        2,
+        move |id| {
+            let dev = SimDevice::synthetic(&ModelConfig::TINY, vec![1, 2, 4, 8], WEIGHT_SEED);
+            let emb = EmbeddingTable::new(
+                ModelWeights::synthetic(&ModelConfig::TINY, WEIGHT_SEED).emb,
+            );
+            if id == 0 {
+                // cartridge 0 blows up on its very first device call
+                let faulty = FaultyDevice { inner: dev, calls: Arc::clone(&faults2), fault_at: 0 };
+                Ok(Engine::new(Box::new(faulty), emb, ModelConfig::TINY.n_heads))
+            } else {
+                Ok(Engine::new(Box::new(dev), emb, ModelConfig::TINY.n_heads))
+            }
+        },
+        SchedulerOpts::default(),
+        FrontDoorOpts::default(),
+    )
+    .expect("front door boots");
+
+    let lanes = [
+        QoS::interactive().for_tenant(1, 1),
+        QoS::default().for_tenant(2, 1),
+        QoS::batch().for_tenant(3, 1),
+    ];
+    let streams: Vec<_> = (0..8)
+        .map(|i| {
+            let req = endless(i as u64, &format!("requeue survivor {i}"), 5);
+            door.submit_with(req, lanes[i % 3]).expect("admits")
+        })
+        .collect();
+    for s in streams {
+        let (_, toks, finish) = drain(s);
+        assert_eq!(finish, FinishReason::MaxTokens, "requeued request still completes");
+        assert_eq!(toks.len(), 5);
+    }
+    assert!(faults.load(Ordering::SeqCst) >= 1, "fault was never triggered");
+
+    let m = door.shutdown().expect("shutdown");
+    assert!(m.requeued_requests >= 1, "expected requeues, got {}", m.report());
+    assert_eq!(m.failed_requests, 0);
+    // every orphan's requeue landed in the row of the tenant that lost it
+    assert_eq!(total(&m, |t| t.requeued), m.requeued_requests);
+    assert_eq!(total(&m, |t| t.requests_completed), 8);
+    assert_eq!(total(&m, |t| t.tokens_generated), 40);
+    assert_eq!(m.aggregate().requests_completed, 8);
+    // each requeued orphan was re-dispatched at least once more
+    assert!(total(&m, |t| t.queue_wait.count()) >= 8 + m.requeued_requests);
+}
+
+#[test]
+fn live_migration_is_attributed_to_the_moving_tenant() {
+    let door = front(2, SchedulerOpts::default(), FrontDoorOpts::default());
+    let stream = door
+        .submit_with(endless(0, "the memory wall", 96), QoS::interactive().for_tenant(5, 1))
+        .expect("admits");
+    // wait until cartridge 0 is demonstrably mid-decode (the metrics
+    // snapshot blocks between scheduler steps — a clean sync point)
+    loop {
+        let m = door.metrics().expect("metrics");
+        if m.cartridges[0].serving.tokens_generated >= 6 {
+            break;
+        }
+        std::thread::yield_now();
+    }
+    assert!(door.fleet().migrate(0, 0, 1).expect("migrate"), "mid-decode migration refused");
+    let (_, toks, finish) = drain(stream);
+    assert_eq!(finish, FinishReason::MaxTokens);
+    assert_eq!(toks.len(), 96);
+
+    let m = door.shutdown().expect("shutdown");
+    assert_eq!(m.migrations, 1);
+    let r = row(&m, "interactive", 5);
+    assert_eq!(r.migrated, 1);
+    assert_eq!(r.requests_completed, 1);
+    assert_eq!(r.tokens_generated, 96);
+    assert_eq!(total(&m, |t| t.migrated), m.migrations);
+}
+
+#[test]
+fn burst_overload_fires_the_availability_alert_and_recovery_clears_it() {
+    // compressed burn windows so the simulation runs in seconds; tracing
+    // on so the alert edges land in the timeline as control-track instants
+    let opts = SchedulerOpts { max_active: 1, trace_capacity: 65536, ..SchedulerOpts::default() };
+    let door_opts = FrontDoorOpts {
+        queue_budget_s: Some(1e-6),
+        slo: Some(SloSpec {
+            availability: Some(0.99),
+            fast_window_s: 0.5,
+            slow_window_s: 1.0,
+            ..SloSpec::default()
+        }),
+        ..FrontDoorOpts::default()
+    };
+    let door = front(1, opts, door_opts);
+
+    // healthy traffic first: teaches the drain-rate estimator and seeds
+    // the burn windows with good events
+    for i in 0..6 {
+        let (_, _, finish) = drain(
+            door.submit_with(endless(i, "healthy baseline", 8), QoS::default().for_tenant(1, 1))
+                .expect("baseline admits"),
+        );
+        assert_eq!(finish, FinishReason::MaxTokens);
+        std::thread::sleep(Duration::from_millis(8));
+    }
+
+    // burst: occupy the only slot, then hammer the door — admission
+    // control sheds, the availability budget burns in both windows, and
+    // the alert must fire (every metrics pull re-evaluates the trackers)
+    let occupant = door
+        .submit_with(endless(90, "occupy the slot", 600), QoS::interactive().for_tenant(2, 1))
+        .expect("admits");
+    // pin the occupant into the slot before offering the burst
+    loop {
+        let m = door.metrics().expect("metrics");
+        if m.aggregate().tokens_generated > 48 {
+            break;
+        }
+        std::thread::yield_now();
+    }
+    let queued = door
+        .submit_with(endless(91, "wait in line", 8), QoS::interactive().for_tenant(2, 1))
+        .expect("empty queue admits");
+    let mut extra = Vec::new();
+    let mut sheds = 0u64;
+    let mut fired = false;
+    for i in 0..400u64 {
+        let req = endless(200 + i, "overload burst", 8);
+        match door.submit_with(req, QoS::batch().for_tenant(3, 1)) {
+            Err(SubmitError::Overloaded { .. }) => sheds += 1,
+            Ok(s) => extra.push(s),
+            Err(SubmitError::Closed) => panic!("fleet closed mid-burst"),
+        }
+        if sheds >= 8 && i % 4 == 0 {
+            let m = door.metrics().expect("metrics");
+            if m.alerts.iter().any(|a| a.slo == "availability" && a.state == AlertState::Firing) {
+                fired = true;
+                break;
+            }
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert!(fired, "burn-rate alert never fired under sustained shedding ({sheds} sheds)");
+
+    // subside: free the slot, drain everything that was admitted
+    occupant.cancel_handle().cancel();
+    let (_, _, finish) = drain(occupant);
+    assert_eq!(finish, FinishReason::Cancelled);
+    let (_, _, finish) = drain(queued);
+    assert_eq!(finish, FinishReason::MaxTokens);
+    for s in extra {
+        let (_, _, finish) = drain(s);
+        assert_eq!(finish, FinishReason::MaxTokens);
+    }
+    // let the shed burst age out of the fast window, then drive healthy
+    // traffic: the alert must clear (the slow window only gates entry)
+    std::thread::sleep(Duration::from_millis(600));
+    let mut cleared = false;
+    for i in 0..50u64 {
+        let (_, _, finish) = drain(
+            door.submit_with(endless(700 + i, "recovery traffic", 4), QoS::default())
+                .expect("recovered fleet admits"),
+        );
+        assert_eq!(finish, FinishReason::MaxTokens);
+        let m = door.metrics().expect("metrics");
+        if m.alerts.iter().any(|a| a.slo == "availability" && a.state == AlertState::Ok) {
+            cleared = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(cleared, "alert never cleared after the overload subsided");
+
+    let (m, trace) = door.shutdown_traced().expect("shutdown");
+    assert!(m.shed_requests >= 8);
+    assert_eq!(total(&m, |t| t.shed), m.shed_requests);
+    // both edges were stamped into the timeline (a = 1 ⇒ availability SLO,
+    // b = 1 on fire / 0 on clear)
+    let alert = |firing: u64| {
+        trace.events.iter().any(|e| e.kind == TraceKind::Alert && e.a == 1 && e.b == firing)
+    };
+    assert!(alert(1), "no availability fire instant in the trace");
+    assert!(alert(0), "no availability clear instant in the trace");
+}
+
+#[test]
+fn trace_ring_overflow_is_counted_and_exported() {
+    // a 2-event sink under a multi-request run must overflow; the drops
+    // are first-class telemetry, not silence
+    let opts = SchedulerOpts { trace_capacity: 2, ..SchedulerOpts::default() };
+    let door = front(1, opts, FrontDoorOpts::default());
+    let streams: Vec<_> = (0..5)
+        .map(|i| door.submit_with(endless(i, "overflow", 6), QoS::default()).expect("admits"))
+        .collect();
+    for s in streams {
+        let (_, _, finish) = drain(s);
+        assert_eq!(finish, FinishReason::MaxTokens);
+    }
+    // the flight recorder keeps its own recent ring even while the sink drops
+    let snap = door.status().expect("status");
+    assert!(snap.trace_dropped > 0, "a 2-event sink must have dropped");
+    assert!(!snap.recent.is_empty(), "flight recorder retains recent events");
+
+    let (m, trace) = door.shutdown_traced().expect("shutdown");
+    assert!(trace.dropped > 0);
+    assert_eq!(m.trace_dropped_total, trace.dropped, "metrics and trace agree on drops");
+    let prom = MetricsRegistry::from_fleet(m).snapshot().to_prometheus();
+    assert!(
+        prom.contains("ita_trace_dropped_total "),
+        "prometheus exposition must carry the drop counter"
+    );
+}
